@@ -1,0 +1,67 @@
+//! Dragonfly scaling study: the paper's testbed fabric (Cray Aries,
+//! dragonfly topology, §IV-B) modelled explicitly — where does the
+//! Eq. 14 overlap stop hiding communication as the cluster and the
+//! model grow?
+//!
+//! Pure cost-model analysis (runs in milliseconds):
+//! for each (model size, node count), compare
+//!   t_SSGD    = t_C + t_AR^dragonfly
+//!   t_DC-S3GD = max(t_C, t_AR^dragonfly)
+//! with t_C from the paper-calibrated 15 ms/sample Skylake model at
+//! local batch 512 (the paper's large-memory CPU setting).
+//!
+//! ```sh
+//! cargo run --release --example dragonfly_scaling
+//! ```
+
+use dcs3gd::comm::Dragonfly;
+
+fn main() {
+    let local_batch = 512usize;
+    let t_c = 15e-3 * local_batch as f64; // 7.68 s per local batch
+
+    println!(
+        "dragonfly fabric (Aries-like): local α=1.2µs β=14GB/s, global α=2.2µs β=4.7GB/s"
+    );
+    println!("t_C = {t_c:.2}s (local batch {local_batch} @ 15 ms/sample)\n");
+    println!(
+        "{:<14} {:>6} {:>12} {:>12} {:>12} {:>9} {:>8}",
+        "model", "N", "t_AR", "t_ssgd", "t_dcs3gd", "speedup", "hidden%"
+    );
+
+    // (name, params) — paper's models plus a large-model stress point.
+    let models = [
+        ("ResNet-50", 25_600_000usize),
+        ("ResNet-101", 44_500_000),
+        ("ResNet-152", 60_200_000),
+        ("VGG-16", 138_000_000),
+        ("1B-param", 1_000_000_000),
+    ];
+
+    for (name, params) in models {
+        for n in [32usize, 64, 128, 512] {
+            let fly = Dragonfly::for_nodes(n);
+            let t_ar = fly.hierarchical_allreduce_time(params, n);
+            let t_ssgd = t_c + t_ar;
+            let t_dc = t_c.max(t_ar);
+            let hidden = 100.0 * (1.0 - (t_dc - t_c).max(0.0) / t_ar.max(1e-30));
+            println!(
+                "{name:<14} {n:>6} {:>11.4}s {:>11.4}s {:>11.4}s {:>8.2}x {:>7.1}%",
+                t_ar,
+                t_ssgd,
+                t_dc,
+                t_ssgd / t_dc,
+                hidden
+            );
+        }
+        println!();
+    }
+
+    println!(
+        "Reading: at the paper's scales (≤138M params, ≤128 nodes) t_AR ≪ t_C\n\
+         on CPU nodes, so DC-S3GD hides communication completely — consistent\n\
+         with the paper's speed column scaling ~linearly in N. The crossover\n\
+         (overlap no longer fully hiding comm) appears only at ~1B params,\n\
+         where max(t_C, t_AR) is still up to 2× better than t_C + t_AR."
+    );
+}

@@ -1,0 +1,64 @@
+//! Quickstart: train a small model with DC-S3GD on 4 simulated workers
+//! and print the learning curve.
+//!
+//! Uses the PJRT CNN artifacts when present (`make artifacts`), else
+//! falls back to the pure-rust linear model so the example always runs:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
+
+fn main() -> anyhow::Result<()> {
+    // Prefer the AOT CNN artifact; fall back to the rust linear model.
+    let have_artifacts = std::path::Path::new("artifacts/tiny_cnn_b32/meta.json").exists();
+    let (variant, batch) = if have_artifacts { ("tiny_cnn_b32", 32) } else { ("linear", 32) };
+    println!("backend: {variant}\n");
+
+    let cfg = ExperimentConfig::builder(variant)
+        .name("quickstart")
+        .algo(Algo::DcS3gd)
+        .nodes(4)
+        .local_batch(batch)
+        .steps(150)
+        .eta_single(0.05)
+        .base_batch(128)
+        .data(4096, 512, 0.6)
+        .compute(ComputeModel::uniform(2e-3))
+        .eval_every(25, 4)
+        .build();
+
+    println!(
+        "DC-S3GD | {} workers | global batch {} | {} steps | λ0 = {}",
+        cfg.nodes,
+        cfg.global_batch(),
+        cfg.steps,
+        cfg.lam0
+    );
+
+    let report = run_experiment(&cfg)?;
+
+    println!("\nper-epoch train error:");
+    for (epoch, err) in report.recorder.epoch_train_err() {
+        let bar = "#".repeat((err * 50.0) as usize);
+        println!("  epoch {epoch:>2}  {:>5.1}%  {bar}", err * 100.0);
+    }
+    println!("\nvalidation checkpoints:");
+    for e in report.recorder.evals() {
+        println!(
+            "  iter {:>4}  val loss {:.4}  val err {:>5.1}%",
+            e.iteration,
+            e.val_loss,
+            e.val_err * 100.0
+        );
+    }
+    println!("\n{}", report.table_row());
+    println!(
+        "simulated cluster time {:.1}s | wall {:.1}s",
+        report.sim_time_s, report.wall_time_s
+    );
+    Ok(())
+}

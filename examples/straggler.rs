@@ -1,0 +1,87 @@
+//! Straggler / overlap study (E3): how SSGD and DC-S3GD iteration time
+//! respond to slow nodes and slow networks — the Eq. 13 vs Eq. 14
+//! story, plus the §II-A straggler sensitivity claim.
+//!
+//! ```sh
+//! cargo run --release --example straggler
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
+
+fn run(algo: Algo, compute: ComputeModel, net: NetModel) -> anyhow::Result<RunReport> {
+    let cfg = ExperimentConfig::builder("linear")
+        .name(format!("straggler_{}", algo.name()).leak())
+        .algo(algo)
+        .nodes(8)
+        .local_batch(32)
+        .steps(60)
+        .eta_single(0.02)
+        .base_batch(32)
+        .data(4096, 512, 0.6)
+        .compute(compute)
+        .net(net)
+        .build();
+    run_experiment(&cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let base_net = NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 2e8, algo: AllReduceAlgo::Ring };
+    let base_compute = ComputeModel::uniform(2e-4); // 6.4 ms/batch
+
+    println!("8 workers, batch 32, linear model ({}k params)\n", 769);
+
+    println!("== network speed sweep: per-iteration time (Eq. 13 vs 14) ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>10}",
+        "β (B/s)", "ssgd", "dcs3gd", "speedup", "hidden?"
+    );
+    for beta in [1e9, 4e8, 2e8, 1e8, 5e7] {
+        let net = NetModel { beta_bytes_per_s: beta, ..base_net };
+        let s = run(Algo::Ssgd, base_compute.clone(), net)?;
+        let d = run(Algo::DcS3gd, base_compute.clone(), net)?;
+        let hidden = if d.mean_iter_time < s.mean_iter_time * 0.99 { "yes" } else { "no" };
+        println!(
+            "{beta:>12.0e} {:>12.5} {:>12.5} {:>11.2}x {:>10}",
+            s.mean_iter_time,
+            d.mean_iter_time,
+            s.mean_iter_time / d.mean_iter_time,
+            hidden
+        );
+    }
+
+    println!("\n== straggler sweep: one worker k× slower ==");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12}",
+        "factor", "ssgd", "dcs3gd", "ssgd/dcs3gd"
+    );
+    for factor in [1.0, 1.5, 2.0, 4.0] {
+        let compute = ComputeModel::uniform(2e-4).with_straggler(3, factor, 8);
+        let s = run(Algo::Ssgd, compute.clone(), base_net)?;
+        let d = run(Algo::DcS3gd, compute, base_net)?;
+        println!(
+            "{factor:>8.1} {:>12.5} {:>12.5} {:>12.2}",
+            s.mean_iter_time,
+            d.mean_iter_time,
+            s.mean_iter_time / d.mean_iter_time
+        );
+    }
+    println!(
+        "\nNote: with staleness 1 a persistent straggler still gates every\n\
+         round (the collective needs all posts) — the overlap hides the\n\
+         *network*, not persistent compute imbalance; transient jitter\n\
+         (below) is partially absorbed by the one-iteration slack."
+    );
+
+    println!("\n== compute jitter sweep (transient stragglers) ==");
+    println!("{:>8} {:>12} {:>12}", "jitter", "ssgd", "dcs3gd");
+    for jitter in [0.0, 0.2, 0.5] {
+        let compute = ComputeModel::uniform(2e-4).with_jitter(jitter);
+        let s = run(Algo::Ssgd, compute.clone(), base_net)?;
+        let d = run(Algo::DcS3gd, compute, base_net)?;
+        println!("{jitter:>8.1} {:>12.5} {:>12.5}", s.mean_iter_time, d.mean_iter_time);
+    }
+    Ok(())
+}

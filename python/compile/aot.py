@@ -1,0 +1,134 @@
+"""AOT pipeline: lower the L2/L1 jax functions to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+loads the artifacts via the PJRT C API and python never appears on the
+training path again.
+
+Interchange is **HLO text**, not ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per model variant ``<v>`` and local batch size ``<b>`` this writes:
+
+  artifacts/<v>_b<b>/train_step.hlo.txt   (w, x, y) -> (loss, err, g)
+  artifacts/<v>_b<b>/eval_step.hlo.txt    (w, x, y) -> (loss, err)
+  artifacts/<v>_b<b>/dc_step.hlo.txt      (g, D, v, w, eta, mu, lam0, wd)
+                                          -> (dw, v', lam)   [Pallas inside]
+  artifacts/<v>_b<b>/init_params.bin      f32 LE initial flat weights
+  artifacts/<v>_b<b>/decay_mask.bin       f32 LE weight-decay mask
+  artifacts/<v>_b<b>/meta.json            shapes/counts for the rust loader
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts \
+      --variants mlp:32,tiny_cnn:16,tiny_cnn:32,tiny_cnn:64,small_cnn:32,resnet20:32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dc_correction
+
+DEFAULT_VARIANTS = "mlp:32,tiny_cnn:16,tiny_cnn:32,tiny_cnn:64,small_cnn:32,resnet20:32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, batch: int, out_dir: str, seed: int = 0) -> dict:
+    """Lower train/eval/dc_step for one (model, batch) variant."""
+    spec = M.get_model(name)
+    n = M.param_count(spec)
+    vdir = os.path.join(out_dir, f"{name}_b{batch}")
+    os.makedirs(vdir, exist_ok=True)
+
+    w_s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    x_s = jax.ShapeDtypeStruct((batch, *spec.input_shape), jnp.float32)
+    y_s = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+
+    train = jax.jit(M.make_train_step(spec)).lower(w_s, x_s, y_s)
+    with open(os.path.join(vdir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(train))
+
+    ev = jax.jit(M.make_eval_step(spec)).lower(w_s, x_s, y_s)
+    with open(os.path.join(vdir, "eval_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(ev))
+
+    # L2 wrapper over the L1 Pallas kernel, lowered at this variant's
+    # parameter count. interpret=True lowers to plain HLO ops that the
+    # CPU PJRT client can execute.
+    dc = jax.jit(
+        lambda g, d, v, w, eta, mu, lam0, wd: dc_correction.dc_update(
+            g, d, v, w, eta, mu, lam0, wd
+        )
+    ).lower(w_s, w_s, w_s, w_s, scal, scal, scal, scal)
+    with open(os.path.join(vdir, "dc_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(dc))
+
+    w0 = np.asarray(M.init_flat(spec, jax.random.PRNGKey(seed)), dtype=np.float32)
+    w0.tofile(os.path.join(vdir, "init_params.bin"))
+    M.decay_mask(spec).tofile(os.path.join(vdir, "decay_mask.bin"))
+
+    meta = {
+        "model": name,
+        "batch": batch,
+        "param_count": n,
+        "input_hw": spec.input_hw,
+        "input_channels": 3,
+        "num_classes": spec.num_classes,
+        "seed": seed,
+        "layers": [
+            {"name": pn, "shape": list(ps)} for pn, ps in spec.params
+        ],
+        "outputs": {
+            "train_step": ["loss", "err", "grad"],
+            "eval_step": ["loss", "err"],
+            "dc_step": ["dw", "v_new", "lam"],
+        },
+    }
+    with open(os.path.join(vdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=DEFAULT_VARIANTS,
+                    help="comma list of model:batch pairs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for pair in args.variants.split(","):
+        name, batch = pair.strip().split(":")
+        meta = lower_variant(name, int(batch), args.out_dir, args.seed)
+        manifest.append(meta)
+        print(f"lowered {name}:b{batch}  params={meta['param_count']}",
+              file=sys.stderr)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest)} variants to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

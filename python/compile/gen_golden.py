@@ -1,0 +1,64 @@
+"""Generate golden test vectors for the rust unit tests.
+
+The rust hot path re-implements the DC-S3GD math (rust/src/dc/) so the
+coordinator can run without artifacts; these fixtures pin it to the
+same oracle (kernels/ref.py) the Pallas kernel is verified against.
+
+Writes small JSON files under rust/tests/golden/. Deterministic: uses
+fixed PRNG keys, so re-running never changes committed fixtures.
+
+Usage: (cd python && python -m compile.gen_golden)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+
+CASES = [
+    # (name, n, eta, mu, lam0, wd, seed)
+    ("basic", 64, 0.1, 0.9, 0.2, 1e-4, 0),
+    ("no_momentum", 48, 0.5, 0.0, 0.2, 0.0, 1),
+    ("lam_zero", 48, 0.1, 0.9, 0.0, 0.0, 2),
+    ("big_lam", 96, 0.01, 0.5, 2.0, 1e-3, 3),
+    ("odd_len", 37, 0.1, 0.9, 0.2, 1e-4, 4),
+]
+
+
+def _vecs(seed: int, n: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return [np.asarray(jax.random.normal(k, (n,), jnp.float32)) for k in ks]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    for name, n, eta, mu, lam0, wd, seed in CASES:
+        g, d, v, w = _vecs(seed, n)
+        dw, vn, lam = ref.dc_update_ref(
+            jnp.asarray(g), jnp.asarray(d), jnp.asarray(v), jnp.asarray(w),
+            eta, mu, lam0, wd,
+        )
+        case = {
+            "name": name,
+            "eta": eta, "mu": mu, "lam0": lam0, "wd": wd,
+            "g": g.tolist(), "d": d.tolist(), "v": v.tolist(), "w": w.tolist(),
+            "lam": float(lam),
+            "dw": np.asarray(dw).tolist(),
+            "v_new": np.asarray(vn).tolist(),
+        }
+        path = os.path.join(OUT, f"dc_{name}.json")
+        with open(path, "w") as f:
+            json.dump(case, f)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

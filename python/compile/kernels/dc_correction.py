@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: fused delay-compensated momentum-SGD update.
+
+The hot elementwise path of DC-S3GD (paper Eqs. 10-12 + momentum) fused
+into a single kernel so every operand is read from HBM exactly once and
+every output written exactly once:
+
+    g~  = g + lam * g (.) g (.) D        (delay compensation, Eq. 10)
+    v'  = mu * v + g~ + wd * w           (momentum + weight decay)
+    dw  = -eta * v'                      (update step)
+
+Inputs are the flat parameter-sized vectors (g, D, v, w) reshaped to
+(rows, 128) — the TPU lane width — and tiled into (BLOCK_ROWS, 128) VMEM
+blocks by the BlockSpec. The norm reductions needed for the dynamic
+lambda (Eq. 17) are *global* over the parameter vector, so they are
+computed by the surrounding L2 jax function (two jnp.linalg.norm calls)
+and fed into the kernel as scalars; this keeps the kernel a pure
+streaming elementwise pass.
+
+TPU mapping (DESIGN.md SSHardware-Adaptation): this kernel is VPU-bound,
+not MXU-bound — the paper's CPU hot loop (MKL-DNN fused update) maps to
+a VMEM-tiled streaming kernel, with BlockSpec expressing the HBM<->VMEM
+double-buffered schedule the CPU version gets from hardware prefetch.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in
+EXPERIMENTS.md SSPerf from bytes-moved roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["dc_update", "LANES", "DEFAULT_BLOCK_ROWS"]
+
+# TPU vector-lane width; flat vectors are reshaped to (rows, LANES).
+LANES = 128
+# Rows per VMEM block: 8 sublanes x 32 = 256 rows x 128 lanes x 4 B x
+# 6 streams (4 in + 2 out) = 768 KiB of VMEM per in-flight block — small
+# enough to double-buffer within the ~16 MiB VMEM budget with room for
+# the next block's prefetch.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _dc_update_kernel(scal_ref, g_ref, d_ref, v_ref, w_ref, dw_ref, vn_ref):
+    """One (BLOCK_ROWS, 128) tile of the fused update.
+
+    scal_ref holds the four scalars [lam, eta, mu, wd] broadcast to every
+    grid step (index_map pins it to block 0).
+    """
+    lam = scal_ref[0]
+    eta = scal_ref[1]
+    mu = scal_ref[2]
+    wd = scal_ref[3]
+    g = g_ref[...]
+    d = d_ref[...]
+    # g~ = g + lam * g*g*d — one fused multiply-add chain, no temporaries
+    # spilled to HBM.
+    gt = g + lam * g * g * d
+    vn = mu * v_ref[...] + gt + wd * w_ref[...]
+    vn_ref[...] = vn
+    dw_ref[...] = -eta * vn
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dc_update(
+    g: jnp.ndarray,
+    d: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    eta: jnp.ndarray,
+    mu: jnp.ndarray,
+    lam0: jnp.ndarray,
+    wd: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Fused DC-S3GD update over flat f32 vectors of any length.
+
+    Returns (dw, v_new, lam).  Matches ``ref.dc_update_ref`` bit-for-bit
+    up to float32 associativity.
+    """
+    n = g.shape[0]
+    assert g.shape == d.shape == v.shape == w.shape, "operand shape mismatch"
+
+    # Global norm reductions for Eq. 17 live in L2 (they need the whole
+    # vector); the kernel receives lam as a scalar.
+    lam = ref.dynamic_lambda(g, d, lam0)
+
+    # Pad the flat vector to a whole number of (block_rows, LANES) tiles.
+    tile = block_rows * LANES
+    n_pad = (n + tile - 1) // tile * tile
+    pad = n_pad - n
+
+    def pad2d(x):
+        return jnp.pad(x, (0, pad)).reshape(n_pad // LANES, LANES)
+
+    g2, d2, v2, w2 = pad2d(g), pad2d(d), pad2d(v), pad2d(w)
+    rows = n_pad // LANES
+    grid = (rows // block_rows,)
+
+    scal = jnp.stack([lam, eta, mu, wd]).astype(jnp.float32)
+
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scal_spec = pl.BlockSpec((4,), lambda i: (0,))
+
+    dw2, vn2 = pl.pallas_call(
+        _dc_update_kernel,
+        grid=grid,
+        in_specs=[scal_spec, block, block, block, block],
+        out_specs=[block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(scal, g2, d2, v2, w2)
+
+    dw = dw2.reshape(-1)[:n]
+    vn = vn2.reshape(-1)[:n]
+    return dw, vn, lam

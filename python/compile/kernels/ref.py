@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracle for the DC-S3GD fused update kernel.
+
+This module is the *specification*: the Pallas kernel in
+``dc_correction.py`` must agree with these functions to float32
+tolerance for every shape/dtype the test suite sweeps.
+
+The math (paper Eqs. 10-12, 17, momentum SGD):
+
+    lam    = lam0 * ||g|| / ||g (.) g (.) D||          (Eq. 17, safe-guarded)
+    g~     = g + lam * g (.) g (.) D                   (Eq. 10)
+    v'     = mu * v + g~ + wd * w                      (momentum + weight decay)
+    dw     = -eta * v'                                 (update U(g~, eta, mu))
+
+where (.) is the Hadamard product, g is the local gradient, D the
+distance-to-average (Eq. 9), v the momentum buffer, w the current weights.
+
+All functions operate on flat f32 vectors.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "dynamic_lambda",
+    "dc_correct",
+    "momentum_update",
+    "dc_update_ref",
+]
+
+
+# Clamp matching rust dc::LAMBDA_MAX: near convergence the Eq. 17 ratio
+# diverges (denominator shrinks quadratically in ||g||) even though the
+# correction itself stays bounded at lam0*||g||.
+LAMBDA_MAX = 1e6
+
+
+def dynamic_lambda(g: jnp.ndarray, d: jnp.ndarray, lam0: float) -> jnp.ndarray:
+    """Eq. 17: lam_i = lam0 * ||g|| / ||g (.) g (.) D||, guarded against 0/0
+    and clamped to LAMBDA_MAX.
+
+    When the correction term has zero norm (e.g. D == 0 on the very first
+    iteration, when all workers still agree), the correction itself is zero,
+    so any finite lambda is equivalent; we return 0 to keep the math exact.
+    """
+    gn = jnp.linalg.norm(g)
+    cn = jnp.linalg.norm(g * g * d)
+    lam = jnp.where(cn > 0.0, lam0 * gn / jnp.maximum(cn, 1e-30), 0.0)
+    return jnp.minimum(lam, LAMBDA_MAX)
+
+
+def dc_correct(g: jnp.ndarray, d: jnp.ndarray, lam: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 10: g~ = g + lam * g (.) g (.) D."""
+    return g + lam * g * g * d
+
+
+def momentum_update(
+    gt: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    eta: float,
+    mu: float,
+    wd: float,
+):
+    """Momentum-SGD update U(g~, eta, mu) with decoupled-into-gradient weight
+    decay (paper SS IV-A: decay applied to all weights, scheduled like eta).
+
+    Returns (dw, v') with v' = mu v + g~ + wd w and dw = -eta v'.
+    """
+    v_new = mu * v + gt + wd * w
+    dw = -eta * v_new
+    return dw, v_new
+
+
+def dc_update_ref(
+    g: jnp.ndarray,
+    d: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    eta: float,
+    mu: float,
+    lam0: float,
+    wd: float,
+):
+    """Full fused reference: (g, D, v, w, scalars) -> (dw, v', lam).
+
+    This is the oracle for the Pallas kernel path *and* for the pure-rust
+    hot path (rust/src/dc/) — rust tests compare against vectors generated
+    from this function (see python/tests/test_genvectors.py).
+    """
+    lam = dynamic_lambda(g, d, lam0)
+    gt = dc_correct(g, d, lam)
+    dw, v_new = momentum_update(gt, v, w, eta, mu, wd)
+    return dw, v_new, lam

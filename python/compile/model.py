@@ -1,0 +1,316 @@
+"""L2: JAX model zoo for the DC-S3GD reproduction (build-time only).
+
+The paper trains ResNet-50/101/152 and VGG-16 on ImageNet-1k on a Cray XC
+system. Per DESIGN.md SS3 we substitute CIFAR-scale members of the same
+architecture families, trained on a synthetic image-classification task:
+
+  - ``mlp``       2-hidden-layer perceptron          (~230 k params)
+  - ``tiny_cnn``  2-conv VGG-style net, 16x16 input  (~10 k params)
+  - ``small_cnn`` 3-block VGG-style net, 32x32 input (~300 k params)
+  - ``resnet20``  norm-free ResNet-20, 32x32 input   (~270 k params)
+
+Every model exposes its weights as a **single flat f32 vector** — that is
+the contract with the rust coordinator, whose collectives, optimizer
+state and delay-compensation all operate on flat buffers (exactly like
+the paper's MXNet KV-store operates on a flat key space).
+
+The jitted entry points lowered to HLO by ``aot.py``:
+
+  train_step(w, x, y) -> (loss, err, g)    fused fwd+bwd
+  eval_step(w, x, y)  -> (loss, err)       fwd only
+  dc_update(...)                           L2 wrapper over the L1 Pallas
+                                           kernel (kernels/dc_correction)
+
+BatchNorm note: the paper's ResNets use BN; flat stateless weights and
+tiny per-worker batches make BN a poor fit here, so resnet20 is built
+*norm-free* (He-init + residual branch scaling 0.25, cf. NF-nets) — the
+optimizer/communication layer under study is agnostic to this, and the
+weight-decay-exempt-BN rule of SSIV-A is preserved by exempting biases
+instead (see ``decay_mask``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelSpec",
+    "MODELS",
+    "get_model",
+    "param_count",
+    "init_flat",
+    "pack",
+    "unpack",
+    "make_train_step",
+    "make_eval_step",
+    "decay_mask",
+]
+
+# --------------------------------------------------------------------------
+# Parameter bookkeeping: a model is a list of (name, shape) plus an apply fn
+# over the unpacked dict. Flat layout is concatenation in spec order.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A model variant: parameter layout + forward function."""
+
+    name: str
+    input_hw: int  # square input, NHWC with C=3
+    num_classes: int
+    params: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    apply: Callable[[Dict[str, jnp.ndarray], jnp.ndarray], jnp.ndarray]
+
+    @property
+    def input_shape(self) -> Tuple[int, int, int]:
+        return (self.input_hw, self.input_hw, 3)
+
+
+def param_count(spec: ModelSpec) -> int:
+    return int(sum(np.prod(s) for _, s in spec.params))
+
+
+def pack(spec: ModelSpec, tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Flatten a param dict into the canonical flat f32 vector."""
+    return jnp.concatenate([tree[n].reshape(-1) for n, _ in spec.params])
+
+
+def unpack(spec: ModelSpec, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Inverse of :func:`pack` (shape-checked)."""
+    sizes = [int(np.prod(s)) for _, s in spec.params]
+    assert flat.shape == (sum(sizes),), (flat.shape, sum(sizes))
+    parts = jnp.split(flat, np.cumsum(sizes)[:-1]) if len(sizes) > 1 else [flat]
+    return {
+        n: p.reshape(s) for (n, s), p in zip(spec.params, parts)
+    }
+
+
+def decay_mask(spec: ModelSpec) -> np.ndarray:
+    """Per-element weight-decay mask (1 = decayed, 0 = exempt).
+
+    Paper SSIV-A exempts batch-norm parameters from weight decay; the
+    norm-free analogue is exempting biases (all rank-1 params here).
+    """
+    mask = np.ones(param_count(spec), dtype=np.float32)
+    off = 0
+    for _, shape in spec.params:
+        n = int(np.prod(shape))
+        if len(shape) == 1:  # bias
+            mask[off : off + n] = 0.0
+        off += n
+    return mask
+
+
+# --------------------------------------------------------------------------
+# Initializers (match the paper's He-style CNN init)
+# --------------------------------------------------------------------------
+
+
+def _he_normal(key, shape, fan_in, scale=2.0):
+    std = np.sqrt(scale / fan_in)
+    return std * jax.random.normal(key, shape, jnp.float32)
+
+
+def init_flat(spec: ModelSpec, key: jax.Array) -> jnp.ndarray:
+    """He-normal init for weights, zeros for biases, as a flat vector."""
+    keys = jax.random.split(key, len(spec.params))
+    tree = {}
+    for k, (name, shape) in zip(keys, spec.params):
+        if len(shape) == 1:
+            tree[name] = jnp.zeros(shape, jnp.float32)
+        elif len(shape) == 2:  # dense: (in, out)
+            tree[name] = _he_normal(k, shape, fan_in=shape[0])
+        elif len(shape) == 4:  # conv HWIO
+            fan_in = shape[0] * shape[1] * shape[2]
+            tree[name] = _he_normal(k, shape, fan_in=fan_in)
+        else:
+            raise ValueError(f"unsupported param rank: {name} {shape}")
+    return pack(spec, tree)
+
+
+# --------------------------------------------------------------------------
+# Layer helpers
+# --------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride=1):
+    """3x3 'SAME' convolution, NHWC x HWIO -> NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _avg_pool(x, k=2):
+    y = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+    return y / float(k * k)
+
+
+def _global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# --------------------------------------------------------------------------
+# Model definitions
+# --------------------------------------------------------------------------
+
+
+def _mlp_spec(hw=16, classes=10, hidden=(256, 128)) -> ModelSpec:
+    d_in = hw * hw * 3
+    params: List[Tuple[str, Tuple[int, ...]]] = []
+    dims = [d_in, *hidden, classes]
+    for i in range(len(dims) - 1):
+        params.append((f"fc{i}.w", (dims[i], dims[i + 1])))
+        params.append((f"fc{i}.b", (dims[i + 1],)))
+
+    def apply(p, x):
+        h = x.reshape(x.shape[0], -1)
+        for i in range(len(dims) - 1):
+            h = h @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+            if i < len(dims) - 2:
+                h = jax.nn.relu(h)
+        return h
+
+    return ModelSpec("mlp", hw, classes, tuple(params), apply)
+
+
+def _vgg_spec(name, hw, classes, channels: Sequence[int]) -> ModelSpec:
+    """VGG-16-family stand-in: stacked 3x3 conv + pool stages."""
+    params: List[Tuple[str, Tuple[int, ...]]] = []
+    c_in = 3
+    for i, c in enumerate(channels):
+        params.append((f"conv{i}.w", (3, 3, c_in, c)))
+        params.append((f"conv{i}.b", (c,)))
+        c_in = c
+    feat_hw = hw // (2 ** len(channels))
+    d_feat = feat_hw * feat_hw * channels[-1]
+    params.append(("fc.w", (d_feat, classes)))
+    params.append(("fc.b", (classes,)))
+
+    def apply(p, x):
+        h = x
+        for i in range(len(channels)):
+            h = jax.nn.relu(_conv(h, p[f"conv{i}.w"], p[f"conv{i}.b"]))
+            h = _avg_pool(h)
+        h = h.reshape(h.shape[0], -1)
+        return h @ p["fc.w"] + p["fc.b"]
+
+    return ModelSpec(name, hw, classes, tuple(params), apply)
+
+
+def _resnet_spec(name, hw, classes, width=16, blocks_per_stage=3) -> ModelSpec:
+    """Norm-free ResNet-20 family (3 stages, 2-conv residual blocks).
+
+    Residual branches are scaled by 0.25 so depth does not blow up the
+    forward variance without BatchNorm (NF-net style); stage transitions
+    use stride-2 3x3 convs with a 1x1 strided projection shortcut.
+    """
+    params: List[Tuple[str, Tuple[int, ...]]] = []
+    params.append(("stem.w", (3, 3, 3, width)))
+    params.append(("stem.b", (width,)))
+    stages = [width, 2 * width, 4 * width]
+    c_in = width
+    for s, c in enumerate(stages):
+        for b in range(blocks_per_stage):
+            pref = f"s{s}b{b}"
+            stride_in = c_in if b > 0 or s == 0 else c_in
+            params.append((f"{pref}.c1.w", (3, 3, c_in if b == 0 else c, c)))
+            params.append((f"{pref}.c1.b", (c,)))
+            params.append((f"{pref}.c2.w", (3, 3, c, c)))
+            params.append((f"{pref}.c2.b", (c,)))
+            if b == 0 and c != c_in:
+                params.append((f"{pref}.proj.w", (1, 1, c_in, c)))
+                params.append((f"{pref}.proj.b", (c,)))
+        c_in = c
+    params.append(("fc.w", (stages[-1], classes)))
+    params.append(("fc.b", (classes,)))
+
+    def apply(p, x):
+        h = jax.nn.relu(_conv(x, p["stem.w"], p["stem.b"]))
+        cin = width
+        for s, c in enumerate(stages):
+            for b in range(blocks_per_stage):
+                pref = f"s{s}b{b}"
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = jax.nn.relu(_conv(h, p[f"{pref}.c1.w"], p[f"{pref}.c1.b"], stride))
+                y = _conv(y, p[f"{pref}.c2.w"], p[f"{pref}.c2.b"])
+                if f"{pref}.proj.w" in p:
+                    sc = jax.lax.conv_general_dilated(
+                        h,
+                        p[f"{pref}.proj.w"],
+                        window_strides=(stride, stride),
+                        padding="SAME",
+                        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    ) + p[f"{pref}.proj.b"]
+                elif stride != 1:
+                    sc = _avg_pool(h, stride)
+                else:
+                    sc = h
+                h = jax.nn.relu(sc + 0.25 * y)
+            cin = c
+        h = _global_avg_pool(h)
+        return h @ p["fc.w"] + p["fc.b"]
+
+    return ModelSpec(name, hw, classes, tuple(params), apply)
+
+
+MODELS: Dict[str, Callable[[], ModelSpec]] = {
+    "mlp": lambda: _mlp_spec(hw=16, classes=10),
+    "tiny_cnn": lambda: _vgg_spec("tiny_cnn", 16, 10, channels=(16, 32)),
+    "small_cnn": lambda: _vgg_spec("small_cnn", 32, 10, channels=(32, 64, 128)),
+    "resnet20": lambda: _resnet_spec("resnet20", 32, 10, width=16),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def get_model(name: str) -> ModelSpec:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name]()
+
+
+# --------------------------------------------------------------------------
+# Training / eval steps (the functions aot.py lowers)
+# --------------------------------------------------------------------------
+
+
+def _loss_err(spec: ModelSpec, w_flat, x, y):
+    logits = spec.apply(unpack(spec, w_flat), x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    err = jnp.mean((jnp.argmax(logits, axis=1) != y).astype(jnp.float32))
+    return loss, err
+
+
+def make_train_step(spec: ModelSpec):
+    """(w, x, y) -> (loss, err, g): fused forward+backward on flat weights."""
+
+    def train_step(w_flat, x, y):
+        (loss, err), g = jax.value_and_grad(
+            lambda w: _loss_err(spec, w, x, y), has_aux=True
+        )(w_flat)
+        return loss, err, g
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec):
+    """(w, x, y) -> (loss, err): forward only."""
+
+    def eval_step(w_flat, x, y):
+        return _loss_err(spec, w_flat, x, y)
+
+    return eval_step

@@ -1,0 +1,123 @@
+"""L2 correctness: model zoo shapes, pack/unpack, gradients, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ALL = sorted(M.MODELS)
+
+
+def _batch(spec, b=4, seed=1):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, *spec.input_shape), jnp.float32)
+    y = jnp.arange(b, dtype=jnp.int32) % spec.num_classes
+    return x, y
+
+
+class TestPackUnpack:
+    @pytest.mark.parametrize("name", ALL)
+    def test_roundtrip(self, name):
+        spec = M.get_model(name)
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        assert w.shape == (M.param_count(spec),)
+        tree = M.unpack(spec, w)
+        w2 = M.pack(spec, tree)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+
+    @pytest.mark.parametrize("name", ALL)
+    def test_layer_shapes(self, name):
+        spec = M.get_model(name)
+        tree = M.unpack(spec, M.init_flat(spec, jax.random.PRNGKey(0)))
+        for pname, shape in spec.params:
+            assert tree[pname].shape == shape
+
+    @pytest.mark.parametrize("name", ALL)
+    def test_decay_mask_exempts_biases(self, name):
+        spec = M.get_model(name)
+        mask = M.decay_mask(spec)
+        assert mask.shape == (M.param_count(spec),)
+        off = 0
+        for pname, shape in spec.params:
+            n = int(np.prod(shape))
+            expect = 0.0 if len(shape) == 1 else 1.0
+            assert (mask[off : off + n] == expect).all(), pname
+            off += n
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ALL)
+    @pytest.mark.parametrize("b", [1, 4])
+    def test_logit_shapes(self, name, b):
+        spec = M.get_model(name)
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, _ = _batch(spec, b)
+        logits = spec.apply(M.unpack(spec, w), x)
+        assert logits.shape == (b, spec.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    @pytest.mark.parametrize("name", ALL)
+    def test_init_loss_near_uniform(self, name):
+        """He init with zero biases: loss should start near ln(C)."""
+        spec = M.get_model(name)
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, y = _batch(spec, 16)
+        loss, err = M.make_eval_step(spec)(w, x, y)
+        assert 0.3 * np.log(spec.num_classes) < float(loss) < 5 * np.log(
+            spec.num_classes
+        )
+
+    def test_batch_independence(self):
+        """Per-sample outputs must not depend on other samples in the batch
+        (no cross-batch ops like BN — by design, see DESIGN.md)."""
+        spec = M.get_model("tiny_cnn")
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, _ = _batch(spec, 8)
+        full = spec.apply(M.unpack(spec, w), x)
+        half = spec.apply(M.unpack(spec, w), x[:4])
+        np.testing.assert_allclose(np.asarray(full[:4]), np.asarray(half), rtol=1e-5, atol=1e-6)
+
+
+class TestGradients:
+    @pytest.mark.parametrize("name", ALL)
+    def test_train_step_outputs(self, name):
+        spec = M.get_model(name)
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, y = _batch(spec)
+        loss, err, g = jax.jit(M.make_train_step(spec))(w, x, y)
+        assert g.shape == w.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert 0.0 <= float(err) <= 1.0
+
+    def test_grad_matches_finite_difference(self):
+        """Directional derivative check on the mlp (cheap, exact-ish)."""
+        spec = M.get_model("mlp")
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, y = _batch(spec, 8)
+        ts = M.make_train_step(spec)
+        loss0, _, g = ts(w, x, y)
+        rng = np.random.default_rng(0)
+        u = rng.standard_normal(w.shape[0]).astype(np.float32)
+        u /= np.linalg.norm(u)
+        eps = 1e-3
+        lp, _ = M.make_eval_step(spec)(w + eps * jnp.asarray(u), x, y)
+        lm, _ = M.make_eval_step(spec)(w - eps * jnp.asarray(u), x, y)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        an = float(jnp.dot(g, jnp.asarray(u)))
+        assert abs(fd - an) < 5e-3 * max(1.0, abs(an)), (fd, an)
+
+    @pytest.mark.parametrize("name", ["mlp", "tiny_cnn"])
+    def test_sgd_reduces_loss(self, name):
+        """A few plain-SGD steps on a fixed batch must reduce the loss —
+        the minimum signal that fwd+bwd are consistent."""
+        spec = M.get_model(name)
+        w = M.init_flat(spec, jax.random.PRNGKey(0))
+        x, y = _batch(spec, 16)
+        ts = jax.jit(M.make_train_step(spec))
+        loss0, _, _ = ts(w, x, y)
+        for _ in range(20):
+            _, _, g = ts(w, x, y)
+            w = w - 0.05 * g
+        loss1, _, _ = ts(w, x, y)
+        assert float(loss1) < 0.7 * float(loss0), (float(loss0), float(loss1))

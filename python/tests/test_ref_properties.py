@@ -1,0 +1,83 @@
+"""Property tests on the oracle itself (kernels/ref.py) — the spec both
+the Pallas kernel and the rust hot path are pinned to."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _vecs(seed, n):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return [jax.random.normal(k, (n,), jnp.float32) for k in ks]
+
+
+class TestLambda:
+    @hypothesis.given(seed=st.integers(0, 1000), lam0=st.floats(0.01, 2.0))
+    def test_normalizes_correction_norm(self, seed, lam0):
+        g, d, _, _ = _vecs(seed, 512)
+        lam = ref.dynamic_lambda(g, d, lam0)
+        corr = float(lam) * np.asarray(g) ** 2 * np.asarray(d)
+        np.testing.assert_allclose(
+            np.linalg.norm(corr),
+            lam0 * np.linalg.norm(np.asarray(g)),
+            rtol=1e-4,
+        )
+
+    def test_clamped_at_lambda_max(self):
+        # tiny gradients, tiny distance: the raw ratio would explode.
+        n = 64
+        g = jnp.full((n,), 1e-12, jnp.float32)
+        d = jnp.full((n,), 1e-6, jnp.float32)
+        lam = ref.dynamic_lambda(g, d, 0.2)
+        assert float(lam) <= ref.LAMBDA_MAX
+        assert np.isfinite(float(lam))
+
+    def test_zero_cases(self):
+        n = 16
+        z = jnp.zeros((n,), jnp.float32)
+        g = jnp.ones((n,), jnp.float32)
+        assert float(ref.dynamic_lambda(g, z, 0.2)) == 0.0
+        assert float(ref.dynamic_lambda(z, g, 0.2)) == 0.0
+
+
+class TestUpdateAlgebra:
+    @hypothesis.given(seed=st.integers(0, 1000))
+    def test_linearity_in_eta(self, seed):
+        """dw is exactly linear in eta (everything else fixed)."""
+        g, d, v, w = _vecs(seed, 128)
+        dw1, _, _ = ref.dc_update_ref(g, d, v, w, 0.1, 0.9, 0.2, 1e-4)
+        dw2, _, _ = ref.dc_update_ref(g, d, v, w, 0.2, 0.9, 0.2, 1e-4)
+        np.testing.assert_allclose(
+            np.asarray(dw2), 2.0 * np.asarray(dw1), rtol=1e-5, atol=1e-7
+        )
+
+    @hypothesis.given(seed=st.integers(0, 1000))
+    def test_momentum_zero_is_plain_step(self, seed):
+        g, d, _, w = _vecs(seed, 128)
+        v = jnp.zeros(128, jnp.float32)
+        dw, vn, lam = ref.dc_update_ref(g, d, v, w, 0.5, 0.0, 0.2, 0.0)
+        gt = ref.dc_correct(g, d, lam)
+        np.testing.assert_allclose(np.asarray(vn), np.asarray(gt), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(dw), -0.5 * np.asarray(gt), rtol=1e-6
+        )
+
+    @hypothesis.given(seed=st.integers(0, 1000))
+    def test_correction_is_odd_in_d(self, seed):
+        """Flipping D flips the correction term exactly."""
+        g, d, _, _ = _vecs(seed, 128)
+        lam = jnp.float32(0.7)
+        plus = ref.dc_correct(g, d, lam) - g
+        minus = ref.dc_correct(g, -d, lam) - g
+        np.testing.assert_allclose(
+            np.asarray(plus), -np.asarray(minus), rtol=1e-6, atol=1e-7
+        )

@@ -1,0 +1,82 @@
+//! Bench: the communication substrate.
+//!
+//! * wire-level ring all-reduce wall time vs payload size and rank count
+//!   (the real data-movement path of `comm::ring`),
+//! * rendezvous-collective overhead (the semantics layer the engines use),
+//! * the α-β model's predicted t_AR across algorithms — the numbers the
+//!   Eq. 13/14 analysis feeds on.
+
+use dcs3gd::bench_util::{black_box, Bencher};
+use dcs3gd::comm::{ring::ring_network, AllReduceAlgo, Group, NetModel};
+use dcs3gd::util::Rng;
+
+fn bench_ring(b: &mut Bencher, n_ranks: usize, len: usize) {
+    b.bench_elems(&format!("ring/wire n={n_ranks} len={len}"), len, || {
+        let comms = ring_network(n_ranks);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut rng = Rng::keyed(1, c.rank() as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf);
+                    c.allreduce(&mut buf);
+                    black_box(buf[0])
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn bench_rendezvous(b: &mut Bencher, n_ranks: usize, len: usize) {
+    b.bench_elems(&format!("rendezvous n={n_ranks} len={len}"), len, || {
+        let group = Group::new(n_ranks, NetModel::instant());
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|r| {
+                let mut c = group.comm(r);
+                std::thread::spawn(move || {
+                    let buf = vec![1.0f32; len];
+                    let (sum, _) = c.allreduce(&buf, 0.0);
+                    black_box(sum[0])
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn main() {
+    println!("# allreduce bench — substrate cost (wall) + α-β model (sim)\n");
+    let mut b = Bencher::from_env();
+    for &n in &[2usize, 4, 8] {
+        for &len in &[10_000usize, 271_690] {
+            // 271,690 = resnet20 parameter count
+            bench_ring(&mut b, n, len);
+        }
+    }
+    for &n in &[4usize, 8] {
+        bench_rendezvous(&mut b, n, 271_690);
+    }
+    b.report();
+
+    println!("\n# α-β model t_AR(n, N) (Aries-like defaults) — seconds");
+    let net = NetModel::default();
+    println!("{:>10} {:>6} {:>12} {:>12} {:>12}", "elems", "N", "ring", "tree", "flat");
+    for &len in &[10_000usize, 271_690, 25_600_000] {
+        for &n in &[8usize, 32, 128] {
+            let t = |algo| NetModel { algo, ..net }.allreduce_time(len, n);
+            println!(
+                "{len:>10} {n:>6} {:>12.3e} {:>12.3e} {:>12.3e}",
+                t(AllReduceAlgo::Ring),
+                t(AllReduceAlgo::Tree),
+                t(AllReduceAlgo::Flat)
+            );
+        }
+    }
+    println!("\n(25.6M elems ≈ ResNet-50; flat column = the PS bottleneck)");
+}

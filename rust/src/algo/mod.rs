@@ -1,0 +1,99 @@
+//! Training algorithms: the paper's **DC-S3GD** (Algorithm 1) plus the
+//! §II baselines it is compared against.
+//!
+//! | Variant   | Comm scheme        | Staleness | Compensation |
+//! |-----------|--------------------|-----------|--------------|
+//! | `Ssgd`    | blocking allreduce | 0         | —            |
+//! | `S3gd`    | non-blocking       | k (≥1)    | none (λ=0)   |
+//! | `DcS3gd`  | non-blocking       | k (≥1)    | Eq. 10/17    |
+//! | `Asgd`    | parameter server   | async     | none         |
+//! | `DcAsgd`  | parameter server   | async     | Eq. 6 at PS  |
+//!
+//! All engines are generic over [`crate::model::StepBackend`], so they
+//! run identically over the PJRT artifacts (production) or the
+//! pure-rust linear model (tests).
+
+pub mod dcs3gd;
+pub mod psasync;
+pub mod ssgd;
+mod worker;
+
+pub use worker::{RunReport, WorkerHarness};
+
+use anyhow::{bail, Result};
+
+/// Which training algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Synchronous SGD: blocking all-reduce of gradients (Eq. 13).
+    Ssgd,
+    /// Stale-synchronous without compensation (DC-S3GD with λ0 = 0) —
+    /// the ablation showing the correction matters.
+    S3gd,
+    /// The paper's algorithm (Algorithm 1).
+    DcS3gd,
+    /// Asynchronous SGD through a parameter server.
+    Asgd,
+    /// Delay-compensated ASGD (Zheng et al.) through a parameter server.
+    DcAsgd,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ssgd" => Algo::Ssgd,
+            "s3gd" => Algo::S3gd,
+            "dcs3gd" | "dc-s3gd" => Algo::DcS3gd,
+            "asgd" => Algo::Asgd,
+            "dcasgd" | "dc-asgd" => Algo::DcAsgd,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Ssgd => "ssgd",
+            Algo::S3gd => "s3gd",
+            Algo::DcS3gd => "dcs3gd",
+            Algo::Asgd => "asgd",
+            Algo::DcAsgd => "dcasgd",
+        }
+    }
+
+    /// Decentralized (all-reduce based) vs centralized (PS based).
+    pub fn is_decentralized(&self) -> bool {
+        matches!(self, Algo::Ssgd | Algo::S3gd | Algo::DcS3gd)
+    }
+}
+
+/// Run one experiment end to end per its config; dispatches to the
+/// right engine and returns the aggregated report.
+pub fn run_experiment(cfg: &crate::config::ExperimentConfig) -> Result<RunReport> {
+    let harness = WorkerHarness::prepare(cfg)?;
+    match cfg.algo {
+        Algo::Ssgd => ssgd::run(cfg, harness),
+        Algo::S3gd | Algo::DcS3gd => dcs3gd::run(cfg, harness),
+        Algo::Asgd | Algo::DcAsgd => psasync::run(cfg, harness),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Algo::parse("DC-S3GD").unwrap(), Algo::DcS3gd);
+        assert_eq!(Algo::parse("ssgd").unwrap(), Algo::Ssgd);
+        assert!(Algo::parse("sgdx").is_err());
+        for a in [Algo::Ssgd, Algo::S3gd, Algo::DcS3gd, Algo::Asgd, Algo::DcAsgd] {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn centralization_split() {
+        assert!(Algo::DcS3gd.is_decentralized());
+        assert!(!Algo::DcAsgd.is_decentralized());
+    }
+}

@@ -1,0 +1,170 @@
+//! Synchronous SGD baseline — blocking all-reduce of gradients.
+//!
+//! The §II-A reference scheme the paper compares against: every
+//! iteration all workers reduce their gradients, apply the *same*
+//! mean-gradient update, and stay bit-identical. Per-iteration time is
+//! Eq. 13's `t_C + t_AR` (no overlap): the collective cannot be posted
+//! until the gradient exists, and the update cannot be applied until the
+//! collective completes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algo::{RunReport, WorkerHarness};
+use crate::comm::Group;
+use crate::config::ExperimentConfig;
+use crate::optim::build_optimizer;
+use crate::tensor;
+
+pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
+    let n = harness.n_params();
+    let group = Group::new(cfg.nodes, cfg.net);
+    let sched = cfg.lr_schedule();
+    let t_start = Instant::now();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for rank in 0..cfg.nodes {
+            let mut ctx = harness.make_worker(cfg, rank);
+            let mut comm = group.comm(rank);
+            let init_w = harness.init_w.clone();
+            let decay_mask = harness.decay_mask.clone();
+            let layer_ranges = harness.layer_ranges.clone();
+            let sched = sched.clone();
+            let cfg = cfg.clone();
+
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut w = init_w;
+                let mut opt = build_optimizer(
+                    &cfg.optimizer,
+                    n,
+                    cfg.momentum,
+                    &layer_ranges,
+                    decay_mask.clone(),
+                );
+                let mut g_mean = vec![0.0f32; n];
+                let mut delta = vec![0.0f32; n];
+
+                for t in 0..cfg.steps {
+                    let (loss, err, wall) = ctx.train_step(&w);
+                    // Blocking all-reduce of gradients: Eq. 13.
+                    let (sum, t_done) = comm.allreduce(&ctx.g, ctx.clock.now());
+                    ctx.clock.advance_to(t_done);
+                    let inv_n = 1.0 / cfg.nodes as f32;
+                    for (m, s) in g_mean.iter_mut().zip(sum.iter()) {
+                        *m = s * inv_n;
+                    }
+                    let eta = sched.at(t);
+                    let wd = cfg.wd_at(t, &sched);
+                    opt.step(&g_mean, &w, eta, wd, &mut delta);
+                    tensor::add_assign(&mut w, &delta);
+                    ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
+
+                    if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
+                        let (vl, ve) = ctx.eval(&w, cfg.eval_batches);
+                        ctx.record_eval(t, vl, ve);
+                    }
+                }
+
+                if rank == 0 {
+                    let (vl, ve) = ctx.eval(&w, cfg.eval_batches.max(8));
+                    ctx.record_eval(cfg.steps, vl, ve);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let recorder = harness.recorder.clone();
+    let final_val = recorder
+        .evals()
+        .last()
+        .map(|e| (e.val_loss, e.val_err))
+        .unwrap_or((f32::NAN, f32::NAN));
+    let report = RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
+        report.recorder.write_evals_csv(dir.join(format!("{}_evals.csv", cfg.name)))?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AllReduceAlgo, NetModel};
+    use crate::simtime::ComputeModel;
+
+    fn base_cfg() -> ExperimentConfig {
+        ExperimentConfig::builder("linear")
+            .name("ssgd_test")
+            .algo(crate::algo::Algo::Ssgd)
+            .nodes(4)
+            .local_batch(16)
+            .steps(60)
+            .eta_single(0.05)
+            .base_batch(16)
+            .data(1024, 256, 0.5)
+            .compute(ComputeModel::uniform(1e-3))
+            .build()
+    }
+
+    #[test]
+    fn ssgd_trains_linear_model() {
+        let cfg = base_cfg();
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.75, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn iteration_time_is_sum_eq13() {
+        let mut cfg = base_cfg();
+        cfg.steps = 30;
+        cfg.compute = ComputeModel::uniform(1e-4);
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
+        let n = WorkerHarness::prepare(&cfg).unwrap().n_params();
+        let t_ar = cfg.net.allreduce_time(n, cfg.nodes);
+        let t_c = 16.0 * 1e-4;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let expect = t_c + t_ar; // Eq. 13: no overlap
+        assert!(
+            (report.mean_iter_time - expect).abs() / expect < 0.05,
+            "iter {} vs t_C+t_AR {}",
+            report.mean_iter_time,
+            expect
+        );
+    }
+
+    #[test]
+    fn straggler_slows_every_iteration() {
+        // One 3× straggler: every SSGD iteration pays for it (§II-A).
+        let mut cfg = base_cfg();
+        cfg.steps = 20;
+        cfg.compute = ComputeModel::uniform(1e-3).with_straggler(1, 3.0, 4);
+        cfg.net = NetModel::instant();
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let t_slow = 16.0 * 1e-3 * 3.0;
+        assert!(
+            (report.mean_iter_time - t_slow).abs() / t_slow < 0.05,
+            "iter {} vs straggler-bound {}",
+            report.mean_iter_time,
+            t_slow
+        );
+    }
+
+    #[test]
+    fn workers_stay_identical() {
+        // SSGD invariant: identical gradients mean identical losses on a
+        // shared eval — use determinism across runs as the proxy.
+        let cfg = base_cfg();
+        let a = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let b = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(a.final_val_err, b.final_val_err);
+    }
+}

@@ -1,0 +1,297 @@
+//! Shared per-run scaffolding: backend construction, per-worker context
+//! (data shard, clock, scratch buffers), validation passes, and the
+//! final [`RunReport`].
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{ShardSampler, Split, SyntheticDataset};
+use crate::metrics::{EvalRecord, Recorder, StepRecord};
+use crate::model::{LinearSoftmax, StepBackend};
+use crate::runtime::ComputeServer;
+use crate::simtime::SimClock;
+use crate::util::Rng;
+
+/// Linear-model geometry when no artifact is involved.
+const LINEAR_HW: usize = 16;
+const LINEAR_CLASSES: usize = 10;
+
+enum BackendSource {
+    Linear { hw: usize, classes: usize },
+    Xla(ComputeServer),
+}
+
+/// Everything a run needs before workers start: dataset, initial
+/// weights, backend factory, shared recorder.
+pub struct WorkerHarness {
+    pub dataset: SyntheticDataset,
+    pub init_w: Vec<f32>,
+    pub decay_mask: Option<Vec<f32>>,
+    pub layer_ranges: Vec<(usize, usize)>,
+    pub recorder: Recorder,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    source: BackendSource,
+}
+
+impl WorkerHarness {
+    pub fn prepare(cfg: &ExperimentConfig) -> Result<Self> {
+        let (source, init_w, decay_mask, layer_ranges, hw, classes) =
+            if cfg.variant == "linear" {
+                let model = LinearSoftmax::for_images(LINEAR_HW, LINEAR_CLASSES, cfg.local_batch);
+                let n = crate::model::StepBackend::n_params(&model);
+                let d = LINEAR_HW * LINEAR_HW * 3;
+                (
+                    BackendSource::Linear { hw: LINEAR_HW, classes: LINEAR_CLASSES },
+                    model.init_params(cfg.seed),
+                    None,
+                    vec![(0, d * LINEAR_CLASSES), (d * LINEAR_CLASSES, n - d * LINEAR_CLASSES)],
+                    LINEAR_HW,
+                    LINEAR_CLASSES,
+                )
+            } else {
+                let dir = cfg.artifacts_root.join(&cfg.variant);
+                let server = ComputeServer::start(&dir)?;
+                let meta = server.meta().clone();
+                if meta.batch != cfg.local_batch {
+                    return Err(anyhow!(
+                        "artifact {} was lowered for batch {}, config says {}",
+                        cfg.variant,
+                        meta.batch,
+                        cfg.local_batch
+                    ));
+                }
+                let init = meta.load_init_params()?;
+                let mask = meta.load_decay_mask().ok();
+                let ranges = meta.layer_ranges();
+                let (hw, classes) = (meta.input_hw, meta.num_classes);
+                (BackendSource::Xla(server), init, mask, ranges, hw, classes)
+            };
+
+        let dataset = SyntheticDataset::new(cfg.seed ^ 0xDA7A, hw, classes, cfg.n_train, cfg.n_val)
+            .with_noise(cfg.data_noise);
+
+        Ok(WorkerHarness {
+            dataset,
+            init_w,
+            decay_mask,
+            layer_ranges,
+            recorder: Recorder::new(),
+            num_classes: classes,
+            input_hw: hw,
+            source,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.init_w.len()
+    }
+
+    /// A fresh backend for one worker (Send; moved into its thread).
+    pub fn make_backend(&self, cfg: &ExperimentConfig) -> Box<dyn StepBackend> {
+        match &self.source {
+            BackendSource::Linear { hw, classes } => {
+                Box::new(LinearSoftmax::for_images(*hw, *classes, cfg.local_batch))
+            }
+            BackendSource::Xla(server) => Box::new(server.backend()),
+        }
+    }
+
+    /// Per-worker context bundle.
+    pub fn make_worker(&self, cfg: &ExperimentConfig, rank: usize) -> WorkerCtx {
+        WorkerCtx::new(self, cfg, rank)
+    }
+}
+
+/// One worker's mutable state: backend, shard iterator, scratch buffers,
+/// virtual clock.
+pub struct WorkerCtx {
+    pub rank: usize,
+    pub backend: Box<dyn StepBackend>,
+    pub sampler: ShardSampler,
+    pub clock: SimClock,
+    pub rng: Rng,
+    pub dataset: SyntheticDataset,
+    pub recorder: Recorder,
+    compute: crate::simtime::ComputeModel,
+    time_from_wall: bool,
+    local_batch: usize,
+    // scratch
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub g: Vec<f32>,
+}
+
+impl WorkerCtx {
+    fn new(h: &WorkerHarness, cfg: &ExperimentConfig, rank: usize) -> Self {
+        let px = h.input_hw * h.input_hw * 3;
+        WorkerCtx {
+            rank,
+            backend: h.make_backend(cfg),
+            sampler: ShardSampler::new(&h.dataset, rank, cfg.nodes, cfg.local_batch),
+            clock: SimClock::new(),
+            rng: Rng::keyed(cfg.seed, 0xC10C4, rank as u64),
+            dataset: h.dataset.clone(),
+            recorder: h.recorder.clone(),
+            compute: cfg.compute.clone(),
+            time_from_wall: cfg.time_from_wall,
+            local_batch: cfg.local_batch,
+            x: vec![0.0; cfg.local_batch * px],
+            y: vec![0; cfg.local_batch],
+            g: vec![0.0; h.init_w.len()],
+        }
+    }
+
+    /// Draw the next shard batch, run fused fwd+bwd, advance the virtual
+    /// clock by t_C, and return (loss, err, wall_compute_s). The gradient
+    /// lands in `self.g`.
+    pub fn train_step(&mut self, w: &[f32]) -> (f32, f32, f64) {
+        let idx = self.sampler.next_batch();
+        self.dataset.batch_into(Split::Train, &idx, &mut self.x, &mut self.y);
+        let t0 = Instant::now();
+        let (loss, err) = self.backend.train_step(w, &self.x, &self.y, &mut self.g);
+        let wall = self.backend.last_compute_s().unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let t_c = if self.time_from_wall {
+            wall
+        } else {
+            self.compute.batch_time(self.rank, self.local_batch, &mut self.rng)
+        };
+        self.clock.advance(t_c);
+        (loss, err, wall)
+    }
+
+    /// Validation pass over the first `batches` val batches at weights
+    /// `w` (virtual time not advanced: evaluation is off the training
+    /// critical path, as in the paper's reported timings).
+    pub fn eval(&mut self, w: &[f32], batches: usize) -> (f32, f32) {
+        let px = self.x.len() / self.local_batch;
+        let n_val_batches = (self.dataset.n_val / self.local_batch).max(1).min(batches.max(1));
+        let mut loss = 0f64;
+        let mut err = 0f64;
+        for b in 0..n_val_batches {
+            let idx: Vec<usize> = (0..self.local_batch)
+                .map(|i| (b * self.local_batch + i) % self.dataset.n_val)
+                .collect();
+            self.dataset.batch_into(Split::Val, &idx, &mut self.x[..idx.len() * px], &mut self.y[..idx.len()]);
+            let (l, e) = self.backend.eval_step(w, &self.x[..idx.len() * px], &self.y[..idx.len()]);
+            loss += l as f64;
+            err += e as f64;
+        }
+        ((loss / n_val_batches as f64) as f32, (err / n_val_batches as f64) as f32)
+    }
+
+    /// Record one training step into the shared recorder.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        iteration: u64,
+        loss: f32,
+        train_err: f32,
+        wall: f64,
+        lambda: f32,
+        dist_to_avg: f64,
+        lr: f32,
+    ) {
+        self.recorder.record_step(StepRecord {
+            worker: self.rank,
+            iteration,
+            epoch: self.sampler.epoch(),
+            sim_time: self.clock.now(),
+            wall_compute: wall,
+            loss,
+            train_err,
+            lambda,
+            dist_to_avg,
+            lr,
+        });
+    }
+
+    pub fn record_eval(&self, iteration: u64, val_loss: f32, val_err: f32) {
+        self.recorder.record_eval(EvalRecord {
+            iteration,
+            epoch: self.sampler.epoch(),
+            sim_time: self.clock.now(),
+            val_loss,
+            val_err,
+        });
+    }
+}
+
+/// Aggregated outcome of one run — the numbers Table I / Figure 1 are
+/// built from.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    pub algo: super::Algo,
+    pub nodes: usize,
+    pub global_batch: usize,
+    pub steps: u64,
+    pub final_train_loss: f32,
+    pub final_train_err: f32,
+    pub final_val_loss: f32,
+    pub final_val_err: f32,
+    pub best_val_err: f32,
+    /// Simulated run time (max over workers' virtual clocks).
+    pub sim_time_s: f64,
+    /// Simulated throughput, samples/s (the Table I Speed column).
+    pub sim_throughput: f64,
+    /// Mean simulated time per iteration (Eq. 13/14 comparison).
+    pub mean_iter_time: f64,
+    /// Mean ‖D_i‖ over the final quarter of the run (§III-D.2 metric).
+    pub mean_dist_to_avg: f64,
+    /// Real wall time of the whole run.
+    pub wall_time_s: f64,
+    pub recorder: Recorder,
+}
+
+impl RunReport {
+    /// Assemble from the recorder + final eval numbers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        cfg: &ExperimentConfig,
+        recorder: Recorder,
+        final_val: (f32, f32),
+        wall_time_s: f64,
+    ) -> Self {
+        let (final_train_loss, final_train_err) = recorder.tail_train(20 * cfg.nodes);
+        let steps = recorder.steps();
+        let sim_time_s = steps.iter().map(|s| s.sim_time).fold(0.0, f64::max);
+        let tail = (cfg.steps as usize * cfg.nodes) / 4;
+        RunReport {
+            name: cfg.name.clone(),
+            algo: cfg.algo,
+            nodes: cfg.nodes,
+            global_batch: cfg.global_batch(),
+            steps: cfg.steps,
+            final_train_loss,
+            final_train_err,
+            final_val_loss: final_val.0,
+            final_val_err: final_val.1,
+            best_val_err: recorder.best_val_err().unwrap_or(final_val.1).min(final_val.1),
+            sim_time_s,
+            sim_throughput: recorder.sim_throughput(cfg.local_batch),
+            mean_iter_time: recorder.mean_iter_time(),
+            mean_dist_to_avg: recorder.tail_dist_to_avg(tail.max(1)),
+            wall_time_s,
+            recorder,
+        }
+    }
+
+    /// One Table-I-style row.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<22} {:>7} {:>6} {:>6} | train {:>6.1}% val {:>6.1}% | {:>9.0} img/s | iter {:>8.4}s | ‖D‖ {:.3e}",
+            self.name,
+            self.algo.name(),
+            self.global_batch,
+            self.nodes,
+            100.0 * (1.0 - self.final_train_err),
+            100.0 * (1.0 - self.final_val_err),
+            self.sim_throughput,
+            self.mean_iter_time,
+            self.mean_dist_to_avg,
+        )
+    }
+}

@@ -1,0 +1,206 @@
+//! Tiny benchmark harness (offline build: no `criterion`).
+//!
+//! Benches are `harness = false` binaries that call [`Bencher`] and
+//! print a fixed-format report; `cargo bench` runs them all. Supports
+//! warmup, configurable measurement time, mean/std/p50/p95, and
+//! throughput annotation.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Running};
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems_per_iter: Option<usize>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn report(&self) -> String {
+        let mut r = Running::new();
+        for &s in &self.samples {
+            r.push(s);
+        }
+        let p50 = percentile(&self.samples, 50.0);
+        let p95 = percentile(&self.samples, 95.0);
+        let mut line = format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_time(r.mean()),
+            fmt_time(r.std()),
+            fmt_time(p50),
+            fmt_time(p95),
+        );
+        if let Some(n) = self.elems_per_iter {
+            let rate = n as f64 / r.mean();
+            line.push_str(&format!(" {:>14}/s", fmt_si(rate)));
+        }
+        line
+    }
+}
+
+/// Runs closures repeatedly and records wall time per iteration.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    max_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1500),
+            min_samples: 10,
+            max_samples: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI / smoke runs (honours `DCS3GD_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1") {
+            b.warmup = Duration::from_millis(20);
+            b.measure = Duration::from_millis(200);
+            b.min_samples = 3;
+        }
+        b
+    }
+
+    pub fn measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Benchmark `f`, labelling the result `name`.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.bench_with_elems(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation of `elems` per iteration.
+    pub fn bench_elems(&mut self, name: &str, elems: usize, mut f: impl FnMut()) -> &Measurement {
+        self.bench_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_with_elems(
+        &mut self,
+        name: &str,
+        elems: Option<usize>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement { name: name.to_string(), samples, elems_per_iter: elems });
+        self.results.last().unwrap()
+    }
+
+    /// Print the standard report table.
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "std", "p50", "p95"
+        );
+        println!("{}", "-".repeat(110));
+        for m in &self.results {
+            println!("{}", m.report());
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Keep a value alive and opaque to the optimizer (std::hint wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn fmt_si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1} ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut b = Bencher::new().measure_time(Duration::from_millis(30));
+        b.warmup = Duration::from_millis(5);
+        let m = b.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(m.samples.len() >= 10);
+        assert!(m.mean() >= 0.0);
+        let report = m.report();
+        assert!(report.contains("noop"));
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher::new().measure_time(Duration::from_millis(10));
+        b.warmup = Duration::from_millis(1);
+        let m = b.bench_elems("sum", 1000, || {
+            black_box((0..1000u32).sum::<u32>());
+        });
+        assert!(m.report().ends_with("/s"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parsing (offline build: no `clap`).
+//!
+//! Grammar: `dcs3gd <subcommand> [--key value | --flag] ...`.
+//! Subcommands and their options are declared by the binary; this module
+//! provides the splitting, typed lookup and usage errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand + `--key value` options + bare flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_opts_flags() {
+        // note: a bare word after `--verbose` would be consumed as its
+        // value (the usual greedy convention); flags go last or use `=`.
+        let a = parse("train --config cfg.toml --nodes 8 pos1 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("config"), Some("cfg.toml"));
+        assert_eq!(a.get_usize("nodes", 1).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --algo=ring --n=4");
+        assert_eq!(a.get("algo"), Some("ring"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

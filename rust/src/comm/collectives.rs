@@ -1,0 +1,186 @@
+//! Additional collectives over the rendezvous substrate: broadcast,
+//! all-gather, reduce-scatter and all-reduce-min/max — the full set a
+//! production data-parallel runtime needs (weight sync at start-up,
+//! metric aggregation, early-stop votes).
+//!
+//! All are built on the same round-matched rendezvous as
+//! [`super::Comm::iallreduce`], so ordering and determinism guarantees
+//! carry over; timing uses the matching [`super::NetModel`] entries.
+
+use std::sync::Arc;
+
+use super::Comm;
+
+impl Comm {
+    /// Broadcast `data` from `root` to all ranks. Non-roots pass their
+    /// buffer's length in `data` (contents ignored). Returns the root's
+    /// payload and this rank's completion time.
+    pub fn broadcast(&mut self, data: &[f32], root: usize, now: f64) -> (Arc<Vec<f32>>, f64) {
+        // Implemented as an all-reduce where non-roots contribute zeros;
+        // cost adjusted to a log-tree broadcast.
+        let contribution: Vec<f32> = if self.rank() == root {
+            data.to_vec()
+        } else {
+            vec![0.0; data.len()]
+        };
+        let (sum, t) = self.allreduce(&contribution, now);
+        let n = self.n_ranks();
+        let net = self.net_model();
+        let t_adj = t - net.allreduce_time(data.len(), n) + net.bcast_time(data.len(), n);
+        (sum, t_adj.max(now))
+    }
+
+    /// All-gather: every rank contributes `data`; all receive the
+    /// rank-ordered concatenation.
+    pub fn allgather(&mut self, data: &[f32], now: f64) -> (Vec<f32>, f64) {
+        let n = self.n_ranks();
+        let len = data.len();
+        // contribute into a rank-offset slot of a wide zero vector
+        let mut wide = vec![0.0f32; len * n];
+        wide[self.rank() * len..(self.rank() + 1) * len].copy_from_slice(data);
+        let (sum, t) = self.allreduce(&wide, now);
+        let net = self.net_model();
+        let t_adj = t - net.allreduce_time(len * n, n) + net.allgather_time(len, n);
+        (sum.as_ref().clone(), t_adj.max(now))
+    }
+
+    /// Reduce-scatter: the sum is computed and rank i receives chunk i
+    /// (last chunk may be short).
+    pub fn reduce_scatter(&mut self, data: &[f32], now: f64) -> (Vec<f32>, f64) {
+        let n = self.n_ranks();
+        let len = data.len();
+        let per = len.div_ceil(n);
+        let (sum, t) = self.allreduce(data, now);
+        let start = (self.rank() * per).min(len);
+        let end = ((self.rank() + 1) * per).min(len);
+        let net = self.net_model();
+        let t_adj = t - net.allreduce_time(len, n) + net.reduce_scatter_time(len, n);
+        (sum[start..end].to_vec(), t_adj.max(now))
+    }
+
+    /// Global minimum of a scalar across ranks (negate+max via sum trick
+    /// is wrong for min; use allgather of scalars).
+    pub fn allreduce_min(&mut self, v: f32, now: f64) -> (f32, f64) {
+        let (all, t) = self.allgather(&[v], now);
+        (all.iter().copied().fold(f32::INFINITY, f32::min), t)
+    }
+
+    /// Global maximum of a scalar across ranks.
+    pub fn allreduce_max(&mut self, v: f32, now: f64) -> (f32, f64) {
+        let (all, t) = self.allgather(&[v], now);
+        (all.iter().copied().fold(f32::NEG_INFINITY, f32::max), t)
+    }
+}
+
+impl super::NetModel {
+    /// Log-tree broadcast cost.
+    pub fn bcast_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        (n_ranks as f64).log2().ceil()
+            * (self.alpha_s + n_elems as f64 * 4.0 / self.beta_bytes_per_s)
+    }
+
+    /// Ring all-gather cost: (N−1) steps of the per-rank payload.
+    pub fn allgather_time(&self, n_elems_per_rank: usize, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        (n_ranks as f64 - 1.0)
+            * (self.alpha_s + n_elems_per_rank as f64 * 4.0 / self.beta_bytes_per_s)
+    }
+
+    /// Ring reduce-scatter cost: (N−1) steps of n/N elements.
+    pub fn reduce_scatter_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        let n = n_ranks as f64;
+        (n - 1.0) * (self.alpha_s + n_elems as f64 * 4.0 / n / self.beta_bytes_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::comm::{Group, NetModel};
+    use std::thread;
+
+    fn spawn<R: Send + 'static>(
+        n: usize,
+        f: impl Fn(crate::comm::Comm) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let group = Group::new(n, NetModel::instant());
+        let f = std::sync::Arc::new(f);
+        (0..n)
+            .map(|r| {
+                let c = group.comm(r);
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn broadcast_delivers_root_payload() {
+        let out = spawn(4, |mut c| {
+            let data = if c.rank() == 2 { vec![5.0, -1.0] } else { vec![0.0, 0.0] };
+            c.broadcast(&data, 2, 0.0).0.as_ref().clone()
+        });
+        for o in out {
+            assert_eq!(o, vec![5.0, -1.0]);
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let out = spawn(3, |mut c| {
+            let data = vec![c.rank() as f32; 2];
+            c.allgather(&data, 0.0).0
+        });
+        for o in out {
+            assert_eq!(o, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_chunks() {
+        let out = spawn(2, |mut c| {
+            let data = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+            (c.rank(), c.reduce_scatter(&data, 0.0).0)
+        });
+        for (rank, chunk) in out {
+            // sum = [2,4,6,8,10]; per = 3
+            if rank == 0 {
+                assert_eq!(chunk, vec![2.0, 4.0, 6.0]);
+            } else {
+                assert_eq!(chunk, vec![8.0, 10.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_min_max() {
+        let out = spawn(4, |mut c| {
+            let v = c.rank() as f32 * 2.0 - 3.0; // -3,-1,1,3
+            let (mn, _) = c.allreduce_min(v, 0.0);
+            let (mx, _) = c.allreduce_max(v, 0.0);
+            (mn, mx)
+        });
+        for (mn, mx) in out {
+            assert_eq!(mn, -3.0);
+            assert_eq!(mx, 3.0);
+        }
+    }
+
+    #[test]
+    fn cost_model_entries() {
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, ..NetModel::default() };
+        assert_eq!(net.bcast_time(1000, 1), 0.0);
+        assert!(net.bcast_time(1000, 8) > 0.0);
+        assert!(net.allgather_time(1000, 8) > net.reduce_scatter_time(1000, 8));
+    }
+}

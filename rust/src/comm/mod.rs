@@ -1,0 +1,453 @@
+//! Decentralized communication substrate — the simulated-MPI layer.
+//!
+//! The paper's algorithm needs exactly two things from MPI:
+//! `MPI_Iallreduce` (non-blocking sum across all workers) and
+//! `MPI_Wait`. This module provides them for N in-process workers with
+//! **collective semantics identical to MPI** (every rank contributes
+//! once per round, every rank receives the full sum, rounds complete in
+//! sequence order) and **timing from an explicit α-β network model**
+//! parameterised to Aries-like numbers (DESIGN.md §3 substitution
+//! table).
+//!
+//! Two layers:
+//! * [`Group`] / [`Comm`] — the rendezvous-based collectives the
+//!   training engines use. Data movement is exact (f32 sum); completion
+//!   *time* comes from [`NetModel`], carried on the worker's virtual
+//!   clock ([`crate::simtime`]). Non-blocking handles capture the post
+//!   time, so overlap accounting reproduces Eq. 14's
+//!   `max(t_C, t_AR)` exactly.
+//! * [`ring`] — a wire-level ring all-reduce (reduce-scatter +
+//!   all-gather over per-edge channels) used by the comm benches and as
+//!   a cross-check that the rendezvous sum matches a real decentralized
+//!   schedule.
+
+pub mod collectives;
+pub mod ring;
+pub mod topology;
+
+pub use topology::Dragonfly;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// All-reduce algorithm whose cost model [`NetModel`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// Ring: 2(N−1) steps of n/N elements — bandwidth-optimal, the
+    /// algorithm Cray-mpich uses for large payloads.
+    Ring,
+    /// Binary tree reduce + broadcast: 2·⌈log2 N⌉ full-payload hops.
+    Tree,
+    /// Flat gather+scatter through rank 0 (the degenerate PS-like
+    /// pattern; included for the centralised-vs-decentralised ablation).
+    Flat,
+}
+
+/// α-β (latency-bandwidth) cost model for collectives.
+///
+/// Defaults approximate a Cray Aries dragonfly fabric: ~1.5 µs MPI
+/// latency, ~10 GB/s effective per-node all-reduce bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Per-message latency α in seconds.
+    pub alpha_s: f64,
+    /// Effective bandwidth β in bytes/second.
+    pub beta_bytes_per_s: f64,
+    /// Which collective schedule to cost.
+    pub algo: AllReduceAlgo,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 10e9, algo: AllReduceAlgo::Ring }
+    }
+}
+
+impl NetModel {
+    /// An infinitely fast network (for algorithm-only studies).
+    pub fn instant() -> Self {
+        NetModel { alpha_s: 0.0, beta_bytes_per_s: f64::INFINITY, algo: AllReduceAlgo::Ring }
+    }
+
+    /// Time for one all-reduce of `n_elems` f32 across `n_ranks`
+    /// (t_ARed(g, N) in Eq. 13/14).
+    pub fn allreduce_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        let bytes = n_elems as f64 * 4.0;
+        let n = n_ranks as f64;
+        match self.algo {
+            AllReduceAlgo::Ring => {
+                // 2(N−1) steps, each sending bytes/N.
+                2.0 * (n - 1.0) * (self.alpha_s + bytes / n / self.beta_bytes_per_s)
+            }
+            AllReduceAlgo::Tree => {
+                let hops = 2.0 * (n_ranks as f64).log2().ceil();
+                hops * (self.alpha_s + bytes / self.beta_bytes_per_s)
+            }
+            AllReduceAlgo::Flat => {
+                // root receives N−1 payloads then sends N−1 payloads,
+                // fully serialized: the many-to-few bottleneck.
+                2.0 * (n - 1.0) * (self.alpha_s + bytes / self.beta_bytes_per_s)
+            }
+        }
+    }
+
+    /// Point-to-point time for `n_elems` f32 (used by the PS substrate:
+    /// t_W2PS in Eq. 15).
+    pub fn ptp_time(&self, n_elems: usize) -> f64 {
+        self.alpha_s + n_elems as f64 * 4.0 / self.beta_bytes_per_s
+    }
+
+    /// Barrier cost (log-tree of empty messages).
+    pub fn barrier_time(&self, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            0.0
+        } else {
+            2.0 * (n_ranks as f64).log2().ceil() * self.alpha_s
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous collectives
+// ---------------------------------------------------------------------------
+
+struct Round {
+    /// Per-rank contributions, summed in rank order on completion so
+    /// the result is bit-deterministic regardless of thread arrival
+    /// order (float addition is not associative).
+    parts: Vec<Option<Vec<f32>>>,
+    contributions: usize,
+    max_post_time: f64,
+    /// Sum + sim completion time, set when the last rank contributes.
+    result: Option<(Arc<Vec<f32>>, f64)>,
+    consumed: usize,
+}
+
+struct Shared {
+    n: usize,
+    net: NetModel,
+    state: Mutex<HashMap<u64, Round>>,
+    cv: Condvar,
+}
+
+/// A communicator group of `n` ranks. Create once, then [`Group::comm`]
+/// hands each worker thread its endpoint.
+pub struct Group {
+    shared: Arc<Shared>,
+}
+
+impl Group {
+    pub fn new(n: usize, net: NetModel) -> Self {
+        assert!(n >= 1);
+        Group {
+            shared: Arc::new(Shared {
+                n,
+                net,
+                state: Mutex::new(HashMap::new()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Endpoint for `rank`. Each rank must be handed out exactly once;
+    /// sequence numbers are tracked per-endpoint.
+    pub fn comm(&self, rank: usize) -> Comm {
+        assert!(rank < self.shared.n);
+        Comm { rank, shared: self.shared.clone(), next_seq: 0 }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.shared.n
+    }
+}
+
+/// Per-rank communicator endpoint (the `MPI_COMM_WORLD` handle).
+pub struct Comm {
+    rank: usize,
+    shared: Arc<Shared>,
+    next_seq: u64,
+}
+
+/// In-flight non-blocking all-reduce (the `MPI_Request`).
+/// Dropping without [`PendingReduce::wait`] leaks the round — like
+/// losing an MPI request; debug builds assert against it.
+#[must_use = "an iallreduce must be completed with wait()"]
+pub struct PendingReduce {
+    seq: u64,
+    rank: usize,
+    shared: Arc<Shared>,
+    /// Virtual time at which this rank posted the operation.
+    pub post_time: f64,
+    done: bool,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.shared.n
+    }
+
+    /// The group's network cost model.
+    pub fn net_model(&self) -> NetModel {
+        self.shared.net
+    }
+
+    /// Non-blocking all-reduce (sum) — `MPI_Iallreduce`.
+    ///
+    /// `now` is this rank's virtual time at the post. The operation's
+    /// completion time is `max_i(post_i) + t_AR` per the α-β model: the
+    /// collective cannot start before its last participant arrives, and
+    /// then takes `t_AR` — exactly the composition Eq. 14 assumes.
+    pub fn iallreduce(&mut self, data: &[f32], now: f64) -> PendingReduce {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let n_ranks = self.shared.n;
+        let mut st = self.shared.state.lock().unwrap();
+        let round = st.entry(seq).or_insert_with(|| Round {
+            parts: (0..n_ranks).map(|_| None).collect(),
+            contributions: 0,
+            max_post_time: f64::NEG_INFINITY,
+            result: None,
+            consumed: 0,
+        });
+        assert!(round.parts[self.rank].is_none(), "rank {} double-posted round {seq}", self.rank);
+        round.parts[self.rank] = Some(data.to_vec());
+        round.contributions += 1;
+        round.max_post_time = round.max_post_time.max(now);
+        if round.contributions == n_ranks {
+            let t_ar = self.shared.net.allreduce_time(data.len(), n_ranks);
+            let mut sum = vec![0.0f32; data.len()];
+            for part in round.parts.iter_mut() {
+                let part = part.take().expect("all ranks posted");
+                assert_eq!(part.len(), sum.len(), "mismatched all-reduce lengths in round {seq}");
+                for (a, x) in sum.iter_mut().zip(&part) {
+                    *a += x;
+                }
+            }
+            round.result = Some((Arc::new(sum), round.max_post_time + t_ar));
+            self.shared.cv.notify_all();
+        }
+        PendingReduce {
+            seq,
+            rank: self.rank,
+            shared: self.shared.clone(),
+            post_time: now,
+            done: false,
+        }
+    }
+
+    /// Blocking all-reduce — `MPI_Allreduce`. Returns (sum, completion
+    /// virtual time for this rank).
+    pub fn allreduce(&mut self, data: &[f32], now: f64) -> (Arc<Vec<f32>>, f64) {
+        self.iallreduce(data, now).wait(now)
+    }
+
+    /// Barrier: all ranks must arrive; returns each rank's exit time
+    /// `max_i(arrive_i) + t_barrier`.
+    pub fn barrier(&mut self, now: f64) -> f64 {
+        let (_, t) = self.allreduce(&[], now);
+        // allreduce of an empty payload costs α-terms only under Ring —
+        // use the explicit barrier cost instead of the degenerate model.
+        let mut t = t;
+        if self.shared.n > 1 {
+            t += self.shared.net.barrier_time(self.shared.n)
+                - self.shared.net.allreduce_time(0, self.shared.n);
+        }
+        t
+    }
+}
+
+impl PendingReduce {
+    /// Complete the operation — `MPI_Wait`.
+    ///
+    /// `now` is the rank's virtual time when it *calls* wait (i.e. after
+    /// the overlapped computation). Returns the sum and this rank's
+    /// virtual time after the wait: `max(now, collective completion)` —
+    /// the worker blocks only if the network is still busy, which is the
+    /// whole point of the overlap (Eq. 14).
+    pub fn wait(mut self, now: f64) -> (Arc<Vec<f32>>, f64) {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(round) = st.get_mut(&self.seq) {
+                if let Some((sum, t_complete)) = round.result.clone() {
+                    round.consumed += 1;
+                    if round.consumed == self.shared.n {
+                        st.remove(&self.seq);
+                    }
+                    self.done = true;
+                    return (sum, now.max(t_complete));
+                }
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-destructive completion test — `MPI_Test` (no time advance).
+    pub fn is_complete(&self) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        st.get(&self.seq).map(|r| r.result.is_some()).unwrap_or(true)
+    }
+}
+
+impl Drop for PendingReduce {
+    fn drop(&mut self) {
+        debug_assert!(
+            self.done || std::thread::panicking(),
+            "PendingReduce dropped without wait() (rank {}, seq {})",
+            self.rank,
+            self.seq
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_ranks<F, R>(n: usize, net: NetModel, f: F) -> Vec<R>
+    where
+        F: Fn(Comm) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let group = Group::new(n, net);
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let comm = group.comm(r);
+                let f = f.clone();
+                thread::spawn(move || f(comm))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let results = spawn_ranks(4, NetModel::instant(), |mut c| {
+            let mine = vec![c.rank() as f32, 1.0];
+            let (sum, _) = c.allreduce(&mine, 0.0);
+            sum.as_ref().clone()
+        });
+        for r in results {
+            assert_eq!(r, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn rounds_are_matched_by_sequence() {
+        // Each rank runs several rounds; sums must match per-round even
+        // though ranks post at different times/orders.
+        let results = spawn_ranks(3, NetModel::instant(), |mut c| {
+            let mut sums = Vec::new();
+            for round in 0..5 {
+                let mine = vec![(round * 10 + c.rank()) as f32];
+                let (sum, _) = c.allreduce(&mine, round as f64);
+                sums.push(sum[0]);
+            }
+            sums
+        });
+        for r in results {
+            assert_eq!(r, vec![3.0, 33.0, 63.0, 93.0, 123.0]); // Σ(10r+i)
+        }
+    }
+
+    #[test]
+    fn completion_time_is_max_post_plus_tar() {
+        // rank i posts at time i; completion must be max_post + t_AR for
+        // every rank, and a rank waiting later perceives max(now, that).
+        let net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 4e6, algo: AllReduceAlgo::Ring };
+        // 1000 f32 = 4000 bytes; ring with N=4: 2*3*(4000/4)/4e6 = 1.5e-3
+        let t_ar = net.allreduce_time(1000, 4);
+        let results = spawn_ranks(4, net, move |mut c| {
+            let post = c.rank() as f64;
+            let h = c.iallreduce(&vec![1.0; 1000], post);
+            let (_, t_done) = h.wait(post); // waits immediately
+            t_done
+        });
+        let expect = 3.0 + t_ar;
+        for t in results {
+            assert!((t - expect).abs() < 1e-12, "t={t}, expect={expect}");
+        }
+    }
+
+    #[test]
+    fn overlap_hides_communication_eq14() {
+        // Worker computes for t_c after posting; if t_c > t_AR the wait
+        // must be free: exit time == post + t_c (Eq. 14's max).
+        let net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 4e9, algo: AllReduceAlgo::Ring };
+        let t_ar = net.allreduce_time(100_000, 2);
+        assert!(t_ar > 0.0);
+        let t_c = t_ar * 10.0;
+        let results = spawn_ranks(2, net, move |mut c| {
+            let h = c.iallreduce(&vec![1.0; 100_000], 0.0);
+            let after_compute = t_c; // simulated overlapped compute
+            let (_, t_done) = h.wait(after_compute);
+            t_done
+        });
+        for t in results {
+            assert!((t - t_c).abs() < 1e-15, "communication not hidden: {t} vs {t_c}");
+        }
+    }
+
+    #[test]
+    fn mpi_test_semantics() {
+        let group = Group::new(2, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let h0 = c0.iallreduce(&[1.0], 0.0);
+        assert!(!h0.is_complete(), "only one rank posted");
+        let h1 = c1.iallreduce(&[2.0], 0.0);
+        assert!(h0.is_complete());
+        let (s, _) = h0.wait(0.0);
+        assert_eq!(s[0], 3.0);
+        h1.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn staleness_two_outstanding_rounds() {
+        // Two rounds in flight simultaneously (max-staleness 2, §V):
+        // posts for round 1 happen before round 0 completes on rank 1.
+        let group = Group::new(2, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let a0 = c0.iallreduce(&[1.0], 0.0);
+        let a1 = c0.iallreduce(&[10.0], 0.0);
+        let b0 = c1.iallreduce(&[2.0], 0.0);
+        let b1 = c1.iallreduce(&[20.0], 0.0);
+        assert_eq!(a0.wait(0.0).0[0], 3.0);
+        assert_eq!(b0.wait(0.0).0[0], 3.0);
+        assert_eq!(a1.wait(0.0).0[0], 30.0);
+        assert_eq!(b1.wait(0.0).0[0], 30.0);
+    }
+
+    #[test]
+    fn net_model_formulas() {
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: AllReduceAlgo::Ring };
+        // ring, N=8, 1M f32 (4MB): 2*7*(1e-6 + 4e6/8/1e9) = 14e-6 + 7e-3
+        let t = net.allreduce_time(1_000_000, 8);
+        assert!((t - (14e-6 + 7.0e-3)).abs() < 1e-9);
+        // single rank: free
+        assert_eq!(net.allreduce_time(1_000_000, 1), 0.0);
+        // flat is slower than ring for large payloads
+        let flat = NetModel { algo: AllReduceAlgo::Flat, ..net };
+        assert!(flat.allreduce_time(1_000_000, 8) > t);
+        // tree beats ring on latency for tiny payloads at large N
+        let tree = NetModel { algo: AllReduceAlgo::Tree, ..net };
+        assert!(tree.allreduce_time(1, 64) < net.allreduce_time(1, 64));
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_scales_with_size() {
+        let net = NetModel::default();
+        let t1 = net.allreduce_time(1_000_000, 16);
+        let t2 = net.allreduce_time(2_000_000, 16);
+        assert!(t2 > t1 * 1.9 && t2 < t1 * 2.1);
+    }
+}

@@ -1,0 +1,230 @@
+//! Wire-level ring all-reduce: reduce-scatter + all-gather over real
+//! per-edge channels between worker threads.
+//!
+//! The rendezvous collectives in [`super`] give MPI *semantics* with
+//! modelled timing; this module implements the actual decentralized
+//! schedule (the one Cray-mpich runs for large payloads, and the one the
+//! [`super::NetModel::allreduce_time`] Ring formula costs): each of the
+//! N ranks exchanges 2(N−1) chunk messages with its neighbours, never
+//! holding more than `ceil(n/N)` extra elements. Used by
+//! `benches/allreduce.rs` and as a differential check on the rendezvous
+//! path.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Per-rank endpoint of a ring network (unidirectional: send to
+/// `rank+1`, receive from `rank−1`).
+pub struct RingComm {
+    rank: usize,
+    n: usize,
+    to_next: Sender<Vec<f32>>,
+    from_prev: Receiver<Vec<f32>>,
+}
+
+/// Build the ring topology for `n` ranks.
+pub fn ring_network(n: usize) -> Vec<RingComm> {
+    assert!(n >= 1);
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // rank i sends into channel i (read by rank i+1).
+    let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
+        receivers.into_iter().map(Some).collect();
+    (0..n)
+        .map(|rank| RingComm {
+            rank,
+            n,
+            to_next: senders[rank].clone(),
+            from_prev: receivers[(rank + n - 1) % n].take().expect("each endpoint taken once"),
+        })
+        .collect()
+}
+
+impl RingComm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Chunk boundaries: chunk `c` covers `[start, end)` of the buffer.
+    fn chunk_bounds(&self, c: usize, len: usize) -> (usize, usize) {
+        let per = len.div_ceil(self.n);
+        let start = (c * per).min(len);
+        let end = ((c + 1) * per).min(len);
+        (start, end)
+    }
+
+    /// In-place ring all-reduce (sum). All ranks must call with equal
+    /// buffer lengths. 2(N−1) steps; message count and sizes match the
+    /// textbook schedule exactly (asserted in tests).
+    ///
+    /// Returns the number of payload f32 sent by this rank (for the
+    /// bench's bandwidth accounting).
+    pub fn allreduce(&self, buf: &mut [f32]) -> usize {
+        let n = self.n;
+        if n == 1 {
+            return 0;
+        }
+        let len = buf.len();
+        let mut sent = 0usize;
+
+        // Phase 1: reduce-scatter. At step s (0..n-1), rank r sends
+        // chunk (r - s) mod n and receives+accumulates chunk
+        // (r - s - 1) mod n.
+        for s in 0..n - 1 {
+            let send_c = (self.rank + n - s) % n;
+            let (a, b) = self.chunk_bounds(send_c, len);
+            self.to_next.send(buf[a..b].to_vec()).expect("ring peer alive");
+            sent += b - a;
+            let recv_c = (self.rank + n - s - 1) % n;
+            let (a, b) = self.chunk_bounds(recv_c, len);
+            let incoming = self.from_prev.recv().expect("ring peer alive");
+            assert_eq!(incoming.len(), b - a, "chunk size mismatch");
+            for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+
+        // Phase 2: all-gather. Rank r now owns the fully-reduced chunk
+        // (r + 1) mod n; circulate the reduced chunks.
+        for s in 0..n - 1 {
+            let send_c = (self.rank + 1 + n - s) % n;
+            let (a, b) = self.chunk_bounds(send_c, len);
+            self.to_next.send(buf[a..b].to_vec()).expect("ring peer alive");
+            sent += b - a;
+            let recv_c = (self.rank + n - s) % n;
+            let (a, b) = self.chunk_bounds(recv_c, len);
+            let incoming = self.from_prev.recv().expect("ring peer alive");
+            assert_eq!(incoming.len(), b - a, "chunk size mismatch");
+            buf[a..b].copy_from_slice(&incoming);
+        }
+        sent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::thread;
+
+    fn run_ring(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let comms = ring_network(n);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let mut rng = Rng::keyed(seed, c.rank() as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf);
+                    let local = buf.clone();
+                    c.allreduce(&mut buf);
+                    (local, buf)
+                })
+            })
+            .collect();
+        let results: Vec<(Vec<f32>, Vec<f32>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // expected sum
+        let mut expect = vec![0.0f32; len];
+        for (local, _) in &results {
+            for (e, x) in expect.iter_mut().zip(local) {
+                *e += x;
+            }
+        }
+        results
+            .into_iter()
+            .map(|(_, reduced)| {
+                for (r, e) in reduced.iter().zip(&expect) {
+                    assert!((r - e).abs() <= 1e-4 * e.abs().max(1.0), "{r} vs {e}");
+                }
+                reduced
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_matches_sum_small() {
+        run_ring(4, 64, 1);
+    }
+
+    #[test]
+    fn ring_handles_len_not_divisible() {
+        run_ring(4, 61, 2); // 61 = 4*16 - 3: last chunk short
+        run_ring(3, 1, 3); // fewer elements than ranks
+        run_ring(5, 4, 4);
+    }
+
+    #[test]
+    fn ring_single_rank_noop() {
+        let comms = ring_network(1);
+        let mut buf = vec![1.0, 2.0];
+        let sent = comms[0].allreduce(&mut buf);
+        assert_eq!(sent, 0);
+        assert_eq!(buf, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_all_ranks_agree() {
+        let results = run_ring(6, 1000, 5);
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn ring_message_volume_is_bandwidth_optimal() {
+        // Each rank sends 2(N−1)·(n/N) elements (± chunk rounding).
+        let n_ranks = 4;
+        let len = 1024;
+        let comms = ring_network(n_ranks);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    c.allreduce(&mut buf)
+                })
+            })
+            .collect();
+        for h in handles {
+            let sent = h.join().unwrap();
+            let expect = 2 * (n_ranks - 1) * (len / n_ranks);
+            assert_eq!(sent, expect);
+        }
+    }
+
+    #[test]
+    fn ring_matches_rendezvous_collective() {
+        // Differential test: the wire-level ring and the rendezvous
+        // collective must produce identical sums for identical inputs.
+        let n = 4;
+        let len = 333;
+        let ring_out = run_ring(n, len, 7);
+        let group = crate::comm::Group::new(n, crate::comm::NetModel::instant());
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let mut c = group.comm(r);
+                thread::spawn(move || {
+                    let mut rng = Rng::keyed(7, r as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf);
+                    c.allreduce(&buf, 0.0).0.as_ref().clone()
+                })
+            })
+            .collect();
+        for h in handles {
+            let rdv = h.join().unwrap();
+            for (a, b) in rdv.iter().zip(&ring_out[0]) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Network topologies: the paper's testbed is a Cray XC with Aries
+//! routers in a **dragonfly** topology (§IV-B). This module refines the
+//! flat α-β model with topology-aware link costs and a hierarchical
+//! (intra-group reduce → inter-group exchange → intra-group broadcast)
+//! all-reduce schedule, used by the comm benches as an ablation against
+//! the flat ring model.
+
+use super::{AllReduceAlgo, NetModel};
+
+/// A two-level dragonfly abstraction: `groups` fully-connected groups of
+/// `nodes_per_group` nodes; intra-group links are fast (electrical),
+/// inter-group links slower (optical, tapered).
+#[derive(Debug, Clone, Copy)]
+pub struct Dragonfly {
+    pub groups: usize,
+    pub nodes_per_group: usize,
+    /// Intra-group latency / bandwidth.
+    pub alpha_local_s: f64,
+    pub beta_local: f64,
+    /// Inter-group latency / bandwidth (per global link).
+    pub alpha_global_s: f64,
+    pub beta_global: f64,
+}
+
+impl Default for Dragonfly {
+    fn default() -> Self {
+        // Aries-like: ~1.2 µs within a group, ~2.2 µs across optics;
+        // 14 GB/s electrical, 4.7 GB/s per-node tapered global.
+        Dragonfly {
+            groups: 4,
+            nodes_per_group: 32,
+            alpha_local_s: 1.2e-6,
+            beta_local: 14e9,
+            alpha_global_s: 2.2e-6,
+            beta_global: 4.7e9,
+        }
+    }
+}
+
+impl Dragonfly {
+    pub fn n_nodes(&self) -> usize {
+        self.groups * self.nodes_per_group
+    }
+
+    /// Shape a dragonfly around `n` nodes (√n groups, rounded up).
+    pub fn for_nodes(n: usize) -> Self {
+        let mut d = Dragonfly::default();
+        let groups = (n as f64).sqrt().ceil() as usize;
+        d.groups = groups.max(1);
+        d.nodes_per_group = n.div_ceil(d.groups).max(1);
+        d
+    }
+
+    /// Hierarchical all-reduce cost: ring reduce-scatter + all-gather
+    /// within each group (local links), then a ring across group leaders
+    /// on the reduced payload (global links), then local broadcast.
+    pub fn hierarchical_allreduce_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        let bytes = n_elems as f64 * 4.0;
+        let local_ranks = self.nodes_per_group.min(n_ranks) as f64;
+        let n_groups = n_ranks.div_ceil(self.nodes_per_group) as f64;
+
+        // local ring all-reduce within the group
+        let local = if local_ranks > 1.0 {
+            2.0 * (local_ranks - 1.0) * (self.alpha_local_s + bytes / local_ranks / self.beta_local)
+        } else {
+            0.0
+        };
+        // leader ring across groups on the full payload
+        let global = if n_groups > 1.0 {
+            2.0 * (n_groups - 1.0) * (self.alpha_global_s + bytes / n_groups / self.beta_global)
+        } else {
+            0.0
+        };
+        // local broadcast of the result (one full-payload hop down a
+        // local tree)
+        let bcast = if local_ranks > 1.0 {
+            (local_ranks.log2().ceil()) * (self.alpha_local_s + bytes / self.beta_local / local_ranks.max(1.0))
+        } else {
+            0.0
+        };
+        local + global + bcast
+    }
+
+    /// A flat [`NetModel`] with effective parameters matched to this
+    /// dragonfly at a given scale (for plugging into the engines, which
+    /// take the flat model).
+    pub fn effective_net_model(&self, n_elems: usize, n_ranks: usize) -> NetModel {
+        let t = self.hierarchical_allreduce_time(n_elems, n_ranks);
+        // Solve the flat-ring formula for β with the default α:
+        //   t = 2(N−1)(α + b/N/β)  ⇒  β = b/N / (t/(2(N−1)) − α)
+        let alpha = self.alpha_local_s;
+        let n = n_ranks as f64;
+        let bytes = n_elems as f64 * 4.0;
+        let per_step = (t / (2.0 * (n - 1.0).max(1.0)) - alpha).max(1e-12);
+        NetModel {
+            alpha_s: alpha,
+            beta_bytes_per_s: bytes / n / per_step,
+            algo: AllReduceAlgo::Ring,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_group_is_pure_local_ring() {
+        let d = Dragonfly { groups: 1, nodes_per_group: 8, ..Dragonfly::default() };
+        let t = d.hierarchical_allreduce_time(1_000_000, 8);
+        let local_ring =
+            2.0 * 7.0 * (d.alpha_local_s + 4e6 / 8.0 / d.beta_local);
+        // plus the local broadcast term
+        assert!(t >= local_ring);
+        assert!(t < local_ring * 1.5);
+    }
+
+    #[test]
+    fn cross_group_costs_more_than_local() {
+        let d = Dragonfly::default();
+        let within = d.hierarchical_allreduce_time(1_000_000, d.nodes_per_group);
+        let across = d.hierarchical_allreduce_time(1_000_000, d.n_nodes());
+        assert!(across > within, "{across} vs {within}");
+    }
+
+    #[test]
+    fn monotone_in_payload_and_ranks() {
+        let d = Dragonfly::default();
+        assert!(
+            d.hierarchical_allreduce_time(2_000_000, 64)
+                > d.hierarchical_allreduce_time(1_000_000, 64)
+        );
+        assert!(
+            d.hierarchical_allreduce_time(1_000_000, 128)
+                > d.hierarchical_allreduce_time(1_000_000, 16)
+        );
+    }
+
+    #[test]
+    fn for_nodes_covers_request() {
+        let d = Dragonfly::for_nodes(100);
+        assert!(d.n_nodes() >= 100);
+    }
+
+    #[test]
+    fn effective_model_matches_hierarchical_time() {
+        let d = Dragonfly::default();
+        let (elems, ranks) = (1_000_000, 64);
+        let t_hier = d.hierarchical_allreduce_time(elems, ranks);
+        let net = d.effective_net_model(elems, ranks);
+        let t_flat = net.allreduce_time(elems, ranks);
+        assert!((t_flat - t_hier).abs() / t_hier < 0.05, "{t_flat} vs {t_hier}");
+    }
+
+    #[test]
+    fn single_rank_free() {
+        assert_eq!(Dragonfly::default().hierarchical_allreduce_time(1000, 1), 0.0);
+    }
+}

@@ -1,0 +1,433 @@
+//! Experiment configuration: typed config with defaults matching the
+//! paper's §IV-A hyper-parameters, a builder for programmatic use, and
+//! TOML loading for the CLI.
+
+mod toml;
+
+pub use toml::{parse as parse_toml, TomlError, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::Algo;
+use crate::comm::{AllReduceAlgo, NetModel};
+use crate::simtime::ComputeModel;
+
+/// Full description of one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Run name (used for output files).
+    pub name: String,
+    /// Backend: an artifact variant directory name (e.g.
+    /// `"tiny_cnn_b32"`) or `"linear"` for the pure-rust reference model.
+    pub variant: String,
+    /// Where artifact variants live.
+    pub artifacts_root: PathBuf,
+    pub algo: Algo,
+    /// Number of workers N.
+    pub nodes: usize,
+    /// Per-worker mini-batch |B|/N.
+    pub local_batch: usize,
+    /// Per-worker training iterations.
+    pub steps: u64,
+    pub seed: u64,
+
+    // --- optimizer & schedules (paper §IV-A defaults) ---
+    /// `"momentum"`, `"lars"` or `"adam"`.
+    pub optimizer: String,
+    /// Momentum μ.
+    pub momentum: f32,
+    /// Single-node reference LR η_sn (0.1 for ResNet@256, 0.02 for VGG).
+    pub eta_single: f32,
+    /// Reference batch for the Eq. 16 linear-scaling rule.
+    pub base_batch: usize,
+    /// Planned warmup length as a fraction of total iterations (paper:
+    /// one half).
+    pub warmup_frac: f32,
+    /// Where warmup actually stops (plateau), as a fraction of total
+    /// iterations (paper: 15/90 ≈ 0.17 of the run for ≤64k batches).
+    pub warmup_stop_frac: f32,
+    /// Base weight decay (paper: 1e-4).
+    pub weight_decay: f32,
+    /// The paper's constant k multiplying weight decay to compensate the
+    /// scheduled decay (k = 2.3).
+    pub wd_k: f32,
+    /// Variance-control base λ0 (Eq. 17; paper: 0.2). 0 disables the
+    /// compensation (the S3GD ablation).
+    pub lam0: f32,
+    /// Maximum staleness (paper trains with 1; §V proposes more).
+    pub staleness: usize,
+
+    // --- data ---
+    pub n_train: usize,
+    pub n_val: usize,
+    pub data_noise: f32,
+
+    // --- simulation models ---
+    pub net: NetModel,
+    pub compute: ComputeModel,
+    /// If true, drive worker virtual time from measured PJRT wall time
+    /// instead of `compute` (used by e2e runs on the real backend).
+    pub time_from_wall: bool,
+
+    // --- bookkeeping ---
+    /// Validation pass every this many iterations (0 = only at the end).
+    pub eval_every: u64,
+    /// Batches per validation pass.
+    pub eval_batches: usize,
+    /// Output directory for CSV dumps (None = no dumps).
+    pub out_dir: Option<PathBuf>,
+}
+
+impl ExperimentConfig {
+    /// Builder seeded with the paper's defaults.
+    pub fn builder(variant: &str) -> ConfigBuilder {
+        ConfigBuilder { cfg: Self::defaults(variant) }
+    }
+
+    fn defaults(variant: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            name: format!("{variant}_run"),
+            variant: variant.to_string(),
+            artifacts_root: PathBuf::from("artifacts"),
+            algo: Algo::DcS3gd,
+            nodes: 4,
+            local_batch: 32,
+            steps: 200,
+            seed: 0,
+            optimizer: "momentum".into(),
+            momentum: 0.9,
+            eta_single: 0.1,
+            base_batch: 256,
+            warmup_frac: 0.5,
+            warmup_stop_frac: 1.0 / 6.0, // 15 of 90 epochs
+            weight_decay: 1e-4,
+            wd_k: 2.3,
+            lam0: 0.2,
+            staleness: 1,
+            n_train: 8192,
+            n_val: 1024,
+            data_noise: 0.6,
+            net: NetModel::default(),
+            compute: ComputeModel::default(),
+            time_from_wall: false,
+            eval_every: 0,
+            eval_batches: 8,
+            out_dir: None,
+        }
+    }
+
+    /// Global batch |B| = N · local batch.
+    pub fn global_batch(&self) -> usize {
+        self.nodes * self.local_batch
+    }
+
+    /// Peak LR per the Eq. 16 linear-scaling rule.
+    pub fn eta_peak(&self) -> f32 {
+        crate::optim::LrSchedule::scaled_peak(self.eta_single, self.global_batch(), self.base_batch)
+    }
+
+    /// The paper's LR schedule resolved for this run.
+    pub fn lr_schedule(&self) -> crate::optim::LrSchedule {
+        let planned = ((self.steps as f32) * self.warmup_frac).max(1.0) as u64;
+        let stop = ((self.steps as f32) * self.warmup_stop_frac) as u64;
+        crate::optim::LrSchedule::paper(self.eta_peak(), planned, stop.min(planned), self.steps)
+    }
+
+    /// Effective weight decay at iteration `it`: same shape as the LR
+    /// schedule, scaled to wd·k at the schedule's peak (§IV-A).
+    pub fn wd_at(&self, it: u64, sched: &crate::optim::LrSchedule) -> f32 {
+        let peak = sched.reached_peak();
+        if peak <= 0.0 {
+            return self.weight_decay * self.wd_k;
+        }
+        self.weight_decay * self.wd_k * sched.at(it) / peak
+    }
+
+    /// Load from a TOML file (see `configs/` for examples).
+    pub fn from_toml_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text. Unknown keys are rejected (typo safety).
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let map = parse_toml(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_map(map)
+    }
+
+    fn from_map(map: BTreeMap<String, TomlValue>) -> Result<Self> {
+        let variant = map
+            .get("variant")
+            .and_then(TomlValue::as_str)
+            .unwrap_or("linear")
+            .to_string();
+        let mut cfg = Self::defaults(&variant);
+        for (key, val) in &map {
+            let k = key.as_str();
+            let err = || anyhow::anyhow!("bad value for {k}");
+            match k {
+                "name" => cfg.name = val.as_str().ok_or_else(err)?.to_string(),
+                "variant" => {}
+                "artifacts_root" => cfg.artifacts_root = val.as_str().ok_or_else(err)?.into(),
+                "algo" => cfg.algo = Algo::parse(val.as_str().ok_or_else(err)?)?,
+                "nodes" => cfg.nodes = val.as_i64().ok_or_else(err)? as usize,
+                "local_batch" => cfg.local_batch = val.as_i64().ok_or_else(err)? as usize,
+                "steps" => cfg.steps = val.as_i64().ok_or_else(err)? as u64,
+                "seed" => cfg.seed = val.as_i64().ok_or_else(err)? as u64,
+                "optim.kind" => cfg.optimizer = val.as_str().ok_or_else(err)?.to_string(),
+                "optim.momentum" => cfg.momentum = val.as_f64().ok_or_else(err)? as f32,
+                "optim.eta_single" => cfg.eta_single = val.as_f64().ok_or_else(err)? as f32,
+                "optim.base_batch" => cfg.base_batch = val.as_i64().ok_or_else(err)? as usize,
+                "optim.warmup_frac" => cfg.warmup_frac = val.as_f64().ok_or_else(err)? as f32,
+                "optim.warmup_stop_frac" => {
+                    cfg.warmup_stop_frac = val.as_f64().ok_or_else(err)? as f32
+                }
+                "optim.weight_decay" => cfg.weight_decay = val.as_f64().ok_or_else(err)? as f32,
+                "optim.wd_k" => cfg.wd_k = val.as_f64().ok_or_else(err)? as f32,
+                "optim.lam0" => cfg.lam0 = val.as_f64().ok_or_else(err)? as f32,
+                "optim.staleness" => cfg.staleness = val.as_i64().ok_or_else(err)? as usize,
+                "data.n_train" => cfg.n_train = val.as_i64().ok_or_else(err)? as usize,
+                "data.n_val" => cfg.n_val = val.as_i64().ok_or_else(err)? as usize,
+                "data.noise" => cfg.data_noise = val.as_f64().ok_or_else(err)? as f32,
+                "net.alpha_s" => cfg.net.alpha_s = val.as_f64().ok_or_else(err)?,
+                "net.beta_bytes_per_s" => cfg.net.beta_bytes_per_s = val.as_f64().ok_or_else(err)?,
+                "net.algo" => {
+                    cfg.net.algo = match val.as_str().ok_or_else(err)? {
+                        "ring" => AllReduceAlgo::Ring,
+                        "tree" => AllReduceAlgo::Tree,
+                        "flat" => AllReduceAlgo::Flat,
+                        other => bail!("unknown net.algo {other:?}"),
+                    }
+                }
+                "compute.sec_per_sample" => {
+                    cfg.compute.sec_per_sample = val.as_f64().ok_or_else(err)?
+                }
+                "compute.overhead_s" => cfg.compute.overhead_s = val.as_f64().ok_or_else(err)?,
+                "compute.jitter_frac" => cfg.compute.jitter_frac = val.as_f64().ok_or_else(err)?,
+                "compute.time_from_wall" => cfg.time_from_wall = val.as_bool().ok_or_else(err)?,
+                "eval.every" => cfg.eval_every = val.as_i64().ok_or_else(err)? as u64,
+                "eval.batches" => cfg.eval_batches = val.as_i64().ok_or_else(err)? as usize,
+                "out_dir" => cfg.out_dir = Some(val.as_str().ok_or_else(err)?.into()),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            bail!("nodes must be ≥ 1");
+        }
+        if self.local_batch == 0 {
+            bail!("local_batch must be ≥ 1");
+        }
+        if self.staleness == 0 {
+            bail!("staleness must be ≥ 1");
+        }
+        if !(0.0..=1.0).contains(&self.warmup_frac)
+            || !(0.0..=1.0).contains(&self.warmup_stop_frac)
+        {
+            bail!("warmup fractions must be in [0, 1]");
+        }
+        if self.warmup_stop_frac > self.warmup_frac {
+            bail!("warmup_stop_frac must not exceed warmup_frac");
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder over [`ExperimentConfig`].
+pub struct ConfigBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl ConfigBuilder {
+    pub fn name(mut self, v: &str) -> Self {
+        self.cfg.name = v.into();
+        self
+    }
+    pub fn algo(mut self, v: Algo) -> Self {
+        self.cfg.algo = v;
+        self
+    }
+    pub fn nodes(mut self, v: usize) -> Self {
+        self.cfg.nodes = v;
+        self
+    }
+    pub fn local_batch(mut self, v: usize) -> Self {
+        self.cfg.local_batch = v;
+        self
+    }
+    pub fn steps(mut self, v: u64) -> Self {
+        self.cfg.steps = v;
+        self
+    }
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+    pub fn eta_single(mut self, v: f32) -> Self {
+        self.cfg.eta_single = v;
+        self
+    }
+    pub fn base_batch(mut self, v: usize) -> Self {
+        self.cfg.base_batch = v;
+        self
+    }
+    pub fn momentum(mut self, v: f32) -> Self {
+        self.cfg.momentum = v;
+        self
+    }
+    pub fn lam0(mut self, v: f32) -> Self {
+        self.cfg.lam0 = v;
+        self
+    }
+    pub fn staleness(mut self, v: usize) -> Self {
+        self.cfg.staleness = v;
+        self
+    }
+    pub fn optimizer(mut self, v: &str) -> Self {
+        self.cfg.optimizer = v.into();
+        self
+    }
+    pub fn weight_decay(mut self, v: f32) -> Self {
+        self.cfg.weight_decay = v;
+        self
+    }
+    pub fn warmup(mut self, planned_frac: f32, stop_frac: f32) -> Self {
+        self.cfg.warmup_frac = planned_frac;
+        self.cfg.warmup_stop_frac = stop_frac;
+        self
+    }
+    pub fn net(mut self, v: NetModel) -> Self {
+        self.cfg.net = v;
+        self
+    }
+    pub fn compute(mut self, v: ComputeModel) -> Self {
+        self.cfg.compute = v;
+        self
+    }
+    pub fn time_from_wall(mut self, v: bool) -> Self {
+        self.cfg.time_from_wall = v;
+        self
+    }
+    pub fn data(mut self, n_train: usize, n_val: usize, noise: f32) -> Self {
+        self.cfg.n_train = n_train;
+        self.cfg.n_val = n_val;
+        self.cfg.data_noise = noise;
+        self
+    }
+    pub fn eval_every(mut self, every: u64, batches: usize) -> Self {
+        self.cfg.eval_every = every;
+        self.cfg.eval_batches = batches;
+        self
+    }
+    pub fn out_dir(mut self, v: impl Into<PathBuf>) -> Self {
+        self.cfg.out_dir = Some(v.into());
+        self
+    }
+    pub fn artifacts_root(mut self, v: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_root = v.into();
+        self
+    }
+
+    pub fn build(self) -> ExperimentConfig {
+        self.cfg.validate().expect("invalid config");
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_match_paper() {
+        let cfg = ExperimentConfig::builder("linear").build();
+        assert_eq!(cfg.momentum, 0.9);
+        assert_eq!(cfg.weight_decay, 1e-4);
+        assert_eq!(cfg.wd_k, 2.3);
+        assert_eq!(cfg.lam0, 0.2);
+        assert_eq!(cfg.staleness, 1);
+        assert_eq!(cfg.base_batch, 256);
+    }
+
+    #[test]
+    fn eq16_global_batch_scaling() {
+        let cfg = ExperimentConfig::builder("linear")
+            .nodes(8)
+            .local_batch(64)
+            .eta_single(0.1)
+            .build();
+        assert_eq!(cfg.global_batch(), 512);
+        assert!((cfg.eta_peak() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = r#"
+            name = "paper_row3"
+            variant = "linear"
+            algo = "dcs3gd"
+            nodes = 8
+            local_batch = 64
+            steps = 500
+
+            [optim]
+            momentum = 0.85
+            lam0 = 0.3
+            staleness = 2
+
+            [net]
+            alpha_s = 2e-6
+            algo = "tree"
+
+            [eval]
+            every = 50
+            batches = 4
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.name, "paper_row3");
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.momentum, 0.85);
+        assert_eq!(cfg.lam0, 0.3);
+        assert_eq!(cfg.staleness, 2);
+        assert_eq!(cfg.net.algo, AllReduceAlgo::Tree);
+        assert_eq!(cfg.eval_every, 50);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(ExperimentConfig::from_toml_str("typo_key = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ExperimentConfig::from_toml_str("nodes = 0").is_err());
+        let doc = "
+            [optim]
+            warmup_frac = 0.1
+            warmup_stop_frac = 0.5
+        ";
+        assert!(ExperimentConfig::from_toml_str(doc).is_err());
+    }
+
+    #[test]
+    fn wd_schedule_follows_lr_shape() {
+        let cfg = ExperimentConfig::builder("linear").steps(100).build();
+        let sched = cfg.lr_schedule();
+        // ratio wd(it)/lr(it) constant in the decay phase
+        let r1 = cfg.wd_at(50, &sched) / sched.at(50);
+        let r2 = cfg.wd_at(80, &sched) / sched.at(80);
+        assert!((r1 - r2).abs() < 1e-6 * r1.abs());
+        // and equals wd·k at the reached peak
+        let stop = (100.0 * cfg.warmup_stop_frac) as u64;
+        let at_stop = cfg.wd_at(stop, &sched);
+        assert!((at_stop - cfg.weight_decay * cfg.wd_k).abs() / at_stop < 0.05);
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal TOML-subset parser (offline build: no `toml` crate).
+//!
+//! Supported: `[section]` headers (arbitrarily dotted), `key = value`
+//! with strings, integers, floats, booleans and flat arrays, `#`
+//! comments, blank lines. Keys are exposed flattened as
+//! `"section.key"`. That covers every config file this project ships;
+//! anything fancier is a parse error, not a silent misread.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+/// A TOML scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document into flattened `section.key → value`.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError { line: line_no, msg: "unterminated [section]".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line: line_no, msg: "empty section name".into() });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| TomlError { line: line_no, msg: "expected key = value".into() })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line: line_no, msg: "empty key".into() });
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|msg| TomlError { line: line_no, msg })?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a # inside a quoted string must survive
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        return inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(TomlValue::Array);
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = r#"
+            # a config
+            name = "run1"       # trailing comment
+            steps = 1_000
+            lr = 0.1
+            debug = false
+
+            [net]
+            alpha = 1.5e-6
+            algo = "ring"
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["name"], TomlValue::Str("run1".into()));
+        assert_eq!(m["steps"], TomlValue::Int(1000));
+        assert_eq!(m["lr"], TomlValue::Float(0.1));
+        assert_eq!(m["debug"], TomlValue::Bool(false));
+        assert_eq!(m["net.alpha"].as_f64(), Some(1.5e-6));
+        assert_eq!(m["net.algo"].as_str(), Some("ring"));
+    }
+
+    #[test]
+    fn arrays() {
+        let m = parse("xs = [1, 2, 3]\nys = [0.5, \"a\"]").unwrap();
+        assert_eq!(
+            m["xs"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn string_with_hash_and_escape() {
+        let m = parse(r#"s = "a#b\n" "#).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b\n"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let m = parse("a = -3\nb = -0.5\nc = 1e-6").unwrap();
+        assert_eq!(m["a"].as_i64(), Some(-3));
+        assert_eq!(m["b"].as_f64(), Some(-0.5));
+        assert_eq!(m["c"].as_f64(), Some(1e-6));
+    }
+}

@@ -1,0 +1,320 @@
+//! Delay-compensation math (paper §III) — the rust mirror of the L1
+//! Pallas kernel in `python/compile/kernels/dc_correction.py`.
+//!
+//! Pinned to the same oracle (`kernels/ref.py`) via golden fixtures in
+//! `rust/tests/golden/` (see the `golden_vectors` integration test).
+//!
+//! Two entry points:
+//! * [`dc_correct_update`] — fused single-pass hot path used by the
+//!   coordinator when running with the rust update path.
+//! * the unfused pieces (`dynamic_lambda`, `dc_correct`) used by tests and
+//!   the DC-ASGD parameter-server baseline.
+
+use crate::tensor;
+
+/// Hyper-parameters of the fused update.
+#[derive(Debug, Clone, Copy)]
+pub struct DcHyper {
+    /// Learning rate η (already schedule-resolved for this iteration).
+    pub eta: f32,
+    /// Momentum μ.
+    pub mu: f32,
+    /// Variance-control base λ0 (Eq. 17); λ_i is derived per call.
+    pub lam0: f32,
+    /// Weight decay (already schedule-resolved; applied into the
+    /// gradient, masked by `decay_mask` if provided).
+    pub wd: f32,
+}
+
+/// Clamp on the dynamic λ: near convergence ‖g⊙g⊙D‖ shrinks
+/// quadratically in ‖g‖ while the numerator shrinks linearly, so the
+/// raw Eq. 17 ratio diverges even though the *correction* stays bounded
+/// at λ0‖g‖. The clamp keeps λ in f32-safe territory without touching
+/// any training-relevant regime (λ is O(1)–O(10³) mid-training).
+pub const LAMBDA_MAX: f32 = 1e6;
+
+/// Eq. 17: dynamic λ_i = λ0·‖g‖ / ‖g ⊙ g ⊙ D‖, guarded for the D = 0
+/// first iteration (returns 0, making the correction an exact no-op)
+/// and clamped to [`LAMBDA_MAX`].
+pub fn dynamic_lambda(g: &[f32], d: &[f32], lam0: f32) -> f32 {
+    // One fused pass for both reductions (§Perf iteration 2).
+    let (gn, cn) = tensor::lambda_norms(g, d);
+    if cn > 0.0 {
+        ((lam0 as f64 * gn / cn.max(1e-30)) as f32).min(LAMBDA_MAX)
+    } else {
+        0.0
+    }
+}
+
+/// Eq. 10 (unfused): `g~ = g + λ · g ⊙ g ⊙ d`.
+pub fn dc_correct(g: &[f32], d: &[f32], lam: f32, out: &mut [f32]) {
+    assert_eq!(g.len(), d.len());
+    assert_eq!(g.len(), out.len());
+    for ((o, gi), di) in out.iter_mut().zip(g).zip(d) {
+        *o = gi + lam * gi * gi * di;
+    }
+}
+
+/// Result of the fused update: λ used, plus norms the metrics layer and
+/// schedule logic want without recomputing reductions.
+#[derive(Debug, Clone, Copy)]
+pub struct DcStepInfo {
+    pub lam: f32,
+    pub grad_norm: f64,
+    pub update_norm: f64,
+}
+
+/// Fused DC-S3GD update (Eqs. 10–12 + momentum + weight decay):
+///
+/// ```text
+/// λ   = λ0 ‖g‖ / ‖g⊙g⊙D‖           (Eq. 17)
+/// g~  = g + λ g⊙g⊙D                 (Eq. 10)
+/// v'  = μ v + g~ + wd·mask·w         (momentum, decay exempt mask=0)
+/// Δw  = −η v'
+/// w  += D + Δw                       (Eq. 12, move-to-average + step)
+/// ```
+///
+/// One reduction pass (for λ) + one elementwise pass over the five
+/// streams. `delta_w_out` receives Δw (the quantity that is all-reduced
+/// next iteration); `v` and `w` are updated in place.
+///
+/// When `d` is `None` the correction and the move-to-average are skipped
+/// (plain momentum SGD — the SSGD baseline path).
+#[allow(clippy::too_many_arguments)]
+pub fn dc_correct_update(
+    g: &[f32],
+    d: Option<&[f32]>,
+    v: &mut [f32],
+    w: &mut [f32],
+    decay_mask: Option<&[f32]>,
+    hp: DcHyper,
+    delta_w_out: &mut [f32],
+) -> DcStepInfo {
+    let n = g.len();
+    assert_eq!(v.len(), n);
+    assert_eq!(w.len(), n);
+    assert_eq!(delta_w_out.len(), n);
+    if let Some(d) = d {
+        assert_eq!(d.len(), n);
+    }
+    if let Some(m) = decay_mask {
+        assert_eq!(m.len(), n);
+    }
+
+    // §Perf iteration 4: one reduction pass yields both ‖g‖ (grad_norm)
+    // and the Eq. 17 denominator — previously norm2(g) ran twice (once
+    // here, once inside dynamic_lambda).
+    let (grad_norm, lam) = match d {
+        Some(d) if hp.lam0 != 0.0 => {
+            let (gn, cn) = tensor::lambda_norms(g, d);
+            let lam = if cn > 0.0 {
+                ((hp.lam0 as f64 * gn / cn.max(1e-30)) as f32).min(LAMBDA_MAX)
+            } else {
+                0.0
+            };
+            (gn, lam)
+        }
+        _ => (tensor::norm2(g), 0.0),
+    };
+
+    // Single fused elementwise pass. The match is hoisted out of the loop
+    // by monomorphizing on the two Option states, and the loop body keeps
+    // to f32 so LLVM vectorizes it — the update-norm diagnostic is a
+    // separate vectorized pass afterwards (§Perf iteration 3: an inline
+    // f64 accumulator in this loop blocked vectorization, costing ~10%).
+    match (d, decay_mask) {
+        (Some(d), Some(m)) => {
+            for i in 0..n {
+                let gi = g[i];
+                let gt = gi + lam * gi * gi * d[i];
+                let vn = hp.mu * v[i] + gt + hp.wd * m[i] * w[i];
+                v[i] = vn;
+                let dw = -hp.eta * vn;
+                delta_w_out[i] = dw;
+                w[i] += d[i] + dw;
+            }
+        }
+        (Some(d), None) => {
+            for i in 0..n {
+                let gi = g[i];
+                let gt = gi + lam * gi * gi * d[i];
+                let vn = hp.mu * v[i] + gt + hp.wd * w[i];
+                v[i] = vn;
+                let dw = -hp.eta * vn;
+                delta_w_out[i] = dw;
+                w[i] += d[i] + dw;
+            }
+        }
+        (None, Some(m)) => {
+            for i in 0..n {
+                let vn = hp.mu * v[i] + g[i] + hp.wd * m[i] * w[i];
+                v[i] = vn;
+                let dw = -hp.eta * vn;
+                delta_w_out[i] = dw;
+                w[i] += dw;
+            }
+        }
+        (None, None) => {
+            for i in 0..n {
+                let vn = hp.mu * v[i] + g[i] + hp.wd * w[i];
+                v[i] = vn;
+                let dw = -hp.eta * vn;
+                delta_w_out[i] = dw;
+                w[i] += dw;
+            }
+        }
+    }
+
+    DcStepInfo { lam, grad_norm, update_norm: tensor::norm2(delta_w_out) }
+}
+
+/// Eq. 9: `D_i = Δ̄w/N − Δw_i`, computed from the all-reduced sum of
+/// updates and the local update.
+pub fn distance_to_average(sum_delta: &[f32], local_delta: &[f32], n_workers: usize, out: &mut [f32]) {
+    assert_eq!(sum_delta.len(), local_delta.len());
+    assert_eq!(sum_delta.len(), out.len());
+    let inv_n = 1.0 / n_workers as f32;
+    for ((o, s), l) in out.iter_mut().zip(sum_delta).zip(local_delta) {
+        *o = s * inv_n - l;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn lambda_guard_zero_distance() {
+        let g = randvec(1, 100);
+        let d = vec![0.0; 100];
+        assert_eq!(dynamic_lambda(&g, &d, 0.2), 0.0);
+    }
+
+    #[test]
+    fn lambda_normalizes_correction() {
+        // Eq. 17 by construction: ‖λ g⊙g⊙D‖ == λ0 ‖g‖.
+        let g = randvec(2, 500);
+        let d = randvec(3, 500);
+        let lam = dynamic_lambda(&g, &d, 0.2);
+        let mut corr = vec![0.0; 500];
+        for i in 0..500 {
+            corr[i] = lam * g[i] * g[i] * d[i];
+        }
+        let want = 0.2 * tensor::norm2(&g);
+        assert!((tensor::norm2(&corr) - want).abs() / want < 1e-5);
+    }
+
+    #[test]
+    fn fused_matches_unfused() {
+        let n = 333;
+        let g = randvec(4, n);
+        let d = randvec(5, n);
+        let v0 = randvec(6, n);
+        let w0 = randvec(7, n);
+        let hp = DcHyper { eta: 0.1, mu: 0.9, lam0: 0.2, wd: 1e-4 };
+
+        // fused
+        let (mut v, mut w, mut dw) = (v0.clone(), w0.clone(), vec![0.0; n]);
+        let info = dc_correct_update(&g, Some(&d), &mut v, &mut w, None, hp, &mut dw);
+
+        // unfused reference
+        let lam = dynamic_lambda(&g, &d, hp.lam0);
+        assert!((lam - info.lam).abs() < 1e-6);
+        let mut gt = vec![0.0; n];
+        dc_correct(&g, &d, lam, &mut gt);
+        for i in 0..n {
+            let vn = hp.mu * v0[i] + gt[i] + hp.wd * w0[i];
+            let dwi = -hp.eta * vn;
+            assert!((v[i] - vn).abs() < 1e-6, "v[{i}]");
+            assert!((dw[i] - dwi).abs() < 1e-6, "dw[{i}]");
+            assert!((w[i] - (w0[i] + d[i] + dwi)).abs() < 1e-6, "w[{i}]");
+        }
+    }
+
+    #[test]
+    fn no_distance_is_plain_momentum_sgd() {
+        let n = 64;
+        let g = randvec(8, n);
+        let v0 = randvec(9, n);
+        let w0 = randvec(10, n);
+        let hp = DcHyper { eta: 0.5, mu: 0.8, lam0: 0.2, wd: 0.0 };
+        let (mut v, mut w, mut dw) = (v0.clone(), w0.clone(), vec![0.0; n]);
+        let info = dc_correct_update(&g, None, &mut v, &mut w, None, hp, &mut dw);
+        assert_eq!(info.lam, 0.0);
+        for i in 0..n {
+            let vn = 0.8 * v0[i] + g[i];
+            assert!((v[i] - vn).abs() < 1e-6);
+            assert!((w[i] - (w0[i] - 0.5 * vn)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn decay_mask_exempts_elements() {
+        let n = 8;
+        let g = vec![0.0; n]; // isolate the decay term
+        let v0 = vec![0.0; n];
+        let w0 = vec![1.0; n];
+        let mut mask = vec![1.0; n];
+        mask[3] = 0.0;
+        mask[7] = 0.0;
+        let hp = DcHyper { eta: 1.0, mu: 0.0, lam0: 0.0, wd: 0.1 };
+        let (mut v, mut w, mut dw) = (v0, w0.clone(), vec![0.0; n]);
+        dc_correct_update(&g, None, &mut v, &mut w, Some(&mask), hp, &mut dw);
+        for i in 0..n {
+            let expect = if mask[i] == 1.0 { 1.0 - 0.1 } else { 1.0 };
+            assert!((w[i] - expect).abs() < 1e-6, "w[{i}]={}", w[i]);
+        }
+    }
+
+    #[test]
+    fn distance_to_average_eq9() {
+        // 3 workers with known updates; D_i = mean(Δw) − Δw_i.
+        let d1 = vec![1.0, 0.0];
+        let d2 = vec![0.0, 3.0];
+        let d3 = vec![2.0, 3.0];
+        let sum: Vec<f32> = (0..2).map(|i| d1[i] + d2[i] + d3[i]).collect();
+        let mut out = vec![0.0; 2];
+        distance_to_average(&sum, &d1, 3, &mut out);
+        assert_eq!(out, vec![0.0, 2.0]);
+        distance_to_average(&sum, &d3, 3, &mut out);
+        assert_eq!(out, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn averaging_identity_eq8() {
+        // After every worker applies w_i + D_i, all workers agree and the
+        // common value equals w̄ + mean(Δw) — the Eq. 8 invariant the
+        // algorithm's correctness rests on.
+        let n = 50;
+        let n_workers = 4;
+        let w_bar = randvec(11, n);
+        let deltas: Vec<Vec<f32>> = (0..n_workers).map(|i| randvec(20 + i as u64, n)).collect();
+        let mut sum = vec![0.0; n];
+        for d in &deltas {
+            tensor::add_assign(&mut sum, d);
+        }
+        let mut reached: Vec<Vec<f32>> = Vec::new();
+        for d in &deltas {
+            // worker state: w_i = w̄ + Δw_i  (Eq. 7)
+            let mut wi: Vec<f32> = w_bar.iter().zip(d).map(|(a, b)| a + b).collect();
+            let mut dist = vec![0.0; n];
+            distance_to_average(&sum, d, n_workers, &mut dist);
+            tensor::add_assign(&mut wi, &dist); // w_i + D_i
+            reached.push(wi);
+        }
+        for i in 0..n {
+            let want = w_bar[i] + sum[i] / n_workers as f32;
+            for r in &reached {
+                assert!((r[i] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

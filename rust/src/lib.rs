@@ -1,0 +1,51 @@
+//! # DC-S3GD — Delay-Compensated Stale-Synchronous SGD
+//!
+//! A reproduction of *"DC-S3GD: Delay-Compensated Stale-Synchronous SGD
+//! for Large-Scale Decentralized Neural Network Training"* (A. Rigazzi,
+//! Cray, 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized training coordinator:
+//!   simulated-MPI collectives with non-blocking semantics
+//!   ([`comm`]), the stale-synchronous overlap engine and the paper's
+//!   Algorithm 1 ([`algo::dcs3gd`]), the SSGD / ASGD / DC-ASGD baselines
+//!   ([`algo`], [`ps`]), optimizers and the paper's LR/weight-decay
+//!   schedules ([`optim`]), a virtual-time engine for the Eq. 13/14
+//!   timing analysis ([`simtime`]), a synthetic ImageNet-style dataset
+//!   ([`data`]), metrics ([`metrics`]) and a config system ([`config`]).
+//! * **L2** — JAX model definitions (`python/compile/model.py`), lowered
+//!   once to HLO text artifacts and executed from rust via PJRT
+//!   ([`runtime`]).
+//! * **L1** — the fused delay-compensation Pallas kernel
+//!   (`python/compile/kernels/dc_correction.py`), embedded in the
+//!   `dc_step` artifact; [`dc`] is its rust mirror used on the hot path
+//!   when running without artifacts.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! python invocation, after which the `dcs3gd` binary is self-contained.
+
+pub mod algo;
+pub mod bench_util;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod dc;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod ps;
+pub mod runtime;
+pub mod simtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algo::{run_experiment, Algo, RunReport};
+    pub use crate::comm::{AllReduceAlgo, Group, NetModel};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::data::SyntheticDataset;
+    pub use crate::metrics::Recorder;
+    pub use crate::optim::{LrSchedule, MomentumSgd, Optimizer};
+    pub use crate::simtime::ComputeModel;
+}

@@ -1,0 +1,190 @@
+//! `dcs3gd` — the launcher binary.
+//!
+//! Subcommands:
+//!   train          run one experiment (config file and/or flags)
+//!   sweep          run a {algo × nodes × batch} sweep, print table rows
+//!   bench-comm     all-reduce cost-model sweep
+//!   list-artifacts show the AOT variants the runtime can load
+//!   help           this text
+
+use anyhow::{bail, Result};
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::cli::Args;
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::model::meta::discover_variants;
+use dcs3gd::simtime::ComputeModel;
+
+const USAGE: &str = "\
+dcs3gd — Delay-Compensated Stale-Synchronous SGD training runtime
+
+USAGE:
+  dcs3gd train [--config FILE] [--variant V] [--algo A] [--nodes N]
+               [--local-batch B] [--steps S] [--lam0 L] [--staleness K]
+               [--eval-every E] [--out-dir DIR] [--time-from-wall]
+  dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
+  dcs3gd bench-comm [--elems N] [--max-ranks R]
+  dcs3gd list-artifacts [--root DIR]
+
+Algorithms: ssgd | s3gd | dcs3gd | asgd | dcasgd
+Variants:   linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "bench-comm" => cmd_bench_comm(&args),
+        "list-artifacts" => cmd_list_artifacts(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(path)?,
+        None => ExperimentConfig::builder(args.get_or("variant", "linear")).build(),
+    };
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a)?;
+    }
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.local_batch = args.get_usize("local-batch", cfg.local_batch)?;
+    cfg.steps = args.get_u64("steps", cfg.steps)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.lam0 = args.get_f64("lam0", cfg.lam0 as f64)? as f32;
+    cfg.staleness = args.get_usize("staleness", cfg.staleness)?;
+    cfg.eta_single = args.get_f64("eta-single", cfg.eta_single as f64)? as f32;
+    cfg.base_batch = args.get_usize("base-batch", cfg.base_batch)?;
+    cfg.momentum = args.get_f64("momentum", cfg.momentum as f64)? as f32;
+    cfg.data_noise = args.get_f64("noise", cfg.data_noise as f64)? as f32;
+    cfg.n_train = args.get_usize("n-train", cfg.n_train)?;
+    cfg.n_val = args.get_usize("n-val", cfg.n_val)?;
+    if let Some(o) = args.get("optimizer") {
+        cfg.optimizer = o.to_string();
+    }
+    cfg.warmup_frac = args.get_f64("warmup-frac", cfg.warmup_frac as f64)? as f32;
+    cfg.warmup_stop_frac =
+        args.get_f64("warmup-stop-frac", cfg.warmup_stop_frac as f64)? as f32;
+    cfg.eval_every = args.get_u64("eval-every", cfg.eval_every)?;
+    if let Some(d) = args.get("out-dir") {
+        cfg.out_dir = Some(d.into());
+    }
+    if let Some(r) = args.get("artifacts-root") {
+        cfg.artifacts_root = r.into();
+    }
+    if args.flag("time-from-wall") {
+        cfg.time_from_wall = true;
+    }
+    if let Some(n) = args.get("name") {
+        cfg.name = n.to_string();
+    } else {
+        cfg.name = format!("{}_{}_n{}_b{}", cfg.variant, cfg.algo.name(), cfg.nodes, cfg.local_batch);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    eprintln!(
+        "training {} | algo={} nodes={} global-batch={} steps={} lam0={} staleness={}",
+        cfg.variant,
+        cfg.algo.name(),
+        cfg.nodes,
+        cfg.global_batch(),
+        cfg.steps,
+        cfg.lam0,
+        cfg.staleness
+    );
+    let report = run_experiment(&cfg)?;
+    println!("{}", report.table_row());
+    println!(
+        "sim time {:.2}s | wall {:.2}s | best val err {:.3}",
+        report.sim_time_s, report.wall_time_s, report.best_val_err
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let algos: Vec<Algo> = args
+        .get_or("algos", "ssgd,s3gd,dcs3gd")
+        .split(',')
+        .map(Algo::parse)
+        .collect::<Result<_>>()?;
+    let nodes: Vec<usize> = args
+        .get_or("nodes", "2,4,8")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad node count {s:?}")))
+        .collect::<Result<_>>()?;
+    println!(
+        "{:<22} {:>7} {:>6} {:>6} | accuracy | speed | iter | dist",
+        "name", "algo", "|B|", "N"
+    );
+    for &n in &nodes {
+        for &algo in &algos {
+            let mut cfg = cfg_from_args(args)?;
+            cfg.algo = algo;
+            cfg.nodes = n;
+            cfg.name = format!("{}_{}_n{}", cfg.variant, algo.name(), n);
+            let report = run_experiment(&cfg)?;
+            println!("{}", report.table_row());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_comm(args: &Args) -> Result<()> {
+    let elems = args.get_usize("elems", 1_000_000)?;
+    let max_ranks = args.get_usize("max-ranks", 128)?;
+    let net = NetModel::default();
+    println!("all-reduce cost model (α={}s, β={}B/s), {} f32", net.alpha_s, net.beta_bytes_per_s, elems);
+    println!("{:>6} {:>12} {:>12} {:>12}", "N", "ring", "tree", "flat");
+    let mut n = 2;
+    while n <= max_ranks {
+        let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(elems, n);
+        let tree = NetModel { algo: AllReduceAlgo::Tree, ..net }.allreduce_time(elems, n);
+        let flat = NetModel { algo: AllReduceAlgo::Flat, ..net }.allreduce_time(elems, n);
+        println!("{n:>6} {ring:>12.6} {tree:>12.6} {flat:>12.6}");
+        n *= 2;
+    }
+    let _ = ComputeModel::default(); // keep the import honest
+    Ok(())
+}
+
+fn cmd_list_artifacts(args: &Args) -> Result<()> {
+    let root = args.get_or("root", "artifacts");
+    let variants = discover_variants(root)?;
+    if variants.is_empty() {
+        println!("no artifacts under {root:?} — run `make artifacts`");
+        return Ok(());
+    }
+    println!("{:<20} {:>10} {:>6} {:>6} {:>8}", "variant", "params", "batch", "hw", "classes");
+    for m in variants {
+        println!(
+            "{:<20} {:>10} {:>6} {:>6} {:>8}",
+            m.dir.file_name().unwrap().to_string_lossy(),
+            m.param_count,
+            m.batch,
+            m.input_hw,
+            m.num_classes
+        );
+    }
+    Ok(())
+}

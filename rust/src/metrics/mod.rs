@@ -1,0 +1,279 @@
+//! Metrics: per-step records, epoch summaries, CSV/JSON export, and the
+//! Table-I-style report rows.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+/// One training-step record from one worker.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub worker: usize,
+    pub iteration: u64,
+    pub epoch: u64,
+    /// Worker virtual time at the end of the step (seconds).
+    pub sim_time: f64,
+    /// Wall-clock spent in the backend's train_step (seconds).
+    pub wall_compute: f64,
+    pub loss: f32,
+    pub train_err: f32,
+    /// λ_i used this step (0 when no correction was applied).
+    pub lambda: f32,
+    /// ‖D_i‖ — distance to the average weights (Eq. 9), the paper's
+    /// §III-D.2 growth metric.
+    pub dist_to_avg: f64,
+    pub lr: f32,
+}
+
+/// One validation pass record.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub iteration: u64,
+    pub epoch: u64,
+    pub sim_time: f64,
+    pub val_loss: f32,
+    pub val_err: f32,
+}
+
+/// Thread-safe recorder shared by all workers of a run.
+#[derive(Clone, Default, Debug)]
+pub struct Recorder {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Default, Debug)]
+struct Inner {
+    steps: Vec<StepRecord>,
+    evals: Vec<EvalRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_step(&self, r: StepRecord) {
+        self.inner.lock().unwrap().steps.push(r);
+    }
+
+    pub fn record_eval(&self, r: EvalRecord) {
+        self.inner.lock().unwrap().evals.push(r);
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.inner.lock().unwrap().steps.len()
+    }
+
+    pub fn steps(&self) -> Vec<StepRecord> {
+        self.inner.lock().unwrap().steps.clone()
+    }
+
+    pub fn evals(&self) -> Vec<EvalRecord> {
+        self.inner.lock().unwrap().evals.clone()
+    }
+
+    /// Steps sorted by (iteration, worker) — thread-interleaving-free
+    /// view used by all aggregates, so reports are deterministic.
+    fn sorted_steps(&self) -> Vec<StepRecord> {
+        let mut steps = self.inner.lock().unwrap().steps.clone();
+        steps.sort_by_key(|r| (r.iteration, r.worker));
+        steps
+    }
+
+    /// Mean training loss/error over the last `k` recorded steps (in
+    /// iteration order, not arrival order).
+    pub fn tail_train(&self, k: usize) -> (f32, f32) {
+        let steps = self.sorted_steps();
+        let n = steps.len();
+        if n == 0 {
+            return (f32::NAN, f32::NAN);
+        }
+        let tail = &steps[n.saturating_sub(k)..];
+        let loss = tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32;
+        let err = tail.iter().map(|r| r.train_err).sum::<f32>() / tail.len() as f32;
+        (loss, err)
+    }
+
+    /// Latest eval error, if any.
+    pub fn last_val_err(&self) -> Option<f32> {
+        self.inner.lock().unwrap().evals.last().map(|e| e.val_err)
+    }
+
+    /// Best (minimum) validation error seen.
+    pub fn best_val_err(&self) -> Option<f32> {
+        self.inner
+            .lock()
+            .unwrap()
+            .evals
+            .iter()
+            .map(|e| e.val_err)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Simulated throughput in samples/second over the recorded run:
+    /// total samples / max worker sim time (the Table I "Speed" column).
+    pub fn sim_throughput(&self, local_batch: usize) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.steps.is_empty() {
+            return 0.0;
+        }
+        let total_samples = inner.steps.len() * local_batch;
+        let t_end = inner.steps.iter().map(|r| r.sim_time).fold(0.0, f64::max);
+        if t_end <= 0.0 {
+            return 0.0;
+        }
+        total_samples as f64 / t_end
+    }
+
+    /// Mean per-iteration sim time (for the Eq. 13/14 comparison):
+    /// max worker sim time / iterations per worker.
+    pub fn mean_iter_time(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.steps.is_empty() {
+            return 0.0;
+        }
+        let workers = inner.steps.iter().map(|r| r.worker).max().unwrap() + 1;
+        let iters = inner.steps.len() / workers;
+        let t_end = inner.steps.iter().map(|r| r.sim_time).fold(0.0, f64::max);
+        t_end / iters.max(1) as f64
+    }
+
+    /// Mean ‖D_i‖ over the last `k` steps in iteration order (E4).
+    pub fn tail_dist_to_avg(&self, k: usize) -> f64 {
+        let steps = self.sorted_steps();
+        let n = steps.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let tail = &steps[n.saturating_sub(k)..];
+        tail.iter().map(|r| r.dist_to_avg).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Per-epoch mean train error (Figure 1's training curves).
+    pub fn epoch_train_err(&self) -> BTreeMap<u64, f32> {
+        let inner = self.inner.lock().unwrap();
+        let mut acc: BTreeMap<u64, (f64, usize)> = BTreeMap::new();
+        for r in &inner.steps {
+            let e = acc.entry(r.epoch).or_insert((0.0, 0));
+            e.0 += r.train_err as f64;
+            e.1 += 1;
+        }
+        acc.into_iter().map(|(k, (s, n))| (k, (s / n as f64) as f32)).collect()
+    }
+
+    /// Write steps as CSV.
+    pub fn write_steps_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let mut f = fs::File::create(path)?;
+        writeln!(
+            f,
+            "worker,iteration,epoch,sim_time,wall_compute,loss,train_err,lambda,dist_to_avg,lr"
+        )?;
+        for r in &inner.steps {
+            writeln!(
+                f,
+                "{},{},{},{:.6},{:.6},{:.6},{:.4},{:.6},{:.6e},{:.6}",
+                r.worker,
+                r.iteration,
+                r.epoch,
+                r.sim_time,
+                r.wall_compute,
+                r.loss,
+                r.train_err,
+                r.lambda,
+                r.dist_to_avg,
+                r.lr
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write evals as CSV.
+    pub fn write_evals_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        let mut f = fs::File::create(path)?;
+        writeln!(f, "iteration,epoch,sim_time,val_loss,val_err")?;
+        for r in &inner.evals {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{:.4}",
+                r.iteration, r.epoch, r.sim_time, r.val_loss, r.val_err
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(worker: usize, it: u64, epoch: u64, sim: f64, err: f32) -> StepRecord {
+        StepRecord {
+            worker,
+            iteration: it,
+            epoch,
+            sim_time: sim,
+            wall_compute: 0.01,
+            loss: 1.0,
+            train_err: err,
+            lambda: 0.0,
+            dist_to_avg: 0.1,
+            lr: 0.1,
+        }
+    }
+
+    #[test]
+    fn throughput_uses_max_sim_time() {
+        let rec = Recorder::new();
+        // 2 workers × 3 iterations × batch 10, finishing at t=6.
+        for w in 0..2 {
+            for it in 0..3 {
+                rec.record_step(step(w, it, 0, (it + 1) as f64 * 2.0, 0.5));
+            }
+        }
+        // 60 samples / 6 s = 10 samples/s
+        assert!((rec.sim_throughput(10) - 10.0).abs() < 1e-12);
+        assert!((rec.mean_iter_time() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_and_epoch_aggregates() {
+        let rec = Recorder::new();
+        rec.record_step(step(0, 0, 0, 1.0, 1.0));
+        rec.record_step(step(0, 1, 0, 2.0, 0.5));
+        rec.record_step(step(0, 2, 1, 3.0, 0.2));
+        let (_, err) = rec.tail_train(2);
+        assert!((err - 0.35).abs() < 1e-6);
+        let by_epoch = rec.epoch_train_err();
+        assert!((by_epoch[&0] - 0.75).abs() < 1e-6);
+        assert!((by_epoch[&1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_tracking() {
+        let rec = Recorder::new();
+        assert!(rec.last_val_err().is_none());
+        rec.record_eval(EvalRecord { iteration: 10, epoch: 0, sim_time: 1.0, val_loss: 2.0, val_err: 0.8 });
+        rec.record_eval(EvalRecord { iteration: 20, epoch: 1, sim_time: 2.0, val_loss: 1.0, val_err: 0.4 });
+        rec.record_eval(EvalRecord { iteration: 30, epoch: 2, sim_time: 3.0, val_loss: 1.5, val_err: 0.6 });
+        assert_eq!(rec.last_val_err(), Some(0.6));
+        assert_eq!(rec.best_val_err(), Some(0.4));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let rec = Recorder::new();
+        rec.record_step(step(0, 0, 0, 1.0, 0.5));
+        let p = std::env::temp_dir().join(format!("dcs3gd_steps_{}.csv", std::process::id()));
+        rec.write_steps_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("worker,iteration"));
+        std::fs::remove_file(&p).unwrap();
+    }
+}

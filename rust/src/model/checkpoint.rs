@@ -1,0 +1,106 @@
+//! Checkpointing: save/restore flat weights + optimizer velocity +
+//! iteration counter, with a small self-describing binary header.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"DCS3GD\x01\x00";
+
+/// A training checkpoint (one worker's view — under DC-S3GD all workers
+/// converge to the same averaged weights at iteration boundaries, so
+/// the leader's copy is canonical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub iteration: u64,
+    pub weights: Vec<f32>,
+    pub velocity: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&self.iteration.to_le_bytes())?;
+        f.write_all(&(self.weights.len() as u64).to_le_bytes())?;
+        f.write_all(&(self.velocity.len() as u64).to_le_bytes())?;
+        write_f32s(&mut f, &self.weights)?;
+        write_f32s(&mut f, &self.velocity)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a DCS3GD checkpoint", path.display());
+        }
+        let iteration = read_u64(&mut f)?;
+        let nw = read_u64(&mut f)? as usize;
+        let nv = read_u64(&mut f)? as usize;
+        let weights = read_f32s(&mut f, nw)?;
+        let velocity = read_f32s(&mut f, nv)?;
+        Ok(Checkpoint { iteration, weights, velocity })
+    }
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            iteration: 1234,
+            weights: vec![1.0, -2.5, 3.25],
+            velocity: vec![0.5, 0.0],
+        };
+        let path = std::env::temp_dir().join(format!("dcs3gd_ckpt_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("dcs3gd_garbage_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

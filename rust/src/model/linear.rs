@@ -1,0 +1,216 @@
+//! Pure-rust multinomial logistic regression — the artifact-free
+//! [`StepBackend`].
+//!
+//! Lets the whole distributed stack (collectives, staleness, DC
+//! correction, schedules) run under `cargo test` with no python/PJRT in
+//! the loop, and provides the "simple model" rows of the ablation
+//! benches. Flat layout: `[W (d_in × classes) | b (classes)]`, matching
+//! the conventions of the jax models.
+
+use super::StepBackend;
+
+/// Softmax regression backend: `logits = x·W + b`, cross-entropy loss,
+/// mean-over-batch gradients (identical normalization to the L2 jax
+/// `train_step`).
+pub struct LinearSoftmax {
+    d_in: usize,
+    classes: usize,
+    batch: usize,
+    /// scratch: logits/probs per sample (batch × classes)
+    probs: Vec<f32>,
+}
+
+impl LinearSoftmax {
+    pub fn new(d_in: usize, classes: usize, batch: usize) -> Self {
+        LinearSoftmax { d_in, classes, batch, probs: vec![0.0; batch * classes] }
+    }
+
+    /// For an image dataset: `d_in = hw·hw·3`.
+    pub fn for_images(hw: usize, classes: usize, batch: usize) -> Self {
+        Self::new(hw * hw * 3, classes, batch)
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Deterministic small-scale init (zeros work for logistic
+    /// regression; tiny noise breaks ties).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut w = vec![0.0f32; self.n_params()];
+        for v in w.iter_mut() {
+            *v = 0.01 * rng.normal();
+        }
+        w
+    }
+
+    /// Forward pass: fills `self.probs` with softmax probabilities and
+    /// returns (loss, err).
+    fn forward(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32) {
+        let (d, c, b) = (self.d_in, self.classes, y.len());
+        assert!(b <= self.batch);
+        assert_eq!(w.len(), self.n_params());
+        assert_eq!(x.len(), b * d);
+        let (wmat, bias) = w.split_at(d * c);
+        let mut loss = 0f64;
+        let mut errs = 0usize;
+        for s in 0..b {
+            let xs = &x[s * d..(s + 1) * d];
+            let logits = &mut self.probs[s * c..(s + 1) * c];
+            logits.copy_from_slice(bias);
+            // logits += xs · W  (W row-major d×c)
+            for (i, &xv) in xs.iter().enumerate() {
+                if xv != 0.0 {
+                    let row = &wmat[i * c..(i + 1) * c];
+                    for (l, wv) in logits.iter_mut().zip(row) {
+                        *l += xv * wv;
+                    }
+                }
+            }
+            // softmax + CE
+            let mut max = f32::NEG_INFINITY;
+            let mut argmax = 0usize;
+            for (j, &v) in logits.iter().enumerate() {
+                if v > max {
+                    max = v;
+                    argmax = j;
+                }
+            }
+            let mut z = 0f64;
+            for v in logits.iter_mut() {
+                *v = (*v - max).exp();
+                z += *v as f64;
+            }
+            let label = y[s] as usize;
+            assert!(label < c, "label {label} out of range");
+            loss -= ((self.probs[s * c + label] as f64 / z).max(1e-30)).ln();
+            for v in self.probs[s * c..(s + 1) * c].iter_mut() {
+                *v = (*v as f64 / z) as f32;
+            }
+            if argmax != label {
+                errs += 1;
+            }
+        }
+        ((loss / b as f64) as f32, errs as f32 / b as f32)
+    }
+}
+
+impl StepBackend for LinearSoftmax {
+    fn n_params(&self) -> usize {
+        self.d_in * self.classes + self.classes
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn train_step(&mut self, w: &[f32], x: &[f32], y: &[i32], grad_out: &mut [f32]) -> (f32, f32) {
+        let (d, c, b) = (self.d_in, self.classes, y.len());
+        assert_eq!(grad_out.len(), self.n_params());
+        let (loss, err) = self.forward(w, x, y);
+        grad_out.iter_mut().for_each(|g| *g = 0.0);
+        let inv_b = 1.0 / b as f32;
+        let (gw, gb) = grad_out.split_at_mut(d * c);
+        for s in 0..b {
+            let xs = &x[s * d..(s + 1) * d];
+            let probs = &mut self.probs[s * c..(s + 1) * c];
+            probs[y[s] as usize] -= 1.0; // dL/dlogits = p − onehot
+            for (j, gbj) in gb.iter_mut().enumerate() {
+                *gbj += inv_b * probs[j];
+            }
+            for (i, &xv) in xs.iter().enumerate() {
+                if xv != 0.0 {
+                    let row = &mut gw[i * c..(i + 1) * c];
+                    for (gj, pj) in row.iter_mut().zip(probs.iter()) {
+                        *gj += inv_b * xv * pj;
+                    }
+                }
+            }
+        }
+        (loss, err)
+    }
+
+    fn eval_step(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32) {
+        self.forward(w, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Split, SyntheticDataset};
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut m = LinearSoftmax::new(6, 3, 4);
+        let w = m.init_params(0);
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = vec![0, 1, 2, 1];
+        let mut g = vec![0.0; m.n_params()];
+        m.train_step(&w, &x, &y, &mut g);
+        let eps = 1e-3;
+        for i in [0usize, 5, 11, 18, 20] {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let (lp, _) = m.eval_step(&wp, &x, &y);
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let (lm, _) = m.eval_step(&wm, &x, &y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-3, "param {i}: fd={fd} an={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn loss_starts_near_log_c() {
+        let mut m = LinearSoftmax::new(10, 5, 8);
+        let w = m.init_params(1);
+        let x = vec![0.1; 80];
+        let y = vec![0, 1, 2, 3, 4, 0, 1, 2];
+        let (loss, _) = m.eval_step(&w, &x, &y);
+        assert!((loss - (5f32).ln()).abs() < 0.1, "loss {loss}");
+    }
+
+    #[test]
+    fn sgd_learns_synthetic_dataset() {
+        let ds = SyntheticDataset::new(3, 8, 4, 512, 128).with_noise(0.4);
+        let mut m = LinearSoftmax::for_images(8, 4, 32);
+        let mut w = m.init_params(0);
+        let px = 8 * 8 * 3;
+        let mut x = vec![0.0; 32 * px];
+        let mut y = vec![0i32; 32];
+        let mut g = vec![0.0; m.n_params()];
+        let mut first_loss = 0.0;
+        for step in 0..150 {
+            let idx: Vec<usize> = (0..32).map(|i| (step * 32 + i) % 512).collect();
+            ds.batch_into(Split::Train, &idx, &mut x, &mut y);
+            let (loss, _) = m.train_step(&w, &x, &y, &mut g);
+            if step == 0 {
+                first_loss = loss;
+            }
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.05 * gi;
+            }
+        }
+        // val error clearly better than chance (0.75)
+        let mut idx: Vec<usize> = (0..128).collect();
+        let mut xv = vec![0.0; 128 * px];
+        let mut yv = vec![0i32; 128];
+        idx.truncate(32 * (128 / 32));
+        let mut errs = 0.0;
+        for chunk in idx.chunks(32) {
+            ds.batch_into(Split::Val, chunk, &mut xv[..32 * px], &mut yv[..32]);
+            let (_, e) = m.eval_step(&w, &xv[..32 * px], &yv[..32]);
+            errs += e;
+        }
+        let val_err = errs / 4.0;
+        let (final_loss, _) = m.eval_step(&w, &xv[..32 * px], &yv[..32]);
+        assert!(final_loss < first_loss, "no learning: {first_loss} -> {final_loss}");
+        assert!(val_err < 0.6, "val err {val_err} not better than chance 0.75");
+    }
+}

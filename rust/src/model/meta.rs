@@ -1,0 +1,215 @@
+//! Artifact metadata: the `meta.json` contract between `aot.py` (which
+//! writes it) and the rust runtime (which loads it).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One (layer name, shape) entry of the flat weight layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LayerInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `meta.json` for one model variant directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub model: String,
+    pub batch: usize,
+    pub param_count: usize,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    pub num_classes: usize,
+    pub layers: Vec<LayerInfo>,
+}
+
+impl ArtifactMeta {
+    /// Load from a variant directory (e.g. `artifacts/tiny_cnn_b32`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let json = Json::parse(&text).context("parsing meta.json")?;
+
+        let get_usize = |k: &str| -> Result<usize> {
+            json.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json missing numeric {k:?}"))
+        };
+        let layers = json
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("meta.json missing layers")?
+            .iter()
+            .map(|l| -> Result<LayerInfo> {
+                Ok(LayerInfo {
+                    name: l
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("layer missing name")?
+                        .to_string(),
+                    shape: l
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("layer missing shape")?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let meta = ArtifactMeta {
+            model: json
+                .get("model")
+                .and_then(Json::as_str)
+                .context("meta.json missing model")?
+                .to_string(),
+            batch: get_usize("batch")?,
+            param_count: get_usize("param_count")?,
+            input_hw: get_usize("input_hw")?,
+            input_channels: get_usize("input_channels")?,
+            num_classes: get_usize("num_classes")?,
+            layers,
+            dir,
+        };
+        let layer_total: usize = meta.layers.iter().map(LayerInfo::numel).sum();
+        if layer_total != meta.param_count {
+            bail!("layer shapes sum to {layer_total}, meta says {}", meta.param_count);
+        }
+        Ok(meta)
+    }
+
+    /// Flat-vector (offset, len) per layer — what LARS needs.
+    pub fn layer_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut off = 0;
+        for l in &self.layers {
+            let n = l.numel();
+            out.push((off, n));
+            off += n;
+        }
+        out
+    }
+
+    /// Elements per input batch (`batch · hw · hw · c`).
+    pub fn x_len(&self) -> usize {
+        self.batch * self.input_hw * self.input_hw * self.input_channels
+    }
+
+    pub fn train_hlo(&self) -> PathBuf {
+        self.dir.join("train_step.hlo.txt")
+    }
+
+    pub fn eval_hlo(&self) -> PathBuf {
+        self.dir.join("eval_step.hlo.txt")
+    }
+
+    pub fn dc_hlo(&self) -> PathBuf {
+        self.dir.join("dc_step.hlo.txt")
+    }
+
+    /// Initial flat weights from `init_params.bin` (f32 LE).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let v = read_f32_le(&self.dir.join("init_params.bin"))?;
+        if v.len() != self.param_count {
+            bail!("init_params.bin has {} f32, expected {}", v.len(), self.param_count);
+        }
+        Ok(v)
+    }
+
+    /// Weight-decay mask from `decay_mask.bin`.
+    pub fn load_decay_mask(&self) -> Result<Vec<f32>> {
+        let v = read_f32_le(&self.dir.join("decay_mask.bin"))?;
+        if v.len() != self.param_count {
+            bail!("decay_mask.bin has {} f32, expected {}", v.len(), self.param_count);
+        }
+        Ok(v)
+    }
+}
+
+/// Read a little-endian f32 binary file.
+pub fn read_f32_le(path: &Path) -> Result<Vec<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{} length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Discover all variant directories under an artifacts root.
+pub fn discover_variants(root: impl AsRef<Path>) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    let root = root.as_ref();
+    if !root.exists() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(root)? {
+        let p = entry?.path();
+        if p.is_dir() && p.join("meta.json").exists() {
+            out.push(ArtifactMeta::load(&p)?);
+        }
+    }
+    out.sort_by(|a, b| a.dir.cmp(&b.dir));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_variant(dir: &Path, param_count: usize, layers: &str) {
+        fs::create_dir_all(dir).unwrap();
+        let meta = format!(
+            r#"{{"model":"toy","batch":4,"param_count":{param_count},
+                "input_hw":8,"input_channels":3,"num_classes":5,
+                "layers":{layers}}}"#
+        );
+        fs::write(dir.join("meta.json"), meta).unwrap();
+        let mut f = fs::File::create(dir.join("init_params.bin")).unwrap();
+        for i in 0..param_count {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!("dcs3gd_meta_{}", std::process::id()));
+        let dir = tmp.join("toy_b4");
+        write_variant(&dir, 6, r#"[{"name":"a.w","shape":[2,2]},{"name":"a.b","shape":[2]}]"#);
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.param_count, 6);
+        assert_eq!(m.layer_ranges(), vec![(0, 4), (4, 2)]);
+        assert_eq!(m.x_len(), 4 * 8 * 8 * 3);
+        let w = m.load_init_params().unwrap();
+        assert_eq!(w, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let found = discover_variants(&tmp).unwrap();
+        assert_eq!(found.len(), 1);
+        fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn rejects_inconsistent_layers() {
+        let tmp = std::env::temp_dir().join(format!("dcs3gd_meta_bad_{}", std::process::id()));
+        let dir = tmp.join("bad_b4");
+        write_variant(&dir, 7, r#"[{"name":"a.w","shape":[2,2]}]"#); // 4 != 7
+        assert!(ArtifactMeta::load(&dir).is_err());
+        fs::remove_dir_all(&tmp).unwrap();
+    }
+}

@@ -1,0 +1,57 @@
+//! Model-side plumbing: the compute-backend abstraction, artifact
+//! metadata, a pure-rust reference model, and checkpointing.
+//!
+//! The training engines ([`crate::algo`]) are generic over
+//! [`StepBackend`] — "given flat weights and a batch, return loss,
+//! top-1 error and the flat gradient". Two implementations:
+//!
+//! * [`crate::runtime::XlaBackend`] — executes the AOT-compiled L2 HLO
+//!   artifacts via PJRT (the production path);
+//! * [`linear::LinearSoftmax`] — a pure-rust multinomial logistic
+//!   regression, used by `cargo test` (no artifacts required) and as a
+//!   sanity baseline.
+
+pub mod checkpoint;
+pub mod linear;
+pub mod meta;
+
+pub use checkpoint::Checkpoint;
+pub use linear::LinearSoftmax;
+pub use meta::ArtifactMeta;
+
+/// One worker's compute: fused forward+backward and eval-only steps
+/// over flat f32 weights and an NHWC-flat batch.
+pub trait StepBackend: Send {
+    /// Flat parameter count.
+    fn n_params(&self) -> usize;
+
+    /// Expected local batch size (x has `batch·hw·hw·3` elements).
+    fn batch_size(&self) -> usize;
+
+    /// Fused fwd+bwd: returns (loss, top-1 error) and writes the flat
+    /// gradient into `grad_out`.
+    fn train_step(&mut self, w: &[f32], x: &[f32], y: &[i32], grad_out: &mut [f32]) -> (f32, f32);
+
+    /// Forward only: (loss, top-1 error).
+    fn eval_step(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> (f32, f32);
+
+    /// Pure compute time of the last step, if the backend can separate
+    /// it from call overhead (the PJRT backend reports server-measured
+    /// execution time, excluding request queueing). `None` → caller
+    /// falls back to its own wall measurement.
+    fn last_compute_s(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // StepBackend is object-safe (the engines hold Box<dyn StepBackend>).
+    #[test]
+    fn backend_is_object_safe() {
+        fn _takes(_: &mut dyn StepBackend) {}
+        let _f: Option<Box<dyn StepBackend>> = None;
+    }
+}

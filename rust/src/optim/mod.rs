@@ -1,0 +1,342 @@
+//! Local optimizers `U(g, η, μ)` and the paper's update schedules.
+//!
+//! The paper's experiments use momentum SGD (§III-A) with an
+//! iteration-indexed **linear warmup + linear decay** learning-rate
+//! schedule whose warmup is stopped early at a plateau (§IV-A), and a
+//! weight-decay parameter that follows the *same* schedule scaled by a
+//! constant k = 2.3. §V names LARS and Adam as drop-in local optimizers;
+//! both are implemented here and selectable from the config.
+
+mod schedule;
+
+pub use schedule::{LrSchedule, PlateauDetector, ScheduleKind};
+
+use crate::tensor;
+
+/// A local optimizer: consumes a (possibly delay-compensated) gradient
+/// and produces the update Δw added to the weights. Stateful (momentum /
+/// moment buffers live inside).
+pub trait Optimizer: Send {
+    /// Compute `delta_w` from `grad` at weights `w` for iteration `it`.
+    /// `eta`/`wd` are schedule-resolved by the caller.
+    fn step(&mut self, grad: &[f32], w: &[f32], eta: f32, wd: f32, delta_w: &mut [f32]);
+
+    /// Number of parameters this optimizer was sized for.
+    fn n_params(&self) -> usize;
+
+    /// Reset internal state (momentum buffers etc.).
+    fn reset(&mut self);
+
+    /// Access the momentum/velocity buffer if the optimizer has one —
+    /// the fused DC hot path (dc::dc_correct_update) updates it in
+    /// place.
+    fn velocity_mut(&mut self) -> Option<&mut [f32]> {
+        None
+    }
+}
+
+/// Momentum SGD: `v' = μ v + g + wd·mask·w; Δw = −η v'` (paper §III-A).
+pub struct MomentumSgd {
+    mu: f32,
+    v: Vec<f32>,
+    decay_mask: Option<Vec<f32>>,
+}
+
+impl MomentumSgd {
+    pub fn new(n: usize, mu: f32) -> Self {
+        MomentumSgd { mu, v: vec![0.0; n], decay_mask: None }
+    }
+
+    /// Attach a per-element decay mask (1 = decayed, 0 = exempt); the
+    /// paper exempts batch-norm params, our norm-free models exempt
+    /// biases (see python/compile/model.py::decay_mask).
+    pub fn with_decay_mask(mut self, mask: Vec<f32>) -> Self {
+        assert_eq!(mask.len(), self.v.len());
+        self.decay_mask = Some(mask);
+        self
+    }
+
+    pub fn mu(&self) -> f32 {
+        self.mu
+    }
+
+    pub fn decay_mask(&self) -> Option<&[f32]> {
+        self.decay_mask.as_deref()
+    }
+}
+
+impl Optimizer for MomentumSgd {
+    fn step(&mut self, grad: &[f32], w: &[f32], eta: f32, wd: f32, delta_w: &mut [f32]) {
+        let n = self.v.len();
+        assert_eq!(grad.len(), n);
+        assert_eq!(w.len(), n);
+        assert_eq!(delta_w.len(), n);
+        match &self.decay_mask {
+            Some(m) => {
+                for i in 0..n {
+                    let vn = self.mu * self.v[i] + grad[i] + wd * m[i] * w[i];
+                    self.v[i] = vn;
+                    delta_w[i] = -eta * vn;
+                }
+            }
+            None => {
+                for i in 0..n {
+                    let vn = self.mu * self.v[i] + grad[i] + wd * w[i];
+                    self.v[i] = vn;
+                    delta_w[i] = -eta * vn;
+                }
+            }
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        self.v.len()
+    }
+
+    fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn velocity_mut(&mut self) -> Option<&mut [f32]> {
+        Some(&mut self.v)
+    }
+}
+
+/// LARS (You et al., 2017 — paper §V extension): layer-wise trust-ratio
+/// scaling on top of momentum SGD. Requires the layer layout so each
+/// layer's ratio ‖w‖/‖g + wd·w‖ is computed separately.
+pub struct Lars {
+    mu: f32,
+    trust: f32,
+    v: Vec<f32>,
+    /// (offset, len) per layer in the flat vector.
+    layers: Vec<(usize, usize)>,
+}
+
+impl Lars {
+    pub fn new(n: usize, mu: f32, trust: f32, layers: Vec<(usize, usize)>) -> Self {
+        assert_eq!(layers.iter().map(|&(_, l)| l).sum::<usize>(), n, "layers must tile the vector");
+        Lars { mu, trust, v: vec![0.0; n], layers }
+    }
+}
+
+impl Optimizer for Lars {
+    fn step(&mut self, grad: &[f32], w: &[f32], eta: f32, wd: f32, delta_w: &mut [f32]) {
+        let n = self.v.len();
+        assert_eq!(grad.len(), n);
+        for &(off, len) in &self.layers {
+            let (g_l, w_l) = (&grad[off..off + len], &w[off..off + len]);
+            let wn = tensor::norm2(w_l);
+            // ‖g + wd w‖ via expansion to avoid a temp:
+            let gn2 = tensor::dot(g_l, g_l)
+                + 2.0 * wd as f64 * tensor::dot(g_l, w_l)
+                + (wd as f64).powi(2) * wn * wn;
+            let gn = gn2.max(0.0).sqrt();
+            let ratio = if wn > 0.0 && gn > 0.0 {
+                (self.trust as f64 * wn / gn) as f32
+            } else {
+                1.0
+            };
+            let local_eta = eta * ratio;
+            for i in off..off + len {
+                let vn = self.mu * self.v[i] + local_eta * (grad[i] + wd * w[i]);
+                self.v[i] = vn;
+                delta_w[i] = -vn;
+            }
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        self.v.len()
+    }
+
+    fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Adam (Kingma & Ba — paper §V extension).
+pub struct Adam {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32) -> Self {
+        Adam { beta1, beta2, eps, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, grad: &[f32], w: &[f32], eta: f32, wd: f32, delta_w: &mut [f32]) {
+        let n = self.m.len();
+        assert_eq!(grad.len(), n);
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..n {
+            let g = grad[i] + wd * w[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            delta_w[i] = -eta * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn n_params(&self) -> usize {
+        self.m.len()
+    }
+
+    fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+/// Factory used by the config layer.
+pub fn build_optimizer(
+    kind: &str,
+    n: usize,
+    mu: f32,
+    layers: &[(usize, usize)],
+    decay_mask: Option<Vec<f32>>,
+) -> Box<dyn Optimizer> {
+    match kind {
+        "momentum" | "sgd" => {
+            let mut o = MomentumSgd::new(n, mu);
+            if let Some(m) = decay_mask {
+                o = o.with_decay_mask(m);
+            }
+            Box::new(o)
+        }
+        "lars" => Box::new(Lars::new(n, mu, 0.001, layers.to_vec())),
+        "adam" => Box::new(Adam::new(n, 0.9, 0.999, 1e-8)),
+        other => panic!("unknown optimizer kind {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        r.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = MomentumSgd::new(2, 0.5);
+        let w = [0.0, 0.0];
+        let g = [1.0, -2.0];
+        let mut dw = [0.0; 2];
+        opt.step(&g, &w, 0.1, 0.0, &mut dw);
+        assert_eq!(dw, [-0.1, 0.2]); // v = g
+        opt.step(&g, &w, 0.1, 0.0, &mut dw);
+        // v = 0.5*g + g = 1.5g
+        assert!((dw[0] + 0.15).abs() < 1e-7);
+        assert!((dw[1] - 0.3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_matches_dc_fused_path() {
+        // The standalone optimizer and the fused dc path must produce
+        // identical updates when D is absent.
+        let n = 200;
+        let g = randvec(1, n);
+        let w0 = randvec(2, n);
+        let mut opt = MomentumSgd::new(n, 0.9);
+        let mut dw_a = vec![0.0; n];
+        opt.step(&g, &w0, 0.1, 1e-4, &mut dw_a);
+
+        let mut v = vec![0.0; n];
+        let mut w = w0.clone();
+        let mut dw_b = vec![0.0; n];
+        crate::dc::dc_correct_update(
+            &g,
+            None,
+            &mut v,
+            &mut w,
+            None,
+            crate::dc::DcHyper { eta: 0.1, mu: 0.9, lam0: 0.2, wd: 1e-4 },
+            &mut dw_b,
+        );
+        for i in 0..n {
+            assert!((dw_a[i] - dw_b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        // minimize 0.5‖w − t‖²; grad = w − t.
+        let t = [3.0f32, -1.0, 0.5];
+        let mut w = vec![0.0f32; 3];
+        let mut opt = MomentumSgd::new(3, 0.9);
+        let mut dw = vec![0.0; 3];
+        for _ in 0..200 {
+            let g: Vec<f32> = w.iter().zip(&t).map(|(a, b)| a - b).collect();
+            opt.step(&g, &w, 0.05, 0.0, &mut dw);
+            tensor::add_assign(&mut w, &dw);
+        }
+        for i in 0..3 {
+            assert!((w[i] - t[i]).abs() < 1e-3, "w[{i}]={}", w[i]);
+        }
+    }
+
+    #[test]
+    fn lars_converges_on_quadratic() {
+        let t = [2.0f32, -2.0, 1.0, 4.0];
+        let mut w = vec![0.1f32; 4];
+        let mut opt = Lars::new(4, 0.9, 0.01, vec![(0, 2), (2, 2)]);
+        let mut dw = vec![0.0; 4];
+        for _ in 0..3000 {
+            let g: Vec<f32> = w.iter().zip(&t).map(|(a, b)| a - b).collect();
+            opt.step(&g, &w, 1.0, 0.0, &mut dw);
+            tensor::add_assign(&mut w, &dw);
+        }
+        for i in 0..4 {
+            assert!((w[i] - t[i]).abs() < 0.05, "w[{i}]={}", w[i]);
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let t = [1.0f32, -3.0];
+        let mut w = vec![0.0f32; 2];
+        let mut opt = Adam::new(2, 0.9, 0.999, 1e-8);
+        let mut dw = vec![0.0; 2];
+        for _ in 0..2000 {
+            let g: Vec<f32> = w.iter().zip(&t).map(|(a, b)| a - b).collect();
+            opt.step(&g, &w, 0.05, 0.0, &mut dw);
+            tensor::add_assign(&mut w, &dw);
+        }
+        for i in 0..2 {
+            assert!((w[i] - t[i]).abs() < 0.01, "w[{i}]={}", w[i]);
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut opt = MomentumSgd::new(2, 0.9);
+        let mut dw = [0.0; 2];
+        opt.step(&[1.0, 1.0], &[0.0, 0.0], 0.1, 0.0, &mut dw);
+        opt.reset();
+        opt.step(&[1.0, 1.0], &[0.0, 0.0], 0.1, 0.0, &mut dw);
+        assert_eq!(dw, [-0.1, -0.1]); // no momentum carried over
+    }
+
+    #[test]
+    #[should_panic]
+    fn lars_rejects_bad_layout() {
+        Lars::new(10, 0.9, 0.01, vec![(0, 4)]); // doesn't tile 10
+    }
+}

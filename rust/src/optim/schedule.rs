@@ -1,0 +1,228 @@
+//! Iteration-indexed hyper-parameter schedules (paper §IV-A).
+//!
+//! The paper defines η_theo = N·η_sn (linear scaling, Eq. 16), an
+//! **iteration-dependent** linear warmup toward η_theo that is *stopped
+//! early* when the training-error plateau is reached (15 epochs for
+//! batches ≤ 64k, 20 for 128k), followed by a linear decrease to zero at
+//! max_iterations. Weight decay follows the same shape, scaled by the
+//! constant factor k = 2.3 applied to the literature base value.
+
+/// Shape of the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Constant at the peak value.
+    Constant,
+    /// Paper schedule: linear warmup for `warmup_iters` (toward the
+    /// *theoretical* peak, possibly truncated early), then linear decay
+    /// to zero at `total_iters`.
+    LinearWarmupLinearDecay,
+}
+
+/// An iteration-indexed schedule producing η (or wd) for each step.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    kind: ScheduleKind,
+    /// η_theo = N · η_sn (Eq. 16): the value warmup aims at.
+    peak: f32,
+    /// Iterations of warmup *as originally planned* (used for the slope;
+    /// the paper plans half the total run).
+    planned_warmup: u64,
+    /// Iteration at which warmup actually stops (plateau detection,
+    /// §IV-A: "we stopped the warm-up phase at the reached learning
+    /// rate"). `<= planned_warmup`.
+    warmup_stop: u64,
+    total: u64,
+}
+
+impl LrSchedule {
+    /// Paper schedule. `planned_warmup` defines the warmup slope
+    /// (peak / planned_warmup per iteration); `warmup_stop` truncates it.
+    pub fn paper(peak: f32, planned_warmup: u64, warmup_stop: u64, total: u64) -> Self {
+        assert!(warmup_stop <= planned_warmup, "stop must not exceed plan");
+        assert!(warmup_stop < total);
+        LrSchedule {
+            kind: ScheduleKind::LinearWarmupLinearDecay,
+            peak,
+            planned_warmup: planned_warmup.max(1),
+            warmup_stop,
+            total,
+        }
+    }
+
+    pub fn constant(v: f32) -> Self {
+        LrSchedule {
+            kind: ScheduleKind::Constant,
+            peak: v,
+            planned_warmup: 1,
+            warmup_stop: 0,
+            total: u64::MAX,
+        }
+    }
+
+    /// Linear-scaling rule, Eq. 16: η_theo = N·η_sn (with the reference
+    /// base batch): peak = η_sn · (global_batch / base_batch).
+    pub fn scaled_peak(eta_single: f32, global_batch: usize, base_batch: usize) -> f32 {
+        eta_single * global_batch as f32 / base_batch as f32
+    }
+
+    /// The value reached when warmup stopped (the plateau LR the decay
+    /// phase starts from).
+    pub fn reached_peak(&self) -> f32 {
+        match self.kind {
+            ScheduleKind::Constant => self.peak,
+            ScheduleKind::LinearWarmupLinearDecay => {
+                self.peak * self.warmup_stop as f32 / self.planned_warmup as f32
+            }
+        }
+    }
+
+    /// η at iteration `it` (0-based).
+    pub fn at(&self, it: u64) -> f32 {
+        match self.kind {
+            ScheduleKind::Constant => self.peak,
+            ScheduleKind::LinearWarmupLinearDecay => {
+                if it < self.warmup_stop {
+                    // climb toward the theoretical peak with the planned slope
+                    self.peak * (it + 1) as f32 / self.planned_warmup as f32
+                } else if it >= self.total {
+                    0.0
+                } else {
+                    // linear decrease from the *reached* value to 0 at total
+                    let reached = self.reached_peak();
+                    let frac = (self.total - it) as f32
+                        / (self.total - self.warmup_stop) as f32;
+                    reached * frac
+                }
+            }
+        }
+    }
+
+    pub fn total_iters(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Plateau detector automating §IV-A's "identification of the plateau
+/// was done by direct observation ... could easily be automated, by e.g.
+/// checking for training error reduction every five epochs during the
+/// warm-up phase".
+#[derive(Debug, Clone)]
+pub struct PlateauDetector {
+    /// Check interval in iterations (the paper suggests five epochs).
+    interval: u64,
+    /// Minimum relative improvement of train error to count as progress.
+    min_rel_improvement: f64,
+    last_check_it: u64,
+    last_err: f64,
+    triggered: bool,
+}
+
+impl PlateauDetector {
+    pub fn new(interval: u64, min_rel_improvement: f64) -> Self {
+        PlateauDetector {
+            interval,
+            min_rel_improvement,
+            last_check_it: 0,
+            last_err: f64::INFINITY,
+            triggered: false,
+        }
+    }
+
+    /// Feed the running train error; returns true the first time a
+    /// plateau is detected.
+    pub fn observe(&mut self, it: u64, train_err: f64) -> bool {
+        if self.triggered || it < self.last_check_it + self.interval {
+            return false;
+        }
+        let improved = train_err < self.last_err * (1.0 - self.min_rel_improvement);
+        self.last_check_it = it;
+        if self.last_err.is_finite() && !improved {
+            self.triggered = true;
+            return true;
+        }
+        self.last_err = train_err;
+        false
+    }
+
+    pub fn triggered(&self) -> bool {
+        self.triggered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq16_linear_scaling() {
+        // ResNet reference: η_sn = 0.1 at batch 256 ⇒ 32k batch → 12.8.
+        let peak = LrSchedule::scaled_peak(0.1, 32_768, 256);
+        assert!((peak - 12.8).abs() < 1e-5);
+    }
+
+    #[test]
+    fn warmup_is_linear_with_planned_slope() {
+        // plan 100 warmup iters to peak 1.0, stop at 50 → slope 0.01/iter.
+        let s = LrSchedule::paper(1.0, 100, 50, 200);
+        assert!((s.at(0) - 0.01).abs() < 1e-6);
+        assert!((s.at(49) - 0.50).abs() < 1e-6);
+        // the reached value is peak/2 — "one third for a 15-epoch warmup"
+        // in the paper's 45-epoch plan; here one half.
+        assert!((s.reached_peak() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decay_reaches_zero_at_total() {
+        let s = LrSchedule::paper(1.0, 100, 50, 200);
+        assert!(s.at(50) <= 0.5 + 1e-6);
+        assert!(s.at(199) > 0.0);
+        assert_eq!(s.at(200), 0.0);
+        assert_eq!(s.at(1000), 0.0);
+        // monotone decreasing after the stop
+        let mut prev = s.at(50);
+        for it in 51..200 {
+            let v = s.at(it);
+            assert!(v <= prev + 1e-7);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn early_stop_reduces_reached_peak() {
+        let full = LrSchedule::paper(1.0, 100, 100, 300);
+        let early = LrSchedule::paper(1.0, 100, 33, 300);
+        assert!((full.reached_peak() - 1.0).abs() < 1e-6);
+        // "we reach only a small fraction of the maximum step length
+        // (e.g. one third for a 15-epoch warm-up)"
+        assert!((early.reached_peak() - 0.33).abs() < 1e-2);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.25);
+        assert_eq!(s.at(0), 0.25);
+        assert_eq!(s.at(10_000_000), 0.25);
+    }
+
+    #[test]
+    fn plateau_detector_fires_on_stall() {
+        let mut d = PlateauDetector::new(10, 0.01);
+        // improving: never fires
+        assert!(!d.observe(10, 0.9));
+        assert!(!d.observe(20, 0.8));
+        assert!(!d.observe(30, 0.7));
+        // stall: fires once
+        assert!(d.observe(40, 0.7));
+        assert!(d.triggered());
+        assert!(!d.observe(50, 0.1)); // latched
+    }
+
+    #[test]
+    fn plateau_detector_respects_interval() {
+        let mut d = PlateauDetector::new(100, 0.01);
+        assert!(!d.observe(10, 0.5));
+        assert!(!d.observe(99, 0.5)); // within interval: ignored
+        assert!(!d.observe(100, 0.4)); // improving
+        assert!(d.observe(200, 0.4)); // stalled
+    }
+}

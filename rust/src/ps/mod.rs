@@ -1,0 +1,293 @@
+//! Parameter-server substrate — the *centralized* baselines.
+//!
+//! The paper's §II-A baselines, built so the decentralized claim can be
+//! tested rather than assumed:
+//!
+//! * **ASGD** — workers push raw gradients; the PS applies
+//!   `w ← w − η·U(g)` and returns the fresh weights.
+//! * **DC-ASGD** (Zheng et al.) — the PS additionally keeps a backup
+//!   `w_bak(i)` of the weights it last sent to worker `i` and corrects
+//!   each incoming gradient with
+//!   `g̃ = g + λ g ⊙ g ⊙ (w_ps − w_bak(i))` before applying it.
+//!
+//! The PS is an actor on its own thread; workers talk to it over
+//! channels. Timing follows Eq. 15: each request costs the worker
+//! `t_W2PS = 2·ptp(n)` of network time plus queueing at the server
+//! (service time `serve_s` per request, requests serialized) — the
+//! many-to-few bottleneck the paper attributes to centralized schemes.
+
+pub mod sharded;
+pub use sharded::ShardedPs;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::comm::NetModel;
+use crate::dc;
+use crate::optim::Optimizer;
+
+/// Mode of the server's update rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PsMode {
+    /// Plain asynchronous SGD (stale, uncompensated).
+    Asgd,
+    /// Delay-compensated ASGD with dynamic λ (Eq. 17 applied to
+    /// `D = w_ps − w_bak(i)`).
+    DcAsgd { lam0: f32 },
+}
+
+/// A gradient push from a worker.
+struct PushMsg {
+    worker: usize,
+    grad: Vec<f32>,
+    /// Worker's virtual send time.
+    sent_at: f64,
+    /// LR for this update (schedule-resolved by the worker).
+    eta: f32,
+    wd: f32,
+    reply: Sender<PullReply>,
+}
+
+/// The server's reply: fresh weights + the virtual time the exchange
+/// completed from the worker's perspective.
+pub struct PullReply {
+    pub weights: Vec<f32>,
+    pub done_at: f64,
+    /// ‖w_ps − w_bak(worker)‖ *before* this update was applied — the
+    /// distance series of experiment E4 (DESIGN.md §5).
+    pub staleness_dist: f64,
+}
+
+enum Msg {
+    Push(PushMsg),
+    Stop,
+}
+
+/// Handle each worker uses to talk to the PS.
+#[derive(Clone)]
+pub struct PsClient {
+    tx: Sender<Msg>,
+    net: NetModel,
+    n_params: usize,
+}
+
+impl PsClient {
+    /// Push a gradient and (blocking) pull fresh weights — the ASGD
+    /// round-trip. `now` is the worker's virtual time.
+    pub fn push_pull(&self, worker: usize, grad: Vec<f32>, now: f64, eta: f32, wd: f32) -> PullReply {
+        assert_eq!(grad.len(), self.n_params);
+        let (reply_tx, reply_rx) = channel();
+        // Worker→PS transfer time happens before the server sees it.
+        let arrive = now + self.net.ptp_time(self.n_params);
+        self.tx
+            .send(Msg::Push(PushMsg { worker, grad, sent_at: arrive, eta, wd, reply: reply_tx }))
+            .expect("ps alive");
+        let mut reply = reply_rx.recv().expect("ps alive");
+        // PS→worker transfer for the fresh weights.
+        reply.done_at += self.net.ptp_time(self.n_params);
+        reply
+    }
+}
+
+/// The running server; join to collect final weights.
+pub struct ParameterServer {
+    tx: Sender<Msg>,
+    handle: JoinHandle<(Vec<f32>, u64)>,
+    net: NetModel,
+    n_params: usize,
+}
+
+impl ParameterServer {
+    /// Spawn the PS actor with initial weights, an optimizer for the
+    /// update rule `U`, the number of workers, and a per-request service
+    /// time (models the PS's CPU/NIC; Eq. 15's "time spent ... waiting
+    /// for the PS").
+    pub fn spawn(
+        init_w: Vec<f32>,
+        mut opt: Box<dyn Optimizer>,
+        n_workers: usize,
+        mode: PsMode,
+        net: NetModel,
+        serve_s: f64,
+    ) -> Self {
+        let n_params = init_w.len();
+        assert_eq!(opt.n_params(), n_params);
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let handle = std::thread::spawn(move || {
+            let mut w = init_w;
+            // w_bak(i): weights last sent to worker i (DC-ASGD state).
+            let mut bak: Vec<Vec<f32>> = (0..n_workers).map(|_| w.clone()).collect();
+            let mut delta = vec![0.0f32; n_params];
+            let mut gtilde = vec![0.0f32; n_params];
+            // Server busy-until time (requests serialized — the
+            // many-to-few bottleneck).
+            let mut busy_until = 0.0f64;
+            let mut updates = 0u64;
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Stop => break,
+                    Msg::Push(p) => {
+                        let start = busy_until.max(p.sent_at);
+                        let done = start + serve_s;
+                        busy_until = done;
+                        let staleness_dist = crate::tensor::dist2(&w, &bak[p.worker]);
+                        let g = match mode {
+                            PsMode::Asgd => &p.grad,
+                            PsMode::DcAsgd { lam0 } => {
+                                // D = w_ps − w_bak(i)  (Eq. 5/6 with the
+                                // PS's and worker's weight copies)
+                                let d: Vec<f32> = w
+                                    .iter()
+                                    .zip(&bak[p.worker])
+                                    .map(|(a, b)| a - b)
+                                    .collect();
+                                let lam = dc::dynamic_lambda(&p.grad, &d, lam0);
+                                dc::dc_correct(&p.grad, &d, lam, &mut gtilde);
+                                &gtilde
+                            }
+                        };
+                        opt.step(g, &w, p.eta, p.wd, &mut delta);
+                        crate::tensor::add_assign(&mut w, &delta);
+                        updates += 1;
+                        bak[p.worker].copy_from_slice(&w);
+                        let _ = p.reply.send(PullReply {
+                            weights: w.clone(),
+                            done_at: done,
+                            staleness_dist,
+                        });
+                    }
+                }
+            }
+            (w, updates)
+        });
+        ParameterServer { tx, handle, net, n_params }
+    }
+
+    pub fn client(&self) -> PsClient {
+        PsClient { tx: self.tx.clone(), net: self.net, n_params: self.n_params }
+    }
+
+    /// Stop the server and return (final weights, update count).
+    pub fn shutdown(self) -> (Vec<f32>, u64) {
+        let _ = self.tx.send(Msg::Stop);
+        self.handle.join().expect("ps thread")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::optim::MomentumSgd;
+
+    fn plain_sgd(n: usize) -> Box<dyn Optimizer> {
+        Box::new(MomentumSgd::new(n, 0.0))
+    }
+
+    #[test]
+    fn asgd_applies_updates_in_arrival_order() {
+        let ps = ParameterServer::spawn(
+            vec![0.0; 2],
+            plain_sgd(2),
+            2,
+            PsMode::Asgd,
+            NetModel::instant(),
+            0.0,
+        );
+        let c = ps.client();
+        let r1 = c.push_pull(0, vec![1.0, 0.0], 0.0, 1.0, 0.0);
+        assert_eq!(r1.weights, vec![-1.0, 0.0]);
+        let r2 = c.push_pull(1, vec![0.0, 2.0], 0.0, 1.0, 0.0);
+        assert_eq!(r2.weights, vec![-1.0, -2.0]);
+        let (w, n) = ps.shutdown();
+        assert_eq!(w, vec![-1.0, -2.0]);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn service_time_serializes_requests() {
+        // Two pushes at t=0 with serve_s = 1: the second completes at 2.
+        let ps = ParameterServer::spawn(
+            vec![0.0; 1],
+            plain_sgd(1),
+            2,
+            PsMode::Asgd,
+            NetModel::instant(),
+            1.0,
+        );
+        let c = ps.client();
+        let r1 = c.push_pull(0, vec![0.1], 0.0, 1.0, 0.0);
+        let r2 = c.push_pull(1, vec![0.1], 0.0, 1.0, 0.0);
+        assert!((r1.done_at - 1.0).abs() < 1e-12);
+        assert!((r2.done_at - 2.0).abs() < 1e-12);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn network_time_added_both_ways() {
+        let net = NetModel { alpha_s: 0.5, beta_bytes_per_s: f64::INFINITY, algo: crate::comm::AllReduceAlgo::Ring };
+        let ps = ParameterServer::spawn(
+            vec![0.0; 1],
+            plain_sgd(1),
+            1,
+            PsMode::Asgd,
+            net,
+            0.0,
+        );
+        let c = ps.client();
+        let r = c.push_pull(0, vec![0.1], 10.0, 1.0, 0.0);
+        // 10 + α (push) + 0 (serve) + α (pull) = 11
+        assert!((r.done_at - 11.0).abs() < 1e-12, "{}", r.done_at);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn dcasgd_tracks_backup_distance() {
+        let ps = ParameterServer::spawn(
+            vec![0.0; 2],
+            plain_sgd(2),
+            2,
+            PsMode::DcAsgd { lam0: 0.2 },
+            NetModel::instant(),
+            0.0,
+        );
+        let c = ps.client();
+        // worker 0 updates once: its backup is now fresh.
+        let r0 = c.push_pull(0, vec![1.0, 1.0], 0.0, 0.5, 0.0);
+        assert_eq!(r0.staleness_dist, 0.0); // first push: bak == w
+        // worker 1 still has the t=0 backup: distance > 0.
+        let r1 = c.push_pull(1, vec![1.0, 1.0], 0.0, 0.5, 0.0);
+        assert!(r1.staleness_dist > 0.0);
+        // worker 0 pushes again immediately: bak is current ⇒ dist 0 ...
+        // but worker 1's update happened in between, so dist > 0 again.
+        let r0b = c.push_pull(0, vec![1.0, 1.0], 0.0, 0.5, 0.0);
+        assert!(r0b.staleness_dist > 0.0);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn dcasgd_correction_changes_update() {
+        // Same gradient stream, with and without compensation, must give
+        // different weights once staleness exists.
+        let run = |mode| {
+            let ps = ParameterServer::spawn(
+                vec![0.5; 4],
+                plain_sgd(4),
+                2,
+                mode,
+                NetModel::instant(),
+                0.0,
+            );
+            let c = ps.client();
+            for it in 0..5 {
+                let g = vec![0.1 * (it + 1) as f32; 4];
+                c.push_pull(0, g.clone(), it as f64, 0.3, 0.0);
+                c.push_pull(1, g, it as f64, 0.3, 0.0);
+            }
+            ps.shutdown().0
+        };
+        let plain = run(PsMode::Asgd);
+        let comp = run(PsMode::DcAsgd { lam0: 0.2 });
+        assert_ne!(plain, comp);
+    }
+}

@@ -1,0 +1,176 @@
+//! Sharded parameter server: the paper speaks of "Parameter Servers"
+//! plural — production PS deployments shard the weight vector across S
+//! server processes so bandwidth and update cost parallelize. This
+//! models that: S independent shard actors, each owning a contiguous
+//! slice; a push/pull fans out to all shards and completes when the
+//! slowest shard replies (so the many-to-few bottleneck shrinks ∝ 1/S,
+//! until latency α dominates — the ablation in `benches/allreduce.rs`'s
+//! companion analysis and the §II-A scaling discussion).
+
+use std::sync::mpsc::channel;
+
+use crate::comm::NetModel;
+use crate::optim::MomentumSgd;
+use crate::ps::{ParameterServer, PsMode, PullReply};
+
+/// S independent single-shard servers.
+pub struct ShardedPs {
+    shards: Vec<ParameterServer>,
+    bounds: Vec<(usize, usize)>,
+    net: NetModel,
+}
+
+impl ShardedPs {
+    /// Split `init_w` into `n_shards` near-equal slices, one PS each.
+    /// Each shard runs the same update mode with its own momentum state.
+    pub fn spawn(
+        init_w: &[f32],
+        mu: f32,
+        n_workers: usize,
+        n_shards: usize,
+        mode: PsMode,
+        net: NetModel,
+        serve_s_per_elem: f64,
+    ) -> Self {
+        assert!(n_shards >= 1);
+        let n = init_w.len();
+        let per = n.div_ceil(n_shards);
+        let mut shards = Vec::new();
+        let mut bounds = Vec::new();
+        for s in 0..n_shards {
+            let lo = (s * per).min(n);
+            let hi = ((s + 1) * per).min(n);
+            if lo == hi {
+                break;
+            }
+            bounds.push((lo, hi));
+            shards.push(ParameterServer::spawn(
+                init_w[lo..hi].to_vec(),
+                Box::new(MomentumSgd::new(hi - lo, mu)),
+                n_workers,
+                mode,
+                net,
+                serve_s_per_elem * (hi - lo) as f64,
+            ));
+        }
+        ShardedPs { shards, bounds, net }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Push a full gradient; returns assembled fresh weights and the
+    /// completion time = max over shards (shards are contacted in
+    /// parallel, each paying its own transfer + queue).
+    pub fn push_pull(&self, worker: usize, grad: &[f32], now: f64, eta: f32, wd: f32) -> PullReply {
+        let mut parts: Vec<(usize, PullReply)> = Vec::with_capacity(self.shards.len());
+        // Scatter concurrently: each shard client blocks on its own
+        // reply, so issue from scoped threads.
+        std::thread::scope(|scope| {
+            let (tx, rx) = channel();
+            for (i, (shard, &(lo, hi))) in self.shards.iter().zip(&self.bounds).enumerate() {
+                let client = shard.client();
+                let g = grad[lo..hi].to_vec();
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let r = client.push_pull(worker, g, now, eta, wd);
+                    let _ = tx.send((i, r));
+                });
+            }
+            drop(tx);
+            while let Ok(p) = rx.recv() {
+                parts.push(p);
+            }
+        });
+        parts.sort_by_key(|(i, _)| *i);
+        let mut weights = vec![0.0f32; grad.len()];
+        let mut done_at = now;
+        let mut staleness = 0.0f64;
+        for ((_, r), &(lo, hi)) in parts.iter().zip(&self.bounds) {
+            weights[lo..hi].copy_from_slice(&r.weights);
+            done_at = done_at.max(r.done_at);
+            staleness += r.staleness_dist * r.staleness_dist;
+        }
+        PullReply { weights, done_at, staleness_dist: staleness.sqrt() }
+    }
+
+    /// Predicted round-trip under the α-β model for a payload of `n`
+    /// elements split over the shards (no queueing).
+    pub fn ideal_round_trip(&self, n: usize) -> f64 {
+        let per = n.div_ceil(self.shards.len().max(1));
+        2.0 * self.net.ptp_time(per)
+    }
+
+    pub fn shutdown(self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for (shard, &(lo, hi)) in self.shards.into_iter().zip(&self.bounds) {
+            let (w, _) = shard.shutdown();
+            assert_eq!(w.len(), hi - lo);
+            out.extend_from_slice(&w);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+
+    #[test]
+    fn sharded_matches_single_ps_update() {
+        // With 1 worker (no interleaving) sharded and single PS must
+        // produce identical weights.
+        let init = vec![0.5f32; 10];
+        let grad = vec![0.1f32; 10];
+
+        let single = ParameterServer::spawn(
+            init.clone(),
+            Box::new(MomentumSgd::new(10, 0.9)),
+            1,
+            PsMode::Asgd,
+            NetModel::instant(),
+            0.0,
+        );
+        let r_single = single.client().push_pull(0, grad.clone(), 0.0, 0.5, 0.0);
+        let w_single = r_single.weights;
+        single.shutdown();
+
+        let sharded = ShardedPs::spawn(&init, 0.9, 1, 3, PsMode::Asgd, NetModel::instant(), 0.0);
+        assert_eq!(sharded.n_shards(), 3);
+        let r_sharded = sharded.push_pull(0, &grad, 0.0, 0.5, 0.0);
+        assert_eq!(w_single, r_sharded.weights);
+        sharded.shutdown();
+    }
+
+    #[test]
+    fn more_shards_cut_service_time() {
+        // serve time ∝ shard size; the max-over-shards round trip must
+        // shrink as shards increase.
+        let init = vec![0.0f32; 9000];
+        let grad = vec![0.1f32; 9000];
+        let t_for = |s: usize| {
+            let ps = ShardedPs::spawn(&init, 0.0, 1, s, PsMode::Asgd, NetModel::instant(), 1e-6);
+            let r = ps.push_pull(0, &grad, 0.0, 0.1, 0.0);
+            ps.shutdown();
+            r.done_at
+        };
+        let t1 = t_for(1);
+        let t3 = t_for(3);
+        let t9 = t_for(9);
+        assert!(t3 < t1, "{t3} !< {t1}");
+        assert!(t9 < t3, "{t9} !< {t3}");
+        assert!((t1 / t9 - 9.0).abs() < 1.0, "expected ≈9× cut, got {}", t1 / t9);
+    }
+
+    #[test]
+    fn shard_reassembly_covers_whole_vector() {
+        let init: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let ps = ShardedPs::spawn(&init, 0.0, 1, 4, PsMode::Asgd, NetModel::instant(), 0.0);
+        // zero gradient: weights must round-trip unchanged
+        let r = ps.push_pull(0, &vec![0.0; 13], 0.0, 1.0, 0.0);
+        assert_eq!(r.weights, init);
+        assert_eq!(ps.shutdown(), init);
+    }
+}

@@ -1,0 +1,173 @@
+//! Virtual-time engine: per-worker clocks and the compute-cost model.
+//!
+//! The paper's timing claims (Eqs. 13–15) are statements about how
+//! t_C(B) (per-batch compute) and t_AR(g, N) (collective time) compose.
+//! Running 32–128 physical nodes is out of scope here (DESIGN.md §3),
+//! so every worker carries a **virtual clock**: compute advances it by
+//! t_C from [`ComputeModel`] (either modelled, or measured wall time of
+//! the real PJRT execution), and collectives advance it per
+//! [`crate::comm::NetModel`]. The resulting per-iteration times
+//! reproduce the paper's composition exactly and are what the
+//! throughput columns of Table I report (img/s = global batch / mean
+//! iteration time).
+
+use crate::util::Rng;
+
+/// Per-batch compute-time model t_C(B) with optional heterogeneity.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Seconds per sample on a nominal worker (calibrate with
+    /// [`ComputeModel::calibrated`] from a measured step, or set
+    /// directly for what-if studies).
+    pub sec_per_sample: f64,
+    /// Fixed per-batch overhead (kernel launch, data movement).
+    pub overhead_s: f64,
+    /// Multiplicative log-normal-ish jitter fraction (0 = deterministic):
+    /// each batch takes `t * (1 + jitter * |normal|)`.
+    pub jitter_frac: f64,
+    /// Per-rank slowdown factors (straggler injection): rank i runs
+    /// `straggler_factor[i]×` slower. Empty = homogeneous.
+    pub straggler_factor: Vec<f64>,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        // ~ResNet-50-on-Skylake-node ballpark from Table I: 2078 img/s
+        // over 32 nodes ⇒ ~65 img/s/node ⇒ ~15 ms/sample.
+        ComputeModel {
+            sec_per_sample: 15e-3,
+            overhead_s: 1e-3,
+            jitter_frac: 0.0,
+            straggler_factor: Vec::new(),
+        }
+    }
+}
+
+impl ComputeModel {
+    /// Deterministic model with the given per-sample time.
+    pub fn uniform(sec_per_sample: f64) -> Self {
+        ComputeModel { sec_per_sample, overhead_s: 0.0, jitter_frac: 0.0, straggler_factor: Vec::new() }
+    }
+
+    /// Calibrate from a measured (batch, seconds) pair — used when the
+    /// real PJRT step time should drive the simulated cluster.
+    pub fn calibrated(batch: usize, measured_s: f64) -> Self {
+        ComputeModel {
+            sec_per_sample: measured_s / batch as f64,
+            overhead_s: 0.0,
+            jitter_frac: 0.0,
+            straggler_factor: Vec::new(),
+        }
+    }
+
+    /// Mark `rank` as a straggler running `factor`× slower (paper §II-A:
+    /// "all workers have to wait for the slowest one").
+    pub fn with_straggler(mut self, rank: usize, factor: f64, n_ranks: usize) -> Self {
+        if self.straggler_factor.len() < n_ranks {
+            self.straggler_factor.resize(n_ranks, 1.0);
+        }
+        self.straggler_factor[rank] = factor;
+        self
+    }
+
+    pub fn with_jitter(mut self, frac: f64) -> Self {
+        self.jitter_frac = frac;
+        self
+    }
+
+    /// Sample t_C(B) for `rank` processing `batch` samples.
+    pub fn batch_time(&self, rank: usize, batch: usize, rng: &mut Rng) -> f64 {
+        let mut t = self.overhead_s + self.sec_per_sample * batch as f64;
+        if let Some(&f) = self.straggler_factor.get(rank) {
+            t *= f;
+        }
+        if self.jitter_frac > 0.0 {
+            t *= 1.0 + self.jitter_frac * rng.normal().abs() as f64;
+        }
+        t
+    }
+}
+
+/// A worker's virtual clock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by a duration (compute, local work).
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative duration {dt}");
+        self.now += dt;
+    }
+
+    /// Jump to an absolute time (collective completion); never moves
+    /// backward.
+    pub fn advance_to(&mut self, t: f64) {
+        self.now = self.now.max(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = SimClock::new();
+        c.advance(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.advance_to(1.0); // earlier completion: no-op
+        assert_eq!(c.now(), 1.5);
+        c.advance_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn batch_time_linear_in_batch() {
+        let m = ComputeModel::uniform(1e-3);
+        let mut rng = Rng::new(0);
+        assert!((m.batch_time(0, 100, &mut rng) - 0.1).abs() < 1e-12);
+        assert!((m.batch_time(0, 200, &mut rng) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_slows_one_rank() {
+        let m = ComputeModel::uniform(1e-3).with_straggler(2, 3.0, 4);
+        let mut rng = Rng::new(0);
+        let t_fast = m.batch_time(0, 100, &mut rng);
+        let t_slow = m.batch_time(2, 100, &mut rng);
+        assert!((t_slow / t_fast - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_adds_spread_but_never_speeds_up() {
+        let m = ComputeModel::uniform(1e-3).with_jitter(0.2);
+        let mut rng = Rng::new(7);
+        let base = 0.1;
+        let mut any_above = false;
+        for _ in 0..100 {
+            let t = m.batch_time(0, 100, &mut rng);
+            assert!(t >= base - 1e-12);
+            if t > base * 1.01 {
+                any_above = true;
+            }
+        }
+        assert!(any_above);
+    }
+
+    #[test]
+    fn calibration_roundtrip() {
+        let m = ComputeModel::calibrated(32, 0.48);
+        let mut rng = Rng::new(0);
+        assert!((m.batch_time(0, 32, &mut rng) - 0.48).abs() < 1e-12);
+    }
+}

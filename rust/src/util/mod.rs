@@ -1,0 +1,13 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build environment is offline (no crates.io beyond the `xla`
+//! closure), so the RNG, JSON codec and statistics helpers that would
+//! normally come from `rand` / `serde_json` / `criterion` are
+//! implemented here, with their own tests.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,168 @@
+//! Paper-shape convergence tests on the pure-rust backend: the
+//! qualitative claims of §III-D / §IV that the benches quantify.
+//!
+//! These use the linear model (fast, deterministic) with enough steps
+//! that the ordering DC-S3GD ≈ SSGD ≥ S3GD(λ=0) is stable.
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::comm::NetModel;
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
+
+fn cfg(algo: Algo, nodes: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(format!("conv_{}_{nodes}", algo.name()).leak())
+        .algo(algo)
+        .nodes(nodes)
+        .local_batch(16)
+        .steps(150)
+        .eta_single(0.04)
+        .base_batch(16)
+        .momentum(0.9)
+        .seed(seed)
+        .data(2048, 512, 0.5)
+        .compute(ComputeModel::uniform(1e-4))
+        .net(NetModel::default())
+        .build()
+}
+
+#[test]
+fn dcs3gd_close_to_ssgd_final_loss() {
+    // The paper's headline: stale-synchronous + compensation reaches
+    // SSGD-level quality. Tolerance: within 15% relative train loss.
+    let ssgd = run_experiment(&cfg(Algo::Ssgd, 4, 0)).unwrap();
+    let dc = run_experiment(&cfg(Algo::DcS3gd, 4, 0)).unwrap();
+    assert!(
+        dc.final_train_loss <= ssgd.final_train_loss * 1.15,
+        "dcs3gd {} vs ssgd {}",
+        dc.final_train_loss,
+        ssgd.final_train_loss
+    );
+    assert!(dc.final_val_err <= ssgd.final_val_err + 0.05);
+}
+
+#[test]
+fn dcs3gd_is_faster_than_ssgd_when_comm_matters() {
+    // With a slow network, overlap must beat blocking: Eq. 14 < Eq. 13.
+    let slow_net = NetModel { alpha_s: 1e-5, beta_bytes_per_s: 5e7, ..NetModel::default() };
+    let mut c_ssgd = cfg(Algo::Ssgd, 4, 0);
+    c_ssgd.net = slow_net;
+    c_ssgd.steps = 50;
+    let mut c_dc = cfg(Algo::DcS3gd, 4, 0);
+    c_dc.net = slow_net;
+    c_dc.steps = 50;
+    let ssgd = run_experiment(&c_ssgd).unwrap();
+    let dc = run_experiment(&c_dc).unwrap();
+    assert!(
+        dc.mean_iter_time < ssgd.mean_iter_time,
+        "overlap not faster: dcs3gd {} vs ssgd {}",
+        dc.mean_iter_time,
+        ssgd.mean_iter_time
+    );
+    assert!(dc.sim_throughput > ssgd.sim_throughput);
+}
+
+#[test]
+fn compensation_distance_stays_bounded_as_n_grows() {
+    // §III-D.2: DC-S3GD's correction distance ‖D_i‖ grows slowly with N
+    // (distance to the *average*), while DC-ASGD's PS-to-worker distance
+    // grows ~linearly. Check the ratio between N=2 and N=8 for both.
+    let d2 = run_experiment(&cfg(Algo::DcS3gd, 2, 0)).unwrap().mean_dist_to_avg;
+    let d8 = run_experiment(&cfg(Algo::DcS3gd, 8, 0)).unwrap().mean_dist_to_avg;
+    let a2 = run_experiment(&cfg(Algo::DcAsgd, 2, 0)).unwrap().mean_dist_to_avg;
+    let a8 = run_experiment(&cfg(Algo::DcAsgd, 8, 0)).unwrap().mean_dist_to_avg;
+    assert!(d2 > 0.0 && a2 > 0.0, "distances must be observed");
+    let dc_growth = d8 / d2;
+    let ps_growth = a8 / a2;
+    assert!(
+        dc_growth < ps_growth,
+        "DC-S3GD distance growth {dc_growth:.2}× should undercut DC-ASGD {ps_growth:.2}×"
+    );
+}
+
+/// Mean per-iteration train-loss trajectory (averaged over workers).
+fn loss_trajectory(report: &dcs3gd::algo::RunReport) -> Vec<f64> {
+    let steps = report.recorder.steps();
+    let iters = steps.iter().map(|s| s.iteration).max().unwrap() + 1;
+    let mut acc = vec![(0f64, 0usize); iters as usize];
+    for s in &steps {
+        let e = &mut acc[s.iteration as usize];
+        e.0 += s.loss as f64;
+        e.1 += 1;
+    }
+    acc.into_iter().map(|(s, n)| s / n as f64).collect()
+}
+
+#[test]
+fn trajectories_stay_close_to_ssgd_reference() {
+    // The compensation's purpose (§III-B): make stale updates
+    // approximate what synchronous training would have done. Assert the
+    // DC-S3GD loss trajectory tracks SSGD closely (mean absolute gap a
+    // small fraction of the loss range), across seeds — on a convex
+    // model the three schemes converge to the same optimum, so this
+    // mid-training tracking is the meaningful fidelity metric.
+    for seed in 0..3 {
+        let mut c_ref = cfg(Algo::Ssgd, 8, seed);
+        c_ref.eta_single = 0.08;
+        let mut c_dc = cfg(Algo::DcS3gd, 8, seed);
+        c_dc.eta_single = 0.08;
+        let ssgd = loss_trajectory(&run_experiment(&c_ref).unwrap());
+        let dc = loss_trajectory(&run_experiment(&c_dc).unwrap());
+        let range = ssgd[0] - ssgd[ssgd.len() - 1];
+        assert!(range > 0.0, "seed {seed}: SSGD did not learn");
+        let gap: f64 = ssgd
+            .iter()
+            .zip(&dc)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / ssgd.len() as f64;
+        assert!(
+            gap < 0.10 * range,
+            "seed {seed}: trajectory gap {gap:.4} vs range {range:.4}"
+        );
+    }
+}
+
+#[test]
+fn larger_global_batch_degrades_late_accuracy() {
+    // Table I trend: at fixed steps, much larger global batch (same
+    // corpus) converges less per-sample-epoch — 128-node rows lose
+    // accuracy. Compare global batch 32 vs 512 at equal *steps*.
+    let small = run_experiment(&cfg(Algo::DcS3gd, 2, 1)).unwrap();
+    let mut big_cfg = cfg(Algo::DcS3gd, 32, 1);
+    big_cfg.local_batch = 16; // global 512 vs 32
+    let big = run_experiment(&big_cfg).unwrap();
+    // big-batch should NOT be better on val error at equal steps with
+    // LR scaled by Eq. 16 (it sees 16× the data but the large-batch
+    // regime loses generalization per the paper's 128k row).
+    assert!(
+        big.final_val_err >= small.final_val_err - 0.08,
+        "unexpected: big batch {} much better than small {}",
+        big.final_val_err,
+        small.final_val_err
+    );
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    let a = run_experiment(&cfg(Algo::DcS3gd, 4, 3)).unwrap();
+    let b = run_experiment(&cfg(Algo::DcS3gd, 4, 3)).unwrap();
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    assert_eq!(a.final_val_err, b.final_val_err);
+    assert_eq!(a.mean_dist_to_avg, b.mean_dist_to_avg);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_run() {
+    use dcs3gd::model::Checkpoint;
+    let report = run_experiment(&cfg(Algo::DcS3gd, 2, 5)).unwrap();
+    let ck = Checkpoint {
+        iteration: report.steps,
+        weights: vec![1.0; 8],
+        velocity: vec![0.5; 8],
+    };
+    let p = std::env::temp_dir().join(format!("dcs3gd_conv_ckpt_{}.bin", std::process::id()));
+    ck.save(&p).unwrap();
+    assert_eq!(Checkpoint::load(&p).unwrap(), ck);
+    std::fs::remove_file(&p).unwrap();
+}

@@ -1,0 +1,253 @@
+//! Property-based tests over the coordinator invariants (offline build:
+//! randomized-case harness with seeded shrink-free generation — each
+//! failure prints its case seed for reproduction).
+
+use dcs3gd::comm::{ring::ring_network, AllReduceAlgo, Group, NetModel};
+use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
+use dcs3gd::dc;
+use dcs3gd::optim::LrSchedule;
+use dcs3gd::tensor;
+use dcs3gd::util::Rng;
+
+const CASES: u64 = 40;
+
+fn randvec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    v.iter_mut().for_each(|x| *x *= scale);
+    v
+}
+
+/// Property: rendezvous all-reduce == serial elementwise sum, for any
+/// rank count, vector length, and per-rank post times; and the reported
+/// completion time equals max(post) + t_AR for every rank.
+#[test]
+fn prop_allreduce_is_sum_with_correct_timing() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0xA11E, 0, case);
+        let n_ranks = 1 + rng.below(8) as usize;
+        let len = 1 + rng.below(500) as usize;
+        let net = NetModel {
+            alpha_s: rng.uniform() * 1e-5,
+            beta_bytes_per_s: 1e6 + rng.uniform() * 1e9,
+            algo: [AllReduceAlgo::Ring, AllReduceAlgo::Tree, AllReduceAlgo::Flat]
+                [rng.below(3) as usize],
+        };
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case, r as u64, 0);
+                randvec(&mut rr, len, 1.0)
+            })
+            .collect();
+        let posts: Vec<f64> = (0..n_ranks).map(|_| rng.uniform() * 10.0).collect();
+        let mut expect = vec![0.0f32; len];
+        for v in &inputs {
+            tensor::add_assign(&mut expect, v);
+        }
+        let t_expect = posts.iter().cloned().fold(f64::MIN, f64::max)
+            + net.allreduce_time(len, n_ranks);
+
+        let group = Group::new(n_ranks, net);
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|r| {
+                let mut c = group.comm(r);
+                let data = inputs[r].clone();
+                let post = posts[r];
+                std::thread::spawn(move || c.allreduce(&data, post))
+            })
+            .collect();
+        for h in handles {
+            let (sum, t_done) = h.join().unwrap();
+            for (i, (a, b)) in sum.iter().zip(&expect).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "case {case}: sum[{i}] {a} vs {b}"
+                );
+            }
+            assert!((t_done - t_expect).abs() < 1e-9, "case {case}: time {t_done} vs {t_expect}");
+        }
+    }
+}
+
+/// Property: the wire-level ring all-reduce agrees with the serial sum
+/// for any (ranks, length) — including lengths < ranks.
+#[test]
+fn prop_ring_allreduce_matches_sum() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x3136, 1, case);
+        let n_ranks = 1 + rng.below(7) as usize;
+        let len = 1 + rng.below(300) as usize;
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case ^ 0xFF, r as u64, 1);
+                randvec(&mut rr, len, 1.0)
+            })
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for v in &inputs {
+            tensor::add_assign(&mut expect, v);
+        }
+        let comms = ring_network(n_ranks);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .zip(inputs)
+            .map(|(c, mut buf)| {
+                std::thread::spawn(move || {
+                    c.allreduce(&mut buf);
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (a, b) in got.iter().zip(&expect) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "case {case}");
+            }
+        }
+    }
+}
+
+/// Property (Eq. 8/9): for any worker updates, applying `w_i + D_i`
+/// brings every worker exactly to `w̄ + mean(Δw)`, and Σ_i D_i = 0.
+#[test]
+fn prop_averaging_identity() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0xE98, 2, case);
+        let n_workers = 2 + rng.below(14) as usize;
+        let n = 1 + rng.below(200) as usize;
+        let w_bar = randvec(&mut rng, n, 1.0);
+        let deltas: Vec<Vec<f32>> =
+            (0..n_workers).map(|_| randvec(&mut rng, n, 0.1)).collect();
+        let mut sum = vec![0.0f32; n];
+        for d in &deltas {
+            tensor::add_assign(&mut sum, d);
+        }
+        let mut d_total = vec![0.0f64; n];
+        for delta in &deltas {
+            let mut dist = vec![0.0f32; n];
+            dc::distance_to_average(&sum, delta, n_workers, &mut dist);
+            let wi: Vec<f32> = w_bar
+                .iter()
+                .zip(delta)
+                .zip(&dist)
+                .map(|((w, d), dd)| w + d + dd)
+                .collect();
+            for i in 0..n {
+                let want = w_bar[i] + sum[i] / n_workers as f32;
+                assert!((wi[i] - want).abs() <= 1e-4, "case {case} elem {i}");
+                d_total[i] += dist[i] as f64;
+            }
+        }
+        for (i, t) in d_total.iter().enumerate() {
+            assert!(t.abs() <= 1e-3, "case {case}: Σ D_i [{i}] = {t} ≠ 0");
+        }
+    }
+}
+
+/// Property (Eq. 17): the dynamic λ always normalizes the correction to
+/// exactly λ0·‖g‖, for any non-degenerate inputs, at any scale.
+#[test]
+fn prop_lambda_normalization() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x1AB, 3, case);
+        let n = 2 + rng.below(400) as usize;
+        let scale = 10f32.powf(rng.uniform_range(-3.0, 3.0));
+        let g = randvec(&mut rng, n, scale);
+        let d = randvec(&mut rng, n, 0.1);
+        let lam0 = rng.uniform_range(0.01, 2.0);
+        let lam = dc::dynamic_lambda(&g, &d, lam0);
+        let corr: Vec<f32> = (0..n).map(|i| lam * g[i] * g[i] * d[i]).collect();
+        let want = lam0 as f64 * tensor::norm2(&g);
+        let got = tensor::norm2(&corr);
+        assert!(
+            (got - want).abs() <= 1e-3 * want.max(1e-12),
+            "case {case}: ‖corr‖ {got} vs λ0‖g‖ {want}"
+        );
+    }
+}
+
+/// Property: the LR schedule is piecewise linear, continuous at the
+/// warmup stop, non-negative, and zero at/after `total`.
+#[test]
+fn prop_schedule_shape() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x5C4E, 4, case);
+        let total = 10 + rng.below(5000);
+        let planned = 1 + rng.below(total);
+        let stop = rng.below(planned + 1).min(total - 1);
+        let peak = rng.uniform_range(0.01, 20.0);
+        let s = LrSchedule::paper(peak, planned, stop, total);
+        let mut prev = 0.0f32;
+        for it in 0..total + 10 {
+            let v = s.at(it);
+            assert!(v >= 0.0, "case {case}: negative lr at {it}");
+            assert!(v <= peak * 1.0001, "case {case}: above peak at {it}");
+            if it >= total {
+                assert_eq!(v, 0.0, "case {case}: nonzero after total");
+            }
+            if it < stop {
+                assert!(v >= prev, "case {case}: warmup not increasing at {it}");
+            } else if it > stop && it < total {
+                assert!(v <= prev + 1e-6, "case {case}: decay not decreasing at {it}");
+            }
+            prev = v;
+        }
+        // continuity at the stop: |lr(stop) − reached| small
+        if stop > 0 {
+            let jump = (s.at(stop) - s.reached_peak()).abs();
+            assert!(jump <= peak / planned as f32 + 1e-6, "case {case}: jump {jump}");
+        }
+    }
+}
+
+/// Property: shard sampling partitions the corpus for any (n_train,
+/// n_ranks), and every epoch visits each shard index exactly once.
+#[test]
+fn prop_sharding_partition() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x5A4D, 5, case);
+        let n_ranks = 1 + rng.below(9) as usize;
+        let n_train = (n_ranks * (1 + rng.below(40) as usize)).max(n_ranks);
+        let ds = SyntheticDataset::new(case, 8, 3, n_train, 4);
+        let mut seen = vec![0u32; n_train];
+        for rank in 0..n_ranks {
+            let shard_len = (rank..n_train).step_by(n_ranks).count();
+            if shard_len == 0 {
+                continue;
+            }
+            let batch = 1 + rng.below(shard_len as u64) as usize;
+            let mut s = ShardSampler::new(&ds, rank, n_ranks, batch);
+            let full_batches = shard_len / batch;
+            for _ in 0..full_batches {
+                for idx in s.next_batch() {
+                    seen[idx] += 1;
+                }
+            }
+            // each index seen at most once per epoch
+        }
+        assert!(seen.iter().all(|&c| c <= 1), "case {case}: duplicate across shards");
+    }
+}
+
+/// Property: dataset samples are identical regardless of generation
+/// order or batch grouping (pure function of index).
+#[test]
+fn prop_dataset_order_independent() {
+    for case in 0..10 {
+        let ds = SyntheticDataset::new(case, 8, 4, 64, 8);
+        let px = 8 * 8 * 3;
+        let mut rng = Rng::keyed(0xDA7A, 6, case);
+        let i = rng.below(64) as usize;
+        let mut a = vec![0.0; px];
+        let la = ds.sample_into(Split::Train, i, &mut a);
+        // generate a bunch of other samples in between
+        let mut scratch = vec![0.0; px];
+        for j in 0..10 {
+            ds.sample_into(Split::Train, (i + j + 1) % 64, &mut scratch);
+        }
+        let mut b = vec![0.0; px];
+        let lb = ds.sample_into(Split::Train, i, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b, "case {case}");
+    }
+}

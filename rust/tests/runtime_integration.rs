@@ -1,0 +1,161 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they SKIP (with a notice)
+//! when artifacts are absent so `cargo test` stays green standalone.
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::dc;
+use dcs3gd::model::StepBackend;
+use dcs3gd::runtime::ComputeServer;
+use dcs3gd::util::Rng;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn variant_dir(name: &str) -> Option<std::path::PathBuf> {
+    let d = artifacts_root().join(name);
+    if d.join("meta.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("SKIP: artifacts/{name} absent — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn train_step_executes_and_learns() {
+    let Some(dir) = variant_dir("tiny_cnn_b16") else { return };
+    let server = ComputeServer::start(&dir).unwrap();
+    let meta = server.meta().clone();
+    let mut be = server.backend();
+    let mut w = meta.load_init_params().unwrap();
+    let mut rng = Rng::new(0);
+    let mut x = vec![0.0f32; meta.x_len()];
+    rng.fill_normal(&mut x);
+    let y: Vec<i32> = (0..meta.batch as i32).map(|i| i % meta.num_classes as i32).collect();
+    let mut g = vec![0.0f32; meta.param_count];
+
+    let (loss0, err0) = be.train_step(&w, &x, &y, &mut g);
+    assert!(loss0.is_finite() && (0.0..=1.0).contains(&err0));
+    assert!(g.iter().any(|&v| v != 0.0), "gradient all zero");
+    assert!(be.last_compute_s().unwrap() > 0.0);
+
+    // 20 SGD steps on the fixed batch must reduce the loss (fwd/bwd
+    // consistency through the whole AOT path).
+    for _ in 0..20 {
+        be.train_step(&w, &x, &y, &mut g);
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= 0.05 * gi;
+        }
+    }
+    let (loss1, _) = be.eval_step(&w, &x, &y);
+    assert!(loss1 < 0.7 * loss0, "no learning through PJRT: {loss0} → {loss1}");
+}
+
+#[test]
+fn eval_matches_train_forward() {
+    let Some(dir) = variant_dir("tiny_cnn_b16") else { return };
+    let server = ComputeServer::start(&dir).unwrap();
+    let meta = server.meta().clone();
+    let mut be = server.backend();
+    let w = meta.load_init_params().unwrap();
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0f32; meta.x_len()];
+    rng.fill_normal(&mut x);
+    let y: Vec<i32> = (0..meta.batch as i32).map(|i| i % meta.num_classes as i32).collect();
+    let mut g = vec![0.0f32; meta.param_count];
+    let (lt, et) = be.train_step(&w, &x, &y, &mut g);
+    let (le, ee) = be.eval_step(&w, &x, &y);
+    assert!((lt - le).abs() < 1e-4, "train fwd {lt} vs eval fwd {le}");
+    assert_eq!(et, ee);
+}
+
+#[test]
+fn dc_step_artifact_matches_rust_math() {
+    // Three-layer agreement: the AOT dc_step (jax L2 + Pallas L1,
+    // executed via PJRT) must match the fused rust path bit-closely.
+    let Some(dir) = variant_dir("tiny_cnn_b16") else { return };
+    let server = ComputeServer::start(&dir).unwrap();
+    let n = server.meta().param_count;
+    let mut rng = Rng::new(7);
+    let mut g = vec![0.0f32; n];
+    let mut d = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut w = vec![0.0f32; n];
+    rng.fill_normal(&mut g);
+    rng.fill_normal(&mut d);
+    rng.fill_normal(&mut v);
+    rng.fill_normal(&mut w);
+    let (eta, mu, lam0, wd) = (0.1f32, 0.9f32, 0.2f32, 1e-4f32);
+
+    let (dw_x, vn_x, lam_x) = server.dc_step(&g, &d, &v, &w, eta, mu, lam0, wd).unwrap();
+
+    let mut v_r = v.clone();
+    let mut w_r = w.clone();
+    let mut dw_r = vec![0.0f32; n];
+    let info = dc::dc_correct_update(
+        &g,
+        Some(&d),
+        &mut v_r,
+        &mut w_r,
+        None,
+        dc::DcHyper { eta, mu, lam0, wd },
+        &mut dw_r,
+    );
+    assert!((lam_x - info.lam).abs() <= 1e-4 * info.lam.abs().max(1e-6), "λ {lam_x} vs {}", info.lam);
+    for i in 0..n {
+        assert!((dw_x[i] - dw_r[i]).abs() <= 1e-4 * dw_r[i].abs().max(1e-5), "dw[{i}]");
+        assert!((vn_x[i] - v_r[i]).abs() <= 1e-4 * v_r[i].abs().max(1e-5), "v[{i}]");
+    }
+}
+
+#[test]
+fn full_dcs3gd_run_on_xla_backend() {
+    // End-to-end: 4 workers, tiny CNN artifacts, a few dozen steps.
+    let Some(_) = variant_dir("tiny_cnn_b16") else { return };
+    let cfg = ExperimentConfig::builder("tiny_cnn_b16")
+        .artifacts_root(artifacts_root())
+        .algo(Algo::DcS3gd)
+        .nodes(4)
+        .local_batch(16)
+        .steps(25)
+        .eta_single(0.05)
+        .base_batch(64)
+        .data(2048, 256, 0.5)
+        .build();
+    let report = run_experiment(&cfg).unwrap();
+    assert_eq!(report.recorder.n_steps(), 25 * 4);
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.final_val_err < 0.95, "val err {}", report.final_val_err);
+    assert!(report.sim_time_s > 0.0);
+}
+
+#[test]
+fn ssgd_run_on_xla_backend() {
+    let Some(_) = variant_dir("tiny_cnn_b16") else { return };
+    let cfg = ExperimentConfig::builder("tiny_cnn_b16")
+        .artifacts_root(artifacts_root())
+        .algo(Algo::Ssgd)
+        .nodes(2)
+        .local_batch(16)
+        .steps(15)
+        .eta_single(0.05)
+        .base_batch(32)
+        .data(1024, 256, 0.5)
+        .build();
+    let report = run_experiment(&cfg).unwrap();
+    assert!(report.final_train_loss.is_finite());
+}
+
+#[test]
+fn batch_mismatch_is_rejected() {
+    let Some(_) = variant_dir("tiny_cnn_b16") else { return };
+    let cfg = ExperimentConfig::builder("tiny_cnn_b16")
+        .artifacts_root(artifacts_root())
+        .local_batch(32) // artifact was lowered for 16
+        .steps(1)
+        .build();
+    assert!(run_experiment(&cfg).is_err());
+}
