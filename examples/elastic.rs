@@ -1,0 +1,139 @@
+//! Elastic control plane demo: dynamic staleness vs fixed-k under an
+//! injected 2× straggler, plus fault-tolerant recovery from a mid-run
+//! worker kill.
+//!
+//! The acceptance scenario for the control plane: with one worker
+//! running 2× slower, the `dss_pid` policy must reach ≥10% lower
+//! virtual wall-clock than fixed-k DC-S3GD at (near-)equal final loss,
+//! and the per-window k/λ decision trace must land in the metrics JSON
+//! (`runs/elastic/*_run.json`).
+//!
+//! ```sh
+//! cargo run --release --example elastic [-- fast]
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::{ControlPolicy, FaultPlan};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+const NODES: usize = 8;
+const STRAGGLER_RANK: usize = 3;
+const STRAGGLER_FACTOR: f64 = 2.0;
+
+fn cfg(name: &str, policy: ControlPolicy, steps: u64) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(NODES)
+        .local_batch(32)
+        .steps(steps)
+        .eta_single(0.02)
+        .base_batch(32)
+        .data(4096, 512, 0.5)
+        // one worker persistently 2× slower — the §II-A straggler
+        .compute(ComputeModel::uniform(2e-4).with_straggler(
+            STRAGGLER_RANK,
+            STRAGGLER_FACTOR,
+            NODES,
+        ))
+        // network slow enough that k=1 cannot hide t_AR (Eq. 14)
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 1.2e6, algo: AllReduceAlgo::Ring })
+        .control_policy(policy)
+        .k_bounds(1, 6)
+        .out_dir("runs/elastic")
+        .build()
+}
+
+fn summarize(label: &str, r: &RunReport) {
+    println!(
+        "{label:<22} sim {:>7.3}s | iter {:>8.5}s | train loss {:.4} | val err {:>5.1}% | k changes {}",
+        r.sim_time_s,
+        r.mean_iter_time,
+        r.final_train_loss,
+        100.0 * r.final_val_err,
+        r.control.k_changes(),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+    let steps: u64 = if fast { 120 } else { 300 };
+
+    println!(
+        "== elastic staleness: {NODES} workers, rank {STRAGGLER_RANK} running {STRAGGLER_FACTOR}× slow ==\n"
+    );
+
+    let fixed = run_experiment(&cfg("elastic_fixed", ControlPolicy::Fixed, steps))?;
+    let adaptive = run_experiment(&cfg("elastic_dss_pid", ControlPolicy::DssPid, steps))?;
+
+    summarize("fixed-k dcs3gd", &fixed);
+    summarize("dss_pid dcs3gd", &adaptive);
+
+    let speedup = fixed.sim_time_s / adaptive.sim_time_s;
+    let loss_ratio = adaptive.final_train_loss / fixed.final_train_loss;
+    println!(
+        "\nvirtual wall-clock: {speedup:.2}× faster with dss_pid ({:.1}% lower)",
+        100.0 * (1.0 - adaptive.sim_time_s / fixed.sim_time_s)
+    );
+    println!("final-loss ratio adaptive/fixed: {loss_ratio:.3}");
+
+    // The k trajectory the controller walked (from the decision trace).
+    let recs = adaptive.control.records();
+    let ks: Vec<usize> = recs.iter().map(|r| r.k).collect();
+    let (k_first, k_last) = (ks.first().copied().unwrap_or(1), ks.last().copied().unwrap_or(1));
+    println!("k trajectory: start {k_first} → end {k_last} over {} windows", ks.len());
+
+    // Acceptance: ≥10% lower virtual wall-clock at (near-)equal loss.
+    assert!(
+        adaptive.sim_time_s <= 0.90 * fixed.sim_time_s,
+        "adaptive {:.3}s not ≥10% below fixed {:.3}s",
+        adaptive.sim_time_s,
+        fixed.sim_time_s
+    );
+    assert!(
+        loss_ratio <= 1.10,
+        "adaptive final loss {:.4} strayed >10% above fixed {:.4}",
+        adaptive.final_train_loss,
+        fixed.final_train_loss
+    );
+
+    // Decision trace must be in the metrics JSON export.
+    let json_path = "runs/elastic/elastic_dss_pid_run.json";
+    let parsed = Json::parse(&std::fs::read_to_string(json_path)?)
+        .map_err(|e| anyhow::anyhow!("bad metrics JSON: {e}"))?;
+    let trace = parsed
+        .get("control")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no control trace in {json_path}"))?;
+    assert!(!trace.is_empty(), "empty decision trace in {json_path}");
+    println!("decision trace: {} records in {json_path}", trace.len());
+
+    // == fault tolerance: kill a worker mid-run, recover from snapshot ==
+    println!("\n== fault tolerance: kill rank 2 mid-run (heartbeat detect + snapshot restore) ==\n");
+    let mut kcfg = cfg("elastic_kill", ControlPolicy::LambdaCoupled, steps);
+    kcfg.control.faults = FaultPlan::new().kill(2, 1.0);
+    kcfg.control.snapshot_every = 5;
+    let killed = run_experiment(&kcfg)?;
+    summarize("lambda_coupled+kill", &killed);
+    for e in killed.control.events() {
+        println!(
+            "  event @ iter {:>4} (t={:.3}s, worker {}): {}",
+            e.iteration,
+            e.sim_time,
+            e.worker,
+            e.event.as_deref().unwrap_or("")
+        );
+    }
+    assert!(
+        killed.control.events().iter().any(|e| {
+            e.event.as_deref().map(|s| s.contains("restored_from")).unwrap_or(false)
+        }),
+        "kill was never detected/recovered"
+    );
+    assert!(killed.final_train_loss.is_finite());
+    println!("\nrecovered and converged: final val err {:.1}%", 100.0 * killed.final_val_err);
+    Ok(())
+}

@@ -4,15 +4,18 @@ Hypothesis sweeps vector lengths (including non-multiples of the tile),
 block shapes, scalar hyper-parameter ranges, and degenerate inputs.
 """
 
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from compile.kernels import dc_correction as dc
-from compile.kernels import ref
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from compile.kernels import dc_correction as dc  # noqa: E402
+from compile.kernels import ref  # noqa: E402
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=30, derandomize=True

@@ -1,13 +1,17 @@
 """Property tests on the oracle itself (kernels/ref.py) — the spec both
 the Pallas kernel and the rust hot path are pinned to."""
 
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
+import pytest
 
-from compile.kernels import ref
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=25, derandomize=True

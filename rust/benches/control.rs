@@ -1,0 +1,92 @@
+//! Bench: the elastic control plane — fixed-k vs adaptive-k DC-S3GD
+//! under injected stragglers.
+//!
+//! For a sweep of straggler factors and network speeds, measures the
+//! simulated wall-clock (and final loss) of the paper's static k = 1
+//! against the `dss_pid` and `lambda_coupled` policies, plus the
+//! closed-form bound per-step time = max(t_C_slow, t_AR / k*):
+//! adapting k amortizes the collective across the window, so the win
+//! grows as t_AR outpaces the straggler-bound compute time.
+//!
+//! ```sh
+//! DCS3GD_BENCH_FAST=1 cargo bench --bench control
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::ControlPolicy;
+use dcs3gd::simtime::ComputeModel;
+
+const NODES: usize = 8;
+const LOCAL_BATCH: usize = 32;
+const SEC_PER_SAMPLE: f64 = 2e-4; // t_C = 6.4 ms/step per worker
+
+fn run(policy: ControlPolicy, straggler: f64, beta: f64, steps: u64) -> RunReport {
+    let mut compute = ComputeModel::uniform(SEC_PER_SAMPLE);
+    if straggler > 1.0 {
+        compute = compute.with_straggler(3, straggler, NODES);
+    }
+    let cfg = ExperimentConfig::builder("linear")
+        .name(&format!("ctl_{}_s{straggler}_b{beta:.0e}", policy.name()))
+        .algo(Algo::DcS3gd)
+        .nodes(NODES)
+        .local_batch(LOCAL_BATCH)
+        .steps(steps)
+        .eta_single(0.02)
+        .base_batch(32)
+        .data(4096, 512, 0.6)
+        .compute(compute)
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: beta, algo: AllReduceAlgo::Ring })
+        .control_policy(policy)
+        .k_bounds(1, 6)
+        .build();
+    run_experiment(&cfg).expect("run")
+}
+
+fn main() {
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let steps: u64 = if fast { 60 } else { 200 };
+    let n_params = 769 * 10 + 10; // linear model on 16×16×3, 10 classes
+
+    println!("# elastic control: fixed-k vs adaptive-k under stragglers\n");
+    println!(
+        "{:>6} {:>10} | {:>10} {:>10} {:>10} | {:>8} {:>8} | {:>7} {:>7} | {:>7}",
+        "strag", "β B/s", "fixed", "dss_pid", "λ-coup", "speedup", "bound", "k_end", "λ_end", "Δloss%"
+    );
+    for &straggler in &[1.0f64, 1.5, 2.0, 4.0] {
+        for &beta in &[1.2e6f64, 5e6] {
+            let fixed = run(ControlPolicy::Fixed, straggler, beta, steps);
+            let dss = run(ControlPolicy::DssPid, straggler, beta, steps);
+            let lam = run(ControlPolicy::LambdaCoupled, straggler, beta, steps);
+
+            // closed-form steady state: per-step max(t_C·strag, t_AR/k*)
+            let net = NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: beta, algo: AllReduceAlgo::Ring };
+            let t_ar = net.allreduce_time(n_params, NODES);
+            let t_c_slow = SEC_PER_SAMPLE * LOCAL_BATCH as f64 * straggler;
+            let k_star = (t_ar / t_c_slow).clamp(1.0, 6.0).ceil();
+            let bound = t_c_slow.max(t_ar / k_star);
+
+            let recs = dss.control.records();
+            let k_end = recs.last().map(|r| r.k).unwrap_or(1);
+            let lam_end =
+                lam.control.records().last().map(|r| r.lam_scale).unwrap_or(1.0);
+            let dloss = 100.0 * (dss.final_train_loss - fixed.final_train_loss)
+                / fixed.final_train_loss;
+            println!(
+                "{straggler:>6.1} {beta:>10.0e} | {:>10.4} {:>10.4} {:>10.4} | {:>7.2}x {:>8.5} | {k_end:>7} {lam_end:>7.2} | {dloss:>6.1}%",
+                fixed.mean_iter_time,
+                dss.mean_iter_time,
+                lam.mean_iter_time,
+                fixed.mean_iter_time / dss.mean_iter_time,
+                bound,
+            );
+        }
+    }
+    println!(
+        "\nExpected: dss_pid tracks the closed-form bound (per-step →\n\
+         max(t_C·strag, t_AR/k*)), beating fixed-k wherever the network\n\
+         dominates the straggler; Δloss stays within a few percent —\n\
+         the compensation (λ-coupled at deeper k) holds accuracy."
+    );
+}

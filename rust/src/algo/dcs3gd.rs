@@ -18,6 +18,26 @@
 //! (correct, then `Optimizer::step`). With `cfg.lam0 == 0` or
 //! `algo == S3gd` the correction is skipped but the staleness remains —
 //! the ablation isolating the compensation's contribution.
+//!
+//! ## The elastic control plane
+//!
+//! The window length k is no longer necessarily static: at every
+//! wait/post boundary the engine consults its
+//! [`crate::control::StalenessController`], which may move k within the
+//! configured bounds (and rescale λ0) from the observed t_C / t_AR
+//! ratio. Because the rendezvous collective requires every rank to run
+//! the identical window schedule, each posted update carries
+//! [`CTRL_SLOTS`] piggyback elements — this rank's mean per-step
+//! compute time and its last observed collective latency — so the
+//! all-reduced tail hands every rank the *same* cross-rank mean
+//! observation, and the deterministic controllers reach the same
+//! decision with no extra communication round.
+//!
+//! Scripted faults ([`crate::control::FaultPlan`]) inject stragglers
+//! and crashes; a killed worker is detected by heartbeat timeout and
+//! restored from the leader's latest [`crate::control::SnapshotStore`]
+//! checkpoint, paying detection + restore downtime on its virtual
+//! clock.
 
 use std::time::Instant;
 
@@ -26,9 +46,15 @@ use anyhow::Result;
 use crate::algo::{Algo, RunReport, WorkerHarness};
 use crate::comm::Group;
 use crate::config::ExperimentConfig;
+use crate::control::{ControlRecord, WindowObs};
 use crate::dc::{self, DcHyper};
+use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
+
+/// Control-plane elements appended to each posted update: `[mean
+/// per-step t_C of the window, last observed t_AR]`.
+pub const CTRL_SLOTS: usize = 2;
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let lam0 = if cfg.algo == Algo::S3gd { 0.0 } else { cfg.lam0 };
@@ -49,9 +75,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let cfg = cfg.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
-                let k = cfg.staleness as u64;
                 let fused = cfg.optimizer == "momentum" || cfg.optimizer == "sgd";
-                let mut w = init_w;
+                let mut w = init_w.clone();
                 // Optimizer state: fused path owns a velocity buffer
                 // directly; unfused path owns a boxed optimizer.
                 let mut velocity = vec![0.0f32; n];
@@ -67,6 +92,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ))
                 };
 
+                // Control plane: a per-worker controller instance; all
+                // instances see identical (all-reduced) observations, so
+                // their window schedules stay in lock-step across ranks.
+                let mut controller = cfg.control.build_controller(cfg.staleness.max(1));
+                let mut decision = controller.current();
+                let snapshot_every = cfg.control.snapshot_cadence();
+
                 // Current window's accumulated update and the previous
                 // posted window (handle + its Δw).
                 let mut window_delta = vec![0.0f32; n];
@@ -75,11 +107,48 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 let mut gtilde = vec![0.0f32; n];
                 let mut posted: Option<(crate::comm::PendingReduce, Vec<f32>)> = None;
 
+                let mut steps_in_window = 0u64;
+                let mut window_idx = 0u64; // completed windows so far
+                let mut window_t_c = 0.0f64; // compute seconds this window
+                let mut prev_t_ar = 0.0f64; // last observed collective latency
+                // Start iterations of the current and previous windows —
+                // `prev_window_start` is the deterministic snapshot bound:
+                // this worker has completed the wait of round j−2, which
+                // happens-after the leader's snapshot at the end of window
+                // j−2 (iteration == start of window j−1).
+                let mut cur_window_start = 0u64;
+                let mut prev_window_start = 0u64;
+
                 for t in 0..cfg.steps {
+                    // Scripted crash? Detect (heartbeat timeout), restore
+                    // from the snapshot store, pay the downtime.
+                    if !ctx.chaos.is_inert() {
+                        if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            ctx.recover_from_kill(
+                                &ev,
+                                &cfg,
+                                &init_w,
+                                &mut w,
+                                if fused { Some(&mut velocity) } else { None },
+                                prev_window_start,
+                                t,
+                                window_idx,
+                                decision.k,
+                                decision.lam_scale,
+                            );
+                            if let Some(o) = opt.as_mut() {
+                                o.reset();
+                            }
+                        }
+                    }
+
+                    let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = ctx.train_step(&w);
+                    window_t_c += ctx.clock.now() - t_before_step;
+                    steps_in_window += 1;
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
-                    let window_end = (t + 1) % k == 0;
+                    let window_end = steps_in_window >= decision.k as u64;
 
                     let mut lam_used = 0.0f32;
                     let mut dist_norm = 0.0f64;
@@ -88,23 +157,56 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // window's end: D_i per Eq. 9.
                     let d_opt: Option<&[f32]> = if window_end {
                         if let Some((handle, posted_delta)) = posted.take() {
-                            let (sum, t_done) = handle.wait(ctx.clock.now());
+                            let post_time = handle.post_time;
+                            let now_before_wait = ctx.clock.now();
+                            let (sum, t_done) = handle.wait(now_before_wait);
                             ctx.clock.advance_to(t_done);
-                            dc::distance_to_average(&sum, &posted_delta, cfg.nodes, &mut dist);
+                            ctx.heartbeats.beat(rank, t_done);
+                            let blocked = t_done - now_before_wait;
+                            prev_t_ar = t_done - post_time;
+                            dc::distance_to_average(&sum[..n], &posted_delta, cfg.nodes, &mut dist);
                             dist_norm = tensor::norm2(&dist);
 
                             // Periodic validation at the *average* weights
                             // w̄ = w_i + D_i (rank 0 only; Eq. 8/9).
                             if rank == 0
                                 && cfg.eval_every > 0
-                                && (t / k) % cfg.eval_every.max(1) == 0
+                                && window_idx % cfg.eval_every.max(1) == 0
                             {
                                 let w_avg: Vec<f32> =
                                     w.iter().zip(&dist).map(|(a, b)| a + b).collect();
                                 let (vl, ve) = ctx.eval(&w_avg, cfg.eval_batches);
                                 ctx.record_eval(t, vl, ve);
                             }
-                            Some(&dist)
+
+                            // Wait/post boundary: hand the cross-rank mean
+                            // observations (payload tail) to the controller.
+                            let inv_n = 1.0 / cfg.nodes as f64;
+                            let tail = &sum[n..n + CTRL_SLOTS];
+                            let obs = WindowObs {
+                                window: window_idx,
+                                iteration: t,
+                                t_compute: tail[0] as f64 * inv_n,
+                                t_allreduce: tail[1] as f64 * inv_n,
+                            };
+                            let prev_k = decision.k;
+                            decision = controller.on_window(&obs);
+                            if rank == 0 {
+                                ctx.control_log.record(ControlRecord {
+                                    worker: rank,
+                                    window: window_idx,
+                                    iteration: t,
+                                    sim_time: ctx.clock.now(),
+                                    k: decision.k,
+                                    lam_scale: decision.lam_scale,
+                                    t_compute: obs.t_compute,
+                                    t_allreduce: obs.t_allreduce,
+                                    blocked_s: blocked,
+                                    event: (decision.k != prev_k)
+                                        .then(|| format!("k {prev_k} -> {}", decision.k)),
+                                });
+                            }
+                            Some(&dist[..])
                         } else {
                             None
                         }
@@ -112,8 +214,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         None
                     };
 
+                    let lam0_eff = lam0 * decision.lam_scale;
                     if fused {
-                        let hp = DcHyper { eta, mu: cfg.momentum, lam0, wd };
+                        let hp = DcHyper { eta, mu: cfg.momentum, lam0: lam0_eff, wd };
                         let info = dc::dc_correct_update(
                             &ctx.g,
                             d_opt,
@@ -128,8 +231,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         // Unfused: correct (Eq. 10/17), optimizer step,
                         // then Eq. 12 by hand.
                         let g_in: &[f32] = match d_opt {
-                            Some(d) if lam0 != 0.0 => {
-                                let lam = dc::dynamic_lambda(&ctx.g, d, lam0);
+                            Some(d) if lam0_eff != 0.0 => {
+                                let lam = dc::dynamic_lambda(&ctx.g, d, lam0_eff);
                                 lam_used = lam;
                                 dc::dc_correct(&ctx.g, d, lam, &mut gtilde);
                                 &gtilde
@@ -147,11 +250,37 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ctx.record(t, loss, err, wall, lam_used, dist_norm, eta);
 
                     if window_end {
-                        // Post this window's update (MPI_Iallreduce) and
-                        // immediately continue computing — the overlap.
+                        // Leader refreshes the recovery snapshot: w here
+                        // is the averaged state plus one local step
+                        // (Eq. 8), the canonical restart point.
+                        if rank == 0
+                            && snapshot_every > 0
+                            && (window_idx + 1) % snapshot_every == 0
+                        {
+                            ctx.snapshots.put(Checkpoint {
+                                iteration: t + 1,
+                                weights: w.clone(),
+                                velocity: velocity.clone(),
+                            });
+                        }
+
+                        // Post this window's update (MPI_Iallreduce) with
+                        // the control piggyback, and immediately continue
+                        // computing — the overlap.
+                        let per_step_t_c = window_t_c / steps_in_window as f64;
+                        window_delta.push(per_step_t_c as f32);
+                        window_delta.push(prev_t_ar as f32);
+                        debug_assert_eq!(window_delta.len(), n + CTRL_SLOTS);
                         let handle = comm.iallreduce(&window_delta, ctx.clock.now());
-                        posted = Some((handle, std::mem::take(&mut window_delta)));
-                        window_delta = vec![0.0f32; n];
+                        let mut posted_delta =
+                            std::mem::replace(&mut window_delta, vec![0.0f32; n]);
+                        posted_delta.truncate(n);
+                        posted = Some((handle, posted_delta));
+                        window_idx += 1;
+                        steps_in_window = 0;
+                        window_t_c = 0.0;
+                        prev_window_start = cur_window_start;
+                        cur_window_start = t + 1;
                     }
                 }
 
@@ -160,7 +289,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 if let Some((handle, posted_delta)) = posted.take() {
                     let (sum, t_done) = handle.wait(ctx.clock.now());
                     ctx.clock.advance_to(t_done);
-                    dc::distance_to_average(&sum, &posted_delta, cfg.nodes, &mut dist);
+                    dc::distance_to_average(&sum[..n], &posted_delta, cfg.nodes, &mut dist);
                     tensor::add_assign(&mut w, &dist);
                 }
 
@@ -193,11 +322,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         .last()
         .map(|e| (e.val_loss, e.val_err))
         .unwrap_or((f32::NAN, f32::NAN));
-    let report = RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    let mut report =
+        RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    report.control = harness.control_log.clone();
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
         report.recorder.write_evals_csv(dir.join(format!("{}_evals.csv", cfg.name)))?;
+        report.write_json(dir.join(format!("{}_run.json", cfg.name)))?;
     }
     Ok(report)
 }
@@ -206,6 +338,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 mod tests {
     use super::*;
     use crate::comm::NetModel;
+    use crate::control::{ControlPolicy, FaultPlan};
     use crate::simtime::ComputeModel;
 
     fn base_cfg() -> ExperimentConfig {
@@ -266,6 +399,13 @@ mod tests {
         let h = WorkerHarness::prepare(&cfg).unwrap();
         assert_eq!(ck.weights.len(), h.n_params());
         assert!(crate::tensor::all_finite(&ck.weights));
+        // The metrics JSON (summary + control trace) must round-trip.
+        let j = crate::util::Json::parse(
+            &std::fs::read_to_string(dir.join("ckpt_test_run.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.get("algo").unwrap().as_str(), Some("dcs3gd"));
+        assert!(j.get("control").unwrap().as_arr().is_some());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -326,5 +466,86 @@ mod tests {
             report.mean_iter_time,
             expect
         );
+    }
+
+    #[test]
+    fn fixed_policy_records_observations_without_moving_k() {
+        let cfg = base_cfg(); // policy = Fixed by default
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let recs = report.control.records();
+        assert!(!recs.is_empty(), "control trace must be recorded");
+        assert!(recs.iter().all(|r| r.k == 1), "fixed policy moved k");
+        assert_eq!(report.control.k_changes(), 0);
+    }
+
+    #[test]
+    fn adaptive_k_raises_staleness_on_slow_network() {
+        // Network far slower than compute: the DssPid controller must
+        // deepen the window to amortize t_AR.
+        let mut cfg = base_cfg();
+        cfg.steps = 80;
+        cfg.compute = ComputeModel::uniform(1e-5);
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: crate::comm::AllReduceAlgo::Ring };
+        cfg.control.policy = ControlPolicy::DssPid;
+        cfg.control.k_max = 6;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let max_k = report.control.records().iter().map(|r| r.k).max().unwrap();
+        assert!(max_k > 1, "controller never raised k (trace {:?})", report.control.records().len());
+        assert!(report.control.k_changes() > 0);
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn adaptive_k_beats_fixed_k_wall_clock_on_slow_network() {
+        let mk = |policy: ControlPolicy| {
+            let mut cfg = base_cfg();
+            cfg.steps = 80;
+            cfg.compute = ComputeModel::uniform(1e-5);
+            cfg.net = NetModel {
+                alpha_s: 0.0,
+                beta_bytes_per_s: 1e6,
+                algo: crate::comm::AllReduceAlgo::Ring,
+            };
+            cfg.control.policy = policy;
+            cfg.control.k_max = 6;
+            cfg
+        };
+        let fixed = run(&mk(ControlPolicy::Fixed), WorkerHarness::prepare(&mk(ControlPolicy::Fixed)).unwrap()).unwrap();
+        let adaptive = run(&mk(ControlPolicy::DssPid), WorkerHarness::prepare(&mk(ControlPolicy::DssPid)).unwrap()).unwrap();
+        assert!(
+            adaptive.sim_time_s < fixed.sim_time_s,
+            "adaptive {} not faster than fixed {}",
+            adaptive.sim_time_s,
+            fixed.sim_time_s
+        );
+    }
+
+    #[test]
+    fn lambda_coupled_rescales_lam0() {
+        let mut cfg = base_cfg();
+        cfg.steps = 80;
+        cfg.compute = ComputeModel::uniform(1e-5);
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: crate::comm::AllReduceAlgo::Ring };
+        cfg.control.policy = ControlPolicy::LambdaCoupled;
+        cfg.control.k_max = 4;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let recs = report.control.records();
+        assert!(recs.iter().any(|r| r.lam_scale > 1.0), "λ never rescaled");
+        assert!(recs.iter().all(|r| r.lam_scale <= cfg.control.lam_scale_max));
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn transient_slow_fault_costs_time_and_is_deterministic() {
+        let mut cfg = base_cfg();
+        cfg.net = NetModel::instant();
+        let t_healthy =
+            run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap().sim_time_s;
+        cfg.control.faults = FaultPlan::new().slow(1, 0.0, 3.0, 0.02);
+        let a = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let b = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(a.sim_time_s > t_healthy, "slow fault added no time");
+        assert_eq!(a.sim_time_s, b.sim_time_s, "fault injection not deterministic");
+        assert_eq!(a.final_train_loss, b.final_train_loss);
     }
 }

@@ -39,13 +39,16 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Parse an algorithm name. Accepts the canonical names plus the
+    /// `dc-s3gd` / `dc_s3gd` separators — the Python AOT config writer
+    /// emits the underscore spellings.
     pub fn parse(s: &str) -> Result<Algo> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "ssgd" => Algo::Ssgd,
             "s3gd" => Algo::S3gd,
-            "dcs3gd" | "dc-s3gd" => Algo::DcS3gd,
+            "dcs3gd" | "dc-s3gd" | "dc_s3gd" => Algo::DcS3gd,
             "asgd" => Algo::Asgd,
-            "dcasgd" | "dc-asgd" => Algo::DcAsgd,
+            "dcasgd" | "dc-asgd" | "dc_asgd" => Algo::DcAsgd,
             other => bail!("unknown algorithm {other:?}"),
         })
     }
@@ -89,6 +92,21 @@ mod tests {
         for a in [Algo::Ssgd, Algo::S3gd, Algo::DcS3gd, Algo::Asgd, Algo::DcAsgd] {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
         }
+    }
+
+    #[test]
+    fn parse_accepts_python_underscore_spellings() {
+        // The Python AOT config writer emits snake_case names; they must
+        // round-trip through parse → name → parse.
+        assert_eq!(Algo::parse("dc_s3gd").unwrap(), Algo::DcS3gd);
+        assert_eq!(Algo::parse("DC_S3GD").unwrap(), Algo::DcS3gd);
+        assert_eq!(Algo::parse("dc_asgd").unwrap(), Algo::DcAsgd);
+        for spelled in ["dc_s3gd", "dc_asgd"] {
+            let a = Algo::parse(spelled).unwrap();
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        // underscore variants of the hyphen-free names stay invalid
+        assert!(Algo::parse("s_sgd").is_err());
     }
 
     #[test]

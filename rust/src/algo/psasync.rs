@@ -7,6 +7,12 @@
 //! the time a worker's gradient arrives, other workers have already
 //! advanced the PS weights. DC-ASGD compensates at the server with the
 //! worker-specific backup weights (§II-A / Zheng et al.); ASGD does not.
+//!
+//! Chaos faults apply here too: slowdowns/stalls land in
+//! `WorkerCtx::train_step` like everywhere else, and a scripted kill
+//! costs the worker its detection + restore downtime before it rejoins
+//! (its weights are refreshed by the next PS pull anyway — the PS is
+//! the system of record, so there is no snapshot to restore).
 
 use std::time::Instant;
 
@@ -59,8 +65,17 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let cfg = cfg.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut w = init_w;
+                let mut w = init_w.clone();
                 for t in 0..cfg.steps {
+                    if !ctx.chaos.is_inert() {
+                        if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            // No snapshots in PS mode (bound 0 → cold
+                            // restart); the next pull re-syncs weights.
+                            ctx.recover_from_kill(
+                                &ev, &cfg, &init_w, &mut w, None, 0, t, t, 1, 1.0,
+                            );
+                        }
+                    }
                     let (loss, err, wall) = ctx.train_step(&w);
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
@@ -95,11 +110,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         .last()
         .map(|e| (e.val_loss, e.val_err))
         .unwrap_or((f32::NAN, f32::NAN));
-    let report = RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    let mut report =
+        RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    report.control = harness.control_log.clone();
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
         report.recorder.write_evals_csv(dir.join(format!("{}_evals.csv", cfg.name)))?;
+        report.write_json(dir.join(format!("{}_run.json", cfg.name)))?;
     }
     Ok(report)
 }
@@ -137,6 +155,26 @@ mod tests {
         let cfg = base_cfg(Algo::DcAsgd);
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
         assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn kill_fault_costs_downtime_and_is_logged() {
+        let mut healthy = base_cfg(Algo::Asgd);
+        healthy.name = "ps_healthy".into();
+        let t_healthy = run(&healthy, WorkerHarness::prepare(&healthy).unwrap())
+            .unwrap()
+            .sim_time_s;
+        let mut cfg = base_cfg(Algo::Asgd);
+        cfg.name = "ps_killed".into();
+        cfg.control.faults = crate::control::FaultPlan::new().kill(1, 0.3);
+        cfg.control.heartbeat_timeout_s = 0.2;
+        cfg.control.restore_s = 0.1;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let events = report.control.events();
+        assert_eq!(events.len(), 1, "kill must be detected and logged");
+        assert_eq!(events[0].worker, 1);
+        assert!(report.sim_time_s > t_healthy, "kill downtime not accounted");
+        assert!(report.final_val_err < 0.85, "run did not survive the kill");
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! Eq. 13's `t_C + t_AR` (no overlap): the collective cannot be posted
 //! until the gradient exists, and the update cannot be applied until the
 //! collective completes.
+//!
+//! The control plane is wired in observation mode: SSGD has no window to
+//! stretch (its wait/post boundary is every iteration and k ≡ 1), but
+//! the engine still beats heartbeats, applies the scripted
+//! [`crate::control::FaultPlan`] (slowdowns, stalls, kills with
+//! checkpoint recovery), consults the controller at each boundary, and
+//! records the per-iteration blocked time — the straggler trace the
+//! elastic engines are judged against.
 
 use std::time::Instant;
 
@@ -14,6 +22,8 @@ use anyhow::Result;
 use crate::algo::{RunReport, WorkerHarness};
 use crate::comm::Group;
 use crate::config::ExperimentConfig;
+use crate::control::{ControlRecord, WindowObs};
+use crate::model::Checkpoint;
 use crate::optim::build_optimizer;
 use crate::tensor;
 
@@ -35,7 +45,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let cfg = cfg.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut w = init_w;
+                let mut w = init_w.clone();
                 let mut opt = build_optimizer(
                     &cfg.optimizer,
                     n,
@@ -45,12 +55,39 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 );
                 let mut g_mean = vec![0.0f32; n];
                 let mut delta = vec![0.0f32; n];
+                // Control plane (observation mode: k is pinned at 1).
+                let mut controller = cfg.control.build_controller(1);
+                let snapshot_every = cfg.control.snapshot_cadence();
 
                 for t in 0..cfg.steps {
+                    if !ctx.chaos.is_inert() {
+                        if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            // Snapshot bound t−1: this worker completed the
+                            // round t−1 all-reduce, which happens-after the
+                            // leader's snapshot at the end of step t−2.
+                            ctx.recover_from_kill(
+                                &ev,
+                                &cfg,
+                                &init_w,
+                                &mut w,
+                                None,
+                                t.saturating_sub(1),
+                                t,
+                                t,
+                                1,
+                                1.0,
+                            );
+                            opt.reset();
+                        }
+                    }
+                    let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = ctx.train_step(&w);
+                    let t_c = ctx.clock.now() - t_before_step;
                     // Blocking all-reduce of gradients: Eq. 13.
-                    let (sum, t_done) = comm.allreduce(&ctx.g, ctx.clock.now());
+                    let now_before_wait = ctx.clock.now();
+                    let (sum, t_done) = comm.allreduce(&ctx.g, now_before_wait);
                     ctx.clock.advance_to(t_done);
+                    ctx.heartbeats.beat(rank, t_done);
                     let inv_n = 1.0 / cfg.nodes as f32;
                     for (m, s) in g_mean.iter_mut().zip(sum.iter()) {
                         *m = s * inv_n;
@@ -60,6 +97,36 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     opt.step(&g_mean, &w, eta, wd, &mut delta);
                     tensor::add_assign(&mut w, &delta);
                     ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
+
+                    // Wait/post boundary: consult (k has no effect here,
+                    // but the straggler trace feeds the metrics export).
+                    let decision = controller.on_window(&WindowObs {
+                        window: t,
+                        iteration: t,
+                        t_compute: t_c,
+                        t_allreduce: t_done - now_before_wait,
+                    });
+                    if rank == 0 {
+                        ctx.control_log.record(ControlRecord {
+                            worker: rank,
+                            window: t,
+                            iteration: t,
+                            sim_time: ctx.clock.now(),
+                            k: 1,
+                            lam_scale: decision.lam_scale,
+                            t_compute: t_c,
+                            t_allreduce: t_done - now_before_wait,
+                            blocked_s: t_done - now_before_wait,
+                            event: None,
+                        });
+                        if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
+                            ctx.snapshots.put(Checkpoint {
+                                iteration: t + 1,
+                                weights: w.clone(),
+                                velocity: vec![0.0; n],
+                            });
+                        }
+                    }
 
                     if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
                         let (vl, ve) = ctx.eval(&w, cfg.eval_batches);
@@ -86,11 +153,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         .last()
         .map(|e| (e.val_loss, e.val_err))
         .unwrap_or((f32::NAN, f32::NAN));
-    let report = RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    let mut report =
+        RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
+    report.control = harness.control_log.clone();
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
         report.recorder.write_evals_csv(dir.join(format!("{}_evals.csv", cfg.name)))?;
+        report.write_json(dir.join(format!("{}_run.json", cfg.name)))?;
     }
     Ok(report)
 }

@@ -7,12 +7,13 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
+use crate::control::{ChaosInjector, ControlLog, HeartbeatBoard, SnapshotStore};
 use crate::data::{ShardSampler, Split, SyntheticDataset};
 use crate::metrics::{EvalRecord, Recorder, StepRecord};
 use crate::model::{LinearSoftmax, StepBackend};
 use crate::runtime::ComputeServer;
 use crate::simtime::SimClock;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Linear-model geometry when no artifact is involved.
 const LINEAR_HW: usize = 16;
@@ -31,6 +32,12 @@ pub struct WorkerHarness {
     pub decay_mask: Option<Vec<f32>>,
     pub layer_ranges: Vec<(usize, usize)>,
     pub recorder: Recorder,
+    /// Control-plane flight recorder shared by all workers.
+    pub control_log: ControlLog,
+    /// Heartbeat timestamps for failure detection.
+    pub heartbeats: HeartbeatBoard,
+    /// Latest recovery checkpoint (leader-written, Eq. 8 canonical).
+    pub snapshots: SnapshotStore,
     pub num_classes: usize,
     pub input_hw: usize,
     source: BackendSource,
@@ -79,6 +86,9 @@ impl WorkerHarness {
             decay_mask,
             layer_ranges,
             recorder: Recorder::new(),
+            control_log: ControlLog::new(),
+            heartbeats: HeartbeatBoard::new(cfg.nodes),
+            snapshots: SnapshotStore::new(),
             num_classes: classes,
             input_hw: hw,
             source,
@@ -115,6 +125,13 @@ pub struct WorkerCtx {
     pub rng: Rng,
     pub dataset: SyntheticDataset,
     pub recorder: Recorder,
+    /// Scripted faults for this rank (inert when the plan is empty).
+    pub chaos: ChaosInjector,
+    /// Shared failure-detection board; beaten at every step boundary.
+    pub heartbeats: HeartbeatBoard,
+    /// Shared recovery snapshot store.
+    pub snapshots: SnapshotStore,
+    pub control_log: ControlLog,
     compute: crate::simtime::ComputeModel,
     time_from_wall: bool,
     local_batch: usize,
@@ -135,6 +152,10 @@ impl WorkerCtx {
             rng: Rng::keyed(cfg.seed, 0xC10C4, rank as u64),
             dataset: h.dataset.clone(),
             recorder: h.recorder.clone(),
+            chaos: ChaosInjector::new(&cfg.control.faults, rank),
+            heartbeats: h.heartbeats.clone(),
+            snapshots: h.snapshots.clone(),
+            control_log: h.control_log.clone(),
             compute: cfg.compute.clone(),
             time_from_wall: cfg.time_from_wall,
             local_batch: cfg.local_batch,
@@ -145,20 +166,31 @@ impl WorkerCtx {
     }
 
     /// Draw the next shard batch, run fused fwd+bwd, advance the virtual
-    /// clock by t_C, and return (loss, err, wall_compute_s). The gradient
-    /// lands in `self.g`.
+    /// clock by t_C (scaled by any active chaos slowdown, plus pending
+    /// one-shot stalls), and return (loss, err, wall_compute_s). The
+    /// gradient lands in `self.g`.
     pub fn train_step(&mut self, w: &[f32]) -> (f32, f32, f64) {
+        if !self.chaos.is_inert() {
+            let stall = self.chaos.take_delay(self.clock.now());
+            if stall > 0.0 {
+                self.clock.advance(stall);
+            }
+        }
         let idx = self.sampler.next_batch();
         self.dataset.batch_into(Split::Train, &idx, &mut self.x, &mut self.y);
         let t0 = Instant::now();
         let (loss, err) = self.backend.train_step(w, &self.x, &self.y, &mut self.g);
         let wall = self.backend.last_compute_s().unwrap_or_else(|| t0.elapsed().as_secs_f64());
-        let t_c = if self.time_from_wall {
+        let mut t_c = if self.time_from_wall {
             wall
         } else {
             self.compute.batch_time(self.rank, self.local_batch, &mut self.rng)
         };
+        if !self.chaos.is_inert() {
+            t_c *= self.chaos.compute_factor(self.clock.now());
+        }
         self.clock.advance(t_c);
+        self.heartbeats.beat(self.rank, self.clock.now());
         (loss, err, wall)
     }
 
@@ -217,6 +249,73 @@ impl WorkerCtx {
             val_err,
         });
     }
+
+    /// Crash-and-respawn this worker: restore weights (and, on the fused
+    /// path, momentum) from the newest snapshot whose iteration is
+    /// `<= snapshot_bound` — or cold-restart from the initial weights if
+    /// none qualifies — advance the virtual clock through
+    /// heartbeat-detection plus restore downtime, and log the event.
+    /// Unfused optimizer state must be reset by the caller.
+    ///
+    /// `snapshot_bound` must be derived from the engine's rendezvous
+    /// happens-before order (every snapshot at or below it is already
+    /// published by the leader) so recovery is deterministic regardless
+    /// of wall-clock thread interleaving.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recover_from_kill(
+        &mut self,
+        event: &crate::control::FaultEvent,
+        cfg: &ExperimentConfig,
+        init_w: &[f32],
+        w: &mut Vec<f32>,
+        velocity: Option<&mut Vec<f32>>,
+        snapshot_bound: u64,
+        iteration: u64,
+        window: u64,
+        k: usize,
+        lam_scale: f32,
+    ) {
+        let timeout = cfg.control.heartbeat_timeout_s;
+        let detect = self.heartbeats.detect_time(self.rank, event.at_s, timeout);
+        let recover_at = detect + cfg.control.restore_s;
+        let restored_from = match self.snapshots.latest_at_or_before(snapshot_bound) {
+            Some(ck) if ck.weights.len() == w.len() => {
+                *w = ck.weights;
+                if let Some(v) = velocity {
+                    if ck.velocity.len() == v.len() {
+                        *v = ck.velocity;
+                    } else {
+                        v.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                }
+                format!("snapshot@{}", ck.iteration)
+            }
+            _ => {
+                *w = init_w.to_vec();
+                if let Some(v) = velocity {
+                    v.iter_mut().for_each(|x| *x = 0.0);
+                }
+                "init".to_string()
+            }
+        };
+        self.clock.advance_to(recover_at);
+        self.heartbeats.beat(self.rank, self.clock.now());
+        self.control_log.record(crate::control::ControlRecord {
+            worker: self.rank,
+            window,
+            iteration,
+            sim_time: self.clock.now(),
+            k,
+            lam_scale,
+            t_compute: 0.0,
+            t_allreduce: 0.0,
+            blocked_s: recover_at - event.at_s,
+            event: Some(format!(
+                "kill@{:.3}s detect@{:.3}s restored_from={restored_from}",
+                event.at_s, detect
+            )),
+        });
+    }
 }
 
 /// Aggregated outcome of one run — the numbers Table I / Figure 1 are
@@ -244,6 +343,8 @@ pub struct RunReport {
     /// Real wall time of the whole run.
     pub wall_time_s: f64,
     pub recorder: Recorder,
+    /// Control-plane decision trace (empty when the plane only observed).
+    pub control: ControlLog,
 }
 
 impl RunReport {
@@ -276,7 +377,41 @@ impl RunReport {
             mean_dist_to_avg: recorder.tail_dist_to_avg(tail.max(1)),
             wall_time_s,
             recorder,
+            control: ControlLog::default(),
         }
+    }
+
+    /// Metrics JSON for the whole run: summary scalars plus the
+    /// control-plane decision trace under the `"control"` key.
+    pub fn to_json(&self) -> Json {
+        // NaN/∞ (e.g. val loss of a run with no evals) have no JSON
+        // representation; map them to null.
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("algo".into(), Json::Str(self.algo.name().into()));
+        m.insert("nodes".into(), Json::Num(self.nodes as f64));
+        m.insert("global_batch".into(), Json::Num(self.global_batch as f64));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("final_train_loss".into(), num(self.final_train_loss as f64));
+        m.insert("final_train_err".into(), num(self.final_train_err as f64));
+        m.insert("final_val_loss".into(), num(self.final_val_loss as f64));
+        m.insert("final_val_err".into(), num(self.final_val_err as f64));
+        m.insert("best_val_err".into(), num(self.best_val_err as f64));
+        m.insert("sim_time_s".into(), num(self.sim_time_s));
+        m.insert("sim_throughput".into(), num(self.sim_throughput));
+        m.insert("mean_iter_time".into(), num(self.mean_iter_time));
+        m.insert("mean_dist_to_avg".into(), num(self.mean_dist_to_avg));
+        m.insert("wall_time_s".into(), num(self.wall_time_s));
+        m.insert("evals".into(), self.recorder.evals_json());
+        m.insert("control".into(), self.control.to_json());
+        Json::Obj(m)
+    }
+
+    /// Write the run's metrics JSON (summary + control trace).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())?;
+        Ok(())
     }
 
     /// One Table-I-style row.

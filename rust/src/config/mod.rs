@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algo::Algo;
 use crate::comm::{AllReduceAlgo, NetModel};
+use crate::control::{ControlConfig, ControlPolicy, FaultKind, FaultPlan};
 use crate::simtime::ComputeModel;
 
 /// Full description of one training run.
@@ -72,6 +73,11 @@ pub struct ExperimentConfig {
     /// instead of `compute` (used by e2e runs on the real backend).
     pub time_from_wall: bool,
 
+    // --- control plane ---
+    /// Elastic control plane: staleness policy, fault schedule, recovery
+    /// (the `[control]` TOML table; see [`crate::control`]).
+    pub control: ControlConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -113,6 +119,7 @@ impl ExperimentConfig {
             net: NetModel::default(),
             compute: ComputeModel::default(),
             time_from_wall: false,
+            control: ControlConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -166,6 +173,14 @@ impl ExperimentConfig {
             .unwrap_or("linear")
             .to_string();
         let mut cfg = Self::defaults(&variant);
+        // Flat single-fault spec of the `[control]` table, assembled
+        // after the loop (keys arrive in BTreeMap order).
+        let mut fault_rank: Option<usize> = None;
+        let mut fault_at_s: Option<f64> = None;
+        let mut fault_kind: Option<String> = None;
+        let mut fault_factor = 2.0f64;
+        let mut fault_duration_s = 1.0f64;
+        let mut fault_extra_s = 0.5f64;
         for (key, val) in &map {
             let k = key.as_str();
             let err = || anyhow::anyhow!("bad value for {k}");
@@ -211,9 +226,53 @@ impl ExperimentConfig {
                 "compute.time_from_wall" => cfg.time_from_wall = val.as_bool().ok_or_else(err)?,
                 "eval.every" => cfg.eval_every = val.as_i64().ok_or_else(err)? as u64,
                 "eval.batches" => cfg.eval_batches = val.as_i64().ok_or_else(err)? as usize,
+                "control.policy" => {
+                    cfg.control.policy = ControlPolicy::parse(val.as_str().ok_or_else(err)?)?
+                }
+                "control.k_min" => cfg.control.k_min = val.as_i64().ok_or_else(err)? as usize,
+                "control.k_max" => cfg.control.k_max = val.as_i64().ok_or_else(err)? as usize,
+                "control.gain_p" => cfg.control.gain_p = val.as_f64().ok_or_else(err)?,
+                "control.gain_i" => cfg.control.gain_i = val.as_f64().ok_or_else(err)?,
+                "control.adjust_every" => {
+                    cfg.control.adjust_every = val.as_i64().ok_or_else(err)? as u64
+                }
+                "control.lam_scale_min" => {
+                    cfg.control.lam_scale_min = val.as_f64().ok_or_else(err)? as f32
+                }
+                "control.lam_scale_max" => {
+                    cfg.control.lam_scale_max = val.as_f64().ok_or_else(err)? as f32
+                }
+                "control.heartbeat_timeout_s" => {
+                    cfg.control.heartbeat_timeout_s = val.as_f64().ok_or_else(err)?
+                }
+                "control.restore_s" => cfg.control.restore_s = val.as_f64().ok_or_else(err)?,
+                "control.snapshot_every" => {
+                    cfg.control.snapshot_every = val.as_i64().ok_or_else(err)? as u64
+                }
+                "control.fault_rank" => fault_rank = Some(val.as_i64().ok_or_else(err)? as usize),
+                "control.fault_at_s" => fault_at_s = Some(val.as_f64().ok_or_else(err)?),
+                "control.fault_kind" => {
+                    fault_kind = Some(val.as_str().ok_or_else(err)?.to_string())
+                }
+                "control.fault_factor" => fault_factor = val.as_f64().ok_or_else(err)?,
+                "control.fault_duration_s" => fault_duration_s = val.as_f64().ok_or_else(err)?,
+                "control.fault_extra_s" => fault_extra_s = val.as_f64().ok_or_else(err)?,
                 "out_dir" => cfg.out_dir = Some(val.as_str().ok_or_else(err)?.into()),
                 other => bail!("unknown config key {other:?}"),
             }
+        }
+        if let Some(kind) = fault_kind {
+            let rank = fault_rank
+                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_rank"))?;
+            let at_s = fault_at_s
+                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_at_s"))?;
+            let kind = match kind.as_str() {
+                "kill" => FaultKind::Kill,
+                "slow" => FaultKind::Slow { factor: fault_factor, duration_s: fault_duration_s },
+                "delay" => FaultKind::Delay { extra_s: fault_extra_s },
+                other => bail!("unknown control.fault_kind {other:?} (kill | slow | delay)"),
+            };
+            cfg.control.faults.push(crate::control::FaultEvent { rank, at_s, kind });
         }
         cfg.validate()?;
         Ok(cfg)
@@ -236,6 +295,12 @@ impl ExperimentConfig {
         }
         if self.warmup_stop_frac > self.warmup_frac {
             bail!("warmup_stop_frac must not exceed warmup_frac");
+        }
+        self.control.validate()?;
+        for e in self.control.faults.events() {
+            if e.rank >= self.nodes {
+                bail!("fault targets rank {} but the run has {} nodes", e.rank, self.nodes);
+            }
         }
         Ok(())
     }
@@ -331,6 +396,24 @@ impl ConfigBuilder {
         self.cfg.out_dir = Some(v.into());
         self
     }
+    /// Replace the whole `[control]` table.
+    pub fn control(mut self, v: ControlConfig) -> Self {
+        self.cfg.control = v;
+        self
+    }
+    pub fn control_policy(mut self, v: ControlPolicy) -> Self {
+        self.cfg.control.policy = v;
+        self
+    }
+    pub fn k_bounds(mut self, k_min: usize, k_max: usize) -> Self {
+        self.cfg.control.k_min = k_min;
+        self.cfg.control.k_max = k_max;
+        self
+    }
+    pub fn faults(mut self, v: FaultPlan) -> Self {
+        self.cfg.control.faults = v;
+        self
+    }
     pub fn artifacts_root(mut self, v: impl Into<PathBuf>) -> Self {
         self.cfg.artifacts_root = v.into();
         self
@@ -404,6 +487,70 @@ mod tests {
     #[test]
     fn unknown_keys_rejected() {
         assert!(ExperimentConfig::from_toml_str("typo_key = 1").is_err());
+    }
+
+    #[test]
+    fn control_table_parses() {
+        let doc = r#"
+            nodes = 4
+
+            [control]
+            policy = "lambda_coupled"
+            k_min = 1
+            k_max = 6
+            gain_p = 0.4
+            adjust_every = 2
+            snapshot_every = 5
+            heartbeat_timeout_s = 0.25
+            fault_kind = "kill"
+            fault_rank = 2
+            fault_at_s = 1.5
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.control.policy, ControlPolicy::LambdaCoupled);
+        assert_eq!(cfg.control.k_max, 6);
+        assert_eq!(cfg.control.adjust_every, 2);
+        assert_eq!(cfg.control.snapshot_every, 5);
+        assert_eq!(cfg.control.heartbeat_timeout_s, 0.25);
+        let faults = cfg.control.faults.events();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].rank, 2);
+        assert_eq!(faults[0].kind, FaultKind::Kill);
+    }
+
+    #[test]
+    fn control_fault_requires_rank_and_time() {
+        let doc = "
+            [control]
+            fault_kind = \"kill\"
+        ";
+        assert!(ExperimentConfig::from_toml_str(doc).is_err());
+    }
+
+    #[test]
+    fn fault_rank_out_of_range_rejected() {
+        let doc = r#"
+            nodes = 2
+
+            [control]
+            fault_kind = "slow"
+            fault_rank = 5
+            fault_at_s = 1.0
+        "#;
+        assert!(ExperimentConfig::from_toml_str(doc).is_err());
+    }
+
+    #[test]
+    fn control_builder_hooks() {
+        let cfg = ExperimentConfig::builder("linear")
+            .nodes(4)
+            .control_policy(ControlPolicy::DssPid)
+            .k_bounds(1, 4)
+            .faults(FaultPlan::new().slow(1, 0.5, 2.0, 1.0))
+            .build();
+        assert_eq!(cfg.control.policy, ControlPolicy::DssPid);
+        assert_eq!(cfg.control.k_max, 4);
+        assert_eq!(cfg.control.faults.events().len(), 1);
     }
 
     #[test]

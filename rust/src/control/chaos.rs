@@ -1,0 +1,367 @@
+//! Fault injection and recovery primitives: scripted worker failures in
+//! *virtual* time, heartbeat-based detection, and checkpoint snapshots
+//! the engines restore from.
+//!
+//! A [`FaultPlan`] scripts events against the simulated cluster:
+//!
+//! * **Kill** — the worker loses its local state (weights, momentum) at
+//!   the event time. The failure is *detected* when its heartbeat (last
+//!   rendezvous/step timestamp on the [`HeartbeatBoard`]) goes stale
+//!   past the configured timeout, and the respawned worker restores
+//!   from the latest [`SnapshotStore`] checkpoint, paying
+//!   `detect + restore` seconds of virtual downtime.
+//! * **Slow** — a transient straggler: compute runs `factor×` slower
+//!   for a duration (e.g. a co-scheduled job, thermal throttling).
+//! * **Delay** — a one-shot stall of `extra_s` (e.g. a GC pause or
+//!   network hiccup).
+//!
+//! Each worker owns a [`ChaosInjector`] over its slice of the plan;
+//! the plan itself lives in the experiment config so runs stay
+//! deterministic and reproducible.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::Checkpoint;
+
+/// What happens to a worker at a scripted virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Crash-and-respawn: local state lost, recovered from snapshot.
+    Kill,
+    /// Compute runs `factor×` slower for `duration_s` seconds.
+    Slow { factor: f64, duration_s: f64 },
+    /// One-shot stall of `extra_s` seconds.
+    Delay { extra_s: f64 },
+}
+
+/// One scripted event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub rank: usize,
+    /// Virtual time the event fires (seconds on the worker's clock).
+    pub at_s: f64,
+    pub kind: FaultKind,
+}
+
+/// The full scripted schedule for a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: FaultEvent) {
+        self.events.push(e);
+    }
+
+    /// Builder: kill `rank` at `at_s`.
+    pub fn kill(mut self, rank: usize, at_s: f64) -> Self {
+        self.push(FaultEvent { rank, at_s, kind: FaultKind::Kill });
+        self
+    }
+
+    /// Builder: slow `rank` by `factor` for `duration_s` starting `at_s`.
+    pub fn slow(mut self, rank: usize, at_s: f64, factor: f64, duration_s: f64) -> Self {
+        self.push(FaultEvent { rank, at_s, kind: FaultKind::Slow { factor, duration_s } });
+        self
+    }
+
+    /// Builder: stall `rank` once for `extra_s` at `at_s`.
+    pub fn delay(mut self, rank: usize, at_s: f64, extra_s: f64) -> Self {
+        self.push(FaultEvent { rank, at_s, kind: FaultKind::Delay { extra_s } });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Does the plan kill anyone? (Engines use this to decide whether
+    /// snapshots are worth taking by default.)
+    pub fn has_kills(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::Kill))
+    }
+
+    /// This rank's events, ordered by fire time.
+    pub fn for_rank(&self, rank: usize) -> Vec<FaultEvent> {
+        let mut out: Vec<FaultEvent> =
+            self.events.iter().copied().filter(|e| e.rank == rank).collect();
+        out.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        out
+    }
+}
+
+/// Per-worker view of the plan: tracks which one-shot events have fired.
+#[derive(Debug)]
+pub struct ChaosInjector {
+    events: Vec<FaultEvent>,
+    fired: Vec<bool>,
+}
+
+impl ChaosInjector {
+    pub fn new(plan: &FaultPlan, rank: usize) -> Self {
+        let events = plan.for_rank(rank);
+        let fired = vec![false; events.len()];
+        ChaosInjector { events, fired }
+    }
+
+    /// No events scripted for this rank at all.
+    pub fn is_inert(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Product of the Slow factors active at `now` (1.0 when healthy).
+    pub fn compute_factor(&self, now: f64) -> f64 {
+        let mut f = 1.0;
+        for e in &self.events {
+            if let FaultKind::Slow { factor, duration_s } = e.kind {
+                if now >= e.at_s && now < e.at_s + duration_s {
+                    f *= factor.max(0.0);
+                }
+            }
+        }
+        f
+    }
+
+    /// Total one-shot Delay seconds due at/before `now`; each is
+    /// consumed exactly once.
+    pub fn take_delay(&mut self, now: f64) -> f64 {
+        let mut extra = 0.0;
+        for (i, e) in self.events.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            if let FaultKind::Delay { extra_s } = e.kind {
+                if now >= e.at_s {
+                    self.fired[i] = true;
+                    extra += extra_s.max(0.0);
+                }
+            }
+        }
+        extra
+    }
+
+    /// The earliest unconsumed Kill due at/before `now`, if any.
+    pub fn take_kill(&mut self, now: f64) -> Option<FaultEvent> {
+        for (i, e) in self.events.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            if matches!(e.kind, FaultKind::Kill) && now >= e.at_s {
+                self.fired[i] = true;
+                return Some(*e);
+            }
+        }
+        None
+    }
+}
+
+/// Last-seen virtual timestamps, one per rank, written at every step /
+/// rendezvous boundary. Failure detection is a stale heartbeat: a rank
+/// whose last beat is older than the timeout is *suspected*, and the
+/// recovery clock starts from `last_seen + timeout`.
+#[derive(Debug, Clone)]
+pub struct HeartbeatBoard {
+    inner: Arc<Mutex<Vec<f64>>>,
+}
+
+impl HeartbeatBoard {
+    pub fn new(n_ranks: usize) -> Self {
+        HeartbeatBoard { inner: Arc::new(Mutex::new(vec![0.0; n_ranks])) }
+    }
+
+    /// Record life from `rank` at virtual time `now` (monotone).
+    pub fn beat(&self, rank: usize, now: f64) {
+        let mut v = self.inner.lock().unwrap();
+        if now > v[rank] {
+            v[rank] = now;
+        }
+    }
+
+    pub fn last_seen(&self, rank: usize) -> f64 {
+        self.inner.lock().unwrap()[rank]
+    }
+
+    /// Heartbeat-timeout detection: is `rank` presumed dead at `now`?
+    pub fn suspected(&self, rank: usize, now: f64, timeout_s: f64) -> bool {
+        now - self.last_seen(rank) > timeout_s
+    }
+
+    /// The virtual time the failure of `rank` is *detected*: one timeout
+    /// after its last heartbeat (never earlier than the crash itself).
+    pub fn detect_time(&self, rank: usize, crash_at: f64, timeout_s: f64) -> f64 {
+        (self.last_seen(rank) + timeout_s).max(crash_at)
+    }
+}
+
+/// Recent recovery checkpoints, shared by all workers of a run. The
+/// leader refreshes the store at window boundaries (the averaged
+/// weights are canonical there, Eq. 8); a respawned worker restores
+/// from it.
+///
+/// Recovery must stay **deterministic** even though the leader's thread
+/// races ahead or behind the crashed worker in wall-clock time. The
+/// store therefore keeps a short history, and recovery selects with
+/// [`SnapshotStore::latest_at_or_before`] using an iteration bound the
+/// engine derives from the rendezvous happens-before order (every
+/// snapshot at or below the bound is guaranteed published; anything
+/// newer is raced and must be ignored).
+#[derive(Debug, Clone, Default)]
+pub struct SnapshotStore {
+    inner: Arc<Mutex<Vec<Checkpoint>>>,
+}
+
+/// History depth: the leader can be at most ~3 windows ahead of the
+/// recovery bound, so 8 leaves ample slack at any snapshot cadence.
+const SNAPSHOT_HISTORY: usize = 8;
+
+impl SnapshotStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a snapshot (kept in iteration order; oldest dropped past
+    /// the history cap; stale duplicates ignored).
+    pub fn put(&self, ck: Checkpoint) {
+        let mut g = self.inner.lock().unwrap();
+        if g.last().map(|old| ck.iteration <= old.iteration).unwrap_or(false) {
+            return;
+        }
+        g.push(ck);
+        if g.len() > SNAPSHOT_HISTORY {
+            g.remove(0);
+        }
+    }
+
+    /// Clone of the newest snapshot, if any exists yet.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        self.inner.lock().unwrap().last().cloned()
+    }
+
+    /// Newest snapshot with `iteration <= bound` — the deterministic
+    /// recovery selector (see the type docs).
+    pub fn latest_at_or_before(&self, bound: u64) -> Option<Checkpoint> {
+        self.inner.lock().unwrap().iter().rev().find(|c| c.iteration <= bound).cloned()
+    }
+
+    pub fn latest_iteration(&self) -> Option<u64> {
+        self.inner.lock().unwrap().last().map(|c| c.iteration)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_slices_by_rank_in_time_order() {
+        let plan = FaultPlan::new()
+            .slow(1, 2.0, 3.0, 1.0)
+            .kill(0, 5.0)
+            .delay(1, 0.5, 0.1)
+            .kill(1, 9.0);
+        assert!(plan.has_kills());
+        assert_eq!(plan.for_rank(0).len(), 1);
+        let r1 = plan.for_rank(1);
+        assert_eq!(r1.len(), 3);
+        assert!(r1.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(plan.for_rank(7).is_empty());
+    }
+
+    #[test]
+    fn slow_window_applies_only_inside_interval() {
+        let plan = FaultPlan::new().slow(0, 1.0, 2.0, 3.0);
+        let inj = ChaosInjector::new(&plan, 0);
+        assert_eq!(inj.compute_factor(0.5), 1.0);
+        assert_eq!(inj.compute_factor(1.0), 2.0);
+        assert_eq!(inj.compute_factor(3.9), 2.0);
+        assert_eq!(inj.compute_factor(4.0), 1.0);
+    }
+
+    #[test]
+    fn overlapping_slows_compound() {
+        let plan = FaultPlan::new().slow(0, 0.0, 2.0, 10.0).slow(0, 5.0, 1.5, 10.0);
+        let inj = ChaosInjector::new(&plan, 0);
+        assert_eq!(inj.compute_factor(1.0), 2.0);
+        assert!((inj.compute_factor(6.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delays_fire_once() {
+        let plan = FaultPlan::new().delay(0, 1.0, 0.5).delay(0, 2.0, 0.25);
+        let mut inj = ChaosInjector::new(&plan, 0);
+        assert_eq!(inj.take_delay(0.5), 0.0);
+        assert_eq!(inj.take_delay(1.5), 0.5);
+        assert_eq!(inj.take_delay(1.6), 0.0); // consumed
+        assert_eq!(inj.take_delay(10.0), 0.25);
+        assert_eq!(inj.take_delay(10.0), 0.0);
+    }
+
+    #[test]
+    fn kill_fires_once() {
+        let plan = FaultPlan::new().kill(3, 2.0);
+        let mut inj = ChaosInjector::new(&plan, 3);
+        assert!(inj.take_kill(1.9).is_none());
+        let e = inj.take_kill(2.1).unwrap();
+        assert_eq!(e.at_s, 2.0);
+        assert!(inj.take_kill(100.0).is_none());
+    }
+
+    #[test]
+    fn heartbeat_detection() {
+        let hb = HeartbeatBoard::new(2);
+        hb.beat(0, 1.0);
+        hb.beat(0, 0.5); // stale beat must not move time backwards
+        assert_eq!(hb.last_seen(0), 1.0);
+        assert!(!hb.suspected(0, 1.2, 0.5));
+        assert!(hb.suspected(0, 1.6, 0.5));
+        // detection = last beat + timeout, floored at the crash time
+        assert_eq!(hb.detect_time(0, 1.1, 0.5), 1.5);
+        assert_eq!(hb.detect_time(0, 2.0, 0.5), 2.0);
+    }
+
+    #[test]
+    fn snapshot_store_keeps_newest() {
+        let s = SnapshotStore::new();
+        assert!(s.latest().is_none());
+        s.put(Checkpoint { iteration: 10, weights: vec![1.0], velocity: vec![0.0] });
+        // stale put: ignored
+        s.put(Checkpoint { iteration: 5, weights: vec![2.0], velocity: vec![0.0] });
+        assert_eq!(s.latest_iteration(), Some(10));
+        assert_eq!(s.latest().unwrap().weights, vec![1.0]);
+        s.put(Checkpoint { iteration: 20, weights: vec![3.0], velocity: vec![0.0] });
+        assert_eq!(s.latest_iteration(), Some(20));
+    }
+
+    #[test]
+    fn snapshot_selection_respects_bound() {
+        let s = SnapshotStore::new();
+        for it in [5u64, 10, 15, 20] {
+            s.put(Checkpoint { iteration: it, weights: vec![it as f32], velocity: vec![] });
+        }
+        assert_eq!(s.latest_at_or_before(4), None);
+        assert_eq!(s.latest_at_or_before(5).unwrap().iteration, 5);
+        assert_eq!(s.latest_at_or_before(14).unwrap().iteration, 10);
+        assert_eq!(s.latest_at_or_before(100).unwrap().iteration, 20);
+    }
+
+    #[test]
+    fn snapshot_history_is_bounded() {
+        let s = SnapshotStore::new();
+        for it in 1..=20u64 {
+            s.put(Checkpoint { iteration: it, weights: vec![], velocity: vec![] });
+        }
+        assert_eq!(s.latest_iteration(), Some(20));
+        // oldest entries dropped, recent window retained
+        assert!(s.latest_at_or_before(5).is_none());
+        assert_eq!(s.latest_at_or_before(15).unwrap().iteration, 15);
+    }
+}

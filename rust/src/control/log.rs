@@ -1,0 +1,175 @@
+//! The control plane's flight recorder: one record per decision point
+//! (window boundary, fault, recovery), shared across workers and
+//! exported through the metrics layer as JSON.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// One control-plane decision / event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlRecord {
+    pub worker: usize,
+    /// Completed-window index (0 for per-step engines like SSGD).
+    pub window: u64,
+    /// Worker-local iteration at the record point.
+    pub iteration: u64,
+    pub sim_time: f64,
+    /// Window length in force after this decision.
+    pub k: usize,
+    /// λ0 multiplier in force after this decision.
+    pub lam_scale: f32,
+    /// Observed mean per-step compute time (s).
+    pub t_compute: f64,
+    /// Observed collective latency, post → completion (s).
+    pub t_allreduce: f64,
+    /// Time this worker spent blocked in the wait (s) — the straggler
+    /// signal.
+    pub blocked_s: f64,
+    /// Fault / recovery annotation ("kill", "recovered", ...), if any.
+    pub event: Option<String>,
+}
+
+impl ControlRecord {
+    fn to_json(&self) -> Json {
+        // NaN/∞ have no JSON representation → null (keeps the whole
+        // metrics file parseable even if an observation went bad).
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut m = BTreeMap::new();
+        m.insert("worker".into(), Json::Num(self.worker as f64));
+        m.insert("window".into(), Json::Num(self.window as f64));
+        m.insert("iteration".into(), Json::Num(self.iteration as f64));
+        m.insert("sim_time".into(), num(self.sim_time));
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("lam_scale".into(), num(self.lam_scale as f64));
+        m.insert("t_compute".into(), num(self.t_compute));
+        m.insert("t_allreduce".into(), num(self.t_allreduce));
+        m.insert("blocked_s".into(), num(self.blocked_s));
+        m.insert(
+            "event".into(),
+            match &self.event {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Thread-safe, cheaply-clonable recorder shared by a run's workers.
+#[derive(Debug, Clone, Default)]
+pub struct ControlLog {
+    inner: Arc<Mutex<Vec<ControlRecord>>>,
+}
+
+impl ControlLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, r: ControlRecord) {
+        self.inner.lock().unwrap().push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records, ordered by (iteration, worker) so exports are
+    /// deterministic regardless of thread interleaving.
+    pub fn records(&self) -> Vec<ControlRecord> {
+        let mut v = self.inner.lock().unwrap().clone();
+        v.sort_by_key(|r| (r.iteration, r.worker));
+        v
+    }
+
+    /// Records carrying a fault/recovery annotation.
+    pub fn events(&self) -> Vec<ControlRecord> {
+        self.records().into_iter().filter(|r| r.event.is_some()).collect()
+    }
+
+    /// Number of times the decided k changed along the trace.
+    pub fn k_changes(&self) -> usize {
+        let ks: Vec<usize> =
+            self.records().iter().filter(|r| r.event.is_none()).map(|r| r.k).collect();
+        ks.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+
+    /// The decision trace as a JSON array (the `control` key of the run's
+    /// metrics JSON).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.records().iter().map(ControlRecord::to_json).collect())
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(worker: usize, iteration: u64, k: usize, event: Option<&str>) -> ControlRecord {
+        ControlRecord {
+            worker,
+            window: iteration / 2,
+            iteration,
+            sim_time: iteration as f64 * 0.1,
+            k,
+            lam_scale: 1.0,
+            t_compute: 1e-3,
+            t_allreduce: 2e-3,
+            blocked_s: 0.0,
+            event: event.map(String::from),
+        }
+    }
+
+    #[test]
+    fn records_sorted_and_counted() {
+        let log = ControlLog::new();
+        log.record(rec(1, 4, 2, None));
+        log.record(rec(0, 2, 1, None));
+        log.record(rec(0, 6, 2, Some("kill")));
+        assert_eq!(log.len(), 3);
+        let rs = log.records();
+        assert_eq!(rs[0].iteration, 2);
+        assert_eq!(rs[2].event.as_deref(), Some("kill"));
+        assert_eq!(log.events().len(), 1);
+        assert_eq!(log.k_changes(), 1); // 1 → 2 over the non-event records
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let log = ControlLog::new();
+        log.record(rec(0, 1, 1, None));
+        log.record(rec(0, 3, 2, Some("recovered")));
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("k").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[1].get("event").unwrap().as_str(), Some("recovered"));
+        assert_eq!(arr[0].get("event"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn write_json_to_disk() {
+        let log = ControlLog::new();
+        log.record(rec(0, 0, 1, None));
+        let p = std::env::temp_dir().join(format!("dcs3gd_ctl_{}.json", std::process::id()));
+        log.write_json(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

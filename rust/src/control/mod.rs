@@ -1,0 +1,227 @@
+//! Elastic control plane: online steering of the training engines.
+//!
+//! DC-S3GD's engines fix the staleness bound k and the compensation
+//! base λ0 up front, but the profitable operating point depends on the
+//! *live* ratio of compute to all-reduce time (Eqs. 13/14) — which
+//! drifts with stragglers, payload size and topology — and on whether
+//! workers are healthy at all. This subsystem closes the loop:
+//!
+//! * [`staleness`] — the [`StalenessController`] policies ([`Fixed`],
+//!   [`DssPid`], [`LambdaCoupled`]) that adapt k and λ0 from observed
+//!   t_C / t_AR, consulted by the engines at every wait/post boundary.
+//! * [`chaos`] — the [`FaultPlan`] / [`ChaosInjector`] that script
+//!   kills, slowdowns and stalls in virtual time, with heartbeat
+//!   detection ([`HeartbeatBoard`]) and checkpoint recovery
+//!   ([`SnapshotStore`]).
+//! * [`log`] — the [`ControlLog`] flight recorder whose per-window
+//!   k/λ/straggler decisions ride into the metrics JSON export.
+//!
+//! **Consensus without extra rounds**: adaptive k only works if every
+//! rank switches windows at the same iteration, or the rendezvous
+//! rounds unmatch and the run deadlocks. Rather than a separate control
+//! collective, the engines piggyback each worker's observations as two
+//! extra elements on the update all-reduce itself; every rank then sees
+//! the identical cross-rank mean and the (deterministic) controllers
+//! reach the identical decision. The control plane rides the data
+//! plane.
+
+pub mod chaos;
+pub mod log;
+pub mod staleness;
+
+pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard, SnapshotStore};
+pub use log::{ControlLog, ControlRecord};
+pub use staleness::{Decision, DssPid, Fixed, LambdaCoupled, StalenessController, WindowObs};
+
+use anyhow::{bail, Result};
+
+/// Which staleness policy the control plane runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ControlPolicy {
+    /// Static k (the paper's behaviour); the control plane only observes.
+    #[default]
+    Fixed,
+    /// DSSP-style bounded adaptation of k from the t_AR / t_C ratio.
+    DssPid,
+    /// [`ControlPolicy::DssPid`] plus λ0 rescaling with effective
+    /// staleness.
+    LambdaCoupled,
+}
+
+impl ControlPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fixed" | "static" => ControlPolicy::Fixed,
+            "dss_pid" | "dss-pid" | "dsspid" | "dssp" => ControlPolicy::DssPid,
+            "lambda_coupled" | "lambda-coupled" | "lambdacoupled" => ControlPolicy::LambdaCoupled,
+            other => bail!("unknown control policy {other:?} (fixed | dss_pid | lambda_coupled)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControlPolicy::Fixed => "fixed",
+            ControlPolicy::DssPid => "dss_pid",
+            ControlPolicy::LambdaCoupled => "lambda_coupled",
+        }
+    }
+}
+
+/// The `[control]` table of an experiment config: policy, bounds, fault
+/// schedule and recovery parameters.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    pub policy: ControlPolicy,
+    /// Bounds on the adapted staleness k.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// PI gains of the adaptive policies.
+    pub gain_p: f64,
+    pub gain_i: f64,
+    /// Minimum windows between k changes (hysteresis).
+    pub adjust_every: u64,
+    /// Bounds on the λ0 multiplier ([`LambdaCoupled`]).
+    pub lam_scale_min: f32,
+    pub lam_scale_max: f32,
+    /// Heartbeat staleness that marks a worker dead (virtual seconds).
+    pub heartbeat_timeout_s: f64,
+    /// Time to restore a worker from a snapshot (virtual seconds).
+    pub restore_s: f64,
+    /// Refresh the recovery snapshot every this many windows (0 = only
+    /// when the fault plan contains kills, every 10 windows).
+    pub snapshot_every: u64,
+    /// Scripted faults (empty = healthy cluster).
+    pub faults: FaultPlan,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            policy: ControlPolicy::Fixed,
+            k_min: 1,
+            k_max: 8,
+            gain_p: 0.5,
+            gain_i: 0.1,
+            adjust_every: 1,
+            lam_scale_min: 0.25,
+            lam_scale_max: 4.0,
+            heartbeat_timeout_s: 0.5,
+            restore_s: 0.2,
+            snapshot_every: 0,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+impl ControlConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.k_min == 0 {
+            bail!("control.k_min must be ≥ 1");
+        }
+        if self.k_min > self.k_max {
+            bail!("control.k_min {} exceeds control.k_max {}", self.k_min, self.k_max);
+        }
+        if self.lam_scale_min > self.lam_scale_max {
+            bail!("control.lam_scale_min exceeds control.lam_scale_max");
+        }
+        if self.heartbeat_timeout_s < 0.0 || self.restore_s < 0.0 {
+            bail!("control timeouts must be non-negative");
+        }
+        Ok(())
+    }
+
+    /// Fresh controller for one worker, seeded with the configured
+    /// staleness. All workers must build identical controllers (see the
+    /// module docs' determinism contract).
+    pub fn build_controller(&self, k_init: usize) -> Box<dyn StalenessController> {
+        match self.policy {
+            ControlPolicy::Fixed => Box::new(Fixed::new(k_init)),
+            ControlPolicy::DssPid => Box::new(DssPid::new(
+                k_init,
+                self.k_min,
+                self.k_max,
+                self.gain_p,
+                self.gain_i,
+                self.adjust_every,
+            )),
+            ControlPolicy::LambdaCoupled => Box::new(LambdaCoupled::new(
+                k_init,
+                self.k_min,
+                self.k_max,
+                self.gain_p,
+                self.gain_i,
+                self.adjust_every,
+                self.lam_scale_min,
+                self.lam_scale_max,
+            )),
+        }
+    }
+
+    /// Effective snapshot cadence in windows (0 = snapshots off).
+    pub fn snapshot_cadence(&self) -> u64 {
+        if self.snapshot_every > 0 {
+            self.snapshot_every
+        } else if self.faults.has_kills() {
+            10
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [ControlPolicy::Fixed, ControlPolicy::DssPid, ControlPolicy::LambdaCoupled] {
+            assert_eq!(ControlPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(ControlPolicy::parse("DSS-PID").unwrap(), ControlPolicy::DssPid);
+        assert!(ControlPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn defaults_validate_and_build() {
+        let c = ControlConfig::default();
+        c.validate().unwrap();
+        let ctl = c.build_controller(1);
+        assert_eq!(ctl.name(), "fixed");
+        assert_eq!(ctl.current().k, 1);
+        assert_eq!(c.snapshot_cadence(), 0);
+    }
+
+    #[test]
+    fn invalid_bounds_rejected() {
+        let mut c = ControlConfig { k_min: 4, k_max: 2, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.k_max = 4;
+        c.validate().unwrap();
+        c.lam_scale_min = 5.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn builder_honours_policy_and_clamps_seed_k() {
+        let c = ControlConfig {
+            policy: ControlPolicy::DssPid,
+            k_min: 2,
+            k_max: 4,
+            ..Default::default()
+        };
+        let ctl = c.build_controller(1); // below k_min: clamped up
+        assert_eq!(ctl.name(), "dss_pid");
+        assert_eq!(ctl.current().k, 2);
+        let ctl = c.build_controller(9); // above k_max: clamped down
+        assert_eq!(ctl.current().k, 4);
+    }
+
+    #[test]
+    fn kill_plans_get_default_snapshot_cadence() {
+        let c = ControlConfig { faults: FaultPlan::new().kill(0, 1.0), ..Default::default() };
+        assert_eq!(c.snapshot_cadence(), 10);
+        let c2 = ControlConfig { snapshot_every: 3, ..c };
+        assert_eq!(c2.snapshot_cadence(), 3);
+    }
+}

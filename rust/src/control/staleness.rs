@@ -1,0 +1,348 @@
+//! Staleness controllers: the policies that pick the window length k
+//! (and the compensation strength λ0's scale) online.
+//!
+//! The paper fixes k a priori, but its own Eq. 13/14 analysis says the
+//! profitable overlap depth depends on the live ratio t_AR / t_C — a
+//! quantity that drifts with stragglers, payload size and topology.
+//! Dynamic-SSP (Zhao et al., 1908.11848) shows a bounded online
+//! adaptation of k beats any static choice; DC-ASGD (Zheng et al.,
+//! 1609.08326) shows the compensation strength must co-adapt with the
+//! effective staleness. Three policies:
+//!
+//! * [`Fixed`] — the paper's static k (the control-plane no-op).
+//! * [`DssPid`] — DSSP-style bounded adaptation: drive k toward
+//!   ceil(t_AR / t_C) with a PI step of at most ±1 per decision,
+//!   clamped to `[k_min, k_max]`.
+//! * [`LambdaCoupled`] — [`DssPid`] plus λ0 rescaling ∝ k/k_ref
+//!   (stronger compensation at deeper staleness, bounded).
+//!
+//! Determinism contract: every worker runs its own controller instance,
+//! but all instances must make **identical decisions** — the engines
+//! feed them the *cross-rank mean* observations carried on the
+//! collective itself (see `algo::dcs3gd`), so identical inputs ⇒
+//! identical k on every rank ⇒ identical window schedules ⇒ the
+//! rendezvous rounds stay matched. Controllers must therefore be pure
+//! functions of their observation history (no RNG, no wall clock).
+
+/// What the engine asks the controller after each completed window.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowObs {
+    /// Completed-window index (0-based).
+    pub window: u64,
+    /// Worker-local iteration at the window boundary.
+    pub iteration: u64,
+    /// Cross-rank mean per-*step* compute time t_C over the window (s).
+    pub t_compute: f64,
+    /// Cross-rank mean observed collective latency t_AR of the previous
+    /// window's all-reduce, post → completion (s). 0 until one has
+    /// completed.
+    pub t_allreduce: f64,
+}
+
+/// The controller's answer: window length for the next window and a
+/// multiplier on the configured λ0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub k: usize,
+    pub lam_scale: f32,
+}
+
+/// A staleness policy. One instance per worker; see the module docs for
+/// the determinism contract.
+pub trait StalenessController: Send {
+    fn name(&self) -> &'static str;
+
+    /// The standing decision, without new observations.
+    fn current(&self) -> Decision;
+
+    /// Observe one completed window; returns the decision for the next.
+    fn on_window(&mut self, obs: &WindowObs) -> Decision;
+}
+
+/// The paper's static policy: k and λ0 never move.
+#[derive(Debug, Clone)]
+pub struct Fixed {
+    k: usize,
+}
+
+impl Fixed {
+    pub fn new(k: usize) -> Self {
+        Fixed { k: k.max(1) }
+    }
+}
+
+impl StalenessController for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn current(&self) -> Decision {
+        Decision { k: self.k, lam_scale: 1.0 }
+    }
+
+    fn on_window(&mut self, _obs: &WindowObs) -> Decision {
+        self.current()
+    }
+}
+
+/// DSSP-style bounded adaptation of k with a PI control law.
+///
+/// One collective per window of k steps overlaps the *next* window's k
+/// compute steps, so communication is hidden iff k·t_C ≥ t_AR; the
+/// setpoint is k* = t_AR / t_C. Each decision moves k by at most one,
+/// within `[k_min, k_max]`, after `adjust_every` windows of evidence —
+/// the bounded, hysteretic step that keeps the schedule stable under
+/// noisy observations.
+#[derive(Debug, Clone)]
+pub struct DssPid {
+    k: usize,
+    k_min: usize,
+    k_max: usize,
+    gain_p: f64,
+    gain_i: f64,
+    adjust_every: u64,
+    windows_since_adjust: u64,
+    integral: f64,
+}
+
+impl DssPid {
+    pub fn new(
+        k_init: usize,
+        k_min: usize,
+        k_max: usize,
+        gain_p: f64,
+        gain_i: f64,
+        adjust_every: u64,
+    ) -> Self {
+        let k_min = k_min.max(1);
+        let k_max = k_max.max(k_min);
+        DssPid {
+            k: k_init.clamp(k_min, k_max),
+            k_min,
+            k_max,
+            gain_p,
+            gain_i,
+            adjust_every: adjust_every.max(1),
+            windows_since_adjust: 0,
+            integral: 0.0,
+        }
+    }
+
+    /// The raw setpoint from one observation, clamped to the k bounds.
+    fn target(&self, obs: &WindowObs) -> Option<f64> {
+        if obs.t_compute <= 0.0 || obs.t_allreduce <= 0.0 {
+            return None; // no evidence yet (first window, or a free network)
+        }
+        Some((obs.t_allreduce / obs.t_compute).clamp(self.k_min as f64, self.k_max as f64))
+    }
+}
+
+impl StalenessController for DssPid {
+    fn name(&self) -> &'static str {
+        "dss_pid"
+    }
+
+    fn current(&self) -> Decision {
+        Decision { k: self.k, lam_scale: 1.0 }
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        if let Some(target) = self.target(obs) {
+            let err = target - self.k as f64;
+            // Anti-windup clamp: the integral can demand at most a few
+            // consecutive unit steps on its own.
+            self.integral = (self.integral + err).clamp(-8.0, 8.0);
+            self.windows_since_adjust += 1;
+            if self.windows_since_adjust >= self.adjust_every {
+                let drive = self.gain_p * err + self.gain_i * self.integral;
+                if drive >= 0.5 && self.k < self.k_max {
+                    self.k += 1;
+                    self.windows_since_adjust = 0;
+                    self.integral = 0.0;
+                } else if drive <= -0.5 && self.k > self.k_min {
+                    self.k -= 1;
+                    self.windows_since_adjust = 0;
+                    self.integral = 0.0;
+                }
+            }
+        }
+        self.current()
+    }
+}
+
+/// [`DssPid`] plus DC-ASGD-style λ co-adaptation: when the effective
+/// staleness k moves away from the reference k_ref the workers drift
+/// further from the average between corrections, so the compensation
+/// base λ0 is rescaled by k/k_ref, clamped to
+/// `[lam_scale_min, lam_scale_max]`.
+#[derive(Debug, Clone)]
+pub struct LambdaCoupled {
+    inner: DssPid,
+    k_ref: usize,
+    lam_scale_min: f32,
+    lam_scale_max: f32,
+}
+
+impl LambdaCoupled {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        k_init: usize,
+        k_min: usize,
+        k_max: usize,
+        gain_p: f64,
+        gain_i: f64,
+        adjust_every: u64,
+        lam_scale_min: f32,
+        lam_scale_max: f32,
+    ) -> Self {
+        let lam_scale_min = lam_scale_min.max(0.0);
+        let lam_scale_max = lam_scale_max.max(lam_scale_min);
+        LambdaCoupled {
+            inner: DssPid::new(k_init, k_min, k_max, gain_p, gain_i, adjust_every),
+            k_ref: k_init.max(1),
+            lam_scale_min,
+            lam_scale_max,
+        }
+    }
+
+    fn lam_scale(&self) -> f32 {
+        let raw = self.inner.k as f32 / self.k_ref as f32;
+        raw.clamp(self.lam_scale_min, self.lam_scale_max)
+    }
+}
+
+impl StalenessController for LambdaCoupled {
+    fn name(&self) -> &'static str {
+        "lambda_coupled"
+    }
+
+    fn current(&self) -> Decision {
+        Decision { k: self.inner.k, lam_scale: self.lam_scale() }
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        self.inner.on_window(obs);
+        self.current()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(window: u64, t_c: f64, t_ar: f64) -> WindowObs {
+        WindowObs { window, iteration: window * 4, t_compute: t_c, t_allreduce: t_ar }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = Fixed::new(3);
+        assert_eq!(c.current(), Decision { k: 3, lam_scale: 1.0 });
+        for w in 0..20 {
+            let d = c.on_window(&obs(w, 1e-3, 1.0)); // huge t_AR: would tempt any adaptive policy
+            assert_eq!(d, Decision { k: 3, lam_scale: 1.0 });
+        }
+    }
+
+    #[test]
+    fn dss_pid_stays_within_bounds() {
+        // Absurd ratios in both directions must never push k out of range.
+        let mut c = DssPid::new(2, 1, 4, 0.5, 0.1, 1);
+        for w in 0..50 {
+            let d = c.on_window(&obs(w, 1e-6, 10.0)); // ratio 1e7
+            assert!((1..=4).contains(&d.k), "k={} escaped bounds", d.k);
+        }
+        assert_eq!(c.current().k, 4);
+        for w in 50..100 {
+            let d = c.on_window(&obs(w, 10.0, 1e-6)); // ratio 1e-7
+            assert!((1..=4).contains(&d.k), "k={} escaped bounds", d.k);
+        }
+        assert_eq!(c.current().k, 1);
+    }
+
+    #[test]
+    fn dss_pid_moves_monotonically_toward_target() {
+        // With a constant ratio of 3, k must climb 1 → 3 one step at a
+        // time, never overshoot, and then hold.
+        let mut c = DssPid::new(1, 1, 8, 0.5, 0.1, 1);
+        let mut ks = Vec::new();
+        for w in 0..20 {
+            ks.push(c.on_window(&obs(w, 1e-3, 3e-3)).k);
+        }
+        for pair in ks.windows(2) {
+            assert!(pair[1] >= pair[0], "non-monotone approach: {ks:?}");
+            assert!(pair[1] - pair[0] <= 1, "jumped more than one: {ks:?}");
+        }
+        assert_eq!(*ks.last().unwrap(), 3, "did not settle on target: {ks:?}");
+        // settled: further identical evidence must not oscillate
+        for w in 20..40 {
+            assert_eq!(c.on_window(&obs(w, 1e-3, 3e-3)).k, 3);
+        }
+    }
+
+    #[test]
+    fn dss_pid_ignores_empty_evidence() {
+        let mut c = DssPid::new(2, 1, 8, 0.5, 0.1, 1);
+        for w in 0..10 {
+            assert_eq!(c.on_window(&obs(w, 0.0, 0.0)).k, 2);
+            assert_eq!(c.on_window(&obs(w, 1e-3, 0.0)).k, 2);
+        }
+    }
+
+    #[test]
+    fn dss_pid_respects_adjust_every() {
+        let mut c = DssPid::new(1, 1, 8, 1.0, 0.0, 3);
+        let mut changes = 0;
+        let mut prev = 1;
+        for w in 0..9 {
+            let k = c.on_window(&obs(w, 1e-3, 8e-3)).k;
+            if k != prev {
+                changes += 1;
+                prev = k;
+            }
+        }
+        assert!(changes <= 3, "changed {changes}× in 9 windows with adjust_every=3");
+    }
+
+    #[test]
+    fn lambda_coupled_scales_with_k_and_stays_bounded() {
+        let mut c = LambdaCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0);
+        assert_eq!(c.current().lam_scale, 1.0);
+        // drive k up; λ scale must track k/k_ref and respect the cap
+        let mut last = c.current();
+        for w in 0..40 {
+            last = c.on_window(&obs(w, 1e-4, 1.0));
+            assert!(
+                last.lam_scale >= 0.25 && last.lam_scale <= 4.0,
+                "λ scale {} out of bounds",
+                last.lam_scale
+            );
+            assert!((last.lam_scale - (last.k as f32).clamp(0.25, 4.0)).abs() < 1e-6);
+        }
+        assert_eq!(last.k, 8);
+        assert_eq!(last.lam_scale, 4.0, "cap must bind at k=8, k_ref=1");
+    }
+
+    #[test]
+    fn lambda_coupled_scales_down_too() {
+        let mut c = LambdaCoupled::new(4, 1, 8, 0.5, 0.1, 1, 0.25, 4.0);
+        let mut last = c.current();
+        for w in 0..40 {
+            last = c.on_window(&obs(w, 1.0, 1e-6));
+        }
+        assert_eq!(last.k, 1);
+        assert_eq!(last.lam_scale, 0.25);
+    }
+
+    #[test]
+    fn controllers_are_deterministic() {
+        // Two instances fed the same stream must agree exactly — the
+        // property the rendezvous window schedule rests on.
+        let mk = || LambdaCoupled::new(1, 1, 6, 0.5, 0.1, 2, 0.5, 3.0);
+        let (mut a, mut b) = (mk(), mk());
+        for w in 0..100 {
+            let o = obs(w, 1e-3, ((w % 7) as f64 + 1.0) * 1e-3);
+            assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
+        }
+    }
+}

@@ -8,7 +8,9 @@
 //!   simulated-MPI collectives with non-blocking semantics
 //!   ([`comm`]), the stale-synchronous overlap engine and the paper's
 //!   Algorithm 1 ([`algo::dcs3gd`]), the SSGD / ASGD / DC-ASGD baselines
-//!   ([`algo`], [`ps`]), optimizers and the paper's LR/weight-decay
+//!   ([`algo`], [`ps`]), the elastic control plane — online staleness
+//!   adaptation, fault injection, heartbeat detection and checkpoint
+//!   recovery ([`control`]) — optimizers and the paper's LR/weight-decay
 //!   schedules ([`optim`]), a virtual-time engine for the Eq. 13/14
 //!   timing analysis ([`simtime`]), a synthetic ImageNet-style dataset
 //!   ([`data`]), metrics ([`metrics`]) and a config system ([`config`]).
@@ -28,6 +30,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod comm;
 pub mod config;
+pub mod control;
 pub mod data;
 pub mod dc;
 pub mod metrics;
@@ -44,6 +47,7 @@ pub mod prelude {
     pub use crate::algo::{run_experiment, Algo, RunReport};
     pub use crate::comm::{AllReduceAlgo, Group, NetModel};
     pub use crate::config::ExperimentConfig;
+    pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;
     pub use crate::metrics::Recorder;
     pub use crate::optim::{LrSchedule, MomentumSgd, Optimizer};

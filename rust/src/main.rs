@@ -13,6 +13,7 @@ use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
 use dcs3gd::comm::{AllReduceAlgo, NetModel};
 use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind};
 use dcs3gd::model::meta::discover_variants;
 use dcs3gd::simtime::ComputeModel;
 
@@ -23,12 +24,19 @@ USAGE:
   dcs3gd train [--config FILE] [--variant V] [--algo A] [--nodes N]
                [--local-batch B] [--steps S] [--lam0 L] [--staleness K]
                [--eval-every E] [--out-dir DIR] [--time-from-wall]
+               [--control-policy P] [--k-min K] [--k-max K]
+               [--adjust-every W] [--snapshot-every W]
+               [--heartbeat-timeout S] [--restore-s S]
+               [--fault-kind F --fault-rank R --fault-at T]
+               [--fault-factor X] [--fault-duration S] [--fault-extra S]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
 
-Algorithms: ssgd | s3gd | dcs3gd | asgd | dcasgd
-Variants:   linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
+Algorithms:       ssgd | s3gd | dcs3gd | asgd | dcasgd
+Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
+Control policies: fixed | dss_pid | lambda_coupled (elastic staleness)
+Fault kinds:      kill | slow | delay (virtual-time chaos injection)
 ";
 
 fn main() {
@@ -83,6 +91,33 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.warmup_stop_frac =
         args.get_f64("warmup-stop-frac", cfg.warmup_stop_frac as f64)? as f32;
     cfg.eval_every = args.get_u64("eval-every", cfg.eval_every)?;
+    // elastic control plane
+    if let Some(p) = args.get("control-policy") {
+        cfg.control.policy = ControlPolicy::parse(p)?;
+    }
+    cfg.control.k_min = args.get_usize("k-min", cfg.control.k_min)?;
+    cfg.control.k_max = args.get_usize("k-max", cfg.control.k_max)?;
+    cfg.control.adjust_every = args.get_u64("adjust-every", cfg.control.adjust_every)?;
+    cfg.control.gain_p = args.get_f64("gain-p", cfg.control.gain_p)?;
+    cfg.control.gain_i = args.get_f64("gain-i", cfg.control.gain_i)?;
+    cfg.control.snapshot_every = args.get_u64("snapshot-every", cfg.control.snapshot_every)?;
+    cfg.control.heartbeat_timeout_s =
+        args.get_f64("heartbeat-timeout", cfg.control.heartbeat_timeout_s)?;
+    cfg.control.restore_s = args.get_f64("restore-s", cfg.control.restore_s)?;
+    if let Some(kind) = args.get("fault-kind") {
+        let rank = args.get_usize("fault-rank", 0)?;
+        let at_s = args.get_f64("fault-at", 0.0)?;
+        let kind = match kind {
+            "kill" => FaultKind::Kill,
+            "slow" => FaultKind::Slow {
+                factor: args.get_f64("fault-factor", 2.0)?,
+                duration_s: args.get_f64("fault-duration", 1.0)?,
+            },
+            "delay" => FaultKind::Delay { extra_s: args.get_f64("fault-extra", 0.5)? },
+            other => bail!("unknown --fault-kind {other:?} (kill | slow | delay)"),
+        };
+        cfg.control.faults.push(FaultEvent { rank, at_s, kind });
+    }
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }
@@ -119,6 +154,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         "sim time {:.2}s | wall {:.2}s | best val err {:.3}",
         report.sim_time_s, report.wall_time_s, report.best_val_err
     );
+    if cfg.control.policy != ControlPolicy::Fixed || !cfg.control.faults.is_empty() {
+        let recs = report.control.records();
+        let final_k = recs.last().map(|r| r.k).unwrap_or(cfg.staleness);
+        println!(
+            "control: policy={} k changes={} final k={} fault/recovery events={}",
+            cfg.control.policy.name(),
+            report.control.k_changes(),
+            final_k,
+            report.control.events().len(),
+        );
+    }
     Ok(())
 }
 

@@ -192,6 +192,29 @@ impl Recorder {
         Ok(())
     }
 
+    /// The validation curve as a JSON array (part of the run's metrics
+    /// JSON export, next to the control plane's decision trace).
+    pub fn evals_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        // NaN/∞ (diverged runs) have no JSON representation → null.
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let evals = self.evals();
+        Json::Arr(
+            evals
+                .iter()
+                .map(|e| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("iteration".to_string(), Json::Num(e.iteration as f64));
+                    m.insert("epoch".into(), Json::Num(e.epoch as f64));
+                    m.insert("sim_time".into(), num(e.sim_time));
+                    m.insert("val_loss".into(), num(e.val_loss as f64));
+                    m.insert("val_err".into(), num(e.val_err as f64));
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
     /// Write evals as CSV.
     pub fn write_evals_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let inner = self.inner.lock().unwrap();
@@ -263,6 +286,20 @@ mod tests {
         rec.record_eval(EvalRecord { iteration: 30, epoch: 2, sim_time: 3.0, val_loss: 1.5, val_err: 0.6 });
         assert_eq!(rec.last_val_err(), Some(0.6));
         assert_eq!(rec.best_val_err(), Some(0.4));
+    }
+
+    #[test]
+    fn evals_export_as_json() {
+        let rec = Recorder::new();
+        rec.record_eval(EvalRecord { iteration: 10, epoch: 0, sim_time: 1.5, val_loss: 2.0, val_err: 0.8 });
+        let j = rec.evals_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("iteration").unwrap().as_f64(), Some(10.0));
+        let err = arr[0].get("val_err").unwrap().as_f64().unwrap();
+        assert!((err - 0.8).abs() < 1e-6, "val_err {err}");
+        // must reparse as valid JSON
+        assert!(crate::util::Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

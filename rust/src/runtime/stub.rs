@@ -1,0 +1,106 @@
+//! API-compatible stand-in for the PJRT runtime when the crate is built
+//! without the `pjrt` feature (the offline default).
+//!
+//! [`ComputeServer::start`] always fails — with an actionable message —
+//! so any config that selects an artifact variant errors out cleanly at
+//! startup instead of at link time. Nothing else can be reached: the
+//! only constructor fails, so the remaining methods are unreachable by
+//! construction.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::{ArtifactMeta, StepBackend};
+
+/// Stub compute server; cannot be constructed.
+pub struct ComputeServer {
+    meta: ArtifactMeta,
+}
+
+impl ComputeServer {
+    /// Always fails: artifact execution needs the `pjrt` feature.
+    pub fn start(variant_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "artifact variant {:?} needs the PJRT runtime, but this build has no `pjrt` \
+             feature — rebuild with `--features pjrt` (plus the vendored `xla` dependency, \
+             see rust/Cargo.toml) or use the pure-rust `linear` variant",
+            variant_dir.as_ref().display().to_string()
+        )
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn backend(&self) -> XlaBackend {
+        unreachable!("stub ComputeServer cannot be constructed")
+    }
+
+    /// Mirror of the PJRT `dc_step` entry point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dc_step(
+        &self,
+        _g: &[f32],
+        _d: &[f32],
+        _v: &[f32],
+        _w: &[f32],
+        _eta: f32,
+        _mu: f32,
+        _lam0: f32,
+        _wd: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        unreachable!("stub ComputeServer cannot be constructed")
+    }
+}
+
+/// Stub backend handle; cannot be obtained (see [`ComputeServer`]).
+pub struct XlaBackend {
+    _private: (),
+}
+
+impl XlaBackend {
+    pub fn last_exec_s(&self) -> f64 {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+}
+
+impl StepBackend for XlaBackend {
+    fn n_params(&self) -> usize {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+
+    fn batch_size(&self) -> usize {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+
+    fn train_step(
+        &mut self,
+        _w: &[f32],
+        _x: &[f32],
+        _y: &[i32],
+        _grad_out: &mut [f32],
+    ) -> (f32, f32) {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+
+    fn eval_step(&mut self, _w: &[f32], _x: &[f32], _y: &[i32]) -> (f32, f32) {
+        unreachable!("stub XlaBackend cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_fails_with_actionable_message() {
+        // (no unwrap_err: ComputeServer deliberately has no Debug impl)
+        let err = ComputeServer::start("artifacts/tiny_cnn_b16")
+            .err()
+            .expect("stub start must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+        assert!(msg.contains("linear"), "no fallback hint: {msg}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Integration tests for the elastic control plane: fault-tolerant
+//! recovery (kill → heartbeat detect → snapshot restore → converge) and
+//! straggler mitigation (adaptive k beating fixed k on virtual
+//! wall-clock at near-equal loss).
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::{ControlPolicy, FaultPlan};
+use dcs3gd::simtime::ComputeModel;
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(4)
+        .local_batch(16)
+        .steps(150)
+        .eta_single(0.04)
+        .base_batch(16)
+        .data(2048, 512, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .net(NetModel::default())
+        .build()
+}
+
+#[test]
+fn mid_run_kill_recovers_from_checkpoint_and_converges() {
+    // Kill worker 2 at t = 0.5s (≈ step 31 of 150). By then the leader
+    // has refreshed the snapshot several times (every 5 windows), so
+    // recovery must come from a checkpoint, not a cold restart, and the
+    // run must still converge.
+    let mut cfg = base_cfg("kill_recovery");
+    cfg.control.faults = FaultPlan::new().kill(2, 0.5);
+    cfg.control.snapshot_every = 5;
+    cfg.control.heartbeat_timeout_s = 0.3;
+    cfg.control.restore_s = 0.1;
+    let report = run_experiment(&cfg).unwrap();
+
+    let events = report.control.events();
+    assert_eq!(events.len(), 1, "expected exactly one recovery event, got {events:?}");
+    let ev = &events[0];
+    assert_eq!(ev.worker, 2);
+    let desc = ev.event.as_deref().unwrap();
+    assert!(desc.contains("kill@0.5"), "event description {desc:?}");
+    assert!(
+        desc.contains("restored_from=snapshot@"),
+        "recovery did not come from a checkpoint: {desc:?}"
+    );
+    // Downtime accounting: detection (heartbeat timeout) + restore must
+    // appear on the recovered worker's clock.
+    assert!(ev.sim_time >= 0.5 + cfg.control.heartbeat_timeout_s + cfg.control.restore_s - 1e-9);
+
+    // ...and the run still learns (chance err for 10 classes is 0.9).
+    assert!(
+        report.final_val_err < 0.75,
+        "no convergence after recovery: val err {}",
+        report.final_val_err
+    );
+    assert!(report.final_train_loss.is_finite());
+}
+
+#[test]
+fn kill_before_any_snapshot_cold_restarts_and_survives() {
+    let mut cfg = base_cfg("kill_cold");
+    cfg.control.faults = FaultPlan::new().kill(1, 0.02); // ≈ step 1
+    cfg.control.snapshot_every = 1000; // never refreshed in 150 steps
+    cfg.control.heartbeat_timeout_s = 0.1;
+    cfg.control.restore_s = 0.05;
+    let report = run_experiment(&cfg).unwrap();
+    let events = report.control.events();
+    assert_eq!(events.len(), 1);
+    assert!(
+        events[0].event.as_deref().unwrap().contains("restored_from=init"),
+        "expected cold restart: {:?}",
+        events[0].event
+    );
+    assert!(report.final_val_err < 0.75, "val err {}", report.final_val_err);
+}
+
+#[test]
+fn faulty_runs_are_deterministic() {
+    let mk = || {
+        let mut cfg = base_cfg("kill_det");
+        cfg.control.faults =
+            FaultPlan::new().kill(2, 0.5).slow(1, 0.2, 2.0, 0.3).delay(3, 0.4, 0.05);
+        cfg.control.snapshot_every = 5;
+        cfg
+    };
+    let a = run_experiment(&mk()).unwrap();
+    let b = run_experiment(&mk()).unwrap();
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    assert_eq!(a.final_val_err, b.final_val_err);
+    assert_eq!(a.sim_time_s, b.sim_time_s);
+    assert_eq!(a.control.records().len(), b.control.records().len());
+}
+
+#[test]
+fn adaptive_k_mitigates_straggler_at_equal_loss() {
+    // The acceptance scenario at test scale: 2× straggler + slow
+    // network; dss_pid must cut virtual wall-clock ≥10% below fixed-k
+    // at near-equal final loss.
+    let mk = |name: &str, policy: ControlPolicy| {
+        let mut cfg = base_cfg(name);
+        cfg.nodes = 8;
+        cfg.steps = 120;
+        cfg.compute = ComputeModel::uniform(2e-4).with_straggler(3, 2.0, 8);
+        cfg.net =
+            NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 1.2e6, algo: AllReduceAlgo::Ring };
+        cfg.control.policy = policy;
+        cfg.control.k_max = 6;
+        cfg
+    };
+    let fixed = run_experiment(&mk("strag_fixed", ControlPolicy::Fixed)).unwrap();
+    let adaptive = run_experiment(&mk("strag_dss", ControlPolicy::DssPid)).unwrap();
+    assert!(
+        adaptive.sim_time_s <= 0.90 * fixed.sim_time_s,
+        "adaptive {:.4}s vs fixed {:.4}s — less than 10% saved",
+        adaptive.sim_time_s,
+        fixed.sim_time_s
+    );
+    assert!(
+        adaptive.final_train_loss <= fixed.final_train_loss * 1.15,
+        "adaptive loss {} strayed from fixed {}",
+        adaptive.final_train_loss,
+        fixed.final_train_loss
+    );
+    // the mitigation must be visible in the decision trace
+    assert!(adaptive.control.k_changes() > 0);
+    assert!(adaptive.control.records().iter().any(|r| r.k > 1));
+}
+
+#[test]
+fn ssgd_logs_straggler_blocked_time() {
+    // SSGD wires the control plane in observation mode: the per-step
+    // blocked time (straggler signal) must show up in the trace.
+    let mut cfg = base_cfg("ssgd_obs");
+    cfg.algo = Algo::Ssgd;
+    cfg.steps = 30;
+    cfg.compute = ComputeModel::uniform(1e-3).with_straggler(1, 3.0, 4);
+    cfg.net = NetModel::instant();
+    let report = run_experiment(&cfg).unwrap();
+    let recs = report.control.records();
+    assert_eq!(recs.len(), 30, "one record per iteration");
+    // rank 0 computes 16 ms/step but waits for the 48 ms straggler:
+    // blocked ≈ 32 ms on (nearly) every step after the first.
+    let blocked: Vec<f64> = recs.iter().skip(1).map(|r| r.blocked_s).collect();
+    assert!(
+        blocked.iter().filter(|&&b| b > 0.01).count() >= blocked.len() / 2,
+        "straggler wait not captured: {blocked:?}"
+    );
+}
+
+#[test]
+fn control_toml_drives_an_elastic_run() {
+    // End-to-end: a TOML [control] table steers a real run.
+    let doc = r#"
+        name = "toml_elastic"
+        variant = "linear"
+        algo = "dc_s3gd"
+        nodes = 4
+        local_batch = 16
+        steps = 40
+
+        [optim]
+        eta_single = 0.05
+        base_batch = 16
+
+        [data]
+        n_train = 1024
+        n_val = 256
+
+        [control]
+        policy = "dss_pid"
+        k_min = 1
+        k_max = 4
+    "#;
+    let mut cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+    cfg.compute = ComputeModel::uniform(1e-5);
+    cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
+    let report = run_experiment(&cfg).unwrap();
+    assert!(report.control.records().iter().map(|r| r.k).max().unwrap() > 1);
+    assert!(report.final_train_loss.is_finite());
+}
