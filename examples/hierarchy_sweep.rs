@@ -1,0 +1,149 @@
+//! Hierarchy sweep: quantify the t_AR win of the hierarchical
+//! (Layered-SGD) collective schedule over the flat ring at 128–1024
+//! simulated ranks, then run the `schedule_coupled` control policy end
+//! to end and show its (k, schedule) decisions landing in the run's
+//! metrics JSON.
+//!
+//! Part 1 is pure cost-model analysis on the default Aries-like
+//! dragonfly: the flat ring pays 2(N−1) α-terms while the hierarchical
+//! schedule pays 2(m−1) local + 2(G−1) global, so from N ≈ 256 the
+//! grouped schedule wins at paper-scale payloads — the headroom the
+//! Eq. 14 bound `max(t_C, t_AR)` leaves on the table when t_AR is
+//! treated as opaque.
+//!
+//! Part 2 trains the linear model on a latency-dominated flat fabric
+//! with a fast dragonfly available: the `schedule_coupled` policy must
+//! switch the collective to `hierarchical`, cut the virtual wall-clock
+//! vs the fixed flat-ring run, and export the decision trace (schedule
+//! names + local/global phase split) into `runs/hierarchy/*_run.json`.
+//!
+//! ```sh
+//! cargo run --release --example hierarchy_sweep [-- fast]
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::ControlPolicy;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+/// ResNet-20 / ResNet-50 parameter counts — the paper's payloads.
+const PAYLOADS: [(&str, usize); 3] =
+    [("tiny", 10_000), ("resnet20", 271_690), ("resnet50", 25_600_000)];
+
+fn sweep() {
+    let net = NetModel::default();
+    println!("== t_AR: flat ring vs hierarchical (default dragonfly links) ==");
+    for (name, elems) in PAYLOADS {
+        println!("\n{name} ({elems} f32):");
+        println!(
+            "{:>6} {:>6} {:>5} {:>12} {:>12} {:>9} {:>8}",
+            "N", "G", "m", "t_ring", "t_hier", "global%", "speedup"
+        );
+        for n in [128usize, 256, 512, 1024] {
+            let fly = Dragonfly::for_nodes(n);
+            let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(elems, n);
+            let p = NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net }
+                .allreduce_phases(elems, n);
+            println!(
+                "{n:>6} {:>6} {:>5} {ring:>12.3e} {:>12.3e} {:>8.1}% {:>7.2}x",
+                fly.groups,
+                fly.nodes_per_group,
+                p.total(),
+                100.0 * p.global_s / p.total().max(1e-30),
+                ring / p.total(),
+            );
+        }
+    }
+    println!(
+        "\nReading: the hierarchical schedule wins wherever the ring's 2(N-1)\n\
+         latency terms dominate — from N=256 at the ResNet-20 payload — and\n\
+         loses where bandwidth dominates (ResNet-50 at small N): exactly the\n\
+         split a schedule-aware controller can arbitrate per window.\n"
+    );
+}
+
+fn cfg(name: &str, policy: ControlPolicy, steps: u64) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(8)
+        .local_batch(16)
+        .steps(steps)
+        .eta_single(0.02)
+        .base_batch(16)
+        .data(2048, 256, 0.5)
+        .compute(ComputeModel::uniform(1e-5))
+        // latency-dominated flat fabric: the ring is the bottleneck
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 2e6, algo: AllReduceAlgo::Ring })
+        // ...but a fast dragonfly is available to the scheduler
+        .dragonfly(Dragonfly {
+            groups: 4,
+            nodes_per_group: 2,
+            alpha_local_s: 1e-6,
+            beta_local: 1e9,
+            alpha_global_s: 2e-6,
+            beta_global: 2e8,
+        })
+        .control_policy(policy)
+        .k_bounds(1, 4)
+        .out_dir("runs/hierarchy")
+        .build()
+}
+
+fn summarize(label: &str, r: &RunReport) {
+    let comm = r.control.comm_summary();
+    println!(
+        "{label:<24} sim {:>8.4}s | iter {:>9.6}s | train loss {:.4} | schedule switches {} | t_AR global {:.1}%",
+        r.sim_time_s,
+        r.mean_iter_time,
+        r.final_train_loss,
+        comm.schedule_switches,
+        100.0 * comm.global_s / comm.total_s().max(1e-30),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+    let steps = if fast { 40 } else { 200 };
+
+    sweep();
+
+    println!("== end to end: fixed flat ring vs schedule_coupled (8 ranks) ==");
+    let fixed = run_experiment(&cfg("hier_fixed_ring", ControlPolicy::Fixed, steps))?;
+    let coupled = run_experiment(&cfg("hier_coupled", ControlPolicy::ScheduleCoupled, steps))?;
+    summarize("fixed (flat ring)", &fixed);
+    summarize("schedule_coupled", &coupled);
+    let speedup = fixed.sim_time_s / coupled.sim_time_s;
+    println!("\nschedule_coupled speedup: {speedup:.2}x");
+    assert!(
+        coupled.control.records().iter().any(|r| r.schedule.as_deref() == Some("hierarchical")),
+        "controller never switched to the hierarchical schedule"
+    );
+    assert!(speedup > 1.0, "schedule_coupled must beat the fixed flat ring here");
+
+    // The decision trace — (k, schedule) per window with the phase
+    // split — must be in the metrics JSON export.
+    let text = std::fs::read_to_string("runs/hierarchy/hier_coupled_run.json")?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad run json: {e}"))?;
+    let control = json.get("control").and_then(Json::as_arr).expect("control trace");
+    let hier_windows = control
+        .iter()
+        .filter(|r| r.get("schedule").and_then(Json::as_str) == Some("hierarchical"))
+        .count();
+    println!(
+        "decision trace: {} records in runs/hierarchy/hier_coupled_run.json ({} hierarchical windows)",
+        control.len(),
+        hier_windows
+    );
+    assert!(hier_windows > 0);
+    let comm = json.get("comm").expect("comm phase summary");
+    println!(
+        "comm summary: local {:.6}s, global {:.6}s over {} rounds",
+        comm.get("local_s").and_then(Json::as_f64).unwrap_or(0.0),
+        comm.get("global_s").and_then(Json::as_f64).unwrap_or(0.0),
+        comm.get("rounds").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+    Ok(())
+}

@@ -1,14 +1,23 @@
 //! Bench: the communication substrate.
 //!
-//! * wire-level ring all-reduce wall time vs payload size and rank count
-//!   (the real data-movement path of `comm::ring`),
+//! * wire-level ring and hierarchical all-reduce wall time vs payload
+//!   size and rank count (the real data-movement paths of `comm::ring`
+//!   and `comm::hier`),
 //! * rendezvous-collective overhead (the semantics layer the engines use),
-//! * the α-β model's predicted t_AR across algorithms — the numbers the
-//!   Eq. 13/14 analysis feeds on.
+//! * the modelled t_AR across schedules — the numbers the Eq. 13/14
+//!   analysis feeds on, including the ring-vs-hierarchical crossover
+//!   the `schedule_coupled` control policy exploits: on the default
+//!   dragonfly the hierarchical schedule beats the flat ring from
+//!   N ≥ 256 at the ResNet-20 payload.
 
 use dcs3gd::bench_util::{black_box, Bencher};
-use dcs3gd::comm::{ring::ring_network, AllReduceAlgo, Group, NetModel};
+use dcs3gd::comm::{
+    hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
+};
 use dcs3gd::util::Rng;
+
+/// ResNet-20 parameter count — the repo's canonical payload.
+const RESNET20: usize = 271_690;
 
 fn bench_ring(b: &mut Bencher, n_ranks: usize, len: usize) {
     b.bench_elems(&format!("ring/wire n={n_ranks} len={len}"), len, || {
@@ -31,6 +40,31 @@ fn bench_ring(b: &mut Bencher, n_ranks: usize, len: usize) {
     });
 }
 
+fn bench_hier(b: &mut Bencher, n_ranks: usize, nodes_per_group: usize, len: usize) {
+    b.bench_elems(
+        &format!("hier/wire n={n_ranks} m={nodes_per_group} len={len}"),
+        len,
+        || {
+            let comms = hier_network(n_ranks, nodes_per_group);
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        let mut rng = Rng::keyed(1, c.rank() as u64, 0);
+                        let mut buf = vec![0.0f32; len];
+                        rng.fill_normal(&mut buf);
+                        let vol = c.allreduce(&mut buf);
+                        black_box((buf[0], vol.local_elems + vol.global_elems))
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        },
+    );
+}
+
 fn bench_rendezvous(b: &mut Bencher, n_ranks: usize, len: usize) {
     b.bench_elems(&format!("rendezvous n={n_ranks} len={len}"), len, || {
         let group = Group::new(n_ranks, NetModel::instant());
@@ -51,23 +85,27 @@ fn bench_rendezvous(b: &mut Bencher, n_ranks: usize, len: usize) {
 }
 
 fn main() {
-    println!("# allreduce bench — substrate cost (wall) + α-β model (sim)\n");
+    println!("# allreduce bench — substrate cost (wall) + schedule models (sim)\n");
     let mut b = Bencher::from_env();
     for &n in &[2usize, 4, 8] {
-        for &len in &[10_000usize, 271_690] {
-            // 271,690 = resnet20 parameter count
+        for &len in &[10_000usize, RESNET20] {
             bench_ring(&mut b, n, len);
         }
     }
+    for &(n, m) in &[(8usize, 4usize), (8, 2)] {
+        for &len in &[10_000usize, RESNET20] {
+            bench_hier(&mut b, n, m, len);
+        }
+    }
     for &n in &[4usize, 8] {
-        bench_rendezvous(&mut b, n, 271_690);
+        bench_rendezvous(&mut b, n, RESNET20);
     }
     b.report();
 
-    println!("\n# α-β model t_AR(n, N) (Aries-like defaults) — seconds");
+    println!("\n# modelled t_AR(n, N) (Aries-like defaults) — seconds");
     let net = NetModel::default();
     println!("{:>10} {:>6} {:>12} {:>12} {:>12}", "elems", "N", "ring", "tree", "flat");
-    for &len in &[10_000usize, 271_690, 25_600_000] {
+    for &len in &[10_000usize, RESNET20, 25_600_000] {
         for &n in &[8usize, 32, 128] {
             let t = |algo| NetModel { algo, ..net }.allreduce_time(len, n);
             println!(
@@ -79,4 +117,38 @@ fn main() {
         }
     }
     println!("\n(25.6M elems ≈ ResNet-50; flat column = the PS bottleneck)");
+
+    // The acceptance table: flat ring vs hierarchical Layered-SGD on
+    // the default dragonfly across 64–1024 simulated ranks, ResNet-20
+    // payload. The hierarchical schedule amortizes the 2(N−1) latency
+    // terms into 2(m−1) local + 2(G−1) global — the win the
+    // schedule_coupled policy picks up at scale.
+    println!("\n# ring vs hierarchical (default dragonfly links), {RESNET20} f32");
+    println!(
+        "{:>6} {:>6} {:>5} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "N", "G", "m", "t_ring", "t_hier", "local", "global", "speedup"
+    );
+    let mut any_win = false;
+    for n in [64usize, 128, 256, 512, 1024] {
+        let fly = Dragonfly::for_nodes(n);
+        let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(RESNET20, n);
+        let phases = NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net }
+            .allreduce_phases(RESNET20, n);
+        let speedup = ring / phases.total();
+        any_win |= n >= 256 && speedup > 1.0;
+        println!(
+            "{n:>6} {:>6} {:>5} {ring:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {speedup:>7.2}x",
+            fly.groups,
+            fly.nodes_per_group,
+            phases.total(),
+            phases.local_s,
+            phases.global_s,
+        );
+    }
+    assert!(any_win, "hierarchical schedule must beat ring at >= 256 ranks");
+    println!(
+        "\n(speedup > 1 from N=256: the flat ring pays 2(N-1) latency terms,\n\
+         the hierarchical schedule 2(m-1) local + 2(G-1) global — the\n\
+         crossover the schedule_coupled control policy rides)"
+    );
 }

@@ -21,17 +21,29 @@
 //!
 //! ## The elastic control plane
 //!
-//! The window length k is no longer necessarily static: at every
-//! wait/post boundary the engine consults its
+//! The window length k, the λ0 scale, and — since the collective
+//! schedule became first-class ([`crate::comm::CollectiveSchedule`]) —
+//! the *schedule itself* are no longer static: at every wait/post
+//! boundary the engine consults its
 //! [`crate::control::StalenessController`], which may move k within the
-//! configured bounds (and rescale λ0) from the observed t_C / t_AR
-//! ratio. Because the rendezvous collective requires every rank to run
-//! the identical window schedule, each posted update carries
-//! [`CTRL_SLOTS`] piggyback elements — this rank's mean per-step
-//! compute time and its last observed collective latency — so the
-//! all-reduced tail hands every rank the *same* cross-rank mean
-//! observation, and the deterministic controllers reach the same
-//! decision with no extra communication round.
+//! configured bounds, rescale λ0, switch the all-reduce between the
+//! flat ring and the hierarchical dragonfly schedule, and quarantine a
+//! persistent straggler inside its dragonfly group (the group keeps the
+//! base window while the other ranks' k is boosted, filling the
+//! straggler's wall time with useful local steps).
+//!
+//! Because the rendezvous collective requires every rank to post the
+//! identical round sequence, each posted update carries
+//! [`ctrl_slots`]`(N)` piggyback elements: the rank's mean per-step
+//! compute time and last observed collective latency (summed into
+//! cross-rank means), plus a rank-offset slot holding this rank's own
+//! t_C (the zero-padded all-gather trick) — so the all-reduced tail
+//! hands every rank the *same* observations, and the deterministic
+//! controllers reach the same (k, schedule, quarantine) decision with
+//! no extra communication round. The engine terminates on the
+//! cumulative *healthy-rank* step count, so a quarantined group (which
+//! runs fewer steps per window) still posts every round and the
+//! rendezvous sequence stays matched.
 //!
 //! Scripted faults ([`crate::control::FaultPlan`]) inject stragglers
 //! and crashes; a killed worker is detected by heartbeat timeout and
@@ -46,15 +58,23 @@ use anyhow::Result;
 use crate::algo::{Algo, RunReport, WorkerHarness};
 use crate::comm::Group;
 use crate::config::ExperimentConfig;
-use crate::control::{ControlRecord, WindowObs};
+use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
 use crate::dc::{self, DcHyper};
 use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
 
-/// Control-plane elements appended to each posted update: `[mean
-/// per-step t_C of the window, last observed t_AR]`.
-pub const CTRL_SLOTS: usize = 2;
+/// Fixed control-plane elements on each posted update: `[mean per-step
+/// t_C of the window, last observed t_AR]`, summed into cross-rank
+/// means by the all-reduce.
+pub const CTRL_BASE_SLOTS: usize = 2;
+
+/// Total piggyback width: the two mean slots plus one rank-offset slot
+/// per rank carrying that rank's own t_C (everyone else contributes
+/// zero there, so the sum *is* the per-rank value).
+pub fn ctrl_slots(n_ranks: usize) -> usize {
+    CTRL_BASE_SLOTS + n_ranks
+}
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let lam0 = if cfg.algo == Algo::S3gd { 0.0 } else { cfg.lam0 };
@@ -62,6 +82,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let group = Group::new(cfg.nodes, cfg.net);
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
+    let slots = ctrl_slots(cfg.nodes);
+    let topology = cfg.topology();
+    let env = ScheduleEnv {
+        net: cfg.net,
+        topology,
+        n_elems: n + slots,
+        n_ranks: cfg.nodes,
+    };
 
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
@@ -94,18 +122,25 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 
                 // Control plane: a per-worker controller instance; all
                 // instances see identical (all-reduced) observations, so
-                // their window schedules stay in lock-step across ranks.
-                let mut controller = cfg.control.build_controller(cfg.staleness.max(1));
+                // their window/schedule decisions stay in lock-step
+                // across ranks.
+                let mut controller =
+                    cfg.control.build_controller(cfg.staleness.max(1), env);
                 let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
+                let npg = topology.nodes_per_group;
 
                 // Current window's accumulated update and the previous
-                // posted window (handle + its Δw).
+                // posted window (handle + its Δw + its schedule).
                 let mut window_delta = vec![0.0f32; n];
                 let mut step_delta = vec![0.0f32; n];
                 let mut dist = vec![0.0f32; n];
                 let mut gtilde = vec![0.0f32; n];
-                let mut posted: Option<(crate::comm::PendingReduce, Vec<f32>)> = None;
+                let mut posted: Option<(
+                    crate::comm::PendingReduce,
+                    Vec<f32>,
+                    crate::comm::AllReduceAlgo,
+                )> = None;
 
                 let mut steps_in_window = 0u64;
                 let mut window_idx = 0u64; // completed windows so far
@@ -119,7 +154,23 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 let mut cur_window_start = 0u64;
                 let mut prev_window_start = 0u64;
 
-                for t in 0..cfg.steps {
+                // This rank's local iteration index, and the cumulative
+                // healthy-rank step count Σ decision.k over completed
+                // windows. The latter is identical on every rank (the
+                // decisions are), so using it for termination keeps the
+                // posted-round count matched even when a quarantined
+                // group runs shorter windows.
+                let mut t: u64 = 0;
+                let mut sched_steps: u64 = 0;
+
+                loop {
+                    // Termination check up front so a zero-step run does
+                    // no work at all (the post at the previous window's
+                    // end already happened, keeping rounds matched).
+                    if sched_steps >= cfg.steps {
+                        break;
+                    }
+
                     // Scripted crash? Detect (heartbeat timeout), restore
                     // from the snapshot store, pay the downtime.
                     if !ctx.chaos.is_inert() {
@@ -148,7 +199,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     steps_in_window += 1;
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
-                    let window_end = steps_in_window >= decision.k as u64;
+                    let my_k = decision.k_for(rank, npg);
+                    let window_end = steps_in_window >= my_k as u64;
+                    // k of the window being completed, as seen by
+                    // healthy ranks — the termination currency.
+                    let window_k = decision.k as u64;
 
                     let mut lam_used = 0.0f32;
                     let mut dist_norm = 0.0f64;
@@ -156,10 +211,10 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // Resolve the previous window's collective at this
                     // window's end: D_i per Eq. 9.
                     let d_opt: Option<&[f32]> = if window_end {
-                        if let Some((handle, posted_delta)) = posted.take() {
+                        if let Some((handle, posted_delta, posted_algo)) = posted.take() {
                             let post_time = handle.post_time;
                             let now_before_wait = ctx.clock.now();
-                            let (sum, t_done) = handle.wait(now_before_wait);
+                            let (sum, t_done, phases) = handle.wait_timed(now_before_wait);
                             ctx.clock.advance_to(t_done);
                             ctx.heartbeats.beat(rank, t_done);
                             let blocked = t_done - now_before_wait;
@@ -180,18 +235,42 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             }
 
                             // Wait/post boundary: hand the cross-rank mean
-                            // observations (payload tail) to the controller.
+                            // observations and the per-rank t_C split
+                            // (payload tail) to the controller.
                             let inv_n = 1.0 / cfg.nodes as f64;
-                            let tail = &sum[n..n + CTRL_SLOTS];
+                            let tail = &sum[n..n + slots];
                             let obs = WindowObs {
                                 window: window_idx,
                                 iteration: t,
                                 t_compute: tail[0] as f64 * inv_n,
                                 t_allreduce: tail[1] as f64 * inv_n,
+                                per_rank_t_c: tail[CTRL_BASE_SLOTS..]
+                                    .iter()
+                                    .map(|x| *x as f64)
+                                    .collect(),
                             };
-                            let prev_k = decision.k;
+                            let prev = decision;
                             decision = controller.on_window(&obs);
                             if rank == 0 {
+                                let mut notes: Vec<String> = Vec::new();
+                                if decision.k != prev.k {
+                                    notes.push(format!("k {} -> {}", prev.k, decision.k));
+                                }
+                                if decision.schedule != prev.schedule {
+                                    notes.push(format!(
+                                        "schedule {} -> {}",
+                                        prev.schedule.map_or("default", |s| s.name()),
+                                        decision.schedule.map_or("default", |s| s.name()),
+                                    ));
+                                }
+                                match (prev.quarantine, decision.quarantine) {
+                                    (None, Some(q)) => notes.push(format!(
+                                        "quarantine rank={} group={} k_group={}",
+                                        q.rank, q.group, q.k_group
+                                    )),
+                                    (Some(_), None) => notes.push("quarantine lifted".into()),
+                                    _ => {}
+                                }
                                 ctx.control_log.record(ControlRecord {
                                     worker: rank,
                                     window: window_idx,
@@ -199,11 +278,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     sim_time: ctx.clock.now(),
                                     k: decision.k,
                                     lam_scale: decision.lam_scale,
+                                    schedule: Some(posted_algo.name().to_string()),
                                     t_compute: obs.t_compute,
                                     t_allreduce: obs.t_allreduce,
+                                    t_ar_local: phases.local_s,
+                                    t_ar_global: phases.global_s,
                                     blocked_s: blocked,
-                                    event: (decision.k != prev_k)
-                                        .then(|| format!("k {prev_k} -> {}", decision.k)),
+                                    event: (!notes.is_empty()).then(|| notes.join("; ")),
                                 });
                             }
                             Some(&dist[..])
@@ -264,29 +345,37 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             });
                         }
 
-                        // Post this window's update (MPI_Iallreduce) with
-                        // the control piggyback, and immediately continue
-                        // computing — the overlap.
+                        // Post this window's update (MPI_Iallreduce) on
+                        // the decided schedule, with the control
+                        // piggyback, and immediately continue computing —
+                        // the overlap.
                         let per_step_t_c = window_t_c / steps_in_window as f64;
                         window_delta.push(per_step_t_c as f32);
                         window_delta.push(prev_t_ar as f32);
-                        debug_assert_eq!(window_delta.len(), n + CTRL_SLOTS);
-                        let handle = comm.iallreduce(&window_delta, ctx.clock.now());
+                        for r in 0..cfg.nodes {
+                            window_delta.push(if r == rank { per_step_t_c as f32 } else { 0.0 });
+                        }
+                        debug_assert_eq!(window_delta.len(), n + slots);
+                        let algo = decision.schedule.unwrap_or(cfg.net.algo);
+                        let handle =
+                            comm.iallreduce_sched(&window_delta, ctx.clock.now(), algo);
                         let mut posted_delta =
                             std::mem::replace(&mut window_delta, vec![0.0f32; n]);
                         posted_delta.truncate(n);
-                        posted = Some((handle, posted_delta));
+                        posted = Some((handle, posted_delta, algo));
                         window_idx += 1;
                         steps_in_window = 0;
                         window_t_c = 0.0;
                         prev_window_start = cur_window_start;
                         cur_window_start = t + 1;
+                        sched_steps += window_k;
                     }
+                    t += 1;
                 }
 
                 // Drain the final collective so every worker ends on the
                 // averaged weights (and no request leaks).
-                if let Some((handle, posted_delta)) = posted.take() {
+                if let Some((handle, posted_delta, _)) = posted.take() {
                     let (sum, t_done) = handle.wait(ctx.clock.now());
                     ctx.clock.advance_to(t_done);
                     dc::distance_to_average(&sum[..n], &posted_delta, cfg.nodes, &mut dist);
@@ -337,7 +426,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::NetModel;
+    use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
     use crate::control::{ControlPolicy, FaultPlan};
     use crate::simtime::ComputeModel;
 
@@ -378,6 +467,17 @@ mod tests {
     }
 
     #[test]
+    fn zero_steps_run_does_nothing() {
+        // Regression: the window-driven loop must not run a whole
+        // window (and a collective) before noticing steps == 0.
+        let mut cfg = base_cfg();
+        cfg.steps = 0;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.recorder.n_steps(), 0);
+        assert_eq!(report.sim_time_s, 0.0);
+    }
+
+    #[test]
     fn staleness_two_runs() {
         let mut cfg = base_cfg();
         cfg.staleness = 2;
@@ -399,13 +499,15 @@ mod tests {
         let h = WorkerHarness::prepare(&cfg).unwrap();
         assert_eq!(ck.weights.len(), h.n_params());
         assert!(crate::tensor::all_finite(&ck.weights));
-        // The metrics JSON (summary + control trace) must round-trip.
+        // The metrics JSON (summary + control trace + comm phases) must
+        // round-trip.
         let j = crate::util::Json::parse(
             &std::fs::read_to_string(dir.join("ckpt_test_run.json")).unwrap(),
         )
         .unwrap();
         assert_eq!(j.get("algo").unwrap().as_str(), Some("dcs3gd"));
         assert!(j.get("control").unwrap().as_arr().is_some());
+        assert!(j.get("comm").unwrap().get("rounds").is_some());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -453,7 +555,7 @@ mod tests {
         let mut cfg = base_cfg();
         cfg.steps = 30;
         cfg.compute = ComputeModel::uniform(1e-5); // t_C tiny: 1.6e-4/batch
-        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: crate::comm::AllReduceAlgo::Ring };
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
         let n = WorkerHarness::prepare(&cfg).unwrap().n_params();
         let t_ar = cfg.net.allreduce_time(n, cfg.nodes);
         let t_c = 16.0 * 1e-5;
@@ -476,6 +578,11 @@ mod tests {
         assert!(!recs.is_empty(), "control trace must be recorded");
         assert!(recs.iter().all(|r| r.k == 1), "fixed policy moved k");
         assert_eq!(report.control.k_changes(), 0);
+        // every window record names its schedule and the phases add up
+        for r in &recs {
+            assert_eq!(r.schedule.as_deref(), Some("ring"));
+            assert!(r.t_ar_local >= 0.0 && r.t_ar_global == 0.0);
+        }
     }
 
     #[test]
@@ -485,7 +592,7 @@ mod tests {
         let mut cfg = base_cfg();
         cfg.steps = 80;
         cfg.compute = ComputeModel::uniform(1e-5);
-        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: crate::comm::AllReduceAlgo::Ring };
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
         cfg.control.policy = ControlPolicy::DssPid;
         cfg.control.k_max = 6;
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
@@ -504,7 +611,7 @@ mod tests {
             cfg.net = NetModel {
                 alpha_s: 0.0,
                 beta_bytes_per_s: 1e6,
-                algo: crate::comm::AllReduceAlgo::Ring,
+                algo: AllReduceAlgo::Ring,
             };
             cfg.control.policy = policy;
             cfg.control.k_max = 6;
@@ -525,7 +632,7 @@ mod tests {
         let mut cfg = base_cfg();
         cfg.steps = 80;
         cfg.compute = ComputeModel::uniform(1e-5);
-        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: crate::comm::AllReduceAlgo::Ring };
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
         cfg.control.policy = ControlPolicy::LambdaCoupled;
         cfg.control.k_max = 4;
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
@@ -547,5 +654,119 @@ mod tests {
         assert!(a.sim_time_s > t_healthy, "slow fault added no time");
         assert_eq!(a.sim_time_s, b.sim_time_s, "fault injection not deterministic");
         assert_eq!(a.final_train_loss, b.final_train_loss);
+    }
+
+    // --- schedule-coupled control ---
+
+    /// A fabric where the flat ring is latency-dominated but the
+    /// hierarchical dragonfly is cheap: the schedule-coupled policy
+    /// must switch off the ring.
+    fn hier_favorable_cfg() -> ExperimentConfig {
+        let mut cfg = base_cfg();
+        cfg.steps = 60;
+        cfg.compute = ComputeModel::uniform(1e-5);
+        // slow flat fabric
+        cfg.net = NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 2e6, algo: AllReduceAlgo::Ring };
+        // fast dragonfly candidate: 2 groups of 2
+        cfg.dragonfly = Dragonfly {
+            groups: 2,
+            nodes_per_group: 2,
+            alpha_local_s: 1e-6,
+            beta_local: 1e9,
+            alpha_global_s: 2e-6,
+            beta_global: 2e8,
+        };
+        cfg.control.policy = ControlPolicy::ScheduleCoupled;
+        cfg.control.k_max = 4;
+        cfg
+    }
+
+    #[test]
+    fn schedule_coupled_switches_to_hierarchical_and_reports_phases() {
+        let cfg = hier_favorable_cfg();
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let recs = report.control.records();
+        assert!(
+            recs.iter().any(|r| r.schedule.as_deref() == Some("hierarchical")),
+            "schedule never switched (trace: {:?})",
+            recs.iter().filter_map(|r| r.schedule.clone()).collect::<Vec<_>>()
+        );
+        assert!(report.control.schedule_switches() >= 1);
+        // hierarchical windows must report a non-zero global phase
+        let hier_recs: Vec<_> = recs
+            .iter()
+            .filter(|r| r.schedule.as_deref() == Some("hierarchical"))
+            .collect();
+        assert!(hier_recs.iter().all(|r| r.t_ar_global > 0.0));
+        let summary = report.control.comm_summary();
+        assert!(summary.global_s > 0.0 && summary.local_s > 0.0);
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn schedule_coupled_beats_flat_fixed_on_hier_favorable_fabric() {
+        let coupled = hier_favorable_cfg();
+        let mut fixed = hier_favorable_cfg();
+        fixed.control.policy = ControlPolicy::Fixed;
+        let r_coupled = run(&coupled, WorkerHarness::prepare(&coupled).unwrap()).unwrap();
+        let r_fixed = run(&fixed, WorkerHarness::prepare(&fixed).unwrap()).unwrap();
+        assert!(
+            r_coupled.sim_time_s < r_fixed.sim_time_s,
+            "schedule-coupled {} not faster than fixed flat {}",
+            r_coupled.sim_time_s,
+            r_fixed.sim_time_s
+        );
+    }
+
+    #[test]
+    fn quarantine_boosts_healthy_ranks_and_is_logged() {
+        let mut cfg = base_cfg();
+        cfg.steps = 120;
+        cfg.staleness = 2;
+        // rank 3 persistently 3× slower; network instant so the only
+        // cost is the straggler's compute skew.
+        cfg.compute = ComputeModel::uniform(1e-4).with_straggler(3, 3.0, 4);
+        cfg.net = NetModel::instant();
+        cfg.dragonfly = Dragonfly { groups: 2, nodes_per_group: 2, ..Dragonfly::default() };
+        cfg.control.policy = ControlPolicy::ScheduleCoupled;
+        cfg.control.k_max = 8;
+        cfg.control.quarantine_after = 2;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let events = report.control.events();
+        assert!(
+            events.iter().any(|e| e
+                .event
+                .as_deref()
+                .is_some_and(|s| s.contains("quarantine rank=3"))),
+            "quarantine never engaged: {events:?}"
+        );
+        // rank 3 (group 1, with rank 2) must have recorded fewer local
+        // steps than the boosted healthy ranks.
+        let steps = report.recorder.steps();
+        let count = |w: usize| steps.iter().filter(|s| s.worker == w).count();
+        assert!(
+            count(3) < count(0),
+            "quarantined rank ran {} steps vs healthy {}",
+            count(3),
+            count(0)
+        );
+        // and its group-mate shares the group-local window
+        assert_eq!(count(2), count(3), "group members must share the window");
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn quarantine_runs_are_deterministic() {
+        let mut cfg = base_cfg();
+        cfg.steps = 80;
+        cfg.compute = ComputeModel::uniform(1e-4).with_straggler(1, 2.5, 4);
+        cfg.net = NetModel::instant();
+        cfg.control.policy = ControlPolicy::ScheduleCoupled;
+        cfg.control.quarantine_after = 2;
+        let a = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let b = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(a.sim_time_s, b.sim_time_s);
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(a.control.records(), b.control.records());
     }
 }

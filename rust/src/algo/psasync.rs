@@ -13,6 +13,15 @@
 //! costs the worker its detection + restore downtime before it rejoins
 //! (its weights are refreshed by the next PS pull anyway — the PS is
 //! the system of record, so there is no snapshot to restore).
+//!
+//! The schedule-aware comm refactor reaches this engine through the PS
+//! transfer cost: when the run's `NetModel` carries the hierarchical
+//! dragonfly schedule, [`crate::ps::PsClient::push_pull`] prices each
+//! worker's round-trip with `ptp_time_between(worker, 0, n)` — workers
+//! sharing rank 0's group (where the PS is hosted) ride the electrical
+//! links, everyone else crosses the optics. The many-to-few bottleneck
+//! the paper attributes to centralized schemes thus gains the placement
+//! asymmetry a real dragonfly imposes.
 
 use std::time::Instant;
 
@@ -155,6 +164,23 @@ mod tests {
         let cfg = base_cfg(Algo::DcAsgd);
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
         assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn asgd_trains_on_hierarchical_topology() {
+        // The PS round-trips price the dragonfly placement; the run must
+        // still converge and cost more sim time than an instant network.
+        let mut cfg = base_cfg(Algo::Asgd);
+        cfg.name = "ps_hier".into();
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        cfg.net = NetModel {
+            alpha_s: 1.5e-6,
+            beta_bytes_per_s: 10e9,
+            algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+        };
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
+        assert!(report.sim_time_s > 0.0);
     }
 
     #[test]

@@ -14,6 +14,19 @@
 //! checkpoint recovery), consults the controller at each boundary, and
 //! records the per-iteration blocked time — the straggler trace the
 //! elastic engines are judged against.
+//!
+//! The collective *schedule* does apply here: a `schedule_coupled`
+//! policy can run SSGD's blocking all-reduce on the hierarchical
+//! dragonfly schedule. SSGD has no piggyback channel, so its
+//! observations are rank-local — every rank sees a different blocked
+//! time. Feeding those into the controller would let the calibrated
+//! schedule switch fire on different windows on different ranks and
+//! unmatch the rounds, so the engine hands the controller **no
+//! collective-latency evidence** (`t_allreduce = 0`): the schedule pick
+//! reduces to the deterministic model argmin at bootstrap, identical on
+//! every rank, and the observed latency still reaches the metrics
+//! export through the [`ControlRecord`]. Cross-rank mean observations
+//! for SSGD (piggybacked like DC-S3GD's) are a ROADMAP follow-on.
 
 use std::time::Instant;
 
@@ -22,7 +35,7 @@ use anyhow::Result;
 use crate::algo::{RunReport, WorkerHarness};
 use crate::comm::Group;
 use crate::config::ExperimentConfig;
-use crate::control::{ControlRecord, WindowObs};
+use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
 use crate::model::Checkpoint;
 use crate::optim::build_optimizer;
 use crate::tensor;
@@ -32,6 +45,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let group = Group::new(cfg.nodes, cfg.net);
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
+    let env = ScheduleEnv {
+        net: cfg.net,
+        topology: cfg.topology(),
+        n_elems: n,
+        n_ranks: cfg.nodes,
+    };
 
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
@@ -55,8 +74,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 );
                 let mut g_mean = vec![0.0f32; n];
                 let mut delta = vec![0.0f32; n];
-                // Control plane (observation mode: k is pinned at 1).
-                let mut controller = cfg.control.build_controller(1);
+                // Control plane (observation mode: k is pinned at 1, but
+                // the schedule decision applies to the blocking
+                // all-reduce).
+                let mut controller = cfg.control.build_controller(1, env);
+                let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
 
                 for t in 0..cfg.steps {
@@ -83,9 +105,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = ctx.train_step(&w);
                     let t_c = ctx.clock.now() - t_before_step;
-                    // Blocking all-reduce of gradients: Eq. 13.
+                    // Blocking all-reduce of gradients on the decided
+                    // schedule: Eq. 13.
                     let now_before_wait = ctx.clock.now();
-                    let (sum, t_done) = comm.allreduce(&ctx.g, now_before_wait);
+                    let algo = decision.schedule.unwrap_or(cfg.net.algo);
+                    let (sum, t_done, phases) =
+                        comm.allreduce_sched(&ctx.g, now_before_wait, algo);
                     ctx.clock.advance_to(t_done);
                     ctx.heartbeats.beat(rank, t_done);
                     let inv_n = 1.0 / cfg.nodes as f32;
@@ -98,13 +123,18 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     tensor::add_assign(&mut w, &delta);
                     ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
 
-                    // Wait/post boundary: consult (k has no effect here,
-                    // but the straggler trace feeds the metrics export).
-                    let decision = controller.on_window(&WindowObs {
+                    // Wait/post boundary: consult (k has no effect here;
+                    // the schedule decision and the straggler trace feed
+                    // the metrics export). t_allreduce is withheld —
+                    // it is rank-local in SSGD and would break the
+                    // cross-rank determinism of the schedule switch
+                    // (see the module docs).
+                    decision = controller.on_window(&WindowObs {
                         window: t,
                         iteration: t,
                         t_compute: t_c,
-                        t_allreduce: t_done - now_before_wait,
+                        t_allreduce: 0.0,
+                        per_rank_t_c: Vec::new(),
                     });
                     if rank == 0 {
                         ctx.control_log.record(ControlRecord {
@@ -114,8 +144,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             sim_time: ctx.clock.now(),
                             k: 1,
                             lam_scale: decision.lam_scale,
+                            schedule: Some(algo.name().to_string()),
                             t_compute: t_c,
                             t_allreduce: t_done - now_before_wait,
+                            t_ar_local: phases.local_s,
+                            t_ar_global: phases.global_s,
                             blocked_s: t_done - now_before_wait,
                             event: None,
                         });
@@ -226,6 +259,36 @@ mod tests {
             report.mean_iter_time,
             t_slow
         );
+    }
+
+    #[test]
+    fn ssgd_runs_on_hierarchical_schedule() {
+        // Configure the collective as hierarchical: Eq. 13 must hold
+        // with the dragonfly t_AR, and the trace must carry the
+        // schedule name plus a non-zero global phase.
+        let mut cfg = base_cfg();
+        cfg.steps = 20;
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        cfg.compute = ComputeModel::uniform(1e-4);
+        cfg.net = NetModel {
+            alpha_s: 1.5e-6,
+            beta_bytes_per_s: 10e9,
+            algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+        };
+        let n = WorkerHarness::prepare(&cfg).unwrap().n_params();
+        let t_ar = cfg.net.allreduce_time(n, cfg.nodes);
+        assert!(t_ar > 0.0);
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let expect = 16.0 * 1e-4 + t_ar;
+        assert!(
+            (report.mean_iter_time - expect).abs() / expect < 0.05,
+            "iter {} vs t_C+t_AR {}",
+            report.mean_iter_time,
+            expect
+        );
+        let recs = report.control.records();
+        assert!(recs.iter().all(|r| r.schedule.as_deref() == Some("hierarchical")));
+        assert!(recs.iter().all(|r| r.t_ar_global > 0.0));
     }
 
     #[test]

@@ -307,8 +307,11 @@ impl WorkerCtx {
             sim_time: self.clock.now(),
             k,
             lam_scale,
+            schedule: None,
             t_compute: 0.0,
             t_allreduce: 0.0,
+            t_ar_local: 0.0,
+            t_ar_global: 0.0,
             blocked_s: recover_at - event.at_s,
             event: Some(format!(
                 "kill@{:.3}s detect@{:.3}s restored_from={restored_from}",
@@ -405,6 +408,9 @@ impl RunReport {
         m.insert("wall_time_s".into(), num(self.wall_time_s));
         m.insert("evals".into(), self.recorder.evals_json());
         m.insert("control".into(), self.control.to_json());
+        // Where the run's all-reduce time went: local vs global links,
+        // and how often the control plane switched schedules.
+        m.insert("comm".into(), self.control.comm_summary().to_json());
         Json::Obj(m)
     }
 

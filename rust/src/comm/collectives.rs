@@ -3,45 +3,38 @@
 //! production data-parallel runtime needs (weight sync at start-up,
 //! metric aggregation, early-stop votes).
 //!
-//! All are built on the same round-matched rendezvous as
-//! [`super::Comm::iallreduce`], so ordering and determinism guarantees
-//! carry over; timing uses the matching [`super::NetModel`] entries.
+//! These used to be emulated through a full-width all-reduce (each rank
+//! contributing an O(n·N) zero-padded vector and relying on a timing
+//! adjustment to hide the waste). They are now **native round kinds**
+//! on the rendezvous substrate: each rank posts exactly its own O(n)
+//! contribution, the round completes with the operation's real
+//! semantics (concatenate / deliver-root / sum), and the cost comes
+//! straight from the active [`super::CollectiveSchedule`]'s matching
+//! entry — no subtract-the-wrong-cost arithmetic.
 
 use std::sync::Arc;
 
-use super::Comm;
+use super::{Comm, RoundKind};
 
 impl Comm {
-    /// Broadcast `data` from `root` to all ranks. Non-roots pass their
-    /// buffer's length in `data` (contents ignored). Returns the root's
-    /// payload and this rank's completion time.
+    /// Broadcast `data` from `root` to all ranks. Non-roots' `data` is
+    /// ignored (pass `&[]`). Returns the root's payload and this rank's
+    /// completion time.
     pub fn broadcast(&mut self, data: &[f32], root: usize, now: f64) -> (Arc<Vec<f32>>, f64) {
-        // Implemented as an all-reduce where non-roots contribute zeros;
-        // cost adjusted to a log-tree broadcast.
-        let contribution: Vec<f32> = if self.rank() == root {
-            data.to_vec()
-        } else {
-            vec![0.0; data.len()]
-        };
-        let (sum, t) = self.allreduce(&contribution, now);
-        let n = self.n_ranks();
-        let net = self.net_model();
-        let t_adj = t - net.allreduce_time(data.len(), n) + net.bcast_time(data.len(), n);
-        (sum, t_adj.max(now))
+        assert!(root < self.n_ranks());
+        let contribution: &[f32] = if self.rank() == root { data } else { &[] };
+        let algo = self.net_model().algo;
+        let (payload, t, _) =
+            self.post(contribution, now, RoundKind::Broadcast { root }, algo).wait_timed(now);
+        (payload, t)
     }
 
-    /// All-gather: every rank contributes `data`; all receive the
-    /// rank-ordered concatenation.
+    /// All-gather: every rank contributes `data` (equal lengths); all
+    /// receive the rank-ordered concatenation.
     pub fn allgather(&mut self, data: &[f32], now: f64) -> (Vec<f32>, f64) {
-        let n = self.n_ranks();
-        let len = data.len();
-        // contribute into a rank-offset slot of a wide zero vector
-        let mut wide = vec![0.0f32; len * n];
-        wide[self.rank() * len..(self.rank() + 1) * len].copy_from_slice(data);
-        let (sum, t) = self.allreduce(&wide, now);
-        let net = self.net_model();
-        let t_adj = t - net.allreduce_time(len * n, n) + net.allgather_time(len, n);
-        (sum.as_ref().clone(), t_adj.max(now))
+        let algo = self.net_model().algo;
+        let (payload, t, _) = self.post(data, now, RoundKind::AllGather, algo).wait_timed(now);
+        (payload.as_ref().clone(), t)
     }
 
     /// Reduce-scatter: the sum is computed and rank i receives chunk i
@@ -50,12 +43,11 @@ impl Comm {
         let n = self.n_ranks();
         let len = data.len();
         let per = len.div_ceil(n);
-        let (sum, t) = self.allreduce(data, now);
+        let algo = self.net_model().algo;
+        let (sum, t, _) = self.post(data, now, RoundKind::ReduceScatter, algo).wait_timed(now);
         let start = (self.rank() * per).min(len);
         let end = ((self.rank() + 1) * per).min(len);
-        let net = self.net_model();
-        let t_adj = t - net.allreduce_time(len, n) + net.reduce_scatter_time(len, n);
-        (sum[start..end].to_vec(), t_adj.max(now))
+        (sum[start..end].to_vec(), t)
     }
 
     /// Global minimum of a scalar across ranks (negate+max via sum trick
@@ -73,44 +65,33 @@ impl Comm {
 }
 
 impl super::NetModel {
-    /// Log-tree broadcast cost.
+    /// Broadcast cost on the configured schedule.
     pub fn bcast_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
-        if n_ranks <= 1 {
-            return 0.0;
-        }
-        (n_ranks as f64).log2().ceil()
-            * (self.alpha_s + n_elems as f64 * 4.0 / self.beta_bytes_per_s)
+        self.schedule().bcast_phases(n_elems, n_ranks).total()
     }
 
-    /// Ring all-gather cost: (N−1) steps of the per-rank payload.
+    /// All-gather cost on the configured schedule (per-rank payload).
     pub fn allgather_time(&self, n_elems_per_rank: usize, n_ranks: usize) -> f64 {
-        if n_ranks <= 1 {
-            return 0.0;
-        }
-        (n_ranks as f64 - 1.0)
-            * (self.alpha_s + n_elems_per_rank as f64 * 4.0 / self.beta_bytes_per_s)
+        self.schedule().allgather_phases(n_elems_per_rank, n_ranks).total()
     }
 
-    /// Ring reduce-scatter cost: (N−1) steps of n/N elements.
+    /// Reduce-scatter cost on the configured schedule.
     pub fn reduce_scatter_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
-        if n_ranks <= 1 {
-            return 0.0;
-        }
-        let n = n_ranks as f64;
-        (n - 1.0) * (self.alpha_s + n_elems as f64 * 4.0 / n / self.beta_bytes_per_s)
+        self.schedule().reduce_scatter_phases(n_elems, n_ranks).total()
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use crate::comm::{Group, NetModel};
+    use crate::comm::{AllReduceAlgo, Dragonfly, Group, NetModel};
     use std::thread;
 
-    fn spawn<R: Send + 'static>(
+    fn spawn_with<R: Send + 'static>(
         n: usize,
+        net: NetModel,
         f: impl Fn(crate::comm::Comm) -> R + Send + Sync + 'static,
     ) -> Vec<R> {
-        let group = Group::new(n, NetModel::instant());
+        let group = Group::new(n, net);
         let f = std::sync::Arc::new(f);
         (0..n)
             .map(|r| {
@@ -124,10 +105,17 @@ mod tests {
             .collect()
     }
 
+    fn spawn<R: Send + 'static>(
+        n: usize,
+        f: impl Fn(crate::comm::Comm) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        spawn_with(n, NetModel::instant(), f)
+    }
+
     #[test]
     fn broadcast_delivers_root_payload() {
         let out = spawn(4, |mut c| {
-            let data = if c.rank() == 2 { vec![5.0, -1.0] } else { vec![0.0, 0.0] };
+            let data = if c.rank() == 2 { vec![5.0, -1.0] } else { vec![] };
             c.broadcast(&data, 2, 0.0).0.as_ref().clone()
         });
         for o in out {
@@ -173,6 +161,44 @@ mod tests {
         for (mn, mx) in out {
             assert_eq!(mn, -3.0);
             assert_eq!(mx, 3.0);
+        }
+    }
+
+    #[test]
+    fn timings_come_from_the_matching_schedule_entry() {
+        // The honest implementations must charge allgather_time for an
+        // allgather of the *per-rank* payload — not an all-reduce of the
+        // padded width — and likewise for broadcast.
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: AllReduceAlgo::Ring };
+        let len = 1000usize;
+        let out = spawn_with(4, net, move |mut c| {
+            let (_, t_ag) = c.allgather(&vec![1.0; len], 0.0);
+            let data: Vec<f32> = if c.rank() == 0 { vec![2.0; len] } else { vec![] };
+            let (_, t_bc) = c.broadcast(&data, 0, t_ag);
+            (t_ag, t_bc)
+        });
+        let expect_ag = net.allgather_time(len, 4);
+        let expect_bc = expect_ag + net.bcast_time(len, 4);
+        for (t_ag, t_bc) in out {
+            assert!((t_ag - expect_ag).abs() < 1e-15, "{t_ag} vs {expect_ag}");
+            assert!((t_bc - expect_bc).abs() < 1e-15, "{t_bc} vs {expect_bc}");
+        }
+        // sanity: the padded emulation would have cost the full width
+        assert!(net.allgather_time(len, 4) < net.allreduce_time(len * 4, 4));
+    }
+
+    #[test]
+    fn collectives_work_on_hierarchical_schedule() {
+        let d = Dragonfly { groups: 2, nodes_per_group: 2, ..Dragonfly::default() };
+        let net = NetModel { algo: AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let out = spawn_with(4, net, |mut c| {
+            let (g, t) = c.allgather(&[c.rank() as f32], 0.0);
+            (g, t)
+        });
+        let expect_t = net.allgather_time(1, 4);
+        for (g, t) in out {
+            assert_eq!(g, vec![0.0, 1.0, 2.0, 3.0]);
+            assert!((t - expect_t).abs() < 1e-15);
         }
     }
 

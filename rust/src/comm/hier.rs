@@ -1,0 +1,350 @@
+//! Wire-level hierarchical (Layered-SGD) all-reduce: the grouped
+//! schedule executed over real per-edge channels between worker
+//! threads.
+//!
+//! [`super::ring`] proves the flat ring schedule really computes the
+//! sum the rendezvous substrate reports; this module does the same for
+//! the [`super::schedule::Hierarchical`] schedule the cost model
+//! prices: each dragonfly group runs a ring all-reduce over its
+//! members (**local** links), the group leaders run a ring all-reduce
+//! across groups (**global** links), and each leader broadcasts the
+//! result back to its members (local links). Per-phase message volume
+//! is returned so `benches/allreduce.rs` can account local vs global
+//! bytes — the split the [`super::PhaseTimes`] model claims.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Message volume one rank moved, split by link class (f32 elements).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HierVolume {
+    pub local_elems: usize,
+    pub global_elems: usize,
+}
+
+/// Per-rank endpoint of a hierarchical network.
+pub struct HierComm {
+    rank: usize,
+    n: usize,
+    /// Group index and position within the group.
+    group: usize,
+    group_rank: usize,
+    group_len: usize,
+    n_groups: usize,
+    /// Intra-group ring (absent in singleton groups).
+    local_tx: Option<Sender<Vec<f32>>>,
+    local_rx: Option<Receiver<Vec<f32>>>,
+    /// Leader ring (leaders of multi-group networks only).
+    leader_tx: Option<Sender<Vec<f32>>>,
+    leader_rx: Option<Receiver<Vec<f32>>>,
+    /// Result fan-out: leader → members.
+    bcast_tx: Vec<Sender<Vec<f32>>>,
+    bcast_rx: Option<Receiver<Vec<f32>>>,
+}
+
+/// Build the hierarchical topology for `n` ranks in contiguous groups
+/// of `nodes_per_group` (the last group may be short). Rank `g·m` is
+/// group `g`'s leader.
+pub fn hier_network(n: usize, nodes_per_group: usize) -> Vec<HierComm> {
+    assert!(n >= 1);
+    let m = nodes_per_group.max(1);
+    let n_groups = n.div_ceil(m);
+
+    // Channel slots per rank, filled group by group then taken once.
+    let mut local_tx: Vec<Option<Sender<Vec<f32>>>> = (0..n).map(|_| None).collect();
+    let mut local_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..n).map(|_| None).collect();
+    let mut leader_tx: Vec<Option<Sender<Vec<f32>>>> = (0..n).map(|_| None).collect();
+    let mut leader_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..n).map(|_| None).collect();
+    let mut bcast_tx: Vec<Vec<Sender<Vec<f32>>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut bcast_rx: Vec<Option<Receiver<Vec<f32>>>> = (0..n).map(|_| None).collect();
+
+    for g in 0..n_groups {
+        let start = g * m;
+        let len = m.min(n - start);
+        if len > 1 {
+            // member i sends into channel i, read by member (i+1) % len
+            let chans: Vec<_> = (0..len).map(|_| channel()).collect();
+            let mut rxs: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(len);
+            for (tx, rx) in chans {
+                local_tx[start + rxs.len()] = Some(tx);
+                rxs.push(Some(rx));
+            }
+            for i in 0..len {
+                local_rx[start + i] = rxs[(i + len - 1) % len].take();
+            }
+            // leader → member result channels
+            for i in 1..len {
+                let (tx, rx) = channel();
+                bcast_tx[start].push(tx);
+                bcast_rx[start + i] = Some(rx);
+            }
+        }
+    }
+    if n_groups > 1 {
+        let chans: Vec<_> = (0..n_groups).map(|_| channel()).collect();
+        let mut rxs: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n_groups);
+        for (g, (tx, rx)) in chans.into_iter().enumerate() {
+            leader_tx[g * m] = Some(tx);
+            rxs.push(Some(rx));
+        }
+        for g in 0..n_groups {
+            leader_rx[g * m] = rxs[(g + n_groups - 1) % n_groups].take();
+        }
+    }
+
+    (0..n)
+        .map(|rank| {
+            let group = rank / m;
+            let start = group * m;
+            HierComm {
+                rank,
+                n,
+                group,
+                group_rank: rank - start,
+                group_len: m.min(n - start),
+                n_groups,
+                local_tx: local_tx[rank].take(),
+                local_rx: local_rx[rank].take(),
+                leader_tx: leader_tx[rank].take(),
+                leader_rx: leader_rx[rank].take(),
+                bcast_tx: std::mem::take(&mut bcast_tx[rank]),
+                bcast_rx: bcast_rx[rank].take(),
+            }
+        })
+        .collect()
+}
+
+/// One textbook ring all-reduce (reduce-scatter + all-gather) over the
+/// given unidirectional ring endpoints; returns elements sent.
+fn ring_allreduce(
+    buf: &mut [f32],
+    ring_rank: usize,
+    ring_n: usize,
+    tx: &Sender<Vec<f32>>,
+    rx: &Receiver<Vec<f32>>,
+) -> usize {
+    let n = ring_n;
+    if n == 1 {
+        return 0;
+    }
+    let len = buf.len();
+    let per = len.div_ceil(n);
+    let bounds = |c: usize| ((c * per).min(len), ((c + 1) * per).min(len));
+    let mut sent = 0usize;
+
+    // Phase 1: reduce-scatter. At step s, rank r sends chunk (r − s)
+    // mod n and receives+accumulates chunk (r − s − 1) mod n.
+    for s in 0..n - 1 {
+        let (a, b) = bounds((ring_rank + n - s) % n);
+        tx.send(buf[a..b].to_vec()).expect("ring peer alive");
+        sent += b - a;
+        let (a, b) = bounds((ring_rank + n - s - 1) % n);
+        let incoming = rx.recv().expect("ring peer alive");
+        assert_eq!(incoming.len(), b - a, "chunk size mismatch");
+        for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+    }
+
+    // Phase 2: all-gather of the reduced chunks.
+    for s in 0..n - 1 {
+        let (a, b) = bounds((ring_rank + 1 + n - s) % n);
+        tx.send(buf[a..b].to_vec()).expect("ring peer alive");
+        sent += b - a;
+        let (a, b) = bounds((ring_rank + n - s) % n);
+        let incoming = rx.recv().expect("ring peer alive");
+        assert_eq!(incoming.len(), b - a, "chunk size mismatch");
+        buf[a..b].copy_from_slice(&incoming);
+    }
+    sent
+}
+
+impl HierComm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.group_rank == 0
+    }
+
+    /// In-place hierarchical all-reduce (sum). All ranks must call with
+    /// equal buffer lengths. Three phases: intra-group ring, leader
+    /// ring, local result fan-out. Returns this rank's per-link-class
+    /// message volume.
+    pub fn allreduce(&self, buf: &mut [f32]) -> HierVolume {
+        let mut vol = HierVolume::default();
+        if self.n == 1 {
+            return vol;
+        }
+
+        // Phase 1 (local links): ring all-reduce among group members —
+        // every member ends with the group sum.
+        if self.group_len > 1 {
+            let tx = self.local_tx.as_ref().expect("local ring endpoint");
+            let rx = self.local_rx.as_ref().expect("local ring endpoint");
+            vol.local_elems += ring_allreduce(buf, self.group_rank, self.group_len, tx, rx);
+        }
+        if self.n_groups == 1 {
+            return vol; // the group sum is already the global sum
+        }
+
+        // Phase 2 (global links): leaders ring-all-reduce the group sums.
+        if self.is_leader() {
+            let tx = self.leader_tx.as_ref().expect("leader ring endpoint");
+            let rx = self.leader_rx.as_ref().expect("leader ring endpoint");
+            vol.global_elems += ring_allreduce(buf, self.group, self.n_groups, tx, rx);
+        }
+
+        // Phase 3 (local links): leaders fan the result out.
+        if self.is_leader() {
+            for tx in &self.bcast_tx {
+                tx.send(buf.to_vec()).expect("member alive");
+                vol.local_elems += buf.len();
+            }
+        } else {
+            let rx = self.bcast_rx.as_ref().expect("bcast endpoint");
+            let incoming = rx.recv().expect("leader alive");
+            assert_eq!(incoming.len(), buf.len());
+            buf.copy_from_slice(&incoming);
+        }
+        vol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::thread;
+
+    /// Run a hierarchical all-reduce over seeded random inputs; check
+    /// every rank against the serial sum and return (results, volumes).
+    fn run_hier(n: usize, m: usize, len: usize, seed: u64) -> Vec<(Vec<f32>, HierVolume)> {
+        let comms = hier_network(n, m);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let mut rng = Rng::keyed(seed, c.rank() as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf);
+                    let local = buf.clone();
+                    let vol = c.allreduce(&mut buf);
+                    (local, buf, vol)
+                })
+            })
+            .collect();
+        let results: Vec<(Vec<f32>, Vec<f32>, HierVolume)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mut expect = vec![0.0f32; len];
+        for (local, _, _) in &results {
+            for (e, x) in expect.iter_mut().zip(local) {
+                *e += x;
+            }
+        }
+        results
+            .into_iter()
+            .map(|(_, reduced, vol)| {
+                for (r, e) in reduced.iter().zip(&expect) {
+                    assert!((r - e).abs() <= 1e-4 * e.abs().max(1.0), "{r} vs {e}");
+                }
+                (reduced, vol)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hier_matches_sum_even_groups() {
+        run_hier(8, 4, 128, 1);
+        run_hier(6, 2, 64, 2);
+    }
+
+    #[test]
+    fn hier_matches_sum_uneven_and_degenerate_groups() {
+        run_hier(7, 3, 61, 3); // groups 3, 3, 1
+        run_hier(5, 1, 16, 4); // every rank a leader: pure global ring
+        run_hier(8, 8, 33, 5); // single group: pure local ring
+        run_hier(3, 5, 4, 6); // group larger than world
+    }
+
+    #[test]
+    fn hier_all_ranks_agree() {
+        let out = run_hier(9, 3, 500, 7);
+        for (r, _) in &out[1..] {
+            assert_eq!(r, &out[0].0);
+        }
+    }
+
+    #[test]
+    fn hier_single_rank_noop() {
+        let comms = hier_network(1, 4);
+        let mut buf = vec![1.0, 2.0];
+        let vol = comms[0].allreduce(&mut buf);
+        assert_eq!(vol, HierVolume::default());
+        assert_eq!(buf, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn only_leaders_touch_global_links() {
+        let n = 8;
+        let m = 4;
+        let out = run_hier(n, m, 256, 8);
+        for (rank, (_, vol)) in out.iter().enumerate() {
+            if rank % m == 0 {
+                assert!(vol.global_elems > 0, "leader {rank} moved no global data");
+            } else {
+                assert_eq!(vol.global_elems, 0, "member {rank} crossed a group");
+                assert!(vol.local_elems > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn hier_matches_wire_ring() {
+        // Differential: grouped data movement and the flat ring must
+        // agree on the sum (up to float reassociation).
+        let n = 6;
+        let len = 333;
+        let hier_out = run_hier(n, 3, len, 9);
+        let ring_comms = crate::comm::ring::ring_network(n);
+        let handles: Vec<_> = ring_comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let mut rng = Rng::keyed(9, c.rank() as u64, 0);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf);
+                    c.allreduce(&mut buf);
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            let ring_buf = h.join().unwrap();
+            for (a, b) in ring_buf.iter().zip(&hier_out[0].0) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_volume_is_ring_optimal_within_group() {
+        // In an 8-rank, m=4 network with a 1024-elem payload, a member's
+        // local volume is exactly the in-group ring volume 2(m−1)(len/m).
+        let out = run_hier(8, 4, 1024, 10);
+        let expect_member = 2 * 3 * (1024 / 4);
+        for (rank, (_, vol)) in out.iter().enumerate() {
+            if rank % 4 != 0 {
+                assert_eq!(vol.local_elems, expect_member, "rank {rank}");
+            }
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! Collective schedules as first-class objects.
+//!
+//! [`NetModel::allreduce_time`](super::NetModel::allreduce_time) used to
+//! be an enum-switch over closed-form cost formulas, and the dragonfly
+//! topology could only reach the engines by flattening its hierarchical
+//! schedule back into an *effective* α-β pair
+//! (`Dragonfly::effective_net_model` — lossy, and wrong about where the
+//! time goes). This module replaces both with a [`CollectiveSchedule`]
+//! trait: every collective the rendezvous substrate completes is costed
+//! by a schedule object, and every schedule decomposes its cost into
+//! **per-phase times** ([`PhaseTimes`]) — time on intra-group
+//! (electrical/local) links vs inter-group (optical/global) links — so
+//! the control plane and the metrics export can see *where* t_AR is
+//! spent, not just how big it is.
+//!
+//! Four schedules:
+//!
+//! * [`Ring`] — 2(N−1) steps of n/N elements; bandwidth-optimal, the
+//!   flat baseline. All time is "local" (a flat fabric has one link
+//!   class).
+//! * [`Tree`] — binary reduce + broadcast, 2·⌈log2 N⌉ full-payload
+//!   hops; latency-optimal for tiny payloads.
+//! * [`FlatStar`] — serialized gather+scatter through rank 0; the
+//!   degenerate PS-like pattern kept for the ablation.
+//! * [`Hierarchical`] — the Layered-SGD schedule (Yu & Yoo 2019) over a
+//!   [`Dragonfly`]: ring all-reduce inside each group on local links,
+//!   a leader ring across groups on global links, then a local
+//!   broadcast. Its phase split is what makes the t_AR floor of Eq. 14
+//!   actionable: at large N the flat ring pays 2(N−1) α's while the
+//!   hierarchical schedule pays 2(m−1) local α's + 2(G−1) global α's.
+//!
+//! Numeric contract: schedules decide *routing and cost*, never the
+//! sum. The rendezvous substrate reduces contributions once, in rank
+//! order, so any two schedules are **bit-identical in sum** by
+//! construction (asserted by the schedule-equivalence proptests); the
+//! wire-level [`super::hier`] executor is the differential check that
+//! the grouped data movement really computes the same reduction.
+
+use super::topology::Dragonfly;
+
+/// Per-phase decomposition of one collective's modelled time.
+///
+/// `local_s` is time on intra-group (electrical) links, `global_s` on
+/// inter-group (optical) links. Flat schedules have a single link class
+/// and report everything as local.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub local_s: f64,
+    pub global_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn local(t: f64) -> Self {
+        PhaseTimes { local_s: t, global_s: 0.0 }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.local_s + self.global_s
+    }
+
+    pub fn accumulate(&mut self, other: PhaseTimes) {
+        self.local_s += other.local_s;
+        self.global_s += other.global_s;
+    }
+}
+
+/// A collective schedule: how the ranks move data, costed per phase.
+///
+/// Implementations must be pure functions of (payload, rank count) —
+/// the rendezvous rounds cost each collective at completion time, and
+/// every rank must account the identical number.
+pub trait CollectiveSchedule: std::fmt::Debug + Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// All-reduce (sum) of `n_elems` f32 across `n_ranks`.
+    fn allreduce_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes;
+
+    /// Broadcast of `n_elems` f32 from one root.
+    fn bcast_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes;
+
+    /// All-gather where every rank contributes `n_elems_per_rank` f32.
+    fn allgather_phases(&self, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes;
+
+    /// Reduce-scatter of `n_elems` f32 (each rank keeps ~n/N).
+    fn reduce_scatter_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes;
+
+    fn allreduce_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        self.allreduce_phases(n_elems, n_ranks).total()
+    }
+}
+
+/// One α-β link class (latency seconds, bandwidth bytes/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub alpha_s: f64,
+    pub beta_bytes_per_s: f64,
+}
+
+impl Link {
+    /// One hop of `bytes` over this link.
+    fn hop(&self, bytes: f64) -> f64 {
+        self.alpha_s + bytes / self.beta_bytes_per_s
+    }
+}
+
+fn bytes_of(n_elems: usize) -> f64 {
+    n_elems as f64 * 4.0
+}
+
+/// Flat ring: reduce-scatter + all-gather, 2(N−1) steps of n/N.
+#[derive(Debug, Clone, Copy)]
+pub struct Ring(pub Link);
+
+impl CollectiveSchedule for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn allreduce_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let n = n_ranks as f64;
+        PhaseTimes::local(2.0 * (n - 1.0) * self.0.hop(bytes_of(n_elems) / n))
+    }
+
+    fn bcast_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_bcast(self.0, n_elems, n_ranks)
+    }
+
+    fn allgather_phases(&self, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes {
+        flat_allgather(self.0, n_elems_per_rank, n_ranks)
+    }
+
+    fn reduce_scatter_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_reduce_scatter(self.0, n_elems, n_ranks)
+    }
+}
+
+/// Binary-tree reduce + broadcast: 2·⌈log2 N⌉ full-payload hops.
+#[derive(Debug, Clone, Copy)]
+pub struct Tree(pub Link);
+
+impl CollectiveSchedule for Tree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn allreduce_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let hops = 2.0 * (n_ranks as f64).log2().ceil();
+        PhaseTimes::local(hops * self.0.hop(bytes_of(n_elems)))
+    }
+
+    fn bcast_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_bcast(self.0, n_elems, n_ranks)
+    }
+
+    fn allgather_phases(&self, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes {
+        flat_allgather(self.0, n_elems_per_rank, n_ranks)
+    }
+
+    fn reduce_scatter_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_reduce_scatter(self.0, n_elems, n_ranks)
+    }
+}
+
+/// Serialized gather+scatter through rank 0 — the many-to-few
+/// bottleneck, kept for the centralised-vs-decentralised ablation.
+#[derive(Debug, Clone, Copy)]
+pub struct FlatStar(pub Link);
+
+impl CollectiveSchedule for FlatStar {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn allreduce_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let n = n_ranks as f64;
+        PhaseTimes::local(2.0 * (n - 1.0) * self.0.hop(bytes_of(n_elems)))
+    }
+
+    fn bcast_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_bcast(self.0, n_elems, n_ranks)
+    }
+
+    fn allgather_phases(&self, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes {
+        flat_allgather(self.0, n_elems_per_rank, n_ranks)
+    }
+
+    fn reduce_scatter_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        flat_reduce_scatter(self.0, n_elems, n_ranks)
+    }
+}
+
+// Shared flat-fabric formulas for the secondary collectives (all three
+// flat schedules route them the same way the substrate always has).
+fn flat_bcast(link: Link, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+    if n_ranks <= 1 {
+        return PhaseTimes::default();
+    }
+    PhaseTimes::local((n_ranks as f64).log2().ceil() * link.hop(bytes_of(n_elems)))
+}
+
+fn flat_allgather(link: Link, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes {
+    if n_ranks <= 1 {
+        return PhaseTimes::default();
+    }
+    PhaseTimes::local((n_ranks as f64 - 1.0) * link.hop(bytes_of(n_elems_per_rank)))
+}
+
+fn flat_reduce_scatter(link: Link, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+    if n_ranks <= 1 {
+        return PhaseTimes::default();
+    }
+    let n = n_ranks as f64;
+    PhaseTimes::local((n - 1.0) * link.hop(bytes_of(n_elems) / n))
+}
+
+/// The Layered-SGD hierarchical schedule over a dragonfly: intra-group
+/// ring all-reduce (local links) → leader ring across groups (global
+/// links) → local broadcast of the result.
+#[derive(Debug, Clone, Copy)]
+pub struct Hierarchical {
+    pub topology: Dragonfly,
+}
+
+impl Hierarchical {
+    fn local_link(&self) -> Link {
+        Link {
+            alpha_s: self.topology.alpha_local_s,
+            beta_bytes_per_s: self.topology.beta_local,
+        }
+    }
+
+    fn global_link(&self) -> Link {
+        Link {
+            alpha_s: self.topology.alpha_global_s,
+            beta_bytes_per_s: self.topology.beta_global,
+        }
+    }
+
+    /// (ranks per group, groups spanned) at a given scale.
+    fn shape(&self, n_ranks: usize) -> (f64, f64) {
+        let m = self.topology.nodes_per_group.min(n_ranks) as f64;
+        let g = n_ranks.div_ceil(self.topology.nodes_per_group) as f64;
+        (m, g)
+    }
+}
+
+impl CollectiveSchedule for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn allreduce_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let bytes = bytes_of(n_elems);
+        let (m, g) = self.shape(n_ranks);
+        let (ll, gl) = (self.local_link(), self.global_link());
+
+        // ring all-reduce within each group, on local links
+        let local_ring = if m > 1.0 { 2.0 * (m - 1.0) * ll.hop(bytes / m) } else { 0.0 };
+        // leader ring across groups, on global links
+        let leader_ring = if g > 1.0 { 2.0 * (g - 1.0) * gl.hop(bytes / g) } else { 0.0 };
+        // local broadcast of the result down a tree
+        let bcast = if m > 1.0 { m.log2().ceil() * ll.hop(bytes / m.max(1.0)) } else { 0.0 };
+        PhaseTimes { local_s: local_ring + bcast, global_s: leader_ring }
+    }
+
+    fn bcast_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let bytes = bytes_of(n_elems);
+        let (m, g) = self.shape(n_ranks);
+        // leader chain first (global tree), then each leader fans out
+        // down its local tree.
+        let global = if g > 1.0 { g.log2().ceil() * self.global_link().hop(bytes) } else { 0.0 };
+        let local = if m > 1.0 { m.log2().ceil() * self.local_link().hop(bytes) } else { 0.0 };
+        PhaseTimes { local_s: local, global_s: global }
+    }
+
+    fn allgather_phases(&self, n_elems_per_rank: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let per = bytes_of(n_elems_per_rank);
+        let (m, g) = self.shape(n_ranks);
+        // assemble the group block locally, ring the blocks across
+        // leaders, then push the remote blocks down the local tree.
+        let local_gather = if m > 1.0 { (m - 1.0) * self.local_link().hop(per) } else { 0.0 };
+        let leader_ring =
+            if g > 1.0 { (g - 1.0) * self.global_link().hop(per * m) } else { 0.0 };
+        let local_fanout = if m > 1.0 && g > 1.0 {
+            m.log2().ceil() * self.local_link().hop(per * m * (g - 1.0))
+        } else {
+            0.0
+        };
+        PhaseTimes { local_s: local_gather + local_fanout, global_s: leader_ring }
+    }
+
+    fn reduce_scatter_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        if n_ranks <= 1 {
+            return PhaseTimes::default();
+        }
+        let bytes = bytes_of(n_elems);
+        let (m, g) = self.shape(n_ranks);
+        let local = if m > 1.0 { (m - 1.0) * self.local_link().hop(bytes / m) } else { 0.0 };
+        let global = if g > 1.0 { (g - 1.0) * self.global_link().hop(bytes / g) } else { 0.0 };
+        PhaseTimes { local_s: local, global_s: global }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link { alpha_s: 1e-6, beta_bytes_per_s: 1e9 }
+    }
+
+    #[test]
+    fn ring_matches_closed_form() {
+        let s = Ring(link());
+        // N=8, 1M f32: 2*7*(1e-6 + 4e6/8/1e9)
+        let t = s.allreduce_time(1_000_000, 8);
+        assert!((t - (14e-6 + 7.0e-3)).abs() < 1e-9);
+        assert_eq!(s.allreduce_time(1_000_000, 1), 0.0);
+        // flat schedules report no global time
+        assert_eq!(s.allreduce_phases(1_000_000, 8).global_s, 0.0);
+    }
+
+    #[test]
+    fn schedule_ordering_small_vs_large_payload() {
+        let (ring, tree, star) = (Ring(link()), Tree(link()), FlatStar(link()));
+        // flat star is slower than ring for large payloads
+        assert!(star.allreduce_time(1_000_000, 8) > ring.allreduce_time(1_000_000, 8));
+        // tree beats ring on latency for tiny payloads at large N
+        assert!(tree.allreduce_time(1, 64) < ring.allreduce_time(1, 64));
+    }
+
+    #[test]
+    fn hierarchical_beats_ring_at_scale_on_default_dragonfly() {
+        // The acceptance crossover: at the ResNet-20 payload, the
+        // hierarchical schedule must beat the flat ring for N ≥ 256.
+        let elems = 271_690;
+        for n in [256usize, 512, 1024] {
+            let hier = Hierarchical { topology: Dragonfly::for_nodes(n) };
+            let ring = Ring(Link { alpha_s: 1.5e-6, beta_bytes_per_s: 10e9 });
+            assert!(
+                hier.allreduce_time(elems, n) < ring.allreduce_time(elems, n),
+                "hier not faster at N={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_phases_split_local_and_global() {
+        let h = Hierarchical { topology: Dragonfly::default() };
+        let p = h.allreduce_phases(1_000_000, 128);
+        assert!(p.local_s > 0.0 && p.global_s > 0.0);
+        assert!((p.total() - (p.local_s + p.global_s)).abs() < 1e-18);
+        // a single group never touches global links
+        let single = Hierarchical {
+            topology: Dragonfly { groups: 1, nodes_per_group: 16, ..Dragonfly::default() },
+        };
+        assert_eq!(single.allreduce_phases(1_000_000, 16).global_s, 0.0);
+    }
+
+    #[test]
+    fn secondary_collectives_are_finite_and_single_rank_free() {
+        let h = Hierarchical { topology: Dragonfly::default() };
+        for n in [1usize, 2, 32, 200] {
+            for p in [
+                h.bcast_phases(1000, n),
+                h.allgather_phases(1000, n),
+                h.reduce_scatter_phases(1000, n),
+            ] {
+                assert!(p.total().is_finite());
+                if n == 1 {
+                    assert_eq!(p.total(), 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,16 +1,25 @@
 //! Network topologies: the paper's testbed is a Cray XC with Aries
-//! routers in a **dragonfly** topology (§IV-B). This module refines the
-//! flat α-β model with topology-aware link costs and a hierarchical
-//! (intra-group reduce → inter-group exchange → intra-group broadcast)
-//! all-reduce schedule, used by the comm benches as an ablation against
-//! the flat ring model.
+//! routers in a **dragonfly** topology (§IV-B). [`Dragonfly`] describes
+//! the two-level fabric — fast electrical links within a group, slower
+//! tapered optics between groups — and is the parameter block of the
+//! first-class [`Hierarchical`](super::schedule::Hierarchical)
+//! collective schedule (intra-group ring → leader ring → local
+//! broadcast, per Layered SGD).
+//!
+//! Historically this module *flattened* the hierarchical schedule back
+//! into an effective α-β pair so the engines (which only understood the
+//! flat model) could approximate it; that hack is retired — engines now
+//! take the schedule itself via `AllReduceAlgo::Hierarchical` — but
+//! [`Dragonfly::effective_net_model`] is kept as an explicit ablation
+//! utility (how wrong is the flattening?) for the comm benches.
 
+use super::schedule::{CollectiveSchedule, Hierarchical, PhaseTimes};
 use super::{AllReduceAlgo, NetModel};
 
 /// A two-level dragonfly abstraction: `groups` fully-connected groups of
 /// `nodes_per_group` nodes; intra-group links are fast (electrical),
 /// inter-group links slower (optical, tapered).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Dragonfly {
     pub groups: usize,
     pub nodes_per_group: usize,
@@ -44,57 +53,62 @@ impl Dragonfly {
 
     /// Shape a dragonfly around `n` nodes (√n groups, rounded up).
     pub fn for_nodes(n: usize) -> Self {
-        let mut d = Dragonfly::default();
-        let groups = (n as f64).sqrt().ceil() as usize;
-        d.groups = groups.max(1);
-        d.nodes_per_group = n.div_ceil(d.groups).max(1);
-        d
+        let groups = ((n as f64).sqrt().ceil() as usize).max(1);
+        Dragonfly {
+            groups,
+            nodes_per_group: n.div_ceil(groups).max(1),
+            ..Dragonfly::default()
+        }
     }
 
-    /// Hierarchical all-reduce cost: ring reduce-scatter + all-gather
-    /// within each group (local links), then a ring across group leaders
-    /// on the reduced payload (global links), then local broadcast.
-    pub fn hierarchical_allreduce_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
-        if n_ranks <= 1 {
-            return 0.0;
-        }
-        let bytes = n_elems as f64 * 4.0;
-        let local_ranks = self.nodes_per_group.min(n_ranks) as f64;
-        let n_groups = n_ranks.div_ceil(self.nodes_per_group) as f64;
+    /// The group a rank lives in (ranks are laid out group-contiguous).
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.nodes_per_group.max(1)
+    }
 
-        // local ring all-reduce within the group
-        let local = if local_ranks > 1.0 {
-            2.0 * (local_ranks - 1.0) * (self.alpha_local_s + bytes / local_ranks / self.beta_local)
-        } else {
-            0.0
-        };
-        // leader ring across groups on the full payload
-        let global = if n_groups > 1.0 {
-            2.0 * (n_groups - 1.0) * (self.alpha_global_s + bytes / n_groups / self.beta_global)
-        } else {
-            0.0
-        };
-        // local broadcast of the result (one full-payload hop down a
-        // local tree)
-        let bcast = if local_ranks > 1.0 {
-            (local_ranks.log2().ceil()) * (self.alpha_local_s + bytes / self.beta_local / local_ranks.max(1.0))
-        } else {
-            0.0
-        };
-        local + global + bcast
+    /// The number of groups spanned by `n_ranks` ranks.
+    pub fn groups_spanned(&self, n_ranks: usize) -> usize {
+        n_ranks.div_ceil(self.nodes_per_group.max(1)).max(1)
+    }
+
+    /// This topology's hierarchical schedule object.
+    pub fn schedule(&self) -> Hierarchical {
+        Hierarchical { topology: *self }
+    }
+
+    /// Hierarchical all-reduce cost, split into local vs global phases:
+    /// ring reduce-scatter + all-gather within each group (local
+    /// links), then a ring across group leaders on the reduced payload
+    /// (global links), then local broadcast.
+    pub fn hierarchical_phases(&self, n_elems: usize, n_ranks: usize) -> PhaseTimes {
+        self.schedule().allreduce_phases(n_elems, n_ranks)
+    }
+
+    /// Total hierarchical all-reduce cost (the sum of the phases).
+    pub fn hierarchical_allreduce_time(&self, n_elems: usize, n_ranks: usize) -> f64 {
+        self.hierarchical_phases(n_elems, n_ranks).total()
     }
 
     /// A flat [`NetModel`] with effective parameters matched to this
-    /// dragonfly at a given scale (for plugging into the engines, which
-    /// take the flat model).
+    /// dragonfly at a given scale.
+    ///
+    /// **Ablation-only.** The engines used to need this flattening to
+    /// run on a dragonfly at all; they now take
+    /// `AllReduceAlgo::Hierarchical(topology)` directly, and the only
+    /// remaining consumer is the bench quantifying what the flattening
+    /// loses. A single rank has no collective to match (`t = 0` would
+    /// solve to a bogus β), so it degenerates to an instant network.
     pub fn effective_net_model(&self, n_elems: usize, n_ranks: usize) -> NetModel {
+        if n_ranks <= 1 {
+            return NetModel::instant();
+        }
         let t = self.hierarchical_allreduce_time(n_elems, n_ranks);
         // Solve the flat-ring formula for β with the default α:
         //   t = 2(N−1)(α + b/N/β)  ⇒  β = b/N / (t/(2(N−1)) − α)
         let alpha = self.alpha_local_s;
         let n = n_ranks as f64;
         let bytes = n_elems as f64 * 4.0;
-        let per_step = (t / (2.0 * (n - 1.0).max(1.0)) - alpha).max(1e-12);
+        let per_step = (t / (2.0 * (n - 1.0)) - alpha).max(1e-12);
         NetModel {
             alpha_s: alpha,
             beta_bytes_per_s: bytes / n / per_step,
@@ -116,6 +130,8 @@ mod tests {
         // plus the local broadcast term
         assert!(t >= local_ring);
         assert!(t < local_ring * 1.5);
+        // and nothing crossed a global link
+        assert_eq!(d.hierarchical_phases(1_000_000, 8).global_s, 0.0);
     }
 
     #[test]
@@ -146,6 +162,19 @@ mod tests {
     }
 
     #[test]
+    fn group_mapping_is_contiguous() {
+        let d = Dragonfly { groups: 3, nodes_per_group: 4, ..Dragonfly::default() };
+        assert_eq!(d.group_of(0), 0);
+        assert_eq!(d.group_of(3), 0);
+        assert_eq!(d.group_of(4), 1);
+        assert_eq!(d.group_of(11), 2);
+        assert_eq!(d.groups_spanned(1), 1);
+        assert_eq!(d.groups_spanned(4), 1);
+        assert_eq!(d.groups_spanned(5), 2);
+        assert_eq!(d.groups_spanned(12), 3);
+    }
+
+    #[test]
     fn effective_model_matches_hierarchical_time() {
         let d = Dragonfly::default();
         let (elems, ranks) = (1_000_000, 64);
@@ -153,6 +182,18 @@ mod tests {
         let net = d.effective_net_model(elems, ranks);
         let t_flat = net.allreduce_time(elems, ranks);
         assert!((t_flat - t_hier).abs() / t_hier < 0.05, "{t_flat} vs {t_hier}");
+    }
+
+    #[test]
+    fn effective_model_single_rank_is_instant() {
+        // Regression: n_ranks = 1 used to solve the flat-ring formula
+        // with (n − 1) clamped to 1, producing a bogus β from t = 0.
+        let net = Dragonfly::default().effective_net_model(1_000_000, 1);
+        assert_eq!(net.alpha_s, 0.0);
+        assert!(net.beta_bytes_per_s.is_infinite());
+        assert_eq!(net.allreduce_time(1_000_000, 1), 0.0);
+        // and it must stay harmless if someone costs a bigger group on it
+        assert_eq!(net.allreduce_time(1_000_000, 8), 0.0);
     }
 
     #[test]

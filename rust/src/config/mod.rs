@@ -12,8 +12,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::algo::Algo;
-use crate::comm::{AllReduceAlgo, NetModel};
-use crate::control::{ControlConfig, ControlPolicy, FaultKind, FaultPlan};
+use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use crate::control::{ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan};
 use crate::simtime::ComputeModel;
 
 /// Full description of one training run.
@@ -68,6 +68,12 @@ pub struct ExperimentConfig {
 
     // --- simulation models ---
     pub net: NetModel,
+    /// Dragonfly topology for the hierarchical collective schedule —
+    /// the `[comm]` table. Used directly when `net.algo` is
+    /// `Hierarchical`, and as the candidate topology the
+    /// `schedule_coupled` control policy prices against the flat
+    /// fabric (see [`ExperimentConfig::topology`]).
+    pub dragonfly: Dragonfly,
     pub compute: ComputeModel,
     /// If true, drive worker virtual time from measured PJRT wall time
     /// instead of `compute` (used by e2e runs on the real backend).
@@ -117,6 +123,7 @@ impl ExperimentConfig {
             n_val: 1024,
             data_noise: 0.6,
             net: NetModel::default(),
+            dragonfly: Dragonfly::default(),
             compute: ComputeModel::default(),
             time_from_wall: false,
             control: ControlConfig::default(),
@@ -141,6 +148,16 @@ impl ExperimentConfig {
         let planned = ((self.steps as f32) * self.warmup_frac).max(1.0) as u64;
         let stop = ((self.steps as f32) * self.warmup_stop_frac) as u64;
         crate::optim::LrSchedule::paper(self.eta_peak(), planned, stop.min(planned), self.steps)
+    }
+
+    /// The dragonfly topology the hierarchical schedule runs on: the
+    /// one embedded in `net.algo` when the run is already hierarchical,
+    /// else the `[comm]` table's candidate topology.
+    pub fn topology(&self) -> Dragonfly {
+        match self.net.algo {
+            AllReduceAlgo::Hierarchical(d) => d,
+            _ => self.dragonfly,
+        }
     }
 
     /// Effective weight decay at iteration `it`: same shape as the LR
@@ -181,6 +198,19 @@ impl ExperimentConfig {
         let mut fault_factor = 2.0f64;
         let mut fault_duration_s = 1.0f64;
         let mut fault_extra_s = 0.5f64;
+        // `[[control.fault]]` table-array specs.
+        let mut fault_events: Vec<FaultEvent> = Vec::new();
+        // `[comm]` table: schedule + dragonfly shape/links, assembled
+        // after the loop (the schedule may need the final topology and
+        // node count).
+        let mut comm_schedule: Option<String> = None;
+        let mut legacy_net_algo: Option<String> = None;
+        let mut comm_groups: Option<usize> = None;
+        let mut comm_npg: Option<usize> = None;
+        let mut comm_alpha_local: Option<f64> = None;
+        let mut comm_beta_local: Option<f64> = None;
+        let mut comm_alpha_global: Option<f64> = None;
+        let mut comm_beta_global: Option<f64> = None;
         for (key, val) in &map {
             let k = key.as_str();
             let err = || anyhow::anyhow!("bad value for {k}");
@@ -210,14 +240,23 @@ impl ExperimentConfig {
                 "data.noise" => cfg.data_noise = val.as_f64().ok_or_else(err)? as f32,
                 "net.alpha_s" => cfg.net.alpha_s = val.as_f64().ok_or_else(err)?,
                 "net.beta_bytes_per_s" => cfg.net.beta_bytes_per_s = val.as_f64().ok_or_else(err)?,
+                // old spelling of the schedule; `comm.schedule` wins
                 "net.algo" => {
-                    cfg.net.algo = match val.as_str().ok_or_else(err)? {
-                        "ring" => AllReduceAlgo::Ring,
-                        "tree" => AllReduceAlgo::Tree,
-                        "flat" => AllReduceAlgo::Flat,
-                        other => bail!("unknown net.algo {other:?}"),
-                    }
+                    legacy_net_algo = Some(val.as_str().ok_or_else(err)?.to_string())
                 }
+                "comm.schedule" => {
+                    comm_schedule = Some(val.as_str().ok_or_else(err)?.to_string())
+                }
+                "comm.groups" => comm_groups = Some(val.as_i64().ok_or_else(err)? as usize),
+                "comm.nodes_per_group" => {
+                    comm_npg = Some(val.as_i64().ok_or_else(err)? as usize)
+                }
+                "comm.alpha_local_s" => comm_alpha_local = Some(val.as_f64().ok_or_else(err)?),
+                "comm.beta_local" => comm_beta_local = Some(val.as_f64().ok_or_else(err)?),
+                "comm.alpha_global_s" => {
+                    comm_alpha_global = Some(val.as_f64().ok_or_else(err)?)
+                }
+                "comm.beta_global" => comm_beta_global = Some(val.as_f64().ok_or_else(err)?),
                 "compute.sec_per_sample" => {
                     cfg.compute.sec_per_sample = val.as_f64().ok_or_else(err)?
                 }
@@ -242,6 +281,15 @@ impl ExperimentConfig {
                 "control.lam_scale_max" => {
                     cfg.control.lam_scale_max = val.as_f64().ok_or_else(err)? as f32
                 }
+                "control.schedule_hysteresis" => {
+                    cfg.control.schedule_hysteresis = val.as_f64().ok_or_else(err)?
+                }
+                "control.straggler_factor" => {
+                    cfg.control.straggler_factor = val.as_f64().ok_or_else(err)?
+                }
+                "control.quarantine_after" => {
+                    cfg.control.quarantine_after = val.as_i64().ok_or_else(err)? as u64
+                }
                 "control.heartbeat_timeout_s" => {
                     cfg.control.heartbeat_timeout_s = val.as_f64().ok_or_else(err)?
                 }
@@ -257,6 +305,15 @@ impl ExperimentConfig {
                 "control.fault_factor" => fault_factor = val.as_f64().ok_or_else(err)?,
                 "control.fault_duration_s" => fault_duration_s = val.as_f64().ok_or_else(err)?,
                 "control.fault_extra_s" => fault_extra_s = val.as_f64().ok_or_else(err)?,
+                // `[[control.fault]]` table array: any number of specs.
+                "control.fault" => {
+                    for entry in val.as_array().ok_or_else(err)? {
+                        let table = entry.as_table().ok_or_else(|| {
+                            anyhow::anyhow!("control.fault must be [[control.fault]] tables")
+                        })?;
+                        fault_events.push(parse_fault_table(table)?);
+                    }
+                }
                 "out_dir" => cfg.out_dir = Some(val.as_str().ok_or_else(err)?.into()),
                 other => bail!("unknown config key {other:?}"),
             }
@@ -272,7 +329,55 @@ impl ExperimentConfig {
                 "delay" => FaultKind::Delay { extra_s: fault_extra_s },
                 other => bail!("unknown control.fault_kind {other:?} (kill | slow | delay)"),
             };
-            cfg.control.faults.push(crate::control::FaultEvent { rank, at_s, kind });
+            cfg.control.faults.push(FaultEvent { rank, at_s, kind });
+        }
+        for e in fault_events {
+            cfg.control.faults.push(e);
+        }
+
+        // Assemble the `[comm]` dragonfly: an explicit shape wins, a
+        // half-specified shape derives its other dimension from the
+        // run's node count (a partial shape must never silently
+        // collapse the hierarchy into one group), and no shape at all
+        // fits the topology to the node count.
+        let nodes = cfg.nodes.max(1);
+        let mut d = match (comm_groups, comm_npg) {
+            (None, None) => Dragonfly::for_nodes(nodes),
+            (Some(g), Some(m)) => {
+                Dragonfly { groups: g.max(1), nodes_per_group: m.max(1), ..Dragonfly::default() }
+            }
+            (Some(g), None) => {
+                let g = g.max(1);
+                Dragonfly {
+                    groups: g,
+                    nodes_per_group: nodes.div_ceil(g).max(1),
+                    ..Dragonfly::default()
+                }
+            }
+            (None, Some(m)) => {
+                let m = m.max(1);
+                Dragonfly {
+                    groups: nodes.div_ceil(m).max(1),
+                    nodes_per_group: m,
+                    ..Dragonfly::default()
+                }
+            }
+        };
+        if let Some(v) = comm_alpha_local {
+            d.alpha_local_s = v;
+        }
+        if let Some(v) = comm_beta_local {
+            d.beta_local = v;
+        }
+        if let Some(v) = comm_alpha_global {
+            d.alpha_global_s = v;
+        }
+        if let Some(v) = comm_beta_global {
+            d.beta_global = v;
+        }
+        cfg.dragonfly = d;
+        if let Some(name) = comm_schedule.or(legacy_net_algo) {
+            cfg.net.algo = parse_schedule(&name, d)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -304,6 +409,53 @@ impl ExperimentConfig {
         }
         Ok(())
     }
+}
+
+/// Parse a collective-schedule name into an [`AllReduceAlgo`];
+/// `hierarchical` binds the given dragonfly topology. Shared by the
+/// `[comm]` table, the legacy `net.algo` key, and the CLI `--schedule`
+/// flag.
+pub fn parse_schedule(name: &str, topology: Dragonfly) -> Result<AllReduceAlgo> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "ring" => AllReduceAlgo::Ring,
+        "tree" => AllReduceAlgo::Tree,
+        "flat" => AllReduceAlgo::Flat,
+        "hierarchical" | "hier" | "layered" => AllReduceAlgo::Hierarchical(topology),
+        other => bail!("unknown collective schedule {other:?} (ring | tree | flat | hierarchical)"),
+    })
+}
+
+/// One `[[control.fault]]` table: `rank`, `at_s`, `kind` (required) plus
+/// the kind-specific knobs. Unknown keys are rejected (typo safety).
+fn parse_fault_table(table: &BTreeMap<String, TomlValue>) -> Result<FaultEvent> {
+    let mut rank: Option<usize> = None;
+    let mut at_s: Option<f64> = None;
+    let mut kind: Option<String> = None;
+    let mut factor = 2.0f64;
+    let mut duration_s = 1.0f64;
+    let mut extra_s = 0.5f64;
+    for (k, v) in table {
+        let err = || anyhow::anyhow!("bad value for control.fault.{k}");
+        match k.as_str() {
+            "rank" => rank = Some(v.as_i64().ok_or_else(err)? as usize),
+            "at_s" => at_s = Some(v.as_f64().ok_or_else(err)?),
+            "kind" => kind = Some(v.as_str().ok_or_else(err)?.to_string()),
+            "factor" => factor = v.as_f64().ok_or_else(err)?,
+            "duration_s" => duration_s = v.as_f64().ok_or_else(err)?,
+            "extra_s" => extra_s = v.as_f64().ok_or_else(err)?,
+            other => bail!("unknown [[control.fault]] key {other:?}"),
+        }
+    }
+    let rank = rank.ok_or_else(|| anyhow::anyhow!("[[control.fault]] needs rank"))?;
+    let at_s = at_s.ok_or_else(|| anyhow::anyhow!("[[control.fault]] needs at_s"))?;
+    let kind = match kind.ok_or_else(|| anyhow::anyhow!("[[control.fault]] needs kind"))?.as_str()
+    {
+        "kill" => FaultKind::Kill,
+        "slow" => FaultKind::Slow { factor, duration_s },
+        "delay" => FaultKind::Delay { extra_s },
+        other => bail!("unknown [[control.fault]] kind {other:?} (kill | slow | delay)"),
+    };
+    Ok(FaultEvent { rank, at_s, kind })
 }
 
 /// Fluent builder over [`ExperimentConfig`].
@@ -371,6 +523,19 @@ impl ConfigBuilder {
     }
     pub fn net(mut self, v: NetModel) -> Self {
         self.cfg.net = v;
+        self
+    }
+    /// Set the `[comm]` dragonfly (the hierarchical-schedule topology).
+    pub fn dragonfly(mut self, v: Dragonfly) -> Self {
+        self.cfg.dragonfly = v;
+        self
+    }
+    /// Run the collectives on an explicit schedule by name
+    /// (`ring | tree | flat | hierarchical`), binding the builder's
+    /// dragonfly for the hierarchical case.
+    pub fn schedule(mut self, name: &str) -> Self {
+        self.cfg.net.algo =
+            parse_schedule(name, self.cfg.dragonfly).expect("invalid schedule name");
         self
     }
     pub fn compute(mut self, v: ComputeModel) -> Self {
@@ -487,6 +652,169 @@ mod tests {
     #[test]
     fn unknown_keys_rejected() {
         assert!(ExperimentConfig::from_toml_str("typo_key = 1").is_err());
+    }
+
+    #[test]
+    fn comm_table_configures_hierarchical_schedule() {
+        let doc = r#"
+            nodes = 8
+
+            [comm]
+            schedule = "hierarchical"
+            groups = 2
+            nodes_per_group = 4
+            beta_global = 2.5e9
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        match cfg.net.algo {
+            AllReduceAlgo::Hierarchical(d) => {
+                assert_eq!(d.groups, 2);
+                assert_eq!(d.nodes_per_group, 4);
+                assert_eq!(d.beta_global, 2.5e9);
+                // unset link params keep their Aries-like defaults
+                assert_eq!(d.beta_local, crate::comm::Dragonfly::default().beta_local);
+            }
+            other => panic!("expected hierarchical, got {other:?}"),
+        }
+        assert_eq!(cfg.topology().groups, 2);
+    }
+
+    #[test]
+    fn partial_comm_shape_derives_the_other_dimension() {
+        // Regression: `groups` alone used to keep the default 32-wide
+        // groups, collapsing an 8-rank "hierarchy" into one group.
+        let doc = "
+            nodes = 8
+
+            [comm]
+            schedule = \"hierarchical\"
+            groups = 2
+        ";
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        let d = cfg.topology();
+        assert_eq!(d.groups, 2);
+        assert_eq!(d.nodes_per_group, 4, "must derive from the node count");
+        assert!(d.groups_spanned(8) >= 2, "hierarchy collapsed");
+        // and the mirror case: nodes_per_group alone derives groups
+        let doc = "
+            nodes = 9
+
+            [comm]
+            nodes_per_group = 3
+        ";
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.dragonfly.groups, 3);
+        assert_eq!(cfg.dragonfly.nodes_per_group, 3);
+    }
+
+    #[test]
+    fn comm_schedule_without_shape_fits_the_node_count() {
+        let doc = "
+            nodes = 100
+
+            [comm]
+            schedule = \"hierarchical\"
+        ";
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert!(cfg.topology().n_nodes() >= 100);
+        // bad names rejected
+        assert!(ExperimentConfig::from_toml_str("[comm]\nschedule = \"mesh\"").is_err());
+    }
+
+    #[test]
+    fn legacy_net_algo_spelling_still_works() {
+        let cfg = ExperimentConfig::from_toml_str("[net]\nalgo = \"tree\"").unwrap();
+        assert_eq!(cfg.net.algo, AllReduceAlgo::Tree);
+        // and it now accepts hierarchical too
+        let cfg = ExperimentConfig::from_toml_str("nodes = 16\n[net]\nalgo = \"hierarchical\"")
+            .unwrap();
+        assert!(matches!(cfg.net.algo, AllReduceAlgo::Hierarchical(_)));
+    }
+
+    #[test]
+    fn fault_table_array_parses_multiple_specs() {
+        let doc = r#"
+            nodes = 4
+
+            [control]
+            policy = "dss_pid"
+
+            [[control.fault]]
+            rank = 0
+            at_s = 1.0
+            kind = "kill"
+
+            [[control.fault]]
+            rank = 2
+            at_s = 0.5
+            kind = "slow"
+            factor = 3.0
+            duration_s = 2.0
+
+            [[control.fault]]
+            rank = 1
+            at_s = 2.0
+            kind = "delay"
+            extra_s = 0.1
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        let faults = cfg.control.faults.events();
+        assert_eq!(faults.len(), 3);
+        assert!(cfg.control.faults.has_kills());
+        assert_eq!(faults[1].rank, 2);
+        assert_eq!(faults[1].kind, FaultKind::Slow { factor: 3.0, duration_s: 2.0 });
+        assert_eq!(faults[2].kind, FaultKind::Delay { extra_s: 0.1 });
+    }
+
+    #[test]
+    fn fault_table_array_composes_with_flat_spelling() {
+        let doc = r#"
+            nodes = 4
+
+            [control]
+            fault_kind = "kill"
+            fault_rank = 3
+            fault_at_s = 1.5
+
+            [[control.fault]]
+            rank = 1
+            at_s = 0.5
+            kind = "delay"
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.control.faults.events().len(), 2);
+    }
+
+    #[test]
+    fn fault_table_array_rejects_bad_specs() {
+        // missing required keys
+        assert!(ExperimentConfig::from_toml_str("[[control.fault]]\nrank = 0").is_err());
+        // unknown inner key
+        assert!(ExperimentConfig::from_toml_str(
+            "[[control.fault]]\nrank = 0\nat_s = 1.0\nkind = \"kill\"\ntypo = 1"
+        )
+        .is_err());
+        // out-of-range rank caught by validate
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n[[control.fault]]\nrank = 7\nat_s = 1.0\nkind = \"kill\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn control_schedule_knobs_parse() {
+        let doc = r#"
+            [control]
+            policy = "schedule_coupled"
+            schedule_hysteresis = 0.2
+            straggler_factor = 2.0
+            quarantine_after = 5
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.control.policy, ControlPolicy::ScheduleCoupled);
+        assert_eq!(cfg.control.schedule_hysteresis, 0.2);
+        assert_eq!(cfg.control.straggler_factor, 2.0);
+        assert_eq!(cfg.control.quarantine_after, 5);
     }
 
     #[test]

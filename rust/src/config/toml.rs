@@ -1,16 +1,20 @@
 //! Minimal TOML-subset parser (offline build: no `toml` crate).
 //!
-//! Supported: `[section]` headers (arbitrarily dotted), `key = value`
-//! with strings, integers, floats, booleans and flat arrays, `#`
-//! comments, blank lines. Keys are exposed flattened as
-//! `"section.key"`. That covers every config file this project ships;
-//! anything fancier is a parse error, not a silent misread.
+//! Supported: `[section]` headers (arbitrarily dotted), `[[section]]`
+//! table-array headers (each occurrence appends one table; keys below
+//! it fill that table), `key = value` with strings, integers, floats,
+//! booleans and flat arrays, `#` comments, blank lines. Section keys
+//! are exposed flattened as `"section.key"`; a table array is exposed
+//! as `"section"` → [`TomlValue::Array`] of [`TomlValue::Table`]s. That
+//! covers every config file this project ships; anything fancier is a
+//! parse error, not a silent misread.
 
 use std::collections::BTreeMap;
 
 use thiserror::Error;
 
-/// A TOML scalar or flat array.
+/// A TOML scalar, flat array, or table (the element of a `[[...]]`
+/// table array).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
     Str(String),
@@ -18,6 +22,7 @@ pub enum TomlValue {
     Float(f64),
     Bool(bool),
     Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
 }
 
 impl TomlValue {
@@ -49,6 +54,20 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Error)]
@@ -58,38 +77,83 @@ pub struct TomlError {
     pub msg: String,
 }
 
-/// Parse a TOML-subset document into flattened `section.key → value`.
+/// Where the current `key = value` lines land.
+enum Target {
+    /// Flattened `section.key` (empty section = document root).
+    Section(String),
+    /// The newest table of the `[[name]]` array at `out[name]`.
+    ArrayTable(String),
+}
+
+/// Parse a TOML-subset document into flattened `section.key → value`
+/// (plus `name → Array(Table, ...)` for table arrays).
 pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
-    let mut out = BTreeMap::new();
-    let mut section = String::new();
+    let mut out: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut target = Target::Section(String::new());
     for (idx, raw) in text.lines().enumerate() {
         let line_no = idx + 1;
+        let err = |msg: String| TomlError { line: line_no, msg };
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| err("unterminated [[section]]".into()))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty table-array name".into()));
+            }
+            let entry =
+                out.entry(name.to_string()).or_insert_with(|| TomlValue::Array(Vec::new()));
+            match entry {
+                TomlValue::Array(tables)
+                    if tables.iter().all(|t| matches!(t, TomlValue::Table(_))) =>
+                {
+                    tables.push(TomlValue::Table(BTreeMap::new()));
+                }
+                _ => return Err(err(format!("{name:?} is already a non-table-array value"))),
+            }
+            target = Target::ArrayTable(name.to_string());
             continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
             let name = rest
                 .strip_suffix(']')
-                .ok_or_else(|| TomlError { line: line_no, msg: "unterminated [section]".into() })?
+                .ok_or_else(|| err("unterminated [section]".into()))?
                 .trim();
             if name.is_empty() {
-                return Err(TomlError { line: line_no, msg: "empty section name".into() });
+                return Err(err("empty section name".into()));
             }
-            section = name.to_string();
+            target = Target::Section(name.to_string());
             continue;
         }
-        let eq = line
-            .find('=')
-            .ok_or_else(|| TomlError { line: line_no, msg: "expected key = value".into() })?;
+        let eq = line.find('=').ok_or_else(|| err("expected key = value".into()))?;
         let key = line[..eq].trim();
         if key.is_empty() {
-            return Err(TomlError { line: line_no, msg: "empty key".into() });
+            return Err(err("empty key".into()));
         }
-        let val = parse_value(line[eq + 1..].trim())
-            .map_err(|msg| TomlError { line: line_no, msg })?;
-        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
-        out.insert(full, val);
+        let val = parse_value(line[eq + 1..].trim()).map_err(&err)?;
+        match &target {
+            Target::Section(section) => {
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                out.insert(full, val);
+            }
+            Target::ArrayTable(name) => {
+                let Some(TomlValue::Array(tables)) = out.get_mut(name) else {
+                    return Err(err(format!("internal: lost table array {name:?}")));
+                };
+                let Some(TomlValue::Table(table)) = tables.last_mut() else {
+                    return Err(err(format!("internal: empty table array {name:?}")));
+                };
+                table.insert(key.to_string(), val);
+            }
+        }
     }
     Ok(out)
 }
@@ -190,6 +254,46 @@ mod tests {
             m["xs"],
             TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
         );
+    }
+
+    #[test]
+    fn table_arrays() {
+        let doc = r#"
+            [control]
+            policy = "fixed"
+
+            [[control.fault]]
+            rank = 0
+            kind = "kill"
+            at_s = 1.0
+
+            [[control.fault]]
+            rank = 2
+            kind = "slow"
+            at_s = 0.5
+            factor = 3.0
+
+            [eval]
+            every = 10
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["control.policy"].as_str(), Some("fixed"));
+        assert_eq!(m["eval.every"].as_i64(), Some(10));
+        let faults = m["control.fault"].as_array().unwrap();
+        assert_eq!(faults.len(), 2);
+        let f0 = faults[0].as_table().unwrap();
+        assert_eq!(f0["rank"].as_i64(), Some(0));
+        assert_eq!(f0["kind"].as_str(), Some("kill"));
+        let f1 = faults[1].as_table().unwrap();
+        assert_eq!(f1["factor"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn table_array_conflicts_rejected() {
+        // a scalar key cannot become a table array
+        assert!(parse("x = 1\n[[x]]\ny = 2").is_err());
+        assert!(parse("[[broken\nx = 1").is_err());
+        assert!(parse("[[]]").is_err());
     }
 
     #[test]

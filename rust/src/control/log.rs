@@ -1,6 +1,9 @@
 //! The control plane's flight recorder: one record per decision point
 //! (window boundary, fault, recovery), shared across workers and
-//! exported through the metrics layer as JSON.
+//! exported through the metrics layer as JSON. Since PR 2 each record
+//! also carries the collective schedule the window ran on and the
+//! local/global split of its t_AR — the evidence trail for the
+//! schedule-coupled policy's decisions.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -8,6 +11,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::metrics::CommPhaseSummary;
 use crate::util::Json;
 
 /// One control-plane decision / event.
@@ -23,14 +27,21 @@ pub struct ControlRecord {
     pub k: usize,
     /// λ0 multiplier in force after this decision.
     pub lam_scale: f32,
+    /// Collective schedule the window's all-reduce ran on (None for
+    /// records without a collective, e.g. kill/recovery events).
+    pub schedule: Option<String>,
     /// Observed mean per-step compute time (s).
     pub t_compute: f64,
     /// Observed collective latency, post → completion (s).
     pub t_allreduce: f64,
+    /// Modelled intra-group (local-link) share of the collective (s).
+    pub t_ar_local: f64,
+    /// Modelled inter-group (global-link) share of the collective (s).
+    pub t_ar_global: f64,
     /// Time this worker spent blocked in the wait (s) — the straggler
     /// signal.
     pub blocked_s: f64,
-    /// Fault / recovery annotation ("kill", "recovered", ...), if any.
+    /// Fault / recovery / quarantine annotation, if any.
     pub event: Option<String>,
 }
 
@@ -39,6 +50,10 @@ impl ControlRecord {
         // NaN/∞ have no JSON representation → null (keeps the whole
         // metrics file parseable even if an observation went bad).
         let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let opt_str = |s: &Option<String>| match s {
+            Some(v) => Json::Str(v.clone()),
+            None => Json::Null,
+        };
         let mut m = BTreeMap::new();
         m.insert("worker".into(), Json::Num(self.worker as f64));
         m.insert("window".into(), Json::Num(self.window as f64));
@@ -46,16 +61,13 @@ impl ControlRecord {
         m.insert("sim_time".into(), num(self.sim_time));
         m.insert("k".into(), Json::Num(self.k as f64));
         m.insert("lam_scale".into(), num(self.lam_scale as f64));
+        m.insert("schedule".into(), opt_str(&self.schedule));
         m.insert("t_compute".into(), num(self.t_compute));
         m.insert("t_allreduce".into(), num(self.t_allreduce));
+        m.insert("t_ar_local".into(), num(self.t_ar_local));
+        m.insert("t_ar_global".into(), num(self.t_ar_global));
         m.insert("blocked_s".into(), num(self.blocked_s));
-        m.insert(
-            "event".into(),
-            match &self.event {
-                Some(e) => Json::Str(e.clone()),
-                None => Json::Null,
-            },
-        );
+        m.insert("event".into(), opt_str(&self.event));
         Json::Obj(m)
     }
 }
@@ -91,7 +103,7 @@ impl ControlLog {
         v
     }
 
-    /// Records carrying a fault/recovery annotation.
+    /// Records carrying a fault/recovery/quarantine annotation.
     pub fn events(&self) -> Vec<ControlRecord> {
         self.records().into_iter().filter(|r| r.event.is_some()).collect()
     }
@@ -101,6 +113,32 @@ impl ControlLog {
         let ks: Vec<usize> =
             self.records().iter().filter(|r| r.event.is_none()).map(|r| r.k).collect();
         ks.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+
+    /// Number of times the collective schedule changed along the trace.
+    pub fn schedule_switches(&self) -> usize {
+        self.comm_summary().schedule_switches
+    }
+
+    /// Aggregate comm-phase accounting over the decision trace (records
+    /// carrying a collective, i.e. `schedule.is_some()`), computed in a
+    /// single ordered pass over one snapshot of the log.
+    pub fn comm_summary(&self) -> CommPhaseSummary {
+        let records = self.records();
+        let mut s = CommPhaseSummary::default();
+        let mut prev: Option<&str> = None;
+        for r in &records {
+            if let Some(name) = r.schedule.as_deref() {
+                s.local_s += r.t_ar_local;
+                s.global_s += r.t_ar_global;
+                s.rounds += 1;
+                if prev.is_some_and(|p| p != name) {
+                    s.schedule_switches += 1;
+                }
+                prev = Some(name);
+            }
+        }
+        s
     }
 
     /// The decision trace as a JSON array (the `control` key of the run's
@@ -127,8 +165,11 @@ mod tests {
             sim_time: iteration as f64 * 0.1,
             k,
             lam_scale: 1.0,
+            schedule: event.is_none().then(|| "ring".to_string()),
             t_compute: 1e-3,
             t_allreduce: 2e-3,
+            t_ar_local: 1.5e-3,
+            t_ar_global: 0.5e-3,
             blocked_s: 0.0,
             event: event.map(String::from),
         }
@@ -149,6 +190,22 @@ mod tests {
     }
 
     #[test]
+    fn schedule_switches_and_comm_summary() {
+        let log = ControlLog::new();
+        log.record(rec(0, 0, 1, None));
+        let mut hier = rec(0, 2, 1, None);
+        hier.schedule = Some("hierarchical".into());
+        log.record(hier);
+        log.record(rec(0, 4, 1, Some("kill"))); // no schedule: not counted
+        assert_eq!(log.schedule_switches(), 1);
+        let s = log.comm_summary();
+        assert_eq!(s.rounds, 2);
+        assert!((s.local_s - 3e-3).abs() < 1e-12);
+        assert!((s.global_s - 1e-3).abs() < 1e-12);
+        assert_eq!(s.schedule_switches, 1);
+    }
+
+    #[test]
     fn json_roundtrip_shape() {
         let log = ControlLog::new();
         log.record(rec(0, 1, 1, None));
@@ -158,6 +215,8 @@ mod tests {
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("k").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[0].get("schedule").unwrap().as_str(), Some("ring"));
+        assert_eq!(arr[0].get("t_ar_local").unwrap().as_f64(), Some(1.5e-3));
         assert_eq!(arr[1].get("event").unwrap().as_str(), Some("recovered"));
         assert_eq!(arr[0].get("event"), Some(&Json::Null));
     }

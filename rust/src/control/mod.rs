@@ -4,26 +4,35 @@
 //! base λ0 up front, but the profitable operating point depends on the
 //! *live* ratio of compute to all-reduce time (Eqs. 13/14) — which
 //! drifts with stragglers, payload size and topology — and on whether
-//! workers are healthy at all. This subsystem closes the loop:
+//! workers are healthy at all. Since the collective schedule itself is
+//! now first-class ([`crate::comm::CollectiveSchedule`]), t_AR is no
+//! longer an opaque constant either: the control plane can pick *both*
+//! the window length k and the schedule per window. This subsystem
+//! closes the loop:
 //!
 //! * [`staleness`] — the [`StalenessController`] policies ([`Fixed`],
-//!   [`DssPid`], [`LambdaCoupled`]) that adapt k and λ0 from observed
-//!   t_C / t_AR, consulted by the engines at every wait/post boundary.
+//!   [`DssPid`], [`LambdaCoupled`], [`ScheduleCoupled`]) that adapt k,
+//!   λ0 and the collective schedule from observed t_C / t_AR, and
+//!   quarantine persistent stragglers inside their dragonfly group,
+//!   consulted by the engines at every wait/post boundary.
 //! * [`chaos`] — the [`FaultPlan`] / [`ChaosInjector`] that script
 //!   kills, slowdowns and stalls in virtual time, with heartbeat
 //!   detection ([`HeartbeatBoard`]) and checkpoint recovery
 //!   ([`SnapshotStore`]).
 //! * [`log`] — the [`ControlLog`] flight recorder whose per-window
-//!   k/λ/straggler decisions ride into the metrics JSON export.
+//!   k/λ/schedule/straggler decisions (and the local/global t_AR phase
+//!   split) ride into the metrics JSON export.
 //!
-//! **Consensus without extra rounds**: adaptive k only works if every
-//! rank switches windows at the same iteration, or the rendezvous
+//! **Consensus without extra rounds**: adaptive decisions only work if
+//! every rank switches windows at the same point, or the rendezvous
 //! rounds unmatch and the run deadlocks. Rather than a separate control
-//! collective, the engines piggyback each worker's observations as two
-//! extra elements on the update all-reduce itself; every rank then sees
-//! the identical cross-rank mean and the (deterministic) controllers
-//! reach the identical decision. The control plane rides the data
-//! plane.
+//! collective, the engines piggyback each worker's observations as
+//! extra elements on the update all-reduce itself — the cross-rank
+//! means plus a rank-offset slot carrying each rank's own t_C — so
+//! every rank sees identical observations and the (deterministic)
+//! controllers reach the identical (k, λ, schedule, quarantine)
+//! decision with no extra communication round. The control plane rides
+//! the data plane.
 
 pub mod chaos;
 pub mod log;
@@ -31,7 +40,10 @@ pub mod staleness;
 
 pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard, SnapshotStore};
 pub use log::{ControlLog, ControlRecord};
-pub use staleness::{Decision, DssPid, Fixed, LambdaCoupled, StalenessController, WindowObs};
+pub use staleness::{
+    Decision, DssPid, Fixed, LambdaCoupled, Quarantine, ScheduleCoupled, ScheduleEnv,
+    StalenessController, WindowObs,
+};
 
 use anyhow::{bail, Result};
 
@@ -46,6 +58,10 @@ pub enum ControlPolicy {
     /// [`ControlPolicy::DssPid`] plus λ0 rescaling with effective
     /// staleness.
     LambdaCoupled,
+    /// [`ControlPolicy::LambdaCoupled`] plus per-window collective
+    /// schedule selection (flat ring vs hierarchical dragonfly) and
+    /// group-local straggler quarantine.
+    ScheduleCoupled,
 }
 
 impl ControlPolicy {
@@ -54,7 +70,13 @@ impl ControlPolicy {
             "fixed" | "static" => ControlPolicy::Fixed,
             "dss_pid" | "dss-pid" | "dsspid" | "dssp" => ControlPolicy::DssPid,
             "lambda_coupled" | "lambda-coupled" | "lambdacoupled" => ControlPolicy::LambdaCoupled,
-            other => bail!("unknown control policy {other:?} (fixed | dss_pid | lambda_coupled)"),
+            "schedule_coupled" | "schedule-coupled" | "schedulecoupled" => {
+                ControlPolicy::ScheduleCoupled
+            }
+            other => bail!(
+                "unknown control policy {other:?} \
+                 (fixed | dss_pid | lambda_coupled | schedule_coupled)"
+            ),
         })
     }
 
@@ -63,6 +85,7 @@ impl ControlPolicy {
             ControlPolicy::Fixed => "fixed",
             ControlPolicy::DssPid => "dss_pid",
             ControlPolicy::LambdaCoupled => "lambda_coupled",
+            ControlPolicy::ScheduleCoupled => "schedule_coupled",
         }
     }
 }
@@ -83,6 +106,15 @@ pub struct ControlConfig {
     /// Bounds on the λ0 multiplier ([`LambdaCoupled`]).
     pub lam_scale_min: f32,
     pub lam_scale_max: f32,
+    /// Relative margin a candidate schedule's calibrated cost must
+    /// undercut the active schedule's before [`ScheduleCoupled`]
+    /// switches to it (noise guard against schedule flapping).
+    pub schedule_hysteresis: f64,
+    /// A rank this much slower than the mean of the rest is a straggler.
+    pub straggler_factor: f64,
+    /// Consecutive slow (healthy) windows before a quarantine engages
+    /// (lifts).
+    pub quarantine_after: u64,
     /// Heartbeat staleness that marks a worker dead (virtual seconds).
     pub heartbeat_timeout_s: f64,
     /// Time to restore a worker from a snapshot (virtual seconds).
@@ -105,6 +137,9 @@ impl Default for ControlConfig {
             adjust_every: 1,
             lam_scale_min: 0.25,
             lam_scale_max: 4.0,
+            schedule_hysteresis: 0.1,
+            straggler_factor: 1.5,
+            quarantine_after: 3,
             heartbeat_timeout_s: 0.5,
             restore_s: 0.2,
             snapshot_every: 0,
@@ -127,13 +162,28 @@ impl ControlConfig {
         if self.heartbeat_timeout_s < 0.0 || self.restore_s < 0.0 {
             bail!("control timeouts must be non-negative");
         }
+        if self.schedule_hysteresis < 0.0 {
+            bail!("control.schedule_hysteresis must be non-negative");
+        }
+        if self.straggler_factor < 1.0 {
+            bail!("control.straggler_factor must be ≥ 1");
+        }
+        if self.quarantine_after == 0 {
+            bail!("control.quarantine_after must be ≥ 1");
+        }
         Ok(())
     }
 
     /// Fresh controller for one worker, seeded with the configured
-    /// staleness. All workers must build identical controllers (see the
-    /// module docs' determinism contract).
-    pub fn build_controller(&self, k_init: usize) -> Box<dyn StalenessController> {
+    /// staleness; `env` prices the schedule candidates for
+    /// [`ScheduleCoupled`] (ignored by the other policies). All workers
+    /// must build identical controllers (see the module docs'
+    /// determinism contract).
+    pub fn build_controller(
+        &self,
+        k_init: usize,
+        env: ScheduleEnv,
+    ) -> Box<dyn StalenessController> {
         match self.policy {
             ControlPolicy::Fixed => Box::new(Fixed::new(k_init)),
             ControlPolicy::DssPid => Box::new(DssPid::new(
@@ -153,6 +203,20 @@ impl ControlConfig {
                 self.adjust_every,
                 self.lam_scale_min,
                 self.lam_scale_max,
+            )),
+            ControlPolicy::ScheduleCoupled => Box::new(ScheduleCoupled::new(
+                k_init,
+                self.k_min,
+                self.k_max,
+                self.gain_p,
+                self.gain_i,
+                self.adjust_every,
+                self.lam_scale_min,
+                self.lam_scale_max,
+                env,
+                self.schedule_hysteresis,
+                self.straggler_factor,
+                self.quarantine_after,
             )),
         }
     }
@@ -175,10 +239,19 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in [ControlPolicy::Fixed, ControlPolicy::DssPid, ControlPolicy::LambdaCoupled] {
+        for p in [
+            ControlPolicy::Fixed,
+            ControlPolicy::DssPid,
+            ControlPolicy::LambdaCoupled,
+            ControlPolicy::ScheduleCoupled,
+        ] {
             assert_eq!(ControlPolicy::parse(p.name()).unwrap(), p);
         }
         assert_eq!(ControlPolicy::parse("DSS-PID").unwrap(), ControlPolicy::DssPid);
+        assert_eq!(
+            ControlPolicy::parse("schedule-coupled").unwrap(),
+            ControlPolicy::ScheduleCoupled
+        );
         assert!(ControlPolicy::parse("bogus").is_err());
     }
 
@@ -186,7 +259,7 @@ mod tests {
     fn defaults_validate_and_build() {
         let c = ControlConfig::default();
         c.validate().unwrap();
-        let ctl = c.build_controller(1);
+        let ctl = c.build_controller(1, ScheduleEnv::default());
         assert_eq!(ctl.name(), "fixed");
         assert_eq!(ctl.current().k, 1);
         assert_eq!(c.snapshot_cadence(), 0);
@@ -200,6 +273,12 @@ mod tests {
         c.validate().unwrap();
         c.lam_scale_min = 5.0;
         assert!(c.validate().is_err());
+        c.lam_scale_min = 0.25;
+        c.straggler_factor = 0.5;
+        assert!(c.validate().is_err());
+        c.straggler_factor = 1.5;
+        c.quarantine_after = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -210,11 +289,26 @@ mod tests {
             k_max: 4,
             ..Default::default()
         };
-        let ctl = c.build_controller(1); // below k_min: clamped up
+        let ctl = c.build_controller(1, ScheduleEnv::default()); // below k_min: clamped up
         assert_eq!(ctl.name(), "dss_pid");
         assert_eq!(ctl.current().k, 2);
-        let ctl = c.build_controller(9); // above k_max: clamped down
+        let ctl = c.build_controller(9, ScheduleEnv::default()); // above k_max: clamped down
         assert_eq!(ctl.current().k, 4);
+    }
+
+    #[test]
+    fn schedule_coupled_builds_with_env() {
+        let c = ControlConfig { policy: ControlPolicy::ScheduleCoupled, ..Default::default() };
+        let env = ScheduleEnv {
+            n_elems: 271_690,
+            n_ranks: 256,
+            topology: crate::comm::Dragonfly::for_nodes(256),
+            ..ScheduleEnv::default()
+        };
+        let ctl = c.build_controller(1, env);
+        assert_eq!(ctl.name(), "schedule_coupled");
+        // before any observation the configured schedule stands
+        assert_eq!(ctl.current().schedule, Some(env.net.algo));
     }
 
     #[test]

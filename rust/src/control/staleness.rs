@@ -1,5 +1,6 @@
 //! Staleness controllers: the policies that pick the window length k
-//! (and the compensation strength λ0's scale) online.
+//! (and the compensation strength λ0's scale, and — new — the
+//! collective schedule) online.
 //!
 //! The paper fixes k a priori, but its own Eq. 13/14 analysis says the
 //! profitable overlap depth depends on the live ratio t_AR / t_C — a
@@ -7,7 +8,9 @@
 //! Dynamic-SSP (Zhao et al., 1908.11848) shows a bounded online
 //! adaptation of k beats any static choice; DC-ASGD (Zheng et al.,
 //! 1609.08326) shows the compensation strength must co-adapt with the
-//! effective staleness. Three policies:
+//! effective staleness; and Layered SGD (Yu & Yoo 2019) shows t_AR
+//! itself is a *choice* — the hierarchical schedule beats the flat ring
+//! whenever latency dominates. Four policies:
 //!
 //! * [`Fixed`] — the paper's static k (the control-plane no-op).
 //! * [`DssPid`] — DSSP-style bounded adaptation: drive k toward
@@ -15,17 +18,30 @@
 //!   clamped to `[k_min, k_max]`.
 //! * [`LambdaCoupled`] — [`DssPid`] plus λ0 rescaling ∝ k/k_ref
 //!   (stronger compensation at deeper staleness, bounded).
+//! * [`ScheduleCoupled`] — [`LambdaCoupled`] plus (a) per-window
+//!   collective-schedule selection between the flat fabric model and
+//!   the hierarchical dragonfly schedule, from the modelled t_AR of
+//!   each candidate confirmed against the observed t_AR, and (b)
+//!   **straggler quarantine**: a rank whose piggybacked per-step t_C
+//!   persistently exceeds the rest is quarantined inside its dragonfly
+//!   group — the group keeps the base window while every other rank's
+//!   k is boosted, so healthy ranks fill the straggler's extra wall
+//!   time with useful local steps instead of blocking in the wait.
 //!
 //! Determinism contract: every worker runs its own controller instance,
 //! but all instances must make **identical decisions** — the engines
-//! feed them the *cross-rank mean* observations carried on the
-//! collective itself (see `algo::dcs3gd`), so identical inputs ⇒
-//! identical k on every rank ⇒ identical window schedules ⇒ the
-//! rendezvous rounds stay matched. Controllers must therefore be pure
-//! functions of their observation history (no RNG, no wall clock).
+//! feed them the *cross-rank* observations carried on the collective
+//! itself (see `algo::dcs3gd`): the all-reduced tail hands every rank
+//! the same mean t_C / t_AR and the same per-rank t_C vector, so
+//! identical inputs ⇒ identical (k, schedule, quarantine) on every
+//! rank ⇒ the rendezvous rounds stay matched. Controllers must
+//! therefore be pure functions of their observation history (no RNG,
+//! no wall clock).
+
+use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
 
 /// What the engine asks the controller after each completed window.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct WindowObs {
     /// Completed-window index (0-based).
     pub window: u64,
@@ -37,14 +53,51 @@ pub struct WindowObs {
     /// window's all-reduce, post → completion (s). 0 until one has
     /// completed.
     pub t_allreduce: f64,
+    /// Per-rank per-step compute time over the window (s), identical on
+    /// every rank (each rank's slot rides the all-reduce zero-padded).
+    /// Empty when the engine does not piggyback the per-rank split.
+    pub per_rank_t_c: Vec<f64>,
 }
 
-/// The controller's answer: window length for the next window and a
-/// multiplier on the configured λ0.
+/// An active straggler quarantine: `rank` (in dragonfly group `group`)
+/// is persistently slow; its whole group runs the group-local window
+/// `k_group` while every other rank runs the boosted [`Decision::k`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quarantine {
+    pub rank: usize,
+    pub group: usize,
+    /// Window length inside the quarantined group (≤ [`Decision::k`]).
+    pub k_group: usize,
+}
+
+/// The controller's answer: window length for the next window, a
+/// multiplier on the configured λ0, and (for schedule-aware policies)
+/// the collective schedule plus any straggler quarantine.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Decision {
     pub k: usize,
     pub lam_scale: f32,
+    /// Collective schedule for the next window's all-reduce; `None`
+    /// keeps the configured one.
+    pub schedule: Option<AllReduceAlgo>,
+    /// Straggler quarantine in force, if any.
+    pub quarantine: Option<Quarantine>,
+}
+
+impl Decision {
+    /// A schedule-agnostic decision (the pre-schedule-aware shape).
+    pub fn plain(k: usize, lam_scale: f32) -> Self {
+        Decision { k, lam_scale, schedule: None, quarantine: None }
+    }
+
+    /// The window length `rank` runs: the quarantined group's members
+    /// keep the group-local window, everyone else the (boosted) k.
+    pub fn k_for(&self, rank: usize, nodes_per_group: usize) -> usize {
+        match self.quarantine {
+            Some(q) if rank / nodes_per_group.max(1) == q.group => q.k_group,
+            _ => self.k,
+        }
+    }
 }
 
 /// A staleness policy. One instance per worker; see the module docs for
@@ -77,7 +130,7 @@ impl StalenessController for Fixed {
     }
 
     fn current(&self) -> Decision {
-        Decision { k: self.k, lam_scale: 1.0 }
+        Decision::plain(self.k, 1.0)
     }
 
     fn on_window(&mut self, _obs: &WindowObs) -> Decision {
@@ -143,7 +196,7 @@ impl StalenessController for DssPid {
     }
 
     fn current(&self) -> Decision {
-        Decision { k: self.k, lam_scale: 1.0 }
+        Decision::plain(self.k, 1.0)
     }
 
     fn on_window(&mut self, obs: &WindowObs) -> Decision {
@@ -217,11 +270,268 @@ impl StalenessController for LambdaCoupled {
     }
 
     fn current(&self) -> Decision {
-        Decision { k: self.inner.k, lam_scale: self.lam_scale() }
+        Decision::plain(self.inner.k, self.lam_scale())
     }
 
     fn on_window(&mut self, obs: &WindowObs) -> Decision {
         self.inner.on_window(obs);
+        self.current()
+    }
+}
+
+/// Everything the schedule-aware policy needs to price its candidate
+/// schedules: the fabric, the topology, and the collective's payload.
+/// The default (zero payload/ranks) prices nothing — the policy then
+/// simply keeps the configured schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScheduleEnv {
+    /// The configured fabric model (its `algo` is the starting
+    /// schedule; its α-β pair prices the flat candidates).
+    pub net: NetModel,
+    /// The dragonfly the hierarchical candidate runs on (also defines
+    /// the quarantine group boundaries).
+    pub topology: Dragonfly,
+    /// All-reduced payload in f32 elements (model + control piggyback).
+    pub n_elems: usize,
+    pub n_ranks: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ActiveQuarantine {
+    rank: usize,
+    group: usize,
+    /// Extra window depth granted to ranks outside the group.
+    boost: usize,
+    /// Consecutive healthy windows seen since the last slow one.
+    healthy_streak: u64,
+}
+
+/// [`LambdaCoupled`] plus per-window (schedule, quarantine) selection —
+/// the policy that closes the loop DSSP leaves open by adapting only k.
+///
+/// Schedule: the controller prices the flat-ring and hierarchical
+/// candidates on the [`ScheduleEnv`]'s cost models and keeps a
+/// per-schedule *calibration* — an EMA of observed t_AR over modelled
+/// t_AR, learned for whichever schedule is active. Each window it
+/// compares the calibrated costs and switches when the candidate
+/// undercuts the active schedule by the hysteresis margin. A schedule
+/// that underperforms its model (congested optics, mispriced fabric)
+/// therefore gets abandoned on evidence, while post-skew that inflates
+/// every schedule's observations equally cancels out of the
+/// comparison — the hysteresis keeps noise from flapping the fleet.
+///
+/// Quarantine: from the piggybacked per-rank t_C vector, a rank whose
+/// compute time exceeds `straggler_factor ×` the mean of the others for
+/// `quarantine_after` consecutive windows is quarantined inside its
+/// dragonfly group: the group keeps the base window while everyone
+/// else's k is boosted by `round(k·(slowdown − 1))` (clamped to k_max),
+/// so the healthy ranks spend the straggler's extra wall time computing
+/// instead of blocked. The quarantine lifts after `quarantine_after`
+/// consecutive healthy windows.
+#[derive(Debug, Clone)]
+pub struct ScheduleCoupled {
+    inner: LambdaCoupled,
+    env: ScheduleEnv,
+    k_max: usize,
+    hysteresis: f64,
+    straggler_factor: f64,
+    quarantine_after: u64,
+    active: AllReduceAlgo,
+    bootstrapped: bool,
+    /// Observed-over-modelled t_AR calibration per candidate (EMA,
+    /// learned while that candidate is active; 1.0 until evidence).
+    cal_flat: f64,
+    cal_hier: f64,
+    slow_streak: u64,
+    slow_rank: Option<usize>,
+    quarantine: Option<ActiveQuarantine>,
+}
+
+/// EMA weight of the newest calibration sample.
+const CAL_GAIN: f64 = 0.3;
+
+impl ScheduleCoupled {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        k_init: usize,
+        k_min: usize,
+        k_max: usize,
+        gain_p: f64,
+        gain_i: f64,
+        adjust_every: u64,
+        lam_scale_min: f32,
+        lam_scale_max: f32,
+        env: ScheduleEnv,
+        hysteresis: f64,
+        straggler_factor: f64,
+        quarantine_after: u64,
+    ) -> Self {
+        ScheduleCoupled {
+            inner: LambdaCoupled::new(
+                k_init,
+                k_min,
+                k_max,
+                gain_p,
+                gain_i,
+                adjust_every,
+                lam_scale_min,
+                lam_scale_max,
+            ),
+            env,
+            k_max: k_max.max(k_min.max(1)),
+            hysteresis: hysteresis.max(0.0),
+            straggler_factor: straggler_factor.max(1.0),
+            quarantine_after: quarantine_after.max(1),
+            active: env.net.algo,
+            bootstrapped: false,
+            cal_flat: 1.0,
+            cal_hier: 1.0,
+            slow_streak: 0,
+            slow_rank: None,
+            quarantine: None,
+        }
+    }
+
+    /// Modelled t_AR of a candidate schedule on this run's payload.
+    fn modelled(&self, algo: AllReduceAlgo) -> f64 {
+        NetModel { algo, ..self.env.net }.allreduce_time(self.env.n_elems, self.env.n_ranks)
+    }
+
+    /// The flat and hierarchical candidates (the configured schedule is
+    /// always one of them).
+    fn candidates(&self) -> (AllReduceAlgo, AllReduceAlgo) {
+        let flat = match self.env.net.algo {
+            AllReduceAlgo::Hierarchical(_) => AllReduceAlgo::Ring,
+            other => other,
+        };
+        (flat, AllReduceAlgo::Hierarchical(self.env.topology))
+    }
+
+    fn pick_schedule(&mut self, obs: &WindowObs) {
+        if self.env.n_elems == 0 || self.env.n_ranks <= 1 {
+            return; // nothing to price
+        }
+        let (flat, hier) = self.candidates();
+        if !self.bootstrapped {
+            // First decision: argmin of the raw models (no observation
+            // exists yet; ties keep the configured schedule).
+            self.bootstrapped = true;
+            let (t_flat, t_hier) = (self.modelled(flat), self.modelled(hier));
+            if t_hier < t_flat {
+                self.active = hier;
+            } else if t_flat < t_hier {
+                self.active = flat;
+            }
+            return;
+        }
+        // Steady state: learn the active schedule's calibration from
+        // the observed t_AR, then compare calibrated costs. The switch
+        // fires when the candidate undercuts what we are actually
+        // paying by the hysteresis margin — so a schedule whose model
+        // is optimistic gets abandoned on evidence, in either
+        // direction.
+        let active_is_hier = matches!(self.active, AllReduceAlgo::Hierarchical(_));
+        let m_active = self.modelled(self.active);
+        if obs.t_allreduce > 0.0 && m_active > 0.0 {
+            let cal = if active_is_hier { &mut self.cal_hier } else { &mut self.cal_flat };
+            *cal = (1.0 - CAL_GAIN) * *cal + CAL_GAIN * (obs.t_allreduce / m_active);
+        }
+        let eff_flat = self.cal_flat * self.modelled(flat);
+        let eff_hier = self.cal_hier * self.modelled(hier);
+        let (other, eff_other, eff_active) = if active_is_hier {
+            (flat, eff_flat, eff_hier)
+        } else {
+            (hier, eff_hier, eff_flat)
+        };
+        if eff_active > 0.0 && eff_other * (1.0 + self.hysteresis) < eff_active {
+            self.active = other;
+        }
+    }
+
+    fn update_quarantine(&mut self, obs: &WindowObs) {
+        let t = &obs.per_rank_t_c;
+        if t.len() != self.env.n_ranks || self.env.n_ranks < 2 {
+            return;
+        }
+        // Quarantine is group-granular: with every rank in one dragonfly
+        // group there is nobody left to boost, only a run to shorten.
+        if self.env.topology.groups_spanned(self.env.n_ranks) < 2 {
+            return;
+        }
+        // Slowest rank (ties break to the lowest rank — determinism).
+        let mut slow = 0usize;
+        for (r, v) in t.iter().enumerate() {
+            if *v > t[slow] {
+                slow = r;
+            }
+        }
+        let total: f64 = t.iter().sum();
+        let rest_mean = (total - t[slow]) / (t.len() - 1) as f64;
+        let is_slow = rest_mean > 0.0 && t[slow] > self.straggler_factor * rest_mean;
+
+        if is_slow {
+            // Streaks are per-culprit: a different rank restarts them.
+            if self.slow_rank != Some(slow) {
+                self.slow_rank = Some(slow);
+                self.slow_streak = 0;
+            }
+            self.slow_streak += 1;
+            if let Some(q) = &mut self.quarantine {
+                q.healthy_streak = 0;
+            }
+            if self.slow_streak >= self.quarantine_after {
+                let base_k = self.inner.inner.k;
+                // No headroom above the base window means no boost to
+                // hand the healthy ranks — engaging would only log a
+                // mitigation that cannot happen.
+                let headroom = self.k_max.saturating_sub(base_k);
+                if headroom == 0 {
+                    self.quarantine = None;
+                } else {
+                    let slowdown = t[slow] / rest_mean;
+                    let boost = ((slowdown - 1.0) * base_k as f64).round().max(1.0) as usize;
+                    self.quarantine = Some(ActiveQuarantine {
+                        rank: slow,
+                        group: self.env.topology.group_of(slow),
+                        boost: boost.min(headroom),
+                        healthy_streak: 0,
+                    });
+                }
+            }
+        } else {
+            self.slow_rank = None;
+            self.slow_streak = 0;
+            if let Some(q) = &mut self.quarantine {
+                q.healthy_streak += 1;
+                if q.healthy_streak >= self.quarantine_after {
+                    self.quarantine = None;
+                }
+            }
+        }
+    }
+}
+
+impl StalenessController for ScheduleCoupled {
+    fn name(&self) -> &'static str {
+        "schedule_coupled"
+    }
+
+    fn current(&self) -> Decision {
+        let base = self.inner.current();
+        let mut d = base;
+        d.schedule = Some(self.active);
+        if let Some(q) = &self.quarantine {
+            d.k = (base.k + q.boost).min(self.k_max);
+            d.quarantine =
+                Some(Quarantine { rank: q.rank, group: q.group, k_group: base.k });
+        }
+        d
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        self.inner.on_window(obs);
+        self.pick_schedule(obs);
+        self.update_quarantine(obs);
         self.current()
     }
 }
@@ -231,16 +541,26 @@ mod tests {
     use super::*;
 
     fn obs(window: u64, t_c: f64, t_ar: f64) -> WindowObs {
-        WindowObs { window, iteration: window * 4, t_compute: t_c, t_allreduce: t_ar }
+        WindowObs {
+            window,
+            iteration: window * 4,
+            t_compute: t_c,
+            t_allreduce: t_ar,
+            per_rank_t_c: Vec::new(),
+        }
+    }
+
+    fn obs_ranks(window: u64, t_c: f64, t_ar: f64, per_rank: Vec<f64>) -> WindowObs {
+        WindowObs { per_rank_t_c: per_rank, ..obs(window, t_c, t_ar) }
     }
 
     #[test]
     fn fixed_never_moves() {
         let mut c = Fixed::new(3);
-        assert_eq!(c.current(), Decision { k: 3, lam_scale: 1.0 });
+        assert_eq!(c.current(), Decision::plain(3, 1.0));
         for w in 0..20 {
             let d = c.on_window(&obs(w, 1e-3, 1.0)); // huge t_AR: would tempt any adaptive policy
-            assert_eq!(d, Decision { k: 3, lam_scale: 1.0 });
+            assert_eq!(d, Decision::plain(3, 1.0));
         }
     }
 
@@ -342,6 +662,170 @@ mod tests {
         let (mut a, mut b) = (mk(), mk());
         for w in 0..100 {
             let o = obs(w, 1e-3, ((w % 7) as f64 + 1.0) * 1e-3);
+            assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
+        }
+    }
+
+    // --- ScheduleCoupled ---
+
+    fn sched_env(n_elems: usize, n_ranks: usize, beta: f64) -> ScheduleEnv {
+        ScheduleEnv {
+            net: NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: beta, algo: AllReduceAlgo::Ring },
+            topology: Dragonfly::for_nodes(n_ranks),
+            n_elems,
+            n_ranks,
+        }
+    }
+
+    fn sc(env: ScheduleEnv) -> ScheduleCoupled {
+        ScheduleCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3)
+    }
+
+    #[test]
+    fn schedule_coupled_picks_hierarchical_at_scale() {
+        // ResNet-20 payload at 256 ranks: the hierarchical model is
+        // cheaper (see comm::schedule tests) — the bootstrap pick must
+        // switch off the flat ring.
+        let mut c = sc(sched_env(271_690, 256, 10e9));
+        let d = c.on_window(&obs(0, 1e-3, 0.0));
+        assert!(
+            matches!(d.schedule, Some(AllReduceAlgo::Hierarchical(_))),
+            "picked {:?}",
+            d.schedule
+        );
+    }
+
+    #[test]
+    fn schedule_coupled_keeps_ring_when_flat_is_cheaper() {
+        // Huge payload at small N: the flat ring's bandwidth optimality
+        // wins; the pick must stay on the configured ring.
+        let mut c = sc(sched_env(25_600_000, 8, 10e9));
+        let d = c.on_window(&obs(0, 1e-3, 0.0));
+        assert_eq!(d.schedule, Some(AllReduceAlgo::Ring));
+    }
+
+    #[test]
+    fn schedule_coupled_switches_on_observed_evidence() {
+        // Models prefer the flat ring (large payload, small N), so the
+        // bootstrap picks it — but the *observed* t_AR then comes in
+        // ~10× the flat model (say, congested fabric). The calibration
+        // must abandon the ring for the hierarchical candidate.
+        let env = sched_env(25_600_000, 8, 10e9);
+        let flat_net = NetModel { algo: AllReduceAlgo::Ring, ..env.net };
+        let t_flat = flat_net.allreduce_time(25_600_000, 8);
+        let hier = AllReduceAlgo::Hierarchical(env.topology);
+        let t_hier = NetModel { algo: hier, ..env.net }.allreduce_time(25_600_000, 8);
+        assert!(t_flat < t_hier, "premise: the model must prefer flat here");
+        let mut c = sc(env);
+        let d0 = c.on_window(&obs(0, 1e-3, 0.0));
+        assert_eq!(d0.schedule, Some(AllReduceAlgo::Ring), "bootstrap argmin");
+        // evidence: we are actually paying 10× the flat model
+        let mut switched_at = None;
+        for w in 1..10 {
+            let d = c.on_window(&obs(w, 1e-3, t_flat * 10.0));
+            if d.schedule == Some(hier) {
+                switched_at = Some(w);
+                break;
+            }
+        }
+        let w0 = switched_at.expect("observed evidence never triggered the switch");
+        // after the switch, accurate hierarchical observations hold it
+        for w in w0 + 1..w0 + 10 {
+            let d = c.on_window(&obs(w, 1e-3, t_hier));
+            assert_eq!(d.schedule, Some(hier), "flapped back at window {w}");
+        }
+    }
+
+    #[test]
+    fn schedule_coupled_accurate_observations_do_not_flap() {
+        // When the active schedule performs exactly as modelled, the
+        // hysteresis must keep the bootstrap pick stable forever.
+        let env = sched_env(271_690, 256, 10e9); // hier wins the bootstrap
+        let hier = AllReduceAlgo::Hierarchical(env.topology);
+        let t_hier = NetModel { algo: hier, ..env.net }.allreduce_time(271_690, 256);
+        let mut c = sc(env);
+        for w in 0..30 {
+            let d = c.on_window(&obs(w, 1e-3, t_hier));
+            assert_eq!(d.schedule, Some(hier), "flapped at window {w}");
+        }
+    }
+
+    #[test]
+    fn quarantine_engages_after_streak_and_boosts_healthy_ranks() {
+        let env = sched_env(10_000, 8, 10e9);
+        let mut c = ScheduleCoupled::new(2, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3);
+        let npg = env.topology.nodes_per_group;
+        // rank 5 runs 3× slower than everyone else
+        let slow = |w| {
+            let mut per = vec![1e-3; 8];
+            per[5] = 3e-3;
+            obs_ranks(w, 1e-3, 0.0, per)
+        };
+        // two slow windows: not yet quarantined
+        for w in 0..2 {
+            assert_eq!(c.on_window(&slow(w)).quarantine, None);
+        }
+        // third consecutive slow window: quarantine engages
+        let d = c.on_window(&slow(2));
+        let q = d.quarantine.expect("quarantine after 3 slow windows");
+        assert_eq!(q.rank, 5);
+        assert_eq!(q.group, env.topology.group_of(5));
+        assert_eq!(q.k_group, 2, "quarantined group keeps the base window");
+        assert!(d.k > 2, "healthy ranks must get the boost (k = {})", d.k);
+        // per-rank view: group members pinned, others boosted
+        for r in 0..8 {
+            let expect = if r / npg == q.group { q.k_group } else { d.k };
+            assert_eq!(d.k_for(r, npg), expect, "rank {r}");
+        }
+        // healthy windows lift it again after the streak
+        let healthy = |w| obs_ranks(w, 1e-3, 0.0, vec![1e-3; 8]);
+        assert!(c.on_window(&healthy(3)).quarantine.is_some());
+        assert!(c.on_window(&healthy(4)).quarantine.is_some());
+        assert_eq!(c.on_window(&healthy(5)).quarantine, None, "quarantine must lift");
+    }
+
+    #[test]
+    fn quarantine_skipped_when_k_has_no_headroom() {
+        // Base k pinned at k_max: there is no boost to hand out, so the
+        // quarantine must not engage (and must not be logged as if it
+        // mitigated anything).
+        let env = sched_env(10_000, 8, 10e9);
+        let mut c = ScheduleCoupled::new(4, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 1);
+        let mut per = vec![1e-3; 8];
+        per[5] = 5e-3;
+        for w in 0..5 {
+            let d = c.on_window(&obs_ranks(w, 1e-3, 0.0, per.clone()));
+            assert_eq!(d.quarantine, None, "no-op quarantine engaged at window {w}");
+            assert_eq!(d.k, 4);
+        }
+    }
+
+    #[test]
+    fn quarantine_streak_resets_when_culprit_changes() {
+        let env = sched_env(10_000, 4, 10e9);
+        let mut c = ScheduleCoupled::new(1, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 2);
+        let mk = |w, slow_rank: usize| {
+            let mut per = vec![1e-3; 4];
+            per[slow_rank] = 5e-3;
+            obs_ranks(w, 1e-3, 0.0, per)
+        };
+        assert_eq!(c.on_window(&mk(0, 1)).quarantine, None);
+        // culprit changes: streak restarts, still no quarantine
+        assert_eq!(c.on_window(&mk(1, 2)).quarantine, None);
+        // same culprit twice in a row now trips it
+        let d = c.on_window(&mk(2, 2)).quarantine.expect("streak complete");
+        assert_eq!(d.rank, 2);
+    }
+
+    #[test]
+    fn schedule_coupled_is_deterministic() {
+        let env = sched_env(271_690, 64, 10e9);
+        let mk = || sc(env);
+        let (mut a, mut b) = (mk(), mk());
+        for w in 0..100 {
+            let mut per = vec![1e-3; 64];
+            per[(w % 64) as usize] *= 1.0 + (w % 5) as f64;
+            let o = obs_ranks(w, 1e-3, ((w % 7) as f64 + 1.0) * 1e-3, per.clone());
             assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
         }
     }

@@ -45,7 +45,9 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::algo::{run_experiment, Algo, RunReport};
-    pub use crate::comm::{AllReduceAlgo, Group, NetModel};
+    pub use crate::comm::{
+        AllReduceAlgo, CollectiveSchedule, Dragonfly, Group, NetModel, PhaseTimes,
+    };
     pub use crate::config::ExperimentConfig;
     pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;

@@ -11,8 +11,8 @@ use anyhow::{bail, Result};
 
 use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
-use dcs3gd::comm::{AllReduceAlgo, NetModel};
-use dcs3gd::config::ExperimentConfig;
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::config::{parse_schedule, ExperimentConfig};
 use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind};
 use dcs3gd::model::meta::discover_variants;
 use dcs3gd::simtime::ComputeModel;
@@ -24,8 +24,10 @@ USAGE:
   dcs3gd train [--config FILE] [--variant V] [--algo A] [--nodes N]
                [--local-batch B] [--steps S] [--lam0 L] [--staleness K]
                [--eval-every E] [--out-dir DIR] [--time-from-wall]
+               [--schedule S] [--groups G] [--nodes-per-group M]
                [--control-policy P] [--k-min K] [--k-max K]
                [--adjust-every W] [--snapshot-every W]
+               [--straggler-factor X] [--quarantine-after W]
                [--heartbeat-timeout S] [--restore-s S]
                [--fault-kind F --fault-rank R --fault-at T]
                [--fault-factor X] [--fault-duration S] [--fault-extra S]
@@ -35,7 +37,8 @@ USAGE:
 
 Algorithms:       ssgd | s3gd | dcs3gd | asgd | dcasgd
 Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
-Control policies: fixed | dss_pid | lambda_coupled (elastic staleness)
+Schedules:        ring | tree | flat | hierarchical (Layered-SGD dragonfly)
+Control policies: fixed | dss_pid | lambda_coupled | schedule_coupled
 Fault kinds:      kill | slow | delay (virtual-time chaos injection)
 ";
 
@@ -91,6 +94,42 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.warmup_stop_frac =
         args.get_f64("warmup-stop-frac", cfg.warmup_stop_frac as f64)? as f32;
     cfg.eval_every = args.get_u64("eval-every", cfg.eval_every)?;
+    // collective schedule / dragonfly topology: explicit shape flags
+    // win (half-specified shapes derive the other dimension from the
+    // node count); a bare --nodes override refits the shape to the new
+    // count. Both keep any config-file link parameters and re-bind an
+    // already-hierarchical schedule so the flags actually take effect.
+    let explicit_shape = args.get("groups").is_some() || args.get("nodes-per-group").is_some();
+    let nodes = cfg.nodes.max(1);
+    let reshaped = if explicit_shape {
+        let fitted = Dragonfly::for_nodes(nodes);
+        let groups = args.get_usize("groups", 0)?;
+        let npg = args.get_usize("nodes-per-group", 0)?;
+        let (groups, npg) = match (groups, npg) {
+            (0, 0) => (fitted.groups, fitted.nodes_per_group),
+            (g, 0) => (g, nodes.div_ceil(g).max(1)),
+            (0, m) => (nodes.div_ceil(m).max(1), m),
+            (g, m) => (g, m),
+        };
+        Some((groups, npg))
+    } else if args.get("nodes").is_some() || args.get("config").is_none() {
+        // bare --nodes override, or no config file at all: fit the
+        // shape to the run's node count
+        let fitted = Dragonfly::for_nodes(nodes);
+        Some((fitted.groups, fitted.nodes_per_group))
+    } else {
+        None
+    };
+    if let Some((groups, npg)) = reshaped {
+        // keep the configured link parameters, change only the shape
+        cfg.dragonfly = Dragonfly { groups, nodes_per_group: npg, ..cfg.dragonfly };
+        if matches!(cfg.net.algo, AllReduceAlgo::Hierarchical(_)) {
+            cfg.net.algo = AllReduceAlgo::Hierarchical(cfg.dragonfly);
+        }
+    }
+    if let Some(s) = args.get("schedule") {
+        cfg.net.algo = parse_schedule(s, cfg.dragonfly)?;
+    }
     // elastic control plane
     if let Some(p) = args.get("control-policy") {
         cfg.control.policy = ControlPolicy::parse(p)?;
@@ -101,6 +140,12 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.control.gain_p = args.get_f64("gain-p", cfg.control.gain_p)?;
     cfg.control.gain_i = args.get_f64("gain-i", cfg.control.gain_i)?;
     cfg.control.snapshot_every = args.get_u64("snapshot-every", cfg.control.snapshot_every)?;
+    cfg.control.schedule_hysteresis =
+        args.get_f64("schedule-hysteresis", cfg.control.schedule_hysteresis)?;
+    cfg.control.straggler_factor =
+        args.get_f64("straggler-factor", cfg.control.straggler_factor)?;
+    cfg.control.quarantine_after =
+        args.get_u64("quarantine-after", cfg.control.quarantine_after)?;
     cfg.control.heartbeat_timeout_s =
         args.get_f64("heartbeat-timeout", cfg.control.heartbeat_timeout_s)?;
     cfg.control.restore_s = args.get_f64("restore-s", cfg.control.restore_s)?;
@@ -157,13 +202,29 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.control.policy != ControlPolicy::Fixed || !cfg.control.faults.is_empty() {
         let recs = report.control.records();
         let final_k = recs.last().map(|r| r.k).unwrap_or(cfg.staleness);
+        let final_sched = recs
+            .iter()
+            .rev()
+            .find_map(|r| r.schedule.clone())
+            .unwrap_or_else(|| cfg.net.algo.name().to_string());
         println!(
-            "control: policy={} k changes={} final k={} fault/recovery events={}",
+            "control: policy={} k changes={} final k={} schedule switches={} final schedule={} fault/recovery events={}",
             cfg.control.policy.name(),
             report.control.k_changes(),
             final_k,
+            report.control.schedule_switches(),
+            final_sched,
             report.control.events().len(),
         );
+        let comm = report.control.comm_summary();
+        if comm.rounds > 0 {
+            println!(
+                "comm:    t_AR total {:.4}s over {} rounds ({:.1}% on global links)",
+                comm.total_s(),
+                comm.rounds,
+                100.0 * comm.global_s / comm.total_s().max(1e-30),
+            );
+        }
     }
     Ok(())
 }
@@ -201,13 +262,23 @@ fn cmd_bench_comm(args: &Args) -> Result<()> {
     let max_ranks = args.get_usize("max-ranks", 128)?;
     let net = NetModel::default();
     println!("all-reduce cost model (α={}s, β={}B/s), {} f32", net.alpha_s, net.beta_bytes_per_s, elems);
-    println!("{:>6} {:>12} {:>12} {:>12}", "N", "ring", "tree", "flat");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "N", "ring", "tree", "flat", "hier", "hier gl%"
+    );
     let mut n = 2;
     while n <= max_ranks {
         let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(elems, n);
         let tree = NetModel { algo: AllReduceAlgo::Tree, ..net }.allreduce_time(elems, n);
         let flat = NetModel { algo: AllReduceAlgo::Flat, ..net }.allreduce_time(elems, n);
-        println!("{n:>6} {ring:>12.6} {tree:>12.6} {flat:>12.6}");
+        let fly = Dragonfly::for_nodes(n);
+        let phases =
+            NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net }.allreduce_phases(elems, n);
+        println!(
+            "{n:>6} {ring:>12.6} {tree:>12.6} {flat:>12.6} {:>12.6} {:>8.1}%",
+            phases.total(),
+            100.0 * phases.global_s / phases.total().max(1e-30),
+        );
         n *= 2;
     }
     let _ = ComputeModel::default(); // keep the import honest

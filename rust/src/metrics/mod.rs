@@ -1,5 +1,6 @@
-//! Metrics: per-step records, epoch summaries, CSV/JSON export, and the
-//! Table-I-style report rows.
+//! Metrics: per-step records, epoch summaries, CSV/JSON export, the
+//! Table-I-style report rows, and the comm-phase accounting that
+//! reports where t_AR was spent (local vs global links).
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -8,6 +9,37 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
+
+/// Run-level aggregate of the collective phase split: how much of the
+/// run's all-reduce time was spent on intra-group (local) vs
+/// inter-group (global) links, over how many collectives, and how often
+/// the control plane switched schedules. Derived from the control log's
+/// decision trace and exported under the run JSON's `"comm"` key.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommPhaseSummary {
+    pub local_s: f64,
+    pub global_s: f64,
+    pub rounds: u64,
+    pub schedule_switches: usize,
+}
+
+impl CommPhaseSummary {
+    pub fn total_s(&self) -> f64 {
+        self.local_s + self.global_s
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut m = BTreeMap::new();
+        m.insert("local_s".to_string(), num(self.local_s));
+        m.insert("global_s".into(), num(self.global_s));
+        m.insert("total_s".into(), num(self.total_s()));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("schedule_switches".into(), Json::Num(self.schedule_switches as f64));
+        Json::Obj(m)
+    }
+}
 
 /// One training-step record from one worker.
 #[derive(Debug, Clone, Copy)]
@@ -299,6 +331,16 @@ mod tests {
         let err = arr[0].get("val_err").unwrap().as_f64().unwrap();
         assert!((err - 0.8).abs() < 1e-6, "val_err {err}");
         // must reparse as valid JSON
+        assert!(crate::util::Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn comm_phase_summary_json() {
+        let s = CommPhaseSummary { local_s: 0.3, global_s: 0.7, rounds: 10, schedule_switches: 1 };
+        assert!((s.total_s() - 1.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("rounds").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("total_s").unwrap().as_f64(), Some(1.0));
         assert!(crate::util::Json::parse(&j.to_string()).is_ok());
     }
 

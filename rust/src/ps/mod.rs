@@ -74,17 +74,24 @@ pub struct PsClient {
 impl PsClient {
     /// Push a gradient and (blocking) pull fresh weights — the ASGD
     /// round-trip. `now` is the worker's virtual time.
+    ///
+    /// Transfer time is topology-aware: the PS is hosted next to rank 0
+    /// (same dragonfly group), so under a hierarchical schedule a
+    /// worker in group 0 pays local-link latency while everyone else
+    /// crosses the optics — the placement asymmetry the flat model
+    /// couldn't express.
     pub fn push_pull(&self, worker: usize, grad: Vec<f32>, now: f64, eta: f32, wd: f32) -> PullReply {
         assert_eq!(grad.len(), self.n_params);
         let (reply_tx, reply_rx) = channel();
+        let ptp = self.net.ptp_time_between(worker, 0, self.n_params);
         // Worker→PS transfer time happens before the server sees it.
-        let arrive = now + self.net.ptp_time(self.n_params);
+        let arrive = now + ptp;
         self.tx
             .send(Msg::Push(PushMsg { worker, grad, sent_at: arrive, eta, wd, reply: reply_tx }))
             .expect("ps alive");
         let mut reply = reply_rx.recv().expect("ps alive");
         // PS→worker transfer for the fresh weights.
-        reply.done_at += self.net.ptp_time(self.n_params);
+        reply.done_at += ptp;
         reply
     }
 }
@@ -238,6 +245,30 @@ mod tests {
         let r = c.push_pull(0, vec![0.1], 10.0, 1.0, 0.0);
         // 10 + α (push) + 0 (serve) + α (pull) = 11
         assert!((r.done_at - 11.0).abs() < 1e-12, "{}", r.done_at);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn hierarchical_net_penalizes_cross_group_workers() {
+        // PS sits with rank 0: a worker in another dragonfly group pays
+        // the global link both ways.
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        let net = NetModel {
+            algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+            ..NetModel::default()
+        };
+        let ps = ParameterServer::spawn(
+            vec![0.0; 1],
+            plain_sgd(1),
+            4,
+            PsMode::Asgd,
+            net,
+            0.0,
+        );
+        let c = ps.client();
+        let local = c.push_pull(1, vec![0.1], 0.0, 1.0, 0.0).done_at;
+        let remote = c.push_pull(2, vec![0.1], 0.0, 1.0, 0.0).done_at;
+        assert!(remote > local, "cross-group round-trip {remote} not slower than {local}");
         ps.shutdown();
     }
 

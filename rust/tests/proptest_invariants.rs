@@ -2,7 +2,9 @@
 //! randomized-case harness with seeded shrink-free generation — each
 //! failure prints its case seed for reproduction).
 
-use dcs3gd::comm::{ring::ring_network, AllReduceAlgo, Group, NetModel};
+use dcs3gd::comm::{
+    hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
+};
 use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
 use dcs3gd::dc;
 use dcs3gd::optim::LrSchedule;
@@ -27,11 +29,19 @@ fn prop_allreduce_is_sum_with_correct_timing() {
         let mut rng = Rng::keyed(0xA11E, 0, case);
         let n_ranks = 1 + rng.below(8) as usize;
         let len = 1 + rng.below(500) as usize;
+        let algo = match rng.below(4) {
+            0 => AllReduceAlgo::Ring,
+            1 => AllReduceAlgo::Tree,
+            2 => AllReduceAlgo::Flat,
+            _ => AllReduceAlgo::Hierarchical(Dragonfly {
+                nodes_per_group: 1 + rng.below(4) as usize,
+                ..Dragonfly::default()
+            }),
+        };
         let net = NetModel {
             alpha_s: rng.uniform() * 1e-5,
             beta_bytes_per_s: 1e6 + rng.uniform() * 1e9,
-            algo: [AllReduceAlgo::Ring, AllReduceAlgo::Tree, AllReduceAlgo::Flat]
-                [rng.below(3) as usize],
+            algo,
         };
         let inputs: Vec<Vec<f32>> = (0..n_ranks)
             .map(|r| {
@@ -102,6 +112,168 @@ fn prop_ring_allreduce_matches_sum() {
             let got = h.join().unwrap();
             for (a, b) in got.iter().zip(&expect) {
                 assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "case {case}");
+            }
+        }
+    }
+}
+
+/// Property: schedules decide routing and cost, never the arithmetic —
+/// the Hierarchical and Ring rendezvous sums are **bit-identical** for
+/// any payload and rank count (the flat-path equivalence the schedule
+/// refactor is differential-tested on).
+#[test]
+fn prop_hierarchical_and_ring_sums_bit_identical() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x41E2, 7, case);
+        let n_ranks = 1 + rng.below(8) as usize;
+        let len = 1 + rng.below(400) as usize;
+        let topology = Dragonfly {
+            groups: 1 + rng.below(4) as usize,
+            nodes_per_group: 1 + rng.below(4) as usize,
+            ..Dragonfly::default()
+        };
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case ^ 0xABC, r as u64, 2);
+                let scale = 10f32.powf(rr.uniform_range(-2.0, 2.0));
+                randvec(&mut rr, len, scale)
+            })
+            .collect();
+        let run = |algo: AllReduceAlgo| -> Vec<Vec<f32>> {
+            let net = NetModel { algo, ..NetModel::default() };
+            let group = Group::new(n_ranks, net);
+            let handles: Vec<_> = (0..n_ranks)
+                .map(|r| {
+                    let mut c = group.comm(r);
+                    let data = inputs[r].clone();
+                    std::thread::spawn(move || c.allreduce(&data, 0.0).0.as_ref().clone())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        let ring = run(AllReduceAlgo::Ring);
+        let hier = run(AllReduceAlgo::Hierarchical(topology));
+        for (rs, hs) in ring.iter().zip(&hier) {
+            for (a, b) in rs.iter().zip(hs) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case}: schedules changed the sum ({a} vs {b})"
+                );
+            }
+        }
+    }
+}
+
+/// Property: every schedule's per-phase times are non-negative, add up
+/// to the reported total exactly, and the phases handed back by
+/// `wait_timed` are the model's phases with completion
+/// `max(post) + total`.
+#[test]
+fn prop_phase_times_sum_to_total() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x9A5E, 8, case);
+        let n_ranks = 1 + rng.below(6) as usize;
+        let len = rng.below(2000) as usize;
+        let algo = match rng.below(4) {
+            0 => AllReduceAlgo::Ring,
+            1 => AllReduceAlgo::Tree,
+            2 => AllReduceAlgo::Flat,
+            _ => AllReduceAlgo::Hierarchical(Dragonfly {
+                groups: 1 + rng.below(5) as usize,
+                nodes_per_group: 1 + rng.below(5) as usize,
+                ..Dragonfly::default()
+            }),
+        };
+        let net = NetModel {
+            alpha_s: rng.uniform() * 1e-5,
+            beta_bytes_per_s: 1e6 + rng.uniform() * 1e9,
+            algo,
+        };
+        let phases = net.allreduce_phases(len, n_ranks);
+        assert!(phases.local_s >= 0.0 && phases.global_s >= 0.0, "case {case}");
+        assert_eq!(
+            phases.total(),
+            net.allreduce_time(len, n_ranks),
+            "case {case}: phases do not sum to the reported total"
+        );
+        let posts: Vec<f64> = (0..n_ranks).map(|_| rng.uniform() * 5.0).collect();
+        let max_post = posts.iter().cloned().fold(f64::MIN, f64::max);
+        let group = Group::new(n_ranks, net);
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|r| {
+                let mut c = group.comm(r);
+                let post = posts[r];
+                std::thread::spawn(move || {
+                    c.iallreduce(&vec![1.0f32; len], post).wait_timed(post)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (_, t_done, got) = h.join().unwrap();
+            assert_eq!(got, phases, "case {case}: wait_timed phases mismatch");
+            assert!(
+                (t_done - (max_post + phases.total())).abs() < 1e-9,
+                "case {case}: completion {t_done} vs {}",
+                max_post + phases.total()
+            );
+        }
+    }
+}
+
+/// Property: the wire-level hierarchical executor (grouped data
+/// movement) agrees with the wire-level ring for any group shape —
+/// including uneven, singleton, and oversize groups.
+#[test]
+fn prop_wire_hier_matches_wire_ring() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x41E5, 9, case);
+        let n_ranks = 1 + rng.below(9) as usize;
+        let m = 1 + rng.below(5) as usize;
+        let len = 1 + rng.below(300) as usize;
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case ^ 0x717, r as u64, 3);
+                randvec(&mut rr, len, 1.0)
+            })
+            .collect();
+        let spawn_all = |bufs: Vec<Vec<f32>>, use_hier: bool| -> Vec<Vec<f32>> {
+            if use_hier {
+                let comms = hier_network(n_ranks, m);
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .zip(bufs)
+                    .map(|(c, mut buf)| {
+                        std::thread::spawn(move || {
+                            c.allreduce(&mut buf);
+                            buf
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            } else {
+                let comms = ring_network(n_ranks);
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .zip(bufs)
+                    .map(|(c, mut buf)| {
+                        std::thread::spawn(move || {
+                            c.allreduce(&mut buf);
+                            buf
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            }
+        };
+        let ring_out = spawn_all(inputs.clone(), false);
+        let hier_out = spawn_all(inputs, true);
+        for (r_buf, h_buf) in ring_out.iter().zip(&hier_out) {
+            for (a, b) in r_buf.iter().zip(h_buf) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "case {case} (n={n_ranks}, m={m}): {a} vs {b}"
+                );
             }
         }
     }
