@@ -10,11 +10,13 @@
 //!   dragonfly the hierarchical schedule beats the flat ring from
 //!   N ≥ 256 at the ResNet-20 payload.
 
-use dcs3gd::bench_util::{black_box, Bencher};
+use std::collections::BTreeMap;
+
+use dcs3gd::bench_util::{black_box, write_bench_json, Bencher};
 use dcs3gd::comm::{
     hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
 };
-use dcs3gd::util::Rng;
+use dcs3gd::util::{Json, Rng};
 
 /// ResNet-20 parameter count — the repo's canonical payload.
 const RESNET20: usize = 271_690;
@@ -129,6 +131,7 @@ fn main() {
         "N", "G", "m", "t_ring", "t_hier", "local", "global", "speedup"
     );
     let mut any_win = false;
+    let mut crossover_rows: Vec<Json> = Vec::new();
     for n in [64usize, 128, 256, 512, 1024] {
         let fly = Dragonfly::for_nodes(n);
         let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(RESNET20, n);
@@ -144,6 +147,14 @@ fn main() {
             phases.local_s,
             phases.global_s,
         );
+        let mut row = BTreeMap::new();
+        row.insert("n_ranks".to_string(), Json::Num(n as f64));
+        row.insert("t_ring_s".into(), Json::Num(ring));
+        row.insert("t_hier_s".into(), Json::Num(phases.total()));
+        row.insert("t_hier_local_s".into(), Json::Num(phases.local_s));
+        row.insert("t_hier_global_s".into(), Json::Num(phases.global_s));
+        row.insert("speedup".into(), Json::Num(speedup));
+        crossover_rows.push(Json::Obj(row));
     }
     assert!(any_win, "hierarchical schedule must beat ring at >= 256 ranks");
     println!(
@@ -151,4 +162,14 @@ fn main() {
          the hierarchical schedule 2(m-1) local + 2(G-1) global — the\n\
          crossover the schedule_coupled control policy rides)"
     );
+
+    // Machine-readable export: seeds the BENCH_*.json perf trajectory
+    // (wall measurements + the modelled crossover table), merged into
+    // target/bench_results.json next to the control bench's section.
+    let mut section = BTreeMap::new();
+    section.insert("payload_elems".to_string(), Json::Num(RESNET20 as f64));
+    section.insert("measurements".into(), b.results_json());
+    section.insert("ring_vs_hier".into(), Json::Arr(crossover_rows));
+    let path = write_bench_json("allreduce", Json::Obj(section)).expect("bench json");
+    println!("\nbench JSON -> {}", path.display());
 }

@@ -12,11 +12,15 @@
 //! DCS3GD_BENCH_FAST=1 cargo bench --bench control
 //! ```
 
+use std::collections::BTreeMap;
+
 use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::bench_util::write_bench_json;
 use dcs3gd::comm::{AllReduceAlgo, NetModel};
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::control::ControlPolicy;
 use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
 
 const NODES: usize = 8;
 const LOCAL_BATCH: usize = 32;
@@ -54,6 +58,7 @@ fn main() {
         "{:>6} {:>10} | {:>10} {:>10} {:>10} | {:>8} {:>8} | {:>7} {:>7} | {:>7}",
         "strag", "β B/s", "fixed", "dss_pid", "λ-coup", "speedup", "bound", "k_end", "λ_end", "Δloss%"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for &straggler in &[1.0f64, 1.5, 2.0, 4.0] {
         for &beta in &[1.2e6f64, 5e6] {
             let fixed = run(ControlPolicy::Fixed, straggler, beta, steps);
@@ -81,6 +86,21 @@ fn main() {
                 fixed.mean_iter_time / dss.mean_iter_time,
                 bound,
             );
+            let mut row = BTreeMap::new();
+            row.insert("straggler".to_string(), Json::Num(straggler));
+            row.insert("beta_bytes_per_s".into(), Json::Num(beta));
+            row.insert("fixed_iter_s".into(), Json::Num(fixed.mean_iter_time));
+            row.insert("dss_pid_iter_s".into(), Json::Num(dss.mean_iter_time));
+            row.insert("lambda_coupled_iter_s".into(), Json::Num(lam.mean_iter_time));
+            row.insert(
+                "speedup".into(),
+                Json::Num(fixed.mean_iter_time / dss.mean_iter_time),
+            );
+            row.insert("bound_s".into(), Json::Num(bound));
+            row.insert("k_end".into(), Json::Num(k_end as f64));
+            row.insert("lam_end".into(), Json::Num(lam_end as f64));
+            row.insert("dloss_pct".into(), Json::Num(dloss as f64));
+            rows.push(Json::Obj(row));
         }
     }
     println!(
@@ -89,4 +109,12 @@ fn main() {
          dominates the straggler; Δloss stays within a few percent —\n\
          the compensation (λ-coupled at deeper k) holds accuracy."
     );
+
+    // Machine-readable export (the perf trajectory CI uploads).
+    let mut section = BTreeMap::new();
+    section.insert("steps".to_string(), Json::Num(steps as f64));
+    section.insert("nodes".into(), Json::Num(NODES as f64));
+    section.insert("policy_sweep".into(), Json::Arr(rows));
+    let path = write_bench_json("control", Json::Obj(section)).expect("bench json");
+    println!("bench JSON -> {}", path.display());
 }

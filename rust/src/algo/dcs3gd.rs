@@ -34,10 +34,10 @@
 //!
 //! Because the rendezvous collective requires every rank to post the
 //! identical round sequence, each posted update carries
-//! [`ctrl_slots`]`(N)` piggyback elements: the rank's mean per-step
+//! [`ctrl_slots`]`(world)` piggyback elements: the rank's mean per-step
 //! compute time and last observed collective latency (summed into
-//! cross-rank means), plus a rank-offset slot holding this rank's own
-//! t_C (the zero-padded all-gather trick) — so the all-reduced tail
+//! cross-rank means), plus a slot-offset element holding this rank's
+//! own t_C (the zero-padded all-gather trick) — so the all-reduced tail
 //! hands every rank the *same* observations, and the deterministic
 //! controllers reach the same (k, schedule, quarantine) decision with
 //! no extra communication round. The engine terminates on the
@@ -45,20 +45,51 @@
 //! runs fewer steps per window) still posts every round and the
 //! rendezvous sequence stays matched.
 //!
+//! ## Membership epochs
+//!
+//! The run's world size is itself elastic: a scripted kill that is not
+//! respawned ([`crate::control::FaultPlan::depart`]) makes the rank
+//! **leave** the group ([`crate::comm::Comm::leave`]); in-flight
+//! rounds it never posts resolve over the survivors, and the engine
+//! re-weights Eq. 9's mean by the actual contributor count so the
+//! gradient mean stays unbiased. Survivors observe the shrink (or a
+//! due `[[control.join]]` arrival, fired against the shared round
+//! completion time) at their next wait and run the **epoch
+//! transition** at that window boundary, identically on every rank:
+//!
+//! 1. advance the group epoch, admitting scripted joiners;
+//! 2. all-reduce the post-update weights over the survivors and adopt
+//!    the mean — every member of the new epoch holds **bit-identical**
+//!    parameters (joiners bootstrap from the published
+//!    [`crate::comm::JoinBootstrap`]; pinned by the epoch trace's
+//!    parameter checksums);
+//! 3. re-partition the data shards across the new world
+//!    ([`crate::data::ShardSampler::reshard`]), re-derive the dragonfly
+//!    topology from the new N ([`crate::comm::Dragonfly::refit`]), and
+//!    rebuild the controller — re-baselining its t_C/t_AR evidence and
+//!    re-deciding (k, schedule) for the new fabric (quarantine state is
+//!    re-learned against the new groups);
+//! 4. restart the window pipeline (the first window of an epoch has no
+//!    staleness, exactly like the start of a run) and record the
+//!    transition in the [`crate::control::EpochTrace`].
+//!
 //! Scripted faults ([`crate::control::FaultPlan`]) inject stragglers
-//! and crashes; a killed worker is detected by heartbeat timeout and
-//! restored from the leader's latest [`crate::control::SnapshotStore`]
-//! checkpoint, paying detection + restore downtime on its virtual
-//! clock.
+//! and crashes; a killed worker that *does* respawn is detected by
+//! heartbeat timeout and restored from the leader's latest
+//! [`crate::control::SnapshotStore`] checkpoint, paying detection +
+//! restore downtime on its virtual clock.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::algo::{Algo, RunReport, WorkerHarness};
-use crate::comm::Group;
+use crate::comm::{Group, JoinBootstrap};
 use crate::config::ExperimentConfig;
-use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
+use crate::control::{
+    param_crc, ControlRecord, EpochRecord, FaultKind, ScheduleEnv, WindowObs,
+};
 use crate::dc::{self, DcHyper};
 use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
@@ -69,42 +100,41 @@ use crate::tensor;
 /// means by the all-reduce.
 pub const CTRL_BASE_SLOTS: usize = 2;
 
-/// Total piggyback width: the two mean slots plus one rank-offset slot
-/// per rank carrying that rank's own t_C (everyone else contributes
-/// zero there, so the sum *is* the per-rank value).
-pub fn ctrl_slots(n_ranks: usize) -> usize {
-    CTRL_BASE_SLOTS + n_ranks
+/// Total piggyback width: the two mean slots plus one slot-offset
+/// element per member carrying that member's own t_C (everyone else
+/// contributes zero there, so the sum *is* the per-member value).
+pub fn ctrl_slots(world: usize) -> usize {
+    CTRL_BASE_SLOTS + world
 }
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let lam0 = if cfg.algo == Algo::S3gd { 0.0 } else { cfg.lam0 };
     let n = harness.n_params();
-    let group = Group::new(cfg.nodes, cfg.net);
+    let membership = harness.membership.clone();
+    let capacity = membership.capacity();
+    let group = Group::elastic(capacity, cfg.nodes, cfg.net);
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
-    let slots = ctrl_slots(cfg.nodes);
-    let topology = cfg.topology();
-    let env = ScheduleEnv {
-        net: cfg.net,
-        topology,
-        n_elems: n + slots,
-        n_ranks: cfg.nodes,
-    };
 
     std::thread::scope(|scope| -> Result<()> {
+        let group_ref = &group;
         let mut handles = Vec::new();
-        for rank in 0..cfg.nodes {
+        for rank in 0..capacity {
+            let is_joiner = rank >= cfg.nodes;
+            if is_joiner && !membership.is_join_rank(rank) {
+                continue;
+            }
             let mut ctx = harness.make_worker(cfg, rank);
-            let mut comm = group.comm(rank);
+            let initial_comm = (!is_joiner).then(|| group_ref.comm(rank));
             let init_w = harness.init_w.clone();
             let decay_mask = harness.decay_mask.clone();
             let layer_ranges = harness.layer_ranges.clone();
             let sched = sched.clone();
             let cfg = cfg.clone();
+            let membership = membership.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
                 let fused = cfg.optimizer == "momentum" || cfg.optimizer == "sgd";
-                let mut w = init_w.clone();
                 // Optimizer state: fused path owns a velocity buffer
                 // directly; unfused path owns a boxed optimizer.
                 let mut velocity = vec![0.0f32; n];
@@ -120,6 +150,73 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ))
                 };
 
+                // Membership view + resume counters. Initial members
+                // start at epoch 0; scripted joiners park in admission
+                // until the survivors publish their epoch's bootstrap.
+                let mut epoch: u64 = 0;
+                let mut t: u64 = 0;
+                let mut sched_steps: u64 = 0;
+                let mut window_idx: u64 = 0;
+                let mut comm;
+                let mut w;
+                let mut world: Vec<usize>;
+                let mut join_cursor = 0usize;
+                if let Some(c0) = initial_comm {
+                    comm = c0;
+                    w = init_w.clone();
+                    world = (0..cfg.nodes).collect();
+                } else {
+                    let Some((c, boot)) = group_ref.await_admission(rank) else {
+                        return Ok(()); // run ended before our join fired
+                    };
+                    comm = c;
+                    epoch = boot.epoch;
+                    // the epoch's *pinned* member list — the live roster
+                    // may already have lost a racing post-transition
+                    // departer
+                    world = comm.epoch_members();
+                    w = boot.weights.as_ref().clone();
+                    t = boot.sched_steps;
+                    sched_steps = boot.sched_steps;
+                    window_idx = boot.window;
+                    join_cursor = boot.join_cursor;
+                    ctx.clock.advance_to(boot.t_start + cfg.control.restore_s);
+                    let slot =
+                        world.iter().position(|&r| r == rank).expect("admitted member");
+                    ctx.reshard(slot, world.len(), epoch);
+                    ctx.new_incarnation(ctx.clock.now());
+                    ctx.epochs.record(EpochRecord {
+                        epoch,
+                        rank,
+                        slot,
+                        world: world.len(),
+                        sched_steps,
+                        sim_time: boot.t_start,
+                        w_crc: param_crc(&w),
+                        joined: Vec::new(),
+                        departed: Vec::new(),
+                    });
+                }
+
+                // Per-epoch derived state. Epoch 0 runs on the
+                // configured topology verbatim; transitions refit the
+                // group shape to the live world size.
+                let mut slot = world.iter().position(|&r| r == rank).expect("member");
+                let mut leader = world[0];
+                let mut slots = ctrl_slots(world.len());
+                let mut topo = if epoch == 0 {
+                    cfg.topology()
+                } else {
+                    cfg.topology().refit(world.len())
+                };
+                let mut npg = topo.nodes_per_group;
+                let mut env = ScheduleEnv {
+                    net: cfg.net,
+                    topology: topo,
+                    n_elems: n + slots,
+                    n_ranks: world.len(),
+                };
+
                 // Control plane: a per-worker controller instance; all
                 // instances see identical (all-reduced) observations, so
                 // their window/schedule decisions stay in lock-step
@@ -128,7 +225,20 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     cfg.control.build_controller(cfg.staleness.max(1), env);
                 let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
-                let npg = topology.nodes_per_group;
+
+                if membership.is_elastic() && epoch == 0 {
+                    ctx.epochs.record(EpochRecord {
+                        epoch: 0,
+                        rank,
+                        slot,
+                        world: world.len(),
+                        sched_steps: 0,
+                        sim_time: 0.0,
+                        w_crc: param_crc(&w),
+                        joined: Vec::new(),
+                        departed: Vec::new(),
+                    });
+                }
 
                 // Current window's accumulated update and the previous
                 // posted window (handle + its Δw + its schedule).
@@ -143,7 +253,6 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 )> = None;
 
                 let mut steps_in_window = 0u64;
-                let mut window_idx = 0u64; // completed windows so far
                 let mut window_t_c = 0.0f64; // compute seconds this window
                 let mut prev_t_ar = 0.0f64; // last observed collective latency
                 // Start iterations of the current and previous windows —
@@ -151,17 +260,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 // this worker has completed the wait of round j−2, which
                 // happens-after the leader's snapshot at the end of window
                 // j−2 (iteration == start of window j−1).
-                let mut cur_window_start = 0u64;
-                let mut prev_window_start = 0u64;
-
-                // This rank's local iteration index, and the cumulative
-                // healthy-rank step count Σ decision.k over completed
-                // windows. The latter is identical on every rank (the
-                // decisions are), so using it for termination keeps the
-                // posted-round count matched even when a quarantined
-                // group runs shorter windows.
-                let mut t: u64 = 0;
-                let mut sched_steps: u64 = 0;
+                let mut cur_window_start = t;
+                let mut prev_window_start = t;
 
                 loop {
                     // Termination check up front so a zero-step run does
@@ -171,10 +271,39 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         break;
                     }
 
-                    // Scripted crash? Detect (heartbeat timeout), restore
-                    // from the snapshot store, pay the downtime.
+                    // Scripted crash? A respawned kill detects (heartbeat
+                    // timeout) and restores from the snapshot store; an
+                    // unrespawned kill is a *departure* — deregister so
+                    // in-flight rounds resolve over the survivors, drain
+                    // our outstanding request, and stop.
                     if !ctx.chaos.is_inert() {
                         if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            if matches!(ev.kind, FaultKind::Kill { respawn: false }) {
+                                comm.leave();
+                                if let Some((handle, _delta, _algo)) = posted.take() {
+                                    let (_, t_done) = handle.wait(ctx.clock.now());
+                                    ctx.clock.advance_to(t_done);
+                                }
+                                ctx.control_log.record(ControlRecord {
+                                    worker: rank,
+                                    window: window_idx,
+                                    iteration: t,
+                                    sim_time: ctx.clock.now(),
+                                    k: decision.k,
+                                    lam_scale: decision.lam_scale,
+                                    schedule: None,
+                                    t_compute: 0.0,
+                                    t_allreduce: 0.0,
+                                    t_ar_local: 0.0,
+                                    t_ar_global: 0.0,
+                                    blocked_s: 0.0,
+                                    event: Some(format!(
+                                        "depart@{:.3}s epoch={epoch}",
+                                        ev.at_s
+                                    )),
+                                });
+                                return Ok(());
+                            }
                             ctx.recover_from_kill(
                                 &ev,
                                 &cfg,
@@ -199,7 +328,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     steps_in_window += 1;
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
-                    let my_k = decision.k_for(rank, npg);
+                    let my_k = decision.k_for(slot, npg);
                     let window_end = steps_in_window >= my_k as u64;
                     // k of the window being completed, as seen by
                     // healthy ranks — the termination currency.
@@ -207,24 +336,50 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 
                     let mut lam_used = 0.0f32;
                     let mut dist_norm = 0.0f64;
+                    // Membership transition decided at this window's
+                    // wait: (departed ranks, joins due).
+                    let mut pending_transition: Option<(Vec<usize>, Vec<usize>)> = None;
 
                     // Resolve the previous window's collective at this
-                    // window's end: D_i per Eq. 9.
+                    // window's end: D_i per Eq. 9 — re-weighted by the
+                    // actual contributor count, so a round that resolved
+                    // over the survivors still averages unbiasedly.
                     let d_opt: Option<&[f32]> = if window_end {
                         if let Some((handle, posted_delta, posted_algo)) = posted.take() {
                             let post_time = handle.post_time;
                             let now_before_wait = ctx.clock.now();
-                            let (sum, t_done, phases) = handle.wait_timed(now_before_wait);
-                            ctx.clock.advance_to(t_done);
-                            ctx.heartbeats.beat(rank, t_done);
-                            let blocked = t_done - now_before_wait;
-                            prev_t_ar = t_done - post_time;
-                            dc::distance_to_average(&sum[..n], &posted_delta, cfg.nodes, &mut dist);
+                            let out = handle.wait_outcome(now_before_wait);
+                            ctx.clock.advance_to(out.time);
+                            ctx.beat(out.time);
+                            let blocked = out.time - now_before_wait;
+                            prev_t_ar = out.time - post_time;
+                            let n_contrib = out.contributors.len();
+                            dc::distance_to_average(
+                                &out.data[..n],
+                                &posted_delta,
+                                n_contrib,
+                                &mut dist,
+                            );
                             dist_norm = tensor::norm2(&dist);
 
+                            // Membership change? Departures show up as a
+                            // short contributor set; arrivals fire when
+                            // the shared completion time reaches their
+                            // scripted at_s. Identical on every rank.
+                            let joins_due =
+                                membership.joins_due(join_cursor, out.t_complete);
+                            if n_contrib < world.len() || !joins_due.is_empty() {
+                                let departed: Vec<usize> = world
+                                    .iter()
+                                    .copied()
+                                    .filter(|r| !out.contributors.contains(r))
+                                    .collect();
+                                pending_transition = Some((departed, joins_due));
+                            }
+
                             // Periodic validation at the *average* weights
-                            // w̄ = w_i + D_i (rank 0 only; Eq. 8/9).
-                            if rank == 0
+                            // w̄ = w_i + D_i (leader only; Eq. 8/9).
+                            if rank == leader
                                 && cfg.eval_every > 0
                                 && window_idx % cfg.eval_every.max(1) == 0
                             {
@@ -235,10 +390,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             }
 
                             // Wait/post boundary: hand the cross-rank mean
-                            // observations and the per-rank t_C split
-                            // (payload tail) to the controller.
-                            let inv_n = 1.0 / cfg.nodes as f64;
-                            let tail = &sum[n..n + slots];
+                            // observations and the per-member t_C split
+                            // (payload tail) to the controller — unless a
+                            // transition is pending, which re-baselines
+                            // the controller instead.
+                            let inv_n = 1.0 / n_contrib as f64;
+                            let tail = &out.data[n..n + slots];
                             let obs = WindowObs {
                                 window: window_idx,
                                 iteration: t,
@@ -250,8 +407,10 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     .collect(),
                             };
                             let prev = decision;
-                            decision = controller.on_window(&obs);
-                            if rank == 0 {
+                            if pending_transition.is_none() {
+                                decision = controller.on_window(&obs);
+                            }
+                            if rank == leader {
                                 let mut notes: Vec<String> = Vec::new();
                                 if decision.k != prev.k {
                                     notes.push(format!("k {} -> {}", prev.k, decision.k));
@@ -281,8 +440,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     schedule: Some(posted_algo.name().to_string()),
                                     t_compute: obs.t_compute,
                                     t_allreduce: obs.t_allreduce,
-                                    t_ar_local: phases.local_s,
-                                    t_ar_global: phases.global_s,
+                                    t_ar_local: out.phases.local_s,
+                                    t_ar_global: out.phases.global_s,
                                     blocked_s: blocked,
                                     event: (!notes.is_empty()).then(|| notes.join("; ")),
                                 });
@@ -331,60 +490,189 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ctx.record(t, loss, err, wall, lam_used, dist_norm, eta);
 
                     if window_end {
-                        // Leader refreshes the recovery snapshot: w here
-                        // is the averaged state plus one local step
-                        // (Eq. 8), the canonical restart point.
-                        if rank == 0
-                            && snapshot_every > 0
-                            && (window_idx + 1) % snapshot_every == 0
-                        {
-                            ctx.snapshots.put(Checkpoint {
-                                iteration: t + 1,
-                                weights: w.clone(),
-                                velocity: velocity.clone(),
-                            });
-                        }
+                        if let Some((departed, joins)) = pending_transition.take() {
+                            // ---- membership epoch transition ----
+                            // Every member of the old epoch reaches this
+                            // point at the same round boundary with the
+                            // identical (departed, joins) view.
+                            epoch += 1;
+                            world = comm.advance_epoch(epoch, &joins);
+                            join_cursor += joins.len();
+                            // Resync: survivors all-reduce their post-
+                            // update weights and adopt the mean — the
+                            // canonical epoch state, bit-identical on
+                            // every member (identical payload × identical
+                            // scale).
+                            let sync = comm
+                                .iallreduce_sched(&w, ctx.clock.now(), cfg.net.algo)
+                                .wait_outcome(ctx.clock.now());
+                            ctx.clock.advance_to(sync.time);
+                            let inv = 1.0 / sync.contributors.len() as f32;
+                            for (wi, s) in w.iter_mut().zip(sync.data.iter()) {
+                                *wi = s * inv;
+                            }
+                            velocity.iter_mut().for_each(|v| *v = 0.0);
+                            if let Some(o) = opt.as_mut() {
+                                o.reset();
+                            }
+                            window_idx += 1;
+                            sched_steps += window_k;
 
-                        // Post this window's update (MPI_Iallreduce) on
-                        // the decided schedule, with the control
-                        // piggyback, and immediately continue computing —
-                        // the overlap.
-                        let per_step_t_c = window_t_c / steps_in_window as f64;
-                        window_delta.push(per_step_t_c as f32);
-                        window_delta.push(prev_t_ar as f32);
-                        for r in 0..cfg.nodes {
-                            window_delta.push(if r == rank { per_step_t_c as f32 } else { 0.0 });
+                            // Joiners bootstrap from this exact state.
+                            comm.publish_bootstrap(JoinBootstrap {
+                                epoch,
+                                weights: Arc::new(w.clone()),
+                                t_start: sync.t_complete,
+                                sched_steps,
+                                window: window_idx,
+                                join_cursor,
+                            });
+
+                            // Re-shard, re-derive the topology from the
+                            // new N, and rebuild the controller — the
+                            // t_C/t_AR evidence re-baselines and (k,
+                            // schedule) is re-decided against the new
+                            // fabric.
+                            slot = world
+                                .iter()
+                                .position(|&r| r == rank)
+                                .expect("survivor is a member");
+                            leader = world[0];
+                            ctx.reshard(slot, world.len(), epoch);
+                            slots = ctrl_slots(world.len());
+                            topo = cfg.topology().refit(world.len());
+                            npg = topo.nodes_per_group;
+                            env = ScheduleEnv {
+                                net: cfg.net,
+                                topology: topo,
+                                n_elems: n + slots,
+                                n_ranks: world.len(),
+                            };
+                            controller =
+                                cfg.control.build_controller(cfg.staleness.max(1), env);
+                            decision = controller.current();
+                            ctx.new_incarnation(ctx.clock.now());
+
+                            ctx.epochs.record(EpochRecord {
+                                epoch,
+                                rank,
+                                slot,
+                                world: world.len(),
+                                sched_steps,
+                                sim_time: sync.t_complete,
+                                w_crc: param_crc(&w),
+                                joined: if slot == 0 { joins.clone() } else { Vec::new() },
+                                departed: if slot == 0 {
+                                    departed.clone()
+                                } else {
+                                    Vec::new()
+                                },
+                            });
+                            if rank == leader {
+                                ctx.snapshots.put(Checkpoint {
+                                    iteration: t + 1,
+                                    weights: w.clone(),
+                                    velocity: velocity.clone(),
+                                });
+                                ctx.control_log.record(ControlRecord {
+                                    worker: rank,
+                                    window: window_idx,
+                                    iteration: t,
+                                    sim_time: ctx.clock.now(),
+                                    k: decision.k,
+                                    lam_scale: decision.lam_scale,
+                                    schedule: None,
+                                    t_compute: 0.0,
+                                    t_allreduce: 0.0,
+                                    t_ar_local: 0.0,
+                                    t_ar_global: 0.0,
+                                    blocked_s: 0.0,
+                                    event: Some(format!(
+                                        "epoch {epoch}: world {} (-{:?} +{:?})",
+                                        world.len(),
+                                        departed,
+                                        joins
+                                    )),
+                                });
+                            }
+
+                            // Fresh window pipeline: the first window of
+                            // an epoch has no staleness, exactly like the
+                            // start of a run.
+                            window_delta.iter_mut().for_each(|x| *x = 0.0);
+                            steps_in_window = 0;
+                            window_t_c = 0.0;
+                            prev_t_ar = 0.0;
+                            prev_window_start = t + 1;
+                            cur_window_start = t + 1;
+                        } else {
+                            // Leader refreshes the recovery snapshot: w
+                            // here is the averaged state plus one local
+                            // step (Eq. 8), the canonical restart point.
+                            if rank == leader
+                                && snapshot_every > 0
+                                && (window_idx + 1) % snapshot_every == 0
+                            {
+                                ctx.snapshots.put(Checkpoint {
+                                    iteration: t + 1,
+                                    weights: w.clone(),
+                                    velocity: velocity.clone(),
+                                });
+                            }
+
+                            // Post this window's update (MPI_Iallreduce)
+                            // on the decided schedule, with the control
+                            // piggyback, and immediately continue
+                            // computing — the overlap.
+                            let per_step_t_c = window_t_c / steps_in_window as f64;
+                            window_delta.push(per_step_t_c as f32);
+                            window_delta.push(prev_t_ar as f32);
+                            for s in 0..world.len() {
+                                window_delta
+                                    .push(if s == slot { per_step_t_c as f32 } else { 0.0 });
+                            }
+                            debug_assert_eq!(window_delta.len(), n + slots);
+                            let algo = decision.schedule.unwrap_or(cfg.net.algo);
+                            let handle =
+                                comm.iallreduce_sched(&window_delta, ctx.clock.now(), algo);
+                            let mut posted_delta =
+                                std::mem::replace(&mut window_delta, vec![0.0f32; n]);
+                            posted_delta.truncate(n);
+                            posted = Some((handle, posted_delta, algo));
+                            window_idx += 1;
+                            steps_in_window = 0;
+                            window_t_c = 0.0;
+                            prev_window_start = cur_window_start;
+                            cur_window_start = t + 1;
+                            sched_steps += window_k;
                         }
-                        debug_assert_eq!(window_delta.len(), n + slots);
-                        let algo = decision.schedule.unwrap_or(cfg.net.algo);
-                        let handle =
-                            comm.iallreduce_sched(&window_delta, ctx.clock.now(), algo);
-                        let mut posted_delta =
-                            std::mem::replace(&mut window_delta, vec![0.0f32; n]);
-                        posted_delta.truncate(n);
-                        posted = Some((handle, posted_delta, algo));
-                        window_idx += 1;
-                        steps_in_window = 0;
-                        window_t_c = 0.0;
-                        prev_window_start = cur_window_start;
-                        cur_window_start = t + 1;
-                        sched_steps += window_k;
                     }
                     t += 1;
                 }
 
                 // Drain the final collective so every worker ends on the
-                // averaged weights (and no request leaks).
+                // averaged weights (and no request leaks). Re-weighted:
+                // a departure at the very end still averages correctly.
                 if let Some((handle, posted_delta, _)) = posted.take() {
-                    let (sum, t_done) = handle.wait(ctx.clock.now());
-                    ctx.clock.advance_to(t_done);
-                    dc::distance_to_average(&sum[..n], &posted_delta, cfg.nodes, &mut dist);
+                    let out = handle.wait_outcome(ctx.clock.now());
+                    ctx.clock.advance_to(out.time);
+                    dc::distance_to_average(
+                        &out.data[..n],
+                        &posted_delta,
+                        out.contributors.len(),
+                        &mut dist,
+                    );
                     tensor::add_assign(&mut w, &dist);
                 }
 
-                // Final validation on the averaged weights (rank 0),
+                // Unblock any scripted joiner whose event never fired —
+                // before anything fallible below, so an I/O error can't
+                // leave a parked joiner (and the whole scope) hanging.
+                comm.shutdown();
+
+                // Final validation on the averaged weights (leader),
                 // plus a checkpoint of the canonical averaged model.
-                if rank == 0 {
+                if rank == leader {
                     let (vl, ve) = ctx.eval(&w, cfg.eval_batches.max(8));
                     ctx.record_eval(cfg.steps, vl, ve);
                     if let Some(dir) = &cfg.out_dir {
@@ -414,6 +702,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let mut report =
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
+    report.epochs = harness.epochs.clone();
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
@@ -427,7 +716,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 mod tests {
     use super::*;
     use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
-    use crate::control::{ControlPolicy, FaultPlan};
+    use crate::control::{ControlPolicy, FaultPlan, JoinEvent};
     use crate::simtime::ComputeModel;
 
     fn base_cfg() -> ExperimentConfig {
@@ -508,6 +797,8 @@ mod tests {
         assert_eq!(j.get("algo").unwrap().as_str(), Some("dcs3gd"));
         assert!(j.get("control").unwrap().as_arr().is_some());
         assert!(j.get("comm").unwrap().get("rounds").is_some());
+        // fixed-membership runs export an empty epoch trace
+        assert_eq!(j.get("epochs").unwrap().as_arr().map(|a| a.len()), Some(0));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -768,5 +1059,67 @@ mod tests {
         assert_eq!(a.sim_time_s, b.sim_time_s);
         assert_eq!(a.final_train_loss, b.final_train_loss);
         assert_eq!(a.control.records(), b.control.records());
+    }
+
+    // --- membership epochs ---
+
+    #[test]
+    fn shrink_resolves_rounds_over_survivors_and_stays_bit_identical() {
+        // 4 → 3: rank 3 departs mid-run. The epoch must advance, the
+        // survivors' parameters must agree bit-for-bit at the boundary,
+        // and the run must finish with the full step budget.
+        let mut cfg = base_cfg();
+        cfg.steps = 40;
+        cfg.control.faults = FaultPlan::new().depart(3, 0.02); // ≈ step 1-2
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.epochs.worlds(), vec![4, 3]);
+        assert!(report.epochs.crc_mismatches().is_empty(), "ranks diverged at the boundary");
+        let transitions = report.epochs.transitions();
+        assert_eq!(transitions[1].departed, vec![3]);
+        assert!(report.control.events().iter().any(|e| e
+            .event
+            .as_deref()
+            .is_some_and(|s| s.starts_with("depart@"))));
+        assert!(report.final_train_loss.is_finite());
+        assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn grow_admits_scripted_joiners_from_the_bootstrap() {
+        // 4 → 6: two fresh ranks join once the shared round time passes
+        // their at_s. They must bootstrap bit-identical and contribute
+        // steps.
+        let mut cfg = base_cfg();
+        cfg.steps = 40;
+        cfg.control.joins =
+            vec![JoinEvent { rank: 4, at_s: 0.02 }, JoinEvent { rank: 5, at_s: 0.02 }];
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.epochs.worlds(), vec![4, 6]);
+        assert!(report.epochs.crc_mismatches().is_empty());
+        assert_eq!(report.epochs.transitions()[1].joined, vec![4, 5]);
+        // the joiners really ran steps
+        let steps = report.recorder.steps();
+        assert!(steps.iter().any(|s| s.worker == 4));
+        assert!(steps.iter().any(|s| s.worker == 5));
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn elastic_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = base_cfg();
+            cfg.steps = 40;
+            cfg.control.faults = FaultPlan::new().depart(2, 0.015);
+            // well past the shrink transition (≈ 0.048s of shared round
+            // time), so the grow is its own epoch
+            cfg.control.joins = vec![JoinEvent { rank: 4, at_s: 0.15 }];
+            cfg
+        };
+        let a = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        let b = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(a.sim_time_s, b.sim_time_s);
+        assert_eq!(a.epochs.records(), b.epochs.records());
+        assert_eq!(a.epochs.worlds(), vec![4, 3, 4]);
     }
 }

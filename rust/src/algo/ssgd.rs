@@ -112,7 +112,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     let (sum, t_done, phases) =
                         comm.allreduce_sched(&ctx.g, now_before_wait, algo);
                     ctx.clock.advance_to(t_done);
-                    ctx.heartbeats.beat(rank, t_done);
+                    ctx.beat(t_done);
                     let inv_n = 1.0 / cfg.nodes as f32;
                     for (m, s) in g_mean.iter_mut().zip(sum.iter()) {
                         *m = s * inv_n;

@@ -7,7 +7,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
-use crate::control::{ChaosInjector, ControlLog, HeartbeatBoard, SnapshotStore};
+use crate::control::{
+    ChaosInjector, ControlLog, EpochTrace, HeartbeatBoard, MembershipLog, SnapshotStore,
+};
 use crate::data::{ShardSampler, Split, SyntheticDataset};
 use crate::metrics::{EvalRecord, Recorder, StepRecord};
 use crate::model::{LinearSoftmax, StepBackend};
@@ -34,10 +36,15 @@ pub struct WorkerHarness {
     pub recorder: Recorder,
     /// Control-plane flight recorder shared by all workers.
     pub control_log: ControlLog,
-    /// Heartbeat timestamps for failure detection.
+    /// Heartbeat timestamps for failure detection (capacity-wide: one
+    /// slot per potential member, scripted joiners included).
     pub heartbeats: HeartbeatBoard,
     /// Latest recovery checkpoint (leader-written, Eq. 8 canonical).
     pub snapshots: SnapshotStore,
+    /// The run's scripted membership schedule (inert when empty).
+    pub membership: MembershipLog,
+    /// Realized membership-epoch transitions (exported as `"epochs"`).
+    pub epochs: EpochTrace,
     pub num_classes: usize,
     pub input_hw: usize,
     source: BackendSource,
@@ -80,6 +87,8 @@ impl WorkerHarness {
         let dataset = SyntheticDataset::new(cfg.seed ^ 0xDA7A, hw, classes, cfg.n_train, cfg.n_val)
             .with_noise(cfg.data_noise);
 
+        let membership = cfg.control.membership_log(cfg.nodes);
+        let capacity = membership.capacity();
         Ok(WorkerHarness {
             dataset,
             init_w,
@@ -87,8 +96,10 @@ impl WorkerHarness {
             layer_ranges,
             recorder: Recorder::new(),
             control_log: ControlLog::new(),
-            heartbeats: HeartbeatBoard::new(cfg.nodes),
+            heartbeats: HeartbeatBoard::new(capacity),
             snapshots: SnapshotStore::new(),
+            membership,
+            epochs: EpochTrace::new(),
             num_classes: classes,
             input_hw: hw,
             source,
@@ -132,6 +143,12 @@ pub struct WorkerCtx {
     /// Shared recovery snapshot store.
     pub snapshots: SnapshotStore,
     pub control_log: ControlLog,
+    /// Shared membership-epoch trace.
+    pub epochs: EpochTrace,
+    /// This worker's liveness incarnation on the heartbeat board (bumped
+    /// on respawn and on membership-epoch changes) — beats carry it so
+    /// the board can drop anything from a dead incarnation.
+    incarnation: u64,
     compute: crate::simtime::ComputeModel,
     time_from_wall: bool,
     local_batch: usize,
@@ -144,10 +161,14 @@ pub struct WorkerCtx {
 impl WorkerCtx {
     fn new(h: &WorkerHarness, cfg: &ExperimentConfig, rank: usize) -> Self {
         let px = h.input_hw * h.input_hw * 3;
+        // Scripted joiners (rank ≥ nodes) get a placeholder shard; the
+        // engine reshards them from their admission slot before any
+        // sampling happens.
+        let shard = rank.min(cfg.nodes - 1);
         WorkerCtx {
             rank,
             backend: h.make_backend(cfg),
-            sampler: ShardSampler::new(&h.dataset, rank, cfg.nodes, cfg.local_batch),
+            sampler: ShardSampler::new(&h.dataset, shard, cfg.nodes, cfg.local_batch),
             clock: SimClock::new(),
             rng: Rng::keyed(cfg.seed, 0xC10C4, rank as u64),
             dataset: h.dataset.clone(),
@@ -156,6 +177,8 @@ impl WorkerCtx {
             heartbeats: h.heartbeats.clone(),
             snapshots: h.snapshots.clone(),
             control_log: h.control_log.clone(),
+            epochs: h.epochs.clone(),
+            incarnation: 0,
             compute: cfg.compute.clone(),
             time_from_wall: cfg.time_from_wall,
             local_batch: cfg.local_batch,
@@ -190,8 +213,35 @@ impl WorkerCtx {
             t_c *= self.chaos.compute_factor(self.clock.now());
         }
         self.clock.advance(t_c);
-        self.heartbeats.beat(self.rank, self.clock.now());
+        self.beat(self.clock.now());
         (loss, err, wall)
+    }
+
+    /// Record liveness — unless a scripted kill is already due, in
+    /// which case the rank is dead as of the crash time and its beat
+    /// must not count (the (rank, epoch) heartbeat dedupe: letting the
+    /// post-crash step beat the board double-counted the dead rank's
+    /// heartbeat into the same window's detection arithmetic). Beats
+    /// carry this worker's incarnation, so one from a dead incarnation
+    /// is dropped board-side too.
+    pub fn beat(&self, now: f64) {
+        if !self.chaos.is_inert() && self.chaos.kill_pending(now) {
+            return;
+        }
+        self.heartbeats.beat_epoch(self.rank, self.incarnation, now);
+    }
+
+    /// Start a fresh liveness incarnation (respawn or membership-epoch
+    /// change) anchored at `now`.
+    pub fn new_incarnation(&mut self, now: f64) {
+        self.incarnation = self.heartbeats.respawn(self.rank, now);
+    }
+
+    /// Re-partition this worker's data shard at a membership-epoch
+    /// boundary: it becomes shard `slot` of `world` (see
+    /// [`ShardSampler::reshard`]).
+    pub fn reshard(&mut self, slot: usize, world: usize, membership_epoch: u64) {
+        self.sampler.reshard(slot, world, membership_epoch);
     }
 
     /// Validation pass over the first `batches` val batches at weights
@@ -299,7 +349,8 @@ impl WorkerCtx {
             }
         };
         self.clock.advance_to(recover_at);
-        self.heartbeats.beat(self.rank, self.clock.now());
+        // New incarnation: the dead rank's beats stop counting.
+        self.new_incarnation(self.clock.now());
         self.control_log.record(crate::control::ControlRecord {
             worker: self.rank,
             window,
@@ -348,6 +399,8 @@ pub struct RunReport {
     pub recorder: Recorder,
     /// Control-plane decision trace (empty when the plane only observed).
     pub control: ControlLog,
+    /// Membership-epoch trace (empty for fixed-membership runs).
+    pub epochs: EpochTrace,
 }
 
 impl RunReport {
@@ -381,6 +434,7 @@ impl RunReport {
             wall_time_s,
             recorder,
             control: ControlLog::default(),
+            epochs: EpochTrace::default(),
         }
     }
 
@@ -411,6 +465,9 @@ impl RunReport {
         // Where the run's all-reduce time went: local vs global links,
         // and how often the control plane switched schedules.
         m.insert("comm".into(), self.control.comm_summary().to_json());
+        // Membership-epoch trace: world-size trajectory, join/depart
+        // sets, and the cross-rank parameter-checksum agreement.
+        m.insert("epochs".into(), self.epochs.to_json());
         Json::Obj(m)
     }
 

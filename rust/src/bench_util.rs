@@ -5,9 +5,12 @@
 //! warmup, configurable measurement time, mean/std/p50/p95, and
 //! throughput annotation.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{percentile, Running};
+use crate::util::Json;
 
 /// One benchmark's collected timings.
 #[derive(Debug, Clone)]
@@ -43,6 +46,27 @@ impl Measurement {
             line.push_str(&format!(" {:>14}/s", fmt_si(rate)));
         }
         line
+    }
+
+    /// The measurement's summary statistics as a JSON object — one row
+    /// of the machine-readable `target/bench_results.json` export.
+    pub fn to_json(&self) -> Json {
+        let mut r = Running::new();
+        for &s in &self.samples {
+            r.push(s);
+        }
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("samples".into(), Json::Num(self.samples.len() as f64));
+        m.insert("mean_s".into(), Json::Num(r.mean()));
+        m.insert("std_s".into(), Json::Num(r.std()));
+        m.insert("p50_s".into(), Json::Num(percentile(&self.samples, 50.0)));
+        m.insert("p95_s".into(), Json::Num(percentile(&self.samples, 95.0)));
+        if let Some(n) = self.elems_per_iter {
+            m.insert("elems_per_iter".into(), Json::Num(n as f64));
+            m.insert("elems_per_s".into(), Json::Num(n as f64 / r.mean()));
+        }
+        Json::Obj(m)
     }
 }
 
@@ -138,6 +162,38 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// All measurements as a JSON array (rows of [`Measurement::to_json`]).
+    pub fn results_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(Measurement::to_json).collect())
+    }
+}
+
+/// Default location of the machine-readable bench export, relative to
+/// the crate root `cargo bench` runs from.
+pub const BENCH_RESULTS_PATH: &str = "target/bench_results.json";
+
+/// Merge `payload` into `target/bench_results.json` under `section`
+/// (each bench binary owns one section, so `cargo bench` runs compose
+/// into a single artifact instead of clobbering each other). Returns
+/// the path written. CI uploads this file as the run's perf-trajectory
+/// artifact.
+pub fn write_bench_json(section: &str, payload: Json) -> std::io::Result<PathBuf> {
+    let path = Path::new(BENCH_RESULTS_PATH).to_path_buf();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| match j {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(section.to_string(), payload);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, Json::Obj(root).to_string())?;
+    Ok(path)
 }
 
 /// Keep a value alive and opaque to the optimizer (std::hint wrapper).
@@ -194,6 +250,20 @@ mod tests {
             black_box((0..1000u32).sum::<u32>());
         });
         assert!(m.report().ends_with("/s"));
+    }
+
+    #[test]
+    fn measurement_json_row_shape() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            elems_per_iter: Some(100),
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("mean_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("elems_per_iter").unwrap().as_f64(), Some(100.0));
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

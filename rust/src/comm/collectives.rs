@@ -17,10 +17,24 @@ use std::sync::Arc;
 use super::{Comm, RoundKind};
 
 impl Comm {
+    /// The secondary collectives below index and chunk by *raw rank id*
+    /// over a launch-contiguous world — they predate membership epochs
+    /// and are not yet roster-aware (the elastic engines use only the
+    /// all-reduce path). Fail loudly instead of mis-slicing if someone
+    /// reaches them on a mutated group; the check is negligible next to
+    /// the collective's own payload copies, so it runs in release too.
+    fn assert_fixed_membership(&self, op: &str) {
+        assert!(
+            self.members() == (0..self.n_ranks()).collect::<Vec<_>>(),
+            "{op} is not membership-epoch aware: it needs the launch-contiguous world \
+             (use the all-reduce path on elastic groups)"
+        );
+    }
     /// Broadcast `data` from `root` to all ranks. Non-roots' `data` is
     /// ignored (pass `&[]`). Returns the root's payload and this rank's
     /// completion time.
     pub fn broadcast(&mut self, data: &[f32], root: usize, now: f64) -> (Arc<Vec<f32>>, f64) {
+        self.assert_fixed_membership("broadcast");
         assert!(root < self.n_ranks());
         let contribution: &[f32] = if self.rank() == root { data } else { &[] };
         let algo = self.net_model().algo;
@@ -32,6 +46,7 @@ impl Comm {
     /// All-gather: every rank contributes `data` (equal lengths); all
     /// receive the rank-ordered concatenation.
     pub fn allgather(&mut self, data: &[f32], now: f64) -> (Vec<f32>, f64) {
+        self.assert_fixed_membership("allgather");
         let algo = self.net_model().algo;
         let (payload, t, _) = self.post(data, now, RoundKind::AllGather, algo).wait_timed(now);
         (payload.as_ref().clone(), t)
@@ -40,6 +55,7 @@ impl Comm {
     /// Reduce-scatter: the sum is computed and rank i receives chunk i
     /// (last chunk may be short).
     pub fn reduce_scatter(&mut self, data: &[f32], now: f64) -> (Vec<f32>, f64) {
+        self.assert_fixed_membership("reduce_scatter");
         let n = self.n_ranks();
         let len = data.len();
         let per = len.div_ceil(n);

@@ -11,6 +11,9 @@
 //! result back to its members (local links). Per-phase message volume
 //! is returned so `benches/allreduce.rs` can account local vs global
 //! bytes — the split the [`super::PhaseTimes`] model claims.
+//!
+//! (This file sits inside the CI rustfmt gate — `cargo fmt` clean —
+//! alongside the rest of the schedule-aware comm layer.)
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 

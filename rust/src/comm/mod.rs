@@ -35,6 +35,36 @@
 //!   broadcast). They are the differential checks that the modelled
 //!   schedules correspond to real decentralized data movement, and
 //!   they feed `benches/allreduce.rs`.
+//!
+//! ## Membership epochs (elastic cluster membership)
+//!
+//! A [`Group`] is no longer pinned to its launch-time world size. The
+//! roster tracks, per rank, the first round sequence it participates in
+//! (`admit_seq`) and the first it will never post (`depart_seq`), so
+//! the **expected contributor set of every round is a pure function of
+//! the round's sequence number** — deterministic regardless of
+//! wall-clock thread interleaving:
+//!
+//! * A rank that dies without respawn calls [`Comm::leave`], which
+//!   pins its `depart_seq` to its own next sequence number (everything
+//!   below it was already posted) and resolves any in-flight round the
+//!   rank will never contribute to **over the surviving ranks** — the
+//!   payload is the survivor-set sum, and the consumer re-weights the
+//!   mean by [`RoundOutcome::contributors`], keeping the gradient mean
+//!   unbiased.
+//! * Survivors observe the shrink from the [`RoundOutcome`] of their
+//!   next wait, agree on the new epoch (every rank computes the same
+//!   transition from the same round result), and call
+//!   [`Comm::advance_epoch`] — idempotent, first caller applies —
+//!   admitting any scripted joiners *after* the epoch's resync round.
+//! * Joiners block in [`Group::await_admission`] until the survivors
+//!   publish the epoch's [`JoinBootstrap`] (the canonical averaged
+//!   weights + resume counters via [`Comm::publish_bootstrap`]), so
+//!   every member of the new epoch starts from bit-identical state.
+//!
+//! A group with no membership events behaves exactly as before: all
+//! ranks admitted at sequence 0, nobody departs, every round expects
+//! the full world.
 
 pub mod collectives;
 pub mod hier;
@@ -185,34 +215,84 @@ pub(crate) enum RoundKind {
     Broadcast { root: usize },
 }
 
+/// One rank's membership interval, in round-sequence space. The
+/// expected contributor set of round `seq` is exactly the ranks whose
+/// interval contains `seq` — a pure function of the (deterministic)
+/// admit/depart sequence numbers, never of thread timing.
+#[derive(Debug, Clone, Copy)]
+struct Member {
+    /// First round sequence this rank participates in (`u64::MAX`
+    /// until admitted).
+    admit_seq: u64,
+    /// First round sequence this rank will never post (set on leave).
+    depart_seq: Option<u64>,
+    /// Membership epoch the rank was (last) admitted under.
+    joined_epoch: u64,
+}
+
+impl Member {
+    fn expects(&self, seq: u64) -> bool {
+        let not_departed = match self.depart_seq {
+            Some(d) => seq < d,
+            None => true,
+        };
+        self.admit_seq <= seq && not_departed
+    }
+
+    fn is_active(&self) -> bool {
+        self.admit_seq != u64::MAX && self.depart_seq.is_none()
+    }
+}
+
+/// The completed payload of a round, shared by all its consumers.
+#[derive(Debug, Clone)]
+struct RoundResult {
+    payload: Arc<Vec<f32>>,
+    /// Shared completion time: `max(post) + t_collective`.
+    t_complete: f64,
+    phases: PhaseTimes,
+    /// Ranks that actually contributed (ascending). Shorter than the
+    /// posting epoch's world when the round resolved over survivors.
+    contributors: Arc<Vec<usize>>,
+}
+
 struct Round {
-    /// Per-rank contributions, reduced in rank order on completion so
-    /// the result is bit-deterministic regardless of thread arrival
-    /// order (float addition is not associative) — and bit-identical
-    /// across schedules, which only decide the cost.
+    /// Per-rank contributions (capacity-wide), reduced in rank order on
+    /// completion so the result is bit-deterministic regardless of
+    /// thread arrival order (float addition is not associative) — and
+    /// bit-identical across schedules, which only decide the cost.
     parts: Vec<Option<Vec<f32>>>,
-    contributions: usize,
     max_post_time: f64,
     kind: RoundKind,
     /// Schedule costing this round (first poster's choice; the
     /// deterministic controllers guarantee every rank picks the same).
     algo: AllReduceAlgo,
-    /// Payload + sim completion time + per-phase split, set when the
-    /// last rank contributes.
-    result: Option<(Arc<Vec<f32>>, f64, PhaseTimes)>,
+    result: Option<RoundResult>,
     consumed: usize,
 }
 
+/// Is every rank the roster expects for `seq` posted into `round`?
+fn round_complete(roster: &[Member], round: &Round, seq: u64) -> bool {
+    roster.iter().enumerate().all(|(r, m)| !m.expects(seq) || round.parts[r].is_some())
+}
+
 impl Round {
-    /// Reduce the parts per the round kind; returns (payload, phases).
-    fn finish(&mut self, net: &NetModel, n_ranks: usize, seq: u64) -> (Vec<f32>, PhaseTimes) {
+    /// Reduce the parts per the round kind over the ranks that posted;
+    /// returns (payload, phases, contributors). The cost model prices
+    /// the collective at the contributor count — a round that resolved
+    /// over survivors ran over survivors.
+    fn finish(&mut self, net: &NetModel, seq: u64) -> (Vec<f32>, PhaseTimes, Vec<usize>) {
+        let contributors: Vec<usize> =
+            (0..self.parts.len()).filter(|&r| self.parts[r].is_some()).collect();
+        assert!(!contributors.is_empty(), "round {seq} completed with no contributors");
+        let n_ranks = contributors.len();
         let sched_net = NetModel { algo: self.algo, ..*net };
-        match self.kind {
+        let (payload, phases) = match self.kind {
             RoundKind::AllReduce | RoundKind::ReduceScatter => {
-                let len = self.parts[0].as_ref().expect("all ranks posted").len();
+                let len = self.parts[contributors[0]].as_ref().expect("contributor").len();
                 let mut sum = vec![0.0f32; len];
-                for part in self.parts.iter_mut() {
-                    let part = part.take().expect("all ranks posted");
+                for &r in &contributors {
+                    let part = self.parts[r].take().expect("contributor posted");
                     assert_eq!(
                         part.len(),
                         sum.len(),
@@ -230,10 +310,10 @@ impl Round {
                 (sum, phases)
             }
             RoundKind::AllGather => {
-                let per = self.parts[0].as_ref().expect("all ranks posted").len();
+                let per = self.parts[contributors[0]].as_ref().expect("contributor").len();
                 let mut out = Vec::with_capacity(per * n_ranks);
-                for part in self.parts.iter_mut() {
-                    let part = part.take().expect("all ranks posted");
+                for &r in &contributors {
+                    let part = self.parts[r].take().expect("contributor posted");
                     assert_eq!(part.len(), per, "mismatched all-gather lengths in round {seq}");
                     out.extend_from_slice(&part);
                 }
@@ -248,45 +328,183 @@ impl Round {
                 let phases = sched_net.schedule().bcast_phases(payload.len(), n_ranks);
                 (payload, phases)
             }
-        }
+        };
+        (payload, phases, contributors)
+    }
+
+    /// Finalize: compute and store the result, off the shared mutex's
+    /// critical data (caller holds the lock).
+    fn seal(&mut self, net: &NetModel, seq: u64) {
+        let (payload, phases, contributors) = self.finish(net, seq);
+        self.result = Some(RoundResult {
+            payload: Arc::new(payload),
+            t_complete: self.max_post_time + phases.total(),
+            phases,
+            contributors: Arc::new(contributors),
+        });
+    }
+}
+
+/// The canonical state a joiner bootstraps from, published by the
+/// survivors of an epoch transition (first publisher wins; every
+/// survivor computes bit-identical content).
+#[derive(Debug, Clone)]
+pub struct JoinBootstrap {
+    /// Epoch this bootstrap belongs to.
+    pub epoch: u64,
+    /// The epoch-boundary averaged weights (bit-identical on every
+    /// member of the new epoch).
+    pub weights: Arc<Vec<f32>>,
+    /// Virtual time the epoch began (the resync round's completion).
+    pub t_start: f64,
+    /// Cumulative healthy-rank step count at the boundary (the
+    /// engines' termination currency — identical across ranks).
+    pub sched_steps: u64,
+    /// Completed-window index at the boundary.
+    pub window: u64,
+    /// How many scripted joins have fired up to and including this
+    /// epoch (the joiner resumes the membership schedule here — it
+    /// cannot reconstruct the cursor from the member list, since an
+    /// earlier joiner may have already departed again).
+    pub join_cursor: usize,
+}
+
+struct State {
+    rounds: HashMap<u64, Round>,
+    epoch: u64,
+    roster: Vec<Member>,
+    /// The member list **pinned at the epoch's first
+    /// [`Comm::advance_epoch`] application** — the list every member of
+    /// the epoch must agree on. The live roster can already have lost a
+    /// member to a racing post-transition `leave()` by the time a slow
+    /// survivor (or a waking joiner) reads it; the pinned snapshot is
+    /// taken before any member can act post-transition (each member's
+    /// `advance_epoch` call happens-before its subsequent departure),
+    /// so it is identical for everyone.
+    epoch_members: Vec<usize>,
+    bootstrap: Option<JoinBootstrap>,
+    /// Set when the run finishes; unblocks joiners that never fired.
+    closed: bool,
+}
+
+impl State {
+    fn members(&self) -> Vec<usize> {
+        self.roster
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.is_active())
+            .map(|(r, _)| r)
+            .collect()
     }
 }
 
 struct Shared {
-    n: usize,
+    capacity: usize,
     net: NetModel,
-    state: Mutex<HashMap<u64, Round>>,
+    state: Mutex<State>,
     cv: Condvar,
 }
 
-/// A communicator group of `n` ranks. Create once, then [`Group::comm`]
-/// hands each worker thread its endpoint.
+/// A communicator group. Create once, then [`Group::comm`] hands each
+/// initial worker thread its endpoint; scripted joiners block in
+/// [`Group::await_admission`] until the survivors admit them.
 pub struct Group {
     shared: Arc<Shared>,
 }
 
 impl Group {
+    /// A fixed group of `n` ranks (the non-elastic default: everyone
+    /// admitted at sequence 0, nobody leaves).
     pub fn new(n: usize, net: NetModel) -> Self {
-        assert!(n >= 1);
+        Self::elastic(n, n, net)
+    }
+
+    /// An elastic group: ranks `0..initial` are members from the start;
+    /// ranks `initial..capacity` are reserved slots for scripted
+    /// joiners (inactive until [`Comm::advance_epoch`] admits them).
+    pub fn elastic(capacity: usize, initial: usize, net: NetModel) -> Self {
+        assert!(initial >= 1 && capacity >= initial);
+        let roster = (0..capacity)
+            .map(|r| Member {
+                admit_seq: if r < initial { 0 } else { u64::MAX },
+                depart_seq: None,
+                joined_epoch: 0,
+            })
+            .collect();
         Group {
             shared: Arc::new(Shared {
-                n,
+                capacity,
                 net,
-                state: Mutex::new(HashMap::new()),
+                state: Mutex::new(State {
+                    rounds: HashMap::new(),
+                    epoch: 0,
+                    roster,
+                    epoch_members: (0..initial).collect(),
+                    bootstrap: None,
+                    closed: false,
+                }),
                 cv: Condvar::new(),
             }),
         }
     }
 
-    /// Endpoint for `rank`. Each rank must be handed out exactly once;
-    /// sequence numbers are tracked per-endpoint.
+    /// Endpoint for an *initial* member. Each rank must be handed out
+    /// exactly once; sequence numbers are tracked per-endpoint.
     pub fn comm(&self, rank: usize) -> Comm {
-        assert!(rank < self.shared.n);
+        {
+            let st = self.shared.state.lock().unwrap();
+            assert!(rank < self.shared.capacity, "rank {rank} out of capacity");
+            assert!(st.roster[rank].admit_seq == 0, "rank {rank} is not an initial member");
+        }
         Comm { rank, shared: self.shared.clone(), next_seq: 0 }
     }
 
+    /// Block until `rank` is admitted by an epoch transition *and* the
+    /// epoch's bootstrap is published, then return its endpoint (fast-
+    /// forwarded to the epoch's first round) plus the bootstrap.
+    /// Returns `None` if the run closes before the join fires.
+    pub fn await_admission(&self, rank: usize) -> Option<(Comm, JoinBootstrap)> {
+        assert!(rank < self.shared.capacity, "rank {rank} out of capacity");
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let m = st.roster[rank];
+            if m.admit_seq != u64::MAX {
+                if let Some(boot) = st.bootstrap.clone() {
+                    if boot.epoch == m.joined_epoch {
+                        let comm =
+                            Comm { rank, shared: self.shared.clone(), next_seq: m.admit_seq };
+                        return Some((comm, boot));
+                    }
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Current world size (active members).
     pub fn n_ranks(&self) -> usize {
-        self.shared.n
+        self.shared.state.lock().unwrap().members().len()
+    }
+
+    /// Sorted active member ranks.
+    pub fn members(&self) -> Vec<usize> {
+        self.shared.state.lock().unwrap().members()
+    }
+
+    /// Current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.state.lock().unwrap().epoch
+    }
+
+    /// Mark the run finished: joiners whose scripted event never fired
+    /// stop waiting. Idempotent.
+    pub fn shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.cv.notify_all();
     }
 }
 
@@ -310,13 +528,40 @@ pub struct PendingReduce {
     done: bool,
 }
 
+/// Everything a completed round hands back: payload, timing, phase
+/// split, and — the elastic-membership signal — who contributed.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub data: Arc<Vec<f32>>,
+    /// This rank's virtual time after the wait: `max(now, t_complete)`.
+    pub time: f64,
+    /// Shared completion time of the collective (identical on every
+    /// rank — the deterministic anchor membership transitions key on).
+    pub t_complete: f64,
+    pub phases: PhaseTimes,
+    /// Ranks that contributed, ascending. A shrink shows up here: the
+    /// consumer re-weights the mean by `contributors.len()`.
+    pub contributors: Arc<Vec<usize>>,
+}
+
 impl Comm {
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Current world size (active members of the current epoch).
     pub fn n_ranks(&self) -> usize {
-        self.shared.n
+        self.shared.state.lock().unwrap().members().len()
+    }
+
+    /// Sorted active member ranks of the current epoch.
+    pub fn members(&self) -> Vec<usize> {
+        self.shared.state.lock().unwrap().members()
+    }
+
+    /// Current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.state.lock().unwrap().epoch
     }
 
     /// The group's network cost model (carrying the default schedule).
@@ -336,11 +581,16 @@ impl Comm {
     ) -> PendingReduce {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let n_ranks = self.shared.n;
-        let mut st = self.shared.state.lock().unwrap();
-        let round = st.entry(seq).or_insert_with(|| Round {
-            parts: (0..n_ranks).map(|_| None).collect(),
-            contributions: 0,
+        let capacity = self.shared.capacity;
+        let mut guard = self.shared.state.lock().unwrap();
+        let State { rounds, roster, .. } = &mut *guard;
+        debug_assert!(
+            roster[self.rank].expects(seq),
+            "rank {} posting round {seq} outside its membership interval",
+            self.rank
+        );
+        let round = rounds.entry(seq).or_insert_with(|| Round {
+            parts: (0..capacity).map(|_| None).collect(),
             max_post_time: f64::NEG_INFINITY,
             kind,
             algo,
@@ -358,11 +608,9 @@ impl Comm {
         );
         assert!(round.parts[self.rank].is_none(), "rank {} double-posted round {seq}", self.rank);
         round.parts[self.rank] = Some(data.to_vec());
-        round.contributions += 1;
         round.max_post_time = round.max_post_time.max(now);
-        if round.contributions == n_ranks {
-            let (payload, phases) = round.finish(&self.shared.net, n_ranks, seq);
-            round.result = Some((Arc::new(payload), round.max_post_time + phases.total(), phases));
+        if round.result.is_none() && round_complete(roster, round, seq) {
+            round.seal(&self.shared.net, seq);
             self.shared.cv.notify_all();
         }
         PendingReduce {
@@ -372,6 +620,80 @@ impl Comm {
             post_time: now,
             done: false,
         }
+    }
+
+    /// Deregister this rank from the group: it will never post a round
+    /// at or beyond its current sequence number. Any in-flight round
+    /// waiting only on this rank resolves immediately over the
+    /// survivors (re-weighted at the consumer — see [`RoundOutcome`]).
+    /// Idempotent.
+    pub fn leave(&mut self) {
+        let mut guard = self.shared.state.lock().unwrap();
+        let State { rounds, roster, .. } = &mut *guard;
+        if roster[self.rank].depart_seq.is_some() {
+            return;
+        }
+        roster[self.rank].depart_seq = Some(self.next_seq);
+        for (&seq, round) in rounds.iter_mut() {
+            if round.result.is_none() && round_complete(roster, round, seq) {
+                round.seal(&self.shared.net, seq);
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Advance the membership epoch to `to_epoch`, admitting `joiners`
+    /// (reserved, never-admitted ranks) with their first round set to
+    /// `next_seq + 1` — i.e. *after* the epoch's survivors-only resync
+    /// round at `next_seq`. Idempotent per epoch: every survivor calls
+    /// this with identical arguments; the first caller applies the
+    /// admissions and **pins the epoch's member list**, which every
+    /// caller (however late) gets back — a racing post-transition
+    /// `leave()` must not hand different worlds to different members.
+    pub fn advance_epoch(&mut self, to_epoch: u64, joiners: &[usize]) -> Vec<usize> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.epoch < to_epoch {
+            st.epoch = to_epoch;
+            st.bootstrap = None;
+            let admit = self.next_seq + 1;
+            for &j in joiners {
+                let m = &mut st.roster[j];
+                assert!(m.admit_seq == u64::MAX, "join rank {j} already admitted");
+                m.admit_seq = admit;
+                m.joined_epoch = to_epoch;
+            }
+            st.epoch_members = st.members();
+            self.shared.cv.notify_all();
+        }
+        st.epoch_members.clone()
+    }
+
+    /// The member list pinned at the current epoch's transition (what
+    /// [`Comm::advance_epoch`] returned to every member) — the view a
+    /// waking joiner must adopt, immune to later departures.
+    pub fn epoch_members(&self) -> Vec<usize> {
+        self.shared.state.lock().unwrap().epoch_members.clone()
+    }
+
+    /// Publish the canonical bootstrap for `boot.epoch`'s joiners.
+    /// First publisher wins; every survivor computes identical content,
+    /// so the choice of winner is immaterial.
+    pub fn publish_bootstrap(&self, boot: JoinBootstrap) {
+        let mut st = self.shared.state.lock().unwrap();
+        // epochs start at 1, so an absent bootstrap (epoch "0") always
+        // yields to the incoming one
+        let newest = st.bootstrap.as_ref().map(|b| b.epoch).unwrap_or(0);
+        if newest < boot.epoch {
+            st.bootstrap = Some(boot);
+            self.shared.cv.notify_all();
+        }
+    }
+
+    /// Mark the run finished (see [`Group::shutdown`]). Idempotent.
+    pub fn shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.cv.notify_all();
     }
 
     /// Non-blocking all-reduce (sum) — `MPI_Iallreduce`, on the group's
@@ -419,43 +741,57 @@ impl Comm {
     /// Barrier: all ranks must arrive; returns each rank's exit time
     /// `max_i(arrive_i) + t_barrier`.
     pub fn barrier(&mut self, now: f64) -> f64 {
+        let world = self.n_ranks();
         let (_, t) = self.allreduce(&[], now);
         // allreduce of an empty payload costs α-terms only under Ring —
         // use the explicit barrier cost instead of the degenerate model.
         let mut t = t;
-        if self.shared.n > 1 {
-            t += self.shared.net.barrier_time(self.shared.n)
-                - self.shared.net.allreduce_time(0, self.shared.n);
+        if world > 1 {
+            t += self.shared.net.barrier_time(world) - self.shared.net.allreduce_time(0, world);
         }
         t
     }
 }
 
 impl PendingReduce {
-    /// Complete the operation — `MPI_Wait` — returning the payload,
-    /// this rank's virtual time after the wait, and the collective's
-    /// per-phase time split.
+    /// Complete the operation — `MPI_Wait` — returning the full
+    /// [`RoundOutcome`] (payload, exit time, shared completion time,
+    /// phase split, contributor set).
     ///
     /// `now` is the rank's virtual time when it *calls* wait (i.e. after
     /// the overlapped computation). The returned time is
     /// `max(now, collective completion)` — the worker blocks only if
     /// the network is still busy, which is the whole point of the
     /// overlap (Eq. 14).
-    pub fn wait_timed(mut self, now: f64) -> (Arc<Vec<f32>>, f64, PhaseTimes) {
+    pub fn wait_outcome(mut self, now: f64) -> RoundOutcome {
         let mut st = self.shared.state.lock().unwrap();
         loop {
-            if let Some(round) = st.get_mut(&self.seq) {
-                if let Some((sum, t_complete, phases)) = round.result.clone() {
+            if let Some(round) = st.rounds.get_mut(&self.seq) {
+                if let Some(res) = round.result.clone() {
                     round.consumed += 1;
-                    if round.consumed == self.shared.n {
-                        st.remove(&self.seq);
+                    if round.consumed >= res.contributors.len() {
+                        st.rounds.remove(&self.seq);
                     }
                     self.done = true;
-                    return (sum, now.max(t_complete), phases);
+                    return RoundOutcome {
+                        data: res.payload,
+                        time: now.max(res.t_complete),
+                        t_complete: res.t_complete,
+                        phases: res.phases,
+                        contributors: res.contributors,
+                    };
                 }
             }
             st = self.shared.cv.wait(st).unwrap();
         }
+    }
+
+    /// Complete the operation — `MPI_Wait` — returning the payload,
+    /// this rank's virtual time after the wait, and the collective's
+    /// per-phase time split.
+    pub fn wait_timed(self, now: f64) -> (Arc<Vec<f32>>, f64, PhaseTimes) {
+        let out = self.wait_outcome(now);
+        (out.data, out.time, out.phases)
     }
 
     /// Complete the operation — `MPI_Wait` (payload + exit time only).
@@ -467,7 +803,7 @@ impl PendingReduce {
     /// Non-destructive completion test — `MPI_Test` (no time advance).
     pub fn is_complete(&self) -> bool {
         let st = self.shared.state.lock().unwrap();
-        st.get(&self.seq).map(|r| r.result.is_some()).unwrap_or(true)
+        st.rounds.get(&self.seq).map(|r| r.result.is_some()).unwrap_or(true)
     }
 }
 
@@ -682,5 +1018,142 @@ mod tests {
         // flat schedules ignore rank placement
         let flat = NetModel::default();
         assert_eq!(flat.ptp_time_between(0, 3, 1000), flat.ptp_time(1000));
+    }
+
+    // --- membership epochs ---
+
+    #[test]
+    fn leave_resolves_in_flight_round_over_survivors() {
+        // 3 ranks post round 0; rank 2 posts round 0 but then leaves
+        // before round 1. Round 1 must resolve over ranks {0, 1} with
+        // the survivor-set sum and contributor list.
+        let group = Group::new(3, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        let h0a = c0.iallreduce(&[1.0], 0.0);
+        let h1a = c1.iallreduce(&[2.0], 0.0);
+        let h2a = c2.iallreduce(&[4.0], 0.0);
+        assert_eq!(h2a.wait(0.0).0[0], 7.0);
+        // survivors post round 1 first — it must stay open
+        let h0b = c0.iallreduce(&[10.0], 0.0);
+        assert!(!h0b.is_complete());
+        let h1b = c1.iallreduce(&[20.0], 0.0);
+        assert!(!h1b.is_complete(), "round must wait for rank 2 or its departure");
+        c2.leave();
+        assert!(h0b.is_complete(), "departure must resolve the in-flight round");
+        let out = h0b.wait_outcome(0.0);
+        assert_eq!(out.data[0], 30.0, "survivor-set sum");
+        assert_eq!(out.contributors.as_ref(), &vec![0, 1]);
+        let (s1, _) = h1b.wait(0.0);
+        assert_eq!(s1[0], 30.0);
+        assert_eq!(group.members(), vec![0, 1]);
+        // drain rank 0/1's round-0 handles
+        h0a.wait(0.0).0.as_ref();
+        h1a.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn short_round_costs_the_survivor_count() {
+        // A round resolved over 2 of 3 ranks is priced as a 2-rank
+        // collective (it ran over 2 ranks).
+        let net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 4e6, algo: AllReduceAlgo::Ring };
+        let group = Group::new(3, net);
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        c2.leave();
+        let h0 = c0.iallreduce(&vec![1.0; 1000], 1.0);
+        let h1 = c1.iallreduce(&vec![1.0; 1000], 2.0);
+        let out = h0.wait_outcome(0.0);
+        assert_eq!(out.contributors.len(), 2);
+        assert!((out.t_complete - (2.0 + net.allreduce_time(1000, 2))).abs() < 1e-12);
+        h1.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn advance_epoch_admits_joiner_after_resync_round() {
+        let group = Group::elastic(3, 2, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        assert_eq!(group.members(), vec![0, 1]);
+
+        let joiner = thread::spawn({
+            let shared = Group { shared: group.shared.clone() };
+            move || shared.await_admission(2)
+        });
+
+        // both survivors run the identical transition; the second call
+        // is a no-op
+        let members = c0.advance_epoch(1, &[2]);
+        assert_eq!(members, vec![0, 1, 2]);
+        assert_eq!(c1.advance_epoch(1, &[2]), vec![0, 1, 2]);
+        assert_eq!(group.epoch(), 1);
+
+        // the resync round (seq 0) is survivors-only
+        let h0 = c0.iallreduce(&[1.0], 0.0);
+        let h1 = c1.iallreduce(&[3.0], 0.0);
+        let out = h0.wait_outcome(0.0);
+        assert_eq!(out.contributors.as_ref(), &vec![0, 1]);
+        assert_eq!(out.data[0], 4.0);
+        h1.wait(0.0).0.as_ref();
+
+        c0.publish_bootstrap(JoinBootstrap {
+            epoch: 1,
+            weights: Arc::new(vec![2.0]),
+            t_start: 5.0,
+            sched_steps: 7,
+            window: 3,
+            join_cursor: 1,
+        });
+        let (mut c2, boot) = joiner.join().unwrap().expect("joiner admitted");
+        assert_eq!(boot.weights[0], 2.0);
+        assert_eq!(boot.sched_steps, 7);
+
+        // the first post-admission round expects all three ranks
+        let h0 = c0.iallreduce(&[1.0], 0.0);
+        let h1 = c1.iallreduce(&[1.0], 0.0);
+        assert!(!h0.is_complete());
+        let h2 = c2.iallreduce(&[1.0], 0.0);
+        let out = h2.wait_outcome(0.0);
+        assert_eq!(out.data[0], 3.0);
+        assert_eq!(out.contributors.len(), 3);
+        h0.wait(0.0).0.as_ref();
+        h1.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn late_advance_epoch_callers_see_the_pinned_member_list() {
+        // A member that departs right after the transition must not
+        // change the world a slower survivor (or a waking joiner) gets:
+        // the epoch's member list is pinned at first application.
+        let group = Group::elastic(3, 3, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        assert_eq!(c0.advance_epoch(1, &[]), vec![0, 1, 2]);
+        c2.leave(); // races ahead of the slow survivor's call
+        assert_eq!(c1.advance_epoch(1, &[]), vec![0, 1, 2], "late caller got the live roster");
+        assert_eq!(c1.epoch_members(), vec![0, 1, 2]);
+        assert_eq!(group.members(), vec![0, 1], "the live view does shrink");
+    }
+
+    #[test]
+    fn shutdown_unblocks_never_admitted_joiner() {
+        let group = Group::elastic(2, 1, NetModel::instant());
+        let joiner = thread::spawn({
+            let shared = Group { shared: group.shared.clone() };
+            move || shared.await_admission(1)
+        });
+        group.shutdown();
+        assert!(joiner.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn non_elastic_groups_report_full_membership() {
+        let group = Group::new(4, NetModel::instant());
+        assert_eq!(group.n_ranks(), 4);
+        assert_eq!(group.members(), vec![0, 1, 2, 3]);
+        assert_eq!(group.epoch(), 0);
     }
 }

@@ -267,11 +267,23 @@ impl CollectiveSchedule for Hierarchical {
         let (ll, gl) = (self.local_link(), self.global_link());
 
         // ring all-reduce within each group, on local links
-        let local_ring = if m > 1.0 { 2.0 * (m - 1.0) * ll.hop(bytes / m) } else { 0.0 };
+        let local_ring = if m > 1.0 {
+            2.0 * (m - 1.0) * ll.hop(bytes / m)
+        } else {
+            0.0
+        };
         // leader ring across groups, on global links
-        let leader_ring = if g > 1.0 { 2.0 * (g - 1.0) * gl.hop(bytes / g) } else { 0.0 };
+        let leader_ring = if g > 1.0 {
+            2.0 * (g - 1.0) * gl.hop(bytes / g)
+        } else {
+            0.0
+        };
         // local broadcast of the result down a tree
-        let bcast = if m > 1.0 { m.log2().ceil() * ll.hop(bytes / m.max(1.0)) } else { 0.0 };
+        let bcast = if m > 1.0 {
+            m.log2().ceil() * ll.hop(bytes / m.max(1.0))
+        } else {
+            0.0
+        };
         PhaseTimes { local_s: local_ring + bcast, global_s: leader_ring }
     }
 
@@ -283,8 +295,16 @@ impl CollectiveSchedule for Hierarchical {
         let (m, g) = self.shape(n_ranks);
         // leader chain first (global tree), then each leader fans out
         // down its local tree.
-        let global = if g > 1.0 { g.log2().ceil() * self.global_link().hop(bytes) } else { 0.0 };
-        let local = if m > 1.0 { m.log2().ceil() * self.local_link().hop(bytes) } else { 0.0 };
+        let global = if g > 1.0 {
+            g.log2().ceil() * self.global_link().hop(bytes)
+        } else {
+            0.0
+        };
+        let local = if m > 1.0 {
+            m.log2().ceil() * self.local_link().hop(bytes)
+        } else {
+            0.0
+        };
         PhaseTimes { local_s: local, global_s: global }
     }
 
@@ -296,9 +316,16 @@ impl CollectiveSchedule for Hierarchical {
         let (m, g) = self.shape(n_ranks);
         // assemble the group block locally, ring the blocks across
         // leaders, then push the remote blocks down the local tree.
-        let local_gather = if m > 1.0 { (m - 1.0) * self.local_link().hop(per) } else { 0.0 };
-        let leader_ring =
-            if g > 1.0 { (g - 1.0) * self.global_link().hop(per * m) } else { 0.0 };
+        let local_gather = if m > 1.0 {
+            (m - 1.0) * self.local_link().hop(per)
+        } else {
+            0.0
+        };
+        let leader_ring = if g > 1.0 {
+            (g - 1.0) * self.global_link().hop(per * m)
+        } else {
+            0.0
+        };
         let local_fanout = if m > 1.0 && g > 1.0 {
             m.log2().ceil() * self.local_link().hop(per * m * (g - 1.0))
         } else {
@@ -313,8 +340,16 @@ impl CollectiveSchedule for Hierarchical {
         }
         let bytes = bytes_of(n_elems);
         let (m, g) = self.shape(n_ranks);
-        let local = if m > 1.0 { (m - 1.0) * self.local_link().hop(bytes / m) } else { 0.0 };
-        let global = if g > 1.0 { (g - 1.0) * self.global_link().hop(bytes / g) } else { 0.0 };
+        let local = if m > 1.0 {
+            (m - 1.0) * self.local_link().hop(bytes / m)
+        } else {
+            0.0
+        };
+        let global = if g > 1.0 {
+            (g - 1.0) * self.global_link().hop(bytes / g)
+        } else {
+            0.0
+        };
         PhaseTimes { local_s: local, global_s: global }
     }
 }

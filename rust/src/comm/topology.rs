@@ -51,14 +51,28 @@ impl Dragonfly {
         self.groups * self.nodes_per_group
     }
 
+    /// The canonical (groups, nodes_per_group) shape for `n` nodes:
+    /// √n groups, rounded up. Shared by [`Dragonfly::for_nodes`] and
+    /// [`Dragonfly::refit`] so a refitted epoch topology always agrees
+    /// with what a fresh run of the same world size would derive.
+    fn shape_for(n: usize) -> (usize, usize) {
+        let groups = ((n as f64).sqrt().ceil() as usize).max(1);
+        (groups, n.div_ceil(groups).max(1))
+    }
+
     /// Shape a dragonfly around `n` nodes (√n groups, rounded up).
     pub fn for_nodes(n: usize) -> Self {
-        let groups = ((n as f64).sqrt().ceil() as usize).max(1);
-        Dragonfly {
-            groups,
-            nodes_per_group: n.div_ceil(groups).max(1),
-            ..Dragonfly::default()
-        }
+        let (groups, nodes_per_group) = Self::shape_for(n);
+        Dragonfly { groups, nodes_per_group, ..Dragonfly::default() }
+    }
+
+    /// Re-derive the group shape for a new world size while keeping
+    /// this fabric's link parameters — the membership-epoch transition:
+    /// when ranks leave or join, the dragonfly groups are recomputed
+    /// from the *current* N, but the optics stay the optics.
+    pub fn refit(&self, n: usize) -> Self {
+        let (groups, nodes_per_group) = Self::shape_for(n);
+        Dragonfly { groups, nodes_per_group, ..*self }
     }
 
     /// The group a rank lives in (ranks are laid out group-contiguous).
@@ -159,6 +173,17 @@ mod tests {
     fn for_nodes_covers_request() {
         let d = Dragonfly::for_nodes(100);
         assert!(d.n_nodes() >= 100);
+    }
+
+    #[test]
+    fn refit_keeps_links_and_recomputes_shape() {
+        let d = Dragonfly { beta_global: 9.9e9, ..Dragonfly::for_nodes(64) };
+        let r = d.refit(48);
+        assert!(r.n_nodes() >= 48);
+        assert_eq!(r.beta_global, 9.9e9, "link parameters must survive the refit");
+        assert_eq!(r.groups, Dragonfly::for_nodes(48).groups);
+        // growing back re-derives again
+        assert!(d.refit(80).n_nodes() >= 80);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algo::Algo;
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
-use crate::control::{ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan};
+use crate::control::{ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent};
 use crate::simtime::ComputeModel;
 
 /// Full description of one training run.
@@ -198,8 +198,10 @@ impl ExperimentConfig {
         let mut fault_factor = 2.0f64;
         let mut fault_duration_s = 1.0f64;
         let mut fault_extra_s = 0.5f64;
-        // `[[control.fault]]` table-array specs.
+        let mut fault_respawn = true;
+        // `[[control.fault]]` / `[[control.join]]` table-array specs.
         let mut fault_events: Vec<FaultEvent> = Vec::new();
+        let mut join_events: Vec<JoinEvent> = Vec::new();
         // `[comm]` table: schedule + dragonfly shape/links, assembled
         // after the loop (the schedule may need the final topology and
         // node count).
@@ -305,6 +307,7 @@ impl ExperimentConfig {
                 "control.fault_factor" => fault_factor = val.as_f64().ok_or_else(err)?,
                 "control.fault_duration_s" => fault_duration_s = val.as_f64().ok_or_else(err)?,
                 "control.fault_extra_s" => fault_extra_s = val.as_f64().ok_or_else(err)?,
+                "control.fault_respawn" => fault_respawn = val.as_bool().ok_or_else(err)?,
                 // `[[control.fault]]` table array: any number of specs.
                 "control.fault" => {
                     for entry in val.as_array().ok_or_else(err)? {
@@ -312,6 +315,16 @@ impl ExperimentConfig {
                             anyhow::anyhow!("control.fault must be [[control.fault]] tables")
                         })?;
                         fault_events.push(parse_fault_table(table)?);
+                    }
+                }
+                // `[[control.join]]` table array: scripted arrivals
+                // (membership-epoch growth).
+                "control.join" => {
+                    for entry in val.as_array().ok_or_else(err)? {
+                        let table = entry.as_table().ok_or_else(|| {
+                            anyhow::anyhow!("control.join must be [[control.join]] tables")
+                        })?;
+                        join_events.extend(parse_join_table(table)?);
                     }
                 }
                 "out_dir" => cfg.out_dir = Some(val.as_str().ok_or_else(err)?.into()),
@@ -324,7 +337,7 @@ impl ExperimentConfig {
             let at_s = fault_at_s
                 .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_at_s"))?;
             let kind = match kind.as_str() {
-                "kill" => FaultKind::Kill,
+                "kill" => FaultKind::Kill { respawn: fault_respawn },
                 "slow" => FaultKind::Slow { factor: fault_factor, duration_s: fault_duration_s },
                 "delay" => FaultKind::Delay { extra_s: fault_extra_s },
                 other => bail!("unknown control.fault_kind {other:?} (kill | slow | delay)"),
@@ -334,6 +347,7 @@ impl ExperimentConfig {
         for e in fault_events {
             cfg.control.faults.push(e);
         }
+        cfg.control.joins = join_events;
 
         // Assemble the `[comm]` dragonfly: an explicit shape wins, a
         // half-specified shape derives its other dimension from the
@@ -402,9 +416,48 @@ impl ExperimentConfig {
             bail!("warmup_stop_frac must not exceed warmup_frac");
         }
         self.control.validate()?;
+        // Membership events: joins are fresh rank ids above the initial
+        // world (departed ids are retired, like replaced machines), and
+        // faults may target any rank the run can ever hold.
+        let membership = self.control.membership_log(self.nodes);
+        let capacity = membership.capacity();
+        for j in self.control.joins.iter() {
+            if j.rank < self.nodes {
+                bail!(
+                    "control.join rank {} collides with the initial world 0..{} \
+                     (join ranks must be fresh ids)",
+                    j.rank,
+                    self.nodes
+                );
+            }
+        }
+        if membership.is_elastic() {
+            if !matches!(self.algo, Algo::S3gd | Algo::DcS3gd) {
+                bail!(
+                    "membership events (join / non-respawned kill) need the \
+                     stale-synchronous engine (s3gd | dcs3gd), got {}",
+                    self.algo.name()
+                );
+            }
+            let initial_departures = membership
+                .departs()
+                .iter()
+                .filter(|(rank, _)| *rank < self.nodes)
+                .count();
+            if initial_departures >= self.nodes {
+                bail!("every initial rank departs — the cluster would empty out");
+            }
+        }
         for e in self.control.faults.events() {
-            if e.rank >= self.nodes {
-                bail!("fault targets rank {} but the run has {} nodes", e.rank, self.nodes);
+            if e.rank >= capacity {
+                bail!(
+                    "fault targets rank {} but the run never holds more than {} ranks",
+                    e.rank,
+                    capacity
+                );
+            }
+            if e.rank >= self.nodes && !membership.is_join_rank(e.rank) {
+                bail!("fault targets rank {} which never joins the run", e.rank);
             }
         }
         Ok(())
@@ -426,7 +479,8 @@ pub fn parse_schedule(name: &str, topology: Dragonfly) -> Result<AllReduceAlgo> 
 }
 
 /// One `[[control.fault]]` table: `rank`, `at_s`, `kind` (required) plus
-/// the kind-specific knobs. Unknown keys are rejected (typo safety).
+/// the kind-specific knobs (`respawn = false` turns a kill into a
+/// permanent departure). Unknown keys are rejected (typo safety).
 fn parse_fault_table(table: &BTreeMap<String, TomlValue>) -> Result<FaultEvent> {
     let mut rank: Option<usize> = None;
     let mut at_s: Option<f64> = None;
@@ -434,6 +488,7 @@ fn parse_fault_table(table: &BTreeMap<String, TomlValue>) -> Result<FaultEvent> 
     let mut factor = 2.0f64;
     let mut duration_s = 1.0f64;
     let mut extra_s = 0.5f64;
+    let mut respawn = true;
     for (k, v) in table {
         let err = || anyhow::anyhow!("bad value for control.fault.{k}");
         match k.as_str() {
@@ -443,6 +498,7 @@ fn parse_fault_table(table: &BTreeMap<String, TomlValue>) -> Result<FaultEvent> 
             "factor" => factor = v.as_f64().ok_or_else(err)?,
             "duration_s" => duration_s = v.as_f64().ok_or_else(err)?,
             "extra_s" => extra_s = v.as_f64().ok_or_else(err)?,
+            "respawn" => respawn = v.as_bool().ok_or_else(err)?,
             other => bail!("unknown [[control.fault]] key {other:?}"),
         }
     }
@@ -450,12 +506,50 @@ fn parse_fault_table(table: &BTreeMap<String, TomlValue>) -> Result<FaultEvent> 
     let at_s = at_s.ok_or_else(|| anyhow::anyhow!("[[control.fault]] needs at_s"))?;
     let kind = match kind.ok_or_else(|| anyhow::anyhow!("[[control.fault]] needs kind"))?.as_str()
     {
-        "kill" => FaultKind::Kill,
+        "kill" => FaultKind::Kill { respawn },
         "slow" => FaultKind::Slow { factor, duration_s },
         "delay" => FaultKind::Delay { extra_s },
         other => bail!("unknown [[control.fault]] kind {other:?} (kill | slow | delay)"),
     };
     Ok(FaultEvent { rank, at_s, kind })
+}
+
+/// One `[[control.join]]` table: `at_s` (required) plus either a single
+/// `rank` or a `first_rank` + `count` block of fresh arrivals. Unknown
+/// keys are rejected (typo safety).
+fn parse_join_table(table: &BTreeMap<String, TomlValue>) -> Result<Vec<JoinEvent>> {
+    let mut rank: Option<usize> = None;
+    let mut first_rank: Option<usize> = None;
+    let mut count: Option<usize> = None;
+    let mut at_s: Option<f64> = None;
+    for (k, v) in table {
+        let err = || anyhow::anyhow!("bad value for control.join.{k}");
+        match k.as_str() {
+            "rank" => rank = Some(v.as_i64().ok_or_else(err)? as usize),
+            "first_rank" => first_rank = Some(v.as_i64().ok_or_else(err)? as usize),
+            "count" => count = Some(v.as_i64().ok_or_else(err)? as usize),
+            "at_s" => at_s = Some(v.as_f64().ok_or_else(err)?),
+            other => bail!("unknown [[control.join]] key {other:?}"),
+        }
+    }
+    let at_s = at_s.ok_or_else(|| anyhow::anyhow!("[[control.join]] needs at_s"))?;
+    match (rank, first_rank) {
+        (Some(r), None) => {
+            if count.is_some() {
+                bail!("[[control.join]] count only applies with first_rank");
+            }
+            Ok(vec![JoinEvent { rank: r, at_s }])
+        }
+        (None, Some(first)) => {
+            let count = count.unwrap_or(1);
+            if count == 0 {
+                bail!("[[control.join]] count must be ≥ 1");
+            }
+            Ok((first..first + count).map(|rank| JoinEvent { rank, at_s }).collect())
+        }
+        (None, None) => bail!("[[control.join]] needs rank or first_rank"),
+        (Some(_), Some(_)) => bail!("[[control.join]] takes rank or first_rank, not both"),
+    }
 }
 
 /// Fluent builder over [`ExperimentConfig`].
@@ -577,6 +671,11 @@ impl ConfigBuilder {
     }
     pub fn faults(mut self, v: FaultPlan) -> Self {
         self.cfg.control.faults = v;
+        self
+    }
+    /// Script a membership arrival: fresh `rank` joins at `at_s`.
+    pub fn join(mut self, rank: usize, at_s: f64) -> Self {
+        self.cfg.control.joins.push(JoinEvent { rank, at_s });
         self
     }
     pub fn artifacts_root(mut self, v: impl Into<PathBuf>) -> Self {
@@ -843,7 +942,94 @@ mod tests {
         let faults = cfg.control.faults.events();
         assert_eq!(faults.len(), 1);
         assert_eq!(faults[0].rank, 2);
-        assert_eq!(faults[0].kind, FaultKind::Kill);
+        assert_eq!(faults[0].kind, FaultKind::Kill { respawn: true });
+    }
+
+    #[test]
+    fn membership_events_parse_and_validate() {
+        let doc = r#"
+            nodes = 4
+
+            [[control.fault]]
+            rank = 3
+            at_s = 1.0
+            kind = "kill"
+            respawn = false
+
+            [[control.join]]
+            rank = 4
+            at_s = 2.0
+
+            [[control.join]]
+            first_rank = 5
+            count = 2
+            at_s = 3.0
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert!(cfg.control.faults.has_departures());
+        assert_eq!(cfg.control.joins.len(), 3);
+        assert_eq!(cfg.control.joins[1], JoinEvent { rank: 5, at_s: 3.0 });
+        let log = cfg.control.membership_log(cfg.nodes);
+        assert!(log.is_elastic());
+        assert_eq!(log.capacity(), 7);
+        // a fault may target a join rank (join then depart)
+        let doc2 = r#"
+            nodes = 2
+
+            [[control.join]]
+            rank = 2
+            at_s = 1.0
+
+            [[control.fault]]
+            rank = 2
+            at_s = 2.0
+            kind = "kill"
+            respawn = false
+        "#;
+        ExperimentConfig::from_toml_str(doc2).unwrap();
+    }
+
+    #[test]
+    fn bad_membership_configs_rejected() {
+        // join rank colliding with the initial world
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 4\n[[control.join]]\nrank = 2\nat_s = 1.0"
+        )
+        .is_err());
+        // duplicate join rank
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n[[control.join]]\nrank = 2\nat_s = 1.0\n\
+             [[control.join]]\nrank = 2\nat_s = 2.0"
+        )
+        .is_err());
+        // membership events need the stale-synchronous engine
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\nalgo = \"ssgd\"\n[[control.join]]\nrank = 2\nat_s = 1.0"
+        )
+        .is_err());
+        // the whole initial world departing is rejected
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n\
+             [[control.fault]]\nrank = 0\nat_s = 1.0\nkind = \"kill\"\nrespawn = false\n\
+             [[control.fault]]\nrank = 1\nat_s = 1.0\nkind = \"kill\"\nrespawn = false"
+        )
+        .is_err());
+        // a fault on a rank that never exists
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n[[control.fault]]\nrank = 5\nat_s = 1.0\nkind = \"kill\""
+        )
+        .is_err());
+        // join needs exactly one addressing mode
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n[[control.join]]\nrank = 2\nfirst_rank = 3\nat_s = 1.0"
+        )
+        .is_err());
+        // count composes with first_rank only (a silently-ignored count
+        // would under-deliver arrivals)
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\n[[control.join]]\nrank = 2\ncount = 3\nat_s = 1.0"
+        )
+        .is_err());
     }
 
     #[test]

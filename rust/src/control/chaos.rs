@@ -5,11 +5,14 @@
 //! A [`FaultPlan`] scripts events against the simulated cluster:
 //!
 //! * **Kill** — the worker loses its local state (weights, momentum) at
-//!   the event time. The failure is *detected* when its heartbeat (last
-//!   rendezvous/step timestamp on the [`HeartbeatBoard`]) goes stale
-//!   past the configured timeout, and the respawned worker restores
-//!   from the latest [`SnapshotStore`] checkpoint, paying
-//!   `detect + restore` seconds of virtual downtime.
+//!   the event time. With `respawn: true` (the default) the failure is
+//!   *detected* when its heartbeat (last rendezvous/step timestamp on
+//!   the [`HeartbeatBoard`]) goes stale past the configured timeout,
+//!   and the respawned worker restores from the latest
+//!   [`SnapshotStore`] checkpoint, paying `detect + restore` seconds of
+//!   virtual downtime. With `respawn: false` the rank **departs**: it
+//!   deregisters from the communicator group and the membership epoch
+//!   advances (see [`crate::control::MembershipLog`]).
 //! * **Slow** — a transient straggler: compute runs `factor×` slower
 //!   for a duration (e.g. a co-scheduled job, thermal throttling).
 //! * **Delay** — a one-shot stall of `extra_s` (e.g. a GC pause or
@@ -26,8 +29,10 @@ use crate::model::Checkpoint;
 /// What happens to a worker at a scripted virtual time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
-    /// Crash-and-respawn: local state lost, recovered from snapshot.
-    Kill,
+    /// Crash: local state lost. `respawn: true` recovers the same rank
+    /// from a snapshot; `respawn: false` is a permanent departure (the
+    /// membership epoch shrinks).
+    Kill { respawn: bool },
     /// Compute runs `factor×` slower for `duration_s` seconds.
     Slow { factor: f64, duration_s: f64 },
     /// One-shot stall of `extra_s` seconds.
@@ -58,9 +63,16 @@ impl FaultPlan {
         self.events.push(e);
     }
 
-    /// Builder: kill `rank` at `at_s`.
+    /// Builder: kill `rank` at `at_s` (crash-and-respawn).
     pub fn kill(mut self, rank: usize, at_s: f64) -> Self {
-        self.push(FaultEvent { rank, at_s, kind: FaultKind::Kill });
+        self.push(FaultEvent { rank, at_s, kind: FaultKind::Kill { respawn: true } });
+        self
+    }
+
+    /// Builder: `rank` departs permanently at `at_s` — a kill that is
+    /// *not* respawned; the membership epoch shrinks around it.
+    pub fn depart(mut self, rank: usize, at_s: f64) -> Self {
+        self.push(FaultEvent { rank, at_s, kind: FaultKind::Kill { respawn: false } });
         self
     }
 
@@ -87,7 +99,13 @@ impl FaultPlan {
     /// Does the plan kill anyone? (Engines use this to decide whether
     /// snapshots are worth taking by default.)
     pub fn has_kills(&self) -> bool {
-        self.events.iter().any(|e| matches!(e.kind, FaultKind::Kill))
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::Kill { .. }))
+    }
+
+    /// Does the plan contain permanent departures (kills that are not
+    /// respawned)? These drive the membership epoch.
+    pub fn has_departures(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::Kill { respawn: false }))
     }
 
     /// This rank's events, ordered by fire time.
@@ -149,13 +167,24 @@ impl ChaosInjector {
         extra
     }
 
+    /// A kill is due at/before `now` but not yet consumed: the worker
+    /// is scripted-dead. Heartbeats must stop counting from the crash
+    /// time, not from whenever the engine notices — letting a dead
+    /// rank's post-crash step beat the board double-counts its
+    /// liveness into the detection window (see [`HeartbeatBoard`]).
+    pub fn kill_pending(&self, now: f64) -> bool {
+        self.events.iter().enumerate().any(|(i, e)| {
+            !self.fired[i] && matches!(e.kind, FaultKind::Kill { .. }) && now >= e.at_s
+        })
+    }
+
     /// The earliest unconsumed Kill due at/before `now`, if any.
     pub fn take_kill(&mut self, now: f64) -> Option<FaultEvent> {
         for (i, e) in self.events.iter().enumerate() {
             if self.fired[i] {
                 continue;
             }
-            if matches!(e.kind, FaultKind::Kill) && now >= e.at_s {
+            if matches!(e.kind, FaultKind::Kill { .. }) && now >= e.at_s {
                 self.fired[i] = true;
                 return Some(*e);
             }
@@ -168,26 +197,71 @@ impl ChaosInjector {
 /// rendezvous boundary. Failure detection is a stale heartbeat: a rank
 /// whose last beat is older than the timeout is *suspected*, and the
 /// recovery clock starts from `last_seen + timeout`.
+///
+/// Liveness windows are keyed by **(rank, liveness epoch)**. The
+/// same-window double-count fix has two halves: the engines stop a
+/// scripted-dead rank from beating at all
+/// ([`ChaosInjector::kill_pending`] gates `WorkerCtx::beat`), and
+/// every worker beat carries its incarnation — `WorkerCtx` routes
+/// through [`HeartbeatBoard::beat_epoch`], and
+/// [`HeartbeatBoard::respawn`] (called at recovery and at
+/// membership-epoch changes) starts a fresh epoch so a beat tagged
+/// with a dead incarnation is dropped instead of extending the new
+/// window. [`HeartbeatBoard::beat`] is the epoch-agnostic write into
+/// the rank's current window, kept for callers without incarnation
+/// tracking.
 #[derive(Debug, Clone)]
 pub struct HeartbeatBoard {
-    inner: Arc<Mutex<Vec<f64>>>,
+    /// Per rank: (liveness epoch, last beat in that epoch).
+    inner: Arc<Mutex<Vec<(u64, f64)>>>,
 }
 
 impl HeartbeatBoard {
     pub fn new(n_ranks: usize) -> Self {
-        HeartbeatBoard { inner: Arc::new(Mutex::new(vec![0.0; n_ranks])) }
+        HeartbeatBoard { inner: Arc::new(Mutex::new(vec![(0, 0.0); n_ranks])) }
     }
 
-    /// Record life from `rank` at virtual time `now` (monotone).
+    /// Record life from `rank` at virtual time `now` (monotone within
+    /// the rank's current liveness epoch).
     pub fn beat(&self, rank: usize, now: f64) {
         let mut v = self.inner.lock().unwrap();
-        if now > v[rank] {
-            v[rank] = now;
+        if now > v[rank].1 {
+            v[rank].1 = now;
         }
     }
 
+    /// Record life from `rank` under a specific liveness epoch. Beats
+    /// from an older epoch (a dead incarnation) are dropped; a newer
+    /// epoch replaces the window instead of maxing into it.
+    pub fn beat_epoch(&self, rank: usize, epoch: u64, now: f64) {
+        let mut v = self.inner.lock().unwrap();
+        let (cur, last) = v[rank];
+        if epoch < cur {
+            return; // stale incarnation: deduped
+        }
+        if epoch > cur {
+            v[rank] = (epoch, now);
+        } else if now > last {
+            v[rank].1 = now;
+        }
+    }
+
+    /// Start a new liveness epoch for `rank` (respawn or membership
+    /// change) anchored at `now`; returns the new epoch.
+    pub fn respawn(&self, rank: usize, now: f64) -> u64 {
+        let mut v = self.inner.lock().unwrap();
+        let next = v[rank].0 + 1;
+        v[rank] = (next, now);
+        next
+    }
+
     pub fn last_seen(&self, rank: usize) -> f64 {
-        self.inner.lock().unwrap()[rank]
+        self.inner.lock().unwrap()[rank].1
+    }
+
+    /// The rank's current liveness epoch.
+    pub fn epoch_of(&self, rank: usize) -> u64 {
+        self.inner.lock().unwrap()[rank].0
     }
 
     /// Heartbeat-timeout detection: is `rank` presumed dead at `now`?
@@ -269,11 +343,23 @@ mod tests {
             .delay(1, 0.5, 0.1)
             .kill(1, 9.0);
         assert!(plan.has_kills());
+        assert!(!plan.has_departures());
         assert_eq!(plan.for_rank(0).len(), 1);
         let r1 = plan.for_rank(1);
         assert_eq!(r1.len(), 3);
         assert!(r1.windows(2).all(|w| w[0].at_s <= w[1].at_s));
         assert!(plan.for_rank(7).is_empty());
+    }
+
+    #[test]
+    fn departures_are_unrespawned_kills() {
+        let plan = FaultPlan::new().depart(2, 1.0);
+        assert!(plan.has_kills(), "a departure is still a kill");
+        assert!(plan.has_departures());
+        assert_eq!(plan.for_rank(2)[0].kind, FaultKind::Kill { respawn: false });
+        let mut inj = ChaosInjector::new(&plan, 2);
+        let ev = inj.take_kill(1.5).unwrap();
+        assert!(matches!(ev.kind, FaultKind::Kill { respawn: false }));
     }
 
     #[test]
@@ -306,12 +392,15 @@ mod tests {
     }
 
     #[test]
-    fn kill_fires_once() {
+    fn kill_fires_once_and_is_peekable() {
         let plan = FaultPlan::new().kill(3, 2.0);
         let mut inj = ChaosInjector::new(&plan, 3);
+        assert!(!inj.kill_pending(1.9));
         assert!(inj.take_kill(1.9).is_none());
+        assert!(inj.kill_pending(2.05), "kill due: the rank is scripted-dead");
         let e = inj.take_kill(2.1).unwrap();
         assert_eq!(e.at_s, 2.0);
+        assert!(!inj.kill_pending(2.1), "consumed kill no longer pending");
         assert!(inj.take_kill(100.0).is_none());
     }
 
@@ -326,6 +415,31 @@ mod tests {
         // detection = last beat + timeout, floored at the crash time
         assert_eq!(hb.detect_time(0, 1.1, 0.5), 1.5);
         assert_eq!(hb.detect_time(0, 2.0, 0.5), 2.0);
+    }
+
+    #[test]
+    fn respawn_dedupes_beats_by_rank_and_epoch() {
+        // The kill + immediate-respawn double-count: a beat from the
+        // dead incarnation must not extend the respawned incarnation's
+        // liveness window.
+        let hb = HeartbeatBoard::new(1);
+        hb.beat(0, 1.0);
+        assert_eq!(hb.epoch_of(0), 0);
+        let e = hb.respawn(0, 1.5);
+        assert_eq!(e, 1);
+        assert_eq!(hb.last_seen(0), 1.5, "respawn anchors the new window");
+        // a dead-incarnation beat with a *later* timestamp is dropped
+        hb.beat_epoch(0, e - 1, 9.0);
+        assert_eq!(hb.last_seen(0), 1.5, "stale-epoch beat must be deduped");
+        // same-epoch beats stay monotone
+        hb.beat_epoch(0, e, 1.2);
+        assert_eq!(hb.last_seen(0), 1.5);
+        hb.beat_epoch(0, e, 2.0);
+        assert_eq!(hb.last_seen(0), 2.0);
+        // a newer epoch replaces rather than maxes
+        hb.beat_epoch(0, e + 1, 0.7);
+        assert_eq!(hb.last_seen(0), 0.7);
+        assert_eq!(hb.epoch_of(0), e + 1);
     }
 
     #[test]

@@ -49,7 +49,13 @@ impl ControlRecord {
     fn to_json(&self) -> Json {
         // NaN/∞ have no JSON representation → null (keeps the whole
         // metrics file parseable even if an observation went bad).
-        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let num = |x: f64| {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Null
+            }
+        };
         let opt_str = |s: &Option<String>| match s {
             Some(v) => Json::Str(v.clone()),
             None => Json::Null,

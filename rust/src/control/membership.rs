@@ -1,0 +1,338 @@
+//! Elastic cluster membership: the scripted membership event log and
+//! the epoch trace recorder.
+//!
+//! PR 1's fault path could only respawn a killed worker on the *same*
+//! rank because the rendezvous substrate pinned N for the lifetime of a
+//! run. Membership is now a first-class **epoch**: kills that are not
+//! respawned ([`crate::control::FaultPlan::depart`]) shrink the group,
+//! scripted `[[control.join]]` arrivals grow it, and each change
+//! advances the epoch at a window boundary. The substrate mechanics
+//! live in [`crate::comm`] (roster intervals, survivor-set round
+//! resolution, join admission); this module owns the two control-plane
+//! pieces:
+//!
+//! * [`MembershipLog`] — the scripted event schedule, derived from the
+//!   experiment config. Deterministic and identical on every rank, so
+//!   every member computes the same transition at the same window
+//!   boundary: departures are *observed* from the short round's
+//!   contributor set, joins *fire* when the shared round-completion
+//!   time reaches their `at_s`.
+//! * [`EpochTrace`] — the realized transitions: one record per member
+//!   per epoch, carrying the member's post-resync parameter checksum.
+//!   Ranks are bit-identical at every epoch boundary by construction
+//!   (everyone adopts the resync mean; joiners restore the published
+//!   bootstrap), and the trace proves it — the checksum agreement is
+//!   asserted by `tests/membership.rs` and exported under the run
+//!   JSON's `"epochs"` key.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::Json;
+
+use super::chaos::{FaultKind, FaultPlan};
+
+/// A scripted arrival: `rank` joins the run once the cluster's shared
+/// virtual time reaches `at_s`. Join ranks are fresh identities above
+/// the initial world (departed rank ids are retired, like a replaced
+/// machine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JoinEvent {
+    pub rank: usize,
+    pub at_s: f64,
+}
+
+/// The scripted membership schedule of a run: the initial world size,
+/// the joins (sorted by fire time), and the scripted departures
+/// (informational — departures are *observed* through the rendezvous
+/// rounds, not predicted).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MembershipLog {
+    initial: usize,
+    joins: Vec<JoinEvent>,
+    departs: Vec<(usize, f64)>,
+}
+
+impl MembershipLog {
+    /// Derive the schedule from a run's control config: joins from the
+    /// `[[control.join]]` events, departures from the fault plan's
+    /// non-respawned kills.
+    pub fn new(initial: usize, joins: &[JoinEvent], faults: &FaultPlan) -> Self {
+        let mut joins = joins.to_vec();
+        joins.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap().then(a.rank.cmp(&b.rank)));
+        let departs = faults
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Kill { respawn: false }))
+            .map(|e| (e.rank, e.at_s))
+            .collect();
+        MembershipLog { initial, joins, departs }
+    }
+
+    /// Does this run shrink or grow at all? (Non-elastic runs skip the
+    /// whole transition machinery.)
+    pub fn is_elastic(&self) -> bool {
+        !self.joins.is_empty() || !self.departs.is_empty()
+    }
+
+    pub fn initial_world(&self) -> usize {
+        self.initial
+    }
+
+    /// Rank-slot capacity the communicator group needs: the initial
+    /// world plus every scripted joiner.
+    pub fn capacity(&self) -> usize {
+        self.joins.iter().map(|j| j.rank + 1).fold(self.initial, usize::max)
+    }
+
+    /// Is `rank` a scripted joiner (its worker thread starts parked in
+    /// admission)?
+    pub fn is_join_rank(&self, rank: usize) -> bool {
+        self.joins.iter().any(|j| j.rank == rank)
+    }
+
+    pub fn joins(&self) -> &[JoinEvent] {
+        &self.joins
+    }
+
+    pub fn departs(&self) -> &[(usize, f64)] {
+        &self.departs
+    }
+
+    /// Joins past `cursor` whose fire time has been reached by the
+    /// shared round-completion time `now`. Joins fire in schedule
+    /// order, so the fired set is always a prefix — and the cursor
+    /// rides the epoch bootstrap (`JoinBootstrap::join_cursor`), since
+    /// it cannot be reconstructed from a member list once an earlier
+    /// joiner departs again.
+    pub fn joins_due(&self, cursor: usize, now: f64) -> Vec<usize> {
+        self.joins[cursor.min(self.joins.len())..]
+            .iter()
+            .take_while(|j| j.at_s <= now)
+            .map(|j| j.rank)
+            .collect()
+    }
+}
+
+/// FNV-1a over the raw bit patterns — the parameter checksum the epoch
+/// trace uses to pin bit-identity across ranks (float equality would
+/// hide sign-of-zero / NaN-payload drift).
+pub fn param_crc(w: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in w {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One member's view of one epoch boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    pub rank: usize,
+    /// Position in the epoch's member list (slot 0 = leader).
+    pub slot: usize,
+    /// World size of the epoch.
+    pub world: usize,
+    /// Cumulative healthy-rank step count at the boundary (identical
+    /// across ranks — the trace's iteration axis).
+    pub sched_steps: u64,
+    /// Shared virtual time the epoch began.
+    pub sim_time: f64,
+    /// Checksum of this member's parameters right after the boundary.
+    pub w_crc: u64,
+    /// Leader-only annotations (empty on member records).
+    pub joined: Vec<usize>,
+    pub departed: Vec<usize>,
+}
+
+/// Thread-safe, cheaply-clonable recorder of realized epoch
+/// transitions, shared by a run's workers and exported under the run
+/// JSON's `"epochs"` key.
+#[derive(Debug, Clone, Default)]
+pub struct EpochTrace {
+    inner: Arc<Mutex<Vec<EpochRecord>>>,
+}
+
+impl EpochTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, r: EpochRecord) {
+        self.inner.lock().unwrap().push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records, ordered by (epoch, rank) so exports are
+    /// deterministic regardless of thread interleaving.
+    pub fn records(&self) -> Vec<EpochRecord> {
+        let mut v = self.inner.lock().unwrap().clone();
+        v.sort_by_key(|r| (r.epoch, r.rank));
+        v
+    }
+
+    /// The leader records, one per epoch — the transition summaries.
+    pub fn transitions(&self) -> Vec<EpochRecord> {
+        self.records().into_iter().filter(|r| r.slot == 0).collect()
+    }
+
+    /// World-size trajectory, one entry per epoch (from the leader
+    /// records): e.g. `[64, 48, 80]` for a shrink-then-grow run.
+    pub fn worlds(&self) -> Vec<usize> {
+        self.transitions().iter().map(|r| r.world).collect()
+    }
+
+    /// Were every epoch's member parameters bit-identical? Returns the
+    /// epochs that violate the invariant (empty = all good).
+    pub fn crc_mismatches(&self) -> Vec<u64> {
+        let mut by_epoch: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for r in self.records() {
+            by_epoch.entry(r.epoch).or_default().push(r.w_crc);
+        }
+        by_epoch
+            .into_iter()
+            .filter(|(_, crcs)| crcs.windows(2).any(|w| w[0] != w[1]))
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    /// The epoch trace as a JSON array (the `epochs` key of the run's
+    /// metrics JSON): one object per epoch from the leader record, plus
+    /// the cross-rank checksum agreement.
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Null
+            }
+        };
+        let mismatches = self.crc_mismatches();
+        Json::Arr(
+            self.transitions()
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("epoch".to_string(), Json::Num(r.epoch as f64));
+                    m.insert("world".into(), Json::Num(r.world as f64));
+                    m.insert("sched_steps".into(), Json::Num(r.sched_steps as f64));
+                    m.insert("sim_time".into(), num(r.sim_time));
+                    m.insert("w_crc".into(), Json::Str(format!("{:016x}", r.w_crc)));
+                    m.insert(
+                        "params_identical".into(),
+                        Json::Bool(!mismatches.contains(&r.epoch)),
+                    );
+                    m.insert(
+                        "joined".into(),
+                        Json::Arr(r.joined.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    );
+                    m.insert(
+                        "departed".into(),
+                        Json::Arr(r.departed.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    );
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_4_to_3_to_5() -> MembershipLog {
+        let joins = [JoinEvent { rank: 4, at_s: 2.0 }, JoinEvent { rank: 5, at_s: 2.0 }];
+        let faults = FaultPlan::new().depart(3, 1.0).kill(0, 0.5);
+        MembershipLog::new(4, &joins, &faults)
+    }
+
+    #[test]
+    fn log_derives_capacity_and_events() {
+        let log = log_4_to_3_to_5();
+        assert!(log.is_elastic());
+        assert_eq!(log.initial_world(), 4);
+        assert_eq!(log.capacity(), 6);
+        assert!(log.is_join_rank(5));
+        assert!(!log.is_join_rank(3));
+        // the respawned kill is not a departure
+        assert_eq!(log.departs(), &[(3, 1.0)]);
+    }
+
+    #[test]
+    fn joins_fire_as_a_prefix_in_time_order() {
+        let log = log_4_to_3_to_5();
+        assert!(log.joins_due(0, 1.9).is_empty());
+        assert_eq!(log.joins_due(0, 2.0), vec![4, 5]);
+        assert_eq!(log.joins_due(1, 2.0), vec![5], "cursor skips already-fired joins");
+        assert_eq!(log.joins_due(2, 99.0), Vec::<usize>::new(), "cursor past the schedule");
+    }
+
+    #[test]
+    fn non_elastic_log_is_inert() {
+        let log = MembershipLog::new(4, &[], &FaultPlan::new().kill(1, 1.0));
+        assert!(!log.is_elastic());
+        assert_eq!(log.capacity(), 4);
+    }
+
+    #[test]
+    fn param_crc_is_bit_sensitive() {
+        let a = param_crc(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, param_crc(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, param_crc(&[1.0, 2.0, 3.0000001]));
+        // float equality would call these identical; the bit checksum
+        // must not
+        assert_ne!(param_crc(&[0.0]), param_crc(&[-0.0]));
+    }
+
+    fn rec(epoch: u64, rank: usize, slot: usize, crc: u64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            rank,
+            slot,
+            world: 3,
+            sched_steps: epoch * 10,
+            sim_time: epoch as f64,
+            w_crc: crc,
+            joined: Vec::new(),
+            departed: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn trace_orders_and_summarizes() {
+        let trace = EpochTrace::new();
+        trace.record(rec(1, 2, 1, 7));
+        trace.record(rec(0, 0, 0, 5));
+        trace.record(rec(1, 1, 0, 7));
+        trace.record(rec(0, 1, 1, 5));
+        assert_eq!(trace.len(), 4);
+        assert_eq!(trace.worlds(), vec![3, 3]);
+        assert!(trace.crc_mismatches().is_empty());
+        let rs = trace.records();
+        assert_eq!((rs[0].epoch, rs[0].rank), (0, 0));
+        assert_eq!(trace.transitions().len(), 2);
+    }
+
+    #[test]
+    fn crc_disagreement_is_flagged_and_exported() {
+        let trace = EpochTrace::new();
+        trace.record(rec(0, 0, 0, 5));
+        trace.record(rec(0, 1, 1, 6)); // diverged!
+        assert_eq!(trace.crc_mismatches(), vec![0]);
+        let j = trace.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("params_identical"), Some(&Json::Bool(false)));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

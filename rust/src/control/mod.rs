@@ -19,6 +19,12 @@
 //!   kills, slowdowns and stalls in virtual time, with heartbeat
 //!   detection ([`HeartbeatBoard`]) and checkpoint recovery
 //!   ([`SnapshotStore`]).
+//! * [`membership`] — elastic cluster membership: the scripted
+//!   [`MembershipLog`] (departures = non-respawned kills, arrivals =
+//!   `[[control.join]]` events) that shrinks and grows the group
+//!   across **membership epochs**, and the [`EpochTrace`] recorder
+//!   whose per-epoch world/checksum records land in the metrics JSON
+//!   under `"epochs"`.
 //! * [`log`] — the [`ControlLog`] flight recorder whose per-window
 //!   k/λ/schedule/straggler decisions (and the local/global t_AR phase
 //!   split) ride into the metrics JSON export.
@@ -36,10 +42,12 @@
 
 pub mod chaos;
 pub mod log;
+pub mod membership;
 pub mod staleness;
 
 pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard, SnapshotStore};
 pub use log::{ControlLog, ControlRecord};
+pub use membership::{param_crc, EpochRecord, EpochTrace, JoinEvent, MembershipLog};
 pub use staleness::{
     Decision, DssPid, Fixed, LambdaCoupled, Quarantine, ScheduleCoupled, ScheduleEnv,
     StalenessController, WindowObs,
@@ -124,6 +132,10 @@ pub struct ControlConfig {
     pub snapshot_every: u64,
     /// Scripted faults (empty = healthy cluster).
     pub faults: FaultPlan,
+    /// Scripted arrivals (`[[control.join]]`): fresh ranks admitted at
+    /// a membership-epoch boundary once the shared virtual time
+    /// reaches their `at_s`.
+    pub joins: Vec<JoinEvent>,
 }
 
 impl Default for ControlConfig {
@@ -144,6 +156,7 @@ impl Default for ControlConfig {
             restore_s: 0.2,
             snapshot_every: 0,
             faults: FaultPlan::default(),
+            joins: Vec::new(),
         }
     }
 }
@@ -171,7 +184,21 @@ impl ControlConfig {
         if self.quarantine_after == 0 {
             bail!("control.quarantine_after must be ≥ 1");
         }
+        for (i, j) in self.joins.iter().enumerate() {
+            if !j.at_s.is_finite() || j.at_s < 0.0 {
+                bail!("control.join at_s must be finite and non-negative");
+            }
+            if self.joins[..i].iter().any(|p| p.rank == j.rank) {
+                bail!("control.join rank {} scripted twice", j.rank);
+            }
+        }
         Ok(())
+    }
+
+    /// The run's scripted membership schedule (joins + non-respawned
+    /// kills), for a given initial world size.
+    pub fn membership_log(&self, initial_world: usize) -> MembershipLog {
+        MembershipLog::new(initial_world, &self.joins, &self.faults)
     }
 
     /// Fresh controller for one worker, seeded with the configured

@@ -37,6 +37,18 @@
 //! rank ⇒ the rendezvous rounds stay matched. Controllers must
 //! therefore be pure functions of their observation history (no RNG,
 //! no wall clock).
+//!
+//! Membership epochs extend the contract: at an epoch transition the
+//! engine **rebuilds** every controller from the config against the new
+//! [`ScheduleEnv`] (new world size, refitted topology, new payload
+//! width). That re-baselines the t_C/t_AR evidence and re-decides
+//! (k, schedule) from the bootstrap models — and it is the only
+//! construction under which a joiner's fresh controller and a
+//! survivor's controller are guaranteed to agree on every subsequent
+//! decision (any carried-over EMA state would diverge them). Any
+//! quarantine in force simply lifts: the groups it referenced no longer
+//! exist, and a persistent straggler re-earns its quarantine against
+//! the new topology within `quarantine_after` windows.
 
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
 
@@ -433,7 +445,11 @@ impl ScheduleCoupled {
         let active_is_hier = matches!(self.active, AllReduceAlgo::Hierarchical(_));
         let m_active = self.modelled(self.active);
         if obs.t_allreduce > 0.0 && m_active > 0.0 {
-            let cal = if active_is_hier { &mut self.cal_hier } else { &mut self.cal_flat };
+            let cal = if active_is_hier {
+                &mut self.cal_hier
+            } else {
+                &mut self.cal_flat
+            };
             *cal = (1.0 - CAL_GAIN) * *cal + CAL_GAIN * (obs.t_allreduce / m_active);
         }
         let eff_flat = self.cal_flat * self.modelled(flat);
@@ -522,8 +538,7 @@ impl StalenessController for ScheduleCoupled {
         d.schedule = Some(self.active);
         if let Some(q) = &self.quarantine {
             d.k = (base.k + q.boost).min(self.k_max);
-            d.quarantine =
-                Some(Quarantine { rank: q.rank, group: q.group, k_group: base.k });
+            d.quarantine = Some(Quarantine { rank: q.rank, group: q.group, k_group: base.k });
         }
         d
     }

@@ -169,6 +169,14 @@ impl SyntheticDataset {
 /// Per-worker shard iterator: worker `rank` of `n_ranks` draws batches
 /// from its contiguous-stride shard of the train split, reshuffled each
 /// epoch with a deterministic epoch-keyed permutation.
+///
+/// Under elastic membership the shard key is a *slot* (position in the
+/// member list), not a raw rank id: [`ShardSampler::reshard`]
+/// re-partitions the full sample space across the new world size at a
+/// membership-epoch boundary, deterministically — shard `i` of `W`
+/// always covers indices `i, i+W, i+2W, …`, and the membership epoch
+/// salts the permutation so the new partition reshuffles afresh while
+/// staying a pure function of `(seed, slot, world, membership epoch)`.
 #[derive(Debug)]
 pub struct ShardSampler {
     ds_seed: u64,
@@ -176,6 +184,9 @@ pub struct ShardSampler {
     n_ranks: usize,
     n_train: usize,
     batch: usize,
+    /// Membership-epoch salt mixed into the permutation key (0 for the
+    /// launch partition).
+    salt: u64,
     /// Current epoch's shuffled index order for this shard.
     order: Vec<usize>,
     cursor: usize,
@@ -184,19 +195,51 @@ pub struct ShardSampler {
 
 impl ShardSampler {
     pub fn new(ds: &SyntheticDataset, rank: usize, n_ranks: usize, batch: usize) -> Self {
-        assert!(rank < n_ranks);
+        Self::for_shard(ds, rank, n_ranks, batch, 0)
+    }
+
+    /// A sampler over shard `shard` of `world`, salted by a membership
+    /// epoch (0 = the launch partition, identical to
+    /// [`ShardSampler::new`]).
+    pub fn for_shard(
+        ds: &SyntheticDataset,
+        shard: usize,
+        world: usize,
+        batch: usize,
+        membership_epoch: u64,
+    ) -> Self {
+        assert!(shard < world);
         let mut s = ShardSampler {
             ds_seed: ds.seed,
-            rank,
-            n_ranks,
+            rank: shard,
+            n_ranks: world,
             n_train: ds.n_train,
             batch,
+            salt: Self::salt_of(membership_epoch),
             order: Vec::new(),
             cursor: 0,
             epoch: 0,
         };
         s.reshuffle();
         s
+    }
+
+    fn salt_of(membership_epoch: u64) -> u64 {
+        membership_epoch.wrapping_mul(0x9E37_79B9_97F4_A7C5)
+    }
+
+    /// Re-partition across a new world at a membership-epoch boundary:
+    /// this sampler becomes shard `shard` of `world`, restarting its
+    /// data-epoch count with an epoch-salted permutation. Every member
+    /// calling this with its slot partitions the identical remaining
+    /// sample space (see [`ShardSampler::shard_indices`]).
+    pub fn reshard(&mut self, shard: usize, world: usize, membership_epoch: u64) {
+        assert!(shard < world);
+        self.rank = shard;
+        self.n_ranks = world;
+        self.salt = Self::salt_of(membership_epoch);
+        self.epoch = 0;
+        self.reshuffle();
     }
 
     /// Indices `rank, rank+n_ranks, rank+2·n_ranks, ...` (strided shard —
@@ -207,7 +250,8 @@ impl ShardSampler {
 
     fn reshuffle(&mut self) {
         self.order = self.shard_indices();
-        let mut rng = Rng::keyed(self.ds_seed ^ 0x5348_5546, self.rank as u64, self.epoch);
+        let mut rng =
+            Rng::keyed(self.ds_seed ^ 0x5348_5546 ^ self.salt, self.rank as u64, self.epoch);
         rng.shuffle(&mut self.order);
         self.cursor = 0;
     }
@@ -365,6 +409,48 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b); // same set, different order
+    }
+
+    #[test]
+    fn reshard_partitions_the_new_world_deterministically() {
+        let ds = small(); // 64 train samples
+        // 4-way launch partition shrinks to 3 ways: the three reshard
+        // slots must re-cover the full corpus exactly once per epoch.
+        let mut all: Vec<usize> = Vec::new();
+        for slot in 0..3 {
+            let mut s = ShardSampler::new(&ds, slot, 4, 4);
+            s.reshard(slot, 3, 1);
+            all.extend(s.shard_indices());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>(), "reshard must re-partition the corpus");
+        // deterministic: two samplers resharded identically draw the
+        // same batches regardless of their launch shard
+        let mut a = ShardSampler::new(&ds, 0, 4, 4);
+        let mut b = ShardSampler::new(&ds, 1, 4, 4);
+        a.reshard(2, 3, 5);
+        b.reshard(2, 3, 5);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_eq!(a.shard_len(), 21); // indices 2, 5, …, 62
+        // a different membership epoch draws the same shard set in a
+        // different order
+        let mut d5 = ShardSampler::for_shard(&ds, 2, 3, 4, 5);
+        let mut d6 = ShardSampler::for_shard(&ds, 2, 3, 4, 6);
+        let (x, y) = (d5.next_batch(), d6.next_batch());
+        assert_ne!(x, y, "membership-epoch salt must reshuffle the shard");
+        for i in x.iter().chain(&y) {
+            assert_eq!(i % 3, 2, "both epochs draw from the same shard set");
+        }
+    }
+
+    #[test]
+    fn for_shard_epoch_zero_matches_new() {
+        let ds = small();
+        let mut a = ShardSampler::new(&ds, 1, 4, 4);
+        let mut b = ShardSampler::for_shard(&ds, 1, 4, 4, 0);
+        for _ in 0..6 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@ use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
 use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
 use dcs3gd::config::{parse_schedule, ExperimentConfig};
-use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind};
+use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent};
 use dcs3gd::model::meta::discover_variants;
 use dcs3gd::simtime::ComputeModel;
 
@@ -31,6 +31,8 @@ USAGE:
                [--heartbeat-timeout S] [--restore-s S]
                [--fault-kind F --fault-rank R --fault-at T]
                [--fault-factor X] [--fault-duration S] [--fault-extra S]
+               [--fault-respawn true|false]
+               [--join-count N --join-at T [--join-first-rank R]]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
@@ -39,7 +41,9 @@ Algorithms:       ssgd | s3gd | dcs3gd | asgd | dcasgd
 Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
 Schedules:        ring | tree | flat | hierarchical (Layered-SGD dragonfly)
 Control policies: fixed | dss_pid | lambda_coupled | schedule_coupled
-Fault kinds:      kill | slow | delay (virtual-time chaos injection)
+Fault kinds:      kill | slow | delay (virtual-time chaos injection);
+                  a kill with --fault-respawn false departs permanently
+                  (the membership epoch shrinks); --join-* grows it
 ";
 
 fn main() {
@@ -153,7 +157,14 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
         let rank = args.get_usize("fault-rank", 0)?;
         let at_s = args.get_f64("fault-at", 0.0)?;
         let kind = match kind {
-            "kill" => FaultKind::Kill,
+            "kill" => {
+                let respawn = match args.get_or("fault-respawn", "true") {
+                    "true" => true,
+                    "false" => false,
+                    other => bail!("--fault-respawn expects true|false, got {other:?}"),
+                };
+                FaultKind::Kill { respawn }
+            }
             "slow" => FaultKind::Slow {
                 factor: args.get_f64("fault-factor", 2.0)?,
                 duration_s: args.get_f64("fault-duration", 1.0)?,
@@ -162,6 +173,16 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             other => bail!("unknown --fault-kind {other:?} (kill | slow | delay)"),
         };
         cfg.control.faults.push(FaultEvent { rank, at_s, kind });
+    }
+    // Scripted arrivals: N fresh ranks join at --join-at (ids start at
+    // --join-first-rank, default right above the initial world).
+    let join_count = args.get_usize("join-count", 0)?;
+    if join_count > 0 {
+        let at_s = args.get_f64("join-at", 0.0)?;
+        let first = args.get_usize("join-first-rank", cfg.nodes)?;
+        for rank in first..first + join_count {
+            cfg.control.joins.push(JoinEvent { rank, at_s });
+        }
     }
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
@@ -250,6 +271,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             cfg.algo = algo;
             cfg.nodes = n;
             cfg.name = format!("{}_{}_n{}", cfg.variant, algo.name(), n);
+            // the per-point overrides can break invariants the first
+            // validate() pass established (e.g. membership events vs a
+            // different node count or engine) — re-check
+            cfg.validate()?;
             let report = run_experiment(&cfg)?;
             println!("{}", report.table_row());
         }

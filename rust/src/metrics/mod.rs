@@ -174,6 +174,27 @@ impl Recorder {
         t_end / iters.max(1) as f64
     }
 
+    /// Mean training loss over recorded steps with iteration in
+    /// `[lo, hi)`, across all workers — NaN when the range is empty.
+    /// Used by the membership tests to assert loss *continuity* across
+    /// an epoch boundary (the re-synced cluster must not regress).
+    pub fn mean_loss_between(&self, lo: u64, hi: u64) -> f32 {
+        let inner = self.inner.lock().unwrap();
+        let mut sum = 0f64;
+        let mut count = 0usize;
+        for r in &inner.steps {
+            if r.iteration >= lo && r.iteration < hi {
+                sum += r.loss as f64;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            f32::NAN
+        } else {
+            (sum / count as f64) as f32
+        }
+    }
+
     /// Mean ‖D_i‖ over the last `k` steps in iteration order (E4).
     pub fn tail_dist_to_avg(&self, k: usize) -> f64 {
         let steps = self.sorted_steps();
@@ -307,6 +328,19 @@ mod tests {
         let by_epoch = rec.epoch_train_err();
         assert!((by_epoch[&0] - 0.75).abs() < 1e-6);
         assert!((by_epoch[&1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_loss_between_windows() {
+        let rec = Recorder::new();
+        for (it, loss) in [(0u64, 4.0f32), (1, 2.0), (2, 1.0), (3, 0.5)] {
+            let mut s = step(0, it, 0, it as f64, 0.5);
+            s.loss = loss;
+            rec.record_step(s);
+        }
+        assert!((rec.mean_loss_between(0, 2) - 3.0).abs() < 1e-6);
+        assert!((rec.mean_loss_between(2, 4) - 0.75).abs() < 1e-6);
+        assert!(rec.mean_loss_between(10, 20).is_nan());
     }
 
     #[test]

@@ -20,6 +20,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+// Without the vendored bindings (`pjrt-xla` off), the declaration-only
+// shim keeps this whole module type-checked by `cargo check --features
+// pjrt`; client construction then fails at runtime with a clear error.
+#[cfg(not(feature = "pjrt-xla"))]
+use super::xla_shim as xla;
+
 use crate::model::{ArtifactMeta, StepBackend};
 
 /// Which compiled entry point a request targets.

@@ -47,9 +47,18 @@ fn mid_run_kill_recovers_from_checkpoint_and_converges() {
         desc.contains("restored_from=snapshot@"),
         "recovery did not come from a checkpoint: {desc:?}"
     );
-    // Downtime accounting: detection (heartbeat timeout) + restore must
-    // appear on the recovered worker's clock.
-    assert!(ev.sim_time >= 0.5 + cfg.control.heartbeat_timeout_s + cfg.control.restore_s - 1e-9);
+    // Downtime accounting: detection (heartbeat timeout from the last
+    // *pre-crash* beat) + restore must appear on the recovered worker's
+    // clock. The (rank, epoch) heartbeat dedupe means the dead rank's
+    // post-crash step no longer beats the board, so detection lands
+    // strictly before crash + timeout (it used to double-count that
+    // beat and land at or beyond it).
+    assert!(ev.sim_time >= 0.5 + cfg.control.restore_s - 1e-9, "recovery earlier than restore");
+    assert!(
+        ev.sim_time < 0.5 + cfg.control.heartbeat_timeout_s + cfg.control.restore_s,
+        "post-crash heartbeat double-counted into detection: recovered at {}",
+        ev.sim_time
+    );
 
     // ...and the run still learns (chance err for 10 classes is 0.9).
     assert!(

@@ -1,0 +1,153 @@
+//! Integration tests for elastic cluster membership: the golden
+//! shrink-then-grow trajectory (64 → 48 → 80), loss continuity across
+//! epoch boundaries, cross-rank parameter bit-identity, and
+//! determinism of elastic runs.
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::FaultPlan;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+/// The golden fixture describing the scenario *and* the expected epoch
+/// trajectory — the config is built from it, the realized trace is
+/// compared against it.
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/membership_64_48_80.json");
+    Json::parse(&std::fs::read_to_string(&path).expect("golden fixture exists"))
+        .expect("golden fixture parses")
+}
+
+fn ranks_of(j: &Json) -> Vec<usize> {
+    j.as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect()
+}
+
+fn cfg_from_fixture(fix: &Json) -> ExperimentConfig {
+    let initial = fix.get("initial_world").unwrap().as_usize().unwrap();
+    let depart_at = fix.get("depart_at_s").unwrap().as_f64().unwrap();
+    let join_at = fix.get("join_at_s").unwrap().as_f64().unwrap();
+    let transitions = fix.get("transitions").unwrap().as_arr().unwrap();
+    let mut faults = FaultPlan::new();
+    for rank in ranks_of(transitions[0].get("departed").unwrap()) {
+        faults = faults.depart(rank, depart_at);
+    }
+    let mut builder = ExperimentConfig::builder("linear")
+        .name("membership_golden")
+        .algo(Algo::DcS3gd)
+        .nodes(initial)
+        .local_batch(4)
+        .steps(14)
+        .eta_single(0.05)
+        .base_batch(initial * 4)
+        .warmup(0.2, 0.1)
+        .data(2048, 512, 0.5)
+        .compute(ComputeModel::uniform(1e-3)) // 4 ms / step
+        .faults(faults);
+    for rank in ranks_of(transitions[1].get("joined").unwrap()) {
+        builder = builder.join(rank, join_at);
+    }
+    builder.build()
+}
+
+fn run_golden() -> (Json, RunReport) {
+    let fix = fixture();
+    let cfg = cfg_from_fixture(&fix);
+    let report = run_experiment(&cfg).expect("elastic run completes");
+    (fix, report)
+}
+
+#[test]
+fn golden_shrink_then_grow_trajectory() {
+    let (fix, report) = run_golden();
+
+    // World trajectory matches the fixture: 64 -> 48 -> 80.
+    let want_worlds = ranks_of(fix.get("worlds").unwrap());
+    assert_eq!(report.epochs.worlds(), want_worlds, "epoch world trajectory diverged");
+
+    // Each transition's member movement matches.
+    let transitions = report.epochs.transitions();
+    let want = fix.get("transitions").unwrap().as_arr().unwrap();
+    assert_eq!(transitions.len(), want.len() + 1, "epoch 0 + one record per transition");
+    for (got, want) in transitions[1..].iter().zip(want) {
+        assert_eq!(got.epoch, want.get("epoch").unwrap().as_f64().unwrap() as u64);
+        assert_eq!(got.world, want.get("world").unwrap().as_usize().unwrap());
+        assert_eq!(got.departed, ranks_of(want.get("departed").unwrap()));
+        assert_eq!(got.joined, ranks_of(want.get("joined").unwrap()));
+    }
+
+    // Bit-identical parameters across ranks at every epoch boundary.
+    assert!(
+        report.epochs.crc_mismatches().is_empty(),
+        "parameter divergence at epochs {:?}",
+        report.epochs.crc_mismatches()
+    );
+
+    // Loss continuity across each boundary: the re-synced cluster must
+    // pick up roughly where it left off, not regress to scratch.
+    for tr in &transitions[1..] {
+        let s = tr.sched_steps;
+        let pre = report.recorder.mean_loss_between(s.saturating_sub(3), s);
+        let post = report.recorder.mean_loss_between(s, s + 3);
+        assert!(pre.is_finite() && post.is_finite(), "missing steps around epoch {}", tr.epoch);
+        assert!(
+            post < pre * 1.75 + 0.25,
+            "loss discontinuity at epoch {}: {pre} -> {post}",
+            tr.epoch
+        );
+    }
+
+    // The departures were logged by the leavers themselves.
+    let departs = report
+        .control
+        .events()
+        .iter()
+        .filter(|e| e.event.as_deref().is_some_and(|s| s.starts_with("depart@")))
+        .count();
+    let expected_departs = ranks_of(
+        fix.get("transitions").unwrap().as_arr().unwrap()[0].get("departed").unwrap(),
+    )
+    .len();
+    assert_eq!(departs, expected_departs, "every leaver records its departure");
+
+    // And the run still trains.
+    assert!(report.final_train_loss.is_finite());
+    let early = report.recorder.mean_loss_between(0, 3);
+    assert!(
+        report.final_train_loss < early * 1.05,
+        "no learning across the elastic run: {} vs early {}",
+        report.final_train_loss,
+        early
+    );
+}
+
+#[test]
+fn elastic_golden_run_is_deterministic() {
+    let (_, a) = run_golden();
+    let (_, b) = run_golden();
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    assert_eq!(a.sim_time_s, b.sim_time_s);
+    assert_eq!(a.epochs.records(), b.epochs.records());
+}
+
+#[test]
+fn epoch_trace_lands_in_run_json() {
+    let dir = std::env::temp_dir().join(format!("dcs3gd_membership_{}", std::process::id()));
+    let fix = fixture();
+    let mut cfg = cfg_from_fixture(&fix);
+    cfg.out_dir = Some(dir.clone());
+    run_experiment(&cfg).unwrap();
+    let parsed = Json::parse(
+        &std::fs::read_to_string(dir.join("membership_golden_run.json")).unwrap(),
+    )
+    .unwrap();
+    let epochs = parsed.get("epochs").and_then(Json::as_arr).expect("epochs key");
+    assert_eq!(epochs.len(), 3);
+    for e in epochs {
+        assert_eq!(e.get("params_identical"), Some(&Json::Bool(true)));
+    }
+    let worlds: Vec<usize> =
+        epochs.iter().map(|e| e.get("world").unwrap().as_usize().unwrap()).collect();
+    assert_eq!(worlds, ranks_of(fix.get("worlds").unwrap()));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -279,6 +279,89 @@ fn prop_wire_hier_matches_wire_ring() {
     }
 }
 
+/// Property (membership epochs): a round that resolves over the
+/// survivors after a departure is **bit-identical** to a flat
+/// all-reduce recomputed on the survivor set alone — the epoch
+/// transition changes who participates, never the arithmetic — and the
+/// contributor set reported to the consumers is exactly the survivors.
+#[test]
+fn prop_epoch_transition_allreduce_matches_survivor_recompute() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0xE90C, 10, case);
+        let n_ranks = 2 + rng.below(7) as usize;
+        let len = 1 + rng.below(300) as usize;
+        // at least one survivor, at least one leaver
+        let n_leavers = 1 + rng.below(n_ranks as u64 - 1) as usize;
+        let mut ranks: Vec<usize> = (0..n_ranks).collect();
+        rng.shuffle(&mut ranks);
+        let mut leavers = ranks[..n_leavers].to_vec();
+        let mut survivors = ranks[n_leavers..].to_vec();
+        leavers.sort_unstable();
+        survivors.sort_unstable();
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case ^ 0xE1A5, r as u64, 4);
+                randvec(&mut rr, len, 1.0)
+            })
+            .collect();
+
+        // Round 0: everyone posts. Round 1: only the survivors post —
+        // the leavers deregister instead, so round 1 must resolve over
+        // the survivor set.
+        let group = Group::new(n_ranks, NetModel::instant());
+        let mut handles = Vec::new();
+        for r in 0..n_ranks {
+            let mut c = group.comm(r);
+            let data = inputs[r].clone();
+            let is_leaver = leavers.contains(&r);
+            handles.push(std::thread::spawn(move || {
+                let h0 = c.iallreduce(&data, 0.0);
+                if is_leaver {
+                    c.leave();
+                    let _ = h0.wait(0.0);
+                    None
+                } else {
+                    let _ = h0.wait(0.0);
+                    let out = c.iallreduce(&data, 0.0).wait_outcome(0.0);
+                    Some((out.data.as_ref().clone(), out.contributors.as_ref().clone()))
+                }
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // Flat recompute on the survivor set, in rank order — the
+        // bitwise reference.
+        let flat = Group::new(survivors.len(), NetModel::instant());
+        let flat_handles: Vec<_> = survivors
+            .iter()
+            .enumerate()
+            .map(|(slot, &r)| {
+                let mut c = flat.comm(slot);
+                let data = inputs[r].clone();
+                std::thread::spawn(move || c.allreduce(&data, 0.0).0.as_ref().clone())
+            })
+            .collect();
+        let flat_sums: Vec<Vec<f32>> =
+            flat_handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let reference = &flat_sums[0];
+
+        for (r, res) in results.iter().enumerate() {
+            let Some((sum, contributors)) = res else {
+                assert!(leavers.contains(&r), "case {case}: survivor produced no round 1");
+                continue;
+            };
+            assert_eq!(contributors, &survivors, "case {case}: contributor set wrong");
+            for (i, (a, b)) in sum.iter().zip(reference.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case}: survivor-set sum differs from flat recompute at [{i}]"
+                );
+            }
+        }
+    }
+}
+
 /// Property (Eq. 8/9): for any worker updates, applying `w_i + D_i`
 /// brings every worker exactly to `w̄ + mean(Δw)`, and Σ_i D_i = 0.
 #[test]
