@@ -1,0 +1,156 @@
+//! Gradient-compression sweep: dense vs error-feedback top-k vs QSGD
+//! on the same DC-S3GD run, then an end-to-end `compress_coupled` run
+//! showing the control plane co-tuning (k, schedule, ratio) online.
+//!
+//! Part 1 holds the step budget fixed on a wire-bound fabric and sweeps
+//! the compressor: the table shows the achieved per-rank wire bytes,
+//! the simulated wall-clock, and the final loss — compression buys
+//! wall-clock, error feedback holds convergence.
+//!
+//! Part 2 starts `compress_coupled` at a deliberately lazy ratio on the
+//! same fabric: the policy must tighten the ratio until the collective
+//! hides behind the window's compute, and the (k, schedule, ratio)
+//! decision trace must land in the run's metrics JSON.
+//!
+//! ```sh
+//! cargo run --release --example compression_sweep [-- fast]
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::compress::CompressorKind;
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::ControlPolicy;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+const NODES: usize = 8;
+
+fn base(steps: u64, name: &str) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(NODES)
+        .local_batch(16)
+        .steps(steps)
+        .eta_single(0.05)
+        .base_batch(16)
+        .data(4096, 512, 0.5)
+        .compute(ComputeModel::uniform(2e-4)) // t_C = 3.2 ms / step
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 2e6, algo: AllReduceAlgo::Ring })
+        .build()
+}
+
+fn run_scheme(
+    steps: u64,
+    name: &str,
+    kind: CompressorKind,
+    ratio: f32,
+    bits: u32,
+) -> RunReport {
+    let mut cfg = base(steps, name);
+    cfg.compress.kind = kind;
+    cfg.compress.ratio = ratio;
+    cfg.compress.bits = bits;
+    run_experiment(&cfg).expect("run")
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+    let steps: u64 = if fast { 48 } else { 160 };
+
+    println!("== gradient compression sweep: {NODES} ranks, wire-bound ring, {steps} steps ==\n");
+    println!(
+        "{:<16} {:>12} {:>12} {:>12} {:>10}",
+        "scheme", "wire B/round", "sim time", "final loss", "val err"
+    );
+    let dense = run_scheme(steps, "sweep_dense", CompressorKind::None, 0.05, 8);
+    let schemes: Vec<(&str, RunReport)> = vec![
+        ("topk r=0.05", run_scheme(steps, "sweep_topk05", CompressorKind::TopK, 0.05, 8)),
+        ("topk r=0.01", run_scheme(steps, "sweep_topk01", CompressorKind::TopK, 0.01, 8)),
+        ("qsgd b=8", run_scheme(steps, "sweep_qsgd8", CompressorKind::Qsgd, 0.05, 8)),
+        ("qsgd b=4", run_scheme(steps, "sweep_qsgd4", CompressorKind::Qsgd, 0.05, 4)),
+    ];
+    let print_row = |name: &str, r: &RunReport| {
+        println!(
+            "{name:<16} {:>12.0} {:>11.4}s {:>12.4} {:>9.1}%",
+            r.control.compress_summary().mean_wire_bytes(),
+            r.sim_time_s,
+            r.final_train_loss,
+            100.0 * r.final_val_err,
+        );
+    };
+    print_row("dense", &dense);
+    for (name, r) in &schemes {
+        print_row(name, r);
+    }
+
+    // Acceptance 1: compression buys simulated wall-clock on the
+    // wire-bound fabric…
+    for (name, r) in &schemes {
+        assert!(
+            r.sim_time_s < dense.sim_time_s,
+            "{name} not faster than dense: {} vs {}",
+            r.sim_time_s,
+            dense.sim_time_s
+        );
+    }
+    // …and error feedback keeps every scheme inside the dense loss
+    // envelope.
+    for (name, r) in &schemes {
+        assert!(
+            r.final_train_loss < dense.final_train_loss * 1.5 + 0.25,
+            "{name} fell out of the dense loss envelope: {} vs {}",
+            r.final_train_loss,
+            dense.final_train_loss
+        );
+    }
+    println!("\nall compressed schemes faster than dense, losses inside the envelope");
+
+    // Part 2: compress_coupled co-tunes (k, schedule, ratio) online.
+    let mut cfg = base(steps, "sweep_coupled");
+    cfg.compute = ComputeModel::uniform(2e-5); // tighter budget: t_C = 0.32 ms
+    cfg.compress.kind = CompressorKind::TopK;
+    cfg.compress.ratio = 0.25; // deliberately lazy start
+    cfg.control.policy = ControlPolicy::CompressCoupled;
+    cfg.control.k_max = 4;
+    cfg.out_dir = Some("runs/compression".into());
+    let coupled = run_experiment(&cfg)?;
+    let s = coupled.control.compress_summary();
+    println!(
+        "\ncompress_coupled: ratio 0.25 -> {} over {} change(s), mean wire {:.0} B/round",
+        s.final_ratio,
+        s.ratio_changes,
+        s.mean_wire_bytes()
+    );
+    assert!(s.ratio_changes >= 1, "the policy never moved the ratio");
+    assert!(s.final_ratio < 0.25, "the policy never tightened the ratio");
+
+    // Acceptance 2: the (k, schedule, ratio) decision trace landed in
+    // the metrics JSON.
+    let json_path = "runs/compression/sweep_coupled_run.json";
+    let parsed = Json::parse(&std::fs::read_to_string(json_path)?)
+        .map_err(|e| anyhow::anyhow!("bad metrics JSON: {e}"))?;
+    let control = parsed
+        .get("control")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no control trace in {json_path}"))?;
+    let with_ratio = control
+        .iter()
+        .filter(|r| {
+            r.get("schedule").unwrap().as_str().is_some()
+                && r.get("compress_ratio").unwrap().as_f64().is_some()
+                && r.get("k").unwrap().as_f64().is_some()
+        })
+        .count();
+    assert!(with_ratio > 0, "no (k, schedule, ratio) records in {json_path}");
+    let summary = parsed
+        .get("compress")
+        .ok_or_else(|| anyhow::anyhow!("no compress summary in {json_path}"))?;
+    assert_eq!(summary.get("kind").and_then(Json::as_str), Some("topk"));
+    println!(
+        "decision trace: {} (k, schedule, ratio) records + compress summary in {json_path}"
+    );
+    println!("\ncompressed the wire, kept the loss, and the control plane tuned it live.");
+    Ok(())
+}

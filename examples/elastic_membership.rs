@@ -9,7 +9,10 @@
 //!   the epoch advances, data re-shards 64-wide → 48-wide, the
 //!   dragonfly topology refits, and the controller re-baselines.
 //! * 32 fresh ranks join at t ≈ 48 ms: they bootstrap from the
-//!   survivors' published epoch checkpoint and the world grows to 80.
+//!   survivors' published epoch checkpoint (zeroed momentum and
+//!   compression residuals) and the world grows to 80 — running their
+//!   first `join_warmup_windows` windows on a linearly ramped LR to
+//!   damp the entry noise.
 //! * At **every** epoch boundary all members hold bit-identical
 //!   parameters (asserted via the epoch trace's FNV checksums), and the
 //!   epoch trace lands in the run's metrics JSON under `"epochs"`.
@@ -29,6 +32,7 @@ const DEPARTS: usize = 16; // ranks 48..64 leave          -> 48
 const JOINS: usize = 32; // ranks 64..96 arrive           -> 80
 const DEPART_AT_S: f64 = 0.024;
 const JOIN_AT_S: f64 = 0.048;
+const WARMUP_WINDOWS: u64 = 4;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "fast");
@@ -51,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         .compute(ComputeModel::uniform(2.5e-4)) // t_C = 2 ms / step
         .eval_every(0, 32)
         .faults(faults)
+        .join_warmup(WARMUP_WINDOWS)
         .out_dir("runs/membership");
     for rank in INITIAL..INITIAL + JOINS {
         builder = builder.join(rank, JOIN_AT_S);
@@ -121,7 +126,38 @@ fn main() -> anyhow::Result<()> {
         report.sim_time_s
     );
 
-    // Acceptance 4: the epoch trace landed in the metrics JSON.
+    // Acceptance 4: the joiner warm-up really damped the arrivals' LR —
+    // at the first iteration a joiner recorded, its LR must sit below
+    // an initial rank's LR for the same iteration, and the ramp must
+    // release by the end of the run.
+    let steps = report.recorder.steps();
+    let joiner = INITIAL; // first arriving rank
+    let first_join_iter = steps
+        .iter()
+        .filter(|s| s.worker == joiner)
+        .map(|s| s.iteration)
+        .min()
+        .expect("joiner ran steps");
+    let lr_at = |w: usize, it: u64| {
+        steps.iter().find(|s| s.worker == w && s.iteration == it).map(|s| s.lr)
+    };
+    let joiner_lr = lr_at(joiner, first_join_iter).unwrap();
+    let initial_lr = lr_at(0, first_join_iter).expect("initial rank shares the iteration");
+    assert!(
+        joiner_lr < initial_lr,
+        "join warm-up missing: joiner LR {joiner_lr} vs initial {initial_lr}"
+    );
+    let last_join_iter =
+        steps.iter().filter(|s| s.worker == joiner).map(|s| s.iteration).max().unwrap();
+    if let (Some(j), Some(i)) = (lr_at(joiner, last_join_iter), lr_at(0, last_join_iter)) {
+        assert_eq!(j, i, "warm-up ramp failed to release after {WARMUP_WINDOWS} windows");
+    }
+    println!(
+        "join warm-up: joiner LR {joiner_lr:.4} < schedule {initial_lr:.4} at entry, \
+         released by iteration {last_join_iter}"
+    );
+
+    // Acceptance 5: the epoch trace landed in the metrics JSON.
     let json_path = "runs/membership/elastic_membership_run.json";
     let parsed = Json::parse(&std::fs::read_to_string(json_path)?)
         .map_err(|e| anyhow::anyhow!("bad metrics JSON: {e}"))?;

@@ -1,0 +1,192 @@
+//! Bench: the gradient-compression subsystem.
+//!
+//! * wall cost of the compressors themselves (top-k selection, QSGD
+//!   quantization) on the ResNet-20 payload,
+//! * the modelled **volume table**: per-rank wire bytes and t_AR per
+//!   round for dense vs top-k vs QSGD on the ResNet-20 payload — the
+//!   acceptance row asserts top-k at ratio ≤ 0.1 cuts the injected
+//!   bytes per round ≥ 5× vs dense (and the gathered wire volume wins
+//!   wherever ratio·N stays below the crossover),
+//! * an end-to-end **volume-vs-convergence** table on the linear model:
+//!   same step budget, dense vs top-k vs QSGD — sim wall-clock, wire
+//!   bytes, final loss.
+//!
+//! ```sh
+//! DCS3GD_BENCH_FAST=1 cargo bench --bench compress
+//! ```
+
+use std::collections::BTreeMap;
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::bench_util::{black_box, write_bench_json, Bencher};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::compress::{qsgd::qsgd_wire_elems, topk_k, CompressorKind, GradCompressor, Qsgd, TopK};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::{Json, Rng};
+
+/// ResNet-20 parameter count — the repo's canonical payload.
+const RESNET20: usize = 271_690;
+
+fn e2e(kind: CompressorKind, ratio: f32, bits: u32, steps: u64) -> RunReport {
+    let mut cfg = ExperimentConfig::builder("linear")
+        .name(&format!("cmp_{}_{ratio}_{bits}", kind.name()))
+        .algo(Algo::DcS3gd)
+        .nodes(8)
+        .local_batch(16)
+        .steps(steps)
+        .eta_single(0.05)
+        .base_batch(16)
+        .data(4096, 512, 0.5)
+        .compute(ComputeModel::uniform(2e-4))
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 2e6, algo: AllReduceAlgo::Ring })
+        .build();
+    cfg.compress.kind = kind;
+    cfg.compress.ratio = ratio;
+    cfg.compress.bits = bits;
+    run_experiment(&cfg).expect("run")
+}
+
+fn main() {
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let steps: u64 = if fast { 40 } else { 160 };
+
+    println!("# gradient compression bench — compressor wall cost + wire volume + convergence\n");
+    let mut b = Bencher::from_env();
+    let mut grad = vec![0.0f32; RESNET20];
+    Rng::new(1).fill_normal(&mut grad);
+    let mut own = vec![0.0f32; RESNET20];
+    for &ratio in &[0.1f32, 0.01] {
+        let mut comp = TopK::new(RESNET20, ratio);
+        b.bench_elems(&format!("topk/compress r={ratio} n={RESNET20}"), RESNET20, || {
+            black_box(comp.compress(&grad, &mut own, 0).len());
+        });
+    }
+    for &bits in &[8u32, 4] {
+        let mut comp = Qsgd::new(RESNET20, bits, 1, 0);
+        b.bench_elems(&format!("qsgd/compress b={bits} n={RESNET20}"), RESNET20, || {
+            black_box(comp.compress(&grad, &mut own, 0).len());
+        });
+    }
+    b.report();
+
+    // Modelled volume table: per-rank injected wire bytes per round and
+    // the modelled collective time on the default fabric. Dense rides
+    // the ring all-reduce; top-k an all-gather of 2k per rank; QSGD the
+    // dense reduce priced at bits/32.
+    let net = NetModel::default();
+    let n_ranks = 8usize;
+    let dense_bytes = RESNET20 as f64 * 4.0;
+    let t_dense = net.allreduce_time(RESNET20, n_ranks);
+    println!("\n# modelled wire volume per round, ResNet-20 payload, N = {n_ranks}");
+    println!(
+        "{:<22} {:>14} {:>10} {:>12}",
+        "scheme", "bytes/rank", "vs dense", "t_AR (s)"
+    );
+    println!("{:<22} {:>14.0} {:>9.1}x {:>12.3e}", "dense ring", dense_bytes, 1.0, t_dense);
+    let mut volume_rows: Vec<Json> = Vec::new();
+    let mut row = |scheme: &str, bytes: f64, t: f64| {
+        println!(
+            "{scheme:<22} {bytes:>14.0} {:>9.1}x {t:>12.3e}",
+            dense_bytes / bytes.max(1e-30),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("scheme".to_string(), Json::Str(scheme.to_string()));
+        m.insert("bytes_per_rank".into(), Json::Num(bytes));
+        m.insert("reduction_x".into(), Json::Num(dense_bytes / bytes.max(1e-30)));
+        m.insert("t_ar_s".into(), Json::Num(t));
+        volume_rows.push(Json::Obj(m));
+    };
+    let mut topk_reduction_at_01 = 0.0;
+    for &ratio in &[0.1f32, 0.05, 0.01] {
+        let wire = 2 * topk_k(RESNET20, ratio);
+        let bytes = wire as f64 * 4.0;
+        let t = net.allgather_time(wire, n_ranks);
+        row(&format!("topk r={ratio}"), bytes, t);
+        if ratio == 0.1 {
+            topk_reduction_at_01 = dense_bytes / bytes;
+        }
+    }
+    for &bits in &[8u32, 4] {
+        let wire = qsgd_wire_elems(RESNET20, bits);
+        row(&format!("qsgd b={bits}"), wire as f64 * 4.0, net.allreduce_time(wire, n_ranks));
+    }
+    // Acceptance: top-k at ratio ≤ 0.1 must cut the injected bytes per
+    // round at least 5× vs dense (indices double the payload, so the
+    // reduction is 1/(2·ratio) — ≥ 5 for every ratio ≤ 0.1).
+    assert!(
+        topk_reduction_at_01 >= 5.0 - 1e-9,
+        "top-k at ratio 0.1 must reduce wire bytes >= 5x, got {topk_reduction_at_01:.2}x"
+    );
+    // and the gathered sparse round is modelled cheaper than the dense
+    // ring wherever ratio·N stays well below 1
+    let sparse_t = net.allgather_time(2 * topk_k(RESNET20, 0.01), n_ranks);
+    assert!(
+        sparse_t < t_dense,
+        "sparse all-gather at 1% must beat the dense ring: {sparse_t} vs {t_dense}"
+    );
+    println!(
+        "\n(top-k injects 2k elements per rank — 1/(2·ratio) less than dense —\n\
+         and its all-gather wins the modelled t_AR while ratio·N < crossover;\n\
+         QSGD keeps the dense reduce at bits/32 of the bytes)"
+    );
+
+    // End-to-end volume-vs-convergence on the linear model: same step
+    // budget on a slow fabric; compression buys simulated wall-clock,
+    // error feedback holds the loss.
+    println!("\n# end-to-end: dense vs compressed DC-S3GD ({steps} steps, slow ring)");
+    println!(
+        "{:<16} {:>12} {:>12} {:>12} {:>10}",
+        "scheme", "wire B/round", "sim time", "final loss", "val err"
+    );
+    let mut e2e_rows: Vec<Json> = Vec::new();
+    let schemes: Vec<(String, RunReport)> = vec![
+        ("dense".to_string(), e2e(CompressorKind::None, 0.05, 8, steps)),
+        ("topk r=0.05".to_string(), e2e(CompressorKind::TopK, 0.05, 8, steps)),
+        ("topk r=0.01".to_string(), e2e(CompressorKind::TopK, 0.01, 8, steps)),
+        ("qsgd b=8".to_string(), e2e(CompressorKind::Qsgd, 0.05, 8, steps)),
+    ];
+    let dense_time = schemes[0].1.sim_time_s;
+    let dense_loss = schemes[0].1.final_train_loss;
+    for (name, r) in &schemes {
+        let s = r.control.compress_summary();
+        println!(
+            "{name:<16} {:>12.0} {:>11.4}s {:>12.4} {:>9.1}%",
+            s.mean_wire_bytes(),
+            r.sim_time_s,
+            r.final_train_loss,
+            100.0 * r.final_val_err,
+        );
+        let mut m = BTreeMap::new();
+        m.insert("scheme".to_string(), Json::Str(name.clone()));
+        m.insert("mean_wire_bytes".into(), Json::Num(s.mean_wire_bytes()));
+        m.insert("sim_time_s".into(), Json::Num(r.sim_time_s));
+        m.insert("final_train_loss".into(), Json::Num(r.final_train_loss as f64));
+        m.insert("final_val_err".into(), Json::Num(r.final_val_err as f64));
+        e2e_rows.push(Json::Obj(m));
+    }
+    let topk01 = &schemes[2].1;
+    assert!(
+        topk01.sim_time_s < dense_time,
+        "top-k 1% must buy wall-clock on a slow fabric: {} vs dense {}",
+        topk01.sim_time_s,
+        dense_time
+    );
+    assert!(
+        topk01.final_train_loss < dense_loss * 1.5 + 0.25,
+        "top-k 1% fell out of the dense loss envelope: {} vs {}",
+        topk01.final_train_loss,
+        dense_loss
+    );
+
+    // Machine-readable export, merged into target/bench_results.json
+    // next to the allreduce/control sections (the CI perf artifact).
+    let mut section = BTreeMap::new();
+    section.insert("payload_elems".to_string(), Json::Num(RESNET20 as f64));
+    section.insert("steps".into(), Json::Num(steps as f64));
+    section.insert("measurements".into(), b.results_json());
+    section.insert("volume".into(), Json::Arr(volume_rows));
+    section.insert("e2e".into(), Json::Arr(e2e_rows));
+    let path = write_bench_json("compress", Json::Obj(section)).expect("bench json");
+    println!("\nbench JSON -> {}", path.display());
+}

@@ -45,6 +45,23 @@
 //! runs fewer steps per window) still posts every round and the
 //! rendezvous sequence stays matched.
 //!
+//! ## Gradient compression
+//!
+//! With a `[compress]` table the posted window update rides the wire
+//! compressed ([`crate::compress`]): top-k as a sparse index+value
+//! all-gather (each rank injects O(k)), QSGD as a dense reduce priced
+//! at bits/32 of the volume. The engine's [`WindowCodec`] folds the
+//! per-rank error-feedback residual into each window before
+//! compressing, and Eq. 9's distance is measured against this rank's
+//! *decompressed* contribution `q_i` — so `D_i = Σq/N − q_i` is exact
+//! over what actually crossed the wire, the λ-correction (Eq. 10/17)
+//! repairs the decompressed aggregate, and the dropped mass telescopes
+//! through the residual instead of biasing the mean. Residuals re-zero
+//! at every membership-epoch boundary and crash recovery (they measure
+//! error against weights that no longer exist), the same rule as
+//! momentum. The `compress_coupled` control policy co-tunes
+//! (k, schedule, ratio) from the same piggybacked observations.
+//!
 //! ## Membership epochs
 //!
 //! The run's world size is itself elastic: a scripted kill that is not
@@ -85,7 +102,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::algo::{Algo, RunReport, WorkerHarness};
-use crate::comm::{Group, JoinBootstrap};
+use crate::comm::{Group, JoinBootstrap, PendingReduce};
+use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{
     param_crc, ControlRecord, EpochRecord, FaultKind, ScheduleEnv, WindowObs,
@@ -95,16 +113,22 @@ use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
 
-/// Fixed control-plane elements on each posted update: `[mean per-step
-/// t_C of the window, last observed t_AR]`, summed into cross-rank
-/// means by the all-reduce.
-pub const CTRL_BASE_SLOTS: usize = 2;
+// The control piggyback layout now lives with the wire format in the
+// compression subsystem ([`crate::compress`]); re-exported here for the
+// engines' historical callers.
+pub use crate::compress::{ctrl_slots, CTRL_BASE_SLOTS};
 
-/// Total piggyback width: the two mean slots plus one slot-offset
-/// element per member carrying that member's own t_C (everyone else
-/// contributes zero there, so the sum *is* the per-member value).
-pub fn ctrl_slots(world: usize) -> usize {
-    CTRL_BASE_SLOTS + world
+/// One in-flight window collective: the request, this rank's
+/// *decompressed* contribution (the Eq. 9 reference `q_i` — equal to
+/// the raw Δw when compression is off), the schedule it rode, and the
+/// compression operating point it was posted at (for the decision
+/// trace).
+struct PostedWindow {
+    handle: PendingReduce,
+    own: Vec<f32>,
+    algo: crate::comm::AllReduceAlgo,
+    wire_bytes: f64,
+    ratio: f64,
 }
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
@@ -215,7 +239,24 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     topology: topo,
                     n_elems: n + slots,
                     n_ranks: world.len(),
+                    compress: cfg.compress,
                 };
+
+                // Gradient compression codec: per-rank error-feedback
+                // residual, rebound (and zeroed) at every membership
+                // epoch. Joiners start with zeroed residuals by
+                // construction.
+                let mut codec = WindowCodec::new(&cfg.compress, n, cfg.seed, rank);
+                codec.rebind(slot, world.len());
+                // Dense aggregate of the decoded window collective.
+                let mut dense_sum = vec![0.0f32; n];
+
+                // Joiner LR warm-up: a rank bootstrapping mid-run ramps
+                // its learning rate over the first
+                // `control.join_warmup_windows` windows (zeroed
+                // momentum + residuals make its first updates noisy).
+                let warmup_total = if is_joiner { cfg.control.join_warmup_windows } else { 0 };
+                let mut windows_since_join: u64 = 0;
 
                 // Control plane: a per-worker controller instance; all
                 // instances see identical (all-reduced) observations, so
@@ -246,11 +287,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 let mut step_delta = vec![0.0f32; n];
                 let mut dist = vec![0.0f32; n];
                 let mut gtilde = vec![0.0f32; n];
-                let mut posted: Option<(
-                    crate::comm::PendingReduce,
-                    Vec<f32>,
-                    crate::comm::AllReduceAlgo,
-                )> = None;
+                let mut posted: Option<PostedWindow> = None;
 
                 let mut steps_in_window = 0u64;
                 let mut window_t_c = 0.0f64; // compute seconds this window
@@ -280,8 +317,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
                             if matches!(ev.kind, FaultKind::Kill { respawn: false }) {
                                 comm.leave();
-                                if let Some((handle, _delta, _algo)) = posted.take() {
-                                    let (_, t_done) = handle.wait(ctx.clock.now());
+                                if let Some(p) = posted.take() {
+                                    let (_, t_done) = p.handle.wait(ctx.clock.now());
                                     ctx.clock.advance_to(t_done);
                                 }
                                 ctx.control_log.record(ControlRecord {
@@ -297,6 +334,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     t_ar_local: 0.0,
                                     t_ar_global: 0.0,
                                     blocked_s: 0.0,
+                                    compress: None,
+                                    compress_ratio: 1.0,
+                                    wire_bytes: 0.0,
                                     event: Some(format!(
                                         "depart@{:.3}s epoch={epoch}",
                                         ev.at_s
@@ -319,6 +359,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             if let Some(o) = opt.as_mut() {
                                 o.reset();
                             }
+                            // The restored snapshot predates the
+                            // residual's reference point: drop it.
+                            codec.reset_residual();
                         }
                     }
 
@@ -326,7 +369,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     let (loss, err, wall) = ctx.train_step(&w);
                     window_t_c += ctx.clock.now() - t_before_step;
                     steps_in_window += 1;
-                    let eta = sched.at(t);
+                    let warm = if warmup_total > 0 && windows_since_join < warmup_total {
+                        (windows_since_join + 1) as f32 / (warmup_total + 1) as f32
+                    } else {
+                        1.0
+                    };
+                    let eta = sched.at(t) * warm;
                     let wd = cfg.wd_at(t, &sched);
                     let my_k = decision.k_for(slot, npg);
                     let window_end = steps_in_window >= my_k as u64;
@@ -345,21 +393,24 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // actual contributor count, so a round that resolved
                     // over the survivors still averages unbiasedly.
                     let d_opt: Option<&[f32]> = if window_end {
-                        if let Some((handle, posted_delta, posted_algo)) = posted.take() {
-                            let post_time = handle.post_time;
+                        if let Some(p) = posted.take() {
+                            let post_time = p.handle.post_time;
                             let now_before_wait = ctx.clock.now();
-                            let out = handle.wait_outcome(now_before_wait);
+                            let out = p.handle.wait_outcome(now_before_wait);
                             ctx.clock.advance_to(out.time);
                             ctx.beat(out.time);
                             let blocked = out.time - now_before_wait;
                             prev_t_ar = out.time - post_time;
                             let n_contrib = out.contributors.len();
-                            dc::distance_to_average(
-                                &out.data[..n],
-                                &posted_delta,
-                                n_contrib,
-                                &mut dist,
-                            );
+                            // Decode: rebuild the dense aggregate (and
+                            // the cross-rank observations) from the
+                            // possibly-compressed round; Eq. 9 then
+                            // measures against this rank's own
+                            // *decompressed* contribution, so the
+                            // residual error stays in the error-feedback
+                            // loop, not in D_i.
+                            let ctrl = codec.decode(&out.data, n_contrib, &mut dense_sum);
+                            dc::distance_to_average(&dense_sum, &p.own, n_contrib, &mut dist);
                             dist_norm = tensor::norm2(&dist);
 
                             // Membership change? Departures show up as a
@@ -391,20 +442,16 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 
                             // Wait/post boundary: hand the cross-rank mean
                             // observations and the per-member t_C split
-                            // (payload tail) to the controller — unless a
-                            // transition is pending, which re-baselines
-                            // the controller instead.
-                            let inv_n = 1.0 / n_contrib as f64;
-                            let tail = &out.data[n..n + slots];
+                            // (decoded from the round's control tail) to
+                            // the controller — unless a transition is
+                            // pending, which re-baselines the controller
+                            // instead.
                             let obs = WindowObs {
                                 window: window_idx,
                                 iteration: t,
-                                t_compute: tail[0] as f64 * inv_n,
-                                t_allreduce: tail[1] as f64 * inv_n,
-                                per_rank_t_c: tail[CTRL_BASE_SLOTS..]
-                                    .iter()
-                                    .map(|x| *x as f64)
-                                    .collect(),
+                                t_compute: ctrl.t_compute,
+                                t_allreduce: ctrl.t_allreduce,
+                                per_rank_t_c: ctrl.per_rank_t_c,
                             };
                             let prev = decision;
                             if pending_transition.is_none() {
@@ -430,6 +477,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     (Some(_), None) => notes.push("quarantine lifted".into()),
                                     _ => {}
                                 }
+                                if decision.compress_ratio != prev.compress_ratio {
+                                    notes.push(format!(
+                                        "ratio {} -> {}",
+                                        prev.compress_ratio.unwrap_or(1.0),
+                                        decision.compress_ratio.unwrap_or(1.0),
+                                    ));
+                                }
                                 ctx.control_log.record(ControlRecord {
                                     worker: rank,
                                     window: window_idx,
@@ -437,12 +491,15 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     sim_time: ctx.clock.now(),
                                     k: decision.k,
                                     lam_scale: decision.lam_scale,
-                                    schedule: Some(posted_algo.name().to_string()),
+                                    schedule: Some(p.algo.name().to_string()),
                                     t_compute: obs.t_compute,
                                     t_allreduce: obs.t_allreduce,
                                     t_ar_local: out.phases.local_s,
                                     t_ar_global: out.phases.global_s,
                                     blocked_s: blocked,
+                                    compress: Some(codec.name().to_string()),
+                                    compress_ratio: p.ratio,
+                                    wire_bytes: p.wire_bytes,
                                     event: (!notes.is_empty()).then(|| notes.join("; ")),
                                 });
                             }
@@ -490,6 +547,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ctx.record(t, loss, err, wall, lam_used, dist_norm, eta);
 
                     if window_end {
+                        windows_since_join += 1;
                         if let Some((departed, joins)) = pending_transition.take() {
                             // ---- membership epoch transition ----
                             // Every member of the old epoch reaches this
@@ -547,7 +605,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 topology: topo,
                                 n_elems: n + slots,
                                 n_ranks: world.len(),
+                                compress: cfg.compress,
                             };
+                            // Residuals measure error against the old
+                            // epoch's weights; the resync mean replaced
+                            // them, so the residual re-zeroes with the
+                            // new (slot, world) view — same rule as
+                            // momentum.
+                            codec.rebind(slot, world.len());
                             controller =
                                 cfg.control.build_controller(cfg.staleness.max(1), env);
                             decision = controller.current();
@@ -587,6 +652,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     t_ar_local: 0.0,
                                     t_ar_global: 0.0,
                                     blocked_s: 0.0,
+                                    compress: None,
+                                    compress_ratio: 1.0,
+                                    wire_bytes: 0.0,
                                     event: Some(format!(
                                         "epoch {epoch}: world {} (-{:?} +{:?})",
                                         world.len(),
@@ -620,25 +688,39 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 });
                             }
 
-                            // Post this window's update (MPI_Iallreduce)
-                            // on the decided schedule, with the control
-                            // piggyback, and immediately continue
-                            // computing — the overlap.
+                            // Post this window's update on the decided
+                            // schedule: the codec folds the residual,
+                            // compresses, and appends the control
+                            // piggyback; the engine immediately
+                            // continues computing — the overlap. With
+                            // compression off the wire payload (and its
+                            // pricing) is bit-identical to the
+                            // uncompressed path.
                             let per_step_t_c = window_t_c / steps_in_window as f64;
-                            window_delta.push(per_step_t_c as f32);
-                            window_delta.push(prev_t_ar as f32);
-                            for s in 0..world.len() {
-                                window_delta
-                                    .push(if s == slot { per_step_t_c as f32 } else { 0.0 });
-                            }
-                            debug_assert_eq!(window_delta.len(), n + slots);
                             let algo = decision.schedule.unwrap_or(cfg.net.algo);
-                            let handle =
-                                comm.iallreduce_sched(&window_delta, ctx.clock.now(), algo);
-                            let mut posted_delta =
-                                std::mem::replace(&mut window_delta, vec![0.0f32; n]);
-                            posted_delta.truncate(n);
-                            posted = Some((handle, posted_delta, algo));
+                            if let Some(r) = decision.compress_ratio {
+                                codec.set_ratio(r);
+                            }
+                            let mut own = vec![0.0f32; n];
+                            let wire =
+                                codec.encode(&window_delta, per_step_t_c, prev_t_ar, &mut own);
+                            let now = ctx.clock.now();
+                            let handle = match codec.mode() {
+                                RoundMode::DenseReduce => {
+                                    comm.iallreduce_wire(&wire, now, algo, codec.wire_elems())
+                                }
+                                RoundMode::SparseGather => {
+                                    comm.iallgather_sched(&wire, now, algo)
+                                }
+                            };
+                            posted = Some(PostedWindow {
+                                handle,
+                                own,
+                                algo,
+                                wire_bytes: codec.wire_bytes(),
+                                ratio: codec.ratio() as f64,
+                            });
+                            window_delta.iter_mut().for_each(|x| *x = 0.0);
                             window_idx += 1;
                             steps_in_window = 0;
                             window_t_c = 0.0;
@@ -653,12 +735,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 // Drain the final collective so every worker ends on the
                 // averaged weights (and no request leaks). Re-weighted:
                 // a departure at the very end still averages correctly.
-                if let Some((handle, posted_delta, _)) = posted.take() {
-                    let out = handle.wait_outcome(ctx.clock.now());
+                if let Some(p) = posted.take() {
+                    let out = p.handle.wait_outcome(ctx.clock.now());
                     ctx.clock.advance_to(out.time);
+                    codec.decode(&out.data, out.contributors.len(), &mut dense_sum);
                     dc::distance_to_average(
-                        &out.data[..n],
-                        &posted_delta,
+                        &dense_sum,
+                        &p.own,
                         out.contributors.len(),
                         &mut dist,
                     );
@@ -797,6 +880,10 @@ mod tests {
         assert_eq!(j.get("algo").unwrap().as_str(), Some("dcs3gd"));
         assert!(j.get("control").unwrap().as_arr().is_some());
         assert!(j.get("comm").unwrap().get("rounds").is_some());
+        // compression accounting is always exported; a dense run reads
+        // kind = "none" at ratio 1
+        assert_eq!(j.get("compress").unwrap().get("kind").unwrap().as_str(), Some("none"));
+        assert_eq!(j.get("compress").unwrap().get("final_ratio").unwrap().as_f64(), Some(1.0));
         // fixed-membership runs export an empty epoch trace
         assert_eq!(j.get("epochs").unwrap().as_arr().map(|a| a.len()), Some(0));
         std::fs::remove_dir_all(&dir).unwrap();
@@ -1059,6 +1146,160 @@ mod tests {
         assert_eq!(a.sim_time_s, b.sim_time_s);
         assert_eq!(a.final_train_loss, b.final_train_loss);
         assert_eq!(a.control.records(), b.control.records());
+    }
+
+    // --- gradient compression ---
+
+    #[test]
+    fn topk_compression_trains_and_cuts_wire_bytes() {
+        let mut cfg = base_cfg();
+        cfg.compress.kind = crate::compress::CompressorKind::TopK;
+        cfg.compress.ratio = 0.05;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+        let s = report.control.compress_summary();
+        assert_eq!(s.kind, "topk");
+        assert!(s.rounds > 0);
+        let n = WorkerHarness::prepare(&cfg).unwrap().n_params();
+        let dense_bytes = (n + ctrl_slots(cfg.nodes)) as f64 * 4.0;
+        assert!(
+            s.mean_wire_bytes() < 0.2 * dense_bytes,
+            "wire {} not < 20% of dense {}",
+            s.mean_wire_bytes(),
+            dense_bytes
+        );
+    }
+
+    #[test]
+    fn qsgd_compression_trains_and_prices_reduced_volume() {
+        let mut cfg = base_cfg();
+        cfg.compress.kind = crate::compress::CompressorKind::Qsgd;
+        cfg.compress.bits = 8;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+        let s = report.control.compress_summary();
+        assert_eq!(s.kind, "qsgd");
+        let n = WorkerHarness::prepare(&cfg).unwrap().n_params();
+        let dense_bytes = (n + ctrl_slots(cfg.nodes)) as f64 * 4.0;
+        assert!(s.mean_wire_bytes() < 0.3 * dense_bytes, "8-bit wire must be ~1/4 dense");
+    }
+
+    #[test]
+    fn compressed_runs_are_deterministic() {
+        let mk = |kind| {
+            let mut cfg = base_cfg();
+            cfg.compress.kind = kind;
+            cfg.compress.ratio = 0.1;
+            cfg
+        };
+        for kind in
+            [crate::compress::CompressorKind::TopK, crate::compress::CompressorKind::Qsgd]
+        {
+            let a = run(&mk(kind), WorkerHarness::prepare(&mk(kind)).unwrap()).unwrap();
+            let b = run(&mk(kind), WorkerHarness::prepare(&mk(kind)).unwrap()).unwrap();
+            assert_eq!(a.final_train_loss, b.final_train_loss, "{kind:?}");
+            assert_eq!(a.sim_time_s, b.sim_time_s, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn topk_sparse_round_costs_less_than_dense_on_slow_fabric() {
+        // Same slow fabric, same steps: the sparse all-gather payload
+        // must buy simulated wall-clock vs the dense ring.
+        let mk = |kind| {
+            let mut cfg = base_cfg();
+            cfg.steps = 40;
+            cfg.compute = ComputeModel::uniform(1e-5);
+            cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
+            cfg.compress.kind = kind;
+            cfg.compress.ratio = 0.02;
+            cfg
+        };
+        let dense = mk(crate::compress::CompressorKind::None);
+        let topk = mk(crate::compress::CompressorKind::TopK);
+        let r_dense = run(&dense, WorkerHarness::prepare(&dense).unwrap()).unwrap();
+        let r_topk = run(&topk, WorkerHarness::prepare(&topk).unwrap()).unwrap();
+        assert!(
+            r_topk.sim_time_s < r_dense.sim_time_s / 2.0,
+            "top-k {} not at least 2x faster than dense {}",
+            r_topk.sim_time_s,
+            r_dense.sim_time_s
+        );
+        assert!(r_topk.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn topk_survives_membership_transitions_bit_identically() {
+        let mut cfg = base_cfg();
+        cfg.steps = 40;
+        cfg.compress.kind = crate::compress::CompressorKind::TopK;
+        cfg.compress.ratio = 0.1;
+        cfg.control.faults = FaultPlan::new().depart(3, 0.02);
+        cfg.control.joins = vec![JoinEvent { rank: 4, at_s: 0.15 }];
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.epochs.worlds(), vec![4, 3, 4]);
+        assert!(
+            report.epochs.crc_mismatches().is_empty(),
+            "compressed ranks diverged at an epoch boundary"
+        );
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn compress_coupled_tightens_ratio_on_slow_fabric_and_traces_it() {
+        // t_AR far above the k_max window budget: the policy must walk
+        // the ratio down, and the (k, schedule, ratio) trace must show
+        // the move.
+        let mut cfg = base_cfg();
+        cfg.steps = 80;
+        cfg.compute = ComputeModel::uniform(1e-5);
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 2e5, algo: AllReduceAlgo::Ring };
+        cfg.compress.kind = crate::compress::CompressorKind::TopK;
+        cfg.compress.ratio = 0.25;
+        cfg.control.policy = ControlPolicy::CompressCoupled;
+        cfg.control.k_max = 2;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let s = report.control.compress_summary();
+        assert!(s.ratio_changes >= 1, "ratio never moved (final {})", s.final_ratio);
+        assert!(s.final_ratio < 0.25, "ratio did not tighten: {}", s.final_ratio);
+        let recs = report.control.records();
+        assert!(recs.iter().any(|r| r
+            .event
+            .as_deref()
+            .is_some_and(|e| e.contains("ratio"))));
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn joiner_warmup_ramps_the_learning_rate() {
+        let mut cfg = base_cfg();
+        cfg.steps = 40;
+        cfg.control.joins = vec![JoinEvent { rank: 4, at_s: 0.02 }];
+        cfg.control.join_warmup_windows = 4;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let steps = report.recorder.steps();
+        let first_join_iter = steps
+            .iter()
+            .filter(|s| s.worker == 4)
+            .map(|s| s.iteration)
+            .min()
+            .expect("joiner ran steps");
+        let lr_at = |w: usize, it: u64| {
+            steps.iter().find(|s| s.worker == w && s.iteration == it).map(|s| s.lr)
+        };
+        let joiner_lr = lr_at(4, first_join_iter).unwrap();
+        let initial_lr = lr_at(0, first_join_iter).expect("initial rank shares the iteration");
+        assert!(
+            joiner_lr < initial_lr,
+            "warm-up must damp the joiner's LR: {joiner_lr} vs {initial_lr}"
+        );
+        // the ramp releases: the joiner's last windows run the full LR
+        let last_join_iter =
+            steps.iter().filter(|s| s.worker == 4).map(|s| s.iteration).max().unwrap();
+        if let (Some(j), Some(i)) = (lr_at(4, last_join_iter), lr_at(0, last_join_iter)) {
+            assert_eq!(j, i, "ramp must release after join_warmup_windows");
+        }
+        assert!(report.final_train_loss.is_finite());
     }
 
     // --- membership epochs ---

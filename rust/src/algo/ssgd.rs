@@ -15,25 +15,28 @@
 //! records the per-iteration blocked time — the straggler trace the
 //! elastic engines are judged against.
 //!
-//! The collective *schedule* does apply here: a `schedule_coupled`
-//! policy can run SSGD's blocking all-reduce on the hierarchical
-//! dragonfly schedule. SSGD has no piggyback channel, so its
-//! observations are rank-local — every rank sees a different blocked
-//! time. Feeding those into the controller would let the calibrated
-//! schedule switch fire on different windows on different ranks and
-//! unmatch the rounds, so the engine hands the controller **no
-//! collective-latency evidence** (`t_allreduce = 0`): the schedule pick
-//! reduces to the deterministic model argmin at bootstrap, identical on
-//! every rank, and the observed latency still reaches the metrics
-//! export through the [`ControlRecord`]. Cross-rank mean observations
-//! for SSGD (piggybacked like DC-S3GD's) are a ROADMAP follow-on.
+//! The collective *schedule* and the gradient **compression** apply
+//! here in full. Every posted gradient carries the same
+//! [`ctrl_slots`]`(N)` piggyback tail as DC-S3GD's window updates —
+//! each rank's mean t_C and last observed t_AR, summed into cross-rank
+//! means, plus the slot-offset per-rank t_C split — so every rank
+//! hands its controller **identical observations** and the calibrated
+//! `schedule_coupled` / `compress_coupled` switches stay in lock-step
+//! across ranks (the old bootstrap-argmin-only restriction is gone).
+//! Compression goes through the same [`WindowCodec`] as DC-S3GD with a
+//! window of one step: error feedback keeps each rank's residual
+//! rank-local, while the *decoded mean gradient* is identical on every
+//! rank — so the SSGD bit-identical-replicas invariant holds under
+//! compression too.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::algo::dcs3gd::ctrl_slots;
 use crate::algo::{RunReport, WorkerHarness};
 use crate::comm::Group;
+use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
 use crate::model::Checkpoint;
@@ -48,8 +51,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let env = ScheduleEnv {
         net: cfg.net,
         topology: cfg.topology(),
-        n_elems: n,
+        n_elems: n + ctrl_slots(cfg.nodes),
         n_ranks: cfg.nodes,
+        compress: cfg.compress,
     };
 
     std::thread::scope(|scope| -> Result<()> {
@@ -74,9 +78,18 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 );
                 let mut g_mean = vec![0.0f32; n];
                 let mut delta = vec![0.0f32; n];
-                // Control plane (observation mode: k is pinned at 1, but
-                // the schedule decision applies to the blocking
-                // all-reduce).
+                let mut dense_sum = vec![0.0f32; n];
+                let mut own = vec![0.0f32; n];
+                let mut prev_t_ar = 0.0f64;
+                // Compression codec: per-rank residual, fixed world
+                // (SSGD runs with pinned membership).
+                let mut codec = WindowCodec::new(&cfg.compress, n, cfg.seed, rank);
+                codec.rebind(rank, cfg.nodes);
+                // Control plane: k is pinned at 1, but the schedule and
+                // compression decisions apply to the blocking
+                // all-reduce — fully live, since the piggybacked
+                // observations are cross-rank means identical on every
+                // rank.
                 let mut controller = cfg.control.build_controller(1, env);
                 let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
@@ -100,21 +113,36 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 1.0,
                             );
                             opt.reset();
+                            codec.reset_residual();
                         }
                     }
                     let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = ctx.train_step(&w);
                     let t_c = ctx.clock.now() - t_before_step;
                     // Blocking all-reduce of gradients on the decided
-                    // schedule: Eq. 13.
+                    // schedule (Eq. 13), compressed through the codec
+                    // with the piggybacked observation tail.
                     let now_before_wait = ctx.clock.now();
                     let algo = decision.schedule.unwrap_or(cfg.net.algo);
-                    let (sum, t_done, phases) =
-                        comm.allreduce_sched(&ctx.g, now_before_wait, algo);
-                    ctx.clock.advance_to(t_done);
-                    ctx.beat(t_done);
+                    if let Some(r) = decision.compress_ratio {
+                        codec.set_ratio(r);
+                    }
+                    let wire = codec.encode(&ctx.g, t_c, prev_t_ar, &mut own);
+                    let handle = match codec.mode() {
+                        RoundMode::DenseReduce => {
+                            comm.iallreduce_wire(&wire, now_before_wait, algo, codec.wire_elems())
+                        }
+                        RoundMode::SparseGather => {
+                            comm.iallgather_sched(&wire, now_before_wait, algo)
+                        }
+                    };
+                    let out = handle.wait_outcome(now_before_wait);
+                    ctx.clock.advance_to(out.time);
+                    ctx.beat(out.time);
+                    prev_t_ar = out.time - now_before_wait;
+                    let ctrl = codec.decode(&out.data, out.contributors.len(), &mut dense_sum);
                     let inv_n = 1.0 / cfg.nodes as f32;
-                    for (m, s) in g_mean.iter_mut().zip(sum.iter()) {
+                    for (m, s) in g_mean.iter_mut().zip(dense_sum.iter()) {
                         *m = s * inv_n;
                     }
                     let eta = sched.at(t);
@@ -123,18 +151,16 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     tensor::add_assign(&mut w, &delta);
                     ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
 
-                    // Wait/post boundary: consult (k has no effect here;
-                    // the schedule decision and the straggler trace feed
-                    // the metrics export). t_allreduce is withheld —
-                    // it is rank-local in SSGD and would break the
-                    // cross-rank determinism of the schedule switch
-                    // (see the module docs).
+                    // Wait/post boundary: consult with the decoded
+                    // cross-rank means (identical on every rank, so the
+                    // calibrated schedule / ratio switches stay matched
+                    // across the fleet).
                     decision = controller.on_window(&WindowObs {
                         window: t,
                         iteration: t,
-                        t_compute: t_c,
-                        t_allreduce: 0.0,
-                        per_rank_t_c: Vec::new(),
+                        t_compute: ctrl.t_compute,
+                        t_allreduce: ctrl.t_allreduce,
+                        per_rank_t_c: ctrl.per_rank_t_c,
                     });
                     if rank == 0 {
                         ctx.control_log.record(ControlRecord {
@@ -146,10 +172,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             lam_scale: decision.lam_scale,
                             schedule: Some(algo.name().to_string()),
                             t_compute: t_c,
-                            t_allreduce: t_done - now_before_wait,
-                            t_ar_local: phases.local_s,
-                            t_ar_global: phases.global_s,
-                            blocked_s: t_done - now_before_wait,
+                            t_allreduce: out.time - now_before_wait,
+                            t_ar_local: out.phases.local_s,
+                            t_ar_global: out.phases.global_s,
+                            blocked_s: out.time - now_before_wait,
+                            compress: Some(codec.name().to_string()),
+                            compress_ratio: codec.ratio() as f64,
+                            wire_bytes: codec.wire_bytes(),
                             event: None,
                         });
                         if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
@@ -299,5 +328,76 @@ mod tests {
         let a = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
         let b = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
         assert_eq!(a.final_val_err, b.final_val_err);
+    }
+
+    #[test]
+    fn cross_rank_observations_feed_the_controller() {
+        // The piggybacked tail hands every rank the real cross-rank
+        // t_AR mean. A LambdaCoupled controller turns that evidence
+        // into a k (and hence λ-scale) movement — impossible under the
+        // old SSGD wiring, which withheld t_allreduce entirely (the
+        // trace pinned lam_scale at 1.0 forever).
+        let mut cfg = base_cfg();
+        cfg.steps = 40;
+        cfg.compute = ComputeModel::uniform(1e-5);
+        cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
+        cfg.control.policy = crate::control::ControlPolicy::LambdaCoupled;
+        cfg.control.k_max = 6;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let recs = report.control.records();
+        assert!(
+            recs.iter().any(|r| r.lam_scale > 1.0),
+            "the controller never saw the piggybacked t_AR evidence"
+        );
+        // and the run stayed deterministic / bit-identical across ranks
+        let again = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.final_val_err, again.final_val_err);
+    }
+
+    #[test]
+    fn ssgd_topk_compression_trains_and_stays_deterministic() {
+        let mk = || {
+            let mut cfg = base_cfg();
+            cfg.compress.kind = crate::compress::CompressorKind::TopK;
+            cfg.compress.ratio = 0.05;
+            cfg
+        };
+        let a = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        let b = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        assert_eq!(a.final_val_err, b.final_val_err, "compressed SSGD not deterministic");
+        assert!(a.final_val_err < 0.8, "val err {}", a.final_val_err);
+        assert_eq!(a.control.compress_summary().kind, "topk");
+    }
+
+    #[test]
+    fn ssgd_topk_cuts_iteration_time_on_slow_fabric() {
+        let mk = |kind| {
+            let mut cfg = base_cfg();
+            cfg.steps = 20;
+            cfg.compute = ComputeModel::uniform(1e-5);
+            cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 1e6, algo: AllReduceAlgo::Ring };
+            cfg.compress.kind = kind;
+            cfg.compress.ratio = 0.02;
+            cfg
+        };
+        let dense = mk(crate::compress::CompressorKind::None);
+        let topk = mk(crate::compress::CompressorKind::TopK);
+        let r_dense = run(&dense, WorkerHarness::prepare(&dense).unwrap()).unwrap();
+        let r_topk = run(&topk, WorkerHarness::prepare(&topk).unwrap()).unwrap();
+        assert!(
+            r_topk.mean_iter_time < r_dense.mean_iter_time / 2.0,
+            "top-k iter {} not at least 2x under dense {}",
+            r_topk.mean_iter_time,
+            r_dense.mean_iter_time
+        );
+    }
+
+    #[test]
+    fn ssgd_qsgd_compression_trains() {
+        let mut cfg = base_cfg();
+        cfg.compress.kind = crate::compress::CompressorKind::Qsgd;
+        cfg.compress.bits = 8;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
     }
 }

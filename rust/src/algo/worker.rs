@@ -364,6 +364,9 @@ impl WorkerCtx {
             t_ar_local: 0.0,
             t_ar_global: 0.0,
             blocked_s: recover_at - event.at_s,
+            compress: None,
+            compress_ratio: 1.0,
+            wire_bytes: 0.0,
             event: Some(format!(
                 "kill@{:.3}s detect@{:.3}s restored_from={restored_from}",
                 event.at_s, detect
@@ -465,6 +468,9 @@ impl RunReport {
         // Where the run's all-reduce time went: local vs global links,
         // and how often the control plane switched schedules.
         m.insert("comm".into(), self.control.comm_summary().to_json());
+        // Gradient-compression accounting: compressor, achieved wire
+        // bytes, and the compress_coupled ratio trace.
+        m.insert("compress".into(), self.control.compress_summary().to_json());
         // Membership-epoch trace: world-size trajectory, join/depart
         // sets, and the cross-rank parameter-checksum agreement.
         m.insert("epochs".into(), self.epochs.to_json());

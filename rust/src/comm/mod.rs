@@ -267,6 +267,13 @@ struct Round {
     /// Schedule costing this round (first poster's choice; the
     /// deterministic controllers guarantee every rank picks the same).
     algo: AllReduceAlgo,
+    /// Wire volume override in f32-equivalent elements — the size the
+    /// cost model prices instead of the payload length. The gradient
+    /// compression hook: a quantized payload still travels (and sums)
+    /// as dense f32s, but the modelled round moves `bits/32` of the
+    /// bytes. `None` prices the actual payload. First poster's choice,
+    /// same determinism contract as `algo`.
+    wire_elems: Option<usize>,
     result: Option<RoundResult>,
     consumed: usize,
 }
@@ -302,10 +309,11 @@ impl Round {
                         *a += x;
                     }
                 }
+                let wire = self.wire_elems.unwrap_or(len);
                 let phases = if self.kind == RoundKind::AllReduce {
-                    sched_net.schedule().allreduce_phases(len, n_ranks)
+                    sched_net.schedule().allreduce_phases(wire, n_ranks)
                 } else {
-                    sched_net.schedule().reduce_scatter_phases(len, n_ranks)
+                    sched_net.schedule().reduce_scatter_phases(wire, n_ranks)
                 };
                 (sum, phases)
             }
@@ -317,7 +325,8 @@ impl Round {
                     assert_eq!(part.len(), per, "mismatched all-gather lengths in round {seq}");
                     out.extend_from_slice(&part);
                 }
-                let phases = sched_net.schedule().allgather_phases(per, n_ranks);
+                let wire = self.wire_elems.unwrap_or(per);
+                let phases = sched_net.schedule().allgather_phases(wire, n_ranks);
                 (out, phases)
             }
             RoundKind::Broadcast { root } => {
@@ -579,6 +588,20 @@ impl Comm {
         kind: RoundKind,
         algo: AllReduceAlgo,
     ) -> PendingReduce {
+        self.post_wire(data, now, kind, algo, None)
+    }
+
+    /// [`Comm::post`] with an explicit wire-volume override for the
+    /// cost model (the compression hook). All ranks must pass the same
+    /// (kind, algo, wire_elems) for a given sequence number.
+    pub(crate) fn post_wire(
+        &mut self,
+        data: &[f32],
+        now: f64,
+        kind: RoundKind,
+        algo: AllReduceAlgo,
+        wire_elems: Option<usize>,
+    ) -> PendingReduce {
         let seq = self.next_seq;
         self.next_seq += 1;
         let capacity = self.shared.capacity;
@@ -594,17 +617,20 @@ impl Comm {
             max_post_time: f64::NEG_INFINITY,
             kind,
             algo,
+            wire_elems,
             result: None,
             consumed: 0,
         });
         debug_assert!(
-            round.kind == kind && round.algo == algo,
-            "rank {} disagrees on round {seq} shape: {:?}/{:?} vs {:?}/{:?}",
+            round.kind == kind && round.algo == algo && round.wire_elems == wire_elems,
+            "rank {} disagrees on round {seq} shape: {:?}/{:?}/{:?} vs {:?}/{:?}/{:?}",
             self.rank,
             round.kind,
             round.algo,
+            round.wire_elems,
             kind,
-            algo
+            algo,
+            wire_elems
         );
         assert!(round.parts[self.rank].is_none(), "rank {} double-posted round {seq}", self.rank);
         round.parts[self.rank] = Some(data.to_vec());
@@ -719,6 +745,36 @@ impl Comm {
         algo: AllReduceAlgo,
     ) -> PendingReduce {
         self.post(data, now, RoundKind::AllReduce, algo)
+    }
+
+    /// Non-blocking all-reduce whose cost model prices `wire_elems`
+    /// f32-equivalents instead of the payload length — a quantized
+    /// payload still travels (and sums) as dense f32s, but the modelled
+    /// round moves only the compressed bytes. Every rank must pass the
+    /// same (algo, wire_elems) for the same round.
+    pub fn iallreduce_wire(
+        &mut self,
+        data: &[f32],
+        now: f64,
+        algo: AllReduceAlgo,
+        wire_elems: usize,
+    ) -> PendingReduce {
+        self.post_wire(data, now, RoundKind::AllReduce, algo, Some(wire_elems))
+    }
+
+    /// Non-blocking all-gather on an explicit schedule: the sparse
+    /// round the top-k compressed engines use. Unlike the fixed-world
+    /// [`Comm::allgather`] convenience wrapper, this is membership-
+    /// epoch aware — the concatenation covers exactly the round's
+    /// contributors (in ascending rank order), which the caller reads
+    /// from [`RoundOutcome::contributors`].
+    pub fn iallgather_sched(
+        &mut self,
+        data: &[f32],
+        now: f64,
+        algo: AllReduceAlgo,
+    ) -> PendingReduce {
+        self.post(data, now, RoundKind::AllGather, algo)
     }
 
     /// Blocking all-reduce — `MPI_Allreduce`. Returns (sum, completion
@@ -1006,6 +1062,58 @@ mod tests {
             assert_eq!(phases, want);
             assert!((t - want.total()).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn wire_priced_round_sums_dense_but_costs_compressed() {
+        // A compressed round: the payload (and its sum) is dense, the
+        // cost model prices the wire volume.
+        let net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 4e6, algo: AllReduceAlgo::Ring };
+        let results = spawn_ranks(4, net, |mut c| {
+            let h = c.iallreduce_wire(&vec![1.0f32; 1000], 0.0, AllReduceAlgo::Ring, 250);
+            h.wait(0.0)
+        });
+        let expect_t = net.allreduce_time(250, 4);
+        assert!(expect_t < net.allreduce_time(1000, 4));
+        for (sum, t) in results {
+            assert_eq!(sum[0], 4.0, "wire pricing must not touch the arithmetic");
+            assert!((t - expect_t).abs() < 1e-15, "t={t} vs wire-priced {expect_t}");
+        }
+    }
+
+    #[test]
+    fn sparse_gather_round_concatenates_and_costs_per_rank_payload() {
+        let net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 4e6, algo: AllReduceAlgo::Ring };
+        let results = spawn_ranks(3, net, |mut c| {
+            let seg = [c.rank() as f32; 4];
+            let out = c.iallgather_sched(&seg, 0.0, AllReduceAlgo::Ring).wait_outcome(0.0);
+            (out.data.as_ref().clone(), out.time)
+        });
+        let expect_t = net.allgather_time(4, 3);
+        for (data, t) in results {
+            assert_eq!(data.len(), 12);
+            assert_eq!(&data[..4], &[0.0; 4]);
+            assert_eq!(&data[8..], &[2.0; 4]);
+            assert!((t - expect_t).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn sparse_gather_resolves_over_survivors() {
+        // A departure mid-round: the gathered payload covers exactly
+        // the survivors, in rank order — the membership-aware sparse
+        // path the compressed engines rely on.
+        let group = Group::new(3, NetModel::instant());
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        c2.leave();
+        let h0 = c0.iallgather_sched(&[1.0, 2.0], 0.0, AllReduceAlgo::Ring);
+        let h1 = c1.iallgather_sched(&[3.0, 4.0], 0.0, AllReduceAlgo::Ring);
+        let out = h0.wait_outcome(0.0);
+        assert_eq!(out.contributors.as_ref(), &vec![0, 1]);
+        assert_eq!(out.data.as_ref(), &vec![1.0, 2.0, 3.0, 4.0]);
+        h1.wait(0.0).0.as_ref();
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Gradient compression: error-feedback top-k / quantized collectives.
+//!
+//! DC-S3GD hides t_AR behind t_C by overlapping the all-reduce with the
+//! next window's compute (Eq. 14); compression attacks the same
+//! bottleneck from the other side by shrinking the payload itself, and
+//! the two compose — the λ-correction (Eq. 10/17) is applied to the
+//! *decompressed* aggregate, so delay compensation repairs the residual
+//! staleness error exactly as it repairs the overlap error (cf.
+//! *Asynchronous SGD with Delay Compensation*, Zheng et al.).
+//!
+//! Three compressors behind the [`GradCompressor`] trait, each carrying
+//! a per-rank **error-feedback residual**: the compression error of
+//! window j is folded back into window j+1's gradient before
+//! compressing, so the dropped mass telescopes instead of vanishing
+//! (Stich et al., *Sparsified SGD with Memory*):
+//!
+//! * [`TopK`] — keep the k = ⌈ratio·n⌉ largest-magnitude coordinates;
+//!   the wire payload is a sparse `[indices…, values…]` segment
+//!   exchanged with an **all-gather** round (each rank posts O(k), the
+//!   aggregate is rebuilt by scatter-add in rank order, bit-identically
+//!   on every rank).
+//! * [`Qsgd`] — stochastic quantization to `bits`-bit levels (sign +
+//!   2^(bits−1)−1 magnitude levels against the max-norm). Quantized
+//!   values are exact f32s, so the payload still rides the dense
+//!   **all-reduce** — only the *priced* wire volume shrinks to
+//!   bits/32 of dense.
+//! * `None` — the identity pass-through: bit-for-bit the uncompressed
+//!   engine path (payload, timing, and arithmetic all unchanged).
+//!
+//! [`WindowCodec`] is the engine-facing wrapper: it owns the wire
+//! format, appends the control plane's piggyback tail (the cross-rank
+//! t_C/t_AR observation slots that used to be assembled inline in
+//! `algo::dcs3gd`), and decodes the completed round back into the dense
+//! aggregate plus a [`CtrlObs`] — identical on every rank, so the
+//! deterministic controllers keep their lock-step contract.
+//!
+//! ## Residuals across membership epochs
+//!
+//! At every membership-epoch boundary the survivors adopt the resync
+//! mean and joiners restore the published bootstrap; a residual carried
+//! across that boundary would re-inject error measured against weights
+//! that no longer exist. [`WindowCodec::rebind`] therefore **zeroes the
+//! residual** at every transition (and joiners start zeroed), the same
+//! rule the engines apply to momentum — the pending error of the old
+//! epoch is dropped, and the bit-identity invariant at epoch boundaries
+//! is untouched by compression.
+
+pub mod qsgd;
+pub mod topk;
+
+pub use qsgd::Qsgd;
+pub use topk::{topk_k, TopK};
+
+use anyhow::{bail, Result};
+
+/// Fixed control-plane elements on each posted window: `[mean per-step
+/// t_C of the window, last observed t_AR]`. On the dense path they are
+/// summed into cross-rank means by the all-reduce; on the sparse path
+/// every rank's pair arrives verbatim in its gathered segment.
+pub const CTRL_BASE_SLOTS: usize = 2;
+
+/// Total dense-path piggyback width: the two mean slots plus one
+/// slot-offset element per member carrying that member's own t_C
+/// (everyone else contributes zero there, so the sum *is* the
+/// per-member value).
+pub fn ctrl_slots(world: usize) -> usize {
+    CTRL_BASE_SLOTS + world
+}
+
+/// How a compressed window travels through the rendezvous substrate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Dense payload, summed elementwise by the substrate; the *priced*
+    /// wire volume may be smaller than the payload (quantization).
+    DenseReduce,
+    /// Per-rank sparse segment, concatenated by an all-gather round;
+    /// the codec rebuilds the dense aggregate by scatter-add.
+    SparseGather,
+}
+
+/// Which compressor a run uses (the `[compress]` config enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompressorKind {
+    /// Identity: the uncompressed engine path, bit-for-bit.
+    #[default]
+    None,
+    /// Error-feedback top-k sparsification (sparse all-gather payload).
+    TopK,
+    /// Error-feedback stochastic quantization (dense reduce payload).
+    Qsgd,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "dense" => CompressorKind::None,
+            "topk" | "top-k" | "top_k" => CompressorKind::TopK,
+            "qsgd" | "quant" | "quantized" => CompressorKind::Qsgd,
+            other => bail!("unknown compressor {other:?} (none | topk | qsgd)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::None => "none",
+            CompressorKind::TopK => "topk",
+            CompressorKind::Qsgd => "qsgd",
+        }
+    }
+}
+
+/// The `[compress]` table of an experiment config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressConfig {
+    pub kind: CompressorKind,
+    /// Top-k density: fraction of coordinates kept per window.
+    pub ratio: f32,
+    /// QSGD bits per element (sign + 2^(bits−1)−1 magnitude levels),
+    /// in 2..=16 — the f32 level arithmetic holds the one-level-step
+    /// error bound only up to 15-bit magnitudes.
+    pub bits: u32,
+    /// Bounds the `compress_coupled` policy moves the ratio within.
+    pub ratio_min: f32,
+    pub ratio_max: f32,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            kind: CompressorKind::None,
+            ratio: 0.05,
+            bits: 8,
+            ratio_min: 0.005,
+            ratio_max: 0.25,
+        }
+    }
+}
+
+impl CompressConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ratio > 0.0 && self.ratio <= 1.0) {
+            bail!("compress.ratio must be in (0, 1], got {}", self.ratio);
+        }
+        if !(2..=16).contains(&self.bits) {
+            bail!("compress.bits must be in 2..=16, got {}", self.bits);
+        }
+        if !(self.ratio_min > 0.0 && self.ratio_min <= self.ratio_max && self.ratio_max <= 1.0) {
+            bail!(
+                "compress ratio bounds must be 0 < ratio_min <= ratio_max <= 1, got [{}, {}]",
+                self.ratio_min,
+                self.ratio_max
+            );
+        }
+        Ok(())
+    }
+
+    /// Fresh compressor for one rank over an `n`-element gradient.
+    pub fn build(&self, n: usize, seed: u64, rank: usize) -> Box<dyn GradCompressor> {
+        match self.kind {
+            CompressorKind::None => Box::new(Identity::new(n)),
+            CompressorKind::TopK => Box::new(TopK::new(n, self.ratio)),
+            CompressorKind::Qsgd => Box::new(Qsgd::new(n, self.bits, seed, rank as u64)),
+        }
+    }
+
+    /// Per-rank wire payload in f32-equivalent elements (excluding the
+    /// control tail) at the configured operating point — the modelled
+    /// volume the benches and the `compress_coupled` pricing use.
+    pub fn wire_elems(&self, n: usize) -> usize {
+        match self.kind {
+            CompressorKind::None => n,
+            CompressorKind::TopK => 2 * topk_k(n, self.ratio),
+            CompressorKind::Qsgd => qsgd::qsgd_wire_elems(n, self.bits),
+        }
+    }
+}
+
+/// A gradient compressor with an error-feedback residual. One instance
+/// per rank; the residual buffer is rank-local state, never exchanged.
+pub trait GradCompressor: Send {
+    fn name(&self) -> &'static str;
+
+    /// How this compressor's payload travels (and is priced).
+    fn mode(&self) -> RoundMode;
+
+    /// Fold the residual into `delta`, compress, and update the
+    /// residual with this window's compression error. Writes the
+    /// **decompressed own contribution** (exactly what the decoded
+    /// aggregate will contain for this rank) into `own_out` and returns
+    /// the wire payload: the dense (possibly quantized) vector for
+    /// [`RoundMode::DenseReduce`], `[indices…, values…]` for
+    /// [`RoundMode::SparseGather`]. `tail_room` is extra capacity to
+    /// reserve past the payload (the codec appends the control tail in
+    /// place — the wire buffer must never reallocate for it).
+    fn compress(&mut self, delta: &[f32], own_out: &mut [f32], tail_room: usize) -> Vec<f32>;
+
+    /// Scatter one contributor's wire segment into the dense sum
+    /// (sparse mode only; dense payloads are summed by the substrate).
+    fn accumulate(&self, segment: &[f32], dense_sum: &mut [f32]);
+
+    /// Per-rank wire volume in f32-equivalent elements at the current
+    /// operating point (pricing only; excludes the control tail).
+    fn wire_elems(&self) -> usize;
+
+    /// The compression knob as a wire fraction: top-k density, bits/32
+    /// for QSGD, 1.0 for the identity.
+    fn ratio(&self) -> f32 {
+        1.0
+    }
+
+    /// Retune the operating point (the `compress_coupled` hook); no-op
+    /// where the knob does not apply.
+    fn set_ratio(&mut self, _ratio: f32) {}
+
+    /// Zero the residual (membership-epoch boundary, crash recovery,
+    /// joiner bootstrap).
+    fn reset(&mut self);
+
+    /// The current residual (tests / diagnostics).
+    fn residual(&self) -> &[f32];
+}
+
+/// The identity compressor: dense pass-through, no residual.
+#[derive(Debug)]
+pub struct Identity {
+    n: usize,
+    /// Kept empty-but-typed so `residual()` has something to hand back.
+    empty: Vec<f32>,
+}
+
+impl Identity {
+    pub fn new(n: usize) -> Self {
+        Identity { n, empty: Vec::new() }
+    }
+}
+
+impl GradCompressor for Identity {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn mode(&self) -> RoundMode {
+        RoundMode::DenseReduce
+    }
+
+    fn compress(&mut self, delta: &[f32], own_out: &mut [f32], tail_room: usize) -> Vec<f32> {
+        assert_eq!(delta.len(), self.n);
+        own_out.copy_from_slice(delta);
+        let mut wire = Vec::with_capacity(self.n + tail_room);
+        wire.extend_from_slice(delta);
+        wire
+    }
+
+    fn accumulate(&self, _segment: &[f32], _dense_sum: &mut [f32]) {
+        unreachable!("dense payloads are summed by the substrate");
+    }
+
+    fn wire_elems(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {}
+
+    fn residual(&self) -> &[f32] {
+        &self.empty
+    }
+}
+
+/// The cross-rank observations decoded from a completed round —
+/// identical on every rank (means of what every contributor posted),
+/// the controllers' determinism anchor.
+#[derive(Debug, Clone)]
+pub struct CtrlObs {
+    /// Cross-rank mean per-step compute time over the window (s).
+    pub t_compute: f64,
+    /// Cross-rank mean of the last observed collective latency (s).
+    pub t_allreduce: f64,
+    /// Per-member per-step compute time, in member (slot) order.
+    pub per_rank_t_c: Vec<f64>,
+}
+
+/// Engine-facing codec: one per worker. Owns the compressor (and its
+/// residual), the wire layout, and the control piggyback tail.
+pub struct WindowCodec {
+    n: usize,
+    slot: usize,
+    world: usize,
+    comp: Box<dyn GradCompressor>,
+}
+
+impl WindowCodec {
+    /// Build for one rank over an `n`-element gradient. Call
+    /// [`WindowCodec::rebind`] before the first window to set the
+    /// (slot, world) view.
+    pub fn new(cfg: &CompressConfig, n: usize, seed: u64, rank: usize) -> Self {
+        WindowCodec { n, slot: 0, world: 1, comp: cfg.build(n, seed, rank) }
+    }
+
+    /// Adopt a (slot, world) view — at launch and at every
+    /// membership-epoch transition. Zeroes the residual: the error
+    /// pending against the old epoch's weights must not leak into the
+    /// new epoch (see the module docs).
+    pub fn rebind(&mut self, slot: usize, world: usize) {
+        self.slot = slot;
+        self.world = world.max(1);
+        self.comp.reset();
+    }
+
+    /// Zero the residual without changing the membership view (crash
+    /// recovery restores snapshot weights the residual predates).
+    pub fn reset_residual(&mut self) {
+        self.comp.reset();
+    }
+
+    pub fn mode(&self) -> RoundMode {
+        self.comp.mode()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.comp.name()
+    }
+
+    pub fn ratio(&self) -> f32 {
+        self.comp.ratio()
+    }
+
+    pub fn set_ratio(&mut self, ratio: f32) {
+        self.comp.set_ratio(ratio);
+    }
+
+    /// Per-rank wire volume in f32-equivalent elements **including**
+    /// the control tail — what the posted round is priced at.
+    pub fn wire_elems(&self) -> usize {
+        match self.mode() {
+            RoundMode::DenseReduce => self.comp.wire_elems() + ctrl_slots(self.world),
+            RoundMode::SparseGather => self.comp.wire_elems() + CTRL_BASE_SLOTS,
+        }
+    }
+
+    /// Per-rank wire volume in bytes (the metrics export).
+    pub fn wire_bytes(&self) -> f64 {
+        self.wire_elems() as f64 * 4.0
+    }
+
+    /// Compress `delta` (folding the residual) and append the control
+    /// tail. `own_out` receives the decompressed own contribution — the
+    /// engine's Eq. 9 reference for `D_i = Σq/N − q_i`.
+    pub fn encode(&mut self, delta: &[f32], t_c: f64, t_ar: f64, own_out: &mut [f32]) -> Vec<f32> {
+        let tail_room = match self.mode() {
+            RoundMode::DenseReduce => ctrl_slots(self.world),
+            RoundMode::SparseGather => CTRL_BASE_SLOTS,
+        };
+        let mut wire = self.comp.compress(delta, own_out, tail_room);
+        wire.push(t_c as f32);
+        wire.push(t_ar as f32);
+        if self.mode() == RoundMode::DenseReduce {
+            for s in 0..self.world {
+                wire.push(if s == self.slot { t_c as f32 } else { 0.0 });
+            }
+        }
+        wire
+    }
+
+    /// Decode a completed round: rebuild the dense aggregate into
+    /// `dense_sum` and return the cross-rank observations. Pure
+    /// function of (payload, contributor count) — identical on every
+    /// rank by construction.
+    pub fn decode(&self, payload: &[f32], n_contrib: usize, dense_sum: &mut [f32]) -> CtrlObs {
+        assert!(n_contrib >= 1, "round decoded with no contributors");
+        assert_eq!(dense_sum.len(), self.n);
+        match self.mode() {
+            RoundMode::DenseReduce => {
+                let slots = ctrl_slots(self.world);
+                assert_eq!(payload.len(), self.n + slots, "dense payload width mismatch");
+                dense_sum.copy_from_slice(&payload[..self.n]);
+                let tail = &payload[self.n..self.n + slots];
+                let inv_n = 1.0 / n_contrib as f64;
+                CtrlObs {
+                    t_compute: tail[0] as f64 * inv_n,
+                    t_allreduce: tail[1] as f64 * inv_n,
+                    per_rank_t_c: tail[CTRL_BASE_SLOTS..].iter().map(|x| *x as f64).collect(),
+                }
+            }
+            RoundMode::SparseGather => {
+                assert_eq!(payload.len() % n_contrib, 0, "ragged sparse round");
+                let seg = payload.len() / n_contrib;
+                assert!(seg > CTRL_BASE_SLOTS, "sparse segment too short");
+                dense_sum.iter_mut().for_each(|x| *x = 0.0);
+                let mut t_c_sum = 0.0f64;
+                let mut t_ar_sum = 0.0f64;
+                let mut per_rank = Vec::with_capacity(n_contrib);
+                for s in payload.chunks_exact(seg) {
+                    self.comp.accumulate(&s[..seg - CTRL_BASE_SLOTS], dense_sum);
+                    let t_c = s[seg - 2] as f64;
+                    t_c_sum += t_c;
+                    t_ar_sum += s[seg - 1] as f64;
+                    per_rank.push(t_c);
+                }
+                let inv_n = 1.0 / n_contrib as f64;
+                CtrlObs {
+                    t_compute: t_c_sum * inv_n,
+                    t_allreduce: t_ar_sum * inv_n,
+                    per_rank_t_c: per_rank,
+                }
+            }
+        }
+    }
+
+    /// The residual (tests / diagnostics).
+    pub fn residual(&self) -> &[f32] {
+        self.comp.residual()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [CompressorKind::None, CompressorKind::TopK, CompressorKind::Qsgd] {
+            assert_eq!(CompressorKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(CompressorKind::parse("Top-K").unwrap(), CompressorKind::TopK);
+        assert!(CompressorKind::parse("zip").is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        CompressConfig::default().validate().unwrap();
+        let mut c = CompressConfig { ratio: 0.0, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.ratio = 0.1;
+        c.bits = 1;
+        assert!(c.validate().is_err());
+        c.bits = 17; // past the f32-exact level range
+        assert!(c.validate().is_err());
+        c.bits = 8;
+        c.ratio_min = 0.5;
+        c.ratio_max = 0.25;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn identity_codec_matches_legacy_wire_layout() {
+        // kind = none must reproduce the pre-compression payload
+        // bit-for-bit: [delta, mean t_C, last t_AR, slot offsets].
+        let cfg = CompressConfig::default();
+        let mut codec = WindowCodec::new(&cfg, 3, 0, 1);
+        codec.rebind(1, 4);
+        let delta = [1.0f32, -2.0, 3.0];
+        let mut own = [0.0f32; 3];
+        let wire = codec.encode(&delta, 0.25, 0.5, &mut own);
+        assert_eq!(own, delta);
+        assert_eq!(
+            wire,
+            vec![1.0, -2.0, 3.0, 0.25, 0.5, 0.0, 0.25, 0.0, 0.0],
+            "identity wire layout drifted from the legacy piggyback"
+        );
+        assert_eq!(codec.wire_elems(), 3 + ctrl_slots(4));
+    }
+
+    #[test]
+    fn identity_decode_matches_legacy_observation_math() {
+        let cfg = CompressConfig::default();
+        let mut codec = WindowCodec::new(&cfg, 2, 0, 0);
+        codec.rebind(0, 2);
+        // simulated all-reduced payload from 2 ranks
+        let payload = [3.0f32, 4.0, 0.6, 0.2, 0.1, 0.5];
+        let mut sum = [0.0f32; 2];
+        let obs = codec.decode(&payload, 2, &mut sum);
+        assert_eq!(sum, [3.0, 4.0]);
+        assert!((obs.t_compute - 0.3).abs() < 1e-6);
+        assert!((obs.t_allreduce - 0.1).abs() < 1e-6);
+        assert_eq!(obs.per_rank_t_c, vec![0.1f32 as f64, 0.5f32 as f64]);
+    }
+
+    #[test]
+    fn sparse_decode_rebuilds_sum_and_observations() {
+        let cfg = CompressConfig { kind: CompressorKind::TopK, ratio: 0.5, ..Default::default() };
+        let mut codec = WindowCodec::new(&cfg, 4, 0, 0);
+        codec.rebind(0, 2);
+        // two contributor segments, k = 2: [idx, idx, val, val, t_c, t_ar]
+        // rank 0 contributes {0: 10, 2: 20}; rank 1 contributes {1: 5, 2: 7}
+        let mut payload = vec![0.0f32, 2.0, 10.0, 20.0, 0.1, 1.0];
+        payload.extend_from_slice(&[1.0, 2.0, 5.0, 7.0, 0.3, 3.0]);
+        let mut sum = [0.0f32; 4];
+        let obs = codec.decode(&payload, 2, &mut sum);
+        assert_eq!(sum, [10.0, 5.0, 27.0, 0.0]);
+        assert!((obs.t_compute - 0.2).abs() < 1e-7);
+        assert!((obs.t_allreduce - 2.0).abs() < 1e-7);
+        assert_eq!(obs.per_rank_t_c.len(), 2);
+    }
+
+    #[test]
+    fn rebind_resets_residual() {
+        let cfg = CompressConfig { kind: CompressorKind::TopK, ratio: 0.25, ..Default::default() };
+        let mut codec = WindowCodec::new(&cfg, 8, 0, 0);
+        codec.rebind(0, 2);
+        let delta: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let mut own = [0.0f32; 8];
+        codec.encode(&delta, 0.0, 0.0, &mut own);
+        assert!(codec.residual().iter().any(|&x| x != 0.0), "top-k must leave a residual");
+        codec.rebind(0, 3);
+        assert!(codec.residual().iter().all(|&x| x == 0.0), "rebind must zero the residual");
+    }
+
+    #[test]
+    fn configured_wire_elems_match_kinds() {
+        let n = 1000;
+        let none = CompressConfig::default();
+        assert_eq!(none.wire_elems(n), n);
+        let topk = CompressConfig { kind: CompressorKind::TopK, ratio: 0.1, ..Default::default() };
+        assert_eq!(topk.wire_elems(n), 200);
+        let q8 = CompressConfig { kind: CompressorKind::Qsgd, bits: 8, ..Default::default() };
+        assert_eq!(q8.wire_elems(n), 251); // ceil(1000·8/32) + scale
+    }
+}

@@ -1,0 +1,200 @@
+//! Error-feedback stochastic quantization (QSGD, Alistarh et al.).
+//!
+//! Each window the residual-corrected update `v = Δw + e` is quantized
+//! against its max-norm: with `s = max|v|` and `L = 2^(bits−1) − 1`
+//! magnitude levels, every coordinate becomes
+//! `q_i = sign(v_i) · s · l_i / L` where `l_i` rounds `|v_i|/s · L`
+//! **stochastically** — up with probability equal to the fractional
+//! part — so the quantizer is unbiased (E[q] = v) and the residual
+//! `e' = v − q` only has to carry the variance, not a systematic bias.
+//!
+//! The quantized values are exact f32s, so the payload still rides the
+//! dense all-reduce (sums of quantized values are ordinary sums); what
+//! shrinks is the **wire volume the round is priced at**: `bits` bits
+//! per element plus one f32 scale, i.e. `⌈n·bits/32⌉ + 1`
+//! f32-equivalents instead of `n`.
+//!
+//! Determinism: the rounding draws come from a counter-based RNG keyed
+//! `(seed, rank, window)` — a pure function of the run config, so two
+//! identical runs quantize identically, and each rank's stream is
+//! independent. The *aggregate* stays deterministic because the
+//! substrate reduces contributions in rank order, exactly as for dense
+//! payloads.
+//!
+//! `bits` is capped at 16: the level arithmetic runs in f32, where
+//! `|v|/s·L` is exact to well under half a level for L ≤ 2¹⁵ − 1;
+//! wider levels would let f32 rounding exceed the documented
+//! one-level-step error bound (and 16-bit quantization already halves
+//! the wire — past that, run dense).
+
+use crate::util::Rng;
+
+use super::{GradCompressor, RoundMode};
+
+/// Priced wire volume of an `n`-element QSGD payload, in f32-equivalent
+/// elements: `bits` bits per element plus the f32 scale.
+pub fn qsgd_wire_elems(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(32) + 1
+}
+
+/// Error-feedback stochastic quantizer (one per rank).
+#[derive(Debug)]
+pub struct Qsgd {
+    n: usize,
+    bits: u32,
+    residual: Vec<f32>,
+    seed: u64,
+    rank: u64,
+    window: u64,
+}
+
+impl Qsgd {
+    pub fn new(n: usize, bits: u32, seed: u64, rank: u64) -> Self {
+        assert!((2..=16).contains(&bits), "qsgd bits must be in 2..=16 (f32 level arithmetic)");
+        Qsgd { n, bits, residual: vec![0.0; n], seed, rank, window: 0 }
+    }
+
+    /// Magnitude levels: sign bit + (bits−1)-bit magnitude.
+    fn levels(&self) -> f32 {
+        ((1u64 << (self.bits - 1)) - 1) as f32
+    }
+}
+
+impl GradCompressor for Qsgd {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn mode(&self) -> RoundMode {
+        RoundMode::DenseReduce
+    }
+
+    fn compress(&mut self, delta: &[f32], own_out: &mut [f32], tail_room: usize) -> Vec<f32> {
+        assert_eq!(delta.len(), self.n);
+        assert_eq!(own_out.len(), self.n);
+        let mut rng = Rng::keyed(self.seed ^ 0xC0DEC, self.rank, self.window);
+        self.window += 1;
+        let lvl = self.levels();
+        let mut s = 0.0f32;
+        for i in 0..self.n {
+            let v = delta[i] + self.residual[i];
+            self.residual[i] = v; // hold v; becomes v − q below
+            s = s.max(v.abs());
+        }
+        let mut q = Vec::with_capacity(self.n + tail_room);
+        if s == 0.0 || !s.is_finite() {
+            // Nothing to quantize (or a non-finite input the training
+            // loop will catch): ship zeros, keep v in the residual.
+            own_out.iter_mut().for_each(|x| *x = 0.0);
+            q.resize(self.n, 0.0);
+            return q;
+        }
+        for i in 0..self.n {
+            let v = self.residual[i];
+            let p = v.abs() / s * lvl;
+            let mut l = p.floor();
+            if (rng.uniform() as f32) < p - l {
+                l += 1.0;
+            }
+            let qi = v.signum() * s * (l / lvl);
+            q.push(qi);
+            own_out[i] = qi;
+            self.residual[i] = v - qi;
+        }
+        q
+    }
+
+    fn accumulate(&self, _segment: &[f32], _dense_sum: &mut [f32]) {
+        unreachable!("dense payloads are summed by the substrate");
+    }
+
+    fn wire_elems(&self) -> usize {
+        qsgd_wire_elems(self.n, self.bits)
+    }
+
+    fn ratio(&self) -> f32 {
+        self.bits as f32 / 32.0
+    }
+
+    fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_elems_formula() {
+        assert_eq!(qsgd_wire_elems(1000, 8), 251);
+        assert_eq!(qsgd_wire_elems(1000, 4), 126);
+        assert_eq!(qsgd_wire_elems(1000, 16), 501);
+        assert_eq!(qsgd_wire_elems(0, 8), 1);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_one_level() {
+        let mut c = Qsgd::new(256, 8, 1, 0);
+        let mut rng = Rng::new(3);
+        let mut delta = vec![0.0f32; 256];
+        rng.fill_normal(&mut delta);
+        let mut own = vec![0.0f32; 256];
+        c.compress(&delta, &mut own, 0);
+        let s = delta.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let step = s / c.levels();
+        for i in 0..256 {
+            // first window: v == delta (zero residual)
+            assert!(
+                (own[i] - delta[i]).abs() <= step * 1.0001,
+                "elem {i}: |q − v| = {} > level step {step}",
+                (own[i] - delta[i]).abs()
+            );
+            assert!(
+                (own[i] + c.residual()[i] - delta[i]).abs() <= 1e-6 * s,
+                "q + e must reconstruct v (elem {i})"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_run_distinct_per_rank() {
+        let mut delta = vec![0.0f32; 64];
+        Rng::new(9).fill_normal(&mut delta);
+        let run = |rank: u64| {
+            let mut c = Qsgd::new(64, 4, 42, rank);
+            let mut own = vec![0.0f32; 64];
+            c.compress(&delta, &mut own, 0);
+            own
+        };
+        assert_eq!(run(0), run(0), "same (seed, rank, window) must quantize identically");
+        assert_ne!(run(0), run(1), "ranks must draw independent rounding streams");
+    }
+
+    #[test]
+    fn zero_input_ships_zeros() {
+        let mut c = Qsgd::new(8, 8, 0, 0);
+        let mut own = [1.0f32; 8];
+        let wire = c.compress(&[0.0; 8], &mut own, 0);
+        assert!(wire.iter().all(|&x| x == 0.0));
+        assert!(own.iter().all(|&x| x == 0.0));
+        assert!(c.residual().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn residual_feeds_back() {
+        // A value below half a level quantizes to 0 but persists in the
+        // residual until it accumulates past the rounding threshold (in
+        // expectation); with error feedback it cannot be lost.
+        let mut c = Qsgd::new(2, 8, 7, 0);
+        let mut own = [0.0f32; 2];
+        c.compress(&[1.0, 0.001], &mut own, 0);
+        let e = c.residual()[1];
+        // q[1] + e[1] == 0.001 up to f32 rounding
+        assert!((own[1] + e - 0.001).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,222 @@
+//! Error-feedback top-k sparsification.
+//!
+//! Keep the k = ⌈ratio·n⌉ largest-magnitude coordinates of the
+//! residual-corrected window update; everything dropped goes back into
+//! the residual, so the error telescopes across windows: with
+//! `v_t = g_t + e_{t−1}`, `q_t = C(v_t)`, `e_t = v_t − q_t`, the
+//! per-window identity `q_t + e_t = v_t` holds **bitwise** (every
+//! coordinate of `q_t` is either `v_t[i]` or 0, and the residual is the
+//! complementary mask — no rounding anywhere), which is what the
+//! proptests pin.
+//!
+//! Selection is a pure function of the input: coordinates are ranked by
+//! (|v| descending, index ascending) — a total order, so ties resolve
+//! identically on every rank and every run. At `ratio = 1.0` the
+//! compressor is the identity (all coordinates selected, residual
+//! stays zero), and the scatter-add decode reproduces the dense
+//! rank-order reduction bit-for-bit.
+//!
+//! Wire format: `[idx_0 … idx_{k−1}, val_0 … val_{k−1}]` with indices
+//! stored as exactly-representable f32s (asserted `n < 2^24`), indices
+//! ascending. The payload rides a rendezvous **all-gather** round: each
+//! rank injects O(k), and the decode accumulates segments in contributor
+//! rank order — the same per-element addition order as the dense
+//! reduction, hence bit-identical sums at ratio 1.0.
+
+use super::{GradCompressor, RoundMode};
+
+/// Number of kept coordinates for an `n`-element gradient at `ratio`.
+pub fn topk_k(n: usize, ratio: f32) -> usize {
+    ((ratio as f64 * n as f64).ceil() as usize).clamp(1, n.max(1))
+}
+
+/// Error-feedback top-k compressor (one per rank).
+#[derive(Debug)]
+pub struct TopK {
+    n: usize,
+    ratio: f32,
+    residual: Vec<f32>,
+    /// Scratch: residual-corrected input of the current window.
+    v: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(n: usize, ratio: f32) -> Self {
+        assert!(n < (1 << 24), "top-k indices ride as exact f32s: n must be < 2^24");
+        assert!(ratio > 0.0 && ratio <= 1.0, "top-k ratio must be in (0, 1]");
+        TopK { n, ratio, residual: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub fn k(&self) -> usize {
+        topk_k(self.n, self.ratio)
+    }
+
+    /// One window: fold the residual, select, and split `v` into the
+    /// kept (indices, values) and the new residual. Exposed for the
+    /// golden-fixture test; the trait wraps it into the wire format.
+    pub fn compress_window(&mut self, delta: &[f32]) -> (Vec<u32>, Vec<f32>) {
+        assert_eq!(delta.len(), self.n);
+        for ((v, d), e) in self.v.iter_mut().zip(delta).zip(&self.residual) {
+            *v = d + e;
+        }
+        let k = self.k();
+        let mut idx: Vec<u32> = (0..self.n as u32).collect();
+        if k < self.n {
+            let v = &self.v;
+            // Total order: |v| descending, index ascending — the
+            // deterministic selection every rank agrees on.
+            let cmp = |&a: &u32, &b: &u32| {
+                v[b as usize].abs().total_cmp(&v[a as usize].abs()).then(a.cmp(&b))
+            };
+            idx.select_nth_unstable_by(k - 1, cmp);
+            idx.truncate(k);
+            idx.sort_unstable();
+        }
+        let vals: Vec<f32> = idx.iter().map(|&i| self.v[i as usize]).collect();
+        // Residual = the complementary mask: exact, no rounding.
+        self.residual.copy_from_slice(&self.v);
+        for &i in &idx {
+            self.residual[i as usize] = 0.0;
+        }
+        (idx, vals)
+    }
+}
+
+impl GradCompressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn mode(&self) -> RoundMode {
+        RoundMode::SparseGather
+    }
+
+    fn compress(&mut self, delta: &[f32], own_out: &mut [f32], tail_room: usize) -> Vec<f32> {
+        assert_eq!(own_out.len(), self.n);
+        let (idx, vals) = self.compress_window(delta);
+        own_out.iter_mut().for_each(|x| *x = 0.0);
+        for (j, &i) in idx.iter().enumerate() {
+            own_out[i as usize] = vals[j];
+        }
+        let mut wire = Vec::with_capacity(2 * idx.len() + tail_room);
+        wire.extend(idx.iter().map(|&i| i as f32));
+        wire.extend_from_slice(&vals);
+        wire
+    }
+
+    fn accumulate(&self, segment: &[f32], dense_sum: &mut [f32]) {
+        assert_eq!(segment.len() % 2, 0, "sparse segment must be [indices…, values…]");
+        let k = segment.len() / 2;
+        for j in 0..k {
+            let i = segment[j] as usize;
+            dense_sum[i] += segment[k + j];
+        }
+    }
+
+    fn wire_elems(&self) -> usize {
+        2 * self.k()
+    }
+
+    fn ratio(&self) -> f32 {
+        self.ratio
+    }
+
+    fn set_ratio(&mut self, ratio: f32) {
+        self.ratio = ratio.clamp(f32::MIN_POSITIVE, 1.0);
+    }
+
+    fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_of_ratio() {
+        assert_eq!(topk_k(100, 0.1), 10);
+        assert_eq!(topk_k(100, 1.0), 100);
+        assert_eq!(topk_k(100, 0.001), 1); // never zero
+        assert_eq!(topk_k(7, 0.5), 4); // ceil
+    }
+
+    #[test]
+    fn selects_largest_magnitudes_with_exact_residual() {
+        let mut c = TopK::new(6, 0.34); // k = ceil(2.04) = 3
+        let delta = [1.0f32, -5.0, 0.5, 4.0, -0.25, 2.0];
+        let (idx, vals) = c.compress_window(&delta);
+        assert_eq!(idx, vec![1, 3, 5]);
+        assert_eq!(vals, vec![-5.0, 4.0, 2.0]);
+        assert_eq!(c.residual(), &[1.0, 0.0, 0.5, 0.0, -0.25, 0.0]);
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_index() {
+        let mut c = TopK::new(4, 0.5); // k = 2
+        let (idx, _) = c.compress_window(&[2.0, -2.0, 2.0, -2.0]);
+        assert_eq!(idx, vec![0, 1], "equal magnitudes must keep the lowest indices");
+    }
+
+    #[test]
+    fn error_feedback_folds_into_next_window() {
+        let mut c = TopK::new(4, 0.25); // k = 1
+        c.compress_window(&[1.0, 3.0, -2.0, 0.5]); // keeps idx 1; e = [1, 0, -2, 0.5]
+        // next window: v = delta + e = [2, 0, -4, 1] -> keeps idx 2
+        let (idx, vals) = c.compress_window(&[1.0, 0.0, -2.0, 0.5]);
+        assert_eq!(idx, vec![2]);
+        assert_eq!(vals, vec![-4.0]);
+        assert_eq!(c.residual(), &[2.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn ratio_one_is_identity() {
+        let mut c = TopK::new(5, 1.0);
+        let delta = [0.5f32, -1.5, 0.0, 2.5, -3.5];
+        let mut own = [0.0f32; 5];
+        let wire = c.compress(&delta, &mut own, 0);
+        assert_eq!(own, delta);
+        assert!(c.residual().iter().all(|&x| x == 0.0));
+        // scatter-add of the full wire reproduces the dense vector
+        let mut sum = [0.0f32; 5];
+        c.accumulate(&wire, &mut sum);
+        assert_eq!(sum, delta);
+    }
+
+    #[test]
+    fn per_window_identity_is_bitwise() {
+        // q + e == v bit-for-bit: selection masks, never rounds.
+        let mut c = TopK::new(64, 0.1);
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..5 {
+            let mut delta = vec![0.0f32; 64];
+            rng.fill_normal(&mut delta);
+            let before: Vec<f32> = c.residual().to_vec();
+            let mut own = vec![0.0f32; 64];
+            c.compress(&delta, &mut own, 0);
+            for i in 0..64 {
+                let v = delta[i] + before[i];
+                let q_plus_e = own[i] + c.residual()[i];
+                // bitwise, modulo the sign of zero
+                assert!(
+                    v.to_bits() == q_plus_e.to_bits() || (v == 0.0 && q_plus_e == 0.0),
+                    "elem {i}: {v} vs {q_plus_e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn set_ratio_moves_k() {
+        let mut c = TopK::new(100, 0.1);
+        assert_eq!(c.k(), 10);
+        c.set_ratio(0.05);
+        assert_eq!(c.k(), 5);
+        assert_eq!(c.wire_elems(), 10);
+    }
+}

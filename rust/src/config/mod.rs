@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algo::Algo;
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use crate::compress::{CompressConfig, CompressorKind};
 use crate::control::{ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent};
 use crate::simtime::ComputeModel;
 
@@ -84,6 +85,11 @@ pub struct ExperimentConfig {
     /// (the `[control]` TOML table; see [`crate::control`]).
     pub control: ControlConfig,
 
+    // --- gradient compression ---
+    /// Error-feedback gradient compression (the `[compress]` TOML
+    /// table; see [`crate::compress`]). Default: off.
+    pub compress: CompressConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -127,6 +133,7 @@ impl ExperimentConfig {
             compute: ComputeModel::default(),
             time_from_wall: false,
             control: ControlConfig::default(),
+            compress: CompressConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -299,6 +306,20 @@ impl ExperimentConfig {
                 "control.snapshot_every" => {
                     cfg.control.snapshot_every = val.as_i64().ok_or_else(err)? as u64
                 }
+                "control.join_warmup_windows" => {
+                    cfg.control.join_warmup_windows = val.as_i64().ok_or_else(err)? as u64
+                }
+                "compress.kind" => {
+                    cfg.compress.kind = CompressorKind::parse(val.as_str().ok_or_else(err)?)?
+                }
+                "compress.ratio" => cfg.compress.ratio = val.as_f64().ok_or_else(err)? as f32,
+                "compress.bits" => cfg.compress.bits = val.as_i64().ok_or_else(err)? as u32,
+                "compress.ratio_min" => {
+                    cfg.compress.ratio_min = val.as_f64().ok_or_else(err)? as f32
+                }
+                "compress.ratio_max" => {
+                    cfg.compress.ratio_max = val.as_f64().ok_or_else(err)? as f32
+                }
                 "control.fault_rank" => fault_rank = Some(val.as_i64().ok_or_else(err)? as usize),
                 "control.fault_at_s" => fault_at_s = Some(val.as_f64().ok_or_else(err)?),
                 "control.fault_kind" => {
@@ -416,6 +437,14 @@ impl ExperimentConfig {
             bail!("warmup_stop_frac must not exceed warmup_frac");
         }
         self.control.validate()?;
+        self.compress.validate()?;
+        if self.compress.kind != CompressorKind::None && !self.algo.is_decentralized() {
+            bail!(
+                "gradient compression rides the decentralized all-reduce engines \
+                 (ssgd | s3gd | dcs3gd), got {}",
+                self.algo.name()
+            );
+        }
         // Membership events: joins are fresh rank ids above the initial
         // world (departed ids are retired, like replaced machines), and
         // faults may target any rank the run can ever hold.
@@ -678,6 +707,28 @@ impl ConfigBuilder {
         self.cfg.control.joins.push(JoinEvent { rank, at_s });
         self
     }
+    /// Joiner LR warm-up length, in windows (0 = no ramp).
+    pub fn join_warmup(mut self, windows: u64) -> Self {
+        self.cfg.control.join_warmup_windows = windows;
+        self
+    }
+    /// Replace the whole `[compress]` table.
+    pub fn compress(mut self, v: CompressConfig) -> Self {
+        self.cfg.compress = v;
+        self
+    }
+    /// Error-feedback top-k compression at the given density.
+    pub fn compress_topk(mut self, ratio: f32) -> Self {
+        self.cfg.compress.kind = CompressorKind::TopK;
+        self.cfg.compress.ratio = ratio;
+        self
+    }
+    /// QSGD stochastic quantization at the given bit width.
+    pub fn compress_qsgd(mut self, bits: u32) -> Self {
+        self.cfg.compress.kind = CompressorKind::Qsgd;
+        self.cfg.compress.bits = bits;
+        self
+    }
     pub fn artifacts_root(mut self, v: impl Into<PathBuf>) -> Self {
         self.cfg.artifacts_root = v.into();
         self
@@ -914,6 +965,76 @@ mod tests {
         assert_eq!(cfg.control.schedule_hysteresis, 0.2);
         assert_eq!(cfg.control.straggler_factor, 2.0);
         assert_eq!(cfg.control.quarantine_after, 5);
+    }
+
+    #[test]
+    fn compress_table_parses() {
+        let doc = r#"
+            nodes = 4
+
+            [compress]
+            kind = "topk"
+            ratio = 0.02
+            ratio_min = 0.001
+            ratio_max = 0.5
+
+            [control]
+            policy = "compress_coupled"
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.compress.kind, CompressorKind::TopK);
+        assert_eq!(cfg.compress.ratio, 0.02);
+        assert_eq!(cfg.compress.ratio_min, 0.001);
+        assert_eq!(cfg.compress.ratio_max, 0.5);
+        assert_eq!(cfg.control.policy, ControlPolicy::CompressCoupled);
+        let qdoc = "[compress]\nkind = \"qsgd\"\nbits = 4";
+        let qcfg = ExperimentConfig::from_toml_str(qdoc).unwrap();
+        assert_eq!(qcfg.compress.kind, CompressorKind::Qsgd);
+        assert_eq!(qcfg.compress.bits, 4);
+    }
+
+    #[test]
+    fn bad_compress_configs_rejected() {
+        // ratio out of range
+        assert!(ExperimentConfig::from_toml_str("[compress]\nkind = \"topk\"\nratio = 1.5")
+            .is_err());
+        // bits out of range
+        assert!(
+            ExperimentConfig::from_toml_str("[compress]\nkind = \"qsgd\"\nbits = 1").is_err()
+        );
+        // unknown kind
+        assert!(ExperimentConfig::from_toml_str("[compress]\nkind = \"zip\"").is_err());
+        // compression needs a decentralized engine
+        assert!(ExperimentConfig::from_toml_str(
+            "algo = \"asgd\"\n[compress]\nkind = \"topk\""
+        )
+        .is_err());
+        // dense kind composes with any engine
+        ExperimentConfig::from_toml_str("algo = \"asgd\"\n[compress]\nkind = \"none\"").unwrap();
+    }
+
+    #[test]
+    fn join_warmup_parses_and_builds() {
+        let doc = r#"
+            nodes = 2
+
+            [control]
+            join_warmup_windows = 6
+
+            [[control.join]]
+            rank = 2
+            at_s = 1.0
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.control.join_warmup_windows, 6);
+        let built = ExperimentConfig::builder("linear")
+            .nodes(2)
+            .join(2, 1.0)
+            .join_warmup(3)
+            .compress_topk(0.1)
+            .build();
+        assert_eq!(built.control.join_warmup_windows, 3);
+        assert_eq!(built.compress.kind, CompressorKind::TopK);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //! exported through the metrics layer as JSON. Since PR 2 each record
 //! also carries the collective schedule the window ran on and the
 //! local/global split of its t_AR — the evidence trail for the
-//! schedule-coupled policy's decisions.
+//! schedule-coupled policy's decisions. Since the compression subsystem
+//! it also carries the compressor, the active ratio, and the achieved
+//! per-rank wire bytes of the round — the (k, schedule, ratio) decision
+//! trace the `compress_coupled` policy is judged by, aggregated into
+//! the run JSON's `"compress"` key.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -11,7 +15,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::metrics::CommPhaseSummary;
+use crate::metrics::{CommPhaseSummary, CompressSummary};
 use crate::util::Json;
 
 /// One control-plane decision / event.
@@ -41,6 +45,15 @@ pub struct ControlRecord {
     /// Time this worker spent blocked in the wait (s) — the straggler
     /// signal.
     pub blocked_s: f64,
+    /// Compressor the window's payload rode (None for records without
+    /// a collective, e.g. kill/recovery events).
+    pub compress: Option<String>,
+    /// Compression knob as a wire fraction in force for the round:
+    /// top-k density, bits/32 for QSGD, 1.0 dense.
+    pub compress_ratio: f64,
+    /// Achieved per-rank wire payload of the round, in bytes (0 for
+    /// records without a collective).
+    pub wire_bytes: f64,
     /// Fault / recovery / quarantine annotation, if any.
     pub event: Option<String>,
 }
@@ -73,6 +86,9 @@ impl ControlRecord {
         m.insert("t_ar_local".into(), num(self.t_ar_local));
         m.insert("t_ar_global".into(), num(self.t_ar_global));
         m.insert("blocked_s".into(), num(self.blocked_s));
+        m.insert("compress".into(), opt_str(&self.compress));
+        m.insert("compress_ratio".into(), num(self.compress_ratio));
+        m.insert("wire_bytes".into(), num(self.wire_bytes));
         m.insert("event".into(), opt_str(&self.event));
         Json::Obj(m)
     }
@@ -147,6 +163,31 @@ impl ControlLog {
         s
     }
 
+    /// Aggregate compression accounting over the decision trace
+    /// (records carrying a collective), exported under the run JSON's
+    /// `"compress"` key.
+    pub fn compress_summary(&self) -> CompressSummary {
+        let records = self.records();
+        let mut s = CompressSummary::default();
+        let mut prev_ratio: Option<f64> = None;
+        for r in &records {
+            if r.schedule.is_none() {
+                continue;
+            }
+            s.rounds += 1;
+            s.wire_bytes_total += r.wire_bytes;
+            if let Some(name) = r.compress.as_deref() {
+                s.kind = name.to_string();
+            }
+            if prev_ratio.is_some_and(|p| p != r.compress_ratio) {
+                s.ratio_changes += 1;
+            }
+            prev_ratio = Some(r.compress_ratio);
+            s.final_ratio = r.compress_ratio;
+        }
+        s
+    }
+
     /// The decision trace as a JSON array (the `control` key of the run's
     /// metrics JSON).
     pub fn to_json(&self) -> Json {
@@ -177,6 +218,9 @@ mod tests {
             t_ar_local: 1.5e-3,
             t_ar_global: 0.5e-3,
             blocked_s: 0.0,
+            compress: event.is_none().then(|| "none".to_string()),
+            compress_ratio: 1.0,
+            wire_bytes: 4000.0,
             event: event.map(String::from),
         }
     }
@@ -209,6 +253,25 @@ mod tests {
         assert!((s.local_s - 3e-3).abs() < 1e-12);
         assert!((s.global_s - 1e-3).abs() < 1e-12);
         assert_eq!(s.schedule_switches, 1);
+    }
+
+    #[test]
+    fn compress_summary_tracks_ratio_and_bytes() {
+        let log = ControlLog::new();
+        log.record(rec(0, 0, 1, None)); // ratio 1.0, 4000 B
+        let mut tk = rec(0, 2, 1, None);
+        tk.compress = Some("topk".into());
+        tk.compress_ratio = 0.1;
+        tk.wire_bytes = 800.0;
+        log.record(tk);
+        log.record(rec(0, 4, 1, Some("kill"))); // no collective: not counted
+        let s = log.compress_summary();
+        assert_eq!(s.rounds, 2);
+        assert!((s.wire_bytes_total - 4800.0).abs() < 1e-9);
+        assert_eq!(s.ratio_changes, 1);
+        assert_eq!(s.final_ratio, 0.1);
+        assert_eq!(s.kind, "topk");
+        assert!(Json::parse(&s.to_json().to_string()).is_ok());
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //! closes the loop:
 //!
 //! * [`staleness`] — the [`StalenessController`] policies ([`Fixed`],
-//!   [`DssPid`], [`LambdaCoupled`], [`ScheduleCoupled`]) that adapt k,
-//!   λ0 and the collective schedule from observed t_C / t_AR, and
-//!   quarantine persistent stragglers inside their dragonfly group,
-//!   consulted by the engines at every wait/post boundary.
+//!   [`DssPid`], [`LambdaCoupled`], [`ScheduleCoupled`],
+//!   [`CompressCoupled`]) that adapt k, λ0, the collective schedule and
+//!   the compression ratio from observed t_C / t_AR, and quarantine
+//!   persistent stragglers inside their dragonfly group, consulted by
+//!   the engines at every wait/post boundary.
 //! * [`chaos`] — the [`FaultPlan`] / [`ChaosInjector`] that script
 //!   kills, slowdowns and stalls in virtual time, with heartbeat
 //!   detection ([`HeartbeatBoard`]) and checkpoint recovery
@@ -49,8 +50,8 @@ pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard,
 pub use log::{ControlLog, ControlRecord};
 pub use membership::{param_crc, EpochRecord, EpochTrace, JoinEvent, MembershipLog};
 pub use staleness::{
-    Decision, DssPid, Fixed, LambdaCoupled, Quarantine, ScheduleCoupled, ScheduleEnv,
-    StalenessController, WindowObs,
+    CompressCoupled, Decision, DssPid, Fixed, LambdaCoupled, Quarantine, ScheduleCoupled,
+    ScheduleEnv, StalenessController, WindowObs,
 };
 
 use anyhow::{bail, Result};
@@ -70,6 +71,10 @@ pub enum ControlPolicy {
     /// schedule selection (flat ring vs hierarchical dragonfly) and
     /// group-local straggler quarantine.
     ScheduleCoupled,
+    /// [`ControlPolicy::ScheduleCoupled`] plus per-window compression
+    /// ratio selection, with the schedule candidates priced at the
+    /// compressed wire volume.
+    CompressCoupled,
 }
 
 impl ControlPolicy {
@@ -81,9 +86,12 @@ impl ControlPolicy {
             "schedule_coupled" | "schedule-coupled" | "schedulecoupled" => {
                 ControlPolicy::ScheduleCoupled
             }
+            "compress_coupled" | "compress-coupled" | "compresscoupled" => {
+                ControlPolicy::CompressCoupled
+            }
             other => bail!(
                 "unknown control policy {other:?} \
-                 (fixed | dss_pid | lambda_coupled | schedule_coupled)"
+                 (fixed | dss_pid | lambda_coupled | schedule_coupled | compress_coupled)"
             ),
         })
     }
@@ -94,6 +102,7 @@ impl ControlPolicy {
             ControlPolicy::DssPid => "dss_pid",
             ControlPolicy::LambdaCoupled => "lambda_coupled",
             ControlPolicy::ScheduleCoupled => "schedule_coupled",
+            ControlPolicy::CompressCoupled => "compress_coupled",
         }
     }
 }
@@ -136,6 +145,11 @@ pub struct ControlConfig {
     /// a membership-epoch boundary once the shared virtual time
     /// reaches their `at_s`.
     pub joins: Vec<JoinEvent>,
+    /// LR warm-up ramp for joiners: a rank bootstrapping from the epoch
+    /// checkpoint (zeroed momentum and compression residuals) runs its
+    /// first windows at a linearly ramped learning rate, reaching the
+    /// schedule LR after this many windows (0 = no ramp).
+    pub join_warmup_windows: u64,
 }
 
 impl Default for ControlConfig {
@@ -157,6 +171,7 @@ impl Default for ControlConfig {
             snapshot_every: 0,
             faults: FaultPlan::default(),
             joins: Vec::new(),
+            join_warmup_windows: 0,
         }
     }
 }
@@ -245,6 +260,20 @@ impl ControlConfig {
                 self.straggler_factor,
                 self.quarantine_after,
             )),
+            ControlPolicy::CompressCoupled => Box::new(CompressCoupled::new(
+                k_init,
+                self.k_min,
+                self.k_max,
+                self.gain_p,
+                self.gain_i,
+                self.adjust_every,
+                self.lam_scale_min,
+                self.lam_scale_max,
+                env,
+                self.schedule_hysteresis,
+                self.straggler_factor,
+                self.quarantine_after,
+            )),
         }
     }
 
@@ -271,6 +300,7 @@ mod tests {
             ControlPolicy::DssPid,
             ControlPolicy::LambdaCoupled,
             ControlPolicy::ScheduleCoupled,
+            ControlPolicy::CompressCoupled,
         ] {
             assert_eq!(ControlPolicy::parse(p.name()).unwrap(), p);
         }
@@ -278,6 +308,10 @@ mod tests {
         assert_eq!(
             ControlPolicy::parse("schedule-coupled").unwrap(),
             ControlPolicy::ScheduleCoupled
+        );
+        assert_eq!(
+            ControlPolicy::parse("compress-coupled").unwrap(),
+            ControlPolicy::CompressCoupled
         );
         assert!(ControlPolicy::parse("bogus").is_err());
     }
@@ -336,6 +370,25 @@ mod tests {
         assert_eq!(ctl.name(), "schedule_coupled");
         // before any observation the configured schedule stands
         assert_eq!(ctl.current().schedule, Some(env.net.algo));
+    }
+
+    #[test]
+    fn compress_coupled_builds_with_env() {
+        let c = ControlConfig { policy: ControlPolicy::CompressCoupled, ..Default::default() };
+        let mut env = ScheduleEnv {
+            n_elems: 271_690,
+            n_ranks: 64,
+            topology: crate::comm::Dragonfly::for_nodes(64),
+            ..ScheduleEnv::default()
+        };
+        env.compress = crate::compress::CompressConfig {
+            kind: crate::compress::CompressorKind::TopK,
+            ratio: 0.05,
+            ..Default::default()
+        };
+        let ctl = c.build_controller(1, env);
+        assert_eq!(ctl.name(), "compress_coupled");
+        assert_eq!(ctl.current().compress_ratio, Some(0.05));
     }
 
     #[test]

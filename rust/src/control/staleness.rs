@@ -10,7 +10,7 @@
 //! 1609.08326) shows the compensation strength must co-adapt with the
 //! effective staleness; and Layered SGD (Yu & Yoo 2019) shows t_AR
 //! itself is a *choice* — the hierarchical schedule beats the flat ring
-//! whenever latency dominates. Four policies:
+//! whenever latency dominates. Five policies:
 //!
 //! * [`Fixed`] — the paper's static k (the control-plane no-op).
 //! * [`DssPid`] — DSSP-style bounded adaptation: drive k toward
@@ -27,6 +27,12 @@
 //!   group — the group keeps the base window while every other rank's
 //!   k is boosted, so healthy ranks fill the straggler's extra wall
 //!   time with useful local steps instead of blocking in the wait.
+//! * [`CompressCoupled`] — [`ScheduleCoupled`] plus per-window
+//!   **compression-ratio** selection: when the observed t_AR
+//!   persistently overshoots the window's k·t_C hiding budget the
+//!   top-k ratio halves (more compression), relaxing back once the
+//!   wire is comfortably hidden, with the schedule candidates priced
+//!   at the *compressed* wire volume.
 //!
 //! Determinism contract: every worker runs its own controller instance,
 //! but all instances must make **identical decisions** — the engines
@@ -51,6 +57,7 @@
 //! the new topology within `quarantine_after` windows.
 
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use crate::compress::{ctrl_slots, topk_k, CompressConfig, CompressorKind};
 
 /// What the engine asks the controller after each completed window.
 #[derive(Debug, Clone)]
@@ -94,12 +101,16 @@ pub struct Decision {
     pub schedule: Option<AllReduceAlgo>,
     /// Straggler quarantine in force, if any.
     pub quarantine: Option<Quarantine>,
+    /// Top-k density for the next window's compressed payload; `None`
+    /// keeps the configured operating point (only the
+    /// `compress_coupled` policy moves it).
+    pub compress_ratio: Option<f32>,
 }
 
 impl Decision {
     /// A schedule-agnostic decision (the pre-schedule-aware shape).
     pub fn plain(k: usize, lam_scale: f32) -> Self {
-        Decision { k, lam_scale, schedule: None, quarantine: None }
+        Decision { k, lam_scale, schedule: None, quarantine: None, compress_ratio: None }
     }
 
     /// The window length `rank` runs: the quarantined group's members
@@ -306,6 +317,9 @@ pub struct ScheduleEnv {
     /// All-reduced payload in f32 elements (model + control piggyback).
     pub n_elems: usize,
     pub n_ranks: usize,
+    /// The run's `[compress]` operating point — what the
+    /// `compress_coupled` policy tunes (and prices schedules at).
+    pub compress: CompressConfig,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -551,6 +565,173 @@ impl StalenessController for ScheduleCoupled {
     }
 }
 
+/// [`ScheduleCoupled`] plus per-window **compression-ratio** selection —
+/// the policy that co-tunes (k, schedule, ratio) from the live t_C/t_AR
+/// evidence.
+///
+/// The window of k steps hides the collective iff `t_AR ≤ k·t_C`
+/// (Eq. 14). When the observed t_AR persistently overshoots that budget
+/// by the hysteresis margin — i.e. k alone cannot amortize the wire —
+/// the ratio halves (more compression), bounded below by `ratio_min`;
+/// when t_AR sits comfortably under half the budget the ratio doubles
+/// back toward `ratio_max` (less compression, less error-feedback
+/// noise). Streak counters (`adjust_every` consecutive windows of
+/// one-sided evidence) keep observation noise from flapping the knob,
+/// exactly like the schedule switch's hysteresis.
+///
+/// The inner schedule choice is priced at the **compressed wire
+/// volume**: top-k's sparse all-gather of `2k + 2` elements per rank is
+/// folded to its dense-equivalent all-reduce volume `per·N/2` (the two
+/// move the same bytes per rank under the flat α-β model), QSGD to
+/// `⌈n·bits/32⌉`, so the flat-vs-hierarchical crossover tracks what the
+/// fabric actually carries.
+///
+/// Ratio adaptation engages only for [`CompressorKind::TopK`] — the
+/// identity has no knob, and QSGD's bits are a config constant — but
+/// the wire-aware schedule pricing applies to all three kinds. Same
+/// determinism contract as every policy: pure function of the
+/// observation history.
+#[derive(Debug, Clone)]
+pub struct CompressCoupled {
+    inner: ScheduleCoupled,
+    kind: CompressorKind,
+    ratio: f32,
+    ratio_min: f32,
+    ratio_max: f32,
+    hysteresis: f64,
+    adjust_after: u64,
+    hot_streak: u64,
+    cold_streak: u64,
+    /// Dense payload width (model + piggyback) the wire volumes derive
+    /// from.
+    dense_elems: usize,
+}
+
+impl CompressCoupled {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        k_init: usize,
+        k_min: usize,
+        k_max: usize,
+        gain_p: f64,
+        gain_i: f64,
+        adjust_every: u64,
+        lam_scale_min: f32,
+        lam_scale_max: f32,
+        env: ScheduleEnv,
+        hysteresis: f64,
+        straggler_factor: f64,
+        quarantine_after: u64,
+    ) -> Self {
+        let compress = env.compress;
+        let ratio = compress.ratio.clamp(compress.ratio_min, compress.ratio_max);
+        let mut c = CompressCoupled {
+            inner: ScheduleCoupled::new(
+                k_init,
+                k_min,
+                k_max,
+                gain_p,
+                gain_i,
+                adjust_every,
+                lam_scale_min,
+                lam_scale_max,
+                env,
+                hysteresis,
+                straggler_factor,
+                quarantine_after,
+            ),
+            kind: compress.kind,
+            ratio,
+            ratio_min: compress.ratio_min,
+            ratio_max: compress.ratio_max,
+            hysteresis: hysteresis.max(0.0),
+            adjust_after: adjust_every.max(1),
+            hot_streak: 0,
+            cold_streak: 0,
+            dense_elems: env.n_elems,
+        };
+        c.inner.env.n_elems = c.wire_pricing_elems();
+        c
+    }
+
+    /// Model width without the control piggyback.
+    fn model_elems(&self) -> usize {
+        self.dense_elems.saturating_sub(ctrl_slots(self.inner.env.n_ranks)).max(1)
+    }
+
+    /// Dense-equivalent all-reduce volume of the current operating
+    /// point, for the inner schedule comparison.
+    fn wire_pricing_elems(&self) -> usize {
+        let n = self.model_elems();
+        let ranks = self.inner.env.n_ranks.max(1);
+        match self.kind {
+            CompressorKind::None => self.dense_elems,
+            CompressorKind::TopK => {
+                // all-gather of `per` per rank moves (N−1)·per bytes —
+                // the same as a ring all-reduce of per·N/2.
+                let per = 2 * topk_k(n, self.ratio) + crate::compress::CTRL_BASE_SLOTS;
+                (per * ranks).div_ceil(2).max(1)
+            }
+            CompressorKind::Qsgd => {
+                crate::compress::qsgd::qsgd_wire_elems(n, self.inner.env.compress.bits)
+                    + ctrl_slots(ranks)
+            }
+        }
+    }
+
+    fn adapt_ratio(&mut self, obs: &WindowObs) {
+        if self.kind != CompressorKind::TopK {
+            return;
+        }
+        if obs.t_compute <= 0.0 || obs.t_allreduce <= 0.0 {
+            return;
+        }
+        let k = self.inner.inner.inner.k.max(1) as f64;
+        let budget = k * obs.t_compute; // compute available to hide t_AR
+        if obs.t_allreduce > (1.0 + self.hysteresis) * budget {
+            self.cold_streak = 0;
+            self.hot_streak += 1;
+            if self.hot_streak >= self.adjust_after && self.ratio > self.ratio_min {
+                self.ratio = (self.ratio * 0.5).max(self.ratio_min);
+                self.hot_streak = 0;
+            }
+        } else if obs.t_allreduce < (1.0 - self.hysteresis) * 0.5 * budget {
+            self.hot_streak = 0;
+            self.cold_streak += 1;
+            if self.cold_streak >= self.adjust_after && self.ratio < self.ratio_max {
+                self.ratio = (self.ratio * 2.0).min(self.ratio_max);
+                self.cold_streak = 0;
+            }
+        } else {
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+        }
+    }
+}
+
+impl StalenessController for CompressCoupled {
+    fn name(&self) -> &'static str {
+        "compress_coupled"
+    }
+
+    fn current(&self) -> Decision {
+        let mut d = self.inner.current();
+        if self.kind == CompressorKind::TopK {
+            d.compress_ratio = Some(self.ratio);
+        }
+        d
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        self.adapt_ratio(obs);
+        // Re-price the schedule candidates at the (possibly new) wire
+        // volume before the inner policy compares them.
+        self.inner.env.n_elems = self.wire_pricing_elems();
+        self.inner.on_window(obs);
+        self.current()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -689,6 +870,7 @@ mod tests {
             topology: Dragonfly::for_nodes(n_ranks),
             n_elems,
             n_ranks,
+            compress: CompressConfig::default(),
         }
     }
 
@@ -841,6 +1023,98 @@ mod tests {
             let mut per = vec![1e-3; 64];
             per[(w % 64) as usize] *= 1.0 + (w % 5) as f64;
             let o = obs_ranks(w, 1e-3, ((w % 7) as f64 + 1.0) * 1e-3, per.clone());
+            assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
+        }
+    }
+
+    // --- CompressCoupled ---
+
+    fn cc_env(n_elems: usize, n_ranks: usize, ratio: f32) -> ScheduleEnv {
+        let mut env = sched_env(n_elems, n_ranks, 10e9);
+        env.compress = CompressConfig {
+            kind: CompressorKind::TopK,
+            ratio,
+            ratio_min: 0.005,
+            ratio_max: 0.25,
+            ..CompressConfig::default()
+        };
+        env
+    }
+
+    fn cc(env: ScheduleEnv) -> CompressCoupled {
+        CompressCoupled::new(1, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3)
+    }
+
+    #[test]
+    fn compress_coupled_halves_ratio_when_t_ar_dominates() {
+        let mut c = cc(cc_env(10_000, 8, 0.1));
+        assert_eq!(c.current().compress_ratio, Some(0.1));
+        // t_AR 100× the window budget: the ratio must walk down to the
+        // floor, one halving per window (adjust_every = 1).
+        let mut ratios = Vec::new();
+        for w in 0..8 {
+            ratios.push(c.on_window(&obs(w, 1e-3, 0.1)).compress_ratio.unwrap());
+        }
+        assert!(ratios[0] < 0.1, "first halving never fired: {ratios:?}");
+        for pair in ratios.windows(2) {
+            assert!(pair[1] <= pair[0], "ratio must be monotone under hot evidence");
+        }
+        assert_eq!(*ratios.last().unwrap(), 0.005, "must settle on ratio_min: {ratios:?}");
+    }
+
+    #[test]
+    fn compress_coupled_relaxes_ratio_when_comm_is_hidden() {
+        let mut c = cc(cc_env(10_000, 8, 0.02));
+        // t_AR far under half the budget: ratio doubles toward the cap.
+        let mut last = c.current();
+        for w in 0..8 {
+            last = c.on_window(&obs(w, 1e-3, 1e-6));
+        }
+        assert_eq!(last.compress_ratio, Some(0.25), "must relax to ratio_max");
+    }
+
+    #[test]
+    fn compress_coupled_holds_ratio_inside_the_hysteresis_band() {
+        let mut c = cc(cc_env(10_000, 8, 0.05));
+        // t_AR exactly at the window budget (k = 1, t_C = 1 ms): inside
+        // the band, the knob must not move.
+        for w in 0..20 {
+            let d = c.on_window(&obs(w, 1e-3, 1e-3));
+            assert_eq!(d.compress_ratio, Some(0.05), "flapped at window {w}");
+        }
+    }
+
+    #[test]
+    fn compress_coupled_keeps_schedule_and_k_machinery() {
+        // The inner (k, schedule) loops stay live: a slow network must
+        // still deepen k, and the decision carries a schedule.
+        let env = cc_env(271_690, 256, 0.05);
+        let mut c = CompressCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3);
+        let mut last = c.current();
+        assert!(last.schedule.is_some());
+        for w in 0..20 {
+            last = c.on_window(&obs(w, 1e-4, 5e-3));
+        }
+        assert!(last.k > 1, "k adaptation lost under compress_coupled");
+        assert!(last.compress_ratio.is_some());
+    }
+
+    #[test]
+    fn compress_coupled_is_inert_for_non_topk_kinds() {
+        let mut env = sched_env(10_000, 8, 10e9);
+        env.compress = CompressConfig { kind: CompressorKind::Qsgd, ..CompressConfig::default() };
+        let mut c = cc(env);
+        for w in 0..5 {
+            assert_eq!(c.on_window(&obs(w, 1e-3, 10.0)).compress_ratio, None);
+        }
+    }
+
+    #[test]
+    fn compress_coupled_is_deterministic() {
+        let mk = || cc(cc_env(50_000, 16, 0.05));
+        let (mut a, mut b) = (mk(), mk());
+        for w in 0..100 {
+            let o = obs(w, 1e-3, ((w % 9) as f64) * 1e-3);
             assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
         }
     }

@@ -10,7 +10,8 @@
 //!   Algorithm 1 ([`algo::dcs3gd`]), the SSGD / ASGD / DC-ASGD baselines
 //!   ([`algo`], [`ps`]), the elastic control plane — online staleness
 //!   adaptation, fault injection, heartbeat detection and checkpoint
-//!   recovery ([`control`]) — optimizers and the paper's LR/weight-decay
+//!   recovery ([`control`]) — error-feedback gradient compression
+//!   ([`compress`]), optimizers and the paper's LR/weight-decay
 //!   schedules ([`optim`]), a virtual-time engine for the Eq. 13/14
 //!   timing analysis ([`simtime`]), a synthetic ImageNet-style dataset
 //!   ([`data`]), metrics ([`metrics`]) and a config system ([`config`]).
@@ -29,6 +30,7 @@ pub mod algo;
 pub mod bench_util;
 pub mod cli;
 pub mod comm;
+pub mod compress;
 pub mod config;
 pub mod control;
 pub mod data;
@@ -48,6 +50,7 @@ pub mod prelude {
     pub use crate::comm::{
         AllReduceAlgo, CollectiveSchedule, Dragonfly, Group, NetModel, PhaseTimes,
     };
+    pub use crate::compress::{CompressConfig, CompressorKind, GradCompressor};
     pub use crate::config::ExperimentConfig;
     pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;

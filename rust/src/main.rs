@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
 use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::compress::CompressorKind;
 use dcs3gd::config::{parse_schedule, ExperimentConfig};
 use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent};
 use dcs3gd::model::meta::discover_variants;
@@ -33,6 +34,8 @@ USAGE:
                [--fault-factor X] [--fault-duration S] [--fault-extra S]
                [--fault-respawn true|false]
                [--join-count N --join-at T [--join-first-rank R]]
+               [--join-warmup W]
+               [--compress C] [--topk-ratio R] [--qsgd-bits B]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
@@ -41,9 +44,14 @@ Algorithms:       ssgd | s3gd | dcs3gd | asgd | dcasgd
 Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
 Schedules:        ring | tree | flat | hierarchical (Layered-SGD dragonfly)
 Control policies: fixed | dss_pid | lambda_coupled | schedule_coupled
+                  | compress_coupled (co-tunes k, schedule and ratio)
+Compressors:      none | topk | qsgd (error-feedback gradient compression;
+                  --topk-ratio sets the kept density, --qsgd-bits the
+                  quantization width)
 Fault kinds:      kill | slow | delay (virtual-time chaos injection);
                   a kill with --fault-respawn false departs permanently
-                  (the membership epoch shrinks); --join-* grows it
+                  (the membership epoch shrinks); --join-* grows it, and
+                  --join-warmup ramps the joiners' LR over W windows
 ";
 
 fn main() {
@@ -184,6 +192,14 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             cfg.control.joins.push(JoinEvent { rank, at_s });
         }
     }
+    cfg.control.join_warmup_windows =
+        args.get_u64("join-warmup", cfg.control.join_warmup_windows)?;
+    // gradient compression
+    if let Some(c) = args.get("compress") {
+        cfg.compress.kind = CompressorKind::parse(c)?;
+    }
+    cfg.compress.ratio = args.get_f64("topk-ratio", cfg.compress.ratio as f64)? as f32;
+    cfg.compress.bits = args.get_usize("qsgd-bits", cfg.compress.bits as usize)? as u32;
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }
@@ -246,6 +262,16 @@ fn cmd_train(args: &Args) -> Result<()> {
                 100.0 * comm.global_s / comm.total_s().max(1e-30),
             );
         }
+    }
+    if cfg.compress.kind != CompressorKind::None {
+        let s = report.control.compress_summary();
+        println!(
+            "compress: {} | mean wire {:.0} B/round/rank | final ratio {:.4} | ratio changes {}",
+            s.kind,
+            s.mean_wire_bytes(),
+            s.final_ratio,
+            s.ratio_changes,
+        );
     }
     Ok(())
 }

@@ -41,6 +41,63 @@ impl CommPhaseSummary {
     }
 }
 
+/// Run-level aggregate of the gradient-compression accounting: which
+/// compressor the run rode, how many compressed collectives it
+/// completed, the total achieved per-rank wire bytes, and how the
+/// `compress_coupled` policy moved the ratio. Derived from the control
+/// log's decision trace and exported under the run JSON's `"compress"`
+/// key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressSummary {
+    /// Compressor name ("none" | "topk" | "qsgd").
+    pub kind: String,
+    /// Collective rounds counted into the totals.
+    pub rounds: u64,
+    /// Sum of per-rank wire payload bytes across the counted rounds.
+    pub wire_bytes_total: f64,
+    /// How often the active ratio changed along the trace (the
+    /// `compress_coupled` decision count).
+    pub ratio_changes: usize,
+    /// The ratio in force at the end of the run (wire fraction).
+    pub final_ratio: f64,
+}
+
+impl Default for CompressSummary {
+    fn default() -> Self {
+        CompressSummary {
+            kind: "none".to_string(),
+            rounds: 0,
+            wire_bytes_total: 0.0,
+            ratio_changes: 0,
+            final_ratio: 1.0,
+        }
+    }
+}
+
+impl CompressSummary {
+    /// Mean per-rank wire bytes per counted round.
+    pub fn mean_wire_bytes(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.wire_bytes_total / self.rounds as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind.clone()));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("wire_bytes_total".into(), num(self.wire_bytes_total));
+        m.insert("mean_wire_bytes".into(), num(self.mean_wire_bytes()));
+        m.insert("ratio_changes".into(), Json::Num(self.ratio_changes as f64));
+        m.insert("final_ratio".into(), num(self.final_ratio));
+        Json::Obj(m)
+    }
+}
+
 /// One training-step record from one worker.
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
@@ -376,6 +433,24 @@ mod tests {
         assert_eq!(j.get("rounds").unwrap().as_f64(), Some(10.0));
         assert_eq!(j.get("total_s").unwrap().as_f64(), Some(1.0));
         assert!(crate::util::Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn compress_summary_json() {
+        let s = CompressSummary {
+            kind: "topk".into(),
+            rounds: 4,
+            wire_bytes_total: 800.0,
+            ratio_changes: 2,
+            final_ratio: 0.05,
+        };
+        assert!((s.mean_wire_bytes() - 200.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("topk"));
+        assert_eq!(j.get("mean_wire_bytes").unwrap().as_f64(), Some(200.0));
+        assert!(crate::util::Json::parse(&j.to_string()).is_ok());
+        assert_eq!(CompressSummary::default().kind, "none");
+        assert_eq!(CompressSummary::default().mean_wire_bytes(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Integration tests for the gradient-compression subsystem: the
+//! golden top-k fixture (pinned against an independent mirror of the
+//! algorithm), the dense-loss-envelope convergence guarantee, and the
+//! `compress_coupled` decision trace in the run's metrics JSON.
+
+use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::comm::{AllReduceAlgo, NetModel};
+use dcs3gd::compress::{CompressorKind, GradCompressor, TopK};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::ControlPolicy;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/compress_topk.json");
+    Json::parse(&std::fs::read_to_string(&path).expect("golden fixture exists"))
+        .expect("golden fixture parses")
+}
+
+#[test]
+fn golden_topk_two_window_trajectory() {
+    let fix = fixture();
+    let n = fix.get("n").unwrap().as_usize().unwrap();
+    let ratio = fix.get("ratio").unwrap().as_f64().unwrap() as f32;
+    let k = fix.get("k").unwrap().as_usize().unwrap();
+    let mut comp = TopK::new(n, ratio);
+    assert_eq!(comp.k(), k, "k derivation drifted from the fixture");
+    for (w, win) in fix.get("windows").unwrap().as_arr().unwrap().iter().enumerate() {
+        let delta = win.get("delta").unwrap().as_f32_vec().unwrap();
+        let want_idx: Vec<u32> = win
+            .get("indices")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        let want_vals = win.get("values").unwrap().as_f32_vec().unwrap();
+        let (idx, vals) = comp.compress_window(&delta);
+        assert_eq!(idx, want_idx, "window {w}: selected support diverged");
+        // every fixture value is an exact dyadic rational: bit-exact
+        for (i, (got, want)) in vals.iter().zip(&want_vals).enumerate() {
+            assert_eq!(got.to_bits(), want.to_bits(), "window {w} value {i}: {got} vs {want}");
+        }
+    }
+    let want_resid = fix.get("final_residual").unwrap().as_f32_vec().unwrap();
+    for (i, (got, want)) in comp.residual().iter().zip(&want_resid).enumerate() {
+        assert_eq!(got.to_bits(), want.to_bits(), "residual[{i}]: {got} vs {want}");
+    }
+}
+
+fn conv_cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(4)
+        .local_batch(16)
+        .steps(120)
+        .eta_single(0.05)
+        .base_batch(16)
+        .data(2048, 512, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .build()
+}
+
+#[test]
+fn topk_one_percent_stays_in_the_dense_loss_envelope() {
+    // The acceptance bar: top-k at 1% density (error feedback on) must
+    // land inside the dense run's loss envelope — same budget, same
+    // data, two orders of magnitude less wire.
+    let dense = run_experiment(&conv_cfg("envelope_dense")).unwrap();
+    let mut cfg = conv_cfg("envelope_topk");
+    cfg.compress.kind = CompressorKind::TopK;
+    cfg.compress.ratio = 0.01;
+    let topk = run_experiment(&cfg).unwrap();
+    assert!(dense.final_train_loss.is_finite() && topk.final_train_loss.is_finite());
+    assert!(
+        topk.final_train_loss < dense.final_train_loss * 1.35 + 0.1,
+        "top-k 1% left the dense envelope: {} vs dense {}",
+        topk.final_train_loss,
+        dense.final_train_loss
+    );
+    assert!(
+        topk.final_val_err < dense.final_val_err + 0.1,
+        "top-k 1% val err {} vs dense {}",
+        topk.final_val_err,
+        dense.final_val_err
+    );
+    // and it really was ~1%: mean wire bytes ≲ 3% of the dense payload
+    let n = 16 * 16 * 3 * 10 + 10; // linear model parameter count
+    let wire = topk.control.compress_summary().mean_wire_bytes();
+    assert!(
+        wire < 0.03 * (n as f64 * 4.0),
+        "wire {wire} B not ~1% of dense {} B",
+        n * 4
+    );
+}
+
+#[test]
+fn compress_coupled_trace_lands_in_run_json() {
+    // A t_AR-dominated fabric under compress_coupled: the run JSON must
+    // carry the (k, schedule, ratio) decision trace under "control" and
+    // the aggregated "compress" key, with the ratio actually moving.
+    let dir = std::env::temp_dir().join(format!("dcs3gd_compress_{}", std::process::id()));
+    let mut cfg = conv_cfg("cc_trace");
+    cfg.steps = 60;
+    cfg.compute = ComputeModel::uniform(1e-5);
+    cfg.net = NetModel { alpha_s: 0.0, beta_bytes_per_s: 2e5, algo: AllReduceAlgo::Ring };
+    cfg.compress.kind = CompressorKind::TopK;
+    cfg.compress.ratio = 0.25;
+    cfg.control.policy = ControlPolicy::CompressCoupled;
+    cfg.control.k_max = 2;
+    cfg.out_dir = Some(dir.clone());
+    run_experiment(&cfg).unwrap();
+    let parsed =
+        Json::parse(&std::fs::read_to_string(dir.join("cc_trace_run.json")).unwrap()).unwrap();
+    let control = parsed.get("control").and_then(Json::as_arr).expect("control trace");
+    let windows: Vec<&Json> =
+        control.iter().filter(|r| r.get("schedule").unwrap().as_str().is_some()).collect();
+    assert!(!windows.is_empty(), "no window records in the trace");
+    for r in &windows {
+        // every window record carries the full (k, schedule, ratio) triple
+        assert!(r.get("k").unwrap().as_f64().is_some());
+        assert!(r.get("compress_ratio").unwrap().as_f64().is_some());
+        assert_eq!(r.get("compress").unwrap().as_str(), Some("topk"));
+        assert!(r.get("wire_bytes").unwrap().as_f64().unwrap() > 0.0);
+    }
+    let ratios: Vec<f64> =
+        windows.iter().map(|r| r.get("compress_ratio").unwrap().as_f64().unwrap()).collect();
+    assert!(
+        ratios.iter().any(|&r| r < 0.25),
+        "compress_coupled never tightened the ratio: {ratios:?}"
+    );
+    let summary = parsed.get("compress").expect("compress summary key");
+    assert_eq!(summary.get("kind").unwrap().as_str(), Some("topk"));
+    assert!(summary.get("ratio_changes").unwrap().as_f64().unwrap() >= 1.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn ssgd_compressed_matches_engine_restriction_and_runs() {
+    // Compression is rejected on the PS engines at config time…
+    let mut bad = conv_cfg("bad");
+    bad.algo = Algo::DcAsgd;
+    bad.compress.kind = CompressorKind::Qsgd;
+    assert!(bad.validate().is_err());
+    // …and runs on SSGD.
+    let mut cfg = conv_cfg("ssgd_q8");
+    cfg.algo = Algo::Ssgd;
+    cfg.steps = 40;
+    cfg.compress.kind = CompressorKind::Qsgd;
+    cfg.compress.bits = 8;
+    let report = run_experiment(&cfg).unwrap();
+    assert!(report.final_train_loss.is_finite());
+    assert_eq!(report.control.compress_summary().kind, "qsgd");
+}

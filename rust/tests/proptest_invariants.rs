@@ -5,6 +5,7 @@
 use dcs3gd::comm::{
     hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
 };
+use dcs3gd::compress::{CompressConfig, CompressorKind, GradCompressor, Qsgd, TopK, WindowCodec};
 use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
 use dcs3gd::dc;
 use dcs3gd::optim::LrSchedule;
@@ -358,6 +359,121 @@ fn prop_epoch_transition_allreduce_matches_survivor_recompute() {
                     "case {case}: survivor-set sum differs from flat recompute at [{i}]"
                 );
             }
+        }
+    }
+}
+
+/// Property (error feedback): for any gradient stream and any top-k
+/// ratio, the per-window identity `q_t + e_t == v_t` with
+/// `v_t = g_t + e_{t−1}` holds **bitwise** — top-k masks coordinates,
+/// it never rounds them, so the dropped mass telescopes exactly.
+#[test]
+fn prop_error_feedback_telescopes_bitwise() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0xEF00, 11, case);
+        let n = 2 + rng.below(400) as usize;
+        let ratio = rng.uniform_range(0.01, 1.0);
+        let mut comp = TopK::new(n, ratio);
+        let windows = 1 + rng.below(6);
+        for w in 0..windows {
+            let mut delta = vec![0.0f32; n];
+            let mut dr = Rng::keyed(case ^ 0xEF, w, 5);
+            dr.fill_normal(&mut delta);
+            let e_before: Vec<f32> = comp.residual().to_vec();
+            let mut own = vec![0.0f32; n];
+            comp.compress(&delta, &mut own, 0);
+            for i in 0..n {
+                let v = delta[i] + e_before[i];
+                let q_plus_e = own[i] + comp.residual()[i];
+                // bitwise, modulo the sign of zero (q + 0.0 normalizes
+                // a −0.0 that the mask would have preserved)
+                assert!(
+                    v.to_bits() == q_plus_e.to_bits() || (v == 0.0 && q_plus_e == 0.0),
+                    "case {case} window {w} elem {i}: q+e != v ({v} vs {q_plus_e})"
+                );
+            }
+        }
+    }
+}
+
+/// Property: at ratio 1.0, a top-k round decoded through the codec is
+/// **bit-identical** to the dense all-reduce of the same contributions
+/// — the sparse scatter-add accumulates per element in the same rank
+/// order the dense reduction does.
+#[test]
+fn prop_topk_ratio_one_decodes_to_dense_sum_bitwise() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x701C, 12, case);
+        let n_ranks = 1 + rng.below(6) as usize;
+        let n = 1 + rng.below(300) as usize;
+        let inputs: Vec<Vec<f32>> = (0..n_ranks)
+            .map(|r| {
+                let mut rr = Rng::keyed(case ^ 0x70, r as u64, 6);
+                let mut v = vec![0.0f32; n];
+                rr.fill_normal(&mut v);
+                v
+            })
+            .collect();
+        // dense reference: accumulate in rank order (what the
+        // rendezvous substrate does)
+        let mut dense = vec![0.0f32; n];
+        for v in &inputs {
+            tensor::add_assign(&mut dense, v);
+        }
+        // sparse path: every rank encodes at ratio 1, segments are
+        // concatenated in rank order, the codec scatter-adds
+        let cfg = CompressConfig { kind: CompressorKind::TopK, ratio: 1.0, ..Default::default() };
+        let mut payload = Vec::new();
+        for (r, v) in inputs.iter().enumerate() {
+            let mut codec = WindowCodec::new(&cfg, n, 0, r);
+            codec.rebind(r, n_ranks);
+            let mut own = vec![0.0f32; n];
+            payload.extend(codec.encode(v, 0.0, 0.0, &mut own));
+        }
+        let decoder = {
+            let mut c = WindowCodec::new(&cfg, n, 0, 0);
+            c.rebind(0, n_ranks);
+            c
+        };
+        let mut sum = vec![0.0f32; n];
+        decoder.decode(&payload, n_ranks, &mut sum);
+        for i in 0..n {
+            assert_eq!(
+                sum[i].to_bits(),
+                dense[i].to_bits(),
+                "case {case}: sparse ratio-1 sum differs from dense at [{i}]"
+            );
+        }
+    }
+}
+
+/// Property (QSGD): for any input and bit width, the quantization error
+/// per coordinate is at most one level step `max|v| / (2^(bits−1) − 1)`,
+/// and `q + e` reconstructs `v` to f32 subtraction accuracy.
+#[test]
+fn prop_qsgd_error_bounded_by_level_step() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0x95D9, 13, case);
+        let n = 1 + rng.below(300) as usize;
+        let bits = 2 + rng.below(7) as u32;
+        let mut comp = Qsgd::new(n, bits, case, rng.below(16));
+        let mut delta = vec![0.0f32; n];
+        rng.fill_normal(&mut delta);
+        let mut own = vec![0.0f32; n];
+        comp.compress(&delta, &mut own, 0);
+        let s = delta.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let step = s / ((1u64 << (bits - 1)) - 1) as f32;
+        for i in 0..n {
+            let err = (own[i] - delta[i]).abs();
+            assert!(
+                err <= step * 1.0001,
+                "case {case} elem {i}: |q − v| = {err} > step {step} (bits {bits})"
+            );
+            let recon = own[i] + comp.residual()[i];
+            assert!(
+                (recon - delta[i]).abs() <= 1e-5 * s.max(1e-20),
+                "case {case} elem {i}: q + e does not reconstruct v"
+            );
         }
     }
 }
