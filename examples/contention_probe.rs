@@ -1,0 +1,250 @@
+//! Contention-aware global links + online schedule probing, end to end.
+//!
+//! The scenario is constructed so the three cost models straddle each
+//! other with a margin beyond the schedule hysteresis:
+//!
+//! ```text
+//! t_hier(dedicated taper) < t_ring < t_hier(taper = 1)
+//! ```
+//!
+//! (the flat ring's β is *derived* as the geometric mean of the two
+//! hierarchical costs, so the premise is asserted, not hand-tuned).
+//! Two runs on that fabric, both with `schedule_coupled` and
+//! `probe = "interval"`:
+//!
+//! 1. **Dedicated optics** (`global_taper = 2`): the controller starts
+//!    on the configured ring and — because probing never acts on an
+//!    unvalidated model — holds it until the scheduled probe runs the
+//!    hierarchical candidate for one window. The probe's observed phase
+//!    split validates the model, and the switch lands **at the probe**:
+//!    the run JSON's decision trace must show a `probe` record before
+//!    the first non-probe hierarchical window, and the probed run must
+//!    beat the fixed flat-ring baseline on simulated wall-clock.
+//! 2. **Contended optics** (`global_taper = 1`): the identical probe
+//!    fires, but the contention-aware pricing (concurrent leader flows
+//!    divide the per-group global β) puts the hierarchical candidate
+//!    *above* the ring — the controller must keep the ring through
+//!    every probe (zero schedule switches), which the dedicated-optics
+//!    model would have gotten wrong.
+//!
+//! ```sh
+//! cargo run --release --example contention_probe [-- fast]
+//! ```
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport, WorkerHarness};
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::compress::ctrl_slots;
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::{ControlPolicy, ProbeMode};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+const NODES: usize = 8;
+const HYSTERESIS: f64 = 0.1;
+const PROBE_INTERVAL: u64 = 4;
+
+fn dragonfly(taper: usize) -> Dragonfly {
+    Dragonfly {
+        groups: 4,
+        nodes_per_group: 2,
+        alpha_local_s: 1e-6,
+        beta_local: 1e9,
+        alpha_global_s: 2e-6,
+        beta_global: 1e8,
+        global_taper: taper,
+    }
+}
+
+fn cfg(
+    name: &str,
+    policy: ControlPolicy,
+    probe: ProbeMode,
+    taper: usize,
+    ring_beta: f64,
+    steps: u64,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::builder("linear")
+        .name(name)
+        .algo(Algo::DcS3gd)
+        .nodes(NODES)
+        .local_batch(16)
+        .steps(steps)
+        .eta_single(0.02)
+        .base_batch(16)
+        .data(2048, 256, 0.5)
+        .compute(ComputeModel::uniform(1e-6))
+        .net(NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: ring_beta, algo: AllReduceAlgo::Ring })
+        .dragonfly(dragonfly(taper))
+        .control_policy(policy)
+        .k_bounds(1, 4)
+        .out_dir("runs/contention")
+        .build();
+    cfg.control.schedule_hysteresis = HYSTERESIS;
+    cfg.control.probe = probe;
+    cfg.control.probe_interval = PROBE_INTERVAL;
+    cfg
+}
+
+/// The schedule-record view of a run's decision trace, from its JSON:
+/// (schedule name, probe flag) per collective window, in trace order.
+fn schedule_trace(name: &str) -> anyhow::Result<Vec<(String, bool)>> {
+    let text = std::fs::read_to_string(format!("runs/contention/{name}_run.json"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad run json: {e}"))?;
+    let control = json.get("control").and_then(Json::as_arr).expect("control trace");
+    Ok(control
+        .iter()
+        .filter_map(|r| {
+            let sched = r.get("schedule")?.as_str()?.to_string();
+            let probe = r.get("probe").and_then(Json::as_bool).unwrap_or(false);
+            Some((sched, probe))
+        })
+        .collect())
+}
+
+fn probe_rounds(name: &str) -> anyhow::Result<f64> {
+    let text = std::fs::read_to_string(format!("runs/contention/{name}_run.json"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad run json: {e}"))?;
+    Ok(json
+        .get("comm")
+        .and_then(|c| c.get("probe"))
+        .and_then(|p| p.get("rounds"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0))
+}
+
+fn summarize(label: &str, r: &RunReport) {
+    let comm = r.control.comm_summary();
+    println!(
+        "{label:<28} sim {:>9.5}s | switches {} | probes {} | t_AR global {:.1}%",
+        r.sim_time_s,
+        comm.schedule_switches,
+        comm.probe_rounds,
+        100.0 * comm.global_s / comm.total_s().max(1e-30),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+    let steps = if fast { 40 } else { 80 };
+
+    // ---- derive the fabric so the premise is provable, not tuned ----
+    // The controller prices candidates at the full wire payload: model
+    // parameters plus the control piggyback tail.
+    let probe_cfg = cfg("probe_setup", ControlPolicy::Fixed, ProbeMode::Off, 2, 10e9, steps);
+    let n = WorkerHarness::prepare(&probe_cfg)?.n_params();
+    let elems = n + ctrl_slots(NODES);
+    let hier_t = |taper: usize| {
+        NetModel {
+            alpha_s: 1.5e-6,
+            beta_bytes_per_s: 10e9,
+            algo: AllReduceAlgo::Hierarchical(dragonfly(taper)),
+        }
+        .allreduce_time(elems, NODES)
+    };
+    let (t_ded, t_con) = (hier_t(2), hier_t(1));
+    // Ring target: geometric mean of the two hierarchical costs; solve
+    // the flat-ring formula for β at the default α.
+    let alpha = 1.5e-6;
+    let t_ring = (t_ded * t_con).sqrt();
+    let per_step = t_ring / (2.0 * (NODES as f64 - 1.0)) - alpha;
+    assert!(per_step > 0.0, "ring target too small to solve for beta");
+    let ring_beta = (elems as f64 * 4.0 / NODES as f64) / per_step;
+    println!("== premise (payload {elems} f32, N = {NODES}) ==");
+    println!("t_hier dedicated {t_ded:.3e}s < t_ring {t_ring:.3e}s < t_hier taper=1 {t_con:.3e}s");
+    assert!(
+        t_ded * (1.0 + HYSTERESIS) < t_ring,
+        "dedicated hier must undercut the ring past the hysteresis"
+    );
+    assert!(
+        t_ring * (1.0 + HYSTERESIS) < t_con,
+        "contended hier must overshoot the ring past the hysteresis"
+    );
+
+    // ---- scenario 1: dedicated optics, probe-triggered switch ----
+    println!("\n== dedicated optics (taper 2): the probe validates hier and the switch lands ==");
+    let fixed = run_experiment(&cfg(
+        "probe_fixed_ring",
+        ControlPolicy::Fixed,
+        ProbeMode::Off,
+        2,
+        ring_beta,
+        steps,
+    ))?;
+    let probed = run_experiment(&cfg(
+        "probe_dedicated",
+        ControlPolicy::ScheduleCoupled,
+        ProbeMode::Interval,
+        2,
+        ring_beta,
+        steps,
+    ))?;
+    summarize("fixed (flat ring)", &fixed);
+    summarize("schedule_coupled + probe", &probed);
+
+    let trace = schedule_trace("probe_dedicated")?;
+    let first_probe = trace
+        .iter()
+        .position(|r| r.1)
+        .expect("no probe record in the decision trace");
+    assert_eq!(trace[first_probe].0, "hierarchical", "the probe must run the inactive candidate");
+    let first_real_hier = trace
+        .iter()
+        .position(|r| !r.1 && r.0 == "hierarchical")
+        .expect("the probe never triggered the switch");
+    assert!(
+        first_real_hier > first_probe,
+        "switch at record {first_real_hier} must come after the probe at {first_probe}"
+    );
+    assert!(
+        trace[..first_probe].iter().all(|r| r.0 == "ring"),
+        "the unvalidated hierarchical model was trusted before any probe: {trace:?}"
+    );
+    assert!(
+        trace[first_real_hier..].iter().filter(|r| !r.1).all(|r| r.0 == "hierarchical"),
+        "flapped after the probe-triggered switch: {trace:?}"
+    );
+    assert!(probe_rounds("probe_dedicated")? >= 1.0, "comm JSON lost the probe summary");
+    assert!(
+        probed.sim_time_s < fixed.sim_time_s,
+        "probed run {} not faster than the fixed ring {}",
+        probed.sim_time_s,
+        fixed.sim_time_s
+    );
+    println!(
+        "decision trace: probe at record {first_probe}, switch at {first_real_hier}, \
+         speedup {:.2}x",
+        fixed.sim_time_s / probed.sim_time_s
+    );
+
+    // ---- scenario 2: contended optics, probe validates and holds ----
+    println!("\n== contended optics (taper 1): the probe validates the ring and holds it ==");
+    let contended = run_experiment(&cfg(
+        "probe_contended",
+        ControlPolicy::ScheduleCoupled,
+        ProbeMode::Interval,
+        1,
+        ring_beta,
+        steps,
+    ))?;
+    summarize("schedule_coupled + probe", &contended);
+    let trace = schedule_trace("probe_contended")?;
+    assert!(
+        trace.iter().any(|r| r.1 && r.0 == "hierarchical"),
+        "the contended run never probed the hierarchical arm"
+    );
+    assert!(
+        trace.iter().filter(|r| !r.1).all(|r| r.0 == "ring"),
+        "contention-aware pricing must keep the ring: {trace:?}"
+    );
+    assert_eq!(
+        contended.control.comm_summary().schedule_switches,
+        0,
+        "a probe excursion is not a switch"
+    );
+    println!(
+        "probes: {} excursions onto the contended hierarchical arm, zero switches — \
+         the dedicated-optics model would have switched and lost",
+        contended.control.comm_summary().probe_rounds
+    );
+    Ok(())
+}

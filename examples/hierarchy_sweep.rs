@@ -85,6 +85,7 @@ fn cfg(name: &str, policy: ControlPolicy, steps: u64) -> ExperimentConfig {
             beta_local: 1e9,
             alpha_global_s: 2e-6,
             beta_global: 2e8,
+            ..Dragonfly::default()
         })
         .control_policy(policy)
         .k_bounds(1, 4)

@@ -163,13 +163,69 @@ fn main() {
          crossover the schedule_coupled control policy rides)"
     );
 
+    // Contended vs dedicated: the same crossover under a tapered
+    // per-group global fabric. The leader phases keep 2 flows in
+    // flight per group, so taper >= 2 prices dedicated optics and
+    // taper = 1 halves the effective global beta — the hierarchical
+    // win must shift RIGHT as the taper drops (the contention-aware
+    // pricing schedule_coupled now sees).
+    println!("\n# contended vs dedicated global links (taper sweep), {RESNET20} f32");
+    println!(
+        "{:>6} {:>10} {:>14} {:>10} {:>14} {:>10}",
+        "N", "ring", "hier(taper=2)", "speedup", "hier(taper=1)", "speedup"
+    );
+    let hier_at = |taper: usize, n: usize| {
+        let fly = Dragonfly { global_taper: taper, ..Dragonfly::for_nodes(n) };
+        NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net }.allreduce_time(RESNET20, n)
+    };
+    let scales = [64usize, 128, 256, 512, 1024];
+    let mut contended_rows: Vec<Json> = Vec::new();
+    for n in scales {
+        let ring = NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(RESNET20, n);
+        let (ded, con) = (hier_at(2, n), hier_at(1, n));
+        println!(
+            "{n:>6} {ring:>10.3e} {ded:>14.3e} {:>9.2}x {con:>14.3e} {:>9.2}x",
+            ring / ded,
+            ring / con,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n_ranks".to_string(), Json::Num(n as f64));
+        row.insert("t_ring_s".into(), Json::Num(ring));
+        row.insert("t_hier_dedicated_s".into(), Json::Num(ded));
+        row.insert("t_hier_taper1_s".into(), Json::Num(con));
+        contended_rows.push(Json::Obj(row));
+    }
+    let crossover = |taper: usize| {
+        scales.into_iter().find(|&n| {
+            let ring =
+                NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(RESNET20, n);
+            hier_at(taper, n) < ring
+        })
+    };
+    let ded_cross = crossover(2).expect("dedicated hier must win somewhere in the sweep");
+    let con_cross = crossover(1).expect("contended hier must still win at the top of the sweep");
+    println!(
+        "\ncrossover: dedicated (taper>=2) wins from N={ded_cross}, \
+         taper=1 only from N={con_cross}"
+    );
+    assert!(
+        con_cross > ded_cross,
+        "contention must shift the hierarchical win right: \
+         taper=1 crossover N={con_cross} vs dedicated N={ded_cross}"
+    );
+
     // Machine-readable export: seeds the BENCH_*.json perf trajectory
-    // (wall measurements + the modelled crossover table), merged into
+    // (wall measurements + the modelled crossover tables), merged into
     // target/bench_results.json next to the control bench's section.
+    let mut contention = BTreeMap::new();
+    contention.insert("rows".to_string(), Json::Arr(contended_rows));
+    contention.insert("crossover_dedicated_n".into(), Json::Num(ded_cross as f64));
+    contention.insert("crossover_taper1_n".into(), Json::Num(con_cross as f64));
     let mut section = BTreeMap::new();
     section.insert("payload_elems".to_string(), Json::Num(RESNET20 as f64));
     section.insert("measurements".into(), b.results_json());
     section.insert("ring_vs_hier".into(), Json::Arr(crossover_rows));
+    section.insert("contention".into(), Json::Obj(contention));
     let path = write_bench_json("allreduce", Json::Obj(section)).expect("bench json");
     println!("\nbench JSON -> {}", path.display());
 }

@@ -129,6 +129,8 @@ struct PostedWindow {
     algo: crate::comm::AllReduceAlgo,
     wire_bytes: f64,
     ratio: f64,
+    /// The round rode its schedule as a control-plane probe.
+    probe: bool,
 }
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
@@ -337,6 +339,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     compress: None,
                                     compress_ratio: 1.0,
                                     wire_bytes: 0.0,
+                                    probe: false,
                                     event: Some(format!(
                                         "depart@{:.3}s epoch={epoch}",
                                         ev.at_s
@@ -452,6 +455,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 t_compute: ctrl.t_compute,
                                 t_allreduce: ctrl.t_allreduce,
                                 per_rank_t_c: ctrl.per_rank_t_c,
+                                // The completed round's shared phase
+                                // split and schedule — the probing
+                                // layer's calibration attribution.
+                                t_ar_local: out.phases.local_s,
+                                t_ar_global: out.phases.global_s,
+                                ran: Some(p.algo),
                             };
                             let prev = decision;
                             if pending_transition.is_none() {
@@ -484,6 +493,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                         decision.compress_ratio.unwrap_or(1.0),
                                     ));
                                 }
+                                if p.probe {
+                                    notes.push(format!("probe {}", p.algo.name()));
+                                }
                                 ctx.control_log.record(ControlRecord {
                                     worker: rank,
                                     window: window_idx,
@@ -500,6 +512,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     compress: Some(codec.name().to_string()),
                                     compress_ratio: p.ratio,
                                     wire_bytes: p.wire_bytes,
+                                    probe: p.probe,
                                     event: (!notes.is_empty()).then(|| notes.join("; ")),
                                 });
                             }
@@ -655,6 +668,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     compress: None,
                                     compress_ratio: 1.0,
                                     wire_bytes: 0.0,
+                                    probe: false,
                                     event: Some(format!(
                                         "epoch {epoch}: world {} (-{:?} +{:?})",
                                         world.len(),
@@ -719,6 +733,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 algo,
                                 wire_bytes: codec.wire_bytes(),
                                 ratio: codec.ratio() as f64,
+                                probe: decision.probe,
                             });
                             window_delta.iter_mut().for_each(|x| *x = 0.0);
                             window_idx += 1;
@@ -1053,6 +1068,7 @@ mod tests {
             beta_local: 1e9,
             alpha_global_s: 2e-6,
             beta_global: 2e8,
+            ..Dragonfly::default()
         };
         cfg.control.policy = ControlPolicy::ScheduleCoupled;
         cfg.control.k_max = 4;

@@ -17,11 +17,15 @@
 //! The schedule-aware comm refactor reaches this engine through the PS
 //! transfer cost: when the run's `NetModel` carries the hierarchical
 //! dragonfly schedule, [`crate::ps::PsClient::push_pull`] prices each
-//! worker's round-trip with `ptp_time_between(worker, 0, n)` — workers
-//! sharing rank 0's group (where the PS is hosted) ride the electrical
-//! links, everyone else crosses the optics. The many-to-few bottleneck
-//! the paper attributes to centralized schemes thus gains the placement
-//! asymmetry a real dragonfly imposes.
+//! worker's round-trip with the topology-aware point-to-point model —
+//! workers sharing rank 0's group (where the PS is hosted) ride the
+//! electrical links, everyone else crosses the optics **contended** by
+//! every other remote worker's crossings into the PS group
+//! ([`crate::comm::NetModel::ptp_time_between_flows`], sharing the
+//! [`crate::comm::GlobalContention`] model with the collective
+//! schedules). The many-to-few bottleneck the paper attributes to
+//! centralized schemes thus gains both the placement asymmetry and the
+//! tapered-fabric oversubscription a real dragonfly imposes.
 
 use std::time::Instant;
 
@@ -181,6 +185,39 @@ mod tests {
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
         assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
         assert!(report.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn tapered_optics_cost_the_centralized_run_sim_time() {
+        // Same hierarchical run at taper 2 (dedicated crossings) vs
+        // taper 1 (the two remote workers share one optic): the
+        // contended run must pay strictly more simulated time, and
+        // still converge.
+        let mk = |taper: usize| {
+            let mut cfg = base_cfg(Algo::Asgd);
+            cfg.name = format!("ps_taper{taper}");
+            let d = crate::comm::Dragonfly {
+                groups: 2,
+                nodes_per_group: 2,
+                global_taper: taper,
+                ..Default::default()
+            };
+            cfg.net = NetModel {
+                alpha_s: 1.5e-6,
+                beta_bytes_per_s: 10e9,
+                algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+            };
+            cfg
+        };
+        let dedicated = run(&mk(2), WorkerHarness::prepare(&mk(2)).unwrap()).unwrap();
+        let contended = run(&mk(1), WorkerHarness::prepare(&mk(1)).unwrap()).unwrap();
+        assert!(
+            contended.sim_time_s > dedicated.sim_time_s,
+            "contended {} not slower than dedicated {}",
+            contended.sim_time_s,
+            dedicated.sim_time_s
+        );
+        assert!(contended.final_val_err < 0.85);
     }
 
     #[test]

@@ -124,6 +124,10 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // with the piggybacked observation tail.
                     let now_before_wait = ctx.clock.now();
                     let algo = decision.schedule.unwrap_or(cfg.net.algo);
+                    // Whether this step's collective is a control-plane
+                    // probe (captured before on_window replaces the
+                    // decision below).
+                    let was_probe = decision.probe;
                     if let Some(r) = decision.compress_ratio {
                         codec.set_ratio(r);
                     }
@@ -161,6 +165,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         t_compute: ctrl.t_compute,
                         t_allreduce: ctrl.t_allreduce,
                         per_rank_t_c: ctrl.per_rank_t_c,
+                        t_ar_local: out.phases.local_s,
+                        t_ar_global: out.phases.global_s,
+                        ran: Some(algo),
                     });
                     if rank == 0 {
                         ctx.control_log.record(ControlRecord {
@@ -179,7 +186,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             compress: Some(codec.name().to_string()),
                             compress_ratio: codec.ratio() as f64,
                             wire_bytes: codec.wire_bytes(),
-                            event: None,
+                            probe: was_probe,
+                            event: was_probe.then(|| format!("probe {}", algo.name())),
                         });
                         if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
                             ctx.snapshots.put(Checkpoint {

@@ -367,6 +367,7 @@ impl WorkerCtx {
             compress: None,
             compress_ratio: 1.0,
             wire_bytes: 0.0,
+            probe: false,
             event: Some(format!(
                 "kill@{:.3}s detect@{:.3}s restored_from={restored_from}",
                 event.at_s, detect

@@ -17,11 +17,40 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-/// Message volume one rank moved, split by link class (f32 elements).
+use super::schedule::{PhaseTimes, LEADER_RING_FLOWS};
+use super::topology::Dragonfly;
+
+/// Message volume one rank moved, split by link class (f32 elements and
+/// message counts — the α and β inputs of the wire-level pricing).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct HierVolume {
     pub local_elems: usize,
     pub global_elems: usize,
+    /// Messages sent on intra-group links.
+    pub local_msgs: usize,
+    /// Messages sent on inter-group links.
+    pub global_msgs: usize,
+}
+
+impl HierVolume {
+    /// Price this rank's *measured* wire movement on the dragonfly's
+    /// links: per-message α plus bytes over β, with the global bytes
+    /// riding the **contended** leader-phase link (the identical
+    /// [`super::topology::GlobalContention`] pricing the cost model
+    /// uses, at [`LEADER_RING_FLOWS`] flows per group). This is the
+    /// differential check that modelled and wire-level t_AR agree under
+    /// load: a leader's priced global phase equals the model's leader
+    /// ring term whenever the chunks divide evenly.
+    pub fn priced(&self, d: &Dragonfly) -> PhaseTimes {
+        let ll = d.local_link();
+        let gl = d.contended_global_link(LEADER_RING_FLOWS);
+        PhaseTimes {
+            local_s: self.local_msgs as f64 * ll.alpha_s
+                + self.local_elems as f64 * 4.0 / ll.beta_bytes_per_s,
+            global_s: self.global_msgs as f64 * gl.alpha_s
+                + self.global_elems as f64 * 4.0 / gl.beta_bytes_per_s,
+        }
+    }
 }
 
 /// Per-rank endpoint of a hierarchical network.
@@ -117,22 +146,24 @@ pub fn hier_network(n: usize, nodes_per_group: usize) -> Vec<HierComm> {
 }
 
 /// One textbook ring all-reduce (reduce-scatter + all-gather) over the
-/// given unidirectional ring endpoints; returns elements sent.
+/// given unidirectional ring endpoints; returns (elements, messages)
+/// sent.
 fn ring_allreduce(
     buf: &mut [f32],
     ring_rank: usize,
     ring_n: usize,
     tx: &Sender<Vec<f32>>,
     rx: &Receiver<Vec<f32>>,
-) -> usize {
+) -> (usize, usize) {
     let n = ring_n;
     if n == 1 {
-        return 0;
+        return (0, 0);
     }
     let len = buf.len();
     let per = len.div_ceil(n);
     let bounds = |c: usize| ((c * per).min(len), ((c + 1) * per).min(len));
     let mut sent = 0usize;
+    let mut msgs = 0usize;
 
     // Phase 1: reduce-scatter. At step s, rank r sends chunk (r − s)
     // mod n and receives+accumulates chunk (r − s − 1) mod n.
@@ -140,6 +171,7 @@ fn ring_allreduce(
         let (a, b) = bounds((ring_rank + n - s) % n);
         tx.send(buf[a..b].to_vec()).expect("ring peer alive");
         sent += b - a;
+        msgs += 1;
         let (a, b) = bounds((ring_rank + n - s - 1) % n);
         let incoming = rx.recv().expect("ring peer alive");
         assert_eq!(incoming.len(), b - a, "chunk size mismatch");
@@ -153,12 +185,13 @@ fn ring_allreduce(
         let (a, b) = bounds((ring_rank + 1 + n - s) % n);
         tx.send(buf[a..b].to_vec()).expect("ring peer alive");
         sent += b - a;
+        msgs += 1;
         let (a, b) = bounds((ring_rank + n - s) % n);
         let incoming = rx.recv().expect("ring peer alive");
         assert_eq!(incoming.len(), b - a, "chunk size mismatch");
         buf[a..b].copy_from_slice(&incoming);
     }
-    sent
+    (sent, msgs)
 }
 
 impl HierComm {
@@ -193,7 +226,9 @@ impl HierComm {
         if self.group_len > 1 {
             let tx = self.local_tx.as_ref().expect("local ring endpoint");
             let rx = self.local_rx.as_ref().expect("local ring endpoint");
-            vol.local_elems += ring_allreduce(buf, self.group_rank, self.group_len, tx, rx);
+            let (elems, msgs) = ring_allreduce(buf, self.group_rank, self.group_len, tx, rx);
+            vol.local_elems += elems;
+            vol.local_msgs += msgs;
         }
         if self.n_groups == 1 {
             return vol; // the group sum is already the global sum
@@ -203,7 +238,9 @@ impl HierComm {
         if self.is_leader() {
             let tx = self.leader_tx.as_ref().expect("leader ring endpoint");
             let rx = self.leader_rx.as_ref().expect("leader ring endpoint");
-            vol.global_elems += ring_allreduce(buf, self.group, self.n_groups, tx, rx);
+            let (elems, msgs) = ring_allreduce(buf, self.group, self.n_groups, tx, rx);
+            vol.global_elems += elems;
+            vol.global_msgs += msgs;
         }
 
         // Phase 3 (local links): leaders fan the result out.
@@ -211,6 +248,7 @@ impl HierComm {
             for tx in &self.bcast_tx {
                 tx.send(buf.to_vec()).expect("member alive");
                 vol.local_elems += buf.len();
+                vol.local_msgs += 1;
             }
         } else {
             let rx = self.bcast_rx.as_ref().expect("bcast endpoint");
@@ -334,6 +372,65 @@ mod tests {
             let ring_buf = h.join().unwrap();
             for (a, b) in ring_buf.iter().zip(&hier_out[0].0) {
                 assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_priced_global_phase_matches_model_under_contention() {
+        // A leader's priced global phase must equal the cost model's
+        // leader-ring term — dedicated AND contended — whenever the
+        // ring chunks divide evenly: the wire executor and the
+        // schedule model price the same bytes through the same
+        // GlobalContention.
+        use crate::comm::schedule::{CollectiveSchedule, Hierarchical};
+        let (n, m, len) = (8usize, 4usize, 1024usize); // G = 2, len % G == 0
+        for taper in [2usize, 1] {
+            let d = Dragonfly {
+                groups: 2,
+                nodes_per_group: m,
+                global_taper: taper,
+                ..Dragonfly::default()
+            };
+            let out = run_hier(n, m, len, 11 + taper as u64);
+            let model = Hierarchical { topology: d }.allreduce_phases(len, n);
+            // ranks 0 and 4 are the two leaders
+            for leader in [0usize, 4] {
+                let priced = out[leader].1.priced(&d);
+                assert!(
+                    (priced.global_s - model.global_s).abs() <= 1e-12 * model.global_s.max(1.0),
+                    "taper {taper}: wire-priced global {} vs modelled {}",
+                    priced.global_s,
+                    model.global_s
+                );
+            }
+            // members never touch (or get priced on) global links
+            for member in [1usize, 2, 3, 5, 6, 7] {
+                assert_eq!(out[member].1.priced(&d).global_s, 0.0);
+            }
+        }
+        // and the contended pricing is strictly slower than dedicated
+        let vol = run_hier(n, m, len, 17)[0].1;
+        let ded =
+            Dragonfly { groups: 2, nodes_per_group: m, global_taper: 2, ..Dragonfly::default() };
+        let con = Dragonfly { global_taper: 1, ..ded };
+        assert!(vol.priced(&con).global_s > vol.priced(&ded).global_s);
+        assert_eq!(vol.priced(&con).local_s, vol.priced(&ded).local_s);
+    }
+
+    #[test]
+    fn message_counts_match_ring_schedule_shape() {
+        // 8 ranks in 2 groups of 4: a member sends 2(m−1) local ring
+        // messages; a leader adds 2(G−1) global messages plus m−1
+        // fan-out sends.
+        let out = run_hier(8, 4, 1024, 12);
+        for (rank, (_, vol)) in out.iter().enumerate() {
+            if rank % 4 == 0 {
+                assert_eq!(vol.global_msgs, 2, "leader {rank}");
+                assert_eq!(vol.local_msgs, 2 * 3 + 3, "leader {rank}");
+            } else {
+                assert_eq!(vol.global_msgs, 0, "member {rank}");
+                assert_eq!(vol.local_msgs, 2 * 3, "member {rank}");
             }
         }
     }

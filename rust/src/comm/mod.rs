@@ -72,8 +72,8 @@ pub mod ring;
 pub mod schedule;
 pub mod topology;
 
-pub use schedule::{CollectiveSchedule, Link, PhaseTimes};
-pub use topology::Dragonfly;
+pub use schedule::{CollectiveSchedule, Link, PhaseTimes, LEADER_RING_FLOWS};
+pub use topology::{Dragonfly, GlobalContention};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -172,15 +172,33 @@ impl NetModel {
     /// Topology-aware point-to-point time between two ranks: under a
     /// hierarchical schedule, ranks in the same dragonfly group talk
     /// over local links, others pay the global link; flat schedules
-    /// fall back to [`NetModel::ptp_time`].
+    /// fall back to [`NetModel::ptp_time`]. Prices a single dedicated
+    /// flow — see [`NetModel::ptp_time_between_flows`] for the
+    /// contended form.
     pub fn ptp_time_between(&self, from: usize, to: usize, n_elems: usize) -> f64 {
+        self.ptp_time_between_flows(from, to, n_elems, 1)
+    }
+
+    /// [`NetModel::ptp_time_between`] with `flows` concurrent
+    /// cross-group transfers sharing the tapered per-group global links
+    /// ([`GlobalContention`]) — how the parameter-server engines price
+    /// the many-to-few crossings into the PS's group. Same-group
+    /// transfers and flat fabrics never contend.
+    pub fn ptp_time_between_flows(
+        &self,
+        from: usize,
+        to: usize,
+        n_elems: usize,
+        flows: usize,
+    ) -> f64 {
         match self.algo {
             AllReduceAlgo::Hierarchical(d) => {
                 let bytes = n_elems as f64 * 4.0;
                 if d.group_of(from) == d.group_of(to) {
                     d.alpha_local_s + bytes / d.beta_local
                 } else {
-                    d.alpha_global_s + bytes / d.beta_global
+                    let link = d.contended_global_link(flows);
+                    link.alpha_s + bytes / link.beta_bytes_per_s
                 }
             }
             _ => self.ptp_time(n_elems),
@@ -1126,6 +1144,24 @@ mod tests {
         // flat schedules ignore rank placement
         let flat = NetModel::default();
         assert_eq!(flat.ptp_time_between(0, 3, 1000), flat.ptp_time(1000));
+    }
+
+    #[test]
+    fn contended_ptp_slows_cross_group_transfers_only() {
+        let d = Dragonfly { groups: 2, nodes_per_group: 2, global_taper: 1, ..Dragonfly::default() };
+        let net = NetModel { algo: AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        // one flow: dedicated, identical to the flows-free spelling
+        assert_eq!(net.ptp_time_between_flows(0, 2, 1000, 1), net.ptp_time_between(0, 2, 1000));
+        // three concurrent crossings over one optic: bandwidth term ×3
+        let one = net.ptp_time_between(0, 2, 1000);
+        let three = net.ptp_time_between_flows(0, 2, 1000, 3);
+        let bw = 1000.0 * 4.0 / d.beta_global;
+        assert!((three - one - 2.0 * bw).abs() < 1e-15, "{three} vs {one} + 2×{bw}");
+        // same-group transfers never contend
+        assert_eq!(net.ptp_time_between_flows(0, 1, 1000, 64), net.ptp_time_between(0, 1, 1000));
+        // flat fabrics ignore the flows argument entirely
+        let flat = NetModel::default();
+        assert_eq!(flat.ptp_time_between_flows(0, 3, 1000, 64), flat.ptp_time(1000));
     }
 
     // --- membership epochs ---

@@ -35,6 +35,16 @@
 //! construction (asserted by the schedule-equivalence proptests); the
 //! wire-level [`super::hier`] executor is the differential check that
 //! the grouped data movement really computes the same reduction.
+//!
+//! Phase-split accounting invariant: `local_s + global_s` **is** the
+//! reported total ([`PhaseTimes::total`] never holds anything the
+//! phases don't), flat schedules report all time as local (one link
+//! class), and the hierarchical global phase is priced on the
+//! *contended* per-group optics — [`LEADER_RING_FLOWS`] concurrent
+//! flows over [`Dragonfly::global_taper`] links (see
+//! [`super::topology::GlobalContention`]) — so a taper of 1 slows the
+//! leader phases and shifts the flat-vs-hierarchical crossover right,
+//! exactly what `benches/allreduce.rs` tabulates.
 
 use super::topology::Dragonfly;
 
@@ -222,9 +232,23 @@ fn flat_reduce_scatter(link: Link, n_elems: usize, n_ranks: usize) -> PhaseTimes
     PhaseTimes::local((n - 1.0) * link.hop(bytes_of(n_elems) / n))
 }
 
+/// Concurrent inter-group flows one dragonfly group's global links
+/// carry during the hierarchical schedule's leader phases: the leader's
+/// egress and ingress are in flight simultaneously at every ring (and
+/// widest tree) step. With [`Dragonfly::global_taper`] `>=` this, the
+/// leader phases ride dedicated optics; below it they contend.
+pub const LEADER_RING_FLOWS: usize = 2;
+
 /// The Layered-SGD hierarchical schedule over a dragonfly: intra-group
 /// ring all-reduce (local links) → leader ring across groups (global
 /// links) → local broadcast of the result.
+///
+/// The leader phases are priced on the **contended** global link: each
+/// group's [`LEADER_RING_FLOWS`] concurrent flows share its
+/// `global_taper` optics (see
+/// [`GlobalContention`](super::topology::GlobalContention)), so a
+/// tapered fabric honestly slows the global phase instead of pretending
+/// the leader ring owns dedicated optics.
 #[derive(Debug, Clone, Copy)]
 pub struct Hierarchical {
     pub topology: Dragonfly,
@@ -232,17 +256,13 @@ pub struct Hierarchical {
 
 impl Hierarchical {
     fn local_link(&self) -> Link {
-        Link {
-            alpha_s: self.topology.alpha_local_s,
-            beta_bytes_per_s: self.topology.beta_local,
-        }
+        self.topology.local_link()
     }
 
+    /// The per-flow global link during the leader phases — contended by
+    /// the [`LEADER_RING_FLOWS`] flows every group keeps in flight.
     fn global_link(&self) -> Link {
-        Link {
-            alpha_s: self.topology.alpha_global_s,
-            beta_bytes_per_s: self.topology.beta_global,
-        }
+        self.topology.contended_global_link(LEADER_RING_FLOWS)
     }
 
     /// (ranks per group, groups spanned) at a given scale.
@@ -408,6 +428,56 @@ mod tests {
             topology: Dragonfly { groups: 1, nodes_per_group: 16, ..Dragonfly::default() },
         };
         assert_eq!(single.allreduce_phases(1_000_000, 16).global_s, 0.0);
+    }
+
+    #[test]
+    fn contended_taper_slows_only_the_global_phase() {
+        let ded_topo = Dragonfly { global_taper: 2, ..Dragonfly::default() };
+        let con_topo = Dragonfly { global_taper: 1, ..Dragonfly::default() };
+        let dedicated = Hierarchical { topology: ded_topo };
+        let contended = Hierarchical { topology: con_topo };
+        let (elems, n) = (1_000_000, 128);
+        let pd = dedicated.allreduce_phases(elems, n);
+        let pc = contended.allreduce_phases(elems, n);
+        assert_eq!(pc.local_s, pd.local_s, "contention must not touch local links");
+        assert!(pc.global_s > pd.global_s, "taper 1 must slow the leader ring");
+        // α terms are untouched: the slowdown is exactly the extra
+        // bandwidth time, β halved on the global payload.
+        let gl = dedicated.topology.global_link();
+        let g = n.div_ceil(dedicated.topology.nodes_per_group) as f64;
+        let extra = 2.0 * (g - 1.0) * (elems as f64 * 4.0 / g) / gl.beta_bytes_per_s;
+        assert!(
+            (pc.global_s - pd.global_s - extra).abs() < 1e-12 * pd.global_s.max(1.0),
+            "slowdown must be pure bandwidth: got {} want {}",
+            pc.global_s - pd.global_s,
+            extra
+        );
+        // the secondary collectives contend the same way
+        assert!(
+            contended.allgather_phases(1000, n).global_s
+                > dedicated.allgather_phases(1000, n).global_s
+        );
+        assert!(
+            contended.reduce_scatter_phases(elems, n).global_s
+                > dedicated.reduce_scatter_phases(elems, n).global_s
+        );
+        assert!(
+            contended.bcast_phases(elems, n).global_s
+                > dedicated.bcast_phases(elems, n).global_s
+        );
+    }
+
+    #[test]
+    fn taper_at_or_above_leader_flows_is_dedicated() {
+        // Anything >= LEADER_RING_FLOWS prices identically — the
+        // equality anchor that keeps the default model bit-stable.
+        let at_topo = Dragonfly { global_taper: LEADER_RING_FLOWS, ..Dragonfly::default() };
+        let above_topo = Dragonfly { global_taper: 8, ..Dragonfly::default() };
+        let at = Hierarchical { topology: at_topo };
+        let above = Hierarchical { topology: above_topo };
+        let pa = at.allreduce_phases(271_690, 256);
+        let pb = above.allreduce_phases(271_690, 256);
+        assert_eq!(pa, pb);
     }
 
     #[test]

@@ -6,6 +6,23 @@
 //! collective schedule (intra-group ring → leader ring → local
 //! broadcast, per Layered SGD).
 //!
+//! ## Global-link contention
+//!
+//! Real dragonflies do not give every inter-group flow a dedicated
+//! optic: each group owns [`Dragonfly::global_taper`] global links, and
+//! every flow that crosses the group boundary *shares* them.
+//! [`GlobalContention`] is the shared pricing rule — `flows` concurrent
+//! flows over `links` links divide the per-link bandwidth β by
+//! `max(1, flows/links)` while the latency α is untouched (contention
+//! queues bytes, not handshakes). The hierarchical schedule prices its
+//! leader phases through it (see
+//! [`super::schedule::LEADER_RING_FLOWS`]), the wire-level executor
+//! prices its measured volumes through it
+//! ([`super::hier::HierVolume::priced`]), and the parameter-server
+//! engines price worker↔PS crossings through it
+//! ([`super::NetModel::ptp_time_between_flows`]) — one model, three
+//! consumers, so modelled and wire-level t_AR agree under load.
+//!
 //! Historically this module *flattened* the hierarchical schedule back
 //! into an effective α-β pair so the engines (which only understood the
 //! flat model) could approximate it; that hack is retired — engines now
@@ -13,12 +30,51 @@
 //! [`Dragonfly::effective_net_model`] is kept as an explicit ablation
 //! utility (how wrong is the flattening?) for the comm benches.
 
-use super::schedule::{CollectiveSchedule, Hierarchical, PhaseTimes};
+use super::schedule::{CollectiveSchedule, Hierarchical, Link, PhaseTimes};
 use super::{AllReduceAlgo, NetModel};
+
+/// Contention on one dragonfly group's tapered global links: `flows`
+/// concurrent inter-group flows sharing `links` optics. Up to `links`
+/// flows each get a full-bandwidth link; beyond that they divide the
+/// capacity fairly. α is a per-message handshake, not a capacity — it
+/// never contends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalContention {
+    /// Global links the group owns (the taper).
+    pub links: usize,
+    /// Concurrent flows crossing the group boundary.
+    pub flows: usize,
+}
+
+impl GlobalContention {
+    /// A single flow on its own optic — the dedicated baseline. One
+    /// concurrent flow never contends, whatever the taper.
+    pub fn dedicated() -> Self {
+        GlobalContention { links: 1, flows: 1 }
+    }
+
+    /// Bandwidth-division factor ≥ 1: `flows / links` once the links
+    /// are oversubscribed, 1 while every flow still has its own optic.
+    pub fn slowdown(&self) -> f64 {
+        let links = self.links.max(1) as f64;
+        let flows = self.flows.max(1) as f64;
+        (flows / links).max(1.0)
+    }
+
+    /// The effective per-flow link: β divided by [`Self::slowdown`],
+    /// α unchanged.
+    pub fn contend(&self, link: Link) -> Link {
+        Link {
+            alpha_s: link.alpha_s,
+            beta_bytes_per_s: link.beta_bytes_per_s / self.slowdown(),
+        }
+    }
+}
 
 /// A two-level dragonfly abstraction: `groups` fully-connected groups of
 /// `nodes_per_group` nodes; intra-group links are fast (electrical),
-/// inter-group links slower (optical, tapered).
+/// inter-group links slower (optical, tapered) and **shared** — see
+/// [`GlobalContention`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Dragonfly {
     pub groups: usize,
@@ -29,12 +85,20 @@ pub struct Dragonfly {
     /// Inter-group latency / bandwidth (per global link).
     pub alpha_global_s: f64,
     pub beta_global: f64,
+    /// Global links per group (the taper). The hierarchical leader
+    /// phases keep [`super::schedule::LEADER_RING_FLOWS`] flows in
+    /// flight per group, so the default of 2 prices them on dedicated
+    /// optics (bit-identical to the pre-contention model);
+    /// `global_taper = 1` oversubscribes the group boundary and halves
+    /// the leader ring's effective β.
+    pub global_taper: usize,
 }
 
 impl Default for Dragonfly {
     fn default() -> Self {
         // Aries-like: ~1.2 µs within a group, ~2.2 µs across optics;
-        // 14 GB/s electrical, 4.7 GB/s per-node tapered global.
+        // 14 GB/s electrical, 4.7 GB/s per-node tapered global, two
+        // global links per group (leader traffic rides dedicated).
         Dragonfly {
             groups: 4,
             nodes_per_group: 32,
@@ -42,6 +106,7 @@ impl Default for Dragonfly {
             beta_local: 14e9,
             alpha_global_s: 2.2e-6,
             beta_global: 4.7e9,
+            global_taper: 2,
         }
     }
 }
@@ -83,6 +148,29 @@ impl Dragonfly {
     /// The number of groups spanned by `n_ranks` ranks.
     pub fn groups_spanned(&self, n_ranks: usize) -> usize {
         n_ranks.div_ceil(self.nodes_per_group.max(1)).max(1)
+    }
+
+    /// The intra-group (electrical) α-β link.
+    pub fn local_link(&self) -> Link {
+        Link { alpha_s: self.alpha_local_s, beta_bytes_per_s: self.beta_local }
+    }
+
+    /// One inter-group (optical) α-β link, uncontended.
+    pub fn global_link(&self) -> Link {
+        Link { alpha_s: self.alpha_global_s, beta_bytes_per_s: self.beta_global }
+    }
+
+    /// The contention state of one group's global links under `flows`
+    /// concurrent inter-group flows.
+    pub fn contention(&self, flows: usize) -> GlobalContention {
+        GlobalContention { links: self.global_taper, flows }
+    }
+
+    /// The effective per-flow global link under `flows` concurrent
+    /// inter-group flows — [`Dragonfly::global_link`] with β divided by
+    /// the [`GlobalContention::slowdown`].
+    pub fn contended_global_link(&self, flows: usize) -> Link {
+        self.contention(flows).contend(self.global_link())
     }
 
     /// This topology's hierarchical schedule object.
@@ -134,6 +222,7 @@ impl Dragonfly {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::LEADER_RING_FLOWS;
 
     #[test]
     fn single_group_is_pure_local_ring() {
@@ -177,13 +266,85 @@ mod tests {
 
     #[test]
     fn refit_keeps_links_and_recomputes_shape() {
-        let d = Dragonfly { beta_global: 9.9e9, ..Dragonfly::for_nodes(64) };
+        let d = Dragonfly { beta_global: 9.9e9, global_taper: 1, ..Dragonfly::for_nodes(64) };
         let r = d.refit(48);
         assert!(r.n_nodes() >= 48);
         assert_eq!(r.beta_global, 9.9e9, "link parameters must survive the refit");
+        assert_eq!(r.global_taper, 1, "the taper is a link parameter: it survives the refit");
         assert_eq!(r.groups, Dragonfly::for_nodes(48).groups);
-        // growing back re-derives again
+        // growing back re-derives again, still carrying the taper
         assert!(d.refit(80).n_nodes() >= 80);
+        assert_eq!(d.refit(80).global_taper, 1);
+    }
+
+    #[test]
+    fn refit_chain_across_membership_transitions_preserves_contention_params() {
+        // The elastic-membership path refits at every epoch (64 → 48 →
+        // 80); the contention parameters must ride through the whole
+        // chain, and the contended pricing must stay consistent with a
+        // fresh topology of the same shape.
+        let d0 = Dragonfly {
+            beta_global: 3.3e9,
+            alpha_global_s: 5e-6,
+            global_taper: 1,
+            ..Dragonfly::for_nodes(64)
+        };
+        let d1 = d0.refit(48);
+        let d2 = d1.refit(80);
+        for d in [d1, d2] {
+            assert_eq!(d.global_taper, 1);
+            assert_eq!(d.beta_global, 3.3e9);
+            assert_eq!(d.alpha_global_s, 5e-6);
+        }
+        let fresh = Dragonfly {
+            beta_global: 3.3e9,
+            alpha_global_s: 5e-6,
+            global_taper: 1,
+            ..Dragonfly::for_nodes(80)
+        };
+        assert_eq!(d2, fresh, "refit chain must agree with a fresh derivation");
+    }
+
+    #[test]
+    fn contention_divides_bandwidth_never_latency() {
+        let link = Link { alpha_s: 2e-6, beta_bytes_per_s: 4e9 };
+        // one flow never contends, whatever the taper
+        for links in [1usize, 2, 8] {
+            let c = GlobalContention { links, flows: 1 };
+            assert_eq!(c.slowdown(), 1.0);
+            assert_eq!(c.contend(link), link);
+        }
+        assert_eq!(GlobalContention::dedicated().contend(link), link);
+        // flows within the taper ride dedicated links
+        assert_eq!(GlobalContention { links: 4, flows: 4 }.slowdown(), 1.0);
+        // oversubscription divides β fairly, α unchanged
+        let c = GlobalContention { links: 1, flows: 2 };
+        assert_eq!(c.slowdown(), 2.0);
+        let eff = c.contend(link);
+        assert_eq!(eff.alpha_s, link.alpha_s);
+        assert_eq!(eff.beta_bytes_per_s, link.beta_bytes_per_s / 2.0);
+        // degenerate inputs clamp instead of dividing by zero
+        assert_eq!(GlobalContention { links: 0, flows: 0 }.slowdown(), 1.0);
+    }
+
+    #[test]
+    fn contended_global_link_prices_the_taper() {
+        let d = Dragonfly { global_taper: 2, ..Dragonfly::default() };
+        assert_eq!(d.contended_global_link(1), d.global_link());
+        assert_eq!(d.contended_global_link(2), d.global_link());
+        let over = d.contended_global_link(4);
+        assert_eq!(over.alpha_s, d.alpha_global_s);
+        assert_eq!(over.beta_bytes_per_s, d.beta_global / 2.0);
+    }
+
+    #[test]
+    fn default_taper_keeps_leader_ring_dedicated() {
+        // The compatibility anchor: at the default taper the leader
+        // ring's LEADER_RING_FLOWS concurrent flows see no slowdown, so
+        // every pre-contention hierarchical cost is reproduced exactly.
+        let d = Dragonfly::default();
+        assert!(d.global_taper >= LEADER_RING_FLOWS);
+        assert_eq!(d.contention(LEADER_RING_FLOWS).slowdown(), 1.0);
     }
 
     #[test]

@@ -14,7 +14,9 @@ use anyhow::{bail, Context, Result};
 use crate::algo::Algo;
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
 use crate::compress::{CompressConfig, CompressorKind};
-use crate::control::{ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent};
+use crate::control::{
+    ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent, ProbeMode,
+};
 use crate::simtime::ComputeModel;
 
 /// Full description of one training run.
@@ -220,6 +222,8 @@ impl ExperimentConfig {
         let mut comm_beta_local: Option<f64> = None;
         let mut comm_alpha_global: Option<f64> = None;
         let mut comm_beta_global: Option<f64> = None;
+        // `[comm.contention]` table: global links per group.
+        let mut comm_taper: Option<usize> = None;
         for (key, val) in &map {
             let k = key.as_str();
             let err = || anyhow::anyhow!("bad value for {k}");
@@ -266,6 +270,9 @@ impl ExperimentConfig {
                     comm_alpha_global = Some(val.as_f64().ok_or_else(err)?)
                 }
                 "comm.beta_global" => comm_beta_global = Some(val.as_f64().ok_or_else(err)?),
+                "comm.contention.global_taper" => {
+                    comm_taper = Some(val.as_i64().ok_or_else(err)? as usize)
+                }
                 "compute.sec_per_sample" => {
                     cfg.compute.sec_per_sample = val.as_f64().ok_or_else(err)?
                 }
@@ -292,6 +299,15 @@ impl ExperimentConfig {
                 }
                 "control.schedule_hysteresis" => {
                     cfg.control.schedule_hysteresis = val.as_f64().ok_or_else(err)?
+                }
+                "control.probe" => {
+                    cfg.control.probe = ProbeMode::parse(val.as_str().ok_or_else(err)?)?
+                }
+                "control.probe_interval" => {
+                    cfg.control.probe_interval = val.as_i64().ok_or_else(err)? as u64
+                }
+                "control.probe_epsilon" => {
+                    cfg.control.probe_epsilon = val.as_f64().ok_or_else(err)?
                 }
                 "control.straggler_factor" => {
                     cfg.control.straggler_factor = val.as_f64().ok_or_else(err)?
@@ -409,6 +425,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = comm_beta_global {
             d.beta_global = v;
+        }
+        if let Some(t) = comm_taper {
+            d.global_taper = t.max(1);
         }
         cfg.dragonfly = d;
         if let Some(name) = comm_schedule.or(legacy_net_algo) {
@@ -949,6 +968,56 @@ mod tests {
             "nodes = 2\n[[control.fault]]\nrank = 7\nat_s = 1.0\nkind = \"kill\""
         )
         .is_err());
+    }
+
+    #[test]
+    fn comm_contention_table_parses_and_binds_the_taper() {
+        let doc = r#"
+            nodes = 8
+
+            [comm]
+            schedule = "hierarchical"
+            groups = 2
+            nodes_per_group = 4
+
+            [comm.contention]
+            global_taper = 1
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.dragonfly.global_taper, 1);
+        match cfg.net.algo {
+            AllReduceAlgo::Hierarchical(d) => assert_eq!(d.global_taper, 1),
+            other => panic!("expected hierarchical, got {other:?}"),
+        }
+        // unset taper keeps the dedicated default
+        let plain = ExperimentConfig::from_toml_str("nodes = 8").unwrap();
+        assert_eq!(plain.dragonfly.global_taper, crate::comm::Dragonfly::default().global_taper);
+        // degenerate taper clamps to 1 instead of dividing by zero
+        let z = ExperimentConfig::from_toml_str("[comm.contention]\nglobal_taper = 0").unwrap();
+        assert_eq!(z.dragonfly.global_taper, 1);
+    }
+
+    #[test]
+    fn control_probe_knobs_parse() {
+        let doc = r#"
+            [control]
+            policy = "schedule_coupled"
+            probe = "interval"
+            probe_interval = 5
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.control.probe, ProbeMode::Interval);
+        assert_eq!(cfg.control.probe_interval, 5);
+        let bandit = ExperimentConfig::from_toml_str(
+            "[control]\nprobe = \"bandit\"\nprobe_epsilon = 0.25",
+        )
+        .unwrap();
+        assert_eq!(bandit.control.probe, ProbeMode::Bandit);
+        assert_eq!(bandit.control.probe_epsilon, 0.25);
+        // bad values rejected
+        assert!(ExperimentConfig::from_toml_str("[control]\nprobe = \"sometimes\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[control]\nprobe_interval = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[control]\nprobe_epsilon = 2.0").is_err());
     }
 
     #[test]

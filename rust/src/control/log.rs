@@ -54,6 +54,10 @@ pub struct ControlRecord {
     /// Achieved per-rank wire payload of the round, in bytes (0 for
     /// records without a collective).
     pub wire_bytes: f64,
+    /// The window ran its schedule as a control-plane **probe** of a
+    /// non-active candidate (a one-window excursion, excluded from the
+    /// schedule-switch accounting).
+    pub probe: bool,
     /// Fault / recovery / quarantine annotation, if any.
     pub event: Option<String>,
 }
@@ -89,6 +93,7 @@ impl ControlRecord {
         m.insert("compress".into(), opt_str(&self.compress));
         m.insert("compress_ratio".into(), num(self.compress_ratio));
         m.insert("wire_bytes".into(), num(self.wire_bytes));
+        m.insert("probe".into(), Json::Bool(self.probe));
         m.insert("event".into(), opt_str(&self.event));
         Json::Obj(m)
     }
@@ -144,7 +149,10 @@ impl ControlLog {
 
     /// Aggregate comm-phase accounting over the decision trace (records
     /// carrying a collective, i.e. `schedule.is_some()`), computed in a
-    /// single ordered pass over one snapshot of the log.
+    /// single ordered pass over one snapshot of the log. Probe windows
+    /// count into the phase totals and the `probe` sub-summary, but a
+    /// probe excursion (and the return from it) is **not** a schedule
+    /// switch — only changes between non-probe windows are.
     pub fn comm_summary(&self) -> CommPhaseSummary {
         let records = self.records();
         let mut s = CommPhaseSummary::default();
@@ -154,10 +162,14 @@ impl ControlLog {
                 s.local_s += r.t_ar_local;
                 s.global_s += r.t_ar_global;
                 s.rounds += 1;
-                if prev.is_some_and(|p| p != name) {
-                    s.schedule_switches += 1;
+                if r.probe {
+                    s.probe_rounds += 1;
+                } else {
+                    if prev.is_some_and(|p| p != name) {
+                        s.schedule_switches += 1;
+                    }
+                    prev = Some(name);
                 }
-                prev = Some(name);
             }
         }
         s
@@ -221,6 +233,7 @@ mod tests {
             compress: event.is_none().then(|| "none".to_string()),
             compress_ratio: 1.0,
             wire_bytes: 4000.0,
+            probe: false,
             event: event.map(String::from),
         }
     }
@@ -256,6 +269,30 @@ mod tests {
     }
 
     #[test]
+    fn probe_rounds_counted_and_excluded_from_switches() {
+        let log = ControlLog::new();
+        log.record(rec(0, 0, 1, None)); // ring
+        let mut probe = rec(0, 2, 1, None); // probe excursion onto hier
+        probe.schedule = Some("hierarchical".into());
+        probe.probe = true;
+        log.record(probe);
+        log.record(rec(0, 4, 1, None)); // back on ring: NOT a switch
+        let mut switched = rec(0, 6, 1, None); // a real switch
+        switched.schedule = Some("hierarchical".into());
+        log.record(switched);
+        let s = log.comm_summary();
+        assert_eq!(s.rounds, 4, "probe rounds still count into the totals");
+        assert_eq!(s.probe_rounds, 1);
+        assert_eq!(s.schedule_switches, 1, "the probe excursion must not count as switches");
+        let j = s.to_json();
+        assert_eq!(
+            j.get("probe").unwrap().get("rounds").unwrap().as_f64(),
+            Some(1.0),
+            "probe summary missing from the comm JSON"
+        );
+    }
+
+    #[test]
     fn compress_summary_tracks_ratio_and_bytes() {
         let log = ControlLog::new();
         log.record(rec(0, 0, 1, None)); // ratio 1.0, 4000 B
@@ -288,6 +325,7 @@ mod tests {
         assert_eq!(arr[0].get("t_ar_local").unwrap().as_f64(), Some(1.5e-3));
         assert_eq!(arr[1].get("event").unwrap().as_str(), Some("recovered"));
         assert_eq!(arr[0].get("event"), Some(&Json::Null));
+        assert_eq!(arr[0].get("probe"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -13,9 +13,12 @@
 //! * [`staleness`] — the [`StalenessController`] policies ([`Fixed`],
 //!   [`DssPid`], [`LambdaCoupled`], [`ScheduleCoupled`],
 //!   [`CompressCoupled`]) that adapt k, λ0, the collective schedule and
-//!   the compression ratio from observed t_C / t_AR, and quarantine
-//!   persistent stragglers inside their dragonfly group, consulted by
-//!   the engines at every wait/post boundary.
+//!   the compression ratio from observed t_C / t_AR, quarantine
+//!   persistent stragglers inside their dragonfly group, and — with
+//!   [`ProbeMode`] enabled — periodically run the *inactive* candidate
+//!   schedule for one window so its α-β calibration tracks fabric
+//!   drift instead of rotting; consulted by the engines at every
+//!   wait/post boundary.
 //! * [`chaos`] — the [`FaultPlan`] / [`ChaosInjector`] that script
 //!   kills, slowdowns and stalls in virtual time, with heartbeat
 //!   detection ([`HeartbeatBoard`]) and checkpoint recovery
@@ -50,8 +53,8 @@ pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard,
 pub use log::{ControlLog, ControlRecord};
 pub use membership::{param_crc, EpochRecord, EpochTrace, JoinEvent, MembershipLog};
 pub use staleness::{
-    CompressCoupled, Decision, DssPid, Fixed, LambdaCoupled, Quarantine, ScheduleCoupled,
-    ScheduleEnv, StalenessController, WindowObs,
+    CompressCoupled, Decision, DssPid, Fixed, LambdaCoupled, ProbeCfg, ProbeMode, Quarantine,
+    ScheduleCoupled, ScheduleEnv, StalenessController, WindowObs,
 };
 
 use anyhow::{bail, Result};
@@ -127,6 +130,16 @@ pub struct ControlConfig {
     /// undercut the active schedule's before [`ScheduleCoupled`]
     /// switches to it (noise guard against schedule flapping).
     pub schedule_hysteresis: f64,
+    /// Online schedule probing ([`ProbeMode`]): `off` trusts the cost
+    /// models (the pre-probing behavior), `interval` runs the inactive
+    /// candidate for one window every `probe_interval` windows,
+    /// `bandit` alternates the arms ε-greedily.
+    pub probe: ProbeMode,
+    /// Windows between probes (`interval` mode).
+    pub probe_interval: u64,
+    /// Exploration rate of `bandit` mode (explores every ⌈1/ε⌉-th
+    /// window).
+    pub probe_epsilon: f64,
     /// A rank this much slower than the mean of the rest is a straggler.
     pub straggler_factor: f64,
     /// Consecutive slow (healthy) windows before a quarantine engages
@@ -164,6 +177,9 @@ impl Default for ControlConfig {
             lam_scale_min: 0.25,
             lam_scale_max: 4.0,
             schedule_hysteresis: 0.1,
+            probe: ProbeMode::Off,
+            probe_interval: 8,
+            probe_epsilon: 0.125,
             straggler_factor: 1.5,
             quarantine_after: 3,
             heartbeat_timeout_s: 0.5,
@@ -193,6 +209,12 @@ impl ControlConfig {
         if self.schedule_hysteresis < 0.0 {
             bail!("control.schedule_hysteresis must be non-negative");
         }
+        if self.probe_interval == 0 {
+            bail!("control.probe_interval must be ≥ 1");
+        }
+        if !(self.probe_epsilon > 0.0 && self.probe_epsilon <= 1.0) {
+            bail!("control.probe_epsilon must be in (0, 1], got {}", self.probe_epsilon);
+        }
         if self.straggler_factor < 1.0 {
             bail!("control.straggler_factor must be ≥ 1");
         }
@@ -221,6 +243,11 @@ impl ControlConfig {
     /// [`ScheduleCoupled`] (ignored by the other policies). All workers
     /// must build identical controllers (see the module docs'
     /// determinism contract).
+    /// The probing knobs as the policies take them.
+    pub fn probe_cfg(&self) -> ProbeCfg {
+        ProbeCfg { mode: self.probe, interval: self.probe_interval, epsilon: self.probe_epsilon }
+    }
+
     pub fn build_controller(
         &self,
         k_init: usize,
@@ -259,6 +286,7 @@ impl ControlConfig {
                 self.schedule_hysteresis,
                 self.straggler_factor,
                 self.quarantine_after,
+                self.probe_cfg(),
             )),
             ControlPolicy::CompressCoupled => Box::new(CompressCoupled::new(
                 k_init,
@@ -273,6 +301,7 @@ impl ControlConfig {
                 self.schedule_hysteresis,
                 self.straggler_factor,
                 self.quarantine_after,
+                self.probe_cfg(),
             )),
         }
     }
@@ -389,6 +418,30 @@ mod tests {
         let ctl = c.build_controller(1, env);
         assert_eq!(ctl.name(), "compress_coupled");
         assert_eq!(ctl.current().compress_ratio, Some(0.05));
+    }
+
+    #[test]
+    fn probe_config_validates_and_builds() {
+        let mut c = ControlConfig {
+            policy: ControlPolicy::ScheduleCoupled,
+            probe: ProbeMode::Interval,
+            probe_interval: 4,
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(
+            c.probe_cfg(),
+            ProbeCfg { mode: ProbeMode::Interval, interval: 4, epsilon: 0.125 }
+        );
+        c.probe_interval = 0;
+        assert!(c.validate().is_err());
+        c.probe_interval = 4;
+        c.probe_epsilon = 0.0;
+        assert!(c.validate().is_err());
+        c.probe_epsilon = 1.5;
+        assert!(c.validate().is_err());
+        // defaults keep probing off — the pre-probing controller
+        assert_eq!(ControlConfig::default().probe, ProbeMode::Off);
     }
 
     #[test]

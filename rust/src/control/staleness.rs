@@ -21,12 +21,19 @@
 //! * [`ScheduleCoupled`] — [`LambdaCoupled`] plus (a) per-window
 //!   collective-schedule selection between the flat fabric model and
 //!   the hierarchical dragonfly schedule, from the modelled t_AR of
-//!   each candidate confirmed against the observed t_AR, and (b)
+//!   each candidate confirmed against the observed t_AR, (b)
 //!   **straggler quarantine**: a rank whose piggybacked per-step t_C
 //!   persistently exceeds the rest is quarantined inside its dragonfly
 //!   group — the group keeps the base window while every other rank's
 //!   k is boosted, so healthy ranks fill the straggler's extra wall
-//!   time with useful local steps instead of blocking in the wait.
+//!   time with useful local steps instead of blocking in the wait —
+//!   and (c) **online schedule probing** ([`ProbeMode`]): every
+//!   `probe_interval` windows the *inactive* candidate runs for one
+//!   window (or an ε-greedy bandit alternates the arms), its observed
+//!   phase split folds into that candidate's α-β calibration with EWMA
+//!   decay, and the decision trace records the excursion as a
+//!   [`Decision::probe`] — so fabric drift can no longer silently
+//!   invalidate the schedule the controller isn't watching.
 //! * [`CompressCoupled`] — [`ScheduleCoupled`] plus per-window
 //!   **compression-ratio** selection: when the observed t_AR
 //!   persistently overshoots the window's k·t_C hiding budget the
@@ -56,6 +63,8 @@
 //! exist, and a persistent straggler re-earns its quarantine against
 //! the new topology within `quarantine_after` windows.
 
+use anyhow::{bail, Result};
+
 use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
 use crate::compress::{ctrl_slots, topk_k, CompressConfig, CompressorKind};
 
@@ -76,6 +85,17 @@ pub struct WindowObs {
     /// every rank (each rank's slot rides the all-reduce zero-padded).
     /// Empty when the engine does not piggyback the per-rank split.
     pub per_rank_t_c: Vec<f64>,
+    /// Observed phase split of the window's *own* completed collective
+    /// (the round's shared [`crate::comm::PhaseTimes`] — identical on
+    /// every rank by construction; zero before one completes). The
+    /// probing layer's calibration signal: pure collective time,
+    /// skew-free.
+    pub t_ar_local: f64,
+    pub t_ar_global: f64,
+    /// The schedule that collective rode (the probe-attribution key;
+    /// `None` before the first round, or from engines that do not
+    /// thread it).
+    pub ran: Option<AllReduceAlgo>,
 }
 
 /// An active straggler quarantine: `rank` (in dragonfly group `group`)
@@ -105,12 +125,24 @@ pub struct Decision {
     /// keeps the configured operating point (only the
     /// `compress_coupled` policy moves it).
     pub compress_ratio: Option<f32>,
+    /// The next window runs [`Decision::schedule`] as a **probe** of a
+    /// non-active candidate (one-window excursion, not a switch) — the
+    /// trace marker that keeps probe windows out of the
+    /// schedule-switch accounting.
+    pub probe: bool,
 }
 
 impl Decision {
     /// A schedule-agnostic decision (the pre-schedule-aware shape).
     pub fn plain(k: usize, lam_scale: f32) -> Self {
-        Decision { k, lam_scale, schedule: None, quarantine: None, compress_ratio: None }
+        Decision {
+            k,
+            lam_scale,
+            schedule: None,
+            quarantine: None,
+            compress_ratio: None,
+            probe: false,
+        }
     }
 
     /// The window length `rank` runs: the quarantined group's members
@@ -302,6 +334,89 @@ impl StalenessController for LambdaCoupled {
     }
 }
 
+/// When (and whether) the schedule-aware policies run the schedule they
+/// are *not* using, to keep its calibration honest.
+///
+/// The un-probed controller calibrates only the **active** schedule
+/// (the only one it observes), so fabric drift silently invalidates
+/// the inactive candidate's α-β estimate — and, symmetrically, a
+/// candidate whose model has never been validated is trusted on faith.
+/// Probing closes that loop, Dynamic-SSP-style: online re-estimation of
+/// the synchronization cost is what makes the adaptive schedule pay
+/// off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProbeMode {
+    /// Never probe: switches trust the (calibrated) cost models — the
+    /// pre-probing behavior, and the default.
+    #[default]
+    Off,
+    /// Every `probe_interval` windows, run the inactive candidate for
+    /// one window and fold its observed phase split into that
+    /// candidate's calibration (EWMA decay). Switches then require the
+    /// candidate to have been **observed**, not just modelled — an
+    /// unvalidated model is never acted on.
+    Interval,
+    /// Deterministic ε-greedy bandit over the schedules: each window
+    /// runs the arm with the lowest calibrated observed cost, except
+    /// every ⌈1/ε⌉-th window which explores the other arm. (No RNG —
+    /// the exploration cadence is a pure function of the window index,
+    /// preserving the cross-rank determinism contract.)
+    Bandit,
+}
+
+impl ProbeMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => ProbeMode::Off,
+            "interval" | "periodic" => ProbeMode::Interval,
+            "bandit" | "epsilon" | "eps_greedy" | "eps-greedy" => ProbeMode::Bandit,
+            other => bail!("unknown probe mode {other:?} (off | interval | bandit)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeMode::Off => "off",
+            ProbeMode::Interval => "interval",
+            ProbeMode::Bandit => "bandit",
+        }
+    }
+}
+
+/// The probing knobs handed to the schedule-aware policies (the
+/// `control.probe*` config keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeCfg {
+    pub mode: ProbeMode,
+    /// Windows between probes ([`ProbeMode::Interval`]).
+    pub interval: u64,
+    /// Exploration rate of [`ProbeMode::Bandit`] (explores every
+    /// ⌈1/ε⌉-th window).
+    pub epsilon: f64,
+}
+
+impl ProbeCfg {
+    /// Probing disabled — the pre-probing controller, verbatim.
+    pub fn off() -> Self {
+        ProbeCfg { mode: ProbeMode::Off, interval: 8, epsilon: 0.125 }
+    }
+
+    /// The probe cadence in windows for the configured mode.
+    fn cadence(&self) -> u64 {
+        match self.mode {
+            ProbeMode::Off => u64::MAX,
+            ProbeMode::Interval => self.interval.max(1),
+            ProbeMode::Bandit => (1.0 / self.epsilon.clamp(1e-6, 1.0)).round().max(1.0) as u64,
+        }
+    }
+}
+
+impl Default for ProbeCfg {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
 /// Everything the schedule-aware policy needs to price its candidate
 /// schedules: the fabric, the topology, and the collective's payload.
 /// The default (zero payload/ranks) prices nothing — the policy then
@@ -371,6 +486,20 @@ pub struct ScheduleCoupled {
     slow_streak: u64,
     slow_rank: Option<usize>,
     quarantine: Option<ActiveQuarantine>,
+    // --- probing (inert when probe.mode == Off) ---
+    probe: ProbeCfg,
+    /// The schedule the *next* window runs as a probe (None = active).
+    probing: Option<AllReduceAlgo>,
+    windows_since_probe: u64,
+    /// Observed-over-modelled calibration per candidate from completed
+    /// rounds' **phase splits** (probe evidence; EWMA with gain
+    /// `CAL_GAIN`, 1.0 prior), and whether the candidate has ever been
+    /// observed (never-observed arms are not switch-eligible under
+    /// probing).
+    probe_cal_flat: f64,
+    probe_cal_hier: f64,
+    seen_flat: bool,
+    seen_hier: bool,
 }
 
 /// EMA weight of the newest calibration sample.
@@ -391,6 +520,7 @@ impl ScheduleCoupled {
         hysteresis: f64,
         straggler_factor: f64,
         quarantine_after: u64,
+        probe: ProbeCfg,
     ) -> Self {
         ScheduleCoupled {
             inner: LambdaCoupled::new(
@@ -415,6 +545,13 @@ impl ScheduleCoupled {
             slow_streak: 0,
             slow_rank: None,
             quarantine: None,
+            probe,
+            probing: None,
+            windows_since_probe: 0,
+            probe_cal_flat: 1.0,
+            probe_cal_hier: 1.0,
+            seen_flat: false,
+            seen_hier: false,
         }
     }
 
@@ -433,10 +570,129 @@ impl ScheduleCoupled {
         (flat, AllReduceAlgo::Hierarchical(self.env.topology))
     }
 
+    /// Is a candidate the hierarchical arm? (The calibration registers
+    /// are keyed flat-vs-hierarchical.)
+    fn is_hier(algo: AllReduceAlgo) -> bool {
+        matches!(algo, AllReduceAlgo::Hierarchical(_))
+    }
+
+    /// Fold a completed round's observed phase split into the
+    /// calibration of the schedule it rode — probe evidence and
+    /// active-schedule tenure alike keep that candidate's α-β estimate
+    /// fresh (EWMA decay, so stale evidence fades).
+    fn note_probe_observation(&mut self, obs: &WindowObs) {
+        let Some(ran) = obs.ran else { return };
+        let observed = obs.t_ar_local + obs.t_ar_global;
+        let modelled = self.modelled(ran);
+        if observed <= 0.0 || modelled <= 0.0 {
+            return;
+        }
+        let sample = observed / modelled;
+        let (cal, seen) = if Self::is_hier(ran) {
+            (&mut self.probe_cal_hier, &mut self.seen_hier)
+        } else {
+            (&mut self.probe_cal_flat, &mut self.seen_flat)
+        };
+        *cal = (1.0 - CAL_GAIN) * *cal + CAL_GAIN * sample;
+        *seen = true;
+    }
+
+    /// A candidate's calibrated cost under probing, and whether it has
+    /// ever been observed.
+    fn probed_cost(&self, algo: AllReduceAlgo) -> (f64, bool) {
+        if Self::is_hier(algo) {
+            (self.probe_cal_hier * self.modelled(algo), self.seen_hier)
+        } else {
+            (self.probe_cal_flat * self.modelled(algo), self.seen_flat)
+        }
+    }
+
+    /// Probing (interval mode) switch rule: never act on an unvalidated
+    /// model. The active schedule holds until the candidate has been
+    /// *observed* (via a probe, or an earlier tenure kept fresh by
+    /// probes) and its calibrated cost undercuts the active schedule's
+    /// by the hysteresis margin.
+    fn pick_schedule_probed(&mut self) {
+        self.bootstrapped = true; // probing never trusts the raw argmin
+        let (flat, hier) = self.candidates();
+        let other = if Self::is_hier(self.active) { flat } else { hier };
+        let (eff_active, _) = self.probed_cost(self.active);
+        let (eff_other, other_seen) = self.probed_cost(other);
+        if other_seen && eff_active > 0.0 && eff_other * (1.0 + self.hysteresis) < eff_active {
+            self.active = other;
+        }
+    }
+
+    /// Bandit greedy step: run the *observed* arm with the lowest
+    /// calibrated cost (exploration keeps both estimates fresh, so the
+    /// greedy pick is trusted without hysteresis); unobserved arms are
+    /// not eligible, and with nothing observed the configured schedule
+    /// stands.
+    fn pick_schedule_bandit(&mut self) {
+        self.bootstrapped = true;
+        let (flat, hier) = self.candidates();
+        let mut best: Option<(f64, AllReduceAlgo)> = None;
+        for arm in [flat, hier] {
+            let (cost, seen) = self.probed_cost(arm);
+            if !seen {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((b, _)) => cost < b,
+            };
+            if better {
+                best = Some((cost, arm));
+            }
+        }
+        if let Some((_, algo)) = best {
+            self.active = algo;
+        }
+    }
+
+    /// Arm the next window's probe when the cadence is due: one window
+    /// on the non-active arm, marked [`Decision::probe`] so the trace
+    /// records an excursion, not a switch. (With exactly two candidate
+    /// schedules, interval probing and ε-greedy exploration both
+    /// degenerate to "run the other arm".)
+    fn schedule_probe(&mut self) {
+        self.probing = None;
+        if self.probe.mode == ProbeMode::Off || self.env.n_elems == 0 || self.env.n_ranks <= 1 {
+            return;
+        }
+        self.windows_since_probe += 1;
+        if self.windows_since_probe < self.probe.cadence() {
+            return;
+        }
+        let (flat, hier) = self.candidates();
+        let target = if Self::is_hier(self.active) { flat } else { hier };
+        if target != self.active {
+            self.probing = Some(target);
+            self.windows_since_probe = 0;
+        }
+    }
+
     fn pick_schedule(&mut self, obs: &WindowObs) {
         if self.env.n_elems == 0 || self.env.n_ranks <= 1 {
             return; // nothing to price
         }
+        match self.probe.mode {
+            ProbeMode::Off => self.pick_schedule_modelled(obs),
+            ProbeMode::Interval => {
+                self.note_probe_observation(obs);
+                self.pick_schedule_probed();
+            }
+            ProbeMode::Bandit => {
+                self.note_probe_observation(obs);
+                self.pick_schedule_bandit();
+            }
+        }
+    }
+
+    /// The probe-free policy: bootstrap on the raw model argmin, then
+    /// calibrate the *active* schedule from the piggybacked observed
+    /// t_AR and switch on the hysteresis margin.
+    fn pick_schedule_modelled(&mut self, obs: &WindowObs) {
         let (flat, hier) = self.candidates();
         if !self.bootstrapped {
             // First decision: argmin of the raw models (no observation
@@ -549,7 +805,8 @@ impl StalenessController for ScheduleCoupled {
     fn current(&self) -> Decision {
         let base = self.inner.current();
         let mut d = base;
-        d.schedule = Some(self.active);
+        d.schedule = Some(self.probing.unwrap_or(self.active));
+        d.probe = self.probing.is_some();
         if let Some(q) = &self.quarantine {
             d.k = (base.k + q.boost).min(self.k_max);
             d.quarantine = Some(Quarantine { rank: q.rank, group: q.group, k_group: base.k });
@@ -561,6 +818,7 @@ impl StalenessController for ScheduleCoupled {
         self.inner.on_window(obs);
         self.pick_schedule(obs);
         self.update_quarantine(obs);
+        self.schedule_probe();
         self.current()
     }
 }
@@ -622,6 +880,7 @@ impl CompressCoupled {
         hysteresis: f64,
         straggler_factor: f64,
         quarantine_after: u64,
+        probe: ProbeCfg,
     ) -> Self {
         let compress = env.compress;
         let ratio = compress.ratio.clamp(compress.ratio_min, compress.ratio_max);
@@ -639,6 +898,7 @@ impl CompressCoupled {
                 hysteresis,
                 straggler_factor,
                 quarantine_after,
+                probe,
             ),
             kind: compress.kind,
             ratio,
@@ -743,6 +1003,22 @@ mod tests {
             t_compute: t_c,
             t_allreduce: t_ar,
             per_rank_t_c: Vec::new(),
+            t_ar_local: 0.0,
+            t_ar_global: 0.0,
+            ran: None,
+        }
+    }
+
+    /// An observation whose completed round rode `algo` at exactly its
+    /// modelled phase split — what the engines feed back in-sim.
+    fn obs_ran(window: u64, t_c: f64, algo: AllReduceAlgo, env: &ScheduleEnv) -> WindowObs {
+        let phases = NetModel { algo, ..env.net }.allreduce_phases(env.n_elems, env.n_ranks);
+        WindowObs {
+            t_allreduce: phases.total(),
+            t_ar_local: phases.local_s,
+            t_ar_global: phases.global_s,
+            ran: Some(algo),
+            ..obs(window, t_c, phases.total())
         }
     }
 
@@ -875,7 +1151,11 @@ mod tests {
     }
 
     fn sc(env: ScheduleEnv) -> ScheduleCoupled {
-        ScheduleCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3)
+        ScheduleCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3, ProbeCfg::off())
+    }
+
+    fn sc_probed(env: ScheduleEnv, probe: ProbeCfg) -> ScheduleCoupled {
+        ScheduleCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3, probe)
     }
 
     #[test]
@@ -950,7 +1230,8 @@ mod tests {
     #[test]
     fn quarantine_engages_after_streak_and_boosts_healthy_ranks() {
         let env = sched_env(10_000, 8, 10e9);
-        let mut c = ScheduleCoupled::new(2, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3);
+        let mut c =
+            ScheduleCoupled::new(2, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3, ProbeCfg::off());
         let npg = env.topology.nodes_per_group;
         // rank 5 runs 3× slower than everyone else
         let slow = |w| {
@@ -987,7 +1268,8 @@ mod tests {
         // quarantine must not engage (and must not be logged as if it
         // mitigated anything).
         let env = sched_env(10_000, 8, 10e9);
-        let mut c = ScheduleCoupled::new(4, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 1);
+        let mut c =
+            ScheduleCoupled::new(4, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 1, ProbeCfg::off());
         let mut per = vec![1e-3; 8];
         per[5] = 5e-3;
         for w in 0..5 {
@@ -1000,7 +1282,8 @@ mod tests {
     #[test]
     fn quarantine_streak_resets_when_culprit_changes() {
         let env = sched_env(10_000, 4, 10e9);
-        let mut c = ScheduleCoupled::new(1, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 2);
+        let mut c =
+            ScheduleCoupled::new(1, 1, 8, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 2, ProbeCfg::off());
         let mk = |w, slow_rank: usize| {
             let mut per = vec![1e-3; 4];
             per[slow_rank] = 5e-3;
@@ -1027,6 +1310,175 @@ mod tests {
         }
     }
 
+    // --- probing ---
+
+    fn probe_interval(interval: u64) -> ProbeCfg {
+        ProbeCfg { mode: ProbeMode::Interval, interval, epsilon: 0.125 }
+    }
+
+    /// Drive a controller the way an engine does: each window's
+    /// observation carries the phase split of the round that rode the
+    /// *previous* decision's schedule.
+    fn drive(c: &mut ScheduleCoupled, env: &ScheduleEnv, windows: u64) -> Vec<Decision> {
+        let mut d = c.current();
+        let mut trace = Vec::new();
+        for w in 0..windows {
+            let o = obs_ran(w, 1e-4, d.schedule.expect("schedule-aware"), env);
+            d = c.on_window(&o);
+            trace.push(d);
+        }
+        trace
+    }
+
+    #[test]
+    fn probe_mode_parse_roundtrip() {
+        for m in [ProbeMode::Off, ProbeMode::Interval, ProbeMode::Bandit] {
+            assert_eq!(ProbeMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(ProbeMode::parse("EPS-GREEDY").unwrap(), ProbeMode::Bandit);
+        assert!(ProbeMode::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn interval_probe_fires_on_cadence_and_triggers_the_switch() {
+        // Models prefer hierarchical at this scale, but under probing
+        // the controller refuses to act on the unvalidated model: it
+        // holds the configured ring until the scheduled probe observes
+        // the candidate, then switches on the probe's evidence.
+        let env = sched_env(271_690, 256, 10e9);
+        let hier = AllReduceAlgo::Hierarchical(env.topology);
+        let mut c = sc_probed(env, probe_interval(3));
+        let trace = drive(&mut c, &env, 8);
+        // windows 0-1: ring, no probe (cadence not yet due)
+        for d in &trace[..2] {
+            assert_eq!(d.schedule, Some(AllReduceAlgo::Ring), "switched without evidence");
+            assert!(!d.probe);
+        }
+        // 3rd decision: the probe excursion onto the inactive candidate
+        assert!(trace[2].probe, "probe never fired: {trace:?}");
+        assert_eq!(trace[2].schedule, Some(hier));
+        // next decision: the probe's observation validated the model —
+        // the switch lands, and it is NOT marked as a probe
+        assert_eq!(trace[3].schedule, Some(hier), "probe evidence did not trigger the switch");
+        assert!(!trace[3].probe);
+        // steady state: active hier, periodic probes of the flat arm
+        let late_probes = trace[3..].iter().filter(|d| d.probe).collect::<Vec<_>>();
+        assert!(late_probes.iter().all(|d| d.schedule == Some(AllReduceAlgo::Ring)));
+        assert!(
+            trace[3..].iter().filter(|d| !d.probe).all(|d| d.schedule == Some(hier)),
+            "flapped after the probe-triggered switch: {trace:?}"
+        );
+    }
+
+    #[test]
+    fn interval_probe_never_switches_without_observation() {
+        // Same hier-favorable env, but the adversary never lets a hier
+        // observation arrive (obs.ran stays ring): the unvalidated
+        // candidate must never be switched to, however good its model.
+        let env = sched_env(271_690, 256, 10e9);
+        let mut c = sc_probed(env, probe_interval(4));
+        let mut last = c.current();
+        for w in 0..20 {
+            let o = obs_ran(w, 1e-4, AllReduceAlgo::Ring, &env);
+            last = c.on_window(&o);
+            if !last.probe {
+                assert_eq!(
+                    last.schedule,
+                    Some(AllReduceAlgo::Ring),
+                    "switched to an arm it never observed (window {w})"
+                );
+            }
+        }
+        assert_eq!(last.schedule.map(|s| s.name()), Some("ring"));
+    }
+
+    #[test]
+    fn probe_validates_contended_fabric_and_holds_the_ring() {
+        // Same payload and scale where the DEDICATED hierarchical arm
+        // wins (see interval_probe_fires_on_cadence_...), but on a
+        // taper-1 fabric: the contention-aware pricing puts the
+        // contended leader ring above the flat ring, so the probes must
+        // observe the hierarchical arm, feed its calibration, and *not*
+        // switch — the decision the dedicated-optics model would have
+        // gotten wrong.
+        let mut env = sched_env(271_690, 256, 10e9);
+        env.topology = Dragonfly { global_taper: 1, ..env.topology };
+        let hier = AllReduceAlgo::Hierarchical(env.topology);
+        let t_ring = NetModel { algo: AllReduceAlgo::Ring, ..env.net }
+            .allreduce_time(env.n_elems, env.n_ranks);
+        let t_hier = NetModel { algo: hier, ..env.net }.allreduce_time(env.n_elems, env.n_ranks);
+        assert!(t_hier > t_ring, "premise: contention must price hier above the ring");
+        let mut c = sc_probed(env, probe_interval(2));
+        let trace = drive(&mut c, &env, 12);
+        assert!(trace.iter().any(|d| d.probe), "probes never fired");
+        for d in trace.iter().filter(|d| !d.probe) {
+            assert_eq!(d.schedule, Some(AllReduceAlgo::Ring), "probe flapped the fleet");
+        }
+    }
+
+    #[test]
+    fn bandit_explores_and_settles_on_the_cheaper_arm() {
+        let env = sched_env(271_690, 256, 10e9);
+        let hier = AllReduceAlgo::Hierarchical(env.topology);
+        let probe = ProbeCfg { mode: ProbeMode::Bandit, interval: 8, epsilon: 0.5 };
+        let mut c = sc_probed(env, probe);
+        let trace = drive(&mut c, &env, 12);
+        assert!(trace.iter().any(|d| d.probe), "bandit never explored");
+        // once both arms are observed the greedy pick is the cheaper
+        // hierarchical arm on every non-exploration window
+        let first_hier = trace
+            .iter()
+            .position(|d| !d.probe && d.schedule == Some(hier))
+            .expect("bandit never adopted the cheaper arm");
+        for d in trace[first_hier..].iter().filter(|d| !d.probe) {
+            assert_eq!(d.schedule, Some(hier));
+        }
+    }
+
+    #[test]
+    fn probing_controllers_are_deterministic() {
+        let env = sched_env(271_690, 64, 10e9);
+        for mode in [ProbeMode::Interval, ProbeMode::Bandit] {
+            let mk = || sc_probed(env, ProbeCfg { mode, interval: 3, epsilon: 0.25 });
+            let (mut a, mut b) = (mk(), mk());
+            let mut d = a.current();
+            for w in 0..60 {
+                let o = obs_ran(w, 1e-4, d.schedule.unwrap(), &env);
+                d = a.on_window(&o);
+                assert_eq!(d, b.on_window(&o), "{mode:?} diverged at window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn compress_coupled_passes_probe_decisions_through() {
+        let env = cc_env(271_690, 256, 0.05);
+        let mut c = CompressCoupled::new(
+            1,
+            1,
+            8,
+            0.5,
+            0.1,
+            1,
+            0.25,
+            4.0,
+            env,
+            0.1,
+            1.5,
+            3,
+            probe_interval(2),
+        );
+        let mut d = c.current();
+        let mut saw_probe = false;
+        for w in 0..10 {
+            let o = obs_ran(w, 1e-4, d.schedule.unwrap(), &env);
+            d = c.on_window(&o);
+            saw_probe |= d.probe;
+            assert!(d.compress_ratio.is_some(), "ratio knob lost under probing");
+        }
+        assert!(saw_probe, "probe flag never surfaced through compress_coupled");
+    }
+
     // --- CompressCoupled ---
 
     fn cc_env(n_elems: usize, n_ranks: usize, ratio: f32) -> ScheduleEnv {
@@ -1042,7 +1494,7 @@ mod tests {
     }
 
     fn cc(env: ScheduleEnv) -> CompressCoupled {
-        CompressCoupled::new(1, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3)
+        CompressCoupled::new(1, 1, 4, 0.0, 0.0, 1, 1.0, 1.0, env, 0.1, 1.5, 3, ProbeCfg::off())
     }
 
     #[test]
@@ -1089,7 +1541,9 @@ mod tests {
         // The inner (k, schedule) loops stay live: a slow network must
         // still deepen k, and the decision carries a schedule.
         let env = cc_env(271_690, 256, 0.05);
-        let mut c = CompressCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3);
+        let probe = ProbeCfg::off();
+        let mut c =
+            CompressCoupled::new(1, 1, 8, 0.5, 0.1, 1, 0.25, 4.0, env, 0.1, 1.5, 3, probe);
         let mut last = c.current();
         assert!(last.schedule.is_some());
         for w in 0..20 {

@@ -5,16 +5,27 @@
 //! Cray, 2019) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the decentralized training coordinator:
-//!   simulated-MPI collectives with non-blocking semantics
-//!   ([`comm`]), the stale-synchronous overlap engine and the paper's
-//!   Algorithm 1 ([`algo::dcs3gd`]), the SSGD / ASGD / DC-ASGD baselines
-//!   ([`algo`], [`ps`]), the elastic control plane — online staleness
-//!   adaptation, fault injection, heartbeat detection and checkpoint
-//!   recovery ([`control`]) — error-feedback gradient compression
-//!   ([`compress`]), optimizers and the paper's LR/weight-decay
-//!   schedules ([`optim`]), a virtual-time engine for the Eq. 13/14
-//!   timing analysis ([`simtime`]), a synthetic ImageNet-style dataset
-//!   ([`data`]), metrics ([`metrics`]) and a config system ([`config`]).
+//!   simulated-MPI collectives with non-blocking semantics and
+//!   pluggable, phase-split-accounted schedules over a dragonfly with
+//!   contended tapered global links ([`comm`]), the stale-synchronous
+//!   overlap engine and the paper's Algorithm 1 ([`algo::dcs3gd`]),
+//!   the SSGD / ASGD / DC-ASGD baselines ([`algo`], [`ps`]), the
+//!   elastic control plane — online staleness adaptation, schedule
+//!   selection with probing, fault injection, heartbeat detection and
+//!   checkpoint recovery ([`control`]) — error-feedback gradient
+//!   compression ([`compress`]), optimizers and the paper's
+//!   LR/weight-decay schedules ([`optim`]), a virtual-time engine for
+//!   the Eq. 13/14 timing analysis ([`simtime`]), a synthetic
+//!   ImageNet-style dataset ([`data`]), metrics ([`metrics`]) and a
+//!   config system ([`config`]).
+//!
+//! The configuration and run-JSON references live in the repository's
+//! `docs/` book (`docs/config.md`, `docs/run-json.md`), pinned to the
+//! real parser and exporter by `tests/docs_config.rs`. The
+//! load-bearing invariants are documented where they live:
+//! [`comm::schedule`] (phase-split accounting, contention),
+//! [`control::staleness`] (cross-rank determinism, probing), and
+//! [`compress`] (piggyback slot layout, residual re-zeroing).
 //! * **L2** — JAX model definitions (`python/compile/model.py`), lowered
 //!   once to HLO text artifacts and executed from rust via PJRT
 //!   ([`runtime`]).

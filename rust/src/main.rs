@@ -14,7 +14,7 @@ use dcs3gd::cli::Args;
 use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
 use dcs3gd::compress::CompressorKind;
 use dcs3gd::config::{parse_schedule, ExperimentConfig};
-use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent};
+use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent, ProbeMode};
 use dcs3gd::model::meta::discover_variants;
 use dcs3gd::simtime::ComputeModel;
 
@@ -26,7 +26,10 @@ USAGE:
                [--local-batch B] [--steps S] [--lam0 L] [--staleness K]
                [--eval-every E] [--out-dir DIR] [--time-from-wall]
                [--schedule S] [--groups G] [--nodes-per-group M]
+               [--global-taper L]
                [--control-policy P] [--k-min K] [--k-max K]
+               [--probe off|interval|bandit] [--probe-interval W]
+               [--probe-epsilon E]
                [--adjust-every W] [--snapshot-every W]
                [--straggler-factor X] [--quarantine-after W]
                [--heartbeat-timeout S] [--restore-s S]
@@ -45,6 +48,11 @@ Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
 Schedules:        ring | tree | flat | hierarchical (Layered-SGD dragonfly)
 Control policies: fixed | dss_pid | lambda_coupled | schedule_coupled
                   | compress_coupled (co-tunes k, schedule and ratio)
+Contention:       --global-taper L = global links per dragonfly group
+                  (leader phases and PS crossings contend past L flows)
+Probing:          --probe interval runs the inactive schedule candidate
+                  for one window every --probe-interval windows;
+                  --probe bandit explores eps-greedily
 Compressors:      none | topk | qsgd (error-feedback gradient compression;
                   --topk-ratio sets the kept density, --qsgd-bits the
                   quantization width)
@@ -139,6 +147,15 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             cfg.net.algo = AllReduceAlgo::Hierarchical(cfg.dragonfly);
         }
     }
+    // global-link contention: links per group (re-binds an already
+    // hierarchical schedule so the flag takes effect)
+    if args.get("global-taper").is_some() {
+        let taper = args.get_usize("global-taper", cfg.dragonfly.global_taper)?;
+        cfg.dragonfly.global_taper = taper.max(1);
+        if matches!(cfg.net.algo, AllReduceAlgo::Hierarchical(_)) {
+            cfg.net.algo = AllReduceAlgo::Hierarchical(cfg.dragonfly);
+        }
+    }
     if let Some(s) = args.get("schedule") {
         cfg.net.algo = parse_schedule(s, cfg.dragonfly)?;
     }
@@ -154,6 +171,11 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.control.snapshot_every = args.get_u64("snapshot-every", cfg.control.snapshot_every)?;
     cfg.control.schedule_hysteresis =
         args.get_f64("schedule-hysteresis", cfg.control.schedule_hysteresis)?;
+    if let Some(p) = args.get("probe") {
+        cfg.control.probe = ProbeMode::parse(p)?;
+    }
+    cfg.control.probe_interval = args.get_u64("probe-interval", cfg.control.probe_interval)?;
+    cfg.control.probe_epsilon = args.get_f64("probe-epsilon", cfg.control.probe_epsilon)?;
     cfg.control.straggler_factor =
         args.get_f64("straggler-factor", cfg.control.straggler_factor)?;
     cfg.control.quarantine_after =
@@ -260,6 +282,13 @@ fn cmd_train(args: &Args) -> Result<()> {
                 comm.total_s(),
                 comm.rounds,
                 100.0 * comm.global_s / comm.total_s().max(1e-30),
+            );
+        }
+        if comm.probe_rounds > 0 {
+            println!(
+                "probe:   mode={} | {} probe windows along the trace",
+                cfg.control.probe.name(),
+                comm.probe_rounds,
             );
         }
     }

@@ -21,6 +21,11 @@ pub struct CommPhaseSummary {
     pub global_s: f64,
     pub rounds: u64,
     pub schedule_switches: usize,
+    /// Windows that ran their schedule as a control-plane **probe** of
+    /// a non-active candidate (counted into `rounds` and the phase
+    /// totals, excluded from `schedule_switches`). Exported as the
+    /// nested `"probe"` summary of the run JSON's `"comm"` key.
+    pub probe_rounds: u64,
 }
 
 impl CommPhaseSummary {
@@ -37,6 +42,9 @@ impl CommPhaseSummary {
         m.insert("total_s".into(), num(self.total_s()));
         m.insert("rounds".into(), Json::Num(self.rounds as f64));
         m.insert("schedule_switches".into(), Json::Num(self.schedule_switches as f64));
+        let mut probe = BTreeMap::new();
+        probe.insert("rounds".to_string(), Json::Num(self.probe_rounds as f64));
+        m.insert("probe".into(), Json::Obj(probe));
         Json::Obj(m)
     }
 }
@@ -427,11 +435,18 @@ mod tests {
 
     #[test]
     fn comm_phase_summary_json() {
-        let s = CommPhaseSummary { local_s: 0.3, global_s: 0.7, rounds: 10, schedule_switches: 1 };
+        let s = CommPhaseSummary {
+            local_s: 0.3,
+            global_s: 0.7,
+            rounds: 10,
+            schedule_switches: 1,
+            probe_rounds: 2,
+        };
         assert!((s.total_s() - 1.0).abs() < 1e-12);
         let j = s.to_json();
         assert_eq!(j.get("rounds").unwrap().as_f64(), Some(10.0));
         assert_eq!(j.get("total_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("probe").unwrap().get("rounds").unwrap().as_f64(), Some(2.0));
         assert!(crate::util::Json::parse(&j.to_string()).is_ok());
     }
 

@@ -15,6 +15,15 @@
 //! `t_W2PS = 2·ptp(n)` of network time plus queueing at the server
 //! (service time `serve_s` per request, requests serialized) — the
 //! many-to-few bottleneck the paper attributes to centralized schemes.
+//!
+//! Under a hierarchical (dragonfly) fabric the crossings **contend**:
+//! every worker outside the PS's group funnels through that group's
+//! tapered global links, so each remote transfer is priced at the
+//! concurrent-crossing count through
+//! [`NetModel::ptp_time_between_flows`] (the same
+//! [`crate::comm::GlobalContention`] model the collective schedules
+//! use) — the many-to-few bottleneck now includes the fabric's share
+//! of it, not just the server's.
 
 pub mod sharded;
 pub use sharded::ShardedPs;
@@ -22,7 +31,7 @@ pub use sharded::ShardedPs;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use crate::comm::NetModel;
+use crate::comm::{AllReduceAlgo, NetModel};
 use crate::dc;
 use crate::optim::Optimizer;
 
@@ -69,6 +78,9 @@ pub struct PsClient {
     tx: Sender<Msg>,
     net: NetModel,
     n_params: usize,
+    /// Concurrent cross-group crossings each remote transfer shares the
+    /// PS group's tapered global links with (1 on flat fabrics).
+    flows: usize,
 }
 
 impl PsClient {
@@ -78,12 +90,13 @@ impl PsClient {
     /// Transfer time is topology-aware: the PS is hosted next to rank 0
     /// (same dragonfly group), so under a hierarchical schedule a
     /// worker in group 0 pays local-link latency while everyone else
-    /// crosses the optics — the placement asymmetry the flat model
-    /// couldn't express.
+    /// crosses the optics — **contended** by every other remote
+    /// worker's crossings into the PS group — the placement asymmetry
+    /// (and oversubscription) the flat model couldn't express.
     pub fn push_pull(&self, worker: usize, grad: Vec<f32>, now: f64, eta: f32, wd: f32) -> PullReply {
         assert_eq!(grad.len(), self.n_params);
         let (reply_tx, reply_rx) = channel();
-        let ptp = self.net.ptp_time_between(worker, 0, self.n_params);
+        let ptp = self.net.ptp_time_between_flows(worker, 0, self.n_params, self.flows);
         // Worker→PS transfer time happens before the server sees it.
         let arrive = now + ptp;
         self.tx
@@ -102,6 +115,9 @@ pub struct ParameterServer {
     handle: JoinHandle<(Vec<f32>, u64)>,
     net: NetModel,
     n_params: usize,
+    /// Worst-case concurrent crossings into the PS group (the workers
+    /// outside it); prices every remote transfer's contention.
+    flows: usize,
 }
 
 impl ParameterServer {
@@ -167,11 +183,21 @@ impl ParameterServer {
             }
             (w, updates)
         });
-        ParameterServer { tx, handle, net, n_params }
+        // Contention: every worker outside the PS's dragonfly group
+        // funnels through that group's tapered global links; price each
+        // remote transfer at the worst-case concurrent crossing count.
+        let flows = match net.algo {
+            AllReduceAlgo::Hierarchical(d) => {
+                let ps_group = d.group_of(0);
+                (0..n_workers).filter(|&r| d.group_of(r) != ps_group).count().max(1)
+            }
+            _ => 1,
+        };
+        ParameterServer { tx, handle, net, n_params, flows }
     }
 
     pub fn client(&self) -> PsClient {
-        PsClient { tx: self.tx.clone(), net: self.net, n_params: self.n_params }
+        PsClient { tx: self.tx.clone(), net: self.net, n_params: self.n_params, flows: self.flows }
     }
 
     /// Stop the server and return (final weights, update count).
@@ -270,6 +296,46 @@ mod tests {
         let remote = c.push_pull(2, vec![0.1], 0.0, 1.0, 0.0).done_at;
         assert!(remote > local, "cross-group round-trip {remote} not slower than {local}");
         ps.shutdown();
+    }
+
+    #[test]
+    fn contended_optics_slow_remote_workers_only() {
+        // 2 groups of 2, taper 1: the two remote workers' crossings
+        // share one optic (slowdown 2). Same config at taper 2 rides
+        // dedicated links — remote round-trips must be strictly slower
+        // under contention, local ones identical.
+        let run = |taper: usize| {
+            let d = crate::comm::Dragonfly {
+                groups: 2,
+                nodes_per_group: 2,
+                global_taper: taper,
+                ..Default::default()
+            };
+            let net = NetModel {
+                algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+                ..NetModel::default()
+            };
+            let ps = ParameterServer::spawn(
+                vec![0.0; 1000],
+                plain_sgd(1000),
+                4,
+                PsMode::Asgd,
+                net,
+                0.0,
+            );
+            let c = ps.client();
+            let local = c.push_pull(1, vec![0.1; 1000], 0.0, 1.0, 0.0).done_at;
+            let remote = c.push_pull(2, vec![0.1; 1000], 0.0, 1.0, 0.0).done_at;
+            ps.shutdown();
+            (local, remote)
+        };
+        let (local_ded, remote_ded) = run(2);
+        let (local_con, remote_con) = run(1);
+        assert_eq!(local_con, local_ded, "same-group transfers must not contend");
+        assert!(
+            remote_con > remote_ded,
+            "contended crossing {remote_con} not slower than dedicated {remote_ded}"
+        );
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! The docs/ book cannot rot: every TOML snippet in `docs/config.md`
+//! must parse through the real config parser, and the run-JSON keys
+//! documented in `docs/run-json.md` must match what the exporter
+//! actually emits.
+
+use dcs3gd::algo::run_experiment;
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+fn doc(name: &str) -> String {
+    let path = format!("{}/../docs/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// Extract the fenced ```toml blocks of a markdown page as
+/// (starting line, body) pairs.
+fn toml_snippets(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut cur: Option<(usize, String)> = None;
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        match &mut cur {
+            None if t == "```toml" => cur = Some((i + 2, String::new())),
+            Some((start, body)) => {
+                if t == "```" {
+                    out.push((*start, std::mem::take(body)));
+                    cur = None;
+                } else {
+                    body.push_str(line);
+                    body.push('\n');
+                }
+            }
+            None => {}
+        }
+    }
+    assert!(cur.is_none(), "unterminated ```toml fence");
+    out
+}
+
+#[test]
+fn every_documented_toml_snippet_parses() {
+    let text = doc("config.md");
+    let snippets = toml_snippets(&text);
+    assert!(
+        snippets.len() >= 10,
+        "docs/config.md lost its examples (found {})",
+        snippets.len()
+    );
+    for (line, body) in snippets {
+        if let Err(e) = ExperimentConfig::from_toml_str(&body) {
+            panic!("docs/config.md snippet at line {line} does not parse: {e:#}\n---\n{body}");
+        }
+    }
+}
+
+#[test]
+fn config_reference_names_every_table() {
+    let text = doc("config.md");
+    for table in [
+        "[optim]",
+        "[data]",
+        "[net]",
+        "[comm]",
+        "[comm.contention]",
+        "[compute]",
+        "[eval]",
+        "[control]",
+        "[[control.fault]]",
+        "[[control.join]]",
+        "[compress]",
+    ] {
+        assert!(text.contains(table), "docs/config.md lost the {table} section");
+    }
+    // the probing knobs are the newest keys — pin them explicitly
+    for key in ["probe_interval", "probe_epsilon", "global_taper"] {
+        assert!(text.contains(key), "docs/config.md lost the {key} key");
+    }
+}
+
+#[test]
+fn run_json_top_level_keys_match_docs() {
+    // A real (tiny) run's exported JSON vs the documented key set —
+    // both directions: nothing undocumented, nothing phantom.
+    let cfg = ExperimentConfig::builder("linear")
+        .name("docs_probe")
+        .nodes(2)
+        .local_batch(8)
+        .steps(6)
+        .data(256, 64, 0.5)
+        .compute(ComputeModel::uniform(1e-4))
+        .build();
+    let report = run_experiment(&cfg).expect("tiny run");
+    let json = report.to_json();
+    let Json::Obj(map) = &json else { panic!("run JSON must be an object") };
+    let docs = doc("run-json.md");
+    for key in map.keys() {
+        assert!(
+            docs.contains(&format!("`{key}`")) || docs.contains(&format!("`\"{key}\"`")),
+            "run-JSON key {key:?} is not documented in docs/run-json.md"
+        );
+    }
+    // and the documented composite keys really exist in the export
+    for key in ["control", "comm", "compress", "epochs", "evals"] {
+        assert!(map.contains_key(key), "documented key {key:?} missing from the export");
+    }
+    // the probe summary must be nested under "comm"
+    assert!(
+        json.get("comm").and_then(|c| c.get("probe")).is_some(),
+        "comm JSON lost its probe summary"
+    );
+    // every control record carries the probe marker
+    if let Some(records) = json.get("control").and_then(Json::as_arr) {
+        for r in records {
+            assert!(r.get("probe").and_then(Json::as_bool).is_some());
+        }
+    }
+}

@@ -3,7 +3,8 @@
 //! failure prints its case seed for reproduction).
 
 use dcs3gd::comm::{
-    hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
+    hier::hier_network, ring::ring_network, schedule::Hierarchical, AllReduceAlgo,
+    CollectiveSchedule, Dragonfly, GlobalContention, Group, Link, NetModel, LEADER_RING_FLOWS,
 };
 use dcs3gd::compress::{CompressConfig, CompressorKind, GradCompressor, Qsgd, TopK, WindowCodec};
 use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
@@ -219,6 +220,61 @@ fn prop_phase_times_sum_to_total() {
                 max_post + phases.total()
             );
         }
+    }
+}
+
+/// Property: global-link contention can only *slow* the global phase —
+/// for any payload, rank count, group shape and taper, the contended
+/// [`dcs3gd::comm::PhaseTimes`] dominate the dedicated ones with
+/// bit-equal local phases, and a taper at or above the leader-phase
+/// flow count (or a single concurrent flow) prices exactly the
+/// dedicated link.
+#[test]
+fn prop_contended_phases_dominate_dedicated() {
+    for case in 0..CASES {
+        let mut rng = Rng::keyed(0xC027, 9, case);
+        let n_ranks = 2 + rng.below(63) as usize;
+        let len = 1 + rng.below(5000) as usize;
+        let npg = 1 + rng.below(6) as usize;
+        let taper = 1 + rng.below(4) as usize;
+        let base = Dragonfly {
+            nodes_per_group: npg,
+            global_taper: 8, // >= LEADER_RING_FLOWS: dedicated
+            ..Dragonfly::default()
+        };
+        let contended = Dragonfly { global_taper: taper, ..base };
+        let pd = Hierarchical { topology: base }.allreduce_phases(len, n_ranks);
+        let pc = Hierarchical { topology: contended }.allreduce_phases(len, n_ranks);
+        assert_eq!(
+            pc.local_s.to_bits(),
+            pd.local_s.to_bits(),
+            "case {case}: contention touched the local phase"
+        );
+        assert!(
+            pc.global_s >= pd.global_s,
+            "case {case}: contention sped the global phase up ({} < {})",
+            pc.global_s,
+            pd.global_s
+        );
+        if taper >= LEADER_RING_FLOWS {
+            assert_eq!(
+                pc.global_s.to_bits(),
+                pd.global_s.to_bits(),
+                "case {case}: taper {taper} >= flows must be dedicated"
+            );
+        }
+        // refit keeps the contention parameters — the membership
+        // transition invariant
+        let refit = contended.refit(1 + rng.below(100) as usize);
+        assert_eq!(refit.global_taper, contended.global_taper, "case {case}");
+        assert_eq!(refit.beta_global, contended.beta_global, "case {case}");
+        // one concurrent flow never contends, whatever the link count
+        let link = Link {
+            alpha_s: rng.uniform() * 1e-5,
+            beta_bytes_per_s: 1e6 + rng.uniform() * 1e10,
+        };
+        let one = GlobalContention { links: taper, flows: 1 }.contend(link);
+        assert_eq!(one, link, "case {case}: a single flow contended");
     }
 }
 

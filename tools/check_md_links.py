@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Markdown link checker for README.md + docs/ (offline, stdlib-only).
+
+Checks every inline markdown link `[text](target)`:
+  * relative file targets must exist (resolved against the source file);
+  * `#anchor` / `file#anchor` targets must match a heading in the
+    target file (GitHub-style slugs: lowercase, punctuation stripped,
+    spaces -> dashes);
+  * http(s)/mailto links are out of scope (no network in CI).
+
+Usage: python3 tools/check_md_links.py README.md docs/*.md
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slug(heading: str) -> str:
+    """GitHub-style anchor slug of a heading line."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.lower().replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = CODE_FENCE.sub("", path.read_text(encoding="utf-8"))
+    return {slug(m.group(1)) for m in HEADING.finditer(text)}
+
+
+def main(files):
+    errors = []
+    for name in files:
+        src = Path(name)
+        if not src.exists():
+            errors.append(f"{name}: source file missing")
+            continue
+        text = CODE_FENCE.sub("", src.read_text(encoding="utf-8"))
+        for m in LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = src if not path_part else (src.parent / path_part)
+            if not dest.exists():
+                errors.append(f"{name}: broken link -> {target} (no {dest})")
+                continue
+            if anchor and dest.suffix == ".md" and slug(anchor) not in anchors_of(dest):
+                errors.append(f"{name}: broken anchor -> {target}")
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"checked {len(files)} files: all markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
