@@ -1,0 +1,233 @@
+//! Bench: the heterogeneous-fabric subsystem and the per-worker
+//! staleness engines.
+//!
+//! * wall cost of resolving a fleet profile (the pure `(seed, rank)`
+//!   draw functions) at cluster scale,
+//! * the **heterogeneity table**: fixed-k DC-S3GD vs `dyn_ssp` vs `sgs`
+//!   on the same mixed-tier + spot-revocation + diurnal fleet — sim
+//!   wall-clock, wall-clock-to-target-loss, final loss. The acceptance
+//!   row asserts the per-worker-bound controller (`dyn_ssp`) beats
+//!   fixed-k on wall-clock to the shared target loss.
+//!
+//! The scenario is selected structurally (a seed scan over resolved
+//! profiles), so the comparison is never vacuous: the post-revocation
+//! fleet always keeps at least two ranks of each tier, and the
+//! revocation always lands mid-run. The target loss is chosen as a
+//! level every engine provably reaches (2% above the worst engine's
+//! final trailing mean), so the time-to-target column is total.
+//!
+//! ```sh
+//! DCS3GD_BENCH_FAST=1 cargo bench --bench hetero
+//! ```
+
+use std::collections::BTreeMap;
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::bench_util::{black_box, write_bench_json, Bencher};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::hetero::{HeteroConfig, HeteroProfile};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+const NODES: usize = 8;
+/// Trailing-mean window (in recorded steps) for the loss trajectory.
+const WINDOW: usize = 48;
+
+fn fleet() -> HeteroConfig {
+    HeteroConfig {
+        enabled: true,
+        tiers: vec![1.0, 4.0],
+        spot_fraction: 0.3,
+        spot_mtbf_s: 0.5,
+        spot_correlation: 0.5,
+        diurnal_amplitude: 0.2,
+        diurnal_period_s: 0.8,
+        link_spread: 0.3,
+        ..HeteroConfig::default()
+    }
+}
+
+/// First seed whose resolved profile realizes the scenario: 1–2 spot
+/// revocations landing mid-run, and at least two ranks of each tier
+/// among the survivors. Pure profile arithmetic — no training runs.
+fn pick_seed(h: &HeteroConfig) -> u64 {
+    (0..4096u64)
+        .find(|&s| {
+            let p = HeteroProfile::resolve(h, s, NODES, NODES, 2);
+            let revoked: Vec<usize> = p.revocations.iter().map(|r| r.0).collect();
+            let timing_ok = !p.revocations.is_empty()
+                && p.revocations.len() <= 2
+                && p.revocations.iter().all(|&(_, t)| (0.3..=0.7).contains(&t));
+            let survivors = |tier: f64| {
+                (0..NODES).filter(|r| !revoked.contains(r) && p.tier[*r] == tier).count()
+            };
+            timing_ok && survivors(1.0) >= 2 && survivors(4.0) >= 2
+        })
+        .expect("a seed realizing the mixed-tier + spot scenario exists in 0..4096")
+}
+
+fn run_engine(algo: Algo, seed: u64, steps: u64) -> RunReport {
+    let cfg = ExperimentConfig::builder("linear")
+        .name(&format!("hetero_bench_{}", algo.name()))
+        .algo(algo)
+        .nodes(NODES)
+        .local_batch(16)
+        .steps(steps)
+        .seed(seed)
+        .eta_single(0.05)
+        .base_batch(16)
+        .data(4096, 512, 0.5)
+        .compute(ComputeModel::uniform(1e-3)) // t_C = 16 ms / step at tier 1
+        .staleness(8)
+        .k_bounds(2, 8)
+        .hetero(fleet())
+        .build();
+    run_experiment(&cfg).expect("hetero bench run")
+}
+
+/// All step records in simulated-time order (ties broken
+/// deterministically), the x-axis of the loss-vs-wall-clock race.
+fn timeline(r: &RunReport) -> Vec<(f64, f32)> {
+    let mut steps = r.recorder.steps();
+    steps.sort_by(|a, b| {
+        a.sim_time
+            .partial_cmp(&b.sim_time)
+            .unwrap()
+            .then(a.worker.cmp(&b.worker))
+            .then(a.iteration.cmp(&b.iteration))
+    });
+    steps.iter().map(|s| (s.sim_time, s.loss)).collect()
+}
+
+/// Trailing mean over the last WINDOW points of the timeline — the
+/// engine's settled loss level.
+fn final_level(tl: &[(f64, f32)]) -> f64 {
+    let tail = &tl[tl.len().saturating_sub(WINDOW)..];
+    tail.iter().map(|&(_, l)| l as f64).sum::<f64>() / tail.len() as f64
+}
+
+/// First simulated time at which the trailing WINDOW-mean loss reaches
+/// `target`. Total for any target >= final_level of the same timeline.
+fn time_to_loss(tl: &[(f64, f32)], target: f64) -> Option<f64> {
+    let mut sum = 0.0f64;
+    for (i, &(t, l)) in tl.iter().enumerate() {
+        sum += l as f64;
+        if i >= WINDOW {
+            sum -= tl[i - WINDOW].1 as f64;
+        }
+        let n = (i + 1).min(WINDOW);
+        if n == WINDOW && sum / n as f64 <= target {
+            return Some(t);
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let steps: u64 = if fast { 64 } else { 128 };
+
+    println!("# heterogeneity bench — profile resolution cost + the engine race\n");
+    let mut b = Bencher::from_env();
+    let h = fleet();
+    for &cap in &[256usize, 4096] {
+        b.bench_elems(&format!("hetero/resolve cap={cap}"), cap, || {
+            black_box(HeteroProfile::resolve(&h, 7, cap, cap, 8).tier.len());
+        });
+    }
+    b.report();
+
+    let seed = pick_seed(&h);
+    let profile = HeteroProfile::resolve(&h, seed, NODES, NODES, 2);
+    println!(
+        "\n# engine race: {NODES} ranks, tiers {:?}, seed {seed}, {steps} scheduled steps",
+        profile.tier
+    );
+    println!("# spot revocations {:?}, diurnal ±20%, link spread 0.3", profile.revocations);
+
+    let engines: Vec<(Algo, RunReport)> = vec![
+        (Algo::DcS3gd, run_engine(Algo::DcS3gd, seed, steps)),
+        (Algo::DynSsp, run_engine(Algo::DynSsp, seed, steps)),
+        (Algo::Sgs, run_engine(Algo::Sgs, seed, steps)),
+    ];
+    let timelines: Vec<Vec<(f64, f32)>> = engines.iter().map(|(_, r)| timeline(r)).collect();
+    // A loss level every engine provably reaches: 2% above the worst
+    // settled level, so time_to_loss is Some for every row.
+    let target = timelines.iter().map(|tl| final_level(tl)).fold(f64::MIN, f64::max) * 1.02;
+
+    println!(
+        "\n{:<10} {:>12} {:>16} {:>12} {:>8}",
+        "engine", "sim time", "t to target", "final loss", "epochs"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut reach: Vec<f64> = Vec::new();
+    for ((algo, r), tl) in engines.iter().zip(&timelines) {
+        let t = time_to_loss(tl, target)
+            .unwrap_or_else(|| panic!("{} never reached the shared target {target}", algo.name()));
+        println!(
+            "{:<10} {:>11.4}s {:>15.4}s {:>12.4} {:>8}",
+            algo.name(),
+            r.sim_time_s,
+            t,
+            r.final_train_loss,
+            r.epochs.worlds().len(),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("engine".to_string(), Json::Str(algo.name().to_string()));
+        m.insert("sim_time_s".into(), Json::Num(r.sim_time_s));
+        m.insert("time_to_target_s".into(), Json::Num(t));
+        m.insert("final_train_loss".into(), Json::Num(r.final_train_loss as f64));
+        m.insert("worlds".into(), Json::Num(r.epochs.worlds().len() as f64));
+        rows.push(Json::Obj(m));
+        reach.push(t);
+    }
+    let (t_fixed, t_dyn) = (reach[0], reach[1]);
+    let (fixed, dyn_ssp) = (&engines[0].1, &engines[1].1);
+
+    // Acceptance: the per-worker-bound controller beats fixed-k on
+    // wall-clock to the shared target loss — fixed-k pays every window
+    // at the slowest tier's pace, dyn_ssp rebalances the per-rank step
+    // budgets toward equal wall time.
+    assert!(
+        t_dyn < t_fixed,
+        "dyn_ssp must reach the target loss before fixed-k: {t_dyn} vs {t_fixed}"
+    );
+    assert!(
+        dyn_ssp.sim_time_s < fixed.sim_time_s,
+        "dyn_ssp must finish the step budget faster than fixed-k: {} vs {}",
+        dyn_ssp.sim_time_s,
+        fixed.sim_time_s
+    );
+    // and nobody falls out of the fixed-k loss envelope
+    for (algo, r) in &engines[1..] {
+        assert!(
+            r.final_train_loss < fixed.final_train_loss * 1.5 + 0.25,
+            "{} fell out of the fixed-k loss envelope: {} vs {}",
+            algo.name(),
+            r.final_train_loss,
+            fixed.final_train_loss
+        );
+    }
+    println!(
+        "\n(dyn_ssp reached the target in {:.1}% of the fixed-k wall-clock)",
+        100.0 * t_dyn / t_fixed
+    );
+
+    // Machine-readable export, merged into target/bench_results.json
+    // next to the other sections (the CI perf artifact).
+    let mut section = BTreeMap::new();
+    section.insert("nodes".to_string(), Json::Num(NODES as f64));
+    section.insert("steps".into(), Json::Num(steps as f64));
+    section.insert("seed".into(), Json::Num(seed as f64));
+    section.insert("tiers".into(), Json::Arr(profile.tier.iter().map(|&t| Json::Num(t)).collect()));
+    section.insert(
+        "revocations".into(),
+        Json::Num(profile.revocations.len() as f64),
+    );
+    section.insert("target_loss".into(), Json::Num(target));
+    section.insert("speedup_to_target".into(), Json::Num(t_fixed / t_dyn));
+    section.insert("measurements".into(), b.results_json());
+    section.insert("engines".into(), Json::Arr(rows));
+    let path = write_bench_json("hetero", Json::Obj(section)).expect("bench json");
+    println!("bench JSON -> {}", path.display());
+}

@@ -106,7 +106,8 @@ use crate::comm::{Group, JoinBootstrap, PendingReduce};
 use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{
-    param_crc, ControlRecord, EpochRecord, FaultKind, ScheduleEnv, WindowObs,
+    param_crc, ControlRecord, DynSspStaleness, EpochRecord, FaultKind, ScheduleEnv,
+    SgsStaleness, StalenessController, WindowObs,
 };
 use crate::dc::{self, DcHyper};
 use crate::model::Checkpoint;
@@ -131,6 +132,34 @@ struct PostedWindow {
     ratio: f64,
     /// The round rode its schedule as a control-plane probe.
     probe: bool,
+}
+
+/// Per-worker controller for the engine variant: the configured policy
+/// stack, wrapped by the per-rank bound layer when the run is a
+/// `dyn_ssp` / `sgs` engine. Same construction at birth and at every
+/// membership epoch transition, so the wrapped state re-baselines
+/// exactly like the policy underneath it.
+fn build_engine_controller(
+    cfg: &ExperimentConfig,
+    env: ScheduleEnv,
+) -> Box<dyn StalenessController> {
+    let inner = cfg.control.build_controller(cfg.staleness.max(1), env);
+    match cfg.algo {
+        Algo::DynSsp => Box::new(DynSspStaleness::new(
+            inner,
+            env.n_ranks,
+            cfg.control.k_min,
+            cfg.control.k_max,
+        )),
+        Algo::Sgs => Box::new(SgsStaleness::new(
+            inner,
+            cfg.seed,
+            env.n_ranks,
+            cfg.control.k_min,
+            cfg.control.k_max,
+        )),
+        _ => inner,
+    }
 }
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
@@ -264,8 +293,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 // instances see identical (all-reduced) observations, so
                 // their window/schedule decisions stay in lock-step
                 // across ranks.
-                let mut controller =
-                    cfg.control.build_controller(cfg.staleness.max(1), env);
+                let mut controller = build_engine_controller(&cfg, env);
                 let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
 
@@ -461,8 +489,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 t_ar_local: out.phases.local_s,
                                 t_ar_global: out.phases.global_s,
                                 ran: Some(p.algo),
+                                probe: p.probe,
                             };
-                            let prev = decision;
+                            let prev = decision.clone();
                             if pending_transition.is_none() {
                                 decision = controller.on_window(&obs);
                             }
@@ -626,8 +655,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             // new (slot, world) view — same rule as
                             // momentum.
                             codec.rebind(slot, world.len());
-                            controller =
-                                cfg.control.build_controller(cfg.staleness.max(1), env);
+                            controller = build_engine_controller(&cfg, env);
                             decision = controller.current();
                             ctx.new_incarnation(ctx.clock.now());
 

@@ -8,6 +8,8 @@
 //! | `DcS3gd`  | non-blocking       | k (≥1)    | Eq. 10/17    |
 //! | `Asgd`    | parameter server   | async     | none         |
 //! | `DcAsgd`  | parameter server   | async     | Eq. 6 at PS  |
+//! | `DynSsp`  | non-blocking       | per-rank  | Eq. 10/17    |
+//! | `Sgs`     | non-blocking       | random    | Eq. 10/17    |
 //!
 //! All engines are generic over [`crate::model::StepBackend`], so they
 //! run identically over the PJRT artifacts (production) or the
@@ -36,6 +38,14 @@ pub enum Algo {
     Asgd,
     /// Delay-compensated ASGD (Zheng et al.) through a parameter server.
     DcAsgd,
+    /// Dynamic SSP (1908.11848): the DC-S3GD engine with **per-worker**
+    /// staleness bounds scaled inversely to each rank's observed t_C —
+    /// the heterogeneity-aware generalization of `dss_pid`.
+    DynSsp,
+    /// Stochastic Gradient Staleness (2509.05679): the DC-S3GD engine
+    /// with per-window *randomized* staleness draws from the
+    /// deterministic counter RNG.
+    Sgs,
 }
 
 impl Algo {
@@ -49,6 +59,8 @@ impl Algo {
             "dcs3gd" | "dc-s3gd" | "dc_s3gd" => Algo::DcS3gd,
             "asgd" => Algo::Asgd,
             "dcasgd" | "dc-asgd" | "dc_asgd" => Algo::DcAsgd,
+            "dyn_ssp" | "dyn-ssp" | "dynssp" => Algo::DynSsp,
+            "sgs" => Algo::Sgs,
             other => bail!("unknown algorithm {other:?}"),
         })
     }
@@ -60,22 +72,40 @@ impl Algo {
             Algo::DcS3gd => "dcs3gd",
             Algo::Asgd => "asgd",
             Algo::DcAsgd => "dcasgd",
+            Algo::DynSsp => "dyn_ssp",
+            Algo::Sgs => "sgs",
         }
     }
 
     /// Decentralized (all-reduce based) vs centralized (PS based).
     pub fn is_decentralized(&self) -> bool {
-        matches!(self, Algo::Ssgd | Algo::S3gd | Algo::DcS3gd)
+        matches!(self, Algo::Ssgd | Algo::S3gd | Algo::DcS3gd | Algo::DynSsp | Algo::Sgs)
+    }
+
+    /// Engines built on the stale-synchronous window loop in
+    /// [`dcs3gd`] — these support membership epochs, compression and
+    /// the full control-plane stack.
+    pub fn is_windowed(&self) -> bool {
+        matches!(self, Algo::S3gd | Algo::DcS3gd | Algo::DynSsp | Algo::Sgs)
     }
 }
 
 /// Run one experiment end to end per its config; dispatches to the
 /// right engine and returns the aggregated report.
 pub fn run_experiment(cfg: &crate::config::ExperimentConfig) -> Result<RunReport> {
+    // Resolve the heterogeneity profile into the base models once, up
+    // front, so every engine (and the schedule pricing inside the
+    // control plane) sees the same tiered/asymmetric fabric.
+    let cfg = if cfg.hetero.enabled && !cfg.hetero.applied {
+        std::borrow::Cow::Owned(cfg.with_hetero_applied())
+    } else {
+        std::borrow::Cow::Borrowed(cfg)
+    };
+    let cfg = cfg.as_ref();
     let harness = WorkerHarness::prepare(cfg)?;
     match cfg.algo {
         Algo::Ssgd => ssgd::run(cfg, harness),
-        Algo::S3gd | Algo::DcS3gd => dcs3gd::run(cfg, harness),
+        Algo::S3gd | Algo::DcS3gd | Algo::DynSsp | Algo::Sgs => dcs3gd::run(cfg, harness),
         Algo::Asgd | Algo::DcAsgd => psasync::run(cfg, harness),
     }
 }
@@ -89,9 +119,18 @@ mod tests {
         assert_eq!(Algo::parse("DC-S3GD").unwrap(), Algo::DcS3gd);
         assert_eq!(Algo::parse("ssgd").unwrap(), Algo::Ssgd);
         assert!(Algo::parse("sgdx").is_err());
-        for a in [Algo::Ssgd, Algo::S3gd, Algo::DcS3gd, Algo::Asgd, Algo::DcAsgd] {
+        for a in [
+            Algo::Ssgd,
+            Algo::S3gd,
+            Algo::DcS3gd,
+            Algo::Asgd,
+            Algo::DcAsgd,
+            Algo::DynSsp,
+            Algo::Sgs,
+        ] {
             assert_eq!(Algo::parse(a.name()).unwrap(), a);
         }
+        assert_eq!(Algo::parse("dyn-ssp").unwrap(), Algo::DynSsp);
     }
 
     #[test]
@@ -113,5 +152,8 @@ mod tests {
     fn centralization_split() {
         assert!(Algo::DcS3gd.is_decentralized());
         assert!(!Algo::DcAsgd.is_decentralized());
+        assert!(Algo::DynSsp.is_decentralized());
+        assert!(Algo::Sgs.is_windowed());
+        assert!(!Algo::Ssgd.is_windowed());
     }
 }

@@ -150,6 +150,9 @@ pub struct WorkerCtx {
     /// the board can drop anything from a dead incarnation.
     incarnation: u64,
     compute: crate::simtime::ComputeModel,
+    /// Diurnal load curve in virtual time (hetero subsystem); `None`
+    /// off the heterogeneous path.
+    diurnal: Option<crate::hetero::DiurnalCurve>,
     time_from_wall: bool,
     local_batch: usize,
     // scratch
@@ -180,6 +183,7 @@ impl WorkerCtx {
             epochs: h.epochs.clone(),
             incarnation: 0,
             compute: cfg.compute.clone(),
+            diurnal: crate::hetero::DiurnalCurve::for_rank(&cfg.hetero, cfg.seed, rank),
             time_from_wall: cfg.time_from_wall,
             local_batch: cfg.local_batch,
             x: vec![0.0; cfg.local_batch * px],
@@ -211,6 +215,9 @@ impl WorkerCtx {
         };
         if !self.chaos.is_inert() {
             t_c *= self.chaos.compute_factor(self.clock.now());
+        }
+        if let Some(curve) = &self.diurnal {
+            t_c *= curve.factor(self.clock.now());
         }
         self.clock.advance(t_c);
         self.beat(self.clock.now());
@@ -405,6 +412,8 @@ pub struct RunReport {
     pub control: ControlLog,
     /// Membership-epoch trace (empty for fixed-membership runs).
     pub epochs: EpochTrace,
+    /// The resolved heterogeneity profile (`None` for homogeneous runs).
+    pub hetero: Option<crate::hetero::HeteroProfile>,
 }
 
 impl RunReport {
@@ -439,6 +448,7 @@ impl RunReport {
             recorder,
             control: ControlLog::default(),
             epochs: EpochTrace::default(),
+            hetero: cfg.hetero_profile(),
         }
     }
 
@@ -475,6 +485,19 @@ impl RunReport {
         // Membership-epoch trace: world-size trajectory, join/depart
         // sets, and the cross-rank parameter-checksum agreement.
         m.insert("epochs".into(), self.epochs.to_json());
+        // The heterogeneity profile the run executed; `enabled: false`
+        // stub on the homogeneous path so consumers always find the key.
+        m.insert(
+            "hetero".into(),
+            match &self.hetero {
+                Some(p) => p.to_json(),
+                None => {
+                    let mut h = std::collections::BTreeMap::new();
+                    h.insert("enabled".to_string(), Json::Bool(false));
+                    Json::Obj(h)
+                }
+            },
+        );
         Json::Obj(m)
     }
 

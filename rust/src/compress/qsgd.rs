@@ -116,6 +116,13 @@ impl GradCompressor for Qsgd {
         self.bits as f32 / 32.0
     }
 
+    /// The `compress_coupled` hook: a ratio is `bits/32`, snapped to the
+    /// nearest rung of the 4 ↔ 8 ↔ 16 ladder the policy walks.
+    fn set_ratio(&mut self, ratio: f32) {
+        let bits = (ratio * 32.0).round().clamp(2.0, 16.0) as u32;
+        self.bits = crate::control::snap_qsgd_bits(bits);
+    }
+
     fn reset(&mut self) {
         self.residual.iter_mut().for_each(|x| *x = 0.0);
     }
@@ -183,6 +190,21 @@ mod tests {
         assert!(wire.iter().all(|&x| x == 0.0));
         assert!(own.iter().all(|&x| x == 0.0));
         assert!(c.residual().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn set_ratio_walks_the_bits_ladder() {
+        let mut c = Qsgd::new(8, 16, 0, 0);
+        c.set_ratio(8.0 / 32.0);
+        assert_eq!(c.ratio(), 8.0 / 32.0);
+        assert_eq!(c.wire_elems(), qsgd_wire_elems(8, 8));
+        c.set_ratio(4.0 / 32.0);
+        assert_eq!(c.ratio(), 4.0 / 32.0);
+        // off-rung ratios snap to the nearest rung
+        c.set_ratio(6.0 / 32.0);
+        assert_eq!(c.ratio(), 4.0 / 32.0);
+        c.set_ratio(13.0 / 32.0);
+        assert_eq!(c.ratio(), 16.0 / 32.0);
     }
 
     #[test]

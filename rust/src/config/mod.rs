@@ -17,6 +17,7 @@ use crate::compress::{CompressConfig, CompressorKind};
 use crate::control::{
     ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent, ProbeMode,
 };
+use crate::hetero::{HeteroConfig, HeteroProfile};
 use crate::simtime::ComputeModel;
 
 /// Full description of one training run.
@@ -92,6 +93,12 @@ pub struct ExperimentConfig {
     /// table; see [`crate::compress`]). Default: off.
     pub compress: CompressConfig,
 
+    // --- heterogeneity ---
+    /// Heterogeneous-fabric subsystem (the `[hetero]` TOML table; see
+    /// [`crate::hetero`]): compute tiers, link asymmetry, spot
+    /// revocations, diurnal load. Default: off.
+    pub hetero: HeteroConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -136,6 +143,7 @@ impl ExperimentConfig {
             time_from_wall: false,
             control: ControlConfig::default(),
             compress: CompressConfig::default(),
+            hetero: HeteroConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -336,6 +344,23 @@ impl ExperimentConfig {
                 "compress.ratio_max" => {
                     cfg.compress.ratio_max = val.as_f64().ok_or_else(err)? as f32
                 }
+                "hetero.enabled" => cfg.hetero.enabled = val.as_bool().ok_or_else(err)?,
+                "hetero.tiers" => cfg.hetero.tiers = parse_f64_array(val, k)?,
+                "hetero.tier_weights" => cfg.hetero.tier_weights = parse_f64_array(val, k)?,
+                "hetero.spot_fraction" => {
+                    cfg.hetero.spot_fraction = val.as_f64().ok_or_else(err)?
+                }
+                "hetero.spot_mtbf_s" => cfg.hetero.spot_mtbf_s = val.as_f64().ok_or_else(err)?,
+                "hetero.spot_correlation" => {
+                    cfg.hetero.spot_correlation = val.as_f64().ok_or_else(err)?
+                }
+                "hetero.diurnal_amplitude" => {
+                    cfg.hetero.diurnal_amplitude = val.as_f64().ok_or_else(err)?
+                }
+                "hetero.diurnal_period_s" => {
+                    cfg.hetero.diurnal_period_s = val.as_f64().ok_or_else(err)?
+                }
+                "hetero.link_spread" => cfg.hetero.link_spread = val.as_f64().ok_or_else(err)?,
                 "control.fault_rank" => fault_rank = Some(val.as_i64().ok_or_else(err)? as usize),
                 "control.fault_at_s" => fault_at_s = Some(val.as_f64().ok_or_else(err)?),
                 "control.fault_kind" => {
@@ -457,10 +482,24 @@ impl ExperimentConfig {
         }
         self.control.validate()?;
         self.compress.validate()?;
+        self.hetero.validate()?;
         if self.compress.kind != CompressorKind::None && !self.algo.is_decentralized() {
             bail!(
                 "gradient compression rides the decentralized all-reduce engines \
-                 (ssgd | s3gd | dcs3gd), got {}",
+                 (ssgd | s3gd | dcs3gd | dyn_ssp | sgs), got {}",
+                self.algo.name()
+            );
+        }
+        // Spot revocations become membership departures, so they need
+        // the windowed (stale-synchronous) engine family.
+        if self.hetero.enabled
+            && self.hetero.spot_fraction > 0.0
+            && self.hetero.spot_mtbf_s > 0.0
+            && !self.algo.is_windowed()
+        {
+            bail!(
+                "hetero spot revocations depart the run and need a windowed engine \
+                 (s3gd | dcs3gd | dyn_ssp | sgs), got {}",
                 self.algo.name()
             );
         }
@@ -480,10 +519,10 @@ impl ExperimentConfig {
             }
         }
         if membership.is_elastic() {
-            if !matches!(self.algo, Algo::S3gd | Algo::DcS3gd) {
+            if !self.algo.is_windowed() {
                 bail!(
                     "membership events (join / non-respawned kill) need the \
-                     stale-synchronous engine (s3gd | dcs3gd), got {}",
+                     stale-synchronous engine (s3gd | dcs3gd | dyn_ssp | sgs), got {}",
                     self.algo.name()
                 );
             }
@@ -510,6 +549,67 @@ impl ExperimentConfig {
         }
         Ok(())
     }
+
+    /// The resolved heterogeneity profile over the run's full capacity
+    /// (initial ranks + scripted joiners), or `None` when the subsystem
+    /// is off. Local links are per-rank; global links per dragonfly
+    /// group.
+    pub fn hetero_profile(&self) -> Option<HeteroProfile> {
+        if !self.hetero.enabled {
+            return None;
+        }
+        let capacity = self.control.membership_log(self.nodes).capacity();
+        Some(HeteroProfile::resolve(
+            &self.hetero,
+            self.seed,
+            capacity,
+            capacity,
+            self.topology().groups,
+        ))
+    }
+
+    /// A copy of this config with the heterogeneity profile merged into
+    /// the base models: tier multipliers into the compute model's
+    /// per-rank straggler factors, bottleneck link scales into the flat
+    /// and dragonfly β's, and spot revocations into the fault plan as
+    /// permanent departures. Idempotent (`hetero.applied` guards a
+    /// second pass); a no-op when the subsystem is off.
+    pub fn with_hetero_applied(&self) -> ExperimentConfig {
+        let mut cfg = self.clone();
+        if !cfg.hetero.enabled || cfg.hetero.applied {
+            return cfg;
+        }
+        let profile = self.hetero_profile().expect("hetero enabled");
+        if cfg.compute.straggler_factor.len() < profile.tier.len() {
+            cfg.compute.straggler_factor.resize(profile.tier.len(), 1.0);
+        }
+        for (f, tier) in cfg.compute.straggler_factor.iter_mut().zip(&profile.tier) {
+            *f *= tier;
+        }
+        cfg.net.beta_bytes_per_s *= profile.link_scale_local;
+        cfg.dragonfly.beta_local *= profile.link_scale_local;
+        cfg.dragonfly.beta_global *= profile.link_scale_global;
+        if let AllReduceAlgo::Hierarchical(ref mut d) = cfg.net.algo {
+            d.beta_local *= profile.link_scale_local;
+            d.beta_global *= profile.link_scale_global;
+        }
+        for &(rank, at_s) in &profile.revocations {
+            cfg.control.faults.push(FaultEvent {
+                rank,
+                at_s,
+                kind: FaultKind::Kill { respawn: false },
+            });
+        }
+        cfg.hetero.applied = true;
+        cfg
+    }
+}
+
+/// A flat TOML array of numbers (`tiers = [1.0, 1.6, 2.5]`).
+fn parse_f64_array(val: &TomlValue, key: &str) -> Result<Vec<f64>> {
+    val.as_array()
+        .and_then(|xs| xs.iter().map(TomlValue::as_f64).collect::<Option<Vec<f64>>>())
+        .ok_or_else(|| anyhow::anyhow!("{key} must be an array of numbers"))
 }
 
 /// Parse a collective-schedule name into an [`AllReduceAlgo`];
@@ -734,6 +834,11 @@ impl ConfigBuilder {
     /// Replace the whole `[compress]` table.
     pub fn compress(mut self, v: CompressConfig) -> Self {
         self.cfg.compress = v;
+        self
+    }
+    /// Replace the whole `[hetero]` table.
+    pub fn hetero(mut self, v: HeteroConfig) -> Self {
+        self.cfg.hetero = v;
         self
     }
     /// Error-feedback top-k compression at the given density.
@@ -1266,6 +1371,103 @@ mod tests {
             warmup_stop_frac = 0.5
         ";
         assert!(ExperimentConfig::from_toml_str(doc).is_err());
+    }
+
+    #[test]
+    fn hetero_table_parses_and_validates() {
+        let doc = r#"
+            nodes = 4
+
+            [hetero]
+            enabled = true
+            tiers = [1.0, 1.6, 2.5]
+            tier_weights = [0.5, 0.3, 0.2]
+            spot_fraction = 0.5
+            spot_mtbf_s = 40.0
+            spot_correlation = 0.7
+            diurnal_amplitude = 0.25
+            diurnal_period_s = 120.0
+            link_spread = 0.4
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert!(cfg.hetero.enabled);
+        assert_eq!(cfg.hetero.tiers, vec![1.0, 1.6, 2.5]);
+        assert_eq!(cfg.hetero.spot_mtbf_s, 40.0);
+        assert_eq!(cfg.hetero.link_spread, 0.4);
+        // bad knobs rejected through the same validate path
+        assert!(ExperimentConfig::from_toml_str("[hetero]\ntiers = [0.0]").is_err());
+        assert!(ExperimentConfig::from_toml_str("[hetero]\ntiers = \"fast\"").is_err());
+        assert!(ExperimentConfig::from_toml_str("[hetero]\nspot_fraction = 2.0").is_err());
+        // spot revocations need a windowed engine
+        assert!(ExperimentConfig::from_toml_str(
+            "algo = \"ssgd\"\n[hetero]\nenabled = true\nspot_fraction = 0.5\nspot_mtbf_s = 10.0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn with_hetero_applied_merges_the_profile_once() {
+        let doc = r#"
+            nodes = 6
+            seed = 9
+
+            [hetero]
+            enabled = true
+            tiers = [1.0, 2.0]
+            spot_fraction = 1.0
+            spot_mtbf_s = 5.0
+            link_spread = 0.5
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        let applied = cfg.with_hetero_applied();
+        assert!(applied.hetero.applied);
+        let profile = cfg.hetero_profile().unwrap();
+        // tiers landed in the per-rank straggler factors
+        assert_eq!(applied.compute.straggler_factor, profile.tier);
+        // link bottleneck scaled the flat β down
+        assert!(applied.net.beta_bytes_per_s < cfg.net.beta_bytes_per_s);
+        assert!(
+            (applied.net.beta_bytes_per_s
+                - cfg.net.beta_bytes_per_s * profile.link_scale_local)
+                .abs()
+                < 1e-6
+        );
+        // every non-anchor rank revokes (fraction 1) as a departure
+        assert_eq!(profile.revocations.len(), 5);
+        assert!(applied.control.faults.has_departures());
+        // idempotent: a second application changes nothing
+        let twice = applied.with_hetero_applied();
+        assert_eq!(twice.control.faults.events().len(), applied.control.faults.events().len());
+        assert_eq!(twice.compute.straggler_factor, applied.compute.straggler_factor);
+        // disabled subsystem is a no-op
+        let plain = ExperimentConfig::from_toml_str("nodes = 4").unwrap();
+        assert!(plain.hetero_profile().is_none());
+        assert!(plain.with_hetero_applied().compute.straggler_factor.is_empty());
+    }
+
+    #[test]
+    fn new_engines_parse_and_admit_the_full_stack() {
+        let doc = r#"
+            nodes = 4
+            algo = "dyn_ssp"
+
+            [control]
+            policy = "compress_coupled"
+
+            [compress]
+            kind = "topk"
+            ratio = 0.1
+
+            [[control.join]]
+            rank = 4
+            at_s = 2.0
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.algo, Algo::DynSsp);
+        // sgs too, and the dyn_ssp *policy* under the dcs3gd engine
+        ExperimentConfig::from_toml_str("nodes = 2\nalgo = \"sgs\"").unwrap();
+        let p = ExperimentConfig::from_toml_str("[control]\npolicy = \"dyn_ssp\"").unwrap();
+        assert_eq!(p.control.policy, ControlPolicy::DynSsp);
     }
 
     #[test]

@@ -53,8 +53,9 @@ pub use chaos::{ChaosInjector, FaultEvent, FaultKind, FaultPlan, HeartbeatBoard,
 pub use log::{ControlLog, ControlRecord};
 pub use membership::{param_crc, EpochRecord, EpochTrace, JoinEvent, MembershipLog};
 pub use staleness::{
-    CompressCoupled, Decision, DssPid, Fixed, LambdaCoupled, ProbeCfg, ProbeMode, Quarantine,
-    ScheduleCoupled, ScheduleEnv, StalenessController, WindowObs,
+    snap_qsgd_bits, CompressCoupled, Decision, DssPid, DynSspStaleness, Fixed, LambdaCoupled,
+    ProbeCfg, ProbeMode, Quarantine, ScheduleCoupled, ScheduleEnv, SgsStaleness,
+    StalenessController, WindowObs, QSGD_BITS_LADDER,
 };
 
 use anyhow::{bail, Result};
@@ -78,6 +79,11 @@ pub enum ControlPolicy {
     /// ratio selection, with the schedule candidates priced at the
     /// compressed wire volume.
     CompressCoupled,
+    /// [`ControlPolicy::DssPid`] plus **per-worker** dynamic staleness
+    /// bounds from the piggybacked per-rank t_C split (Dynamic SSP,
+    /// 1908.11848) — slow ranks run shorter windows, fast ranks fill
+    /// the same wall time with more local steps.
+    DynSsp,
 }
 
 impl ControlPolicy {
@@ -92,9 +98,11 @@ impl ControlPolicy {
             "compress_coupled" | "compress-coupled" | "compresscoupled" => {
                 ControlPolicy::CompressCoupled
             }
+            "dyn_ssp" | "dyn-ssp" | "dynssp" => ControlPolicy::DynSsp,
             other => bail!(
                 "unknown control policy {other:?} \
-                 (fixed | dss_pid | lambda_coupled | schedule_coupled | compress_coupled)"
+                 (fixed | dss_pid | lambda_coupled | schedule_coupled | compress_coupled \
+                 | dyn_ssp)"
             ),
         })
     }
@@ -106,6 +114,7 @@ impl ControlPolicy {
             ControlPolicy::LambdaCoupled => "lambda_coupled",
             ControlPolicy::ScheduleCoupled => "schedule_coupled",
             ControlPolicy::CompressCoupled => "compress_coupled",
+            ControlPolicy::DynSsp => "dyn_ssp",
         }
     }
 }
@@ -303,6 +312,19 @@ impl ControlConfig {
                 self.quarantine_after,
                 self.probe_cfg(),
             )),
+            ControlPolicy::DynSsp => Box::new(DynSspStaleness::new(
+                Box::new(DssPid::new(
+                    k_init,
+                    self.k_min,
+                    self.k_max,
+                    self.gain_p,
+                    self.gain_i,
+                    self.adjust_every,
+                )),
+                env.n_ranks,
+                self.k_min,
+                self.k_max,
+            )),
         }
     }
 
@@ -330,6 +352,7 @@ mod tests {
             ControlPolicy::LambdaCoupled,
             ControlPolicy::ScheduleCoupled,
             ControlPolicy::CompressCoupled,
+            ControlPolicy::DynSsp,
         ] {
             assert_eq!(ControlPolicy::parse(p.name()).unwrap(), p);
         }

@@ -96,6 +96,11 @@ pub struct WindowObs {
     /// `None` before the first round, or from engines that do not
     /// thread it).
     pub ran: Option<AllReduceAlgo>,
+    /// The completed round rode its schedule as a one-window **probe**
+    /// excursion: its t_AR is evidence about the probed candidate, not
+    /// about the standing operating point — the k-loop must discount
+    /// it instead of reacting to it.
+    pub probe: bool,
 }
 
 /// An active straggler quarantine: `rank` (in dragonfly group `group`)
@@ -112,7 +117,7 @@ pub struct Quarantine {
 /// The controller's answer: window length for the next window, a
 /// multiplier on the configured λ0, and (for schedule-aware policies)
 /// the collective schedule plus any straggler quarantine.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Decision {
     pub k: usize,
     pub lam_scale: f32,
@@ -130,6 +135,13 @@ pub struct Decision {
     /// trace marker that keeps probe windows out of the
     /// schedule-switch accounting.
     pub probe: bool,
+    /// Per-worker window lengths (slot-indexed), for the
+    /// heterogeneity-aware policies ([`DynSspStaleness`],
+    /// [`SgsStaleness`]) that bound staleness per rank instead of
+    /// fleet-wide. `None` = every rank runs [`Decision::k`] (modulo
+    /// quarantine). Shared via `Arc`: the vector is identical on every
+    /// rank by the determinism contract.
+    pub per_rank_k: Option<std::sync::Arc<Vec<usize>>>,
 }
 
 impl Decision {
@@ -142,12 +154,20 @@ impl Decision {
             quarantine: None,
             compress_ratio: None,
             probe: false,
+            per_rank_k: None,
         }
     }
 
-    /// The window length `rank` runs: the quarantined group's members
-    /// keep the group-local window, everyone else the (boosted) k.
+    /// The window length `rank` runs. Per-rank bounds take precedence
+    /// (the general heterogeneity-aware policy); the group-granular
+    /// quarantine is the special case that survives for policies
+    /// without per-rank bounds.
     pub fn k_for(&self, rank: usize, nodes_per_group: usize) -> usize {
+        if let Some(ks) = &self.per_rank_k {
+            if let Some(&k) = ks.get(rank) {
+                return k;
+            }
+        }
         match self.quarantine {
             Some(q) if rank / nodes_per_group.max(1) == q.group => q.k_group,
             _ => self.k,
@@ -255,6 +275,13 @@ impl StalenessController for DssPid {
     }
 
     fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        // A probe window's t_AR belongs to the probed candidate, not
+        // the standing schedule: folding it into the PI state would
+        // make every probe excursion yank k. Discount it — the probing
+        // layer owns that evidence.
+        if obs.probe {
+            return self.current();
+        }
         if let Some(target) = self.target(obs) {
             let err = target - self.k as f64;
             // Anti-windup clamp: the integral can demand at most a few
@@ -803,13 +830,13 @@ impl StalenessController for ScheduleCoupled {
     }
 
     fn current(&self) -> Decision {
-        let base = self.inner.current();
-        let mut d = base;
+        let mut d = self.inner.current();
+        let base_k = d.k;
         d.schedule = Some(self.probing.unwrap_or(self.active));
         d.probe = self.probing.is_some();
         if let Some(q) = &self.quarantine {
-            d.k = (base.k + q.boost).min(self.k_max);
-            d.quarantine = Some(Quarantine { rank: q.rank, group: q.group, k_group: base.k });
+            d.k = (base_k + q.boost).min(self.k_max);
+            d.quarantine = Some(Quarantine { rank: q.rank, group: q.group, k_group: base_k });
         }
         d
     }
@@ -844,11 +871,14 @@ impl StalenessController for ScheduleCoupled {
 /// `⌈n·bits/32⌉`, so the flat-vs-hierarchical crossover tracks what the
 /// fabric actually carries.
 ///
-/// Ratio adaptation engages only for [`CompressorKind::TopK`] — the
-/// identity has no knob, and QSGD's bits are a config constant — but
-/// the wire-aware schedule pricing applies to all three kinds. Same
-/// determinism contract as every policy: pure function of the
-/// observation history.
+/// Ratio adaptation engages for [`CompressorKind::TopK`] (the density
+/// knob) and [`CompressorKind::Qsgd`] (the 4 ↔ 8 ↔ 16 **bits ladder**:
+/// hot evidence steps the quantization down a rung, cold evidence back
+/// up, surfaced as `compress_ratio = bits/32` so the codec's
+/// [`crate::compress::GradCompressor::set_ratio`] snaps to the rung) —
+/// the identity has no knob — and the wire-aware schedule pricing
+/// applies to all three kinds. Same determinism contract as every
+/// policy: pure function of the observation history.
 #[derive(Debug, Clone)]
 pub struct CompressCoupled {
     inner: ScheduleCoupled,
@@ -856,6 +886,8 @@ pub struct CompressCoupled {
     ratio: f32,
     ratio_min: f32,
     ratio_max: f32,
+    /// Current rung of the QSGD bits ladder (QSGD runs only).
+    bits: u32,
     hysteresis: f64,
     adjust_after: u64,
     hot_streak: u64,
@@ -863,6 +895,18 @@ pub struct CompressCoupled {
     /// Dense payload width (model + piggyback) the wire volumes derive
     /// from.
     dense_elems: usize,
+}
+
+/// The QSGD quantization rungs `compress_coupled` walks.
+pub const QSGD_BITS_LADDER: [u32; 3] = [4, 8, 16];
+
+/// The nearest ladder rung to an arbitrary bit width (ties take the
+/// smaller rung — more compression).
+pub fn snap_qsgd_bits(bits: u32) -> u32 {
+    *QSGD_BITS_LADDER
+        .iter()
+        .min_by_key(|&&b| (b as i64 - bits as i64).unsigned_abs())
+        .unwrap()
 }
 
 impl CompressCoupled {
@@ -904,6 +948,7 @@ impl CompressCoupled {
             ratio,
             ratio_min: compress.ratio_min,
             ratio_max: compress.ratio_max,
+            bits: snap_qsgd_bits(compress.bits),
             hysteresis: hysteresis.max(0.0),
             adjust_after: adjust_every.max(1),
             hot_streak: 0,
@@ -933,14 +978,29 @@ impl CompressCoupled {
                 (per * ranks).div_ceil(2).max(1)
             }
             CompressorKind::Qsgd => {
-                crate::compress::qsgd::qsgd_wire_elems(n, self.inner.env.compress.bits)
-                    + ctrl_slots(ranks)
+                // Priced at the *current* ladder rung, not the config
+                // constant — the schedule comparison must track what
+                // the fabric actually carries.
+                crate::compress::qsgd::qsgd_wire_elems(n, self.bits) + ctrl_slots(ranks)
             }
         }
     }
 
+    /// One rung down (hot) or up (cold) the QSGD bits ladder.
+    fn step_bits(&mut self, down: bool) -> bool {
+        let pos = QSGD_BITS_LADDER.iter().position(|&b| b == self.bits).unwrap_or(1);
+        let next = if down { pos.checked_sub(1) } else { (pos + 1 < QSGD_BITS_LADDER.len()).then_some(pos + 1) };
+        match next {
+            Some(p) => {
+                self.bits = QSGD_BITS_LADDER[p];
+                true
+            }
+            None => false,
+        }
+    }
+
     fn adapt_ratio(&mut self, obs: &WindowObs) {
-        if self.kind != CompressorKind::TopK {
+        if self.kind == CompressorKind::None {
             return;
         }
         if obs.t_compute <= 0.0 || obs.t_allreduce <= 0.0 {
@@ -951,16 +1011,34 @@ impl CompressCoupled {
         if obs.t_allreduce > (1.0 + self.hysteresis) * budget {
             self.cold_streak = 0;
             self.hot_streak += 1;
-            if self.hot_streak >= self.adjust_after && self.ratio > self.ratio_min {
-                self.ratio = (self.ratio * 0.5).max(self.ratio_min);
-                self.hot_streak = 0;
+            if self.hot_streak >= self.adjust_after {
+                let moved = match self.kind {
+                    CompressorKind::TopK if self.ratio > self.ratio_min => {
+                        self.ratio = (self.ratio * 0.5).max(self.ratio_min);
+                        true
+                    }
+                    CompressorKind::Qsgd => self.step_bits(true),
+                    _ => false,
+                };
+                if moved {
+                    self.hot_streak = 0;
+                }
             }
         } else if obs.t_allreduce < (1.0 - self.hysteresis) * 0.5 * budget {
             self.hot_streak = 0;
             self.cold_streak += 1;
-            if self.cold_streak >= self.adjust_after && self.ratio < self.ratio_max {
-                self.ratio = (self.ratio * 2.0).min(self.ratio_max);
-                self.cold_streak = 0;
+            if self.cold_streak >= self.adjust_after {
+                let moved = match self.kind {
+                    CompressorKind::TopK if self.ratio < self.ratio_max => {
+                        self.ratio = (self.ratio * 2.0).min(self.ratio_max);
+                        true
+                    }
+                    CompressorKind::Qsgd => self.step_bits(false),
+                    _ => false,
+                };
+                if moved {
+                    self.cold_streak = 0;
+                }
             }
         } else {
             self.hot_streak = 0;
@@ -976,8 +1054,12 @@ impl StalenessController for CompressCoupled {
 
     fn current(&self) -> Decision {
         let mut d = self.inner.current();
-        if self.kind == CompressorKind::TopK {
-            d.compress_ratio = Some(self.ratio);
+        match self.kind {
+            CompressorKind::TopK => d.compress_ratio = Some(self.ratio),
+            // bits/32 is QSGD's wire ratio; the codec's `set_ratio`
+            // snaps it back to the rung.
+            CompressorKind::Qsgd => d.compress_ratio = Some(self.bits as f32 / 32.0),
+            CompressorKind::None => {}
         }
         d
     }
@@ -988,6 +1070,150 @@ impl StalenessController for CompressCoupled {
         // volume before the inner policy compares them.
         self.inner.env.n_elems = self.wire_pricing_elems();
         self.inner.on_window(obs);
+        self.current()
+    }
+}
+
+/// Dynamic SSP (Zhao et al., 1908.11848 §4): **per-worker** dynamic
+/// staleness bounds, the generalization of [`DssPid`] to heterogeneous
+/// fleets. The wrapped policy still drives the *fleet-mean* window k
+/// (and schedule / ratio / quarantine, if it is one of the coupled
+/// policies); on top of it, the per-rank t_C vector piggybacked on the
+/// collective sets each rank's own bound
+///
+/// ```text
+/// k_i = round(k · t̄_C / t_C,i)  clamped to [k_min, k_max]
+/// ```
+///
+/// — slow ranks run fewer local steps, fast ranks fill the same wall
+/// time with more, and the rendezvous stays matched because every rank
+/// still posts every round. The group-granular straggler quarantine is
+/// the degenerate case (one slow rank, k_i pinned at the base window);
+/// here every rank gets a bound, continuously. Same determinism
+/// contract: the per-rank vector is a pure function of the shared
+/// observations, so every rank computes the identical bounds.
+pub struct DynSspStaleness {
+    inner: Box<dyn StalenessController>,
+    n_ranks: usize,
+    k_min: usize,
+    k_max: usize,
+    per_rank: Option<std::sync::Arc<Vec<usize>>>,
+}
+
+impl DynSspStaleness {
+    pub fn new(
+        inner: Box<dyn StalenessController>,
+        n_ranks: usize,
+        k_min: usize,
+        k_max: usize,
+    ) -> Self {
+        let k_min = k_min.max(1);
+        DynSspStaleness { inner, n_ranks, k_min, k_max: k_max.max(k_min), per_rank: None }
+    }
+}
+
+impl StalenessController for DynSspStaleness {
+    fn name(&self) -> &'static str {
+        "dyn_ssp"
+    }
+
+    fn current(&self) -> Decision {
+        let mut d = self.inner.current();
+        d.per_rank_k = self.per_rank.clone();
+        d
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        let d = self.inner.on_window(obs);
+        // Probe windows leave the bounds standing (same discount rule
+        // as the k-loop); otherwise re-derive them from the fresh
+        // per-rank compute split.
+        let t = &obs.per_rank_t_c;
+        if !obs.probe && t.len() == self.n_ranks && t.iter().all(|&v| v > 0.0) {
+            let mean = t.iter().sum::<f64>() / t.len() as f64;
+            let ks: Vec<usize> = t
+                .iter()
+                .map(|&tc| {
+                    ((d.k as f64 * mean / tc).round() as usize).clamp(self.k_min, self.k_max)
+                })
+                .collect();
+            self.per_rank = Some(std::sync::Arc::new(ks));
+        }
+        self.current()
+    }
+}
+
+/// Stochastic Gradient Staleness (2509.05679): **randomized** staleness
+/// as a design point — each window, each rank draws its local step
+/// count uniformly from `[k − s, k + s] ∩ [k_min, k_max]` around the
+/// wrapped policy's base k, with `s = max(1, k/2)`. The randomization
+/// decorrelates the ranks' positions inside the window (the gradient
+/// staleness distribution flattens instead of spiking at k), at zero
+/// coordination cost.
+///
+/// The draws come from the **keyed deterministic RNG** on a dedicated
+/// stream — a pure function of `(seed, slot, window)` — so every rank
+/// derives the identical per-rank vector without communication and the
+/// controller stays inside the no-RNG-state determinism contract (the
+/// generator is counter-based; no mutable entropy survives between
+/// windows).
+pub struct SgsStaleness {
+    inner: Box<dyn StalenessController>,
+    seed: u64,
+    n_ranks: usize,
+    k_min: usize,
+    k_max: usize,
+    per_rank: Option<std::sync::Arc<Vec<usize>>>,
+}
+
+/// Keyed-RNG stream of the SGS draws (disjoint from the hetero and
+/// codec streams).
+const SGS_STREAM: u64 = 0x5657_AA11;
+
+impl SgsStaleness {
+    pub fn new(
+        inner: Box<dyn StalenessController>,
+        seed: u64,
+        n_ranks: usize,
+        k_min: usize,
+        k_max: usize,
+    ) -> Self {
+        let k_min = k_min.max(1);
+        SgsStaleness { inner, seed, n_ranks, k_min, k_max: k_max.max(k_min), per_rank: None }
+    }
+
+    /// The pure draw: rank `slot`'s window length for window `window`
+    /// around base `k` — pinned by the determinism tests.
+    pub fn draw(seed: u64, slot: usize, window: u64, k: usize, k_min: usize, k_max: usize) -> usize {
+        let s = (k / 2).max(1);
+        let lo = k.saturating_sub(s).max(k_min.max(1));
+        let hi = (k + s).min(k_max.max(1));
+        if hi <= lo {
+            return lo;
+        }
+        let span = (hi - lo + 1) as u64;
+        let mut r = crate::util::Rng::keyed(seed ^ SGS_STREAM, slot as u64, window);
+        lo + r.below(span) as usize
+    }
+}
+
+impl StalenessController for SgsStaleness {
+    fn name(&self) -> &'static str {
+        "sgs"
+    }
+
+    fn current(&self) -> Decision {
+        let mut d = self.inner.current();
+        d.per_rank_k = self.per_rank.clone();
+        d
+    }
+
+    fn on_window(&mut self, obs: &WindowObs) -> Decision {
+        let d = self.inner.on_window(obs);
+        let ks: Vec<usize> = (0..self.n_ranks)
+            .map(|slot| Self::draw(self.seed, slot, obs.window + 1, d.k, self.k_min, self.k_max))
+            .collect();
+        self.per_rank = Some(std::sync::Arc::new(ks));
         self.current()
     }
 }
@@ -1006,6 +1232,7 @@ mod tests {
             t_ar_local: 0.0,
             t_ar_global: 0.0,
             ran: None,
+            probe: false,
         }
     }
 
@@ -1323,9 +1550,10 @@ mod tests {
         let mut d = c.current();
         let mut trace = Vec::new();
         for w in 0..windows {
-            let o = obs_ran(w, 1e-4, d.schedule.expect("schedule-aware"), env);
+            let mut o = obs_ran(w, 1e-4, d.schedule.expect("schedule-aware"), env);
+            o.probe = d.probe; // the round rode the previous decision
             d = c.on_window(&o);
-            trace.push(d);
+            trace.push(d.clone());
         }
         trace
     }
@@ -1554,13 +1782,185 @@ mod tests {
     }
 
     #[test]
-    fn compress_coupled_is_inert_for_non_topk_kinds() {
-        let mut env = sched_env(10_000, 8, 10e9);
-        env.compress = CompressConfig { kind: CompressorKind::Qsgd, ..CompressConfig::default() };
+    fn compress_coupled_is_inert_for_the_identity_kind() {
+        // Only the identity has no knob left: top-k walks its density,
+        // QSGD its bits ladder.
+        let env = sched_env(10_000, 8, 10e9); // kind = None by default
         let mut c = cc(env);
         for w in 0..5 {
             assert_eq!(c.on_window(&obs(w, 1e-3, 10.0)).compress_ratio, None);
         }
+    }
+
+    fn qsgd_env(bits: u32) -> ScheduleEnv {
+        let mut env = sched_env(10_000, 8, 10e9);
+        env.compress =
+            CompressConfig { kind: CompressorKind::Qsgd, bits, ..CompressConfig::default() };
+        env
+    }
+
+    #[test]
+    fn compress_coupled_walks_the_qsgd_bits_ladder_down_when_hot() {
+        let mut c = cc(qsgd_env(16));
+        assert_eq!(c.current().compress_ratio, Some(0.5));
+        // t_AR far above the window budget: 16 → 8 → 4, one rung per
+        // window (adjust_every = 1), then pinned at the bottom rung.
+        let mut ratios = Vec::new();
+        for w in 0..5 {
+            ratios.push(c.on_window(&obs(w, 1e-3, 10.0)).compress_ratio.unwrap());
+        }
+        assert_eq!(&ratios[..3], &[0.25, 0.125, 0.125]);
+        assert_eq!(*ratios.last().unwrap(), 0.125, "must pin at 4 bits: {ratios:?}");
+    }
+
+    #[test]
+    fn compress_coupled_relaxes_the_qsgd_bits_ladder_when_cold() {
+        let mut c = cc(qsgd_env(4));
+        let mut last = c.current();
+        for w in 0..5 {
+            last = c.on_window(&obs(w, 1e-3, 1e-9));
+        }
+        assert_eq!(last.compress_ratio, Some(0.5), "must relax back to 16 bits");
+    }
+
+    #[test]
+    fn qsgd_ladder_snaps_odd_config_bits_to_a_rung() {
+        assert_eq!(snap_qsgd_bits(2), 4);
+        assert_eq!(snap_qsgd_bits(5), 4);
+        assert_eq!(snap_qsgd_bits(7), 8);
+        assert_eq!(snap_qsgd_bits(11), 8);
+        assert_eq!(snap_qsgd_bits(13), 16);
+        assert_eq!(snap_qsgd_bits(16), 16);
+        let mut c = cc(qsgd_env(6));
+        assert_eq!(c.current().compress_ratio, Some(0.125), "6 bits snaps to 4");
+        let _ = c.on_window(&obs(0, 1e-3, 1e-3));
+    }
+
+    // --- probe-tagged observations (the DssPid discount) ---
+
+    #[test]
+    fn dss_pid_discounts_probe_windows() {
+        let mk = || DssPid::new(1, 1, 8, 0.5, 0.1, 1);
+        let (mut probed, mut clean) = (mk(), mk());
+        // Interleave: the probed controller sees every odd window as a
+        // probe excursion with a wildly different t_AR; the clean one
+        // sees only the even windows. Their k trajectories must agree —
+        // the probe windows contribute nothing to the PI state.
+        for w in 0..20 {
+            let o = obs(w, 1e-3, 3e-3);
+            let kp = probed.on_window(&o).k;
+            let kc = clean.on_window(&o).k;
+            assert_eq!(kp, kc, "diverged at window {w}");
+            let probe_obs = WindowObs { probe: true, ..obs(w, 1e-3, 50.0) };
+            assert_eq!(
+                probed.on_window(&probe_obs).k,
+                kp,
+                "probe excursion moved k at window {w}"
+            );
+        }
+        assert_eq!(probed.current().k, 3, "must still settle on the true target");
+    }
+
+    // --- DynSsp: per-worker dynamic staleness bounds ---
+
+    fn obs_probe(window: u64, t_c: f64, t_ar: f64, per_rank: Vec<f64>) -> WindowObs {
+        WindowObs { probe: true, ..obs_ranks(window, t_c, t_ar, per_rank) }
+    }
+
+    fn dyn_ssp(n_ranks: usize) -> DynSspStaleness {
+        DynSspStaleness::new(Box::new(DssPid::new(2, 1, 8, 0.5, 0.1, 1)), n_ranks, 1, 8)
+    }
+
+    #[test]
+    fn dyn_ssp_bounds_scale_inversely_with_per_rank_compute() {
+        let mut c = dyn_ssp(4);
+        // ranks 0,1 nominal; rank 2 twice as slow; rank 3 three times.
+        let per = vec![1e-3, 1e-3, 2e-3, 3e-3];
+        let d = c.on_window(&obs_ranks(0, 1.75e-3, 2e-3, per));
+        let ks = d.per_rank_k.as_ref().expect("per-rank bounds");
+        assert_eq!(ks.len(), 4);
+        assert!(ks[0] > ks[2] && ks[2] >= ks[3], "bounds not inverse to t_C: {ks:?}");
+        assert!(ks.iter().all(|&k| (1..=8).contains(&k)), "escaped bounds: {ks:?}");
+        // k_for prefers the per-rank bound over the fleet k
+        for r in 0..4 {
+            assert_eq!(d.k_for(r, 2), ks[r]);
+        }
+    }
+
+    #[test]
+    fn dyn_ssp_holds_bounds_through_probe_windows() {
+        let mut c = dyn_ssp(4);
+        let per = vec![1e-3, 1e-3, 2e-3, 3e-3];
+        let d = c.on_window(&obs_ranks(0, 1.75e-3, 2e-3, per));
+        let ks = d.per_rank_k.clone().expect("bounds set");
+        // a probe window with a skewed split must not move the bounds
+        let d2 = c.on_window(&obs_probe(1, 1.75e-3, 2e-3, vec![9e-3, 1e-3, 1e-3, 1e-3]));
+        assert_eq!(d2.per_rank_k, Some(ks));
+    }
+
+    #[test]
+    fn dyn_ssp_without_per_rank_evidence_degenerates_to_the_inner_policy() {
+        let mut c = dyn_ssp(4);
+        for w in 0..10 {
+            let d = c.on_window(&obs(w, 1e-3, 3e-3)); // no per-rank split
+            assert_eq!(d.per_rank_k, None);
+            assert_eq!(d.k_for(2, 2), d.k, "k_for must fall back to the fleet k");
+        }
+    }
+
+    #[test]
+    fn dyn_ssp_is_deterministic() {
+        let (mut a, mut b) = (dyn_ssp(8), dyn_ssp(8));
+        for w in 0..60 {
+            let mut per = vec![1e-3; 8];
+            per[(w % 8) as usize] *= 1.0 + (w % 4) as f64;
+            let o = obs_ranks(w, 1e-3, ((w % 5) as f64 + 1.0) * 1e-3, per);
+            assert_eq!(a.on_window(&o), b.on_window(&o), "diverged at window {w}");
+        }
+    }
+
+    // --- SGS: stochastic staleness draws ---
+
+    fn sgs(n_ranks: usize) -> SgsStaleness {
+        SgsStaleness::new(Box::new(Fixed::new(4)), 42, n_ranks, 1, 8)
+    }
+
+    #[test]
+    fn sgs_draws_are_bounded_and_pure_in_seed_slot_window() {
+        for (slot, window, k) in [(0usize, 1u64, 4usize), (3, 17, 2), (7, 99, 8)] {
+            let a = SgsStaleness::draw(9, slot, window, k, 1, 8);
+            let b = SgsStaleness::draw(9, slot, window, k, 1, 8);
+            assert_eq!(a, b);
+            let s = (k / 2).max(1);
+            assert!(a >= k.saturating_sub(s).max(1) && a <= (k + s).min(8));
+        }
+        // different slots / windows decorrelate
+        let draws: Vec<usize> =
+            (0..64).map(|s| SgsStaleness::draw(9, s, 5, 4, 1, 8)).collect();
+        assert!(draws.iter().any(|&d| d != draws[0]), "all slots drew the same k");
+    }
+
+    #[test]
+    fn sgs_emits_identical_vectors_on_every_instance() {
+        let (mut a, mut b) = (sgs(8), sgs(8));
+        for w in 0..40 {
+            let o = obs(w, 1e-3, 2e-3);
+            let da = a.on_window(&o);
+            assert_eq!(da, b.on_window(&o), "diverged at window {w}");
+            let ks = da.per_rank_k.expect("sgs always draws");
+            assert!(ks.iter().all(|&k| (1..=8).contains(&k)));
+        }
+    }
+
+    #[test]
+    fn sgs_randomization_spans_more_than_one_k() {
+        let mut c = sgs(8);
+        let mut seen = std::collections::BTreeSet::new();
+        for w in 0..30 {
+            let d = c.on_window(&obs(w, 1e-3, 2e-3));
+            seen.extend(d.per_rank_k.unwrap().iter().copied());
+        }
+        assert!(seen.len() > 1, "staleness never randomized: {seen:?}");
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Heterogeneous-fabric subsystem: per-rank compute tiers, bandwidth-
+//! asymmetric links, spot/preemptible cohorts with correlated
+//! revocations, and diurnal load curves — the fleet realities the
+//! paper's homogeneous-cluster analysis abstracts away, and exactly the
+//! regime where per-worker staleness bounds (Dynamic SSP, 1908.11848;
+//! stochastic staleness, 2509.05679) earn their keep.
+//!
+//! Everything here is **deterministic from (seed, rank, round)**: every
+//! draw goes through [`crate::util::Rng::keyed`] on a dedicated stream
+//! constant, so any sample can be regenerated in O(1) without its
+//! predecessors, the draws are independent of evaluation order, and —
+//! critically — they survive membership epoch transitions unchanged
+//! (rank 3's tier is rank 3's tier whether the world holds 4 ranks or
+//! 40). The pure per-rank functions ([`tier_multiplier`], [`is_spot`],
+//! [`revocation_time`], [`diurnal_factor`], [`link_scale`]) are the
+//! pinned contract; [`HeteroProfile::resolve`] just evaluates them over
+//! a capacity.
+//!
+//! The subsystem *layers onto* the existing models rather than forking
+//! them:
+//!
+//! * tier multipliers merge into [`crate::simtime::ComputeModel`]'s
+//!   per-rank `straggler_factor` (the straggler machinery generalizes:
+//!   a scripted straggler is just a one-rank tier),
+//! * link asymmetry scales the α-β fabrics — the collective is gated by
+//!   its slowest link, so the flat [`crate::comm::NetModel`] and both
+//!   dragonfly β's take the bottleneck (minimum) of their per-link
+//!   draws,
+//! * spot revocations become derived [`crate::control::FaultPlan`]
+//!   depart events, so membership epochs, resync, and re-sharding all
+//!   run unchanged,
+//! * the diurnal curve multiplies t_C in virtual time inside
+//!   [`crate::algo`]'s train step, per-rank phase-shifted.
+//!
+//! Rank 0 is exempt from the spot cohort (the "on-demand anchor"): a
+//! run where every rank can revoke has no survivor to finish it.
+
+use crate::util::{Json, Rng};
+use std::collections::BTreeMap;
+
+/// Keyed-RNG stream constants — one per draw family, disjoint from the
+/// worker (`0xC10C4`), dataset (`0xDA7A`) and QSGD (`0xC0DEC`) streams.
+const TIER_STREAM: u64 = 0x7E12_7135;
+const SPOT_STREAM: u64 = 0x59_07C0;
+const DIURNAL_STREAM: u64 = 0xD1_FA5E;
+const LINK_STREAM: u64 = 0x11CC_BE7A;
+/// The correlated-revocation cohort event shares one draw index,
+/// outside the rank range.
+const COHORT_INDEX: u64 = u64::MAX;
+
+/// The `[hetero]` config table: a generative description of the fleet.
+/// Disabled by default — every existing run is bit-identical with the
+/// subsystem compiled in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeteroConfig {
+    /// Master switch; `false` leaves every model untouched.
+    pub enabled: bool,
+    /// Compute-tier menu: each rank draws one multiplier on t_C
+    /// (e.g. `[1.0, 1.6, 2.5]` for three GPU generations). Empty or
+    /// `[1.0]` = homogeneous compute.
+    pub tiers: Vec<f64>,
+    /// Optional per-tier draw weights (same length as `tiers`); empty =
+    /// uniform.
+    pub tier_weights: Vec<f64>,
+    /// Fraction of ranks (excluding rank 0) in the spot/preemptible
+    /// cohort.
+    pub spot_fraction: f64,
+    /// Mean virtual time-to-revocation of a spot rank (s). 0 disables
+    /// revocations even for spot ranks.
+    pub spot_mtbf_s: f64,
+    /// Probability that a spot rank revokes *with the cohort* (one
+    /// shared revocation instant) instead of independently — the
+    /// correlated capacity-reclaim pattern.
+    pub spot_correlation: f64,
+    /// Diurnal load amplitude: t_C swings by `±amplitude` around 1 over
+    /// `diurnal_period_s`, per-rank phase-shifted. 0 disables.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period in virtual seconds.
+    pub diurnal_period_s: f64,
+    /// Per-link bandwidth spread: each link's β is scaled by a draw in
+    /// `[1/(1+spread), 1]`; the fabric models take the bottleneck link.
+    /// 0 disables.
+    pub link_spread: f64,
+    /// Set by
+    /// [`crate::config::ExperimentConfig::with_hetero_applied`] once
+    /// the profile has been merged into the base models; guards against
+    /// double-application.
+    pub applied: bool,
+}
+
+impl Default for HeteroConfig {
+    fn default() -> Self {
+        HeteroConfig {
+            enabled: false,
+            tiers: vec![1.0],
+            tier_weights: Vec::new(),
+            spot_fraction: 0.0,
+            spot_mtbf_s: 0.0,
+            spot_correlation: 0.0,
+            diurnal_amplitude: 0.0,
+            diurnal_period_s: 86_400.0,
+            link_spread: 0.0,
+            applied: false,
+        }
+    }
+}
+
+impl HeteroConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.tiers.iter().any(|&t| t <= 0.0 || !t.is_finite()) {
+            anyhow::bail!("hetero.tiers must be positive finite multipliers: {:?}", self.tiers);
+        }
+        if !self.tier_weights.is_empty() {
+            if self.tier_weights.len() != self.tiers.len() {
+                anyhow::bail!(
+                    "hetero.tier_weights length {} != hetero.tiers length {}",
+                    self.tier_weights.len(),
+                    self.tiers.len()
+                );
+            }
+            if self.tier_weights.iter().any(|&w| w < 0.0 || !w.is_finite())
+                || self.tier_weights.iter().sum::<f64>() <= 0.0
+            {
+                anyhow::bail!("hetero.tier_weights must be non-negative with a positive sum");
+            }
+        }
+        if !(0.0..=1.0).contains(&self.spot_fraction) {
+            anyhow::bail!("hetero.spot_fraction must be in [0, 1]: {}", self.spot_fraction);
+        }
+        if !(0.0..=1.0).contains(&self.spot_correlation) {
+            anyhow::bail!("hetero.spot_correlation must be in [0, 1]: {}", self.spot_correlation);
+        }
+        if self.spot_mtbf_s < 0.0 {
+            anyhow::bail!("hetero.spot_mtbf_s must be >= 0: {}", self.spot_mtbf_s);
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            anyhow::bail!("hetero.diurnal_amplitude must be in [0, 1): {}", self.diurnal_amplitude);
+        }
+        if self.diurnal_period_s <= 0.0 {
+            anyhow::bail!("hetero.diurnal_period_s must be > 0: {}", self.diurnal_period_s);
+        }
+        if self.link_spread < 0.0 {
+            anyhow::bail!("hetero.link_spread must be >= 0: {}", self.link_spread);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pure per-(seed, rank, round) draw functions — the determinism
+// contract the tests pin. Each is O(1) and independent of every other
+// draw.
+// ---------------------------------------------------------------------
+
+/// The compute-tier multiplier rank `rank` draws from the tier menu.
+pub fn tier_multiplier(cfg: &HeteroConfig, seed: u64, rank: usize) -> f64 {
+    if cfg.tiers.is_empty() {
+        return 1.0;
+    }
+    let u = Rng::keyed(seed, TIER_STREAM, rank as u64).uniform();
+    if cfg.tier_weights.is_empty() {
+        return cfg.tiers[(u * cfg.tiers.len() as f64) as usize % cfg.tiers.len()];
+    }
+    let total: f64 = cfg.tier_weights.iter().sum();
+    let mut acc = 0.0;
+    for (t, w) in cfg.tiers.iter().zip(&cfg.tier_weights) {
+        acc += w / total;
+        if u < acc {
+            return *t;
+        }
+    }
+    *cfg.tiers.last().unwrap()
+}
+
+/// Whether `rank` is in the spot/preemptible cohort. Rank 0 never is.
+pub fn is_spot(cfg: &HeteroConfig, seed: u64, rank: usize) -> bool {
+    if rank == 0 || cfg.spot_fraction <= 0.0 {
+        return false;
+    }
+    Rng::keyed(seed, SPOT_STREAM, rank as u64).uniform() < cfg.spot_fraction
+}
+
+/// The virtual-time instant at which spot rank `rank` is revoked, if it
+/// is in the cohort and revocations are enabled. Correlated ranks share
+/// the single cohort draw; independent ranks draw their own
+/// exponential.
+pub fn revocation_time(cfg: &HeteroConfig, seed: u64, rank: usize) -> Option<f64> {
+    if !is_spot(cfg, seed, rank) || cfg.spot_mtbf_s <= 0.0 {
+        return None;
+    }
+    let mut r = Rng::keyed(seed, SPOT_STREAM, rank as u64);
+    let _membership = r.uniform(); // the is_spot draw, consumed in order
+    let correlated = r.uniform() < cfg.spot_correlation;
+    if correlated {
+        Some(Rng::keyed(seed, SPOT_STREAM, COHORT_INDEX).exponential(cfg.spot_mtbf_s))
+    } else {
+        Some(r.exponential(cfg.spot_mtbf_s))
+    }
+}
+
+/// The diurnal t_C multiplier for `rank` at virtual time `t`:
+/// `1 + amplitude · sin(2π(t/period + phase(rank)))`, with a per-rank
+/// phase drawn once — time zones, staggered tenants. Always positive
+/// (amplitude < 1).
+pub fn diurnal_factor(cfg: &HeteroConfig, seed: u64, rank: usize, t: f64) -> f64 {
+    if cfg.diurnal_amplitude <= 0.0 {
+        return 1.0;
+    }
+    let phase = Rng::keyed(seed, DIURNAL_STREAM, rank as u64).uniform();
+    let x = 2.0 * std::f64::consts::PI * (t / cfg.diurnal_period_s + phase);
+    1.0 + cfg.diurnal_amplitude * x.sin()
+}
+
+/// The bandwidth scale of link `link` (an opaque per-fabric index): a
+/// draw in `[1/(1+spread), 1]` — 1 is the nominal link, the floor the
+/// most degraded.
+pub fn link_scale(cfg: &HeteroConfig, seed: u64, link: usize) -> f64 {
+    if cfg.link_spread <= 0.0 {
+        return 1.0;
+    }
+    let u = Rng::keyed(seed, LINK_STREAM, link as u64).uniform();
+    1.0 / (1.0 + cfg.link_spread * u)
+}
+
+// ---------------------------------------------------------------------
+// The resolved profile.
+// ---------------------------------------------------------------------
+
+/// A diurnal curve bound to one rank (phase resolved), evaluated on the
+/// worker's virtual clock inside the train step.
+#[derive(Debug, Clone)]
+pub struct DiurnalCurve {
+    amplitude: f64,
+    period_s: f64,
+    phase: f64,
+}
+
+impl DiurnalCurve {
+    /// The rank's curve, or `None` when the diurnal model is off.
+    pub fn for_rank(cfg: &HeteroConfig, seed: u64, rank: usize) -> Option<Self> {
+        if !cfg.enabled || cfg.diurnal_amplitude <= 0.0 {
+            return None;
+        }
+        Some(DiurnalCurve {
+            amplitude: cfg.diurnal_amplitude,
+            period_s: cfg.diurnal_period_s,
+            phase: Rng::keyed(seed, DIURNAL_STREAM, rank as u64).uniform(),
+        })
+    }
+
+    /// The t_C multiplier at virtual time `t` (identical to
+    /// [`diurnal_factor`] for the bound rank).
+    pub fn factor(&self, t: f64) -> f64 {
+        let x = 2.0 * std::f64::consts::PI * (t / self.period_s + self.phase);
+        1.0 + self.amplitude * x.sin()
+    }
+}
+
+/// The fleet profile a run actually executes: every per-rank draw
+/// evaluated over the run's capacity (initial ranks + scripted
+/// joiners), plus the bottleneck link scales. Exported verbatim as the
+/// run JSON's `"hetero"` block so a trace is self-describing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeteroProfile {
+    /// Per-rank tier multiplier on t_C, capacity-sized.
+    pub tier: Vec<f64>,
+    /// Per-rank spot-cohort membership.
+    pub spot: Vec<bool>,
+    /// Derived `(rank, at_s)` revocation events (become
+    /// `FaultPlan::depart`s), rank-ordered.
+    pub revocations: Vec<(usize, f64)>,
+    /// Bottleneck scale on the flat fabric's β (and the dragonfly local
+    /// links).
+    pub link_scale_local: f64,
+    /// Bottleneck scale on the dragonfly global links.
+    pub link_scale_global: f64,
+    /// The diurnal knobs echoed for the export.
+    pub diurnal_amplitude: f64,
+    pub diurnal_period_s: f64,
+}
+
+impl HeteroProfile {
+    /// Evaluate the draw functions over `capacity` ranks.
+    /// `local_links` / `global_links` size the bottleneck minimum for
+    /// the two fabric levels (pass the rank count and the dragonfly
+    /// group count).
+    pub fn resolve(
+        cfg: &HeteroConfig,
+        seed: u64,
+        capacity: usize,
+        local_links: usize,
+        global_links: usize,
+    ) -> Self {
+        let tier = (0..capacity).map(|r| tier_multiplier(cfg, seed, r)).collect();
+        let spot: Vec<bool> = (0..capacity).map(|r| is_spot(cfg, seed, r)).collect();
+        let revocations = (0..capacity)
+            .filter_map(|r| revocation_time(cfg, seed, r).map(|t| (r, t)))
+            .collect();
+        // Local links are indexed 0.., global links continue after them
+        // so the two families never share a draw.
+        let bottleneck = |lo: usize, hi: usize| {
+            (lo..hi).map(|l| link_scale(cfg, seed, l)).fold(1.0f64, f64::min)
+        };
+        HeteroProfile {
+            tier,
+            spot,
+            revocations,
+            link_scale_local: bottleneck(0, local_links),
+            link_scale_global: bottleneck(local_links, local_links + global_links),
+            diurnal_amplitude: cfg.diurnal_amplitude,
+            diurnal_period_s: cfg.diurnal_period_s,
+        }
+    }
+
+    /// The run-JSON `"hetero"` block.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("enabled".into(), Json::Bool(true));
+        m.insert("tier".into(), Json::Arr(self.tier.iter().map(|&t| Json::Num(t)).collect()));
+        m.insert("spot".into(), Json::Arr(self.spot.iter().map(|&s| Json::Bool(s)).collect()));
+        m.insert(
+            "revocations".into(),
+            Json::Arr(
+                self.revocations
+                    .iter()
+                    .map(|&(r, t)| {
+                        let mut e = BTreeMap::new();
+                        e.insert("rank".into(), Json::Num(r as f64));
+                        e.insert("at_s".into(), Json::Num(t));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("link_scale_local".into(), Json::Num(self.link_scale_local));
+        m.insert("link_scale_global".into(), Json::Num(self.link_scale_global));
+        m.insert("diurnal_amplitude".into(), Json::Num(self.diurnal_amplitude));
+        m.insert("diurnal_period_s".into(), Json::Num(self.diurnal_period_s));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HeteroConfig {
+        HeteroConfig {
+            enabled: true,
+            tiers: vec![1.0, 1.6, 2.5],
+            spot_fraction: 0.5,
+            spot_mtbf_s: 10.0,
+            spot_correlation: 0.5,
+            diurnal_amplitude: 0.3,
+            diurnal_period_s: 100.0,
+            link_spread: 0.5,
+            ..HeteroConfig::default()
+        }
+    }
+
+    #[test]
+    fn draws_are_bit_identical_and_order_independent() {
+        let c = cfg();
+        // Evaluate rank 7 first, then after a sweep of other ranks: the
+        // keyed construction must make the order irrelevant.
+        let t7 = tier_multiplier(&c, 42, 7);
+        let s7 = is_spot(&c, 42, 7);
+        let r7 = revocation_time(&c, 42, 7);
+        let d7 = diurnal_factor(&c, 42, 7, 3.25);
+        let l7 = link_scale(&c, 42, 7);
+        for r in 0..32 {
+            let _ = (tier_multiplier(&c, 42, r), revocation_time(&c, 42, r));
+        }
+        assert_eq!(tier_multiplier(&c, 42, 7), t7);
+        assert_eq!(is_spot(&c, 42, 7), s7);
+        assert_eq!(revocation_time(&c, 42, 7), r7);
+        assert_eq!(diurnal_factor(&c, 42, 7, 3.25), d7);
+        assert_eq!(link_scale(&c, 42, 7), l7);
+    }
+
+    #[test]
+    fn tiers_come_from_the_menu_and_weights_bias_the_draw() {
+        let c = cfg();
+        for r in 0..100 {
+            let t = tier_multiplier(&c, 1, r);
+            assert!(c.tiers.contains(&t), "tier {t} not in the menu");
+        }
+        // All weight on the last tier: every rank draws it.
+        let biased = HeteroConfig {
+            tier_weights: vec![0.0, 0.0, 1.0],
+            ..c
+        };
+        for r in 0..50 {
+            assert_eq!(tier_multiplier(&biased, 1, r), 2.5);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_never_spot() {
+        let c = HeteroConfig { spot_fraction: 1.0, ..cfg() };
+        for seed in 0..50 {
+            assert!(!is_spot(&c, seed, 0));
+            assert!(revocation_time(&c, seed, 0).is_none());
+            // with fraction 1 every other rank is spot
+            assert!(is_spot(&c, seed, 1));
+        }
+    }
+
+    #[test]
+    fn correlated_revocations_share_the_cohort_instant() {
+        let c = HeteroConfig { spot_fraction: 1.0, spot_correlation: 1.0, ..cfg() };
+        let times: Vec<f64> =
+            (1..8).filter_map(|r| revocation_time(&c, 5, r)).collect();
+        assert_eq!(times.len(), 7);
+        assert!(times.windows(2).all(|w| w[0] == w[1]), "cohort must revoke together");
+        // fully independent: the draws must differ
+        let ind = HeteroConfig { spot_correlation: 0.0, ..c };
+        let it: Vec<f64> = (1..8).filter_map(|r| revocation_time(&ind, 5, r)).collect();
+        assert!(it.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn diurnal_factor_is_positive_and_periodic() {
+        let c = cfg();
+        for r in 0..4 {
+            for i in 0..200 {
+                let t = i as f64 * 1.7;
+                let f = diurnal_factor(&c, 3, r, t);
+                assert!(f > 0.0 && (f - 1.0).abs() <= c.diurnal_amplitude + 1e-12);
+                let g = diurnal_factor(&c, 3, r, t + c.diurnal_period_s);
+                assert!((f - g).abs() < 1e-9, "not periodic: {f} vs {g}");
+            }
+        }
+        // the curve matches the bound form
+        let curve = DiurnalCurve::for_rank(&c, 3, 2).unwrap();
+        assert_eq!(curve.factor(12.5), diurnal_factor(&c, 3, 2, 12.5));
+    }
+
+    #[test]
+    fn link_scale_bounded_by_spread() {
+        let c = cfg();
+        for l in 0..100 {
+            let s = link_scale(&c, 9, l);
+            assert!((1.0 / 1.5..=1.0).contains(&s), "scale {s} out of range");
+        }
+        let off = HeteroConfig { link_spread: 0.0, ..c };
+        assert_eq!(link_scale(&off, 9, 3), 1.0);
+    }
+
+    #[test]
+    fn profile_draws_survive_capacity_changes() {
+        // The membership-epoch property at the draw level: growing the
+        // world must not move any existing rank's draws.
+        let c = cfg();
+        let small = HeteroProfile::resolve(&c, 11, 4, 4, 2);
+        let large = HeteroProfile::resolve(&c, 11, 8, 4, 2);
+        assert_eq!(&large.tier[..4], &small.tier[..]);
+        assert_eq!(&large.spot[..4], &small.spot[..]);
+        for (r, t) in &small.revocations {
+            assert!(large.revocations.contains(&(*r, *t)));
+        }
+        assert_eq!(small.link_scale_local, large.link_scale_local);
+        assert_eq!(small.link_scale_global, large.link_scale_global);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ok = cfg();
+        assert!(ok.validate().is_ok());
+        assert!(HeteroConfig { tiers: vec![0.0], ..cfg() }.validate().is_err());
+        assert!(HeteroConfig { tier_weights: vec![1.0], ..cfg() }.validate().is_err());
+        assert!(HeteroConfig { spot_fraction: 1.5, ..cfg() }.validate().is_err());
+        assert!(HeteroConfig { diurnal_amplitude: 1.0, ..cfg() }.validate().is_err());
+        assert!(HeteroConfig { diurnal_period_s: 0.0, ..cfg() }.validate().is_err());
+        assert!(HeteroConfig { link_spread: -0.1, ..cfg() }.validate().is_err());
+    }
+
+    #[test]
+    fn profile_json_block_has_the_documented_keys() {
+        let p = HeteroProfile::resolve(&cfg(), 7, 4, 4, 2);
+        let j = p.to_json();
+        for key in
+            ["enabled", "tier", "spot", "revocations", "link_scale_local", "diurnal_amplitude"]
+        {
+            assert!(j.get(key).is_some(), "hetero JSON lost {key}");
+        }
+    }
+}

@@ -46,6 +46,7 @@ pub mod config;
 pub mod control;
 pub mod data;
 pub mod dc;
+pub mod hetero;
 pub mod metrics;
 pub mod model;
 pub mod optim;
@@ -65,6 +66,7 @@ pub mod prelude {
     pub use crate::config::ExperimentConfig;
     pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;
+    pub use crate::hetero::{HeteroConfig, HeteroProfile};
     pub use crate::metrics::Recorder;
     pub use crate::optim::{LrSchedule, MomentumSgd, Optimizer};
     pub use crate::simtime::ComputeModel;

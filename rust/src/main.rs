@@ -39,15 +39,20 @@ USAGE:
                [--join-count N --join-at T [--join-first-rank R]]
                [--join-warmup W]
                [--compress C] [--topk-ratio R] [--qsgd-bits B]
+               [--hetero] [--hetero-tiers a,b,..] [--hetero-tier-weights w,..]
+               [--hetero-spot-fraction F] [--hetero-spot-mtbf S]
+               [--hetero-spot-correlation C] [--hetero-diurnal-amplitude A]
+               [--hetero-diurnal-period S] [--hetero-link-spread X]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
 
-Algorithms:       ssgd | s3gd | dcs3gd | asgd | dcasgd
+Algorithms:       ssgd | s3gd | dcs3gd | dyn_ssp | sgs | asgd | dcasgd
 Variants:         linear (pure-rust) or an artifacts/ dir like tiny_cnn_b32
 Schedules:        ring | tree | flat | hierarchical (Layered-SGD dragonfly)
 Control policies: fixed | dss_pid | lambda_coupled | schedule_coupled
                   | compress_coupled (co-tunes k, schedule and ratio)
+                  | dyn_ssp (per-worker dynamic staleness bounds)
 Contention:       --global-taper L = global links per dragonfly group
                   (leader phases and PS crossings contend past L flows)
 Probing:          --probe interval runs the inactive schedule candidate
@@ -60,6 +65,13 @@ Fault kinds:      kill | slow | delay (virtual-time chaos injection);
                   a kill with --fault-respawn false departs permanently
                   (the membership epoch shrinks); --join-* grows it, and
                   --join-warmup ramps the joiners' LR over W windows
+Heterogeneity:    --hetero turns on the heterogeneous fabric: per-rank
+                  compute tiers (--hetero-tiers, drawn by weight), spot
+                  cohorts that revoke mid-run (--hetero-spot-*; rank 0 is
+                  the on-demand anchor), diurnal load curves in virtual
+                  time (--hetero-diurnal-*) and per-link bandwidth
+                  spread (--hetero-link-spread); all draws are pure in
+                  (seed, rank) — see docs/heterogeneity.md
 ";
 
 fn main() {
@@ -222,6 +234,32 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.compress.ratio = args.get_f64("topk-ratio", cfg.compress.ratio as f64)? as f32;
     cfg.compress.bits = args.get_usize("qsgd-bits", cfg.compress.bits as usize)? as u32;
+    // heterogeneous fabric: compute tiers, spot cohorts, diurnal load,
+    // per-link bandwidth spread
+    if args.flag("hetero") {
+        cfg.hetero.enabled = true;
+    }
+    let parse_csv_f64 = |raw: &str, what: &str| -> Result<Vec<f64>> {
+        raw.split(',')
+            .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad {what} {s:?}")))
+            .collect()
+    };
+    if let Some(t) = args.get("hetero-tiers") {
+        cfg.hetero.tiers = parse_csv_f64(t, "tier multiplier")?;
+    }
+    if let Some(w) = args.get("hetero-tier-weights") {
+        cfg.hetero.tier_weights = parse_csv_f64(w, "tier weight")?;
+    }
+    cfg.hetero.spot_fraction =
+        args.get_f64("hetero-spot-fraction", cfg.hetero.spot_fraction)?;
+    cfg.hetero.spot_mtbf_s = args.get_f64("hetero-spot-mtbf", cfg.hetero.spot_mtbf_s)?;
+    cfg.hetero.spot_correlation =
+        args.get_f64("hetero-spot-correlation", cfg.hetero.spot_correlation)?;
+    cfg.hetero.diurnal_amplitude =
+        args.get_f64("hetero-diurnal-amplitude", cfg.hetero.diurnal_amplitude)?;
+    cfg.hetero.diurnal_period_s =
+        args.get_f64("hetero-diurnal-period", cfg.hetero.diurnal_period_s)?;
+    cfg.hetero.link_spread = args.get_f64("hetero-link-spread", cfg.hetero.link_spread)?;
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }

@@ -69,12 +69,28 @@ fn config_reference_names_every_table() {
         "[[control.fault]]",
         "[[control.join]]",
         "[compress]",
+        "[hetero]",
     ] {
         assert!(text.contains(table), "docs/config.md lost the {table} section");
     }
-    // the probing knobs are the newest keys — pin them explicitly
-    for key in ["probe_interval", "probe_epsilon", "global_taper"] {
+    // the probing and heterogeneity knobs are the newest keys — pin
+    // them explicitly
+    for key in [
+        "probe_interval",
+        "probe_epsilon",
+        "global_taper",
+        "spot_fraction",
+        "spot_correlation",
+        "diurnal_amplitude",
+        "link_spread",
+        "tier_weights",
+    ] {
         assert!(text.contains(key), "docs/config.md lost the {key} key");
+    }
+    // the heterogeneity book page documents both new engines
+    let hetero = doc("heterogeneity.md");
+    for name in ["dyn_ssp", "sgs", "k_min", "on-demand anchor"] {
+        assert!(hetero.contains(name), "docs/heterogeneity.md lost {name:?}");
     }
 }
 
@@ -101,7 +117,7 @@ fn run_json_top_level_keys_match_docs() {
         );
     }
     // and the documented composite keys really exist in the export
-    for key in ["control", "comm", "compress", "epochs", "evals"] {
+    for key in ["control", "comm", "compress", "epochs", "evals", "hetero"] {
         assert!(map.contains_key(key), "documented key {key:?} missing from the export");
     }
     // the probe summary must be nested under "comm"

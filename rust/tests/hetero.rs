@@ -1,0 +1,386 @@
+//! Integration tests for the heterogeneous-fabric subsystem and the
+//! per-worker staleness engines: draw determinism under membership
+//! growth (hand-rolled property loops), the golden Dynamic-SSP
+//! trajectory under a correlated spot revocation, end-to-end `dyn_ssp`
+//! / `sgs` runs under the coupled control policies with membership
+//! churn, and the run-JSON `"hetero"` export.
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::{ControlPolicy, FaultPlan, SgsStaleness};
+use dcs3gd::hetero::{
+    diurnal_factor, link_scale, revocation_time, tier_multiplier, HeteroConfig, HeteroProfile,
+};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+// ---------------------------------------------------------------------
+// Determinism properties (hand-rolled loops — the draw functions are
+// the pinned contract).
+// ---------------------------------------------------------------------
+
+fn property_cfg() -> HeteroConfig {
+    HeteroConfig {
+        enabled: true,
+        tiers: vec![1.0, 1.6, 2.5],
+        spot_fraction: 0.6,
+        spot_mtbf_s: 2.0,
+        spot_correlation: 0.4,
+        diurnal_amplitude: 0.25,
+        diurnal_period_s: 7.5,
+        link_spread: 0.4,
+        ..HeteroConfig::default()
+    }
+}
+
+#[test]
+fn hetero_draws_are_pure_in_seed_and_rank() {
+    let cfg = property_cfg();
+    for seed in [0u64, 7, 42, 0xDEAD] {
+        for rank in 0..24usize {
+            assert_eq!(tier_multiplier(&cfg, seed, rank), tier_multiplier(&cfg, seed, rank));
+            assert_eq!(revocation_time(&cfg, seed, rank), revocation_time(&cfg, seed, rank));
+            assert_eq!(
+                diurnal_factor(&cfg, seed, rank, 3.5),
+                diurnal_factor(&cfg, seed, rank, 3.5)
+            );
+            assert_eq!(link_scale(&cfg, seed, rank), link_scale(&cfg, seed, rank));
+        }
+        // Distinct seeds must decorrelate at least one rank's tier.
+        let other = seed.wrapping_add(1);
+        assert!(
+            (0..24).any(|r| tier_multiplier(&cfg, seed, r) != tier_multiplier(&cfg, other, r)),
+            "seed {seed} and {other} drew identical tier vectors"
+        );
+    }
+}
+
+#[test]
+fn hetero_profile_survives_membership_growth() {
+    // The epoch-transition property at the draw level: resolving the
+    // profile over a larger capacity (joiners admitted) must not move
+    // any existing rank's draws, and the link bottlenecks must not
+    // depend on the rank count at all.
+    let cfg = property_cfg();
+    for seed in [3u64, 11, 99] {
+        for cap in [4usize, 8, 16] {
+            let small = HeteroProfile::resolve(&cfg, seed, cap, cap, 2);
+            let large = HeteroProfile::resolve(&cfg, seed, cap * 2, cap, 2);
+            assert_eq!(&large.tier[..cap], &small.tier[..], "tiers moved under growth");
+            assert_eq!(&large.spot[..cap], &small.spot[..], "spot cohort moved under growth");
+            for rt in &small.revocations {
+                assert!(large.revocations.contains(rt), "revocation {rt:?} lost under growth");
+            }
+            assert_eq!(small.link_scale_local, large.link_scale_local);
+            assert_eq!(small.link_scale_global, large.link_scale_global);
+        }
+    }
+}
+
+#[test]
+fn sgs_draws_are_deterministic_and_bounded() {
+    for seed in [1u64, 9, 77] {
+        for slot in 0..8usize {
+            for window in 0..50u64 {
+                let a = SgsStaleness::draw(seed, slot, window, 4, 2, 8);
+                assert_eq!(a, SgsStaleness::draw(seed, slot, window, 4, 2, 8));
+                // k ± k/2 clipped to the bounds: lo = 2, hi = 6
+                assert!((2..=6).contains(&a), "draw {a} escaped [2, 6]");
+            }
+        }
+        // The stream must actually vary along windows and across slots.
+        let row: Vec<usize> = (0..40).map(|w| SgsStaleness::draw(seed, 0, w, 4, 1, 8)).collect();
+        assert!(row.windows(2).any(|w| w[0] != w[1]), "window stream is constant");
+        let col: Vec<usize> = (0..40).map(|s| SgsStaleness::draw(seed, s, 0, 4, 1, 8)).collect();
+        assert!(col.windows(2).any(|w| w[0] != w[1]), "slot stream is constant");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden Dynamic-SSP trajectory under a correlated spot revocation.
+// ---------------------------------------------------------------------
+
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/hetero_dyn_ssp_spot.json");
+    Json::parse(&std::fs::read_to_string(&path).expect("golden fixture exists"))
+        .expect("golden fixture parses")
+}
+
+fn ranks_of(j: &Json) -> Vec<usize> {
+    j.as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect()
+}
+
+fn golden_cfg(fix: &Json) -> ExperimentConfig {
+    let h = fix.get("hetero").unwrap();
+    let tiers = h
+        .get("tiers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let hetero = HeteroConfig {
+        enabled: true,
+        tiers,
+        spot_fraction: h.get("spot_fraction").unwrap().as_f64().unwrap(),
+        spot_mtbf_s: h.get("spot_mtbf_s").unwrap().as_f64().unwrap(),
+        spot_correlation: h.get("spot_correlation").unwrap().as_f64().unwrap(),
+        ..HeteroConfig::default()
+    };
+    let nodes = fix.get("initial_world").unwrap().as_usize().unwrap();
+    let batch = fix.get("local_batch").unwrap().as_usize().unwrap();
+    let mut cfg = ExperimentConfig::builder("linear")
+        .name("hetero_dyn_ssp_golden")
+        .algo(Algo::parse(fix.get("algo").unwrap().as_str().unwrap()).unwrap())
+        .nodes(nodes)
+        .local_batch(batch)
+        .seed(fix.get("seed").unwrap().as_f64().unwrap() as u64)
+        .steps(1) // sized below, off the resolved cohort instant
+        .eta_single(0.05)
+        .base_batch(nodes * batch)
+        .warmup(0.2, 0.1)
+        .data(1024, 256, 0.5)
+        .staleness(fix.get("staleness").unwrap().as_usize().unwrap())
+        .k_bounds(
+            fix.get("k_min").unwrap().as_usize().unwrap(),
+            fix.get("k_max").unwrap().as_usize().unwrap(),
+        )
+        .compute(ComputeModel::uniform(fix.get("sec_per_sample").unwrap().as_f64().unwrap()))
+        .hetero(hetero)
+        .build();
+    // Size the step budget so the run outlasts the cohort instant: each
+    // scheduled step advances the shared clock by at least
+    // (k_min / k_max) · batch · sec_per_sample (the slowest admissible
+    // window at the fastest tier), so this budget lands the revocation
+    // comfortably mid-run whatever the exponential draw came out as.
+    let t_star = cfg.hetero_profile().expect("hetero enabled").revocations[0].1;
+    let per_step = fix.get("sec_per_sample").unwrap().as_f64().unwrap()
+        * batch as f64
+        * cfg.control.k_min as f64
+        / cfg.control.k_max as f64;
+    cfg.steps = (t_star / per_step).ceil() as u64 + 16;
+    cfg.validate().expect("golden config validates");
+    cfg
+}
+
+fn run_golden() -> (Json, RunReport) {
+    let fix = fixture();
+    let cfg = golden_cfg(&fix);
+    let report = run_experiment(&cfg).expect("golden run completes");
+    (fix, report)
+}
+
+#[test]
+fn golden_dyn_ssp_spot_revocation_trajectory() {
+    let (fix, report) = run_golden();
+    let expected = fix.get("expected").unwrap();
+    let want_revoked = ranks_of(expected.get("revoked_ranks").unwrap());
+
+    // The resolved profile matches the fixture: every non-anchor rank
+    // is spot, and the fully-correlated cohort shares one instant.
+    let profile = report.hetero.as_ref().expect("run carries the hetero profile");
+    let spot_ranks: Vec<usize> =
+        (0..profile.spot.len()).filter(|&r| profile.spot[r]).collect();
+    assert_eq!(spot_ranks, want_revoked, "spot cohort diverged from the fixture");
+    let revoked: Vec<usize> = profile.revocations.iter().map(|&(r, _)| r).collect();
+    assert_eq!(revoked, want_revoked, "revoked set diverged from the fixture");
+    let instants: Vec<f64> = profile.revocations.iter().map(|&(_, t)| t).collect();
+    assert!(
+        instants.windows(2).all(|w| w[0] == w[1]),
+        "correlated cohort must share one revocation instant: {instants:?}"
+    );
+    let menu = fix.get("hetero").unwrap().get("tiers").unwrap();
+    for t in &profile.tier {
+        assert!(
+            menu.as_arr().unwrap().iter().any(|m| m.as_f64().unwrap() == *t),
+            "tier {t} not on the fixture's menu"
+        );
+    }
+
+    // The realized epoch trajectory: a monotone shrink from the full
+    // world to the lone anchor. Tier-skewed clocks drift within a
+    // window, so the simultaneous deaths may resolve over adjacent
+    // boundaries — the fixture pins the structure, the determinism
+    // test below pins the exact trace.
+    let initial = fix.get("initial_world").unwrap().as_usize().unwrap();
+    let final_world = expected.get("final_world").unwrap().as_usize().unwrap();
+    let worlds = report.epochs.worlds();
+    assert_eq!(worlds.first(), Some(&initial), "run must start at the full world");
+    assert_eq!(worlds.last(), Some(&final_world), "run must end at the lone anchor");
+    assert!(worlds.windows(2).all(|w| w[1] < w[0]), "worlds must shrink monotonically: {worlds:?}");
+    let transitions = report.epochs.transitions();
+    let departed: Vec<usize> =
+        transitions.iter().flat_map(|t| t.departed.iter().copied()).collect();
+    let mut departed_sorted = departed.clone();
+    departed_sorted.sort_unstable();
+    assert_eq!(departed_sorted, want_revoked, "realized departures diverged from the cohort");
+    assert!(transitions.iter().all(|t| t.joined.is_empty()));
+    assert!(report.epochs.crc_mismatches().is_empty());
+
+    // The anchor finishes the run: training is alive end to end.
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.sim_time_s > instants[0], "the run must outlast the revocation");
+}
+
+#[test]
+fn golden_dyn_ssp_run_is_deterministic() {
+    let (_, a) = run_golden();
+    let (_, b) = run_golden();
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    assert_eq!(a.sim_time_s, b.sim_time_s);
+    assert_eq!(a.epochs.records(), b.epochs.records());
+    assert_eq!(a.hetero, b.hetero);
+}
+
+// ---------------------------------------------------------------------
+// End-to-end engine runs under the coupled policies with churn.
+// ---------------------------------------------------------------------
+
+fn engine_cfg(algo: Algo, policy: ControlPolicy) -> ExperimentConfig {
+    let hetero = HeteroConfig {
+        enabled: true,
+        tiers: vec![1.0, 2.0],
+        diurnal_amplitude: 0.2,
+        diurnal_period_s: 0.5,
+        link_spread: 0.3,
+        ..HeteroConfig::default()
+    };
+    let mut builder = ExperimentConfig::builder("linear")
+        .name("hetero_engine")
+        .algo(algo)
+        .nodes(6)
+        .local_batch(4)
+        .steps(30)
+        .seed(11)
+        .eta_single(0.05)
+        .base_batch(24)
+        .warmup(0.2, 0.1)
+        .data(1024, 256, 0.5)
+        .staleness(4)
+        .k_bounds(2, 4)
+        .control_policy(policy)
+        .compute(ComputeModel::uniform(1e-3))
+        .hetero(hetero)
+        .faults(FaultPlan::new().depart(5, 0.012))
+        .join(6, 0.028);
+    if policy == ControlPolicy::CompressCoupled {
+        builder = builder.compress_topk(0.25);
+    }
+    builder.build()
+}
+
+#[test]
+fn engines_run_under_coupled_policies_with_churn() {
+    for algo in [Algo::DynSsp, Algo::Sgs] {
+        for policy in [ControlPolicy::ScheduleCoupled, ControlPolicy::CompressCoupled] {
+            let cfg = engine_cfg(algo, policy);
+            cfg.validate().expect("engine config validates");
+            let a = run_experiment(&cfg).expect("engine run completes");
+            assert!(a.final_train_loss.is_finite(), "{algo:?}/{policy:?} diverged");
+
+            // The scripted churn really happened: rank 5 departed,
+            // rank 6 joined, and the run ends back at world 6.
+            let departed: Vec<usize> = a
+                .epochs
+                .transitions()
+                .iter()
+                .flat_map(|t| t.departed.iter().copied())
+                .collect();
+            let joined: Vec<usize> = a
+                .epochs
+                .transitions()
+                .iter()
+                .flat_map(|t| t.joined.iter().copied())
+                .collect();
+            assert_eq!(departed, vec![5], "{algo:?}/{policy:?}: departures diverged");
+            assert_eq!(joined, vec![6], "{algo:?}/{policy:?}: joins diverged");
+            assert_eq!(a.epochs.worlds().last(), Some(&6), "{algo:?}/{policy:?}");
+            assert!(a.epochs.crc_mismatches().is_empty(), "{algo:?}/{policy:?}");
+
+            // Window decisions stay inside the configured bounds.
+            for r in a.control.records() {
+                assert!(
+                    (2..=4).contains(&r.k),
+                    "{algo:?}/{policy:?}: k {} escaped [2, 4]",
+                    r.k
+                );
+            }
+
+            // Bit-identical replay: the whole stack — tiers, diurnal
+            // curves, link spread, churn, the engine's per-rank bounds
+            // — is a pure function of the config.
+            let b = run_experiment(&cfg).expect("replay completes");
+            assert_eq!(a.final_train_loss, b.final_train_loss, "{algo:?}/{policy:?}");
+            assert_eq!(a.sim_time_s, b.sim_time_s, "{algo:?}/{policy:?}");
+            assert_eq!(a.epochs.records(), b.epochs.records(), "{algo:?}/{policy:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run-JSON export.
+// ---------------------------------------------------------------------
+
+#[test]
+fn run_json_carries_the_hetero_block() {
+    let dir = std::env::temp_dir().join(format!("dcs3gd_hetero_{}", std::process::id()));
+    let hetero = HeteroConfig {
+        enabled: true,
+        tiers: vec![1.0, 1.5],
+        diurnal_amplitude: 0.2,
+        diurnal_period_s: 1.0,
+        ..HeteroConfig::default()
+    };
+    let cfg = ExperimentConfig::builder("linear")
+        .name("hetero_json")
+        .algo(Algo::DcS3gd)
+        .nodes(4)
+        .local_batch(4)
+        .steps(8)
+        .base_batch(16)
+        .data(512, 128, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .hetero(hetero)
+        .out_dir(dir.clone())
+        .build();
+    cfg.validate().unwrap();
+    run_experiment(&cfg).unwrap();
+    let parsed =
+        Json::parse(&std::fs::read_to_string(dir.join("hetero_json_run.json")).unwrap()).unwrap();
+    let block = parsed.get("hetero").expect("hetero key");
+    assert_eq!(block.get("enabled"), Some(&Json::Bool(true)));
+    assert_eq!(block.get("tier").and_then(Json::as_arr).unwrap().len(), 4);
+    assert_eq!(block.get("spot").and_then(Json::as_arr).unwrap().len(), 4);
+    assert!(
+        block.get("revocations").and_then(Json::as_arr).unwrap().is_empty(),
+        "no spot cohort configured, no revocations"
+    );
+    assert_eq!(block.get("link_scale_local").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(block.get("diurnal_amplitude").and_then(Json::as_f64), Some(0.2));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn disabled_hetero_exports_a_stub() {
+    let dir = std::env::temp_dir().join(format!("dcs3gd_hetero_off_{}", std::process::id()));
+    let cfg = ExperimentConfig::builder("linear")
+        .name("hetero_off")
+        .algo(Algo::DcS3gd)
+        .nodes(2)
+        .local_batch(4)
+        .steps(4)
+        .base_batch(8)
+        .data(256, 64, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .out_dir(dir.clone())
+        .build();
+    run_experiment(&cfg).unwrap();
+    let parsed =
+        Json::parse(&std::fs::read_to_string(dir.join("hetero_off_run.json")).unwrap()).unwrap();
+    let block = parsed.get("hetero").expect("the hetero key is always exported");
+    assert_eq!(block.get("enabled"), Some(&Json::Bool(false)));
+    assert!(block.get("tier").is_none(), "disabled runs export only the stub");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
