@@ -12,10 +12,13 @@
 
 use std::collections::BTreeMap;
 
+use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::bench_util::{black_box, write_bench_json, Bencher};
 use dcs3gd::comm::{
     hier::hier_network, ring::ring_network, AllReduceAlgo, Dragonfly, Group, NetModel,
 };
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::simtime::ComputeModel;
 use dcs3gd::util::{Json, Rng};
 
 /// ResNet-20 parameter count — the repo's canonical payload.
@@ -214,6 +217,45 @@ fn main() {
          taper=1 crossover N={con_cross} vs dedicated N={ded_cross}"
     );
 
+    // Engine rows: the crossover artifact now carries the windowed
+    // engines — fixed-k DC-S3GD next to the per-worker-staleness
+    // dyn_ssp and the randomized sgs — realized on the hierarchical
+    // schedule the tables above price (linear backend, N=8).
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let steps: u64 = if fast { 12 } else { 40 };
+    let fly = Dragonfly::for_nodes(8);
+    println!("\n# engine rows on the default dragonfly (N=8, linear backend, sim seconds)");
+    println!("{:>8} {:>12} {:>12} {:>10}", "engine", "iter_time", "sim_time", "val_err");
+    let mut engine_rows: Vec<Json> = Vec::new();
+    for algo in [Algo::Ssgd, Algo::DcS3gd, Algo::DynSsp, Algo::Sgs] {
+        let cfg = ExperimentConfig::builder("linear")
+            .name(format!("xover_{}", algo.name()).leak())
+            .algo(algo)
+            .nodes(8)
+            .local_batch(16)
+            .steps(steps)
+            .eta_single(0.05)
+            .base_batch(128)
+            .data(1024, 256, 0.5)
+            .compute(ComputeModel::uniform(1e-3))
+            .net(NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net })
+            .build();
+        let rep = run_experiment(&cfg).expect("engine row run failed");
+        println!(
+            "{:>8} {:>11.3e}s {:>11.3e}s {:>9.1}%",
+            algo.name(),
+            rep.mean_iter_time,
+            rep.sim_time_s,
+            100.0 * rep.final_val_err
+        );
+        let mut row = BTreeMap::new();
+        row.insert("engine".to_string(), Json::Str(algo.name().to_string()));
+        row.insert("mean_iter_time_s".into(), Json::Num(rep.mean_iter_time));
+        row.insert("sim_time_s".into(), Json::Num(rep.sim_time_s));
+        row.insert("final_val_err".into(), Json::Num(rep.final_val_err as f64));
+        engine_rows.push(Json::Obj(row));
+    }
+
     // Machine-readable export: seeds the BENCH_*.json perf trajectory
     // (wall measurements + the modelled crossover tables), merged into
     // target/bench_results.json next to the control bench's section.
@@ -226,6 +268,7 @@ fn main() {
     section.insert("measurements".into(), b.results_json());
     section.insert("ring_vs_hier".into(), Json::Arr(crossover_rows));
     section.insert("contention".into(), Json::Obj(contention));
+    section.insert("engines".into(), Json::Arr(engine_rows));
     let path = write_bench_json("allreduce", Json::Obj(section)).expect("bench json");
     println!("\nbench JSON -> {}", path.display());
 }

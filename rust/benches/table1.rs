@@ -7,9 +7,13 @@
 //! `examples/table1_sweep.rs` that always terminates in bench budgets;
 //! uses artifacts when present, else the linear backend.
 
+use std::collections::BTreeMap;
+
 use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::bench_util::write_bench_json;
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
 
 struct PaperRow {
     label: &'static str,
@@ -35,14 +39,18 @@ const ROWS: &[PaperRow] = &[
 ];
 
 fn run_row(r: &PaperRow, steps: u64) -> anyhow::Result<RunReport> {
+    run_row_with(r, steps, Algo::DcS3gd)
+}
+
+fn run_row_with(r: &PaperRow, steps: u64, algo: Algo) -> anyhow::Result<RunReport> {
     let variant = if std::path::Path::new(&format!("artifacts/{}/meta.json", r.variant)).exists() {
         r.variant
     } else {
         "linear"
     };
     let cfg = ExperimentConfig::builder(variant)
-        .name(format!("t1b_{}", r.label).leak())
-        .algo(Algo::DcS3gd)
+        .name(format!("t1b_{}_{}", r.label, algo.name()).leak())
+        .algo(algo)
         .nodes(r.nodes)
         .local_batch(r.local_batch)
         .steps(steps)
@@ -102,5 +110,48 @@ fn main() -> anyhow::Result<()> {
         100.0 * (1.0 - err("r4")),
         100.0 * (1.0 - err("r5"))
     );
+
+    // Engine rows: the per-worker-staleness engines (dyn_ssp, sgs) on
+    // the r3 geometry next to fixed-k DC-S3GD, so they land in the same
+    // BENCH artifact as the paper table.
+    let r3 = ROWS.iter().find(|r| r.label == "r3").unwrap();
+    println!("\n# engine rows (r3 geometry: N={}, |B|={})", r3.nodes, r3.local_batch);
+    println!("{:>8} {:>9} {:>11} {:>12}", "engine", "val", "img/s", "iter_time");
+    let mut engine_rows: Vec<Json> = Vec::new();
+    for algo in [Algo::DcS3gd, Algo::DynSsp, Algo::Sgs] {
+        let rep = run_row_with(r3, steps, algo)?;
+        println!(
+            "{:>8} {:>8.1}% {:>11.0} {:>11.3e}s",
+            algo.name(),
+            100.0 * (1.0 - rep.final_val_err),
+            rep.sim_throughput,
+            rep.mean_iter_time
+        );
+        let mut row = BTreeMap::new();
+        row.insert("engine".to_string(), Json::Str(algo.name().to_string()));
+        row.insert("final_val_err".into(), Json::Num(rep.final_val_err as f64));
+        row.insert("sim_img_per_s".into(), Json::Num(rep.sim_throughput));
+        row.insert("mean_iter_time_s".into(), Json::Num(rep.mean_iter_time));
+        engine_rows.push(Json::Obj(row));
+    }
+
+    // Machine-readable export: the paper rows plus the engine rows.
+    let mut paper_rows: Vec<Json> = Vec::new();
+    for (r, img_s, val_err) in &speeds {
+        let mut row = BTreeMap::new();
+        row.insert("row".to_string(), Json::Str(r.label.to_string()));
+        row.insert("nodes".into(), Json::Num(r.nodes as f64));
+        row.insert("local_batch".into(), Json::Num(r.local_batch as f64));
+        row.insert("paper_val_acc".into(), Json::Num(r.paper_val_acc));
+        row.insert("paper_img_per_s".into(), Json::Num(r.paper_speed));
+        row.insert("sim_img_per_s".into(), Json::Num(*img_s));
+        row.insert("final_val_err".into(), Json::Num(*val_err as f64));
+        paper_rows.push(Json::Obj(row));
+    }
+    let mut section = BTreeMap::new();
+    section.insert("rows".to_string(), Json::Arr(paper_rows));
+    section.insert("engines".into(), Json::Arr(engine_rows));
+    let path = write_bench_json("table1", Json::Obj(section)).expect("bench json");
+    println!("\nbench JSON -> {}", path.display());
     Ok(())
 }

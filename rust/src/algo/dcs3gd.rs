@@ -110,6 +110,7 @@ use crate::control::{
     SgsStaleness, StalenessController, WindowObs,
 };
 use crate::dc::{self, DcHyper};
+use crate::exec::{Phase, Pool, Profiler, RankClock};
 use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
@@ -168,6 +169,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let membership = harness.membership.clone();
     let capacity = membership.capacity();
     let group = Group::elastic(capacity, cfg.nodes, cfg.net);
+    // Engine core: rank bodies run on scoped threads but at most
+    // `perf.threads` are runnable at once — each holds a pool permit
+    // during compute and hands it back across every rendezvous wait
+    // (the gate plugged into the group below). `--threads 1` is the
+    // serial reference engine; results are bit-identical either way.
+    let pool = Pool::from_config(&cfg.perf);
+    group.set_gate(pool.gate());
+    let profiler = Profiler::new(pool.threads());
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
 
@@ -187,8 +196,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let sched = sched.clone();
             let cfg = cfg.clone();
             let membership = membership.clone();
+            let gate = pool.gate();
+            let profiler = profiler.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
+                let _permit = gate.permit();
+                let mut pclock = RankClock::new(profiler);
                 let fused = cfg.optimizer == "momentum" || cfg.optimizer == "sgd";
                 // Optimizer state: fused path owns a velocity buffer
                 // directly; unfused path owns a boxed optimizer.
@@ -221,7 +234,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     w = init_w.clone();
                     world = (0..cfg.nodes).collect();
                 } else {
-                    let Some((c, boot)) = group_ref.await_admission(rank) else {
+                    let admission =
+                        pclock.time(Phase::CommWait, || group_ref.await_admission(rank));
+                    let Some((c, boot)) = admission else {
                         return Ok(()); // run ended before our join fired
                     };
                     comm = c;
@@ -397,7 +412,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     }
 
                     let t_before_step = ctx.clock.now();
-                    let (loss, err, wall) = ctx.train_step(&w);
+                    let (loss, err, wall) = pclock.time(Phase::Compute, || ctx.train_step(&w));
                     window_t_c += ctx.clock.now() - t_before_step;
                     steps_in_window += 1;
                     let warm = if warmup_total > 0 && windows_since_join < warmup_total {
@@ -427,7 +442,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         if let Some(p) = posted.take() {
                             let post_time = p.handle.post_time;
                             let now_before_wait = ctx.clock.now();
-                            let out = p.handle.wait_outcome(now_before_wait);
+                            let out = pclock
+                                .time(Phase::CommWait, || p.handle.wait_outcome(now_before_wait));
                             ctx.clock.advance_to(out.time);
                             ctx.beat(out.time);
                             let blocked = out.time - now_before_wait;
@@ -440,9 +456,17 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             // *decompressed* contribution, so the
                             // residual error stays in the error-feedback
                             // loop, not in D_i.
-                            let ctrl = codec.decode(&out.data, n_contrib, &mut dense_sum);
-                            dc::distance_to_average(&dense_sum, &p.own, n_contrib, &mut dist);
-                            dist_norm = tensor::norm2(&dist);
+                            let ctrl = pclock.time(Phase::Decode, || {
+                                let ctrl = codec.decode(&out.data, n_contrib, &mut dense_sum);
+                                dc::distance_to_average(
+                                    &dense_sum,
+                                    &p.own,
+                                    n_contrib,
+                                    &mut dist,
+                                );
+                                dist_norm = tensor::norm2(&dist);
+                                ctrl
+                            });
 
                             // Membership change? Departures show up as a
                             // short contributor set; arrivals fire when
@@ -467,7 +491,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             {
                                 let w_avg: Vec<f32> =
                                     w.iter().zip(&dist).map(|(a, b)| a + b).collect();
-                                let (vl, ve) = ctx.eval(&w_avg, cfg.eval_batches);
+                                let (vl, ve) = pclock
+                                    .time(Phase::Eval, || ctx.eval(&w_avg, cfg.eval_batches));
                                 ctx.record_eval(t, vl, ve);
                             }
 
@@ -554,36 +579,38 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     };
 
                     let lam0_eff = lam0 * decision.lam_scale;
-                    if fused {
-                        let hp = DcHyper { eta, mu: cfg.momentum, lam0: lam0_eff, wd };
-                        let info = dc::dc_correct_update(
-                            &ctx.g,
-                            d_opt,
-                            &mut velocity,
-                            &mut w,
-                            decay_mask.as_deref(),
-                            hp,
-                            &mut step_delta,
-                        );
-                        lam_used = info.lam;
-                    } else {
-                        // Unfused: correct (Eq. 10/17), optimizer step,
-                        // then Eq. 12 by hand.
-                        let g_in: &[f32] = match d_opt {
-                            Some(d) if lam0_eff != 0.0 => {
-                                let lam = dc::dynamic_lambda(&ctx.g, d, lam0_eff);
-                                lam_used = lam;
-                                dc::dc_correct(&ctx.g, d, lam, &mut gtilde);
-                                &gtilde
+                    pclock.time(Phase::Update, || {
+                        if fused {
+                            let hp = DcHyper { eta, mu: cfg.momentum, lam0: lam0_eff, wd };
+                            let info = dc::dc_correct_update(
+                                &ctx.g,
+                                d_opt,
+                                &mut velocity,
+                                &mut w,
+                                decay_mask.as_deref(),
+                                hp,
+                                &mut step_delta,
+                            );
+                            lam_used = info.lam;
+                        } else {
+                            // Unfused: correct (Eq. 10/17), optimizer
+                            // step, then Eq. 12 by hand.
+                            let g_in: &[f32] = match d_opt {
+                                Some(d) if lam0_eff != 0.0 => {
+                                    let lam = dc::dynamic_lambda(&ctx.g, d, lam0_eff);
+                                    lam_used = lam;
+                                    dc::dc_correct(&ctx.g, d, lam, &mut gtilde);
+                                    &gtilde
+                                }
+                                _ => &ctx.g,
+                            };
+                            opt.as_mut().unwrap().step(g_in, &w, eta, wd, &mut step_delta);
+                            if let Some(d) = d_opt {
+                                tensor::add_assign(&mut w, d);
                             }
-                            _ => &ctx.g,
-                        };
-                        opt.as_mut().unwrap().step(g_in, &w, eta, wd, &mut step_delta);
-                        if let Some(d) = d_opt {
-                            tensor::add_assign(&mut w, d);
+                            tensor::add_assign(&mut w, &step_delta);
                         }
-                        tensor::add_assign(&mut w, &step_delta);
-                    }
+                    });
 
                     tensor::add_assign(&mut window_delta, &step_delta);
                     ctx.record(t, loss, err, wall, lam_used, dist_norm, eta);
@@ -603,9 +630,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             // canonical epoch state, bit-identical on
                             // every member (identical payload × identical
                             // scale).
-                            let sync = comm
-                                .iallreduce_sched(&w, ctx.clock.now(), cfg.net.algo)
-                                .wait_outcome(ctx.clock.now());
+                            let resync_now = ctx.clock.now();
+                            let sync = pclock.time(Phase::CommWait, || {
+                                comm.iallreduce_sched(&w, resync_now, cfg.net.algo)
+                                    .wait_outcome(resync_now)
+                            });
                             ctx.clock.advance_to(sync.time);
                             let inv = 1.0 / sync.contributors.len() as f32;
                             for (wi, s) in w.iter_mut().zip(sync.data.iter()) {
@@ -744,8 +773,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 codec.set_ratio(r);
                             }
                             let mut own = vec![0.0f32; n];
-                            let wire =
-                                codec.encode(&window_delta, per_step_t_c, prev_t_ar, &mut own);
+                            let wire = pclock.time(Phase::Encode, || {
+                                codec.encode(&window_delta, per_step_t_c, prev_t_ar, &mut own)
+                            });
                             let now = ctx.clock.now();
                             let handle = match codec.mode() {
                                 RoundMode::DenseReduce => {
@@ -779,15 +809,18 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 // averaged weights (and no request leaks). Re-weighted:
                 // a departure at the very end still averages correctly.
                 if let Some(p) = posted.take() {
-                    let out = p.handle.wait_outcome(ctx.clock.now());
+                    let drain_now = ctx.clock.now();
+                    let out = pclock.time(Phase::CommWait, || p.handle.wait_outcome(drain_now));
                     ctx.clock.advance_to(out.time);
-                    codec.decode(&out.data, out.contributors.len(), &mut dense_sum);
-                    dc::distance_to_average(
-                        &dense_sum,
-                        &p.own,
-                        out.contributors.len(),
-                        &mut dist,
-                    );
+                    pclock.time(Phase::Decode, || {
+                        codec.decode(&out.data, out.contributors.len(), &mut dense_sum);
+                        dc::distance_to_average(
+                            &dense_sum,
+                            &p.own,
+                            out.contributors.len(),
+                            &mut dist,
+                        );
+                    });
                     tensor::add_assign(&mut w, &dist);
                 }
 
@@ -799,7 +832,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 // Final validation on the averaged weights (leader),
                 // plus a checkpoint of the canonical averaged model.
                 if rank == leader {
-                    let (vl, ve) = ctx.eval(&w, cfg.eval_batches.max(8));
+                    let (vl, ve) =
+                        pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches.max(8)));
                     ctx.record_eval(cfg.steps, vl, ve);
                     if let Some(dir) = &cfg.out_dir {
                         let ck = crate::model::Checkpoint {
@@ -829,6 +863,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
     report.epochs = harness.epochs.clone();
+    report.perf = Some(profiler.to_json());
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;

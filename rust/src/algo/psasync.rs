@@ -33,11 +33,17 @@ use anyhow::Result;
 
 use crate::algo::{Algo, RunReport, WorkerHarness};
 use crate::config::ExperimentConfig;
+use crate::exec::{Phase, Pool, Profiler, RankClock};
 use crate::optim::build_optimizer;
 use crate::ps::{ParameterServer, PsMode};
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let n = harness.n_params();
+    // Engine pool: worker ranks share `perf.threads` permits; the PS
+    // actor itself stays ungated (it is service infrastructure, not a
+    // rank) and each client hands its permit back across push_pull.
+    let pool = Pool::from_config(&cfg.perf);
+    let profiler = Profiler::new(pool.threads());
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
 
@@ -72,12 +78,17 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         let mut handles = Vec::new();
         for rank in 0..cfg.nodes {
             let mut ctx = harness.make_worker(cfg, rank);
-            let client = ps.client();
+            let mut client = ps.client();
+            client.set_gate(pool.gate());
             let init_w = harness.init_w.clone();
             let sched = sched.clone();
             let cfg = cfg.clone();
+            let gate = pool.gate();
+            let profiler = profiler.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
+                let _permit = gate.permit();
+                let mut pclock = RankClock::new(profiler);
                 let mut w = init_w.clone();
                 for t in 0..cfg.steps {
                     if !ctx.chaos.is_inert() {
@@ -89,21 +100,24 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             );
                         }
                     }
-                    let (loss, err, wall) = ctx.train_step(&w);
+                    let (loss, err, wall) = pclock.time(Phase::Compute, || ctx.train_step(&w));
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
-                    let reply = client.push_pull(rank, ctx.g.clone(), ctx.clock.now(), eta, wd);
+                    let reply = pclock.time(Phase::CommWait, || {
+                        client.push_pull(rank, ctx.g.clone(), ctx.clock.now(), eta, wd)
+                    });
                     ctx.clock.advance_to(reply.done_at);
                     w = reply.weights;
                     ctx.record(t, loss, err, wall, 0.0, reply.staleness_dist, eta);
 
                     if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
-                        let (vl, ve) = ctx.eval(&w, cfg.eval_batches);
+                        let (vl, ve) = pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches));
                         ctx.record_eval(t, vl, ve);
                     }
                 }
                 if rank == 0 {
-                    let (vl, ve) = ctx.eval(&w, cfg.eval_batches.max(8));
+                    let (vl, ve) =
+                        pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches.max(8)));
                     ctx.record_eval(cfg.steps, vl, ve);
                 }
                 Ok(())
@@ -126,6 +140,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let mut report =
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
+    report.perf = Some(profiler.to_json());
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;

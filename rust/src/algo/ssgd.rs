@@ -39,6 +39,7 @@ use crate::comm::Group;
 use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
+use crate::exec::{Phase, Pool, Profiler, RankClock};
 use crate::model::Checkpoint;
 use crate::optim::build_optimizer;
 use crate::tensor;
@@ -46,6 +47,11 @@ use crate::tensor;
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let n = harness.n_params();
     let group = Group::new(cfg.nodes, cfg.net);
+    // Engine pool: at most `perf.threads` ranks runnable at once; the
+    // gate hands permits back across the blocking all-reduce waits.
+    let pool = Pool::from_config(&cfg.perf);
+    group.set_gate(pool.gate());
+    let profiler = Profiler::new(pool.threads());
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
     let env = ScheduleEnv {
@@ -66,8 +72,12 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let layer_ranges = harness.layer_ranges.clone();
             let sched = sched.clone();
             let cfg = cfg.clone();
+            let gate = pool.gate();
+            let profiler = profiler.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
+                let _permit = gate.permit();
+                let mut pclock = RankClock::new(profiler);
                 let mut w = init_w.clone();
                 let mut opt = build_optimizer(
                     &cfg.optimizer,
@@ -117,7 +127,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         }
                     }
                     let t_before_step = ctx.clock.now();
-                    let (loss, err, wall) = ctx.train_step(&w);
+                    let (loss, err, wall) = pclock.time(Phase::Compute, || ctx.train_step(&w));
                     let t_c = ctx.clock.now() - t_before_step;
                     // Blocking all-reduce of gradients on the decided
                     // schedule (Eq. 13), compressed through the codec
@@ -131,7 +141,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     if let Some(r) = decision.compress_ratio {
                         codec.set_ratio(r);
                     }
-                    let wire = codec.encode(&ctx.g, t_c, prev_t_ar, &mut own);
+                    let wire =
+                        pclock.time(Phase::Encode, || codec.encode(&ctx.g, t_c, prev_t_ar, &mut own));
                     let handle = match codec.mode() {
                         RoundMode::DenseReduce => {
                             comm.iallreduce_wire(&wire, now_before_wait, algo, codec.wire_elems())
@@ -140,19 +151,23 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             comm.iallgather_sched(&wire, now_before_wait, algo)
                         }
                     };
-                    let out = handle.wait_outcome(now_before_wait);
+                    let out = pclock.time(Phase::CommWait, || handle.wait_outcome(now_before_wait));
                     ctx.clock.advance_to(out.time);
                     ctx.beat(out.time);
                     prev_t_ar = out.time - now_before_wait;
-                    let ctrl = codec.decode(&out.data, out.contributors.len(), &mut dense_sum);
+                    let ctrl = pclock.time(Phase::Decode, || {
+                        codec.decode(&out.data, out.contributors.len(), &mut dense_sum)
+                    });
                     let inv_n = 1.0 / cfg.nodes as f32;
-                    for (m, s) in g_mean.iter_mut().zip(dense_sum.iter()) {
-                        *m = s * inv_n;
-                    }
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
-                    opt.step(&g_mean, &w, eta, wd, &mut delta);
-                    tensor::add_assign(&mut w, &delta);
+                    pclock.time(Phase::Update, || {
+                        for (m, s) in g_mean.iter_mut().zip(dense_sum.iter()) {
+                            *m = s * inv_n;
+                        }
+                        opt.step(&g_mean, &w, eta, wd, &mut delta);
+                        tensor::add_assign(&mut w, &delta);
+                    });
                     ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
 
                     // Wait/post boundary: consult with the decoded
@@ -168,6 +183,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         t_ar_local: out.phases.local_s,
                         t_ar_global: out.phases.global_s,
                         ran: Some(algo),
+                        probe: was_probe,
                     });
                     if rank == 0 {
                         ctx.control_log.record(ControlRecord {
@@ -199,13 +215,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     }
 
                     if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
-                        let (vl, ve) = ctx.eval(&w, cfg.eval_batches);
+                        let (vl, ve) = pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches));
                         ctx.record_eval(t, vl, ve);
                     }
                 }
 
                 if rank == 0 {
-                    let (vl, ve) = ctx.eval(&w, cfg.eval_batches.max(8));
+                    let (vl, ve) =
+                        pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches.max(8)));
                     ctx.record_eval(cfg.steps, vl, ve);
                 }
                 Ok(())
@@ -226,6 +243,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let mut report =
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
+    report.perf = Some(profiler.to_json());
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;

@@ -414,6 +414,12 @@ pub struct RunReport {
     pub epochs: EpochTrace,
     /// The resolved heterogeneity profile (`None` for homogeneous runs).
     pub hetero: Option<crate::hetero::HeteroProfile>,
+    /// Engine-core profile: resolved thread budget, kernel chunk width
+    /// and the per-phase wall-time histograms (see
+    /// [`crate::exec::Profiler`]). Wall-clock measurements — excluded,
+    /// together with `wall_time_s`, from
+    /// [`RunReport::deterministic_json`].
+    pub perf: Option<Json>,
 }
 
 impl RunReport {
@@ -449,6 +455,7 @@ impl RunReport {
             control: ControlLog::default(),
             epochs: EpochTrace::default(),
             hetero: cfg.hetero_profile(),
+            perf: None,
         }
     }
 
@@ -498,7 +505,29 @@ impl RunReport {
                 }
             },
         );
+        // Engine-core profile: thread budget, kernel chunk width, phase
+        // wall-time histograms. Wall-clock, hence nondeterministic.
+        if let Some(p) = &self.perf {
+            m.insert("perf".into(), p.clone());
+        }
         Json::Obj(m)
+    }
+
+    /// The run JSON with every wall-clock-derived (hence
+    /// nondeterministic) field removed: the `"perf"` block and
+    /// `"wall_time_s"`. Two runs of the same config are byte-identical
+    /// here regardless of `--threads` / `--pin-chunk` — the engine's
+    /// determinism contract (docs/performance.md), pinned by
+    /// `prop_parallel_engine_bitwise_equals_serial`.
+    pub fn deterministic_json(&self) -> Json {
+        match self.to_json() {
+            Json::Obj(mut m) => {
+                m.remove("perf");
+                m.remove("wall_time_s");
+                Json::Obj(m)
+            }
+            other => other,
+        }
     }
 
     /// Write the run's metrics JSON (summary + control trace).

@@ -78,6 +78,8 @@ pub use topology::{Dragonfly, GlobalContention};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::exec::Gate;
+
 /// All-reduce schedule whose cost model [`NetModel`] applies.
 ///
 /// This is the *config-level* description (small, `Copy`, lives in
@@ -316,16 +318,33 @@ impl Round {
             RoundKind::AllReduce | RoundKind::ReduceScatter => {
                 let len = self.parts[contributors[0]].as_ref().expect("contributor").len();
                 let mut sum = vec![0.0f32; len];
-                for &r in &contributors {
-                    let part = self.parts[r].take().expect("contributor posted");
+                let parts: Vec<Vec<f32>> = contributors
+                    .iter()
+                    .map(|&r| self.parts[r].take().expect("contributor posted"))
+                    .collect();
+                for part in &parts {
                     assert_eq!(
                         part.len(),
                         sum.len(),
                         "mismatched all-reduce lengths in round {seq}"
                     );
-                    for (a, x) in sum.iter_mut().zip(&part) {
-                        *a += x;
+                }
+                // Tile the reduction so each ~4 KB stripe of the sum
+                // stays in cache across all contributors. Per element
+                // the additions still land in ascending contributor
+                // order, so the dyadic result is bit-identical to the
+                // untiled loop.
+                const SEAL_TILE: usize = 1024;
+                let mut start = 0;
+                while start < len {
+                    let end = (start + SEAL_TILE).min(len);
+                    let dst = &mut sum[start..end];
+                    for part in &parts {
+                        for (a, x) in dst.iter_mut().zip(&part[start..end]) {
+                            *a += x;
+                        }
                     }
+                    start = end;
                 }
                 let wire = self.wire_elems.unwrap_or(len);
                 let phases = if self.kind == RoundKind::AllReduce {
@@ -430,6 +449,19 @@ struct Shared {
     net: NetModel,
     state: Mutex<State>,
     cv: Condvar,
+    /// Execution gate shared with the engine worker pool (see
+    /// [`crate::exec`]): every blocking wait releases its runnable
+    /// permit for the wait's duration, so parked ranks never occupy a
+    /// `--threads` slot. Defaults to the unlimited pass-through, which
+    /// keeps non-pooled callers (unit tests, raw [`Group`] users)
+    /// overhead-free.
+    gate: Mutex<Arc<Gate>>,
+}
+
+impl Shared {
+    fn gate(&self) -> Arc<Gate> {
+        self.gate.lock().unwrap().clone()
+    }
 }
 
 /// A communicator group. Create once, then [`Group::comm`] hands each
@@ -471,8 +503,18 @@ impl Group {
                     closed: false,
                 }),
                 cv: Condvar::new(),
+                gate: Mutex::new(Gate::unlimited()),
             }),
         }
+    }
+
+    /// Plug the engine pool's execution [`Gate`] into this group's
+    /// blocking waits. Must be called before any collective traffic
+    /// (the engines do it right after constructing the group); waits in
+    /// flight at swap time would release the old gate and reacquire the
+    /// new one.
+    pub fn set_gate(&self, gate: Arc<Gate>) {
+        *self.shared.gate.lock().unwrap() = gate;
     }
 
     /// Endpoint for an *initial* member. Each rank must be handed out
@@ -493,22 +535,34 @@ impl Group {
     pub fn await_admission(&self, rank: usize) -> Option<(Comm, JoinBootstrap)> {
         assert!(rank < self.shared.capacity, "rank {rank} out of capacity");
         let mut st = self.shared.state.lock().unwrap();
-        loop {
+        // A pre-admission joiner parks here for most of the run — give
+        // its runnable permit back to the pool while it waits.
+        let mut parked = false;
+        let out = loop {
             let m = st.roster[rank];
             if m.admit_seq != u64::MAX {
                 if let Some(boot) = st.bootstrap.clone() {
                     if boot.epoch == m.joined_epoch {
                         let comm =
                             Comm { rank, shared: self.shared.clone(), next_seq: m.admit_seq };
-                        return Some((comm, boot));
+                        break Some((comm, boot));
                     }
                 }
             }
             if st.closed {
-                return None;
+                break None;
+            }
+            if !parked {
+                self.shared.gate().release();
+                parked = true;
             }
             st = self.shared.cv.wait(st).unwrap();
+        };
+        drop(st);
+        if parked {
+            self.shared.gate().acquire();
         }
+        out
     }
 
     /// Current world size (active members).
@@ -839,7 +893,12 @@ impl PendingReduce {
     /// overlap (Eq. 14).
     pub fn wait_outcome(mut self, now: f64) -> RoundOutcome {
         let mut st = self.shared.state.lock().unwrap();
-        loop {
+        // Fast path: an already-sealed round costs no gate traffic.
+        // Slow path: hand the runnable permit back for the wait's
+        // duration (gate release/notify never blocks, so doing it under
+        // the state lock is safe) and reacquire it lock-free after.
+        let mut parked = false;
+        let out = loop {
             if let Some(round) = st.rounds.get_mut(&self.seq) {
                 if let Some(res) = round.result.clone() {
                     round.consumed += 1;
@@ -847,7 +906,7 @@ impl PendingReduce {
                         st.rounds.remove(&self.seq);
                     }
                     self.done = true;
-                    return RoundOutcome {
+                    break RoundOutcome {
                         data: res.payload,
                         time: now.max(res.t_complete),
                         t_complete: res.t_complete,
@@ -856,8 +915,17 @@ impl PendingReduce {
                     };
                 }
             }
+            if !parked {
+                self.shared.gate().release();
+                parked = true;
+            }
             st = self.shared.cv.wait(st).unwrap();
+        };
+        drop(st);
+        if parked {
+            self.shared.gate().acquire();
         }
+        out
     }
 
     /// Complete the operation — `MPI_Wait` — returning the payload,

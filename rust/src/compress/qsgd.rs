@@ -46,12 +46,30 @@ pub struct Qsgd {
     seed: u64,
     rank: u64,
     window: u64,
+    /// Scratch for the chunked two-pass encode: floor levels,
+    /// fractional parts, and the per-element rounding draws. The draws
+    /// are pulled one-per-element in element order — exactly the
+    /// counter stream the scalar encoder consumed — so splitting the
+    /// loop moves no bits.
+    lvl0: Vec<f32>,
+    frac: Vec<f32>,
+    draws: Vec<f32>,
 }
 
 impl Qsgd {
     pub fn new(n: usize, bits: u32, seed: u64, rank: u64) -> Self {
         assert!((2..=16).contains(&bits), "qsgd bits must be in 2..=16 (f32 level arithmetic)");
-        Qsgd { n, bits, residual: vec![0.0; n], seed, rank, window: 0 }
+        Qsgd {
+            n,
+            bits,
+            residual: vec![0.0; n],
+            seed,
+            rank,
+            window: 0,
+            lvl0: vec![0.0; n],
+            frac: vec![0.0; n],
+            draws: vec![0.0; n],
+        }
     }
 
     /// Magnitude levels: sign bit + (bits−1)-bit magnitude.
@@ -89,17 +107,45 @@ impl GradCompressor for Qsgd {
             q.resize(self.n, 0.0);
             return q;
         }
-        for i in 0..self.n {
-            let v = self.residual[i];
-            let p = v.abs() / s * lvl;
-            let mut l = p.floor();
-            if (rng.uniform() as f32) < p - l {
-                l += 1.0;
+        // Chunked three-pass encode. Passes 1 and 3 are branch-free
+        // zipped subslice walks the autovectorizer handles; pass 2 is
+        // the inherently serial RNG drain. Bit-identical to the old
+        // scalar loop: same per-element arithmetic, same draw order,
+        // and `(u < f) as u32 as f32` is the old branch made data.
+        let cw = crate::exec::pin_chunk();
+        let mut lo = 0;
+        while lo < self.n {
+            let hi = (lo + cw).min(self.n);
+            let wr = self.lvl0[lo..hi].iter_mut().zip(self.frac[lo..hi].iter_mut());
+            for (v, (l0, f)) in self.residual[lo..hi].iter().zip(wr) {
+                let p = v.abs() / s * lvl;
+                let l = p.floor();
+                *l0 = l;
+                *f = p - l;
             }
-            let qi = v.signum() * s * (l / lvl);
-            q.push(qi);
-            own_out[i] = qi;
-            self.residual[i] = v - qi;
+            lo = hi;
+        }
+        for u in self.draws.iter_mut() {
+            *u = rng.uniform() as f32;
+        }
+        q.resize(self.n, 0.0);
+        let mut lo = 0;
+        while lo < self.n {
+            let hi = (lo + cw).min(self.n);
+            let rd = self.lvl0[lo..hi].iter().zip(&self.frac[lo..hi]).zip(&self.draws[lo..hi]);
+            let wr = self.residual[lo..hi]
+                .iter_mut()
+                .zip(own_out[lo..hi].iter_mut())
+                .zip(q[lo..hi].iter_mut());
+            for (((l0, f), u), ((v, o), qo)) in rd.zip(wr) {
+                let bump = ((*u < *f) as u32) as f32;
+                let l = l0 + bump;
+                let qi = v.signum() * s * (l / lvl);
+                *qo = qi;
+                *o = qi;
+                *v -= qi;
+            }
+            lo = hi;
         }
         q
     }

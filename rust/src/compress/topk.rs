@@ -38,13 +38,18 @@ pub struct TopK {
     residual: Vec<f32>,
     /// Scratch: residual-corrected input of the current window.
     v: Vec<f32>,
+    /// Scratch: |v| magnitudes, filled by one vectorized pass per
+    /// window so the partial select's comparator reads a flat f32
+    /// instead of recomputing `abs` on every comparison. Pure
+    /// precompute — the comparator's total order is unchanged.
+    mag: Vec<f32>,
 }
 
 impl TopK {
     pub fn new(n: usize, ratio: f32) -> Self {
         assert!(n < (1 << 24), "top-k indices ride as exact f32s: n must be < 2^24");
         assert!(ratio > 0.0 && ratio <= 1.0, "top-k ratio must be in (0, 1]");
-        TopK { n, ratio, residual: vec![0.0; n], v: vec![0.0; n] }
+        TopK { n, ratio, residual: vec![0.0; n], v: vec![0.0; n], mag: vec![0.0; n] }
     }
 
     pub fn k(&self) -> usize {
@@ -62,11 +67,14 @@ impl TopK {
         let k = self.k();
         let mut idx: Vec<u32> = (0..self.n as u32).collect();
         if k < self.n {
-            let v = &self.v;
+            for (m, v) in self.mag.iter_mut().zip(&self.v) {
+                *m = v.abs();
+            }
+            let mag = &self.mag;
             // Total order: |v| descending, index ascending — the
             // deterministic selection every rank agrees on.
             let cmp = |&a: &u32, &b: &u32| {
-                v[b as usize].abs().total_cmp(&v[a as usize].abs()).then(a.cmp(&b))
+                mag[b as usize].total_cmp(&mag[a as usize]).then(a.cmp(&b))
             };
             idx.select_nth_unstable_by(k - 1, cmp);
             idx.truncate(k);

@@ -17,6 +17,7 @@ use crate::compress::{CompressConfig, CompressorKind};
 use crate::control::{
     ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent, ProbeMode,
 };
+use crate::exec::PerfConfig;
 use crate::hetero::{HeteroConfig, HeteroProfile};
 use crate::simtime::ComputeModel;
 
@@ -99,6 +100,13 @@ pub struct ExperimentConfig {
     /// revocations, diurnal load. Default: off.
     pub hetero: HeteroConfig,
 
+    // --- engine core ---
+    /// Simulator execution knobs (the `[perf]` TOML table; see
+    /// [`crate::exec`]): worker-pool thread budget and kernel chunk
+    /// width. Wall-clock only — results are bit-identical for every
+    /// setting.
+    pub perf: PerfConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -144,6 +152,7 @@ impl ExperimentConfig {
             control: ControlConfig::default(),
             compress: CompressConfig::default(),
             hetero: HeteroConfig::default(),
+            perf: PerfConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -361,6 +370,8 @@ impl ExperimentConfig {
                     cfg.hetero.diurnal_period_s = val.as_f64().ok_or_else(err)?
                 }
                 "hetero.link_spread" => cfg.hetero.link_spread = val.as_f64().ok_or_else(err)?,
+                "perf.threads" => cfg.perf.threads = val.as_i64().ok_or_else(err)? as usize,
+                "perf.pin_chunk" => cfg.perf.pin_chunk = val.as_i64().ok_or_else(err)? as usize,
                 "control.fault_rank" => fault_rank = Some(val.as_i64().ok_or_else(err)? as usize),
                 "control.fault_at_s" => fault_at_s = Some(val.as_f64().ok_or_else(err)?),
                 "control.fault_kind" => {
@@ -483,6 +494,7 @@ impl ExperimentConfig {
         self.control.validate()?;
         self.compress.validate()?;
         self.hetero.validate()?;
+        self.perf.validate()?;
         if self.compress.kind != CompressorKind::None && !self.algo.is_decentralized() {
             bail!(
                 "gradient compression rides the decentralized all-reduce engines \
@@ -839,6 +851,16 @@ impl ConfigBuilder {
     /// Replace the whole `[hetero]` table.
     pub fn hetero(mut self, v: HeteroConfig) -> Self {
         self.cfg.hetero = v;
+        self
+    }
+    /// Engine worker-pool thread budget (`0` = auto, `1` = serial).
+    pub fn threads(mut self, v: usize) -> Self {
+        self.cfg.perf.threads = v;
+        self
+    }
+    /// Vectorized-kernel chunk width (`0` = default; power of two).
+    pub fn pin_chunk(mut self, v: usize) -> Self {
+        self.cfg.perf.pin_chunk = v;
         self
     }
     /// Error-feedback top-k compression at the given density.

@@ -955,6 +955,11 @@ impl CompressCoupled {
             cold_streak: 0,
             dense_elems: env.n_elems,
         };
+        // The config's rung must respect the ratio band like every
+        // other knob: a 16-bit config under ratio_max = 0.25 would
+        // otherwise surface compress_ratio = 0.5 — outside the bounds
+        // the operator asked for.
+        c.bits = c.clamp_bits_to_band(c.bits);
         c.inner.env.n_elems = c.wire_pricing_elems();
         c
     }
@@ -986,16 +991,46 @@ impl CompressCoupled {
         }
     }
 
-    /// One rung down (hot) or up (cold) the QSGD bits ladder.
+    /// Whether a rung's wire ratio `bits/32` sits inside the configured
+    /// `[ratio_min, ratio_max]` band (epsilon so a bound is itself a
+    /// legal rung).
+    fn bits_allowed(&self, bits: u32) -> bool {
+        const EPS: f32 = 1e-6;
+        let r = bits as f32 / 32.0;
+        r >= self.ratio_min - EPS && r <= self.ratio_max + EPS
+    }
+
+    /// Nearest in-band rung to `bits` (ties take the smaller rung, like
+    /// [`snap_qsgd_bits`]). A band that excludes every rung degrades to
+    /// the rung nearest the band's midpoint — the ladder then has one
+    /// rung and never moves.
+    fn clamp_bits_to_band(&self, bits: u32) -> u32 {
+        let nearest = QSGD_BITS_LADDER
+            .iter()
+            .copied()
+            .filter(|&b| self.bits_allowed(b))
+            .min_by_key(|&b| (b as i64 - bits as i64).unsigned_abs());
+        nearest.unwrap_or_else(|| {
+            let mid = 32.0 * 0.5 * (self.ratio_min + self.ratio_max);
+            snap_qsgd_bits(mid.round().max(2.0) as u32)
+        })
+    }
+
+    /// One rung down (hot) or up (cold) the QSGD bits ladder, refusing
+    /// any rung whose wire ratio leaves `[ratio_min, ratio_max]`.
     fn step_bits(&mut self, down: bool) -> bool {
         let pos = QSGD_BITS_LADDER.iter().position(|&b| b == self.bits).unwrap_or(1);
-        let next = if down { pos.checked_sub(1) } else { (pos + 1 < QSGD_BITS_LADDER.len()).then_some(pos + 1) };
+        let next = if down {
+            pos.checked_sub(1)
+        } else {
+            (pos + 1 < QSGD_BITS_LADDER.len()).then_some(pos + 1)
+        };
         match next {
-            Some(p) => {
+            Some(p) if self.bits_allowed(QSGD_BITS_LADDER[p]) => {
                 self.bits = QSGD_BITS_LADDER[p];
                 true
             }
-            None => false,
+            _ => false,
         }
     }
 
@@ -1184,7 +1219,14 @@ impl SgsStaleness {
 
     /// The pure draw: rank `slot`'s window length for window `window`
     /// around base `k` — pinned by the determinism tests.
-    pub fn draw(seed: u64, slot: usize, window: u64, k: usize, k_min: usize, k_max: usize) -> usize {
+    pub fn draw(
+        seed: u64,
+        slot: usize,
+        window: u64,
+        k: usize,
+        k_min: usize,
+        k_max: usize,
+    ) -> usize {
         let s = (k / 2).max(1);
         let lo = k.saturating_sub(s).max(k_min.max(1));
         let hi = (k + s).min(k_max.max(1));
@@ -1794,8 +1836,14 @@ mod tests {
 
     fn qsgd_env(bits: u32) -> ScheduleEnv {
         let mut env = sched_env(10_000, 8, 10e9);
-        env.compress =
-            CompressConfig { kind: CompressorKind::Qsgd, bits, ..CompressConfig::default() };
+        // Open the ratio band to the full ladder (16 bits = wire ratio
+        // 0.5); band clamping has its own test below.
+        env.compress = CompressConfig {
+            kind: CompressorKind::Qsgd,
+            bits,
+            ratio_max: 0.5,
+            ..CompressConfig::default()
+        };
         env
     }
 
@@ -1821,6 +1869,46 @@ mod tests {
             last = c.on_window(&obs(w, 1e-3, 1e-9));
         }
         assert_eq!(last.compress_ratio, Some(0.5), "must relax back to 16 bits");
+    }
+
+    #[test]
+    fn qsgd_ladder_respects_the_ratio_band() {
+        // Default band caps at ratio_max = 0.25: a 16-bit config (wire
+        // ratio 0.5) must clamp into the band at init, and no amount of
+        // cold evidence may relax the ladder past the cap — the
+        // regression where `current()` surfaced 0.5 and the codec's
+        // `set_ratio` snapped it right back out of bounds.
+        let mut env = sched_env(10_000, 8, 10e9);
+        env.compress =
+            CompressConfig { kind: CompressorKind::Qsgd, bits: 16, ..CompressConfig::default() };
+        let (lo, hi) = (env.compress.ratio_min, env.compress.ratio_max);
+        let mut c = cc(env);
+        assert_eq!(c.current().compress_ratio, Some(0.25), "16 bits must clamp into the band");
+        for w in 0..6 {
+            let r = c.on_window(&obs(w, 1e-3, 1e-9)).compress_ratio.unwrap();
+            assert!(r >= lo - 1e-6 && r <= hi + 1e-6, "window {w}: ratio {r} left [{lo}, {hi}]");
+        }
+        for w in 6..12 {
+            let r = c.on_window(&obs(w, 1e-3, 10.0)).compress_ratio.unwrap();
+            assert!(r >= lo - 1e-6 && r <= hi + 1e-6, "window {w}: ratio {r} left [{lo}, {hi}]");
+        }
+        assert_eq!(c.current().compress_ratio, Some(0.125), "must pin at the lowest in-band rung");
+
+        // A band excluding every rung degrades to a single nearest rung
+        // that never moves.
+        let mut env = sched_env(10_000, 8, 10e9);
+        env.compress = CompressConfig {
+            kind: CompressorKind::Qsgd,
+            bits: 8,
+            ratio_min: 0.01,
+            ratio_max: 0.02,
+            ..CompressConfig::default()
+        };
+        let mut c = cc(env);
+        assert_eq!(c.current().compress_ratio, Some(0.125));
+        for w in 0..4 {
+            assert_eq!(c.on_window(&obs(w, 1e-3, 1e-9)).compress_ratio, Some(0.125));
+        }
     }
 
     #[test]

@@ -50,8 +50,14 @@ pub fn dynamic_lambda(g: &[f32], d: &[f32], lam0: f32) -> f32 {
 pub fn dc_correct(g: &[f32], d: &[f32], lam: f32, out: &mut [f32]) {
     assert_eq!(g.len(), d.len());
     assert_eq!(g.len(), out.len());
-    for ((o, gi), di) in out.iter_mut().zip(g).zip(d) {
-        *o = gi + lam * gi * gi * di;
+    let cw = crate::exec::pin_chunk();
+    let mut lo = 0;
+    while lo < g.len() {
+        let hi = (lo + cw).min(g.len());
+        for ((o, gi), di) in out[lo..hi].iter_mut().zip(&g[lo..hi]).zip(&d[lo..hi]) {
+            *o = gi + lam * gi * gi * di;
+        }
+        lo = hi;
     }
 }
 
@@ -117,50 +123,92 @@ pub fn dc_correct_update(
         _ => (tensor::norm2(g), 0.0),
     };
 
-    // Single fused elementwise pass. The match is hoisted out of the loop
-    // by monomorphizing on the two Option states, and the loop body keeps
-    // to f32 so LLVM vectorizes it — the update-norm diagnostic is a
-    // separate vectorized pass afterwards (§Perf iteration 3: an inline
-    // f64 accumulator in this loop blocked vectorization, costing ~10%).
+    // Single fused elementwise pass, blocked at the engine's pinned
+    // chunk width ([`crate::exec::pin_chunk`] — per-element order is
+    // unchanged, so every width is bit-identical). The match is hoisted
+    // out of the loop by monomorphizing on the two Option states; the
+    // inner loops are zipped subslice walks so every bounds check is
+    // elided, and the body keeps to f32 so LLVM vectorizes it — the
+    // update-norm diagnostic is a separate vectorized pass afterwards
+    // (§Perf iteration 3: an inline f64 accumulator in this loop
+    // blocked vectorization, costing ~10%).
+    let cw = crate::exec::pin_chunk();
     match (d, decay_mask) {
         (Some(d), Some(m)) => {
-            for i in 0..n {
-                let gi = g[i];
-                let gt = gi + lam * gi * gi * d[i];
-                let vn = hp.mu * v[i] + gt + hp.wd * m[i] * w[i];
-                v[i] = vn;
-                let dw = -hp.eta * vn;
-                delta_w_out[i] = dw;
-                w[i] += d[i] + dw;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + cw).min(n);
+                let rd = g[lo..hi].iter().zip(&d[lo..hi]).zip(&m[lo..hi]);
+                let wr = v[lo..hi]
+                    .iter_mut()
+                    .zip(w[lo..hi].iter_mut())
+                    .zip(delta_w_out[lo..hi].iter_mut());
+                for (((gi, di), mi), ((vi, wi), oi)) in rd.zip(wr) {
+                    let gt = gi + lam * gi * gi * di;
+                    let vn = hp.mu * *vi + gt + hp.wd * mi * *wi;
+                    *vi = vn;
+                    let dw = -hp.eta * vn;
+                    *oi = dw;
+                    *wi += di + dw;
+                }
+                lo = hi;
             }
         }
         (Some(d), None) => {
-            for i in 0..n {
-                let gi = g[i];
-                let gt = gi + lam * gi * gi * d[i];
-                let vn = hp.mu * v[i] + gt + hp.wd * w[i];
-                v[i] = vn;
-                let dw = -hp.eta * vn;
-                delta_w_out[i] = dw;
-                w[i] += d[i] + dw;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + cw).min(n);
+                let rd = g[lo..hi].iter().zip(&d[lo..hi]);
+                let wr = v[lo..hi]
+                    .iter_mut()
+                    .zip(w[lo..hi].iter_mut())
+                    .zip(delta_w_out[lo..hi].iter_mut());
+                for ((gi, di), ((vi, wi), oi)) in rd.zip(wr) {
+                    let gt = gi + lam * gi * gi * di;
+                    let vn = hp.mu * *vi + gt + hp.wd * *wi;
+                    *vi = vn;
+                    let dw = -hp.eta * vn;
+                    *oi = dw;
+                    *wi += di + dw;
+                }
+                lo = hi;
             }
         }
         (None, Some(m)) => {
-            for i in 0..n {
-                let vn = hp.mu * v[i] + g[i] + hp.wd * m[i] * w[i];
-                v[i] = vn;
-                let dw = -hp.eta * vn;
-                delta_w_out[i] = dw;
-                w[i] += dw;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + cw).min(n);
+                let rd = g[lo..hi].iter().zip(&m[lo..hi]);
+                let wr = v[lo..hi]
+                    .iter_mut()
+                    .zip(w[lo..hi].iter_mut())
+                    .zip(delta_w_out[lo..hi].iter_mut());
+                for ((gi, mi), ((vi, wi), oi)) in rd.zip(wr) {
+                    let vn = hp.mu * *vi + gi + hp.wd * mi * *wi;
+                    *vi = vn;
+                    let dw = -hp.eta * vn;
+                    *oi = dw;
+                    *wi += dw;
+                }
+                lo = hi;
             }
         }
         (None, None) => {
-            for i in 0..n {
-                let vn = hp.mu * v[i] + g[i] + hp.wd * w[i];
-                v[i] = vn;
-                let dw = -hp.eta * vn;
-                delta_w_out[i] = dw;
-                w[i] += dw;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + cw).min(n);
+                let wr = v[lo..hi]
+                    .iter_mut()
+                    .zip(w[lo..hi].iter_mut())
+                    .zip(delta_w_out[lo..hi].iter_mut());
+                for (gi, ((vi, wi), oi)) in g[lo..hi].iter().zip(wr) {
+                    let vn = hp.mu * *vi + gi + hp.wd * *wi;
+                    *vi = vn;
+                    let dw = -hp.eta * vn;
+                    *oi = dw;
+                    *wi += dw;
+                }
+                lo = hi;
             }
         }
     }
@@ -174,8 +222,15 @@ pub fn distance_to_average(sum_delta: &[f32], local_delta: &[f32], n_workers: us
     assert_eq!(sum_delta.len(), local_delta.len());
     assert_eq!(sum_delta.len(), out.len());
     let inv_n = 1.0 / n_workers as f32;
-    for ((o, s), l) in out.iter_mut().zip(sum_delta).zip(local_delta) {
-        *o = s * inv_n - l;
+    let cw = crate::exec::pin_chunk();
+    let mut lo = 0;
+    while lo < out.len() {
+        let hi = (lo + cw).min(out.len());
+        for ((o, s), l) in out[lo..hi].iter_mut().zip(&sum_delta[lo..hi]).zip(&local_delta[lo..hi])
+        {
+            *o = s * inv_n - l;
+        }
+        lo = hi;
     }
 }
 

@@ -1,0 +1,572 @@
+//! Parallel engine core: the scoped-thread worker pool that steps ranks
+//! concurrently between virtual-time rendezvous points, plus the
+//! per-phase wall-time profiler behind the run JSON's `"perf"` block.
+//!
+//! ## Execution model
+//!
+//! Every engine rank is one scoped OS thread (the rendezvous substrate
+//! in [`crate::comm`] blocks ranks on condvars, so rank bodies keep
+//! their natural blocking control flow), but at most `threads` of them
+//! are **runnable** at any instant: each rank holds an execution
+//! [`Gate`] permit while it computes, and every blocking point — a
+//! collective wait, a join admission, a parameter-server round trip —
+//! releases the permit for the wait's duration and reacquires it before
+//! resuming compute. The pool is therefore a cooperative scheduler:
+//! `threads = 1` is the true serial engine (one rank computes at a
+//! time, zero compute-side parallelism — the differential-testing
+//! baseline), `threads = T` steps up to T ranks concurrently, and
+//! `threads = 0` auto-detects the host's parallelism.
+//!
+//! ## Determinism contract
+//!
+//! The permit schedule decides only *when* a rank runs, never what it
+//! computes: all cross-rank merges resolve inside the rendezvous
+//! substrate in ascending rank order at round boundaries (virtual-time
+//! order), every per-rank random draw is keyed `(seed, rank, round)`,
+//! and shared-log aggregates sort by `(iteration, worker)` before
+//! summarizing. Run results are therefore **bit-identical** for every
+//! `threads` value — pinned by `prop_parallel_engine_bitwise_equals_serial`
+//! and the `benches/engine.rs` differential lane. See
+//! `docs/performance.md` for the full contract.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// The `[perf]` table of an experiment config: engine-core knobs that
+/// change wall-clock only, never results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Concurrently runnable ranks. `0` = auto-detect the host's
+    /// available parallelism; `1` = the serial reference engine.
+    pub threads: usize,
+    /// Element-chunk width the vectorized kernels block their loops at
+    /// (`0` = the built-in [`DEFAULT_PIN_CHUNK`]). Pinned independent of
+    /// `threads` so the dyadic-exact reduction order — and therefore
+    /// every golden fixture and FNV CRC — never moves. Must be a power
+    /// of two ≤ 4096.
+    pub pin_chunk: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        PerfConfig { threads: 0, pin_chunk: 0 }
+    }
+}
+
+impl PerfConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.pin_chunk != 0 && (!self.pin_chunk.is_power_of_two() || self.pin_chunk > 4096) {
+            bail!(
+                "perf.pin_chunk must be 0 (default) or a power of two <= 4096, got {}",
+                self.pin_chunk
+            );
+        }
+        Ok(())
+    }
+
+    /// The runnable-rank budget this config resolves to on this host.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
+/// `threads = 0` resolved against the host.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+}
+
+/// Default kernel chunk width (f32 elements): two 128-bit lanes, wide
+/// enough for the autovectorizer, small enough to stay in registers.
+pub const DEFAULT_PIN_CHUNK: usize = 8;
+
+static PIN_CHUNK: AtomicUsize = AtomicUsize::new(DEFAULT_PIN_CHUNK);
+
+/// Install the kernel chunk width for this process (`0` = default).
+/// Bit-neutral by construction — the chunk blocks elementwise loops
+/// only; reduction lane counts are pinned separately (see
+/// [`crate::tensor`]).
+pub fn set_pin_chunk(chunk: usize) {
+    let c = if chunk == 0 { DEFAULT_PIN_CHUNK } else { chunk };
+    PIN_CHUNK.store(c, Ordering::Relaxed);
+}
+
+/// The current kernel chunk width.
+pub fn pin_chunk() -> usize {
+    PIN_CHUNK.load(Ordering::Relaxed)
+}
+
+/// Serializes tests that set and then read back the process-global
+/// chunk width (results are bit-identical at every width, so only
+/// exact-readback assertions need this).
+#[cfg(test)]
+pub(crate) static PIN_CHUNK_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------
+// Gate: the counting permit that bounds runnable ranks
+// ---------------------------------------------------------------------
+
+struct GateState {
+    available: usize,
+}
+
+/// Counting execution permits. A rank holds one permit while computing;
+/// the rendezvous substrate releases it across every blocking wait (see
+/// [`crate::comm::PendingReduce::wait_outcome`]) so blocked ranks never
+/// occupy a runnable slot. [`Gate::unlimited`] is the zero-overhead
+/// pass-through used by every non-pooled caller (unit tests, raw
+/// [`crate::comm::Group`] users).
+pub struct Gate {
+    limit: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl Gate {
+    /// A gate admitting `limit` concurrently runnable ranks.
+    pub fn new(limit: usize) -> Arc<Gate> {
+        let limit = limit.max(1);
+        Arc::new(Gate {
+            limit,
+            state: Mutex::new(GateState { available: limit }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// The no-op gate: every acquire succeeds immediately.
+    pub fn unlimited() -> Arc<Gate> {
+        Arc::new(Gate {
+            limit: usize::MAX,
+            state: Mutex::new(GateState { available: usize::MAX }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Whether this gate actually bounds concurrency.
+    pub fn is_bounding(&self) -> bool {
+        self.limit != usize::MAX
+    }
+
+    /// The permit budget.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Block until a permit is free, then take it.
+    pub fn acquire(&self) {
+        if !self.is_bounding() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.available == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.available -= 1;
+    }
+
+    /// Return a permit. Callers must pair every release with a prior
+    /// acquire (the substrate's wait points and the pool's RAII guard
+    /// both do).
+    pub fn release(&self) {
+        if !self.is_bounding() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.available < self.limit, "gate release without matching acquire");
+        st.available += 1;
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Acquire a permit held for the returned guard's lifetime.
+    pub fn permit(self: &Arc<Gate>) -> Permit {
+        self.acquire();
+        Permit { gate: self.clone() }
+    }
+}
+
+/// RAII permit handle — a rank body holds one for its whole lifetime;
+/// the substrate's blocking waits release/reacquire underneath it.
+pub struct Permit {
+    gate: Arc<Gate>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.gate.release();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pool: scoped-thread rank spawning under one gate
+// ---------------------------------------------------------------------
+
+/// The engine worker pool: one scoped thread per rank, all gated by a
+/// shared [`Gate`] sized from [`PerfConfig::threads`].
+pub struct Pool {
+    gate: Arc<Gate>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Build from the run's `[perf]` table. Also installs the kernel
+    /// chunk width (process-global, bit-neutral).
+    pub fn from_config(perf: &PerfConfig) -> Pool {
+        set_pin_chunk(perf.pin_chunk);
+        let threads = perf.resolved_threads();
+        Pool { gate: Gate::new(threads), threads }
+    }
+
+    /// The resolved runnable-rank budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The gate rank bodies and the rendezvous substrate share.
+    pub fn gate(&self) -> Arc<Gate> {
+        self.gate.clone()
+    }
+
+    /// Run `body(rank)` for every rank on its own scoped thread, at
+    /// most [`Pool::threads`] runnable at once. Returns the bodies'
+    /// results in rank order. Blocking points inside `body` must route
+    /// through gate-aware primitives (the [`crate::comm`] waits and the
+    /// [`crate::ps`] client do) or the permit budget can deadlock the
+    /// scope — plain compute needs no care.
+    pub fn run<R, F>(&self, ranks: usize, body: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let gate = &self.gate;
+        let body = &body;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..ranks)
+                .map(|rank| {
+                    s.spawn(move || {
+                        let _permit = gate.permit();
+                        body(rank)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Profiler: per-phase wall-time histograms behind the "perf" run key
+// ---------------------------------------------------------------------
+
+/// Engine phases the profiler attributes wall time to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Local training steps (forward/backward + optimizer-side math).
+    Compute,
+    /// Window compression + wire assembly.
+    Encode,
+    /// Blocked on a rendezvous round (or a PS round trip).
+    CommWait,
+    /// Round decode + Eq. 9 distance.
+    Decode,
+    /// The fused Eq. 10–12 / momentum parameter update.
+    Update,
+    /// Validation passes.
+    Eval,
+}
+
+impl Phase {
+    /// Export order (fixed — the run JSON must be deterministic).
+    pub const ALL: [Phase; 6] =
+        [Phase::Compute, Phase::Encode, Phase::CommWait, Phase::Decode, Phase::Update, Phase::Eval];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Encode => "encode",
+            Phase::CommWait => "comm_wait",
+            Phase::Decode => "decode",
+            Phase::Update => "update",
+            Phase::Eval => "eval",
+        }
+    }
+
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Log₂ histogram buckets: bucket `i` holds durations in
+/// `[2^i, 2^(i+1))` µs; the last bucket is open-ended.
+pub const HIST_BUCKETS: usize = 20;
+
+#[derive(Debug, Clone)]
+struct PhaseAccum {
+    count: u64,
+    total_s: f64,
+    max_s: f64,
+    hist: [u64; HIST_BUCKETS],
+}
+
+impl PhaseAccum {
+    fn new() -> Self {
+        PhaseAccum { count: 0, total_s: 0.0, max_s: 0.0, hist: [0; HIST_BUCKETS] }
+    }
+
+    fn add(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        self.count += 1;
+        self.total_s += s;
+        self.max_s = self.max_s.max(s);
+        let us = d.as_micros() as u64;
+        let bucket = if us == 0 {
+            0
+        } else {
+            (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        };
+        self.hist[bucket] += 1;
+    }
+
+    fn merge(&mut self, other: &PhaseAccum) {
+        self.count += other.count;
+        self.total_s += other.total_s;
+        self.max_s = self.max_s.max(other.max_s);
+        for (a, b) in self.hist.iter_mut().zip(&other.hist) {
+            *a += b;
+        }
+    }
+
+    fn to_json(&self, phase: Phase) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("phase".to_string(), Json::Str(phase.name().into()));
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("total_s".into(), Json::Num(self.total_s));
+        m.insert(
+            "mean_s".into(),
+            Json::Num(if self.count > 0 { self.total_s / self.count as f64 } else { 0.0 }),
+        );
+        m.insert("max_s".into(), Json::Num(self.max_s));
+        // Trailing-zero-trimmed log₂(µs) histogram.
+        let last = self.hist.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0);
+        m.insert(
+            "hist_log2_us".into(),
+            Json::Arr(self.hist[..last].iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Per-rank phase clock: accumulates locally (no shared state on the
+/// hot path), merged into the shared [`Profiler`] once at rank exit.
+pub struct PhaseClock {
+    accum: Vec<PhaseAccum>,
+}
+
+impl Default for PhaseClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseClock {
+    pub fn new() -> Self {
+        PhaseClock { accum: Phase::ALL.iter().map(|_| PhaseAccum::new()).collect() }
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.accum[phase.index()].add(t0.elapsed());
+        r
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.accum[phase.index()].add(d);
+    }
+}
+
+/// A rank's [`PhaseClock`] bound to the run [`Profiler`]: merges its
+/// accumulators on drop, so every exit path of a rank body (normal
+/// completion, departure, a join that never fired) folds its time in.
+pub struct RankClock {
+    clock: PhaseClock,
+    profiler: Arc<Profiler>,
+}
+
+impl RankClock {
+    pub fn new(profiler: Arc<Profiler>) -> RankClock {
+        RankClock { clock: PhaseClock::new(), profiler }
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        self.clock.time(phase, f)
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.clock.add(phase, d);
+    }
+}
+
+impl Drop for RankClock {
+    fn drop(&mut self) {
+        self.profiler.merge(&self.clock);
+    }
+}
+
+/// Shared run profiler: rank clocks merge in at exit; the engine
+/// exports the merged histograms under the run JSON's `"perf"` key.
+/// Wall-clock payloads are inherently nondeterministic — consumers
+/// comparing runs for bit-identity must strip this block (see
+/// `RunReport::deterministic_json`).
+pub struct Profiler {
+    threads: usize,
+    pin_chunk: usize,
+    merged: Mutex<Vec<PhaseAccum>>,
+}
+
+impl Profiler {
+    pub fn new(threads: usize) -> Arc<Profiler> {
+        Arc::new(Profiler {
+            threads,
+            pin_chunk: pin_chunk(),
+            merged: Mutex::new(Phase::ALL.iter().map(|_| PhaseAccum::new()).collect()),
+        })
+    }
+
+    /// Fold one rank's clock into the run totals.
+    pub fn merge(&self, clock: &PhaseClock) {
+        let mut m = self.merged.lock().unwrap();
+        for (a, b) in m.iter_mut().zip(&clock.accum) {
+            a.merge(b);
+        }
+    }
+
+    /// The run JSON `"perf"` block.
+    pub fn to_json(&self) -> Json {
+        let m = self.merged.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        obj.insert("threads".to_string(), Json::Num(self.threads as f64));
+        obj.insert("pin_chunk".into(), Json::Num(self.pin_chunk as f64));
+        obj.insert(
+            "phases".into(),
+            Json::Arr(Phase::ALL.iter().map(|&p| m[p.index()].to_json(p)).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn perf_config_validation() {
+        PerfConfig::default().validate().unwrap();
+        PerfConfig { threads: 7, pin_chunk: 16 }.validate().unwrap();
+        assert!(PerfConfig { threads: 0, pin_chunk: 3 }.validate().is_err());
+        assert!(PerfConfig { threads: 0, pin_chunk: 8192 }.validate().is_err());
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn gate_bounds_concurrency() {
+        let gate = Gate::new(2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (gate, live, peak) = (gate.clone(), live.clone(), peak.clone());
+                s.spawn(move || {
+                    let _p = gate.permit();
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(2));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "gate admitted more than its limit");
+    }
+
+    #[test]
+    fn unlimited_gate_is_passthrough() {
+        let gate = Gate::unlimited();
+        assert!(!gate.is_bounding());
+        gate.acquire();
+        gate.release();
+        let _p = gate.permit();
+    }
+
+    #[test]
+    fn pool_runs_every_rank_and_orders_results() {
+        let _g = PIN_CHUNK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let pool = Pool::from_config(&PerfConfig { threads: 3, pin_chunk: 0 });
+        assert_eq!(pool.threads(), 3);
+        let out = pool.run(17, |rank| rank * 2);
+        assert_eq!(out, (0..17).map(|r| r * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_release_across_blocking_waits_prevents_deadlock() {
+        // More ranks than permits, every rank meeting at a rendezvous
+        // round: without the wait-side release this deadlocks (the
+        // permit holders would block on a round the parked ranks still
+        // have to post).
+        use crate::comm::{Group, NetModel};
+        let _g = PIN_CHUNK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let pool = Pool::from_config(&PerfConfig { threads: 2, pin_chunk: 0 });
+        let n = 8;
+        let group = Group::new(n, NetModel::instant());
+        group.set_gate(pool.gate());
+        let sums = pool.run(n, |rank| {
+            let mut c = group.comm(rank);
+            let (sum, _) = c.allreduce(&[rank as f32], 0.0);
+            sum[0]
+        });
+        let expect: f32 = (0..n).map(|r| r as f32).sum();
+        assert!(sums.iter().all(|&s| s == expect));
+    }
+
+    #[test]
+    fn profiler_merges_and_exports() {
+        let prof = Profiler::new(4);
+        let mut clock = PhaseClock::new();
+        clock.time(Phase::Compute, || std::thread::sleep(Duration::from_micros(100)));
+        clock.add(Phase::CommWait, Duration::from_millis(1));
+        prof.merge(&clock);
+        let j = prof.to_json();
+        assert_eq!(j.get("threads").unwrap().as_f64(), Some(4.0));
+        let phases = match j.get("phases").unwrap() {
+            Json::Arr(a) => a,
+            _ => panic!("phases must be an array"),
+        };
+        assert_eq!(phases.len(), Phase::ALL.len());
+        assert_eq!(phases[0].get("phase").unwrap().as_str(), Some("compute"));
+        assert_eq!(phases[0].get("count").unwrap().as_f64(), Some(1.0));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn pin_chunk_round_trips() {
+        let _g = PIN_CHUNK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_pin_chunk(16);
+        assert_eq!(pin_chunk(), 16);
+        set_pin_chunk(0);
+        assert_eq!(pin_chunk(), DEFAULT_PIN_CHUNK);
+    }
+}

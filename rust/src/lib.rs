@@ -46,6 +46,7 @@ pub mod config;
 pub mod control;
 pub mod data;
 pub mod dc;
+pub mod exec;
 pub mod hetero;
 pub mod metrics;
 pub mod model;
@@ -66,6 +67,7 @@ pub mod prelude {
     pub use crate::config::ExperimentConfig;
     pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;
+    pub use crate::exec::{PerfConfig, Pool};
     pub use crate::hetero::{HeteroConfig, HeteroProfile};
     pub use crate::metrics::Recorder;
     pub use crate::optim::{LrSchedule, MomentumSgd, Optimizer};

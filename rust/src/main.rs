@@ -43,6 +43,7 @@ USAGE:
                [--hetero-spot-fraction F] [--hetero-spot-mtbf S]
                [--hetero-spot-correlation C] [--hetero-diurnal-amplitude A]
                [--hetero-diurnal-period S] [--hetero-link-spread X]
+               [--threads T] [--pin-chunk C]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
@@ -65,6 +66,12 @@ Fault kinds:      kill | slow | delay (virtual-time chaos injection);
                   a kill with --fault-respawn false departs permanently
                   (the membership epoch shrinks); --join-* grows it, and
                   --join-warmup ramps the joiners' LR over W windows
+Engine:           --threads T bounds the concurrently runnable simulated
+                  ranks (0 = auto-detect, 1 = the serial reference
+                  engine); --pin-chunk C sets the vectorized kernels'
+                  chunk width (0 = default, power of two). Both are
+                  wall-clock knobs only: results are bit-identical for
+                  every setting — see docs/performance.md
 Heterogeneity:    --hetero turns on the heterogeneous fabric: per-rank
                   compute tiers (--hetero-tiers, drawn by weight), spot
                   cohorts that revoke mid-run (--hetero-spot-*; rank 0 is
@@ -260,6 +267,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.hetero.diurnal_period_s =
         args.get_f64("hetero-diurnal-period", cfg.hetero.diurnal_period_s)?;
     cfg.hetero.link_spread = args.get_f64("hetero-link-spread", cfg.hetero.link_spread)?;
+    // engine core: worker-pool thread budget + kernel chunk width
+    cfg.perf.threads = args.get_usize("threads", cfg.perf.threads)?;
+    cfg.perf.pin_chunk = args.get_usize("pin-chunk", cfg.perf.pin_chunk)?;
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }

@@ -71,19 +71,38 @@ impl Optimizer for MomentumSgd {
         assert_eq!(grad.len(), n);
         assert_eq!(w.len(), n);
         assert_eq!(delta_w.len(), n);
+        // Chunk-blocked, zipped subslice walks: bounds checks are elided
+        // and per-element order is width-independent (bit-identical for
+        // every [`crate::exec::pin_chunk`] setting).
+        let cw = crate::exec::pin_chunk();
+        let mu = self.mu;
         match &self.decay_mask {
             Some(m) => {
-                for i in 0..n {
-                    let vn = self.mu * self.v[i] + grad[i] + wd * m[i] * w[i];
-                    self.v[i] = vn;
-                    delta_w[i] = -eta * vn;
+                let mut lo = 0;
+                while lo < n {
+                    let hi = (lo + cw).min(n);
+                    let rd = grad[lo..hi].iter().zip(&w[lo..hi]).zip(&m[lo..hi]);
+                    let wr = self.v[lo..hi].iter_mut().zip(delta_w[lo..hi].iter_mut());
+                    for (((gi, wi), mi), (vi, oi)) in rd.zip(wr) {
+                        let vn = mu * *vi + gi + wd * mi * wi;
+                        *vi = vn;
+                        *oi = -eta * vn;
+                    }
+                    lo = hi;
                 }
             }
             None => {
-                for i in 0..n {
-                    let vn = self.mu * self.v[i] + grad[i] + wd * w[i];
-                    self.v[i] = vn;
-                    delta_w[i] = -eta * vn;
+                let mut lo = 0;
+                while lo < n {
+                    let hi = (lo + cw).min(n);
+                    let rd = grad[lo..hi].iter().zip(&w[lo..hi]);
+                    let wr = self.v[lo..hi].iter_mut().zip(delta_w[lo..hi].iter_mut());
+                    for ((gi, wi), (vi, oi)) in rd.zip(wr) {
+                        let vn = mu * *vi + gi + wd * wi;
+                        *vi = vn;
+                        *oi = -eta * vn;
+                    }
+                    lo = hi;
                 }
             }
         }

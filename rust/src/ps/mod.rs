@@ -29,10 +29,12 @@ pub mod sharded;
 pub use sharded::ShardedPs;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::comm::{AllReduceAlgo, NetModel};
 use crate::dc;
+use crate::exec::Gate;
 use crate::optim::Optimizer;
 
 /// Mode of the server's update rule.
@@ -81,9 +83,19 @@ pub struct PsClient {
     /// Concurrent cross-group crossings each remote transfer shares the
     /// PS group's tapered global links with (1 on flat fabrics).
     flows: usize,
+    /// Engine-pool execution gate (see [`crate::exec`]): the blocking
+    /// reply wait releases its runnable permit so a worker parked on
+    /// the PS never occupies a `--threads` slot. Unlimited by default.
+    gate: Arc<Gate>,
 }
 
 impl PsClient {
+    /// Plug the engine pool's execution [`Gate`] into this client's
+    /// blocking reply waits. The PS actor itself is service
+    /// infrastructure and stays ungated.
+    pub fn set_gate(&mut self, gate: Arc<Gate>) {
+        self.gate = gate;
+    }
     /// Push a gradient and (blocking) pull fresh weights — the ASGD
     /// round-trip. `now` is the worker's virtual time.
     ///
@@ -102,7 +114,11 @@ impl PsClient {
         self.tx
             .send(Msg::Push(PushMsg { worker, grad, sent_at: arrive, eta, wd, reply: reply_tx }))
             .expect("ps alive");
-        let mut reply = reply_rx.recv().expect("ps alive");
+        // Hand the runnable permit back while blocked on the server.
+        self.gate.release();
+        let recv = reply_rx.recv();
+        self.gate.acquire();
+        let mut reply = recv.expect("ps alive");
         // PS→worker transfer for the fresh weights.
         reply.done_at += ptp;
         reply
@@ -197,7 +213,13 @@ impl ParameterServer {
     }
 
     pub fn client(&self) -> PsClient {
-        PsClient { tx: self.tx.clone(), net: self.net, n_params: self.n_params, flows: self.flows }
+        PsClient {
+            tx: self.tx.clone(),
+            net: self.net,
+            n_params: self.n_params,
+            flows: self.flows,
+            gate: Gate::unlimited(),
+        }
     }
 
     /// Stop the server and return (final weights, update count).

@@ -2,15 +2,31 @@
 //!
 //! Everything the coordinator does to parameters (optimizer updates,
 //! delay compensation, reductions) operates on flat `&[f32]` buffers,
-//! mirroring the paper's KV-store view of the weights. The loops are
-//! written as straight slice iterations so LLVM auto-vectorizes them;
-//! the fused kernels exist so the hot path touches each element once
-//! (see EXPERIMENTS.md §Perf for the fused-vs-naive measurements).
+//! mirroring the paper's KV-store view of the weights. The elementwise
+//! kernels walk the buffers in exact-width chunks (the engine's
+//! [`crate::exec::pin_chunk`] hint) so LLVM sees fixed trip counts and
+//! bounds checks vanish from the inner loops; the fused kernels exist
+//! so the hot path touches each element once (see EXPERIMENTS.md §Perf
+//! for the fused-vs-naive measurements).
+//!
+//! **Determinism**: chunking here is purely elementwise blocking — no
+//! kernel changes its per-element evaluation order or introduces a
+//! width-dependent reduction tree, so every `pin_chunk` setting is
+//! bit-identical. Reductions (`dot`, `lambda_norms`, …) pin their own
+//! lane counts independently of the hint.
 
 /// `y += alpha * x` (BLAS axpy).
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let w = crate::exec::pin_chunk();
+    let mut yc = y.chunks_exact_mut(w);
+    let mut xc = x.chunks_exact(w);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for (yi, xi) in yb.iter_mut().zip(xb) {
+            *yi += alpha * xi;
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += alpha * xi;
     }
 }
@@ -18,7 +34,15 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// `y = alpha * x + beta * y`.
 pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let w = crate::exec::pin_chunk();
+    let mut yc = y.chunks_exact_mut(w);
+    let mut xc = x.chunks_exact(w);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        for (yi, xi) in yb.iter_mut().zip(xb) {
+            *yi = alpha * xi + beta * *yi;
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi = alpha * xi + beta * *yi;
     }
 }
@@ -26,14 +50,29 @@ pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
 /// Elementwise sum into `acc`.
 pub fn add_assign(acc: &mut [f32], x: &[f32]) {
     assert_eq!(acc.len(), x.len());
-    for (a, b) in acc.iter_mut().zip(x) {
+    let w = crate::exec::pin_chunk();
+    let mut ac = acc.chunks_exact_mut(w);
+    let mut xc = x.chunks_exact(w);
+    for (ab, xb) in (&mut ac).zip(&mut xc) {
+        for (a, b) in ab.iter_mut().zip(xb) {
+            *a += b;
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
         *a += b;
     }
 }
 
 /// Scale in place.
 pub fn scale(x: &mut [f32], alpha: f32) {
-    for v in x.iter_mut() {
+    let w = crate::exec::pin_chunk();
+    let mut xc = x.chunks_exact_mut(w);
+    for xb in &mut xc {
+        for v in xb.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in xc.into_remainder().iter_mut() {
         *v *= alpha;
     }
 }
@@ -188,5 +227,34 @@ mod tests {
     fn length_mismatch_panics() {
         let mut y = [0.0];
         axpy(1.0, &[1.0, 2.0], &mut y);
+    }
+
+    #[test]
+    fn kernels_bit_identical_across_pin_chunk_widths() {
+        // The determinism contract: pin_chunk is a layout hint, never a
+        // semantic knob. Includes a width larger than the buffer (whole
+        // vector lands in the remainder path).
+        let _g = crate::exec::PIN_CHUNK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = crate::util::Rng::new(7);
+        let mut x = vec![0.0f32; 517];
+        let mut y0 = vec![0.0f32; 517];
+        rng.fill_normal(&mut x);
+        rng.fill_normal(&mut y0);
+        let run = |w: usize| {
+            crate::exec::set_pin_chunk(w);
+            let mut y = y0.clone();
+            axpy(0.3, &x, &mut y);
+            axpby(0.7, &x, -0.2, &mut y);
+            add_assign(&mut y, &x);
+            scale(&mut y, 1.1);
+            crate::exec::set_pin_chunk(0);
+            y
+        };
+        let base = run(1);
+        for w in [2usize, 8, 64, 4096] {
+            let got = run(w);
+            let same = got.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "pin_chunk={w} diverged");
+        }
     }
 }

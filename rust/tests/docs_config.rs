@@ -70,6 +70,7 @@ fn config_reference_names_every_table() {
         "[[control.join]]",
         "[compress]",
         "[hetero]",
+        "[perf]",
     ] {
         assert!(text.contains(table), "docs/config.md lost the {table} section");
     }
@@ -84,6 +85,7 @@ fn config_reference_names_every_table() {
         "diurnal_amplitude",
         "link_spread",
         "tier_weights",
+        "pin_chunk",
     ] {
         assert!(text.contains(key), "docs/config.md lost the {key} key");
     }
@@ -91,6 +93,12 @@ fn config_reference_names_every_table() {
     let hetero = doc("heterogeneity.md");
     for name in ["dyn_ssp", "sgs", "k_min", "on-demand anchor"] {
         assert!(hetero.contains(name), "docs/heterogeneity.md lost {name:?}");
+    }
+    // the performance book page documents the engine-core knobs, its
+    // determinism contract, and the bench lane's env switches
+    let perf = doc("performance.md");
+    for name in ["--threads", "--pin-chunk", "bit-identical", "DCS3GD_BENCH_FAST", "DCS3GD_ENGINE_MIN_SPEEDUP"] {
+        assert!(perf.contains(name), "docs/performance.md lost {name:?}");
     }
 }
 
@@ -117,9 +125,18 @@ fn run_json_top_level_keys_match_docs() {
         );
     }
     // and the documented composite keys really exist in the export
-    for key in ["control", "comm", "compress", "epochs", "evals", "hetero"] {
+    for key in ["control", "comm", "compress", "epochs", "evals", "hetero", "perf"] {
         assert!(map.contains_key(key), "documented key {key:?} missing from the export");
     }
+    // the engine-core profile carries its per-phase histograms, and the
+    // deterministic view strips it together with wall_time_s
+    assert!(
+        json.get("perf").and_then(|p| p.get("phases")).is_some(),
+        "perf JSON lost its phase histograms"
+    );
+    let det = report.deterministic_json();
+    assert!(det.get("perf").is_none(), "deterministic JSON must strip \"perf\"");
+    assert!(det.get("wall_time_s").is_none(), "deterministic JSON must strip \"wall_time_s\"");
     // the probe summary must be nested under "comm"
     assert!(
         json.get("comm").and_then(|c| c.get("probe")).is_some(),

@@ -2,10 +2,15 @@
 //! randomized-case harness with seeded shrink-free generation — each
 //! failure prints its case seed for reproduction).
 
+use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::comm::{
     hier::hier_network, ring::ring_network, schedule::Hierarchical, AllReduceAlgo,
     CollectiveSchedule, Dragonfly, GlobalContention, Group, Link, NetModel, LEADER_RING_FLOWS,
 };
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::FaultPlan;
+use dcs3gd::hetero::HeteroConfig;
+use dcs3gd::simtime::ComputeModel;
 use dcs3gd::compress::{CompressConfig, CompressorKind, GradCompressor, Qsgd, TopK, WindowCodec};
 use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
 use dcs3gd::dc;
@@ -653,6 +658,115 @@ fn prop_sharding_partition() {
             // each index seen at most once per epoch
         }
         assert!(seen.iter().all(|&c| c <= 1), "case {case}: duplicate across shards");
+    }
+}
+
+/// Property (engine core): the `[perf]` worker pool moves wall-clock
+/// only. For any engine × schedule × compression × heterogeneity ×
+/// membership-churn draw, the same config run at `threads ∈ {1, 2, 8}`
+/// produces byte-identical deterministic run JSON (the metrics export
+/// minus the wall-clock `"perf"` / `"wall_time_s"` fields) and
+/// identical epoch param CRCs. The PS baselines are excluded by
+/// design: ASGD applies updates in *arrival* order — its
+/// nondeterminism is the phenomenon under study, not a pool artifact.
+#[test]
+fn prop_parallel_engine_bitwise_equals_serial() {
+    // Each case is three full runs — fewer, fatter cases than the
+    // kernel properties above.
+    const ENGINE_CASES: u64 = 8;
+    for case in 0..ENGINE_CASES {
+        let mut rng = Rng::keyed(0xE291, 14, case);
+        let algo = match rng.below(5) {
+            0 => Algo::Ssgd,
+            1 => Algo::S3gd,
+            2 => Algo::DcS3gd,
+            3 => Algo::DynSsp,
+            _ => Algo::Sgs,
+        };
+        let nodes = 2 + rng.below(4) as usize;
+        let steps = 6 + rng.below(7);
+        let local_batch = [4usize, 8][rng.below(2) as usize];
+        let net_algo = match rng.below(4) {
+            0 => AllReduceAlgo::Ring,
+            1 => AllReduceAlgo::Tree,
+            2 => AllReduceAlgo::Flat,
+            _ => AllReduceAlgo::Hierarchical(Dragonfly {
+                nodes_per_group: 1 + rng.below(3) as usize,
+                ..Dragonfly::default()
+            }),
+        };
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: net_algo };
+
+        let mut b = ExperimentConfig::builder("linear")
+            .name("prop_engine")
+            .algo(algo)
+            .nodes(nodes)
+            .local_batch(local_batch)
+            .steps(steps)
+            .seed(1000 + case)
+            .eta_single(0.05)
+            .base_batch(nodes * local_batch)
+            .data(512, 128, 0.5)
+            .eval_every(4, 2)
+            .compute(ComputeModel::uniform(1e-3))
+            .net(net);
+        // Compression (every decentralized engine supports it).
+        match rng.below(3) {
+            0 => {}
+            1 => b = b.compress_topk(rng.uniform_range(0.05, 0.5)),
+            _ => b = b.compress_qsgd([4u32, 8][rng.below(2) as usize]),
+        }
+        // Heterogeneity: tier spread + diurnal load + link spread. The
+        // profile is a seeded draw from the config — identical across
+        // the three runs by construction.
+        if rng.below(2) == 1 {
+            b = b.hetero(HeteroConfig {
+                enabled: true,
+                tiers: vec![1.0, 1.0 + rng.uniform()],
+                diurnal_amplitude: 0.2,
+                diurnal_period_s: 0.05,
+                link_spread: 0.2,
+                ..HeteroConfig::default()
+            });
+        }
+        // Membership churn rides the windowed engines: one mid-run
+        // departure, sometimes followed by a join of a fresh rank.
+        if algo.is_windowed() && nodes >= 3 && rng.below(2) == 1 {
+            let leaver = 1 + rng.below(nodes as u64 - 1) as usize;
+            let t_dep = rng.uniform_range(0.005, 0.03) as f64;
+            b = b.faults(FaultPlan::new().depart(leaver, t_dep));
+            if rng.below(2) == 1 {
+                b = b.join(nodes, t_dep + 0.02);
+            }
+        }
+        let cfg = b.build();
+
+        let runs: Vec<(String, Vec<u64>)> = [1usize, 2, 8]
+            .iter()
+            .map(|&threads| {
+                let mut c = cfg.clone();
+                c.perf.threads = threads;
+                let report = run_experiment(&c)
+                    .unwrap_or_else(|e| panic!("case {case} (threads {threads}): {e}"));
+                let json = report.deterministic_json().to_string();
+                let crcs: Vec<u64> =
+                    report.epochs.records().iter().map(|r| r.w_crc).collect();
+                (json, crcs)
+            })
+            .collect();
+        for (i, (json, crcs)) in runs.iter().enumerate().skip(1) {
+            let threads = [1usize, 2, 8][i];
+            assert_eq!(
+                json, &runs[0].0,
+                "case {case} ({}): run JSON at threads={threads} diverged from serial",
+                cfg.algo.name()
+            );
+            assert_eq!(
+                crcs, &runs[0].1,
+                "case {case} ({}): epoch param CRCs at threads={threads} diverged",
+                cfg.algo.name()
+            );
+        }
     }
 }
 
