@@ -8,7 +8,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use dcs3gd::algo::{run_experiment, Algo};
+use dcs3gd::algo::Algo;
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::simtime::ComputeModel;
 
@@ -17,8 +17,11 @@ fn main() -> anyhow::Result<()> {
     let have_artifacts = std::path::Path::new("artifacts/tiny_cnn_b32/meta.json").exists();
     let (variant, batch) = if have_artifacts { ("tiny_cnn_b32", 32) } else { ("linear", 32) };
     println!("backend: {variant}\n");
+    println!("DC-S3GD | 4 workers | global batch {} | 150 steps", 4 * batch);
 
-    let cfg = ExperimentConfig::builder(variant)
+    // `RunBuilder` is the one typed entry point: configure, then `.run()`
+    // straight to the report (no separate build + run_experiment step).
+    let report = ExperimentConfig::builder(variant)
         .name("quickstart")
         .algo(Algo::DcS3gd)
         .nodes(4)
@@ -29,17 +32,7 @@ fn main() -> anyhow::Result<()> {
         .data(4096, 512, 0.6)
         .compute(ComputeModel::uniform(2e-3))
         .eval_every(25, 4)
-        .build();
-
-    println!(
-        "DC-S3GD | {} workers | global batch {} | {} steps | λ0 = {}",
-        cfg.nodes,
-        cfg.global_batch(),
-        cfg.steps,
-        cfg.lam0
-    );
-
-    let report = run_experiment(&cfg)?;
+        .run()?;
 
     println!("\nper-epoch train error:");
     for (epoch, err) in report.recorder.epoch_train_err() {

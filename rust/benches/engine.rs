@@ -22,7 +22,7 @@
 
 use std::collections::BTreeMap;
 
-use dcs3gd::algo::{run_experiment, Algo, RunReport, WorkerHarness};
+use dcs3gd::algo::{engine_registry, run_experiment, Algo, RunReport, WorkerHarness};
 use dcs3gd::bench_util::write_bench_json;
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::exec::resolve_threads;
@@ -115,6 +115,26 @@ fn main() {
         rows.push(Json::Obj(row));
     }
 
+    // Engine rows from the registry: wall-clock throughput of every
+    // bench-table engine on the 64-rank geometry (parallel pool) —
+    // the same one list `benches/table1.rs` and `benches/hetero.rs`
+    // iterate.
+    println!("\n{:>8} {:>10} {:>12}", "engine", "wall", "steps/s");
+    let mut engine_rows: Vec<Json> = Vec::new();
+    for spec in engine_registry().iter().filter(|e| e.bench_row) {
+        let mut cfg = golden_cfg(64, steps, 0);
+        cfg.algo = spec.algo;
+        cfg.name = format!("engine_{}_n64", spec.name);
+        let (rep, _, _) = run_once(&cfg);
+        let steps_per_s = steps as f64 / rep.wall_time_s;
+        println!("{:>8} {:>9.3}s {steps_per_s:>12.1}", spec.name, rep.wall_time_s);
+        let mut row = BTreeMap::new();
+        row.insert("engine".to_string(), Json::Str(spec.name.to_string()));
+        row.insert("wall_s".into(), Json::Num(rep.wall_time_s));
+        row.insert("steps_per_s".into(), Json::Num(steps_per_s));
+        engine_rows.push(Json::Obj(row));
+    }
+
     if let Some(min) = min_speedup {
         assert!(
             speedup_at_64 >= min,
@@ -138,6 +158,7 @@ fn main() {
         min_speedup.map(Json::Num).unwrap_or(Json::Null),
     );
     section.insert("rows".into(), Json::Arr(rows));
+    section.insert("engines".into(), Json::Arr(engine_rows));
     let path = write_bench_json("engine", Json::Obj(section)).expect("bench json");
     println!("bench JSON -> {}", path.display());
 }

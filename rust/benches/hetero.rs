@@ -22,7 +22,7 @@
 
 use std::collections::BTreeMap;
 
-use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::algo::{engine_registry, run_experiment, Algo, RunReport};
 use dcs3gd::bench_util::{black_box, write_bench_json, Bencher};
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::hetero::{HeteroConfig, HeteroProfile};
@@ -145,11 +145,14 @@ fn main() {
     );
     println!("# spot revocations {:?}, diurnal ±20%, link spread 0.3", profile.revocations);
 
-    let engines: Vec<(Algo, RunReport)> = vec![
-        (Algo::DcS3gd, run_engine(Algo::DcS3gd, seed, steps)),
-        (Algo::DynSsp, run_engine(Algo::DynSsp, seed, steps)),
-        (Algo::Sgs, run_engine(Algo::Sgs, seed, steps)),
-    ];
+    // The bench-table rows come from the engine registry (fixed-k
+    // dcs3gd first, then the per-worker-bound engines) — one list for
+    // every staleness bench table.
+    let engines: Vec<(Algo, RunReport)> = engine_registry()
+        .iter()
+        .filter(|e| e.bench_row)
+        .map(|e| (e.algo, run_engine(e.algo, seed, steps)))
+        .collect();
     let timelines: Vec<Vec<(f64, f32)>> = engines.iter().map(|(_, r)| timeline(r)).collect();
     // A loss level every engine provably reaches: 2% above the worst
     // settled level, so time_to_loss is Some for every row.
@@ -181,8 +184,11 @@ fn main() {
         rows.push(Json::Obj(m));
         reach.push(t);
     }
-    let (t_fixed, t_dyn) = (reach[0], reach[1]);
-    let (fixed, dyn_ssp) = (&engines[0].1, &engines[1].1);
+    let idx = |name: &str| {
+        engines.iter().position(|(a, _)| a.name() == name).expect("registry bench row")
+    };
+    let (t_fixed, t_dyn) = (reach[idx("dcs3gd")], reach[idx("dyn_ssp")]);
+    let (fixed, dyn_ssp) = (&engines[idx("dcs3gd")].1, &engines[idx("dyn_ssp")].1);
 
     // Acceptance: the per-worker-bound controller beats fixed-k on
     // wall-clock to the shared target loss — fixed-k pays every window
@@ -199,7 +205,7 @@ fn main() {
         fixed.sim_time_s
     );
     // and nobody falls out of the fixed-k loss envelope
-    for (algo, r) in &engines[1..] {
+    for (algo, r) in engines.iter().filter(|(a, _)| a.name() != "dcs3gd") {
         assert!(
             r.final_train_loss < fixed.final_train_loss * 1.5 + 0.25,
             "{} fell out of the fixed-k loss envelope: {} vs {}",

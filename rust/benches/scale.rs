@@ -1,0 +1,227 @@
+//! Bench: the event-queue core at fleet scale — crossover tables to
+//! 1M ranks.
+//!
+//! The rendezvous substrate materializes a thread per rank and tops
+//! out near N ≈ 1024; this lane drives the cohort-folded event core
+//! (`comm::event::CohortSim`) through the same flat-vs-hierarchical
+//! and contention crossovers at N = 1k → 1M:
+//!
+//! * the **closed-form crossover table**: modelled t_AR for the flat
+//!   ring vs the hierarchical Layered-SGD schedule (dedicated and
+//!   taper-1 contended global optics) on `Dragonfly::for_nodes(N)`
+//!   geometries, ResNet-20 payload,
+//! * the **event-core tabulation**: a mixed-tier spot fleet with
+//!   scripted probes/quarantines/joins run through `CohortSim` at
+//!   every N — wall-clock per scenario is the acceptance number: the
+//!   three largest scales (65k, 262k, 1M) must tabulate in **under
+//!   60 s total**, and the folded arena must stay event-bounded
+//!   (materialized ranks ≪ N) at 1M,
+//! * the **differential spot-check**: folded vs `materialize_all`
+//!   traces bit-identical at N = 1024 (the full scenario matrix lives
+//!   in `tests/proptest_invariants.rs`).
+//!
+//! `DCS3GD_BENCH_FAST=1` shrinks the round counts only — the N grid is
+//! the point of this bench and never shrinks. JSON lands in
+//! `target/bench_results.json` under `"scale"`; CI uploads it as
+//! `BENCH_scale.json`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use dcs3gd::bench_util::write_bench_json;
+use dcs3gd::comm::event::{CohortSim, FleetEvent, FleetEventKind, ScaleScenario};
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::hetero::HeteroConfig;
+use dcs3gd::util::Json;
+
+/// ResNet-20 parameter count — the repo's canonical payload.
+const RESNET20: usize = 271_690;
+
+/// The fleet-scale N grid. Never shrunk by fast mode: tabulating the
+/// top three scales inside the wall-clock ceiling IS the acceptance.
+const GRID: [usize; 6] = [1024, 4096, 16_384, 65_536, 262_144, 1_048_576];
+
+/// Wall-clock ceiling (seconds) for the 65k + 262k + 1M event-core
+/// tabulations together — the ISSUE's "tabulates in seconds" gate.
+const CEILING_S: f64 = 60.0;
+
+/// The mixed-tier spot fleet every scale runs: three GPU generations,
+/// an N-independent expected spot cohort (so the materialized arena is
+/// event-bounded, not fleet-bounded), no diurnal (diurnal fleets run
+/// fully materialized by design — that regime belongs to the
+/// rendezvous substrate's scales).
+fn fleet(n_ranks: usize) -> HeteroConfig {
+    HeteroConfig {
+        enabled: true,
+        tiers: vec![1.0, 1.4, 2.2],
+        // ~96 expected spot ranks at every N (capped for the small end).
+        spot_fraction: (96.0 / n_ranks as f64).min(0.25),
+        spot_mtbf_s: 0.05,
+        spot_correlation: 0.3,
+        ..HeteroConfig::default()
+    }
+}
+
+fn scenario(n_ranks: usize, rounds: u64) -> ScaleScenario {
+    let fly = Dragonfly::for_nodes(n_ranks);
+    let net = NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..NetModel::default() };
+    let mut sc = ScaleScenario::uniform(n_ranks, RESNET20, 1e-3, net);
+    sc.rounds = rounds;
+    sc.hetero = fleet(n_ranks);
+    sc.seed = 11;
+    sc.events = vec![
+        FleetEvent { kind: FleetEventKind::Probe, rank: 1, at_s: 0.002 },
+        FleetEvent { kind: FleetEventKind::Quarantine, rank: 2, at_s: 0.004 },
+        FleetEvent { kind: FleetEventKind::Join, rank: n_ranks, at_s: 0.006 },
+        FleetEvent { kind: FleetEventKind::Probe, rank: n_ranks / 2, at_s: 0.008 },
+    ];
+    sc
+}
+
+fn main() {
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let rounds: u64 = if fast { 8 } else { 32 };
+    let net = NetModel::default();
+
+    // ----------------------------------------------------------------
+    // Closed-form crossover table: flat ring vs hierarchical, dedicated
+    // and contended global optics, to 1M ranks.
+    // ----------------------------------------------------------------
+    println!("# scale bench — crossovers and the event core at 1k → 1M ranks\n");
+    println!("# modelled flat-vs-hier crossover, {RESNET20} f32");
+    println!(
+        "{:>8} {:>6} {:>6} {:>12} {:>12} {:>8} {:>14} {:>8}",
+        "N", "G", "m", "t_ring", "t_hier", "speedup", "hier(taper=1)", "speedup"
+    );
+    let hier_at = |taper: usize, n: usize| {
+        let fly = Dragonfly { global_taper: taper, ..Dragonfly::for_nodes(n) };
+        NetModel { algo: AllReduceAlgo::Hierarchical(fly), ..net }.allreduce_time(RESNET20, n)
+    };
+    let ring_at =
+        |n: usize| NetModel { algo: AllReduceAlgo::Ring, ..net }.allreduce_time(RESNET20, n);
+    let mut crossover_rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for &n in &GRID {
+        let fly = Dragonfly::for_nodes(n);
+        let ring = ring_at(n);
+        let (ded, con) = (hier_at(2, n), hier_at(1, n));
+        println!(
+            "{n:>8} {:>6} {:>6} {ring:>12.3e} {ded:>12.3e} {:>7.2}x {con:>14.3e} {:>7.2}x",
+            fly.groups,
+            fly.nodes_per_group,
+            ring / ded,
+            ring / con,
+        );
+        speedups.push(ring / ded);
+        let mut row = BTreeMap::new();
+        row.insert("n_ranks".to_string(), Json::Num(n as f64));
+        row.insert("groups".into(), Json::Num(fly.groups as f64));
+        row.insert("nodes_per_group".into(), Json::Num(fly.nodes_per_group as f64));
+        row.insert("t_ring_s".into(), Json::Num(ring));
+        row.insert("t_hier_s".into(), Json::Num(ded));
+        row.insert("t_hier_taper1_s".into(), Json::Num(con));
+        row.insert("speedup".into(), Json::Num(ring / ded));
+        row.insert("speedup_taper1".into(), Json::Num(ring / con));
+        crossover_rows.push(Json::Obj(row));
+    }
+    // At fleet scale the flat ring's 2(N−1) latency terms are the whole
+    // story: the hierarchical schedule must win at every tabulated
+    // scale from 65k up, dedicated and contended alike, and the win
+    // must widen with N.
+    for (&n, w) in GRID.iter().zip(&speedups) {
+        if n >= 65_536 {
+            assert!(*w > 1.0, "hierarchical must beat ring at N={n}: {w:.2}x");
+            assert!(
+                hier_at(1, n) < ring_at(n),
+                "even taper-1 contended hier must beat ring at N={n}"
+            );
+        }
+    }
+    assert!(
+        speedups.last().unwrap() > speedups.first().unwrap(),
+        "the hierarchical win must widen from 1k to 1M ranks"
+    );
+
+    // ----------------------------------------------------------------
+    // The event core at every scale: wall-clock to tabulate the fleet.
+    // ----------------------------------------------------------------
+    println!("\n# event core: mixed-tier spot fleet, {rounds} rounds");
+    println!(
+        "{:>8} {:>8} {:>9} {:>8} {:>12} {:>10}",
+        "N", "cohorts", "arena", "contrib", "t_complete", "wall"
+    );
+    let mut core_rows: Vec<Json> = Vec::new();
+    let mut top3_wall_s = 0.0f64;
+    for &n in &GRID {
+        let start = Instant::now();
+        let mut sim = CohortSim::new(scenario(n, rounds));
+        let trace = sim.run();
+        let wall = start.elapsed().as_secs_f64();
+        if n >= 65_536 {
+            top3_wall_s += wall;
+        }
+        let last = trace.last().expect("rounds >= 1");
+        let arena_max = trace.iter().map(|s| s.materialized).max().unwrap();
+        println!(
+            "{n:>8} {:>8} {arena_max:>9} {:>8} {:>11.4}s {:>9.3}s",
+            sim.n_cohorts(),
+            last.contributors,
+            last.t_complete,
+            wall
+        );
+        // The fold criterion is the point: the arena is bounded by the
+        // event population (spot cohort + scripted events), never by N.
+        assert!(
+            arena_max <= 512,
+            "N={n}: materialized arena {arena_max} is not event-bounded"
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n_ranks".to_string(), Json::Num(n as f64));
+        row.insert("rounds".into(), Json::Num(rounds as f64));
+        row.insert("wall_s".into(), Json::Num(wall));
+        row.insert("arena_max".into(), Json::Num(arena_max as f64));
+        row.insert("contributors_final".into(), Json::Num(last.contributors as f64));
+        row.insert("t_complete_s".into(), Json::Num(last.t_complete));
+        core_rows.push(Json::Obj(row));
+    }
+    assert!(
+        top3_wall_s < CEILING_S,
+        "65k + 262k + 1M tabulations took {top3_wall_s:.1}s, ceiling {CEILING_S}s"
+    );
+    println!(
+        "\n(65k + 262k + 1M tabulated in {top3_wall_s:.2}s — ceiling {CEILING_S:.0}s; \
+         the rendezvous substrate tops out near N=1024)"
+    );
+
+    // ----------------------------------------------------------------
+    // Differential spot-check at the dense frontier.
+    // ----------------------------------------------------------------
+    let sc = scenario(1024, rounds);
+    let folded = CohortSim::new(sc.clone()).run();
+    let dense = CohortSim::materialize_all(sc).run();
+    assert_eq!(folded.len(), dense.len());
+    for (f, d) in folded.iter().zip(&dense) {
+        assert_eq!(f.round, d.round);
+        assert_eq!(f.contributors, d.contributors, "round {}", f.round);
+        assert!(
+            f.t_complete.to_bits() == d.t_complete.to_bits(),
+            "round {}: folded t_complete {} != dense {}",
+            f.round,
+            f.t_complete,
+            d.t_complete
+        );
+    }
+    println!("differential: folded == dense (bit-identical) over {} rounds at N=1024", rounds);
+
+    // Machine-readable export, merged into target/bench_results.json
+    // (CI uploads it as BENCH_scale.json).
+    let mut section = BTreeMap::new();
+    section.insert("payload_elems".to_string(), Json::Num(RESNET20 as f64));
+    section.insert("rounds".into(), Json::Num(rounds as f64));
+    section.insert("crossover".into(), Json::Arr(crossover_rows));
+    section.insert("event_core".into(), Json::Arr(core_rows));
+    section.insert("top3_wall_s".into(), Json::Num(top3_wall_s));
+    section.insert("ceiling_s".into(), Json::Num(CEILING_S));
+    let path = write_bench_json("scale", Json::Obj(section)).expect("bench json");
+    println!("bench JSON -> {}", path.display());
+}

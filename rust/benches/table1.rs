@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::algo::{engine_registry, run_experiment, Algo, RunReport};
 use dcs3gd::bench_util::write_bench_json;
 use dcs3gd::config::ExperimentConfig;
 use dcs3gd::simtime::ComputeModel;
@@ -118,7 +118,8 @@ fn main() -> anyhow::Result<()> {
     println!("\n# engine rows (r3 geometry: N={}, |B|={})", r3.nodes, r3.local_batch);
     println!("{:>8} {:>9} {:>11} {:>12}", "engine", "val", "img/s", "iter_time");
     let mut engine_rows: Vec<Json> = Vec::new();
-    for algo in [Algo::DcS3gd, Algo::DynSsp, Algo::Sgs] {
+    for spec in engine_registry().iter().filter(|e| e.bench_row) {
+        let algo = spec.algo;
         let rep = run_row_with(r3, steps, algo)?;
         println!(
             "{:>8} {:>8.1}% {:>11.0} {:>11.3e}s",

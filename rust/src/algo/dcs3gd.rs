@@ -101,8 +101,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algo::{Algo, RunReport, WorkerHarness};
-use crate::comm::{Group, JoinBootstrap, PendingReduce};
+use crate::algo::{Algo, RoundDriver, RunReport, WorkerHarness};
+use crate::comm::{JoinBootstrap, PendingReduce};
 use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{
@@ -110,7 +110,7 @@ use crate::control::{
     SgsStaleness, StalenessController, WindowObs,
 };
 use crate::dc::{self, DcHyper};
-use crate::exec::{Phase, Pool, Profiler, RankClock};
+use crate::exec::{Phase, RankClock};
 use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
@@ -168,15 +168,16 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let n = harness.n_params();
     let membership = harness.membership.clone();
     let capacity = membership.capacity();
-    let group = Group::elastic(capacity, cfg.nodes, cfg.net);
     // Engine core: rank bodies run on scoped threads but at most
     // `perf.threads` are runnable at once — each holds a pool permit
     // during compute and hands it back across every rendezvous wait
-    // (the gate plugged into the group below). `--threads 1` is the
-    // serial reference engine; results are bit-identical either way.
-    let pool = Pool::from_config(&cfg.perf);
-    group.set_gate(pool.gate());
-    let profiler = Profiler::new(pool.threads());
+    // (the gate the driver plugs into the group). `--threads 1` is the
+    // serial reference engine; results are bit-identical either way,
+    // as is the dense/folded rendezvous backend the driver binds.
+    let driver = RoundDriver::collective(cfg, capacity);
+    let group = driver.group();
+    let pool = &driver.pool;
+    let profiler = driver.profiler.clone();
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
 
@@ -286,6 +287,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     n_elems: n + slots,
                     n_ranks: world.len(),
                     compress: cfg.compress,
+                    flat_link_scale: cfg.flat_link_residual(),
                 };
 
                 // Gradient compression codec: per-rank error-feedback
@@ -677,6 +679,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 n_elems: n + slots,
                                 n_ranks: world.len(),
                                 compress: cfg.compress,
+                                flat_link_scale: cfg.flat_link_residual(),
                             };
                             // Residuals measure error against the old
                             // epoch's weights; the resync mean replaced

@@ -1,0 +1,185 @@
+//! Engine registry + [`RoundDriver`] facade — the one place where a
+//! run's algorithm name resolves to an executable engine and where the
+//! simulator backend ([`crate::comm::SimBackend`]) is selected.
+//!
+//! Before this module, the algo → engine mapping was a `match` in
+//! [`super::run_experiment`] and every bench table hand-rolled its own
+//! engine list; now both iterate [`engine_registry`]. Likewise each
+//! engine hand-rolled the `Group` + `Pool` + `Profiler` construction
+//! against raw comm calls; [`RoundDriver::collective`] /
+//! [`RoundDriver::centralized`] own that wiring, so backend selection
+//! (`[sim] backend = "dense" | "folded"`) never touches algorithm code.
+
+use anyhow::Result;
+
+use crate::algo::{dcs3gd, psasync, ssgd, Algo, RunReport, WorkerHarness};
+use crate::comm::{Group, SimBackend};
+use crate::config::ExperimentConfig;
+use crate::exec::{Pool, Profiler};
+
+/// A runnable training engine. Implemented by the registry's
+/// [`EngineSpec`] entries; benches and examples that want to iterate
+/// "every engine" or "every bench-table engine" go through
+/// [`engine_registry`] instead of naming variants.
+pub trait Engine {
+    /// Canonical engine name (matches [`Algo::name`]).
+    fn name(&self) -> &'static str;
+    /// The algorithm this engine executes.
+    fn algo(&self) -> Algo;
+    /// Execute a prepared run end to end.
+    fn run(&self, cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport>;
+}
+
+/// One registry row: engine name → factory data. The `run_fn` pointer
+/// is the engine body (three distinct bodies serve the seven names:
+/// the windowed family shares [`dcs3gd::run`], the PS family shares
+/// [`psasync::run`]).
+pub struct EngineSpec {
+    pub name: &'static str,
+    pub algo: Algo,
+    /// Appears as a row in the staleness bench tables
+    /// (`benches/table1.rs`, `benches/hetero.rs`, `benches/engine.rs`):
+    /// the windowed engines whose k policies the tables compare.
+    pub bench_row: bool,
+    run_fn: fn(&ExperimentConfig, WorkerHarness) -> Result<RunReport>,
+}
+
+impl Engine for EngineSpec {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn algo(&self) -> Algo {
+        self.algo
+    }
+    fn run(&self, cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
+        (self.run_fn)(cfg, harness)
+    }
+}
+
+/// The data-driven engine table — every [`Algo`] variant has exactly
+/// one row (pinned by a test below).
+static REGISTRY: [EngineSpec; 7] = [
+    EngineSpec { name: "ssgd", algo: Algo::Ssgd, bench_row: false, run_fn: ssgd::run },
+    EngineSpec { name: "s3gd", algo: Algo::S3gd, bench_row: false, run_fn: dcs3gd::run },
+    EngineSpec { name: "dcs3gd", algo: Algo::DcS3gd, bench_row: true, run_fn: dcs3gd::run },
+    EngineSpec { name: "asgd", algo: Algo::Asgd, bench_row: false, run_fn: psasync::run },
+    EngineSpec { name: "dcasgd", algo: Algo::DcAsgd, bench_row: false, run_fn: psasync::run },
+    EngineSpec { name: "dyn_ssp", algo: Algo::DynSsp, bench_row: true, run_fn: dcs3gd::run },
+    EngineSpec { name: "sgs", algo: Algo::Sgs, bench_row: true, run_fn: dcs3gd::run },
+];
+
+/// Every registered engine, in table order.
+pub fn engine_registry() -> &'static [EngineSpec] {
+    &REGISTRY
+}
+
+/// The registry row for an algorithm (total: every variant has one).
+pub fn engine_for(algo: Algo) -> &'static EngineSpec {
+    REGISTRY
+        .iter()
+        .find(|e| e.algo == algo)
+        .expect("every Algo variant has a registry row")
+}
+
+/// Shared run-substrate facade: the rendezvous group (on the config's
+/// simulator backend), the worker pool, and the profiler, wired
+/// together the one correct way (gate plugged in before any traffic).
+/// Collective engines get a [`Group`]; the parameter-server family
+/// runs group-less but shares the pool/profiler wiring.
+pub struct RoundDriver {
+    group: Option<Group>,
+    /// Engine worker pool: at most `perf.threads` ranks runnable at
+    /// once; rank bodies hold a permit during compute and hand it back
+    /// across rendezvous waits.
+    pub pool: Pool,
+    /// Wall-clock phase profiler, cloned into each rank body.
+    pub profiler: std::sync::Arc<Profiler>,
+}
+
+impl RoundDriver {
+    /// Driver for the all-reduce engines: an elastic group of
+    /// `capacity` slots (`cfg.nodes` initial members) on the backend
+    /// `cfg.sim.backend` selects, with the pool gate already plugged
+    /// into the group's blocking waits.
+    pub fn collective(cfg: &ExperimentConfig, capacity: usize) -> RoundDriver {
+        let group = Group::with_backend(capacity, cfg.nodes, cfg.net, cfg.sim.backend);
+        let pool = Pool::from_config(&cfg.perf);
+        group.set_gate(pool.gate());
+        let profiler = Profiler::new(pool.threads());
+        RoundDriver { group: Some(group), pool, profiler }
+    }
+
+    /// Driver for the parameter-server engines: pool + profiler only
+    /// (the PS actor is service infrastructure, not a rank, and stays
+    /// ungated).
+    pub fn centralized(cfg: &ExperimentConfig) -> RoundDriver {
+        let pool = Pool::from_config(&cfg.perf);
+        let profiler = Profiler::new(pool.threads());
+        RoundDriver { group: None, pool, profiler }
+    }
+
+    /// The rendezvous group. Panics on a [`RoundDriver::centralized`]
+    /// driver — the PS engines have no collective substrate.
+    pub fn group(&self) -> &Group {
+        self.group.as_ref().expect("centralized driver has no rendezvous group")
+    }
+
+    /// The backend the group resolves rounds on (dense for
+    /// centralized drivers, which have no rounds to resolve).
+    pub fn backend(&self) -> SimBackend {
+        self.group.as_ref().map_or(SimBackend::Dense, |g| g.backend())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_algo_exactly_once() {
+        let all = [
+            Algo::Ssgd,
+            Algo::S3gd,
+            Algo::DcS3gd,
+            Algo::Asgd,
+            Algo::DcAsgd,
+            Algo::DynSsp,
+            Algo::Sgs,
+        ];
+        assert_eq!(engine_registry().len(), all.len());
+        for algo in all {
+            let spec = engine_for(algo);
+            assert_eq!(spec.algo, algo);
+            assert_eq!(spec.name, algo.name(), "registry name matches Algo::name");
+        }
+    }
+
+    #[test]
+    fn bench_rows_are_the_windowed_k_policy_engines() {
+        let rows: Vec<&str> =
+            engine_registry().iter().filter(|e| e.bench_row).map(|e| e.name).collect();
+        assert_eq!(rows, vec!["dcs3gd", "dyn_ssp", "sgs"]);
+    }
+
+    #[test]
+    fn collective_driver_binds_the_configured_backend() {
+        let mut cfg = ExperimentConfig::builder("linear").nodes(4).build();
+        cfg.sim.backend = SimBackend::Folded;
+        let driver = RoundDriver::collective(&cfg, cfg.nodes);
+        assert_eq!(driver.backend(), SimBackend::Folded);
+        assert_eq!(driver.group().backend(), SimBackend::Folded);
+        let dense = RoundDriver::collective(
+            &ExperimentConfig::builder("linear").nodes(4).build(),
+            4,
+        );
+        assert_eq!(dense.backend(), SimBackend::Dense);
+    }
+
+    #[test]
+    fn centralized_driver_has_no_group() {
+        let cfg = ExperimentConfig::builder("linear").nodes(2).build();
+        let driver = RoundDriver::centralized(&cfg);
+        assert_eq!(driver.backend(), SimBackend::Dense);
+        assert!(driver.group.is_none());
+    }
+}

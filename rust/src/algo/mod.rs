@@ -16,10 +16,12 @@
 //! pure-rust linear model (tests).
 
 pub mod dcs3gd;
+pub mod engine;
 pub mod psasync;
 pub mod ssgd;
 mod worker;
 
+pub use engine::{engine_for, engine_registry, Engine, EngineSpec, RoundDriver};
 pub use worker::{RunReport, WorkerHarness};
 
 use anyhow::{bail, Result};
@@ -90,8 +92,8 @@ impl Algo {
     }
 }
 
-/// Run one experiment end to end per its config; dispatches to the
-/// right engine and returns the aggregated report.
+/// Run one experiment end to end per its config; resolves the engine
+/// through the [`engine_registry`] and returns the aggregated report.
 pub fn run_experiment(cfg: &crate::config::ExperimentConfig) -> Result<RunReport> {
     // Resolve the heterogeneity profile into the base models once, up
     // front, so every engine (and the schedule pricing inside the
@@ -103,11 +105,7 @@ pub fn run_experiment(cfg: &crate::config::ExperimentConfig) -> Result<RunReport
     };
     let cfg = cfg.as_ref();
     let harness = WorkerHarness::prepare(cfg)?;
-    match cfg.algo {
-        Algo::Ssgd => ssgd::run(cfg, harness),
-        Algo::S3gd | Algo::DcS3gd | Algo::DynSsp | Algo::Sgs => dcs3gd::run(cfg, harness),
-        Algo::Asgd | Algo::DcAsgd => psasync::run(cfg, harness),
-    }
+    engine_for(cfg.algo).run(cfg, harness)
 }
 
 #[cfg(test)]

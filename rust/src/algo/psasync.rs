@@ -31,9 +31,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algo::{Algo, RunReport, WorkerHarness};
+use crate::algo::{Algo, RoundDriver, RunReport, WorkerHarness};
 use crate::config::ExperimentConfig;
-use crate::exec::{Phase, Pool, Profiler, RankClock};
+use crate::exec::{Phase, RankClock};
 use crate::optim::build_optimizer;
 use crate::ps::{ParameterServer, PsMode};
 
@@ -42,8 +42,9 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     // Engine pool: worker ranks share `perf.threads` permits; the PS
     // actor itself stays ungated (it is service infrastructure, not a
     // rank) and each client hands its permit back across push_pull.
-    let pool = Pool::from_config(&cfg.perf);
-    let profiler = Profiler::new(pool.threads());
+    let driver = RoundDriver::centralized(cfg);
+    let pool = &driver.pool;
+    let profiler = driver.profiler.clone();
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
 

@@ -34,24 +34,24 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::algo::dcs3gd::ctrl_slots;
-use crate::algo::{RunReport, WorkerHarness};
-use crate::comm::Group;
+use crate::algo::{RoundDriver, RunReport, WorkerHarness};
 use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
 use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
-use crate::exec::{Phase, Pool, Profiler, RankClock};
+use crate::exec::{Phase, RankClock};
 use crate::model::Checkpoint;
 use crate::optim::build_optimizer;
 use crate::tensor;
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let n = harness.n_params();
-    let group = Group::new(cfg.nodes, cfg.net);
     // Engine pool: at most `perf.threads` ranks runnable at once; the
     // gate hands permits back across the blocking all-reduce waits.
-    let pool = Pool::from_config(&cfg.perf);
-    group.set_gate(pool.gate());
-    let profiler = Profiler::new(pool.threads());
+    // SSGD runs with pinned membership, so capacity == nodes.
+    let driver = RoundDriver::collective(cfg, cfg.nodes);
+    let group = driver.group();
+    let pool = &driver.pool;
+    let profiler = driver.profiler.clone();
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
     let env = ScheduleEnv {
@@ -60,6 +60,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         n_elems: n + ctrl_slots(cfg.nodes),
         n_ranks: cfg.nodes,
         compress: cfg.compress,
+        flat_link_scale: cfg.flat_link_residual(),
     };
 
     std::thread::scope(|scope| -> Result<()> {

@@ -67,6 +67,7 @@
 //! the full world.
 
 pub mod collectives;
+pub mod event;
 pub mod hier;
 pub mod ring;
 pub mod schedule;
@@ -75,7 +76,7 @@ pub mod topology;
 pub use schedule::{CollectiveSchedule, Link, PhaseTimes, LEADER_RING_FLOWS};
 pub use topology::{Dragonfly, GlobalContention};
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::exec::Gate;
@@ -221,6 +222,54 @@ impl NetModel {
 // Rendezvous collectives
 // ---------------------------------------------------------------------------
 
+/// Which round-resolution backend a [`Group`] runs on.
+///
+/// Both backends produce **bit-identical** payloads, contributor sets,
+/// and completion times — they differ only in how per-round state is
+/// represented and how completion is detected:
+///
+/// * [`SimBackend::Dense`] materializes a capacity-wide slot vector per
+///   round and decides completion by scanning the roster — the PR 7
+///   behaviour, O(capacity) per post.
+/// * [`SimBackend::Folded`] keeps a poster-only arena (sorted by rank)
+///   and resolves completion from the group's **contributor-set
+///   deltas**: the expected contributor count of round `seq` is the
+///   prefix sum of admit/depart deltas up to `seq`, so a post or a
+///   departure re-checks completion in O(log capacity) — the event-core
+///   representation that scales the rendezvous substrate past the
+///   all-materialized regime.
+///
+/// The seal path is shared: contributions are drained in ascending rank
+/// order into the identical tiled reduction, so the dyadic float sum —
+/// and therefore every downstream metric — is byte-equal across
+/// backends (differential-tested by `prop_folded_backend_equals_dense`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimBackend {
+    /// Capacity-wide materialized rounds (roster-scan completion).
+    #[default]
+    Dense,
+    /// Poster-only arenas + contributor-delta completion counts.
+    Folded,
+}
+
+impl SimBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimBackend::Dense => "dense",
+            SimBackend::Folded => "folded",
+        }
+    }
+
+    /// Parse a config spelling. Accepts `dense` and `folded`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Some(SimBackend::Dense),
+            "folded" => Some(SimBackend::Folded),
+            _ => None,
+        }
+    }
+}
+
 /// What a rendezvous round computes (and which schedule entry costs it).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub(crate) enum RoundKind {
@@ -276,12 +325,77 @@ struct RoundResult {
     contributors: Arc<Vec<usize>>,
 }
 
+/// Per-round contribution storage — the backend split.
+///
+/// Whatever the representation, contributions drain in **ascending rank
+/// order** through [`RoundParts::take_contributions`], so the reduction
+/// downstream is bit-deterministic regardless of arrival order (float
+/// addition is not associative) and identical across backends.
+enum RoundParts {
+    /// Capacity-wide slot per rank (dense backend).
+    Dense(Vec<Option<Vec<f32>>>),
+    /// Poster-only arena, kept sorted by rank (folded backend).
+    Folded(Vec<(usize, Vec<f32>)>),
+}
+
+impl RoundParts {
+    fn new(backend: SimBackend, capacity: usize) -> Self {
+        match backend {
+            SimBackend::Dense => RoundParts::Dense((0..capacity).map(|_| None).collect()),
+            SimBackend::Folded => RoundParts::Folded(Vec::new()),
+        }
+    }
+
+    /// Record `rank`'s contribution. Panics on a double post.
+    fn insert(&mut self, rank: usize, data: Vec<f32>, seq: u64) {
+        match self {
+            RoundParts::Dense(slots) => {
+                assert!(slots[rank].is_none(), "rank {rank} double-posted round {seq}");
+                slots[rank] = Some(data);
+            }
+            RoundParts::Folded(arena) => match arena.binary_search_by_key(&rank, |(r, _)| *r) {
+                Ok(_) => panic!("rank {rank} double-posted round {seq}"),
+                Err(pos) => arena.insert(pos, (rank, data)),
+            },
+        }
+    }
+
+    fn has(&self, rank: usize) -> bool {
+        match self {
+            RoundParts::Dense(slots) => slots[rank].is_some(),
+            RoundParts::Folded(arena) => {
+                arena.binary_search_by_key(&rank, |(r, _)| *r).is_ok()
+            }
+        }
+    }
+
+    fn posted_count(&self) -> usize {
+        match self {
+            RoundParts::Dense(slots) => slots.iter().filter(|p| p.is_some()).count(),
+            RoundParts::Folded(arena) => arena.len(),
+        }
+    }
+
+    /// Drain every contribution, ascending by rank — the single seal
+    /// entry point both backends share.
+    fn take_contributions(&mut self) -> Vec<(usize, Vec<f32>)> {
+        match self {
+            RoundParts::Dense(slots) => slots
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(r, p)| p.take().map(|d| (r, d)))
+                .collect(),
+            RoundParts::Folded(arena) => std::mem::take(arena),
+        }
+    }
+}
+
 struct Round {
-    /// Per-rank contributions (capacity-wide), reduced in rank order on
-    /// completion so the result is bit-deterministic regardless of
-    /// thread arrival order (float addition is not associative) — and
-    /// bit-identical across schedules, which only decide the cost.
-    parts: Vec<Option<Vec<f32>>>,
+    /// Per-rank contributions, reduced in rank order on completion so
+    /// the result is bit-deterministic regardless of thread arrival
+    /// order — and bit-identical across schedules *and backends*, which
+    /// only decide cost and representation respectively.
+    parts: RoundParts,
     max_post_time: f64,
     kind: RoundKind,
     /// Schedule costing this round (first poster's choice; the
@@ -298,9 +412,33 @@ struct Round {
     consumed: usize,
 }
 
-/// Is every rank the roster expects for `seq` posted into `round`?
-fn round_complete(roster: &[Member], round: &Round, seq: u64) -> bool {
-    roster.iter().enumerate().all(|(r, m)| !m.expects(seq) || round.parts[r].is_some())
+/// Is every rank expected for `seq` posted into `round`?
+///
+/// Dense: scan the roster against the materialized slots. Folded:
+/// compare the posted count against the contributor-set delta prefix
+/// sum — only expected ranks ever post (debug-asserted at the post
+/// site), so count equality is membership equality.
+fn round_ready(
+    backend: SimBackend,
+    roster: &[Member],
+    deltas: &BTreeMap<u64, i64>,
+    round: &Round,
+    seq: u64,
+) -> bool {
+    match backend {
+        SimBackend::Dense => {
+            roster.iter().enumerate().all(|(r, m)| !m.expects(seq) || round.parts.has(r))
+        }
+        SimBackend::Folded => {
+            let expected: i64 = deltas.range(..=seq).map(|(_, d)| *d).sum();
+            let posted = round.parts.posted_count() as i64;
+            debug_assert!(
+                posted <= expected,
+                "round {seq}: {posted} posts exceed the {expected} expected contributors"
+            );
+            posted >= expected
+        }
+    }
 }
 
 impl Round {
@@ -309,20 +447,16 @@ impl Round {
     /// the collective at the contributor count — a round that resolved
     /// over survivors ran over survivors.
     fn finish(&mut self, net: &NetModel, seq: u64) -> (Vec<f32>, PhaseTimes, Vec<usize>) {
-        let contributors: Vec<usize> =
-            (0..self.parts.len()).filter(|&r| self.parts[r].is_some()).collect();
-        assert!(!contributors.is_empty(), "round {seq} completed with no contributors");
+        let parts = self.parts.take_contributions();
+        assert!(!parts.is_empty(), "round {seq} completed with no contributors");
+        let contributors: Vec<usize> = parts.iter().map(|(r, _)| *r).collect();
         let n_ranks = contributors.len();
         let sched_net = NetModel { algo: self.algo, ..*net };
         let (payload, phases) = match self.kind {
             RoundKind::AllReduce | RoundKind::ReduceScatter => {
-                let len = self.parts[contributors[0]].as_ref().expect("contributor").len();
+                let len = parts[0].1.len();
                 let mut sum = vec![0.0f32; len];
-                let parts: Vec<Vec<f32>> = contributors
-                    .iter()
-                    .map(|&r| self.parts[r].take().expect("contributor posted"))
-                    .collect();
-                for part in &parts {
+                for (_, part) in &parts {
                     assert_eq!(
                         part.len(),
                         sum.len(),
@@ -333,13 +467,13 @@ impl Round {
                 // stays in cache across all contributors. Per element
                 // the additions still land in ascending contributor
                 // order, so the dyadic result is bit-identical to the
-                // untiled loop.
+                // untiled loop — and to either backend's storage.
                 const SEAL_TILE: usize = 1024;
                 let mut start = 0;
                 while start < len {
                     let end = (start + SEAL_TILE).min(len);
                     let dst = &mut sum[start..end];
-                    for part in &parts {
+                    for (_, part) in &parts {
                         for (a, x) in dst.iter_mut().zip(&part[start..end]) {
                             *a += x;
                         }
@@ -355,22 +489,22 @@ impl Round {
                 (sum, phases)
             }
             RoundKind::AllGather => {
-                let per = self.parts[contributors[0]].as_ref().expect("contributor").len();
+                let per = parts[0].1.len();
                 let mut out = Vec::with_capacity(per * n_ranks);
-                for &r in &contributors {
-                    let part = self.parts[r].take().expect("contributor posted");
+                for (_, part) in &parts {
                     assert_eq!(part.len(), per, "mismatched all-gather lengths in round {seq}");
-                    out.extend_from_slice(&part);
+                    out.extend_from_slice(part);
                 }
                 let wire = self.wire_elems.unwrap_or(per);
                 let phases = sched_net.schedule().allgather_phases(wire, n_ranks);
                 (out, phases)
             }
             RoundKind::Broadcast { root } => {
-                let payload = self.parts[root].take().expect("root posted");
-                for p in self.parts.iter_mut() {
-                    p.take();
-                }
+                let payload = parts
+                    .into_iter()
+                    .find(|(r, _)| *r == root)
+                    .map(|(_, d)| d)
+                    .expect("root posted");
                 let phases = sched_net.schedule().bcast_phases(payload.len(), n_ranks);
                 (payload, phases)
             }
@@ -419,6 +553,14 @@ struct State {
     rounds: HashMap<u64, Round>,
     epoch: u64,
     roster: Vec<Member>,
+    /// Contributor-set deltas in round-sequence space: `+k` at every
+    /// admit sequence, `−1` at every depart sequence. The expected
+    /// contributor count of round `seq` is the prefix sum through
+    /// `seq` — the pure-function-of-seq membership contract, kept in
+    /// O(events) instead of O(capacity). Maintained under both backends
+    /// (it is cheap); the folded backend resolves round completion from
+    /// it alone.
+    deltas: BTreeMap<u64, i64>,
     /// The member list **pinned at the epoch's first
     /// [`Comm::advance_epoch`] application** — the list every member of
     /// the epoch must agree on. The live roster can already have lost a
@@ -447,6 +589,7 @@ impl State {
 struct Shared {
     capacity: usize,
     net: NetModel,
+    backend: SimBackend,
     state: Mutex<State>,
     cv: Condvar,
     /// Execution gate shared with the engine worker pool (see
@@ -482,6 +625,18 @@ impl Group {
     /// ranks `initial..capacity` are reserved slots for scripted
     /// joiners (inactive until [`Comm::advance_epoch`] admits them).
     pub fn elastic(capacity: usize, initial: usize, net: NetModel) -> Self {
+        Self::with_backend(capacity, initial, net, SimBackend::default())
+    }
+
+    /// [`Group::elastic`] on an explicit round-resolution backend —
+    /// the knob `[sim] backend` in the experiment config plumbs here.
+    /// Both backends are bit-identical (see [`SimBackend`]).
+    pub fn with_backend(
+        capacity: usize,
+        initial: usize,
+        net: NetModel,
+        backend: SimBackend,
+    ) -> Self {
         assert!(initial >= 1 && capacity >= initial);
         let roster = (0..capacity)
             .map(|r| Member {
@@ -490,14 +645,18 @@ impl Group {
                 joined_epoch: 0,
             })
             .collect();
+        let mut deltas = BTreeMap::new();
+        deltas.insert(0u64, initial as i64);
         Group {
             shared: Arc::new(Shared {
                 capacity,
                 net,
+                backend,
                 state: Mutex::new(State {
                     rounds: HashMap::new(),
                     epoch: 0,
                     roster,
+                    deltas,
                     epoch_members: (0..initial).collect(),
                     bootstrap: None,
                     closed: false,
@@ -506,6 +665,11 @@ impl Group {
                 gate: Mutex::new(Gate::unlimited()),
             }),
         }
+    }
+
+    /// Which round-resolution backend this group runs on.
+    pub fn backend(&self) -> SimBackend {
+        self.shared.backend
     }
 
     /// Plug the engine pool's execution [`Gate`] into this group's
@@ -677,15 +841,16 @@ impl Comm {
         let seq = self.next_seq;
         self.next_seq += 1;
         let capacity = self.shared.capacity;
+        let backend = self.shared.backend;
         let mut guard = self.shared.state.lock().unwrap();
-        let State { rounds, roster, .. } = &mut *guard;
+        let State { rounds, roster, deltas, .. } = &mut *guard;
         debug_assert!(
             roster[self.rank].expects(seq),
             "rank {} posting round {seq} outside its membership interval",
             self.rank
         );
         let round = rounds.entry(seq).or_insert_with(|| Round {
-            parts: (0..capacity).map(|_| None).collect(),
+            parts: RoundParts::new(backend, capacity),
             max_post_time: f64::NEG_INFINITY,
             kind,
             algo,
@@ -704,10 +869,9 @@ impl Comm {
             algo,
             wire_elems
         );
-        assert!(round.parts[self.rank].is_none(), "rank {} double-posted round {seq}", self.rank);
-        round.parts[self.rank] = Some(data.to_vec());
+        round.parts.insert(self.rank, data.to_vec(), seq);
         round.max_post_time = round.max_post_time.max(now);
-        if round.result.is_none() && round_complete(roster, round, seq) {
+        if round.result.is_none() && round_ready(backend, roster, deltas, round, seq) {
             round.seal(&self.shared.net, seq);
             self.shared.cv.notify_all();
         }
@@ -726,14 +890,16 @@ impl Comm {
     /// survivors (re-weighted at the consumer — see [`RoundOutcome`]).
     /// Idempotent.
     pub fn leave(&mut self) {
+        let backend = self.shared.backend;
         let mut guard = self.shared.state.lock().unwrap();
-        let State { rounds, roster, .. } = &mut *guard;
+        let State { rounds, roster, deltas, .. } = &mut *guard;
         if roster[self.rank].depart_seq.is_some() {
             return;
         }
         roster[self.rank].depart_seq = Some(self.next_seq);
+        *deltas.entry(self.next_seq).or_insert(0) -= 1;
         for (&seq, round) in rounds.iter_mut() {
-            if round.result.is_none() && round_complete(roster, round, seq) {
+            if round.result.is_none() && round_ready(backend, roster, deltas, round, seq) {
                 round.seal(&self.shared.net, seq);
             }
         }
@@ -759,6 +925,9 @@ impl Comm {
                 assert!(m.admit_seq == u64::MAX, "join rank {j} already admitted");
                 m.admit_seq = admit;
                 m.joined_epoch = to_epoch;
+            }
+            if !joiners.is_empty() {
+                *st.deltas.entry(admit).or_insert(0) += joiners.len() as i64;
             }
             st.epoch_members = st.members();
             self.shared.cv.notify_all();
@@ -1367,5 +1536,145 @@ mod tests {
         assert_eq!(group.n_ranks(), 4);
         assert_eq!(group.members(), vec![0, 1, 2, 3]);
         assert_eq!(group.epoch(), 0);
+    }
+
+    // --- folded backend parity ---
+
+    fn spawn_ranks_backend<F, R>(n: usize, net: NetModel, backend: SimBackend, f: F) -> Vec<R>
+    where
+        F: Fn(Comm) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let group = Group::with_backend(n, n, net, backend);
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let comm = group.comm(r);
+                let f = f.clone();
+                thread::spawn(move || f(comm))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn folded_backend_is_bit_identical_to_dense() {
+        // Same multi-round workload on both backends: payloads and
+        // completion times must be byte-equal — the seal path drains
+        // contributions in the same ascending order either way.
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: AllReduceAlgo::Ring };
+        let run = |backend| {
+            spawn_ranks_backend(4, net, backend, |mut c| {
+                let mut out = Vec::new();
+                for round in 0..4 {
+                    let mine: Vec<f32> = (0..300)
+                        .map(|i| (i as f32 + 0.13) * 0.37 + (c.rank() * 31 + round) as f32)
+                        .collect();
+                    let (sum, t) = c.allreduce(&mine, round as f64 * 0.5);
+                    out.push((sum.as_ref().clone(), t));
+                }
+                out
+            })
+        };
+        let dense = run(SimBackend::Dense);
+        let folded = run(SimBackend::Folded);
+        assert_eq!(dense.len(), folded.len());
+        for (d, f) in dense.iter().zip(&folded) {
+            for ((ds, dt), (fs, ft)) in d.iter().zip(f) {
+                assert_eq!(ds, fs, "payloads diverged across backends");
+                assert_eq!(dt.to_bits(), ft.to_bits(), "times diverged across backends");
+            }
+        }
+    }
+
+    #[test]
+    fn folded_leave_resolves_in_flight_round_over_survivors() {
+        // The delta prefix sum must shrink the expectation of rounds at
+        // or beyond the departure sequence — and only those.
+        let group = Group::with_backend(3, 3, NetModel::instant(), SimBackend::Folded);
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        let h0a = c0.iallreduce(&[1.0], 0.0);
+        let h1a = c1.iallreduce(&[2.0], 0.0);
+        let h2a = c2.iallreduce(&[4.0], 0.0);
+        assert_eq!(h2a.wait(0.0).0[0], 7.0);
+        let h0b = c0.iallreduce(&[10.0], 0.0);
+        assert!(!h0b.is_complete());
+        let h1b = c1.iallreduce(&[20.0], 0.0);
+        assert!(!h1b.is_complete(), "round must wait for rank 2 or its departure");
+        c2.leave();
+        assert!(h0b.is_complete(), "departure must resolve the in-flight round");
+        let out = h0b.wait_outcome(0.0);
+        assert_eq!(out.data[0], 30.0, "survivor-set sum");
+        assert_eq!(out.contributors.as_ref(), &vec![0, 1]);
+        h1b.wait(0.0).0.as_ref();
+        h0a.wait(0.0).0.as_ref();
+        h1a.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn folded_advance_epoch_admits_joiner_after_resync_round() {
+        // The admit delta lands at next_seq + 1: the resync round stays
+        // survivors-only, the next expects the joiner too.
+        let group = Group::with_backend(3, 2, NetModel::instant(), SimBackend::Folded);
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let joiner = thread::spawn({
+            let shared = Group { shared: group.shared.clone() };
+            move || shared.await_admission(2)
+        });
+        assert_eq!(c0.advance_epoch(1, &[2]), vec![0, 1, 2]);
+        assert_eq!(c1.advance_epoch(1, &[2]), vec![0, 1, 2]);
+        let h0 = c0.iallreduce(&[1.0], 0.0);
+        let h1 = c1.iallreduce(&[3.0], 0.0);
+        let out = h0.wait_outcome(0.0);
+        assert_eq!(out.contributors.as_ref(), &vec![0, 1], "resync is survivors-only");
+        assert_eq!(out.data[0], 4.0);
+        h1.wait(0.0).0.as_ref();
+        c0.publish_bootstrap(JoinBootstrap {
+            epoch: 1,
+            weights: Arc::new(vec![2.0]),
+            t_start: 5.0,
+            sched_steps: 7,
+            window: 3,
+            join_cursor: 1,
+        });
+        let (mut c2, _) = joiner.join().unwrap().expect("joiner admitted");
+        let h0 = c0.iallreduce(&[1.0], 0.0);
+        let h1 = c1.iallreduce(&[1.0], 0.0);
+        assert!(!h0.is_complete(), "post-admission round must expect the joiner");
+        let h2 = c2.iallreduce(&[1.0], 0.0);
+        let out = h2.wait_outcome(0.0);
+        assert_eq!(out.data[0], 3.0);
+        assert_eq!(out.contributors.len(), 3);
+        h0.wait(0.0).0.as_ref();
+        h1.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn folded_sparse_gather_concatenates_in_rank_order() {
+        // The arena arrives sorted even when ranks post out of order.
+        let group = Group::with_backend(3, 3, NetModel::instant(), SimBackend::Folded);
+        let mut c0 = group.comm(0);
+        let mut c1 = group.comm(1);
+        let mut c2 = group.comm(2);
+        let h2 = c2.iallgather_sched(&[2.0, 2.0], 0.0, AllReduceAlgo::Ring);
+        let h0 = c0.iallgather_sched(&[0.0, 0.0], 0.0, AllReduceAlgo::Ring);
+        let h1 = c1.iallgather_sched(&[1.0, 1.0], 0.0, AllReduceAlgo::Ring);
+        let out = h2.wait_outcome(0.0);
+        assert_eq!(out.data.as_ref(), &vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        h0.wait(0.0).0.as_ref();
+        h1.wait(0.0).0.as_ref();
+    }
+
+    #[test]
+    fn backend_parse_and_name_round_trip() {
+        assert_eq!(SimBackend::parse("dense"), Some(SimBackend::Dense));
+        assert_eq!(SimBackend::parse("Folded"), Some(SimBackend::Folded));
+        assert_eq!(SimBackend::parse("sparse"), None);
+        assert_eq!(SimBackend::default().name(), "dense");
+        assert_eq!(SimBackend::Folded.name(), "folded");
+        assert_eq!(Group::new(2, NetModel::instant()).backend(), SimBackend::Dense);
     }
 }

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::algo::Algo;
-use crate::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use crate::comm::{AllReduceAlgo, Dragonfly, NetModel, SimBackend};
 use crate::compress::{CompressConfig, CompressorKind};
 use crate::control::{
     ControlConfig, ControlPolicy, FaultEvent, FaultKind, FaultPlan, JoinEvent, ProbeMode,
@@ -107,6 +107,13 @@ pub struct ExperimentConfig {
     /// setting.
     pub perf: PerfConfig,
 
+    /// Simulator backend selection (the `[sim]` TOML table): `dense`
+    /// materializes every rank (bit-exact reference, threads-parallel),
+    /// `folded` resolves rounds from contributor-count deltas so only
+    /// posting ranks are stored. Both produce bit-identical results;
+    /// the knob is excluded from run JSON for that reason.
+    pub sim: SimConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -116,10 +123,19 @@ pub struct ExperimentConfig {
     pub out_dir: Option<PathBuf>,
 }
 
+/// Simulator backend knobs (the `[sim]` TOML table). Orthogonal to the
+/// algorithm config: every backend yields bit-identical training
+/// results, so this never appears in run JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SimConfig {
+    /// Rendezvous storage/completion strategy. See [`SimBackend`].
+    pub backend: SimBackend,
+}
+
 impl ExperimentConfig {
     /// Builder seeded with the paper's defaults.
-    pub fn builder(variant: &str) -> ConfigBuilder {
-        ConfigBuilder { cfg: Self::defaults(variant) }
+    pub fn builder(variant: &str) -> RunBuilder {
+        RunBuilder { cfg: Self::defaults(variant) }
     }
 
     fn defaults(variant: &str) -> ExperimentConfig {
@@ -153,6 +169,7 @@ impl ExperimentConfig {
             compress: CompressConfig::default(),
             hetero: HeteroConfig::default(),
             perf: PerfConfig::default(),
+            sim: SimConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -216,15 +233,10 @@ impl ExperimentConfig {
             .unwrap_or("linear")
             .to_string();
         let mut cfg = Self::defaults(&variant);
-        // Flat single-fault spec of the `[control]` table, assembled
-        // after the loop (keys arrive in BTreeMap order).
-        let mut fault_rank: Option<usize> = None;
-        let mut fault_at_s: Option<f64> = None;
-        let mut fault_kind: Option<String> = None;
-        let mut fault_factor = 2.0f64;
-        let mut fault_duration_s = 1.0f64;
-        let mut fault_extra_s = 0.5f64;
-        let mut fault_respawn = true;
+        // Deprecated spellings (`net.algo`, flat `control.fault_*`)
+        // are collected here and resolved at one normalization point
+        // after the loop — see [`LegacyAliases::apply`].
+        let mut legacy = LegacyAliases::default();
         // `[[control.fault]]` / `[[control.join]]` table-array specs.
         let mut fault_events: Vec<FaultEvent> = Vec::new();
         let mut join_events: Vec<JoinEvent> = Vec::new();
@@ -232,7 +244,6 @@ impl ExperimentConfig {
         // after the loop (the schedule may need the final topology and
         // node count).
         let mut comm_schedule: Option<String> = None;
-        let mut legacy_net_algo: Option<String> = None;
         let mut comm_groups: Option<usize> = None;
         let mut comm_npg: Option<usize> = None;
         let mut comm_alpha_local: Option<f64> = None;
@@ -270,9 +281,9 @@ impl ExperimentConfig {
                 "data.noise" => cfg.data_noise = val.as_f64().ok_or_else(err)? as f32,
                 "net.alpha_s" => cfg.net.alpha_s = val.as_f64().ok_or_else(err)?,
                 "net.beta_bytes_per_s" => cfg.net.beta_bytes_per_s = val.as_f64().ok_or_else(err)?,
-                // old spelling of the schedule; `comm.schedule` wins
+                // deprecated spelling of the schedule; `comm.schedule` wins
                 "net.algo" => {
-                    legacy_net_algo = Some(val.as_str().ok_or_else(err)?.to_string())
+                    legacy.net_algo = Some(val.as_str().ok_or_else(err)?.to_string())
                 }
                 "comm.schedule" => {
                     comm_schedule = Some(val.as_str().ok_or_else(err)?.to_string())
@@ -372,15 +383,29 @@ impl ExperimentConfig {
                 "hetero.link_spread" => cfg.hetero.link_spread = val.as_f64().ok_or_else(err)?,
                 "perf.threads" => cfg.perf.threads = val.as_i64().ok_or_else(err)? as usize,
                 "perf.pin_chunk" => cfg.perf.pin_chunk = val.as_i64().ok_or_else(err)? as usize,
-                "control.fault_rank" => fault_rank = Some(val.as_i64().ok_or_else(err)? as usize),
-                "control.fault_at_s" => fault_at_s = Some(val.as_f64().ok_or_else(err)?),
-                "control.fault_kind" => {
-                    fault_kind = Some(val.as_str().ok_or_else(err)?.to_string())
+                "sim.backend" => {
+                    let s = val.as_str().ok_or_else(err)?;
+                    cfg.sim.backend = SimBackend::parse(s).ok_or_else(|| {
+                        anyhow::anyhow!("unknown sim.backend {s:?} (dense | folded)")
+                    })?
                 }
-                "control.fault_factor" => fault_factor = val.as_f64().ok_or_else(err)?,
-                "control.fault_duration_s" => fault_duration_s = val.as_f64().ok_or_else(err)?,
-                "control.fault_extra_s" => fault_extra_s = val.as_f64().ok_or_else(err)?,
-                "control.fault_respawn" => fault_respawn = val.as_bool().ok_or_else(err)?,
+                // deprecated flat single-fault spelling; prefer
+                // `[[control.fault]]` tables.
+                "control.fault_rank" => {
+                    legacy.fault_rank = Some(val.as_i64().ok_or_else(err)? as usize)
+                }
+                "control.fault_at_s" => legacy.fault_at_s = Some(val.as_f64().ok_or_else(err)?),
+                "control.fault_kind" => {
+                    legacy.fault_kind = Some(val.as_str().ok_or_else(err)?.to_string())
+                }
+                "control.fault_factor" => legacy.fault_factor = val.as_f64().ok_or_else(err)?,
+                "control.fault_duration_s" => {
+                    legacy.fault_duration_s = val.as_f64().ok_or_else(err)?
+                }
+                "control.fault_extra_s" => legacy.fault_extra_s = val.as_f64().ok_or_else(err)?,
+                "control.fault_respawn" => {
+                    legacy.fault_respawn = val.as_bool().ok_or_else(err)?
+                }
                 // `[[control.fault]]` table array: any number of specs.
                 "control.fault" => {
                     for entry in val.as_array().ok_or_else(err)? {
@@ -404,24 +429,6 @@ impl ExperimentConfig {
                 other => bail!("unknown config key {other:?}"),
             }
         }
-        if let Some(kind) = fault_kind {
-            let rank = fault_rank
-                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_rank"))?;
-            let at_s = fault_at_s
-                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_at_s"))?;
-            let kind = match kind.as_str() {
-                "kill" => FaultKind::Kill { respawn: fault_respawn },
-                "slow" => FaultKind::Slow { factor: fault_factor, duration_s: fault_duration_s },
-                "delay" => FaultKind::Delay { extra_s: fault_extra_s },
-                other => bail!("unknown control.fault_kind {other:?} (kill | slow | delay)"),
-            };
-            cfg.control.faults.push(FaultEvent { rank, at_s, kind });
-        }
-        for e in fault_events {
-            cfg.control.faults.push(e);
-        }
-        cfg.control.joins = join_events;
-
         // Assemble the `[comm]` dragonfly: an explicit shape wins, a
         // half-specified shape derives its other dimension from the
         // run's node count (a partial shape must never silently
@@ -466,7 +473,16 @@ impl ExperimentConfig {
             d.global_taper = t.max(1);
         }
         cfg.dragonfly = d;
-        if let Some(name) = comm_schedule.or(legacy_net_algo) {
+        // Single normalization point for every deprecated alias. The
+        // flat fault lands before the table-array specs (matching the
+        // documented composition order), and the legacy schedule is
+        // applied first so the explicit `comm.schedule` below wins.
+        legacy.apply(&mut cfg, d)?;
+        for e in fault_events {
+            cfg.control.faults.push(e);
+        }
+        cfg.control.joins = join_events;
+        if let Some(name) = comm_schedule {
             cfg.net.algo = parse_schedule(&name, d)?;
         }
         cfg.validate()?;
@@ -580,6 +596,24 @@ impl ExperimentConfig {
         ))
     }
 
+    /// Residual link-spread asymmetry a *flat* collective suffers
+    /// relative to what its baked β claims:
+    /// `min(link_scale_local, link_scale_global) / link_scale_local`
+    /// from the resolved hetero profile. [`Self::with_hetero_applied`]
+    /// scales the flat β by the local link class, but a flat schedule
+    /// spanning groups crosses the global optics too and is
+    /// bottlenecked by the slowest link class — the schedule-coupled
+    /// candidate pricing multiplies the flat β by this factor. 1.0
+    /// when hetero is off or the global class is no slower.
+    pub fn flat_link_residual(&self) -> f64 {
+        match self.hetero_profile() {
+            Some(p) if p.link_scale_local > 0.0 => {
+                (p.link_scale_local.min(p.link_scale_global) / p.link_scale_local).min(1.0)
+            }
+            _ => 1.0,
+        }
+    }
+
     /// A copy of this config with the heterogeneity profile merged into
     /// the base models: tier multipliers into the compute model's
     /// per-rank straggler factors, bottleneck link scales into the flat
@@ -614,6 +648,74 @@ impl ExperimentConfig {
         }
         cfg.hetero.applied = true;
         cfg
+    }
+}
+
+/// Deprecated config spellings, collected during the key loop and
+/// resolved at exactly one place ([`LegacyAliases::apply`]) so the
+/// modern keys have a single, auditable precedence story:
+///
+/// * `net.algo` — old name for `comm.schedule`; the explicit
+///   `comm.schedule` key wins when both are present.
+/// * `control.fault_rank` / `fault_at_s` / `fault_kind` /
+///   `fault_factor` / `fault_duration_s` / `fault_extra_s` /
+///   `fault_respawn` — flat single-fault spelling, superseded by
+///   `[[control.fault]]` tables; a flat fault composes with the table
+///   array and sorts before it.
+///
+/// See `docs/config.md` § "Deprecated aliases".
+struct LegacyAliases {
+    net_algo: Option<String>,
+    fault_rank: Option<usize>,
+    fault_at_s: Option<f64>,
+    fault_kind: Option<String>,
+    fault_factor: f64,
+    fault_duration_s: f64,
+    fault_extra_s: f64,
+    fault_respawn: bool,
+}
+
+impl Default for LegacyAliases {
+    fn default() -> Self {
+        LegacyAliases {
+            net_algo: None,
+            fault_rank: None,
+            fault_at_s: None,
+            fault_kind: None,
+            fault_factor: 2.0,
+            fault_duration_s: 1.0,
+            fault_extra_s: 0.5,
+            fault_respawn: true,
+        }
+    }
+}
+
+impl LegacyAliases {
+    /// Fold every collected alias into `cfg`. Called once per parse,
+    /// before the explicit modern keys that supersede them are applied.
+    fn apply(self, cfg: &mut ExperimentConfig, topology: Dragonfly) -> Result<()> {
+        if let Some(name) = self.net_algo {
+            cfg.net.algo = parse_schedule(&name, topology)?;
+        }
+        if let Some(kind) = self.fault_kind {
+            let rank = self
+                .fault_rank
+                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_rank"))?;
+            let at_s = self
+                .fault_at_s
+                .ok_or_else(|| anyhow::anyhow!("control.fault_kind needs control.fault_at_s"))?;
+            let kind = match kind.as_str() {
+                "kill" => FaultKind::Kill { respawn: self.fault_respawn },
+                "slow" => FaultKind::Slow {
+                    factor: self.fault_factor,
+                    duration_s: self.fault_duration_s,
+                },
+                "delay" => FaultKind::Delay { extra_s: self.fault_extra_s },
+                other => bail!("unknown control.fault_kind {other:?} (kill | slow | delay)"),
+            };
+            cfg.control.faults.push(FaultEvent { rank, at_s, kind });
+        }
+        Ok(())
     }
 }
 
@@ -712,12 +814,20 @@ fn parse_join_table(table: &BTreeMap<String, TomlValue>) -> Result<Vec<JoinEvent
     }
 }
 
-/// Fluent builder over [`ExperimentConfig`].
-pub struct ConfigBuilder {
+/// Fluent builder over [`ExperimentConfig`] — the single programmatic
+/// entry point for constructing and launching runs. Every example,
+/// bench, and test goes through `ExperimentConfig::builder(..)` and
+/// either [`RunBuilder::build`] (for the config alone) or
+/// [`RunBuilder::run`] (build + execute through the engine registry).
+pub struct RunBuilder {
     cfg: ExperimentConfig,
 }
 
-impl ConfigBuilder {
+/// Old name of [`RunBuilder`], kept as a deprecated alias.
+#[deprecated(note = "renamed to RunBuilder")]
+pub type ConfigBuilder = RunBuilder;
+
+impl RunBuilder {
     pub fn name(mut self, v: &str) -> Self {
         self.cfg.name = v.into();
         self
@@ -879,10 +989,24 @@ impl ConfigBuilder {
         self.cfg.artifacts_root = v.into();
         self
     }
+    /// Rendezvous backend: [`SimBackend::Dense`] materializes every
+    /// rank, [`SimBackend::Folded`] stores posters only. Bit-identical
+    /// results either way.
+    pub fn backend(mut self, v: SimBackend) -> Self {
+        self.cfg.sim.backend = v;
+        self
+    }
 
     pub fn build(self) -> ExperimentConfig {
         self.cfg.validate().expect("invalid config");
         self.cfg
+    }
+
+    /// Build the config and execute the run through the engine
+    /// registry — the one-stop entry point that replaces the
+    /// build-then-`run_experiment` two-step.
+    pub fn run(self) -> Result<crate::algo::RunReport> {
+        crate::algo::run_experiment(&self.build())
     }
 }
 
@@ -1025,6 +1149,41 @@ mod tests {
         let cfg = ExperimentConfig::from_toml_str("nodes = 16\n[net]\nalgo = \"hierarchical\"")
             .unwrap();
         assert!(matches!(cfg.net.algo, AllReduceAlgo::Hierarchical(_)));
+    }
+
+    #[test]
+    fn explicit_comm_schedule_wins_over_legacy_net_algo() {
+        let doc = r#"
+            nodes = 8
+
+            [net]
+            algo = "tree"
+
+            [comm]
+            schedule = "ring"
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.net.algo, AllReduceAlgo::Ring);
+    }
+
+    #[test]
+    fn sim_backend_knob_parses_and_defaults_dense() {
+        let cfg = ExperimentConfig::from_toml_str("nodes = 4").unwrap();
+        assert_eq!(cfg.sim.backend, SimBackend::Dense);
+        let cfg = ExperimentConfig::from_toml_str("nodes = 4\n[sim]\nbackend = \"folded\"")
+            .unwrap();
+        assert_eq!(cfg.sim.backend, SimBackend::Folded);
+        let cfg = ExperimentConfig::from_toml_str("nodes = 4\n[sim]\nbackend = \"dense\"")
+            .unwrap();
+        assert_eq!(cfg.sim.backend, SimBackend::Dense);
+        assert!(ExperimentConfig::from_toml_str("[sim]\nbackend = \"sparse\"").is_err());
+    }
+
+    #[test]
+    fn builder_sets_the_sim_backend() {
+        let cfg = ExperimentConfig::builder("linear").backend(SimBackend::Folded).build();
+        assert_eq!(cfg.sim.backend, SimBackend::Folded);
+        assert_eq!(ExperimentConfig::builder("linear").build().sim.backend, SimBackend::Dense);
     }
 
     #[test]

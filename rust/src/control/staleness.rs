@@ -448,7 +448,7 @@ impl Default for ProbeCfg {
 /// schedules: the fabric, the topology, and the collective's payload.
 /// The default (zero payload/ranks) prices nothing — the policy then
 /// simply keeps the configured schedule.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ScheduleEnv {
     /// The configured fabric model (its `algo` is the starting
     /// schedule; its α-β pair prices the flat candidates).
@@ -462,6 +462,31 @@ pub struct ScheduleEnv {
     /// The run's `[compress]` operating point — what the
     /// `compress_coupled` policy tunes (and prices schedules at).
     pub compress: CompressConfig,
+    /// Residual link-spread asymmetry the *flat* candidates suffer
+    /// when the fleet spans more than one dragonfly group:
+    /// `min(link_scale_local, link_scale_global) / link_scale_local`
+    /// from the resolved hetero profile
+    /// ([`crate::config::ExperimentConfig::flat_link_residual`]).
+    /// `with_hetero_applied` bakes only the *local* scale into the
+    /// flat β, but a flat ring crosses the global optics too — its
+    /// bottleneck is the slowest link class. 1.0 when the hetero
+    /// subsystem is off or the spread favors no candidate.
+    pub flat_link_scale: f64,
+}
+
+impl Default for ScheduleEnv {
+    fn default() -> Self {
+        ScheduleEnv {
+            net: NetModel::default(),
+            topology: Dragonfly::default(),
+            n_elems: 0,
+            n_ranks: 0,
+            compress: CompressConfig::default(),
+            // a derived 0.0 would price flat candidates as infinitely
+            // slow — no spread means no asymmetry
+            flat_link_scale: 1.0,
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -583,8 +608,20 @@ impl ScheduleCoupled {
     }
 
     /// Modelled t_AR of a candidate schedule on this run's payload.
+    /// Flat candidates crossing group boundaries carry the residual
+    /// link-spread asymmetry (`env.flat_link_scale`): the hierarchical
+    /// candidate prices its local/global phases on their own β's, but
+    /// a flat schedule rides its single β — which the hetero merge
+    /// scaled by the *local* link class only — while actually being
+    /// bottlenecked by the slowest link it crosses.
     fn modelled(&self, algo: AllReduceAlgo) -> f64 {
-        NetModel { algo, ..self.env.net }.allreduce_time(self.env.n_elems, self.env.n_ranks)
+        let mut net = NetModel { algo, ..self.env.net };
+        if !Self::is_hier(algo)
+            && self.env.topology.groups_spanned(self.env.n_ranks.max(1)) > 1
+        {
+            net.beta_bytes_per_s *= self.env.flat_link_scale;
+        }
+        net.allreduce_time(self.env.n_elems, self.env.n_ranks)
     }
 
     /// The flat and hierarchical candidates (the configured schedule is
@@ -1416,6 +1453,7 @@ mod tests {
             n_elems,
             n_ranks,
             compress: CompressConfig::default(),
+            flat_link_scale: 1.0,
         }
     }
 
@@ -1446,6 +1484,33 @@ mod tests {
         // Huge payload at small N: the flat ring's bandwidth optimality
         // wins; the pick must stay on the configured ring.
         let mut c = sc(sched_env(25_600_000, 8, 10e9));
+        let d = c.on_window(&obs(0, 1e-3, 0.0));
+        assert_eq!(d.schedule, Some(AllReduceAlgo::Ring));
+    }
+
+    #[test]
+    fn link_spread_residual_prices_flat_candidates_down() {
+        // Same scenario where the flat ring wins on symmetric links —
+        // but under hetero link spread the flat candidate's β rides
+        // the slow global optics (flat_link_scale < 1), so the
+        // bootstrap pick must flip to the hierarchical candidate,
+        // whose phases price their own link classes.
+        let mut env = sched_env(25_600_000, 8, 10e9);
+        assert!(env.topology.groups_spanned(8) > 1, "premise: the fleet spans groups");
+        env.flat_link_scale = 0.05;
+        let mut c = sc(env);
+        let d = c.on_window(&obs(0, 1e-3, 0.0));
+        assert!(
+            matches!(d.schedule, Some(AllReduceAlgo::Hierarchical(_))),
+            "picked {:?}",
+            d.schedule
+        );
+        // single-group fleets never cross the optics: the residual
+        // must not price anything there
+        let mut one_group = sched_env(25_600_000, 8, 10e9);
+        one_group.topology = Dragonfly { groups: 1, nodes_per_group: 8, ..Dragonfly::default() };
+        one_group.flat_link_scale = 0.05;
+        let mut c = sc(one_group);
         let d = c.on_window(&obs(0, 1e-3, 0.0));
         assert_eq!(d.schedule, Some(AllReduceAlgo::Ring));
     }

@@ -59,12 +59,12 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::algo::{run_experiment, Algo, RunReport};
+    pub use crate::algo::{engine_for, engine_registry, run_experiment, Algo, RunReport};
     pub use crate::comm::{
-        AllReduceAlgo, CollectiveSchedule, Dragonfly, Group, NetModel, PhaseTimes,
+        AllReduceAlgo, CollectiveSchedule, Dragonfly, Group, NetModel, PhaseTimes, SimBackend,
     };
     pub use crate::compress::{CompressConfig, CompressorKind, GradCompressor};
-    pub use crate::config::ExperimentConfig;
+    pub use crate::config::{ExperimentConfig, RunBuilder};
     pub use crate::control::{ControlPolicy, FaultPlan};
     pub use crate::data::SyntheticDataset;
     pub use crate::exec::{PerfConfig, Pool};

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
-use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel, SimBackend};
 use dcs3gd::compress::CompressorKind;
 use dcs3gd::config::{parse_schedule, ExperimentConfig};
 use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent, ProbeMode};
@@ -43,7 +43,7 @@ USAGE:
                [--hetero-spot-fraction F] [--hetero-spot-mtbf S]
                [--hetero-spot-correlation C] [--hetero-diurnal-amplitude A]
                [--hetero-diurnal-period S] [--hetero-link-spread X]
-               [--threads T] [--pin-chunk C]
+               [--threads T] [--pin-chunk C] [--sim-backend dense|folded]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
   dcs3gd list-artifacts [--root DIR]
@@ -72,6 +72,10 @@ Engine:           --threads T bounds the concurrently runnable simulated
                   chunk width (0 = default, power of two). Both are
                   wall-clock knobs only: results are bit-identical for
                   every setting — see docs/performance.md
+Backend:          --sim-backend folded swaps the rendezvous substrate's
+                  dense roster scans for the event core's contributor-set
+                  deltas (sparse rounds); dense is the default. Results
+                  are bit-identical either way — see docs/architecture.md
 Heterogeneity:    --hetero turns on the heterogeneous fabric: per-rank
                   compute tiers (--hetero-tiers, drawn by weight), spot
                   cohorts that revoke mid-run (--hetero-spot-*; rank 0 is
@@ -270,6 +274,11 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     // engine core: worker-pool thread budget + kernel chunk width
     cfg.perf.threads = args.get_usize("threads", cfg.perf.threads)?;
     cfg.perf.pin_chunk = args.get_usize("pin-chunk", cfg.perf.pin_chunk)?;
+    // simulator backend: dense rendezvous vs cohort-folded rounds
+    if let Some(b) = args.get("sim-backend") {
+        cfg.sim.backend = SimBackend::parse(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown --sim-backend {b:?} (dense | folded)"))?;
+    }
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }

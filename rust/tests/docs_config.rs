@@ -71,6 +71,8 @@ fn config_reference_names_every_table() {
         "[compress]",
         "[hetero]",
         "[perf]",
+        "[sim]",
+        "Deprecated aliases",
     ] {
         assert!(text.contains(table), "docs/config.md lost the {table} section");
     }
@@ -86,6 +88,8 @@ fn config_reference_names_every_table() {
         "link_spread",
         "tier_weights",
         "pin_chunk",
+        "--sim-backend",
+        "fault_duration_s",
     ] {
         assert!(text.contains(key), "docs/config.md lost the {key} key");
     }
@@ -97,8 +101,28 @@ fn config_reference_names_every_table() {
     // the performance book page documents the engine-core knobs, its
     // determinism contract, and the bench lane's env switches
     let perf = doc("performance.md");
-    for name in ["--threads", "--pin-chunk", "bit-identical", "DCS3GD_BENCH_FAST", "DCS3GD_ENGINE_MIN_SPEEDUP"] {
+    for name in [
+        "--threads",
+        "--pin-chunk",
+        "--sim-backend",
+        "bit-identical",
+        "BENCH_scale",
+        "DCS3GD_BENCH_FAST",
+        "DCS3GD_ENGINE_MIN_SPEEDUP",
+    ] {
         assert!(perf.contains(name), "docs/performance.md lost {name:?}");
+    }
+    // the architecture page documents the event core's fold criterion
+    // and the Engine/RoundDriver contract
+    let arch = doc("architecture.md");
+    for name in [
+        "contributor-set deltas",
+        "RoundDriver",
+        "engine_registry",
+        "REFOLD_QUIET_ROUNDS",
+        "prop_folded_backend_equals_dense",
+    ] {
+        assert!(arch.contains(name), "docs/architecture.md lost {name:?}");
     }
 }
 

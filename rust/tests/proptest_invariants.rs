@@ -770,6 +770,120 @@ fn prop_parallel_engine_bitwise_equals_serial() {
     }
 }
 
+/// Property (simulator backends): the folded rendezvous backend is
+/// **bit-identical** to the dense one. For any engine × schedule ×
+/// compression × heterogeneity × membership-churn × probing draw at
+/// N ∈ {64, 256, 1024}, the same config run with
+/// `[sim] backend = "dense"` and `"folded"` produces byte-identical
+/// deterministic run JSON and identical epoch param CRCs — the folded
+/// backend changes how rounds store contributions and detect
+/// completion (poster-only arena + contributor-count deltas vs
+/// capacity-wide slots + roster scan), never what they compute.
+#[test]
+fn prop_folded_backend_equals_dense() {
+    use dcs3gd::comm::SimBackend;
+    use dcs3gd::control::{ControlPolicy, ProbeMode};
+    // Larger fleets get fewer draws — each case is two full runs.
+    for &(nodes, cases) in &[(64usize, 3u64), (256, 2), (1024, 1)] {
+        for case in 0..cases {
+            let mut rng = Rng::keyed(0xF01D, nodes as u64, case);
+            let algo = match rng.below(4) {
+                0 => Algo::Ssgd,
+                1 => Algo::DcS3gd,
+                2 => Algo::DynSsp,
+                _ => Algo::Sgs,
+            };
+            let net_algo = match rng.below(4) {
+                0 => AllReduceAlgo::Ring,
+                1 => AllReduceAlgo::Tree,
+                2 => AllReduceAlgo::Flat,
+                _ => AllReduceAlgo::Hierarchical(Dragonfly::for_nodes(nodes)),
+            };
+            let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: net_algo };
+            let steps = 4 + rng.below(3);
+
+            let mut b = ExperimentConfig::builder("linear")
+                .name("prop_backend")
+                .algo(algo)
+                .nodes(nodes)
+                .local_batch(2)
+                .steps(steps)
+                .seed(7000 + case)
+                .eta_single(0.05)
+                .base_batch(nodes * 2)
+                .data(nodes * 4, 64, 0.5)
+                .eval_every(0, 2)
+                .compute(ComputeModel::uniform(1e-3))
+                .threads(4)
+                .net(net);
+            // Compression (every decentralized engine supports it).
+            match rng.below(3) {
+                0 => {}
+                1 => b = b.compress_topk(rng.uniform_range(0.05, 0.5)),
+                _ => b = b.compress_qsgd([4u32, 8][rng.below(2) as usize]),
+            }
+            // Heterogeneity: tier spread + diurnal load + link spread
+            // (seeded draw — identical across both runs).
+            if rng.below(2) == 1 {
+                b = b.hetero(HeteroConfig {
+                    enabled: true,
+                    tiers: vec![1.0, 1.0 + rng.uniform()],
+                    diurnal_amplitude: 0.2,
+                    diurnal_period_s: 0.05,
+                    link_spread: 0.2,
+                    ..HeteroConfig::default()
+                });
+            }
+            // Schedule probing rides the control plane.
+            if rng.below(2) == 1 {
+                b = b.control_policy(ControlPolicy::ScheduleCoupled);
+            }
+            // Membership churn on the windowed engines: a mid-run
+            // departure, sometimes followed by a fresh-rank join.
+            if algo.is_windowed() && rng.below(2) == 1 {
+                let leaver = 1 + rng.below(nodes as u64 - 1) as usize;
+                let t_dep = rng.uniform_range(0.005, 0.03) as f64;
+                b = b.faults(FaultPlan::new().depart(leaver, t_dep));
+                if rng.below(2) == 1 {
+                    b = b.join(nodes, t_dep + 0.02);
+                }
+            }
+            let mut cfg = b.build();
+            if rng.below(2) == 1 {
+                cfg.control.probe = ProbeMode::Interval;
+                cfg.control.probe_interval = 3;
+            }
+
+            let runs: Vec<(String, Vec<u64>)> = [SimBackend::Dense, SimBackend::Folded]
+                .iter()
+                .map(|&backend| {
+                    let mut c = cfg.clone();
+                    c.sim.backend = backend;
+                    let report = run_experiment(&c).unwrap_or_else(|e| {
+                        panic!("N={nodes} case {case} ({}): {e}", backend.name())
+                    });
+                    let json = report.deterministic_json().to_string();
+                    let crcs: Vec<u64> =
+                        report.epochs.records().iter().map(|r| r.w_crc).collect();
+                    (json, crcs)
+                })
+                .collect();
+            assert_eq!(
+                runs[1].0,
+                runs[0].0,
+                "N={nodes} case {case} ({}): folded run JSON diverged from dense",
+                cfg.algo.name()
+            );
+            assert_eq!(
+                runs[1].1,
+                runs[0].1,
+                "N={nodes} case {case} ({}): folded epoch param CRCs diverged",
+                cfg.algo.name()
+            );
+        }
+    }
+}
+
 /// Property: dataset samples are identical regardless of generation
 /// order or batch grouping (pure function of index).
 #[test]
