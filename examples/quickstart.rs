@@ -7,32 +7,50 @@
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! Pass `--trace-out FILE` to also journal the run's round-level events
+//! as JSONL (see docs/observability.md), run an SSGD twin for contrast,
+//! and print both trace reports — DC-S3GD's overlap efficiency is > 0
+//! (compute hides the in-flight collective), SSGD's is exactly 0.
 
 use dcs3gd::algo::Algo;
 use dcs3gd::config::ExperimentConfig;
+use dcs3gd::obs::report::{analyze, parse_jsonl, render};
 use dcs3gd::simtime::ComputeModel;
 
 fn main() -> anyhow::Result<()> {
     // Prefer the AOT CNN artifact; fall back to the rust linear model.
     let have_artifacts = std::path::Path::new("artifacts/tiny_cnn_b32/meta.json").exists();
     let (variant, batch) = if have_artifacts { ("tiny_cnn_b32", 32) } else { ("linear", 32) };
+    let trace_out = std::env::args()
+        .skip(1)
+        .collect::<Vec<_>>()
+        .windows(2)
+        .find(|w| w[0] == "--trace-out")
+        .map(|w| w[1].clone());
     println!("backend: {variant}\n");
     println!("DC-S3GD | 4 workers | global batch {} | 150 steps", 4 * batch);
 
     // `RunBuilder` is the one typed entry point: configure, then `.run()`
     // straight to the report (no separate build + run_experiment step).
-    let report = ExperimentConfig::builder(variant)
-        .name("quickstart")
-        .algo(Algo::DcS3gd)
-        .nodes(4)
-        .local_batch(batch)
-        .steps(150)
-        .eta_single(0.05)
-        .base_batch(128)
-        .data(4096, 512, 0.6)
-        .compute(ComputeModel::uniform(2e-3))
-        .eval_every(25, 4)
-        .run()?;
+    let builder = |name: &str, algo: Algo, trace: Option<&str>| {
+        let mut b = ExperimentConfig::builder(variant)
+            .name(name)
+            .algo(algo)
+            .nodes(4)
+            .local_batch(batch)
+            .steps(150)
+            .eta_single(0.05)
+            .base_batch(128)
+            .data(4096, 512, 0.6)
+            .compute(ComputeModel::uniform(2e-3))
+            .eval_every(25, 4);
+        if let Some(path) = trace {
+            b = b.trace_out(path);
+        }
+        b
+    };
+    let report = builder("quickstart", Algo::DcS3gd, trace_out.as_deref()).run()?;
 
     println!("\nper-epoch train error:");
     for (epoch, err) in report.recorder.epoch_train_err() {
@@ -53,5 +71,31 @@ fn main() -> anyhow::Result<()> {
         "simulated cluster time {:.1}s | wall {:.1}s",
         report.sim_time_s, report.wall_time_s
     );
+
+    // With --trace-out: analyze the DC-S3GD journal, then run a
+    // synchronous SSGD twin into "<path>.ssgd.jsonl" for the overlap
+    // contrast the paper's pipelining argument rests on.
+    if let Some(path) = trace_out {
+        let ssgd_path = format!("{path}.ssgd.jsonl");
+        let ssgd = builder("quickstart_ssgd", Algo::Ssgd, Some(&ssgd_path)).run()?;
+        for (title, p, rep) in [
+            ("DC-S3GD", &path, &report),
+            ("SSGD", &ssgd_path, &ssgd),
+        ] {
+            let events = parse_jsonl(&std::fs::read_to_string(p)?)?;
+            println!("\n=== trace-report: {title} ({p}) ===");
+            print!("{}", render(&analyze(&events)));
+            let eff = rep
+                .obs
+                .as_ref()
+                .map(|o| o.overlap_efficiency_mean())
+                .unwrap_or(0.0);
+            println!("run-JSON overlap_efficiency_mean: {eff:.4}");
+        }
+        println!(
+            "\nconvert either journal for chrome://tracing with:\n  \
+             python3 tools/trace_to_chrome.py {path} --out trace.json"
+        );
+    }
     Ok(())
 }

@@ -135,6 +135,69 @@ fn main() {
         engine_rows.push(Json::Obj(row));
     }
 
+    // ----------------------------------------------------------------
+    // Trace-overhead gate: the obs journal must be near-free. Same
+    // 64-rank golden config with tracing at the default capacity vs
+    // `trace.capacity = 0` (fully disabled), best-of-2 wall each; the
+    // traced run must keep within DCS3GD_TRACE_MAX_OVERHEAD (default
+    // 5%) of the untraced steps/s — and the deterministic run JSON must
+    // be byte-identical whether tracing is on or off.
+    // ----------------------------------------------------------------
+    let max_overhead: f64 = std::env::var("DCS3GD_TRACE_MAX_OVERHEAD")
+        .ok()
+        .map(|v| v.parse().expect("DCS3GD_TRACE_MAX_OVERHEAD must be a float"))
+        .unwrap_or(0.05);
+    let traced_cfg = || {
+        let mut cfg = golden_cfg(64, steps, 0);
+        cfg.name = "engine_trace_on_n64".into();
+        cfg
+    };
+    let untraced_cfg = || {
+        let mut cfg = golden_cfg(64, steps, 0);
+        cfg.name = "engine_trace_off_n64".into();
+        cfg.trace.capacity = 0;
+        cfg
+    };
+    let best_of2 = |mk: &dyn Fn() -> ExperimentConfig| {
+        let (a, ja, _) = run_once(&mk());
+        let (b, _, _) = run_once(&mk());
+        (a.wall_time_s.min(b.wall_time_s), ja, a)
+    };
+    let (wall_on, json_on, rep_on) = best_of2(&traced_cfg);
+    let (wall_off, json_off, _) = best_of2(&untraced_cfg);
+    // Names differ between the two configs, so compare everything else.
+    let strip_name = |j: &str, name: &str| j.replace(&format!("\"{name}\""), "\"engine\"");
+    assert_eq!(
+        strip_name(&json_on, "engine_trace_on_n64"),
+        strip_name(&json_off, "engine_trace_off_n64"),
+        "deterministic run JSON must not change when tracing toggles"
+    );
+    let obs = rep_on.obs.as_ref().expect("traced run carries the obs hub");
+    assert!(!obs.journal.is_empty(), "traced run recorded no events");
+    let (sps_on, sps_off) = (steps as f64 / wall_on, steps as f64 / wall_off);
+    let overhead = (sps_off - sps_on) / sps_off;
+    println!(
+        "\ntrace overhead: {:.1} steps/s traced vs {:.1} untraced ({:+.2}% — gate {:.0}%, \
+         {} events journaled)",
+        sps_on,
+        sps_off,
+        100.0 * overhead,
+        100.0 * max_overhead,
+        obs.journal.len(),
+    );
+    assert!(
+        overhead <= max_overhead,
+        "tracing costs {:.2}% steps/s, over the {:.0}% gate",
+        100.0 * overhead,
+        100.0 * max_overhead
+    );
+    let mut trace_row = BTreeMap::new();
+    trace_row.insert("steps_per_s_traced".to_string(), Json::Num(sps_on));
+    trace_row.insert("steps_per_s_untraced".into(), Json::Num(sps_off));
+    trace_row.insert("overhead_frac".into(), Json::Num(overhead));
+    trace_row.insert("max_overhead_frac".into(), Json::Num(max_overhead));
+    trace_row.insert("journal_events".into(), Json::Num(obs.journal.len() as f64));
+
     if let Some(min) = min_speedup {
         assert!(
             speedup_at_64 >= min,
@@ -159,6 +222,7 @@ fn main() {
     );
     section.insert("rows".into(), Json::Arr(rows));
     section.insert("engines".into(), Json::Arr(engine_rows));
+    section.insert("trace_overhead".into(), Json::Obj(trace_row));
     let path = write_bench_json("engine", Json::Obj(section)).expect("bench json");
     println!("bench JSON -> {}", path.display());
 }

@@ -152,6 +152,7 @@ fn main() {
     );
     let mut core_rows: Vec<Json> = Vec::new();
     let mut top3_wall_s = 0.0f64;
+    let fold_metrics = dcs3gd::obs::Metrics::new();
     for &n in &GRID {
         let start = Instant::now();
         let mut sim = CohortSim::new(scenario(n, rounds));
@@ -162,6 +163,8 @@ fn main() {
         }
         let last = trace.last().expect("rounds >= 1");
         let arena_max = trace.iter().map(|s| s.materialized).max().unwrap();
+        let fold = sim.stats();
+        sim.export_obs(&fold_metrics);
         println!(
             "{n:>8} {:>8} {arena_max:>9} {:>8} {:>11.4}s {:>9.3}s",
             sim.n_cohorts(),
@@ -171,19 +174,46 @@ fn main() {
         );
         // The fold criterion is the point: the arena is bounded by the
         // event population (spot cohort + scripted events), never by N.
+        // The sim's own lifetime accounting must agree with the trace
+        // and stay event-bounded too: every materialization is paid for
+        // by an event, every refold by a prior split.
         assert!(
             arena_max <= 512,
             "N={n}: materialized arena {arena_max} is not event-bounded"
         );
+        assert!(
+            fold.arena_max <= 512,
+            "N={n}: fold-stats arena high-water {} is not event-bounded",
+            fold.arena_max
+        );
+        assert!(fold.arena_max >= arena_max, "stats high-water below the trace's");
+        assert!(
+            fold.refolds <= fold.events_total,
+            "N={n}: {} refolds exceed the {} events that can split",
+            fold.refolds,
+            fold.events_total
+        );
+        assert!(fold.events_applied <= fold.events_total);
         let mut row = BTreeMap::new();
         row.insert("n_ranks".to_string(), Json::Num(n as f64));
         row.insert("rounds".into(), Json::Num(rounds as f64));
         row.insert("wall_s".into(), Json::Num(wall));
         row.insert("arena_max".into(), Json::Num(arena_max as f64));
+        row.insert("fold_arena_max".into(), Json::Num(fold.arena_max as f64));
+        row.insert("fold_refolds".into(), Json::Num(fold.refolds as f64));
+        row.insert("fold_events_applied".into(), Json::Num(fold.events_applied as f64));
+        row.insert("fold_events_total".into(), Json::Num(fold.events_total as f64));
         row.insert("contributors_final".into(), Json::Num(last.contributors as f64));
         row.insert("t_complete_s".into(), Json::Num(last.t_complete));
         core_rows.push(Json::Obj(row));
     }
+    println!(
+        "fold accounting (obs counters): arena high-water {} | refolds {} | events {}/{}",
+        fold_metrics.counter("sim.cohort.arena_max"),
+        fold_metrics.counter("sim.cohort.refolds"),
+        fold_metrics.counter("sim.cohort.events_applied"),
+        fold_metrics.counter("sim.cohort.events_total"),
+    );
     assert!(
         top3_wall_s < CEILING_S,
         "65k + 262k + 1M tabulations took {top3_wall_s:.1}s, ceiling {CEILING_S}s"
@@ -222,6 +252,7 @@ fn main() {
     section.insert("event_core".into(), Json::Arr(core_rows));
     section.insert("top3_wall_s".into(), Json::Num(top3_wall_s));
     section.insert("ceiling_s".into(), Json::Num(CEILING_S));
+    section.insert("fold_obs".into(), fold_metrics.to_json());
     let path = write_bench_json("scale", Json::Obj(section)).expect("bench json");
     println!("bench JSON -> {}", path.display());
 }

@@ -111,6 +111,7 @@ use crate::control::{
 };
 use crate::dc::{self, DcHyper};
 use crate::exec::{Phase, RankClock};
+use crate::obs::{EventKind, WindowRow};
 use crate::model::Checkpoint;
 use crate::optim::{build_optimizer, Optimizer};
 use crate::tensor;
@@ -133,6 +134,8 @@ struct PostedWindow {
     ratio: f64,
     /// The round rode its schedule as a control-plane probe.
     probe: bool,
+    /// Window id at post time (the id the round's trace events carry).
+    window: u64,
 }
 
 /// Per-worker controller for the engine variant: the configured policy
@@ -199,6 +202,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let membership = membership.clone();
             let gate = pool.gate();
             let profiler = profiler.clone();
+            let hub = driver.obs.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
                 let _permit = gate.permit();
@@ -390,6 +394,16 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                         ev.at_s
                                     )),
                                 });
+                                let now = ctx.clock.now();
+                                hub.record(
+                                    EventKind::Fault,
+                                    rank,
+                                    window_idx,
+                                    now,
+                                    now,
+                                    format!("depart epoch={epoch}"),
+                                );
+                                hub.metrics.inc("control.departs", 1);
                                 return Ok(());
                             }
                             ctx.recover_from_kill(
@@ -432,6 +446,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 
                     let mut lam_used = 0.0f32;
                     let mut dist_norm = 0.0f64;
+                    // Compensation ratio of this iteration's update and
+                    // the consumed window's (id, t_c, t_ar, blocked) —
+                    // joined into one obs row after the update runs.
+                    let mut comp_ratio = 0.0f64;
+                    let mut consumed: Option<(u64, f64, f64, f64)> = None;
                     // Membership transition decided at this window's
                     // wait: (departed ranks, joins due).
                     let mut pending_transition: Option<(Vec<usize>, Vec<usize>)> = None;
@@ -448,8 +467,45 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 .time(Phase::CommWait, || p.handle.wait_outcome(now_before_wait));
                             ctx.clock.advance_to(out.time);
                             ctx.beat(out.time);
-                            let blocked = out.time - now_before_wait;
-                            prev_t_ar = out.time - post_time;
+                            let blocked = out.blocked_since(now_before_wait);
+                            prev_t_ar = out.latency_since(post_time);
+                            // Seal span (our post → global completion),
+                            // exposed wait, and the staleness this
+                            // window's data was consumed at — the
+                            // Fig. 2 overlap accounting.
+                            hub.record(
+                                EventKind::RoundSealed,
+                                rank,
+                                p.window,
+                                post_time,
+                                out.time,
+                                "",
+                            );
+                            hub.record(
+                                EventKind::WindowConsumed,
+                                rank,
+                                p.window,
+                                now_before_wait,
+                                out.time,
+                                "",
+                            );
+                            if p.probe {
+                                hub.record(
+                                    EventKind::Probe,
+                                    rank,
+                                    p.window,
+                                    post_time,
+                                    out.time,
+                                    p.algo.name(),
+                                );
+                            }
+                            hub.staleness(rank, steps_in_window);
+                            consumed = Some((
+                                p.window,
+                                (now_before_wait - post_time).max(0.0),
+                                prev_t_ar,
+                                blocked,
+                            ));
                             let n_contrib = out.contributors.len();
                             // Decode: rebuild the dense aggregate (and
                             // the cross-rank observations) from the
@@ -552,6 +608,18 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 if p.probe {
                                     notes.push(format!("probe {}", p.algo.name()));
                                 }
+                                // Piggybacked per-slot per-step t_C split
+                                // → per-rank audit trail for the dyn_ssp
+                                // k_i decisions (µs histograms, one per
+                                // rank, under "obs" metrics).
+                                for (s, &tc) in obs.per_rank_t_c.iter().enumerate() {
+                                    if let Some(&r) = world.get(s) {
+                                        hub.metrics.observe_us(
+                                            &format!("ctrl.per_step_t_c_us.rank{r}"),
+                                            (tc.max(0.0) * 1e6) as u64,
+                                        );
+                                    }
+                                }
                                 ctx.control_log.record(ControlRecord {
                                     worker: rank,
                                     window: window_idx,
@@ -594,13 +662,18 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 &mut step_delta,
                             );
                             lam_used = info.lam;
+                            comp_ratio = info.comp_ratio();
                         } else {
                             // Unfused: correct (Eq. 10/17), optimizer
                             // step, then Eq. 12 by hand.
                             let g_in: &[f32] = match d_opt {
                                 Some(d) if lam0_eff != 0.0 => {
-                                    let lam = dc::dynamic_lambda(&ctx.g, d, lam0_eff);
+                                    let (lam, gn, cn) =
+                                        dc::dynamic_lambda_full(&ctx.g, d, lam0_eff);
                                     lam_used = lam;
+                                    if gn > 0.0 {
+                                        comp_ratio = lam as f64 * cn / gn;
+                                    }
                                     dc::dc_correct(&ctx.g, d, lam, &mut gtilde);
                                     &gtilde
                                 }
@@ -616,6 +689,32 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
 
                     tensor::add_assign(&mut window_delta, &step_delta);
                     ctx.record(t, loss, err, wall, lam_used, dist_norm, eta);
+
+                    // One obs row per consumed window, now that the
+                    // update supplied the compensation ratio; the leader
+                    // also journals the (k, λ, schedule) decision the
+                    // controller made at the wait boundary.
+                    if let Some((win, t_c, t_ar, blocked_s)) = consumed {
+                        hub.window(WindowRow {
+                            worker: rank,
+                            window: win,
+                            t_c,
+                            t_ar,
+                            blocked_s,
+                            comp_ratio,
+                        });
+                        if rank == leader {
+                            let now = ctx.clock.now();
+                            hub.record(
+                                EventKind::Decision,
+                                rank,
+                                win,
+                                now,
+                                now,
+                                format!("{} comp={comp_ratio:.6}", decision.describe()),
+                            );
+                        }
+                    }
 
                     if window_end {
                         windows_since_join += 1;
@@ -707,6 +806,20 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 },
                             });
                             if rank == leader {
+                                hub.record(
+                                    EventKind::EpochTransition,
+                                    rank,
+                                    epoch,
+                                    resync_now,
+                                    sync.t_complete,
+                                    format!(
+                                        "world={} departed={} joined={}",
+                                        world.len(),
+                                        departed.len(),
+                                        joins.len()
+                                    ),
+                                );
+                                hub.metrics.inc("membership.epochs", 1);
                                 ctx.snapshots.put(Checkpoint {
                                     iteration: t + 1,
                                     weights: w.clone(),
@@ -788,6 +901,15 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                     comm.iallgather_sched(&wire, now, algo)
                                 }
                             };
+                            hub.record(
+                                EventKind::RoundPosted,
+                                rank,
+                                window_idx,
+                                now,
+                                now,
+                                format!("k={my_k} algo={}", algo.name()),
+                            );
+                            hub.metrics.inc("comm.rounds_posted", 1);
                             posted = Some(PostedWindow {
                                 handle,
                                 own,
@@ -795,6 +917,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                                 wire_bytes: codec.wire_bytes(),
                                 ratio: codec.ratio() as f64,
                                 probe: decision.probe,
+                                window: window_idx,
                             });
                             window_delta.iter_mut().for_each(|x| *x = 0.0);
                             window_idx += 1;
@@ -867,6 +990,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     report.control = harness.control_log.clone();
     report.epochs = harness.epochs.clone();
     report.perf = Some(profiler.to_json());
+    report.obs = Some(driver.obs.clone());
+    if let Some(path) = &cfg.trace.out {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        driver.obs.journal.write_jsonl(path)?;
+    }
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;

@@ -16,6 +16,7 @@ use crate::algo::{dcs3gd, psasync, ssgd, Algo, RunReport, WorkerHarness};
 use crate::comm::{Group, SimBackend};
 use crate::config::ExperimentConfig;
 use crate::exec::{Pool, Profiler};
+use crate::obs::ObsHub;
 
 /// A runnable training engine. Implemented by the registry's
 /// [`EngineSpec`] entries; benches and examples that want to iterate
@@ -94,6 +95,10 @@ pub struct RoundDriver {
     pub pool: Pool,
     /// Wall-clock phase profiler, cloned into each rank body.
     pub profiler: std::sync::Arc<Profiler>,
+    /// Trace journal + metric registry (see [`crate::obs`]), cloned
+    /// into each rank body; virtual-time only, so its exports stay
+    /// deterministic across thread counts and backends.
+    pub obs: ObsHub,
 }
 
 impl RoundDriver {
@@ -106,7 +111,8 @@ impl RoundDriver {
         let pool = Pool::from_config(&cfg.perf);
         group.set_gate(pool.gate());
         let profiler = Profiler::new(pool.threads());
-        RoundDriver { group: Some(group), pool, profiler }
+        let obs = ObsHub::new(&cfg.trace);
+        RoundDriver { group: Some(group), pool, profiler, obs }
     }
 
     /// Driver for the parameter-server engines: pool + profiler only
@@ -115,7 +121,8 @@ impl RoundDriver {
     pub fn centralized(cfg: &ExperimentConfig) -> RoundDriver {
         let pool = Pool::from_config(&cfg.perf);
         let profiler = Profiler::new(pool.threads());
-        RoundDriver { group: None, pool, profiler }
+        let obs = ObsHub::new(&cfg.trace);
+        RoundDriver { group: None, pool, profiler, obs }
     }
 
     /// The rendezvous group. Panics on a [`RoundDriver::centralized`]
@@ -181,5 +188,13 @@ mod tests {
         let driver = RoundDriver::centralized(&cfg);
         assert_eq!(driver.backend(), SimBackend::Dense);
         assert!(driver.group.is_none());
+    }
+
+    #[test]
+    fn drivers_build_the_obs_hub_from_trace_config() {
+        let mut cfg = ExperimentConfig::builder("linear").nodes(2).build();
+        assert!(RoundDriver::collective(&cfg, cfg.nodes).obs.journal.enabled());
+        cfg.trace.capacity = 0;
+        assert!(!RoundDriver::centralized(&cfg).obs.journal.enabled());
     }
 }

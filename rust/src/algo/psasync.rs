@@ -34,6 +34,7 @@ use anyhow::Result;
 use crate::algo::{Algo, RoundDriver, RunReport, WorkerHarness};
 use crate::config::ExperimentConfig;
 use crate::exec::{Phase, RankClock};
+use crate::obs::{EventKind, WindowRow};
 use crate::optim::build_optimizer;
 use crate::ps::{ParameterServer, PsMode};
 
@@ -86,6 +87,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let cfg = cfg.clone();
             let gate = pool.gate();
             let profiler = profiler.clone();
+            let hub = driver.obs.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
                 let _permit = gate.permit();
@@ -101,13 +103,35 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             );
                         }
                     }
+                    let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = pclock.time(Phase::Compute, || ctx.train_step(&w));
+                    let t_c = ctx.clock.now() - t_before_step;
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
+                    let push_at = ctx.clock.now();
                     let reply = pclock.time(Phase::CommWait, || {
-                        client.push_pull(rank, ctx.g.clone(), ctx.clock.now(), eta, wd)
+                        client.push_pull(rank, ctx.g.clone(), push_at, eta, wd)
                     });
                     ctx.clock.advance_to(reply.done_at);
+                    // Trace span triple: the PS round-trip is fully
+                    // blocking — push and wait coincide, so the overlap
+                    // efficiency reads 0, same as SSGD. Staleness is
+                    // bucketed by whether the push saw intervening
+                    // updates (‖w_ps − w_bak‖ > 0).
+                    let win = t as u64;
+                    hub.record(EventKind::RoundPosted, rank, win, push_at, push_at, "k=1 algo=ps");
+                    hub.record(EventKind::RoundSealed, rank, win, push_at, reply.done_at, "");
+                    hub.record(EventKind::WindowConsumed, rank, win, push_at, reply.done_at, "");
+                    hub.staleness(rank, u64::from(reply.staleness_dist > 0.0));
+                    hub.metrics.inc("comm.rounds_posted", 1);
+                    hub.window(WindowRow {
+                        worker: rank,
+                        window: win,
+                        t_c,
+                        t_ar: (reply.done_at - push_at).max(0.0),
+                        blocked_s: (reply.done_at - push_at).max(0.0),
+                        comp_ratio: 0.0,
+                    });
                     w = reply.weights;
                     ctx.record(t, loss, err, wall, 0.0, reply.staleness_dist, eta);
 
@@ -142,6 +166,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
     report.perf = Some(profiler.to_json());
+    report.obs = Some(driver.obs.clone());
+    if let Some(path) = &cfg.trace.out {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        driver.obs.journal.write_jsonl(path)?;
+    }
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;

@@ -40,6 +40,7 @@ use crate::config::ExperimentConfig;
 use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
 use crate::exec::{Phase, RankClock};
 use crate::model::Checkpoint;
+use crate::obs::{EventKind, WindowRow};
 use crate::optim::build_optimizer;
 use crate::tensor;
 
@@ -75,6 +76,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let cfg = cfg.clone();
             let gate = pool.gate();
             let profiler = profiler.clone();
+            let hub = driver.obs.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
                 let _permit = gate.permit();
@@ -156,6 +158,34 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     ctx.clock.advance_to(out.time);
                     ctx.beat(out.time);
                     prev_t_ar = out.time - now_before_wait;
+                    // Trace span triple: in SSGD the post instant *is*
+                    // the wait instant — Eq. 13 has no overlap — so
+                    // blocked time equals the whole collective and the
+                    // overlap efficiency reads 0 by construction.
+                    let win = t as u64;
+                    hub.record(
+                        EventKind::RoundPosted,
+                        rank,
+                        win,
+                        now_before_wait,
+                        now_before_wait,
+                        format!("k=1 algo={}", algo.name()),
+                    );
+                    hub.record(EventKind::RoundSealed, rank, win, now_before_wait, out.time, "");
+                    hub.record(EventKind::WindowConsumed, rank, win, now_before_wait, out.time, "");
+                    if was_probe {
+                        hub.record(EventKind::Probe, rank, win, out.time, out.time, algo.name());
+                    }
+                    hub.staleness(rank, 0);
+                    hub.metrics.inc("comm.rounds_posted", 1);
+                    hub.window(WindowRow {
+                        worker: rank,
+                        window: win,
+                        t_c,
+                        t_ar: out.blocked_since(now_before_wait),
+                        blocked_s: out.blocked_since(now_before_wait),
+                        comp_ratio: 0.0,
+                    });
                     let ctrl = pclock.time(Phase::Decode, || {
                         codec.decode(&out.data, out.contributors.len(), &mut dense_sum)
                     });
@@ -187,6 +217,15 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         probe: was_probe,
                     });
                     if rank == 0 {
+                        let now = ctx.clock.now();
+                        hub.record(
+                            EventKind::Decision,
+                            rank,
+                            t as u64,
+                            now,
+                            now,
+                            format!("{} comp=0.000000", decision.describe()),
+                        );
                         ctx.control_log.record(ControlRecord {
                             worker: rank,
                             window: t,
@@ -245,6 +284,13 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
     report.perf = Some(profiler.to_json());
+    report.obs = Some(driver.obs.clone());
+    if let Some(path) = &cfg.trace.out {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        driver.obs.journal.write_jsonl(path)?;
+    }
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir)?;
         report.recorder.write_steps_csv(dir.join(format!("{}_steps.csv", cfg.name)))?;
@@ -417,6 +463,24 @@ mod tests {
             r_topk.mean_iter_time,
             r_dense.mean_iter_time
         );
+    }
+
+    #[test]
+    fn obs_windows_report_zero_overlap() {
+        // Eq. 13 in trace form: the post and wait instants coincide, so
+        // every window row is fully blocked and the headline overlap
+        // efficiency is exactly zero.
+        let mut cfg = base_cfg();
+        cfg.steps = 20;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let obs = report.obs.as_ref().expect("ssgd run carries the obs hub");
+        assert!(!obs.journal.is_empty(), "journal recorded no events");
+        assert!(
+            obs.overlap_efficiency_mean() < 1e-9,
+            "blocking baseline claims overlap: {}",
+            obs.overlap_efficiency_mean()
+        );
+        assert_eq!(obs.metrics.counter("comm.rounds_posted"), 20 * cfg.nodes as u64);
     }
 
     #[test]

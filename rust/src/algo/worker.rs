@@ -420,6 +420,12 @@ pub struct RunReport {
     /// together with `wall_time_s`, from
     /// [`RunReport::deterministic_json`].
     pub perf: Option<Json>,
+    /// Trace/metrics hub of the run (see [`crate::obs`]): event
+    /// journal, metric registry, per-window overlap/compensation and
+    /// per-rank staleness accounting. Virtual-time only, but exported
+    /// under `"obs"` and excluded from
+    /// [`RunReport::deterministic_json`] exactly like `"perf"`.
+    pub obs: Option<crate::obs::ObsHub>,
 }
 
 impl RunReport {
@@ -456,6 +462,7 @@ impl RunReport {
             epochs: EpochTrace::default(),
             hetero: cfg.hetero_profile(),
             perf: None,
+            obs: None,
         }
     }
 
@@ -510,6 +517,21 @@ impl RunReport {
         if let Some(p) = &self.perf {
             m.insert("perf".into(), p.clone());
         }
+        // Observability block: journal summary, metric registry,
+        // per-window overlap/compensation rows, per-rank t_C/t_AR and
+        // staleness splits. `enabled: false` stub when an engine ran
+        // without a hub, so consumers always find the key.
+        m.insert(
+            "obs".into(),
+            match &self.obs {
+                Some(o) => o.to_json(),
+                None => {
+                    let mut h = std::collections::BTreeMap::new();
+                    h.insert("enabled".to_string(), Json::Bool(false));
+                    Json::Obj(h)
+                }
+            },
+        );
         Json::Obj(m)
     }
 
@@ -524,10 +546,19 @@ impl RunReport {
             Json::Obj(mut m) => {
                 m.remove("perf");
                 m.remove("wall_time_s");
+                m.remove("obs");
                 Json::Obj(m)
             }
             other => other,
         }
+    }
+
+    /// The obs journal's canonical (wall-clock-free) event text — the
+    /// byte-comparable sequence the determinism proptests pin across
+    /// thread counts and simulator backends. Empty when the engine ran
+    /// without a hub or with tracing disabled.
+    pub fn obs_journal_canonical(&self) -> String {
+        self.obs.as_ref().map(|o| o.journal.canonical_text()).unwrap_or_default()
     }
 
     /// Write the run's metrics JSON (summary + control trace).

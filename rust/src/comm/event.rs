@@ -125,6 +125,24 @@ pub struct RoundStat {
     pub materialized: usize,
 }
 
+/// Fold/materialize accounting over a [`CohortSim`]'s lifetime — the
+/// evidence that the arena stays **event-bounded**: ranks materialize
+/// only when an event touches them, so `arena_max` tracks the event
+/// script (plus derived revocations), not the fleet size, and every
+/// refold is paid for by a prior split.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FoldStats {
+    /// High-water mark of the materialized arena (ranks tracked
+    /// individually at once). Dense mode reports the fleet size.
+    pub arena_max: usize,
+    /// Ranks folded back into their tier cohort after going quiet.
+    pub refolds: u64,
+    /// Events that actually fired (cursor advanced past them).
+    pub events_applied: u64,
+    /// Total events in the schedule (scripted + derived revocations).
+    pub events_total: u64,
+}
+
 /// A materialized rank's state in the arena.
 #[derive(Debug, Clone, Copy)]
 struct RankState {
@@ -157,6 +175,7 @@ pub struct CohortSim {
     dense: bool,
     t: f64,
     round: u64,
+    stats: FoldStats,
 }
 
 impl CohortSim {
@@ -203,6 +222,11 @@ impl CohortSim {
                 materialized.insert(r, RankState { tier, quarantined: false, quiet: 0 });
             }
         }
+        let stats = FoldStats {
+            arena_max: materialized.len(),
+            events_total: events.len() as u64,
+            ..FoldStats::default()
+        };
         CohortSim {
             sc,
             cohorts,
@@ -215,6 +239,7 @@ impl CohortSim {
             dense,
             t: 0.0,
             round: 0,
+            stats,
         }
     }
 
@@ -273,6 +298,7 @@ impl CohortSim {
         while self.cursor < self.events.len() && self.events[self.cursor].at_s <= now {
             let e = self.events[self.cursor];
             self.cursor += 1;
+            self.stats.events_applied += 1;
             if let Some(p) = self.pending.get_mut(&e.rank) {
                 *p -= 1;
             }
@@ -326,6 +352,7 @@ impl CohortSim {
         for r in back {
             let s = self.materialized.remove(&r).expect("listed above");
             *self.cohorts.entry(s.tier.to_bits()).or_insert(0) += 1;
+            self.stats.refolds += 1;
         }
     }
 
@@ -334,6 +361,7 @@ impl CohortSim {
     /// live contributor set, refold.
     pub fn step(&mut self) -> RoundStat {
         self.apply_events(self.t);
+        self.stats.arena_max = self.stats.arena_max.max(self.materialized.len());
         let t0 = self.t;
         let diurnal = self.sc.hetero.enabled && self.sc.hetero.diurnal_amplitude > 0.0;
         let mut t_post: f64 = t0;
@@ -373,6 +401,21 @@ impl CohortSim {
     /// Run the scenario's configured round count, returning the trace.
     pub fn run(&mut self) -> Vec<RoundStat> {
         (0..self.sc.rounds).map(|_| self.step()).collect()
+    }
+
+    /// Lifetime fold/materialize accounting — see [`FoldStats`].
+    pub fn stats(&self) -> FoldStats {
+        self.stats
+    }
+
+    /// Export the fold accounting into an obs metric registry under the
+    /// `sim.cohort.*` namespace (counters; `arena_max` is a high-water
+    /// mark across every sim that exports into the same registry).
+    pub fn export_obs(&self, m: &crate::obs::Metrics) {
+        m.counter_max("sim.cohort.arena_max", self.stats.arena_max as u64);
+        m.inc("sim.cohort.refolds", self.stats.refolds);
+        m.inc("sim.cohort.events_applied", self.stats.events_applied);
+        m.inc("sim.cohort.events_total", self.stats.events_total);
     }
 }
 
@@ -531,6 +574,31 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.t_complete.to_bits(), y.t_complete.to_bits());
         }
+    }
+
+    #[test]
+    fn fold_stats_are_event_bounded_and_export_to_obs() {
+        let mut sc = ScaleScenario::uniform(10_000, 1000, 1e-3, net());
+        sc.rounds = 10;
+        sc.hetero = hetero_tiers();
+        sc.events = vec![
+            scripted(FleetEventKind::Probe, 3, 0.001),
+            scripted(FleetEventKind::Join, 10_000, 0.002),
+            scripted(FleetEventKind::Revoke, 17, 0.003),
+        ];
+        let mut sim = CohortSim::new(sc);
+        sim.run();
+        let st = sim.stats();
+        assert_eq!(st.events_total, 3);
+        assert_eq!(st.events_applied, 3, "every scripted event fires within 10 rounds");
+        // Event-bounded arena: only touched ranks ever materialize.
+        assert!(st.arena_max <= st.events_total as usize, "arena {} > events", st.arena_max);
+        assert!(st.refolds <= st.events_total, "refolds {} > events", st.refolds);
+        assert!(st.refolds >= 1, "the quiet probe/join ranks fold back");
+        let m = crate::obs::Metrics::new();
+        sim.export_obs(&m);
+        assert_eq!(m.counter("sim.cohort.arena_max"), st.arena_max as u64);
+        assert_eq!(m.counter("sim.cohort.events_applied"), 3);
     }
 
     #[test]

@@ -789,6 +789,21 @@ pub struct RoundOutcome {
     pub contributors: Arc<Vec<usize>>,
 }
 
+impl RoundOutcome {
+    /// Exposed (non-overlapped) wait, given the virtual instant the
+    /// rank entered the wait — the `blocked_s` the obs layer accounts
+    /// per window. Zero when the round had already sealed.
+    pub fn blocked_since(&self, wait_start: f64) -> f64 {
+        (self.time - wait_start).max(0.0)
+    }
+
+    /// End-to-end collective latency t_AR, given the post instant —
+    /// the denominator of the per-window overlap efficiency.
+    pub fn latency_since(&self, post_time: f64) -> f64 {
+        (self.time - post_time).max(0.0)
+    }
+}
+
 impl Comm {
     pub fn rank(&self) -> usize {
         self.rank

@@ -114,6 +114,13 @@ pub struct ExperimentConfig {
     /// the knob is excluded from run JSON for that reason.
     pub sim: SimConfig,
 
+    /// Trace/observability knobs (the `[trace]` TOML table; see
+    /// [`crate::obs`] and `docs/observability.md`): journal ring
+    /// capacity and the optional `--trace-out` JSONL path. Virtual-time
+    /// only — the `"obs"` block is excluded from `deterministic_json()`
+    /// exactly like `"perf"`.
+    pub trace: TraceConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -130,6 +137,28 @@ pub struct ExperimentConfig {
 pub struct SimConfig {
     /// Rendezvous storage/completion strategy. See [`SimBackend`].
     pub backend: SimBackend,
+}
+
+/// Trace/observability knobs (the `[trace]` TOML table; see
+/// [`crate::obs`]). The event journal is a bounded ring: `capacity`
+/// events per rank lane and per export, oldest dropped first (with a
+/// dropped count in the `"obs"` block). `capacity = 0` disables event
+/// recording entirely; the metric/window accounting stays on either
+/// way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Journal ring capacity in events (`--trace-capacity`; 0 = off).
+    pub capacity: usize,
+    /// Write the merged journal as JSONL here at the end of the run
+    /// (`--trace-out`). Feed it to `trace-report` or
+    /// `tools/trace_to_chrome.py`.
+    pub out: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: 65_536, out: None }
+    }
 }
 
 impl ExperimentConfig {
@@ -170,6 +199,7 @@ impl ExperimentConfig {
             hetero: HeteroConfig::default(),
             perf: PerfConfig::default(),
             sim: SimConfig::default(),
+            trace: TraceConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -389,6 +419,10 @@ impl ExperimentConfig {
                         anyhow::anyhow!("unknown sim.backend {s:?} (dense | folded)")
                     })?
                 }
+                "trace.capacity" => {
+                    cfg.trace.capacity = val.as_i64().ok_or_else(err)? as usize
+                }
+                "trace.out" => cfg.trace.out = Some(val.as_str().ok_or_else(err)?.into()),
                 // deprecated flat single-fault spelling; prefer
                 // `[[control.fault]]` tables.
                 "control.fault_rank" => {
@@ -996,6 +1030,16 @@ impl RunBuilder {
         self.cfg.sim.backend = v;
         self
     }
+    /// Obs journal ring capacity in events (`0` disables tracing).
+    pub fn trace_capacity(mut self, v: usize) -> Self {
+        self.cfg.trace.capacity = v;
+        self
+    }
+    /// Write the merged JSONL trace here at the end of the run.
+    pub fn trace_out(mut self, v: impl Into<PathBuf>) -> Self {
+        self.cfg.trace.out = Some(v.into());
+        self
+    }
 
     pub fn build(self) -> ExperimentConfig {
         self.cfg.validate().expect("invalid config");
@@ -1184,6 +1228,29 @@ mod tests {
         let cfg = ExperimentConfig::builder("linear").backend(SimBackend::Folded).build();
         assert_eq!(cfg.sim.backend, SimBackend::Folded);
         assert_eq!(ExperimentConfig::builder("linear").build().sim.backend, SimBackend::Dense);
+    }
+
+    #[test]
+    fn trace_knobs_parse_and_default() {
+        let cfg = ExperimentConfig::from_toml_str("nodes = 4").unwrap();
+        assert_eq!(cfg.trace.capacity, 65_536);
+        assert!(cfg.trace.out.is_none());
+        let cfg = ExperimentConfig::from_toml_str(
+            "nodes = 4\n[trace]\ncapacity = 128\nout = \"runs/t.jsonl\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace.capacity, 128);
+        assert_eq!(cfg.trace.out, Some(PathBuf::from("runs/t.jsonl")));
+    }
+
+    #[test]
+    fn builder_sets_the_trace_knobs() {
+        let cfg = ExperimentConfig::builder("linear")
+            .trace_capacity(0)
+            .trace_out("t.jsonl")
+            .build();
+        assert_eq!(cfg.trace.capacity, 0);
+        assert_eq!(cfg.trace.out, Some(PathBuf::from("t.jsonl")));
     }
 
     #[test]

@@ -173,6 +173,26 @@ impl Decision {
             _ => self.k,
         }
     }
+
+    /// One-line `key=value` summary for the obs journal's `decision`
+    /// event detail (space-separated so the trace analyzer can split
+    /// it back into fields).
+    pub fn describe(&self) -> String {
+        let mut s = format!("k={} lam_scale={}", self.k, self.lam_scale);
+        if let Some(a) = self.schedule {
+            s.push_str(&format!(" sched={}", a.name()));
+        }
+        if let Some(q) = &self.quarantine {
+            s.push_str(&format!(" quarantine=g{}", q.group));
+        }
+        if let Some(r) = self.compress_ratio {
+            s.push_str(&format!(" ratio={r}"));
+        }
+        if self.probe {
+            s.push_str(" probe=1");
+        }
+        s
+    }
 }
 
 /// A staleness policy. One instance per worker; see the module docs for

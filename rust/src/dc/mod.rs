@@ -33,17 +33,26 @@ pub struct DcHyper {
 /// any training-relevant regime (λ is O(1)–O(10³) mid-training).
 pub const LAMBDA_MAX: f32 = 1e6;
 
+/// Eq. 17 with its reductions exposed: `(λ, ‖g‖, ‖g⊙g⊙D‖)` from one
+/// fused pass — callers that also want the compensation ratio
+/// λ·‖g⊙g⊙D‖/‖g‖ (the `"obs"` per-window metric) get it without a
+/// second reduction.
+pub fn dynamic_lambda_full(g: &[f32], d: &[f32], lam0: f32) -> (f32, f64, f64) {
+    // One fused pass for both reductions (§Perf iteration 2).
+    let (gn, cn) = tensor::lambda_norms(g, d);
+    let lam = if cn > 0.0 {
+        ((lam0 as f64 * gn / cn.max(1e-30)) as f32).min(LAMBDA_MAX)
+    } else {
+        0.0
+    };
+    (lam, gn, cn)
+}
+
 /// Eq. 17: dynamic λ_i = λ0·‖g‖ / ‖g ⊙ g ⊙ D‖, guarded for the D = 0
 /// first iteration (returns 0, making the correction an exact no-op)
 /// and clamped to [`LAMBDA_MAX`].
 pub fn dynamic_lambda(g: &[f32], d: &[f32], lam0: f32) -> f32 {
-    // One fused pass for both reductions (§Perf iteration 2).
-    let (gn, cn) = tensor::lambda_norms(g, d);
-    if cn > 0.0 {
-        ((lam0 as f64 * gn / cn.max(1e-30)) as f32).min(LAMBDA_MAX)
-    } else {
-        0.0
-    }
+    dynamic_lambda_full(g, d, lam0).0
 }
 
 /// Eq. 10 (unfused): `g~ = g + λ · g ⊙ g ⊙ d`.
@@ -68,6 +77,26 @@ pub struct DcStepInfo {
     pub lam: f32,
     pub grad_norm: f64,
     pub update_norm: f64,
+    /// Eq. 17 denominator ‖g ⊙ g ⊙ D‖ (0 when no correction ran) —
+    /// kept so the compensation ratio falls out of reductions the
+    /// update already paid for.
+    pub corr_denom: f64,
+}
+
+impl DcStepInfo {
+    /// Compensation ratio ‖λ·g⊙g⊙D‖ / ‖g‖ = λ·corr_denom/‖g‖ — the
+    /// DC-ASGD-style health signal for how much work the delay
+    /// compensation is doing, exported per window under `"obs"`. By
+    /// the Eq. 17 normalization this sits at λ0 whenever the dynamic λ
+    /// is uncapped; deviations mean the [`LAMBDA_MAX`] clamp engaged
+    /// (or compensation is off entirely → 0).
+    pub fn comp_ratio(&self) -> f64 {
+        if self.grad_norm > 0.0 {
+            self.lam as f64 * self.corr_denom / self.grad_norm
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Fused DC-S3GD update (Eqs. 10–12 + momentum + weight decay):
@@ -110,7 +139,7 @@ pub fn dc_correct_update(
     // §Perf iteration 4: one reduction pass yields both ‖g‖ (grad_norm)
     // and the Eq. 17 denominator — previously norm2(g) ran twice (once
     // here, once inside dynamic_lambda).
-    let (grad_norm, lam) = match d {
+    let (grad_norm, lam, corr_denom) = match d {
         Some(d) if hp.lam0 != 0.0 => {
             let (gn, cn) = tensor::lambda_norms(g, d);
             let lam = if cn > 0.0 {
@@ -118,9 +147,9 @@ pub fn dc_correct_update(
             } else {
                 0.0
             };
-            (gn, lam)
+            (gn, lam, cn)
         }
-        _ => (tensor::norm2(g), 0.0),
+        _ => (tensor::norm2(g), 0.0, 0.0),
     };
 
     // Single fused elementwise pass, blocked at the engine's pinned
@@ -213,7 +242,7 @@ pub fn dc_correct_update(
         }
     }
 
-    DcStepInfo { lam, grad_norm, update_norm: tensor::norm2(delta_w_out) }
+    DcStepInfo { lam, grad_norm, corr_denom, update_norm: tensor::norm2(delta_w_out) }
 }
 
 /// Eq. 9: `D_i = Δ̄w/N − Δw_i`, computed from the all-reduced sum of
@@ -327,6 +356,25 @@ mod tests {
             let expect = if mask[i] == 1.0 { 1.0 - 0.1 } else { 1.0 };
             assert!((w[i] - expect).abs() < 1e-6, "w[{i}]={}", w[i]);
         }
+    }
+
+    #[test]
+    fn comp_ratio_sits_at_lam0_when_uncapped() {
+        let n = 500;
+        let g = randvec(30, n);
+        let d = randvec(31, n);
+        let hp = DcHyper { eta: 0.1, mu: 0.9, lam0: 0.2, wd: 0.0 };
+        let (mut v, mut w, mut dw) = (vec![0.0; n], randvec(32, n), vec![0.0; n]);
+        let info = dc_correct_update(&g, Some(&d), &mut v, &mut w, None, hp, &mut dw);
+        // Eq. 17 normalizes the correction to λ0‖g‖, so the ratio is λ0.
+        assert!((info.comp_ratio() - 0.2).abs() < 1e-5, "{}", info.comp_ratio());
+        assert!(info.corr_denom > 0.0);
+
+        // Compensation off → ratio 0, denominator 0.
+        let (mut v, mut w, mut dw) = (vec![0.0; n], randvec(33, n), vec![0.0; n]);
+        let info = dc_correct_update(&g, None, &mut v, &mut w, None, hp, &mut dw);
+        assert_eq!(info.comp_ratio(), 0.0);
+        assert_eq!(info.corr_denom, 0.0);
     }
 
     #[test]

@@ -309,6 +309,17 @@ impl Phase {
 /// `[2^i, 2^(i+1))` µs; the last bucket is open-ended.
 pub const HIST_BUCKETS: usize = 20;
 
+/// The log₂(µs) bucket a `us`-microsecond duration lands in — the one
+/// histogram shape shared by the `"perf"` profiler here and the
+/// [`crate::obs`] metric registry (`"obs"` histograms).
+pub fn log2_us_bucket(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
 #[derive(Debug, Clone)]
 struct PhaseAccum {
     count: u64,
@@ -327,13 +338,7 @@ impl PhaseAccum {
         self.count += 1;
         self.total_s += s;
         self.max_s = self.max_s.max(s);
-        let us = d.as_micros() as u64;
-        let bucket = if us == 0 {
-            0
-        } else {
-            (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
-        };
-        self.hist[bucket] += 1;
+        self.hist[log2_us_bucket(d.as_micros() as u64)] += 1;
     }
 
     fn merge(&mut self, other: &PhaseAccum) {

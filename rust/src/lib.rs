@@ -50,6 +50,7 @@ pub mod exec;
 pub mod hetero;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod ps;
 pub mod runtime;

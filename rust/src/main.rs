@@ -4,6 +4,7 @@
 //!   train          run one experiment (config file and/or flags)
 //!   sweep          run a {algo × nodes × batch} sweep, print table rows
 //!   bench-comm     all-reduce cost-model sweep
+//!   trace-report   analyze a --trace-out JSONL journal
 //!   list-artifacts show the AOT variants the runtime can load
 //!   help           this text
 
@@ -44,8 +45,10 @@ USAGE:
                [--hetero-spot-correlation C] [--hetero-diurnal-amplitude A]
                [--hetero-diurnal-period S] [--hetero-link-spread X]
                [--threads T] [--pin-chunk C] [--sim-backend dense|folded]
+               [--trace-out FILE] [--trace-capacity N]
   dcs3gd sweep [--variant V] [--algos a,b,c] [--nodes 2,4,8] [--steps S]
   dcs3gd bench-comm [--elems N] [--max-ranks R]
+  dcs3gd trace-report --trace FILE
   dcs3gd list-artifacts [--root DIR]
 
 Algorithms:       ssgd | s3gd | dcs3gd | dyn_ssp | sgs | asgd | dcasgd
@@ -83,6 +86,13 @@ Heterogeneity:    --hetero turns on the heterogeneous fabric: per-rank
                   time (--hetero-diurnal-*) and per-link bandwidth
                   spread (--hetero-link-spread); all draws are pure in
                   (seed, rank) — see docs/heterogeneity.md
+Tracing:          --trace-out FILE streams the run's event journal as
+                  JSONL (convert with tools/trace_to_chrome.py for the
+                  chrome://tracing view); --trace-capacity N bounds the
+                  per-rank ring buffer (0 disables tracing entirely).
+                  `trace-report` prints overlap efficiency, straggler
+                  attribution and anomaly flags — see
+                  docs/observability.md
 ";
 
 fn main() {
@@ -98,6 +108,7 @@ fn real_main() -> Result<()> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "bench-comm" => cmd_bench_comm(&args),
+        "trace-report" => cmd_trace_report(&args),
         "list-artifacts" => cmd_list_artifacts(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
@@ -279,6 +290,11 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.sim.backend = SimBackend::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown --sim-backend {b:?} (dense | folded)"))?;
     }
+    // trace/metrics subsystem: JSONL journal sink + ring-buffer bound
+    cfg.trace.capacity = args.get_usize("trace-capacity", cfg.trace.capacity)?;
+    if let Some(p) = args.get("trace-out") {
+        cfg.trace.out = Some(p.into());
+    }
     if let Some(d) = args.get("out-dir") {
         cfg.out_dir = Some(d.into());
     }
@@ -419,6 +435,22 @@ fn cmd_bench_comm(args: &Args) -> Result<()> {
         n *= 2;
     }
     let _ = ComputeModel::default(); // keep the import honest
+    Ok(())
+}
+
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    use dcs3gd::obs::report::{analyze, parse_jsonl, render};
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("trace-report needs --trace FILE (a --trace-out journal)"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace {path:?}: {e}"))?;
+    let events = parse_jsonl(&text)?;
+    if events.is_empty() {
+        bail!("trace {path:?} holds no events (was the run started with --trace-capacity 0?)");
+    }
+    let report = analyze(&events);
+    print!("{}", render(&report));
     Ok(())
 }
 

@@ -1,0 +1,748 @@
+//! Observability: the span/event journal, the metric registry, and the
+//! run-JSON `"obs"` exporter shared by every engine.
+//!
+//! The paper's whole pitch is overlapping the all-reduce under the next
+//! window's compute (arXiv 1911.02516 Eq. 13 vs Eq. 14) and paying for
+//! the induced staleness with the Eq. 9/17 correction — this module is
+//! the instrument that *measures* both. Three pieces:
+//!
+//! 1. [`Journal`] — a bounded ring-buffer of typed [`TraceEvent`]s
+//!    (`[trace] capacity` per rank lane, drop-oldest with a dropped
+//!    count), recorded in **virtual time** and exported as JSONL
+//!    (`--trace-out`); `tools/trace_to_chrome.py` turns the JSONL into
+//!    a chrome://tracing view.
+//! 2. [`Metrics`] — named counters / gauges / log₂-µs histograms (the
+//!    same bucket shape as [`crate::exec::Profiler`], via
+//!    [`crate::exec::log2_us_bucket`]), populated by the algo / comm /
+//!    control / compress / hetero layers.
+//! 3. [`ObsHub`] — the per-run handle engines thread through their rank
+//!    bodies; it derives the headline metrics: **overlap efficiency**
+//!    per window (fraction of t_AR hidden under t_C — the paper's
+//!    Fig. 2 quantity), the **staleness distribution** per rank, and
+//!    the **compensation ratio** ‖λ·g⊙g⊙D‖/‖g‖ per window
+//!    (arXiv 1609.08326's health signal for delay compensation).
+//!
+//! Determinism contract: every exported field is a pure function of
+//! virtual time, so the `"obs"` block is byte-identical run-to-run and
+//! across `[perf] threads` / `[sim] backend` settings (pinned by the
+//! engine proptests). The only wall-clock field anywhere is the
+//! `wall_s` annotation on JSONL lines, which [`Journal::canonical_text`]
+//! strips; like `"perf"`, the whole `"obs"` block is removed by
+//! `RunReport::deterministic_json`. See `docs/observability.md`.
+
+pub mod report;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::TraceConfig;
+use crate::exec::{log2_us_bucket, HIST_BUCKETS};
+use crate::util::Json;
+
+/// The typed event vocabulary. Names are the JSONL `"kind"` strings
+/// (see `docs/observability.md` for the schema table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A rank posted its window contribution to the collective (or the
+    /// PS push departed). Span start = post instant.
+    RoundPosted,
+    /// The round's contributor set closed and the reduction completed:
+    /// span runs from the rank's own post to the global seal.
+    RoundSealed,
+    /// The rank blocked on (and consumed) a sealed window: span runs
+    /// from wait-entry to consumption — its length is the *exposed*
+    /// (non-overlapped) part of t_AR.
+    WindowConsumed,
+    /// A membership epoch boundary (world resize + resync).
+    EpochTransition,
+    /// A controller decision `(k, λ-scale, schedule, …)` for the next
+    /// window; `detail` carries [`crate::control::Decision::describe`].
+    Decision,
+    /// A scripted or derived fault: departure, revocation, slowdown.
+    Fault,
+    /// A probe window ran the inactive schedule candidate.
+    Probe,
+}
+
+impl EventKind {
+    /// Every kind, in declaration order.
+    pub const ALL: [EventKind; 7] = [
+        EventKind::RoundPosted,
+        EventKind::RoundSealed,
+        EventKind::WindowConsumed,
+        EventKind::EpochTransition,
+        EventKind::Decision,
+        EventKind::Fault,
+        EventKind::Probe,
+    ];
+
+    /// The JSONL `"kind"` string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::RoundPosted => "round_posted",
+            EventKind::RoundSealed => "round_sealed",
+            EventKind::WindowConsumed => "window_consumed",
+            EventKind::EpochTransition => "epoch_transition",
+            EventKind::Decision => "decision",
+            EventKind::Fault => "fault",
+            EventKind::Probe => "probe",
+        }
+    }
+
+    /// Inverse of [`EventKind::name`] (used by the trace analyzer).
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One journal entry: a virtual-time span (`t_start == t_end` for
+/// instantaneous events) tagged with the rank that recorded it and the
+/// window / round / epoch id it belongs to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    /// Recording rank (leader rank for leader-only events).
+    pub rank: usize,
+    /// Window / round id; epoch id for [`EventKind::EpochTransition`].
+    pub window: u64,
+    /// Virtual-time span start (seconds).
+    pub t_start: f64,
+    /// Virtual-time span end (seconds, `>= t_start`).
+    pub t_end: f64,
+    /// Short free-form annotation (`"k=2 lam=1.00"`, `"depart"`, …).
+    pub detail: String,
+    /// Per-rank-lane sequence number (record order within the rank).
+    pub seq: u64,
+    /// Wall-clock seconds since journal creation — the one
+    /// nondeterministic field; JSONL-only, stripped from canonical
+    /// views.
+    pub wall_s: f64,
+}
+
+impl TraceEvent {
+    /// The deterministic (virtual-time-only) JSON object: no `wall_s`.
+    pub fn canonical_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
+        m.insert("rank".to_string(), Json::Num(self.rank as f64));
+        m.insert("window".to_string(), Json::Num(self.window as f64));
+        m.insert("t_start".to_string(), Json::Num(self.t_start));
+        m.insert("t_end".to_string(), Json::Num(self.t_end));
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        if !self.detail.is_empty() {
+            m.insert("detail".to_string(), Json::Str(self.detail.clone()));
+        }
+        Json::Obj(m)
+    }
+
+    /// The full JSONL record: canonical fields plus the wall-clock
+    /// annotation.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.canonical_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        }
+        j
+    }
+}
+
+#[derive(Debug, Default)]
+struct Lane {
+    events: VecDeque<TraceEvent>,
+    seq: u64,
+    dropped: u64,
+}
+
+/// Bounded span/event journal. Each rank records into its own lane
+/// (per-lane sequence numbers, per-lane drop-oldest at `capacity`), so
+/// record order never depends on thread interleaving; the export merge
+/// sorts by `(t_start, rank, seq)` and applies the global `capacity`
+/// cap drop-oldest — both deterministic. `capacity = 0` disables
+/// recording entirely (the tracing-off mode the overhead gate in
+/// `benches/engine.rs` measures against).
+#[derive(Debug, Clone)]
+pub struct Journal {
+    lanes: Arc<Mutex<BTreeMap<usize, Lane>>>,
+    capacity: usize,
+    started: Instant,
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Journal {
+        Journal { lanes: Arc::new(Mutex::new(BTreeMap::new())), capacity, started: Instant::now() }
+    }
+
+    /// Whether events are being recorded (`[trace] capacity > 0`).
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Configured ring capacity (per rank lane and per export).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one event. No-op when the journal is disabled. `t_start`
+    /// and `t_end` are virtual-time seconds; the wall-clock annotation
+    /// is stamped here and never leaves the JSONL view.
+    pub fn record(
+        &self,
+        kind: EventKind,
+        rank: usize,
+        window: u64,
+        t_start: f64,
+        t_end: f64,
+        detail: impl Into<String>,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let mut lanes = self.lanes.lock().unwrap();
+        let lane = lanes.entry(rank).or_default();
+        let seq = lane.seq;
+        lane.seq += 1;
+        lane.events.push_back(TraceEvent {
+            kind,
+            rank,
+            window,
+            t_start,
+            t_end,
+            detail: detail.into(),
+            seq,
+            wall_s,
+        });
+        if lane.events.len() > self.capacity {
+            lane.events.pop_front();
+            lane.dropped += 1;
+        }
+    }
+
+    /// The merged journal: events sorted by `(t_start, rank, seq)`
+    /// with the global capacity cap applied (oldest dropped first),
+    /// plus the total dropped count (per-lane drops + merge drops).
+    pub fn events(&self) -> (Vec<TraceEvent>, u64) {
+        let lanes = self.lanes.lock().unwrap();
+        let mut all: Vec<TraceEvent> =
+            lanes.values().flat_map(|l| l.events.iter().cloned()).collect();
+        let mut dropped: u64 = lanes.values().map(|l| l.dropped).sum();
+        all.sort_by(|a, b| {
+            a.t_start
+                .total_cmp(&b.t_start)
+                .then(a.rank.cmp(&b.rank))
+                .then(a.seq.cmp(&b.seq))
+        });
+        if self.capacity > 0 && all.len() > self.capacity {
+            let overflow = all.len() - self.capacity;
+            all.drain(..overflow);
+            dropped += overflow as u64;
+        }
+        (all, dropped)
+    }
+
+    /// Retained event count after the merge cap.
+    pub fn len(&self) -> usize {
+        self.events().0.len()
+    }
+
+    /// True when no events are retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events dropped by the ring (per-lane + merge).
+    pub fn dropped(&self) -> u64 {
+        self.events().1
+    }
+
+    /// The deterministic journal view: one canonical JSON object per
+    /// line, wall-clock fields stripped. Byte-identical across thread
+    /// counts and simulator backends (pinned by the engine proptests).
+    pub fn canonical_text(&self) -> String {
+        let (events, _) = self.events();
+        let mut out = String::new();
+        for e in &events {
+            out.push_str(&e.canonical_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The full JSONL export (`--trace-out` payload): canonical fields
+    /// plus the `wall_s` annotation per line.
+    pub fn to_jsonl(&self) -> String {
+        let (events, _) = self.events();
+        let mut out = String::new();
+        for e in &events {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write [`Journal::to_jsonl`] to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<u64>>,
+}
+
+/// Named counters / gauges / log₂-µs histograms. Exported sorted by
+/// name under the run JSON's `"obs"` key, so layers register metrics
+/// just by populating them. Values must be virtual-time-derived —
+/// wall-clock readings belong in `"perf"`, not here (the `"obs"`
+/// block is pinned byte-identical run-to-run).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<MetricsInner>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `by` to the named counter (registering it at 0 first).
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Raise the named counter to `v` if `v` is larger (high-water
+    /// marks, e.g. the cohort arena).
+    pub fn counter_max(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let c = g.counters.entry(name.to_string()).or_insert(0);
+        *c = (*c).max(v);
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn gauge(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record a `us`-microsecond observation into the named log₂
+    /// histogram (same bucket shape as the `"perf"` profiler).
+    pub fn observe_us(&self, name: &str, us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let h = g.hists.entry(name.to_string()).or_insert_with(|| vec![0; HIST_BUCKETS]);
+        h[log2_us_bucket(us)] += 1;
+    }
+
+    /// Current value of a counter (0 if unregistered).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// `{"counters": {..}, "gauges": {..}, "hist_log2_us": {..}}` with
+    /// histograms trailing-zero-trimmed like the profiler's.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut out = BTreeMap::new();
+        out.insert(
+            "counters".to_string(),
+            Json::Obj(
+                g.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+            ),
+        );
+        out.insert(
+            "gauges".to_string(),
+            Json::Obj(g.gauges.iter().map(|(k, v)| (k.clone(), num(*v))).collect()),
+        );
+        out.insert(
+            "hist_log2_us".to_string(),
+            Json::Obj(
+                g.hists
+                    .iter()
+                    .map(|(k, h)| {
+                        let keep = h.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1);
+                        (
+                            k.clone(),
+                            Json::Arr(h[..keep].iter().map(|&c| Json::Num(c as f64)).collect()),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(out)
+    }
+}
+
+/// One consumed window's overlap/compensation accounting, recorded at
+/// the rank's wait site. All fields are virtual-time seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowRow {
+    /// Consuming rank.
+    pub worker: usize,
+    /// Consumed window id.
+    pub window: u64,
+    /// Compute time the rank spent between posting this window and
+    /// blocking on it — the budget t_AR can hide under (Eq. 14).
+    pub t_c: f64,
+    /// Observed end-to-end all-reduce latency: post → seal/consume.
+    pub t_ar: f64,
+    /// Exposed wait: the part of `t_ar` that was *not* hidden.
+    pub blocked_s: f64,
+    /// ‖λ·g⊙g⊙D‖ / ‖g‖ for the correction applied at this window
+    /// (0 when no compensation ran).
+    pub comp_ratio: f64,
+}
+
+impl WindowRow {
+    /// Fraction of `t_ar` hidden under compute — the paper's Fig. 2
+    /// quantity. 1.0 = fully overlapped, 0.0 = fully exposed (blocking
+    /// SSGD); 0.0 when `t_ar` is zero.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.t_ar > 0.0 {
+            ((self.t_ar - self.blocked_s) / self.t_ar).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut m = BTreeMap::new();
+        m.insert("worker".to_string(), Json::Num(self.worker as f64));
+        m.insert("window".to_string(), Json::Num(self.window as f64));
+        m.insert("t_c".to_string(), num(self.t_c));
+        m.insert("t_ar".to_string(), num(self.t_ar));
+        m.insert("blocked_s".to_string(), num(self.blocked_s));
+        m.insert("overlap_efficiency".to_string(), num(self.overlap_efficiency()));
+        m.insert("comp_ratio".to_string(), num(self.comp_ratio));
+        Json::Obj(m)
+    }
+}
+
+/// Per-rank t_C/t_AR running totals — the observation split `dyn_ssp`
+/// tunes `k_i` from, exported so its decisions can be audited post-run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RankObs {
+    pub windows: u64,
+    pub t_c_total: f64,
+    pub t_ar_total: f64,
+}
+
+/// The per-run observability handle: journal + metric registry + the
+/// derived per-window / per-rank accounting. Cloned into each rank
+/// body by the engines (all state is `Arc`-shared); built by
+/// `RoundDriver` from `[trace]`.
+#[derive(Debug, Clone)]
+pub struct ObsHub {
+    pub journal: Journal,
+    pub metrics: Metrics,
+    windows: Arc<Mutex<Vec<WindowRow>>>,
+    ranks: Arc<Mutex<BTreeMap<usize, RankObs>>>,
+    staleness: Arc<Mutex<BTreeMap<(usize, u64), u64>>>,
+}
+
+impl ObsHub {
+    pub fn new(cfg: &TraceConfig) -> ObsHub {
+        ObsHub {
+            journal: Journal::new(cfg.capacity),
+            metrics: Metrics::new(),
+            windows: Arc::new(Mutex::new(Vec::new())),
+            ranks: Arc::new(Mutex::new(BTreeMap::new())),
+            staleness: Arc::new(Mutex::new(BTreeMap::new())),
+        }
+    }
+
+    /// Shorthand for [`Journal::record`].
+    pub fn record(
+        &self,
+        kind: EventKind,
+        rank: usize,
+        window: u64,
+        t_start: f64,
+        t_end: f64,
+        detail: impl Into<String>,
+    ) {
+        self.journal.record(kind, rank, window, t_start, t_end, detail);
+    }
+
+    /// Record one consumed window's accounting; also folds the row
+    /// into the per-rank t_C/t_AR split.
+    pub fn window(&self, row: WindowRow) {
+        {
+            let mut ranks = self.ranks.lock().unwrap();
+            let r = ranks.entry(row.worker).or_default();
+            r.windows += 1;
+            r.t_c_total += row.t_c;
+            r.t_ar_total += row.t_ar;
+        }
+        self.windows.lock().unwrap().push(row);
+    }
+
+    /// Count one window consumed by `rank` at the given staleness
+    /// (window length k for the windowed engines, observed PS delay
+    /// for the async family).
+    pub fn staleness(&self, rank: usize, staleness: u64) {
+        *self.staleness.lock().unwrap().entry((rank, staleness)).or_insert(0) += 1;
+    }
+
+    /// All window rows, sorted by `(window, worker)` — push order is
+    /// thread-dependent, so the export order is imposed here.
+    pub fn windows(&self) -> Vec<WindowRow> {
+        let mut rows = self.windows.lock().unwrap().clone();
+        rows.sort_by(|a, b| a.window.cmp(&b.window).then(a.worker.cmp(&b.worker)));
+        rows
+    }
+
+    /// Mean overlap efficiency over windows with `t_ar > 0`.
+    pub fn overlap_efficiency_mean(&self) -> f64 {
+        let rows = self.windows();
+        let (mut sum, mut n) = (0.0, 0u64);
+        for r in rows.iter().filter(|r| r.t_ar > 0.0) {
+            sum += r.overlap_efficiency();
+            n += 1;
+        }
+        if n > 0 { sum / n as f64 } else { 0.0 }
+    }
+
+    /// The run JSON `"obs"` block. Deterministic: virtual-time fields
+    /// only, maps sorted, rows ordered by `(window, worker)`.
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let rows = self.windows();
+        let (events, dropped) = self.journal.events();
+
+        let mut comp_sum = 0.0;
+        let mut comp_n = 0u64;
+        for r in &rows {
+            if r.comp_ratio > 0.0 {
+                comp_sum += r.comp_ratio;
+                comp_n += 1;
+            }
+        }
+
+        let ranks = self.ranks.lock().unwrap();
+        let rank_rows: Vec<Json> = ranks
+            .iter()
+            .map(|(rank, o)| {
+                let mut m = BTreeMap::new();
+                let w = o.windows.max(1) as f64;
+                m.insert("rank".to_string(), Json::Num(*rank as f64));
+                m.insert("windows".to_string(), Json::Num(o.windows as f64));
+                m.insert("t_c_total".to_string(), num(o.t_c_total));
+                m.insert("t_ar_total".to_string(), num(o.t_ar_total));
+                m.insert("t_c_mean".to_string(), num(o.t_c_total / w));
+                m.insert("t_ar_mean".to_string(), num(o.t_ar_total / w));
+                Json::Obj(m)
+            })
+            .collect();
+
+        let staleness = self.staleness.lock().unwrap();
+        let stale_rows: Vec<Json> = staleness
+            .iter()
+            .map(|((rank, s), count)| {
+                let mut m = BTreeMap::new();
+                m.insert("rank".to_string(), Json::Num(*rank as f64));
+                m.insert("staleness".to_string(), Json::Num(*s as f64));
+                m.insert("count".to_string(), Json::Num(*count as f64));
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut journal = BTreeMap::new();
+        journal.insert("capacity".to_string(), Json::Num(self.journal.capacity() as f64));
+        journal.insert("events".to_string(), Json::Num(events.len() as f64));
+        journal.insert("dropped".to_string(), Json::Num(dropped as f64));
+
+        let mut m = BTreeMap::new();
+        m.insert("enabled".to_string(), Json::Bool(self.journal.enabled()));
+        m.insert("journal".to_string(), Json::Obj(journal));
+        m.insert("metrics".to_string(), self.metrics.to_json());
+        m.insert("windows".to_string(), Json::Arr(rows.iter().map(|r| r.to_json()).collect()));
+        m.insert("ranks".to_string(), Json::Arr(rank_rows));
+        m.insert("staleness".to_string(), Json::Arr(stale_rows));
+        m.insert(
+            "overlap_efficiency_mean".to_string(),
+            num(self.overlap_efficiency_mean()),
+        );
+        m.insert(
+            "comp_ratio_mean".to_string(),
+            num(if comp_n > 0 { comp_sum / comp_n as f64 } else { 0.0 }),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub(capacity: usize) -> ObsHub {
+        ObsHub::new(&TraceConfig { capacity, out: None })
+    }
+
+    #[test]
+    fn journal_merges_lanes_in_virtual_time_order() {
+        let j = Journal::new(64);
+        // Recorded out of virtual-time order and from interleaved
+        // "ranks" — export order must depend only on (t_start, rank, seq).
+        j.record(EventKind::RoundPosted, 1, 0, 2.0, 2.0, "");
+        j.record(EventKind::RoundPosted, 0, 0, 1.0, 1.0, "");
+        j.record(EventKind::WindowConsumed, 0, 0, 3.0, 3.5, "");
+        j.record(EventKind::RoundPosted, 1, 1, 1.0, 1.0, "");
+        let (events, dropped) = j.events();
+        assert_eq!(dropped, 0);
+        let order: Vec<(usize, f64)> = events.iter().map(|e| (e.rank, e.t_start)).collect();
+        assert_eq!(order, vec![(0, 1.0), (1, 1.0), (1, 2.0), (0, 3.0)]);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let j = Journal::new(2);
+        for i in 0..5 {
+            j.record(EventKind::RoundPosted, 0, i, i as f64, i as f64, "");
+        }
+        let (events, dropped) = j.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(dropped, 3);
+        assert_eq!(events[0].window, 3);
+        assert_eq!(events[1].window, 4);
+        // Merge-level cap also drops oldest across lanes.
+        let j = Journal::new(2);
+        j.record(EventKind::RoundPosted, 0, 0, 1.0, 1.0, "");
+        j.record(EventKind::RoundPosted, 1, 0, 2.0, 2.0, "");
+        j.record(EventKind::RoundPosted, 2, 0, 3.0, 3.0, "");
+        let (events, dropped) = j.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(dropped, 1);
+        assert_eq!(events[0].t_start, 2.0);
+    }
+
+    #[test]
+    fn capacity_zero_disables_recording() {
+        let j = Journal::new(0);
+        assert!(!j.enabled());
+        j.record(EventKind::Fault, 0, 0, 1.0, 1.0, "depart");
+        let (events, dropped) = j.events();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn canonical_text_is_wall_free_and_jsonl_is_not() {
+        let j = Journal::new(8);
+        j.record(EventKind::Decision, 0, 3, 1.5, 1.5, "k=2");
+        let canon = j.canonical_text();
+        assert!(canon.contains("\"kind\":\"decision\""));
+        assert!(canon.contains("\"detail\":\"k=2\""));
+        assert!(!canon.contains("wall_s"));
+        assert!(j.to_jsonl().contains("wall_s"));
+        // Each line parses back as a JSON object.
+        for line in canon.lines() {
+            assert!(matches!(Json::parse(line), Ok(Json::Obj(_))));
+        }
+    }
+
+    #[test]
+    fn event_kind_names_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn metrics_registry_counts_and_buckets() {
+        let m = Metrics::new();
+        m.inc("comm.rounds", 2);
+        m.inc("comm.rounds", 1);
+        m.counter_max("sim.cohort.arena_max", 5);
+        m.counter_max("sim.cohort.arena_max", 3);
+        m.gauge("hetero.tiers", 2.0);
+        m.observe_us("window.t_ar", 3000); // 3000 µs → bucket 11
+        assert_eq!(m.counter("comm.rounds"), 3);
+        assert_eq!(m.counter("sim.cohort.arena_max"), 5);
+        let j = m.to_json();
+        let hist = j.get("hist_log2_us").and_then(|h| h.get("window.t_ar")).unwrap();
+        let hist = hist.as_arr().unwrap();
+        assert_eq!(hist.len(), 12);
+        assert_eq!(hist[11].as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn overlap_efficiency_bounds() {
+        let full = WindowRow {
+            worker: 0,
+            window: 0,
+            t_c: 2.0,
+            t_ar: 1.0,
+            blocked_s: 0.0,
+            comp_ratio: 0.1,
+        };
+        assert_eq!(full.overlap_efficiency(), 1.0);
+        let blocking = WindowRow { blocked_s: 1.0, ..full.clone() };
+        assert_eq!(blocking.overlap_efficiency(), 0.0);
+        let none = WindowRow { t_ar: 0.0, ..full };
+        assert_eq!(none.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn hub_export_is_sorted_and_carries_headline_metrics() {
+        let h = hub(16);
+        h.window(WindowRow {
+            worker: 1,
+            window: 0,
+            t_c: 2.0,
+            t_ar: 1.0,
+            blocked_s: 0.25,
+            comp_ratio: 0.2,
+        });
+        h.window(WindowRow {
+            worker: 0,
+            window: 0,
+            t_c: 2.0,
+            t_ar: 1.0,
+            blocked_s: 0.0,
+            comp_ratio: 0.0,
+        });
+        h.staleness(0, 1);
+        h.staleness(0, 1);
+        h.staleness(1, 2);
+        let j = h.to_json();
+        let windows = j.get("windows").and_then(Json::as_arr).unwrap();
+        assert_eq!(windows[0].get("worker").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(windows[1].get("worker").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            j.get("overlap_efficiency_mean").and_then(Json::as_f64),
+            Some((1.0 + 0.75) / 2.0)
+        );
+        assert_eq!(j.get("comp_ratio_mean").and_then(Json::as_f64), Some(0.2));
+        let ranks = j.get("ranks").and_then(Json::as_arr).unwrap();
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks[0].get("t_c_mean").and_then(Json::as_f64), Some(2.0));
+        let stale = j.get("staleness").and_then(Json::as_arr).unwrap();
+        assert_eq!(stale.len(), 2);
+        assert_eq!(stale[0].get("count").and_then(Json::as_f64), Some(2.0));
+        let dropped = j.get("journal").and_then(|x| x.get("dropped"));
+        assert_eq!(dropped.and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn hub_to_json_is_stable_across_export_calls() {
+        let h = hub(16);
+        h.record(EventKind::RoundPosted, 0, 0, 0.5, 0.5, "");
+        h.window(WindowRow {
+            worker: 0,
+            window: 0,
+            t_c: 1.0,
+            t_ar: 0.5,
+            blocked_s: 0.1,
+            comp_ratio: 0.05,
+        });
+        assert_eq!(h.to_json().to_string(), h.to_json().to_string());
+    }
+}

@@ -1,0 +1,334 @@
+//! The `trace-report` analyzer: reads a `--trace-out` JSONL journal
+//! back and derives straggler attribution (which rank gated each
+//! seal), the overlap-efficiency timeline, and anomaly flags
+//! (compensation-ratio spikes, overlap collapses).
+//!
+//! Works from events alone — per `(window, rank)` it pairs the
+//! `round_posted` instant with the `window_consumed` span:
+//! `t_AR = consume_end − post`, `blocked = consume_end − wait_start`,
+//! `efficiency = (t_AR − blocked) / t_AR`. Accepts both the full JSONL
+//! (with `wall_s`) and the canonical wall-free view.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One JSONL line, schema-checked but kind kept as a string so reports
+/// survive vocabulary growth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEvent {
+    pub kind: String,
+    pub rank: usize,
+    pub window: u64,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub detail: String,
+}
+
+/// Parse a JSONL trace (one JSON object per non-empty line).
+pub fn parse_jsonl(text: &str) -> Result<Vec<ParsedEvent>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace line {}: missing numeric {k:?}", i + 1))
+        };
+        let Some(kind) = j.get("kind").and_then(Json::as_str) else {
+            bail!("trace line {}: missing \"kind\"", i + 1);
+        };
+        out.push(ParsedEvent {
+            kind: kind.to_string(),
+            rank: field("rank")? as usize,
+            window: field("window")? as u64,
+            t_start: field("t_start")?,
+            t_end: field("t_end")?,
+            detail: j.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Per-window digest in the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSummary {
+    pub window: u64,
+    /// Ranks with a paired post + consume this window.
+    pub ranks: usize,
+    pub t_ar_mean: f64,
+    pub blocked_mean: f64,
+    /// Mean overlap efficiency over the window's ranks.
+    pub efficiency: f64,
+    /// The rank whose post sealed the round (latest post instant).
+    pub gated_by: Option<usize>,
+    /// Compensation ratio from the window's `decision` event, if its
+    /// detail carries a `comp=` field.
+    pub comp_ratio: Option<f64>,
+}
+
+/// The analyzed trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceReport {
+    pub events: usize,
+    pub windows: Vec<WindowSummary>,
+    /// rank → number of seals that rank gated.
+    pub gated: BTreeMap<usize, u64>,
+    pub mean_efficiency: f64,
+    pub mean_comp_ratio: f64,
+    pub anomalies: Vec<String>,
+}
+
+fn detail_field(detail: &str, key: &str) -> Option<f64> {
+    detail
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .find(|(k, _)| *k == key)
+        .and_then(|(_, v)| v.parse::<f64>().ok())
+}
+
+/// Derive the report from parsed events.
+pub fn analyze(events: &[ParsedEvent]) -> TraceReport {
+    let mut posts: BTreeMap<(u64, usize), f64> = BTreeMap::new();
+    let mut consumes: BTreeMap<(u64, usize), (f64, f64)> = BTreeMap::new();
+    let mut comp: BTreeMap<u64, f64> = BTreeMap::new();
+    for e in events {
+        match e.kind.as_str() {
+            "round_posted" => {
+                posts.insert((e.window, e.rank), e.t_start);
+            }
+            "window_consumed" => {
+                consumes.insert((e.window, e.rank), (e.t_start, e.t_end));
+            }
+            "decision" => {
+                if let Some(c) = detail_field(&e.detail, "comp") {
+                    comp.insert(e.window, c);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut report = TraceReport { events: events.len(), ..TraceReport::default() };
+    let window_ids: Vec<u64> = {
+        let mut ids: Vec<u64> = consumes.keys().map(|(w, _)| *w).collect();
+        ids.dedup();
+        ids
+    };
+
+    let (mut eff_sum, mut eff_n) = (0.0, 0u64);
+    for w in window_ids {
+        let mut ranks = 0usize;
+        let (mut t_ar_sum, mut blocked_sum, mut eff_w) = (0.0, 0.0, 0.0);
+        for ((win, rank), (wait_start, t_end)) in consumes.range((w, 0)..=(w, usize::MAX)) {
+            debug_assert_eq!(*win, w);
+            let Some(post) = posts.get(&(w, *rank)) else { continue };
+            let t_ar = t_end - post;
+            let blocked = t_end - wait_start;
+            let eff = if t_ar > 0.0 { ((t_ar - blocked) / t_ar).clamp(0.0, 1.0) } else { 0.0 };
+            ranks += 1;
+            t_ar_sum += t_ar;
+            blocked_sum += blocked;
+            eff_w += eff;
+        }
+        if ranks == 0 {
+            continue;
+        }
+        let n = ranks as f64;
+        // Straggler attribution: the seal closes when the last
+        // contribution arrives, so the latest poster gated it.
+        let gated_by = posts
+            .range((w, 0)..=(w, usize::MAX))
+            .max_by(|a, b| a.1.total_cmp(b.1).then(a.0 .1.cmp(&b.0 .1)))
+            .map(|((_, rank), _)| *rank);
+        if let Some(r) = gated_by {
+            *report.gated.entry(r).or_insert(0) += 1;
+        }
+        let efficiency = eff_w / n;
+        eff_sum += efficiency;
+        eff_n += 1;
+        report.windows.push(WindowSummary {
+            window: w,
+            ranks,
+            t_ar_mean: t_ar_sum / n,
+            blocked_mean: blocked_sum / n,
+            efficiency,
+            gated_by,
+            comp_ratio: comp.get(&w).copied(),
+        });
+    }
+    report.mean_efficiency = if eff_n > 0 { eff_sum / eff_n as f64 } else { 0.0 };
+
+    let comps: Vec<f64> = report.windows.iter().filter_map(|w| w.comp_ratio).collect();
+    report.mean_comp_ratio =
+        if comps.is_empty() { 0.0 } else { comps.iter().sum::<f64>() / comps.len() as f64 };
+
+    for w in &report.windows {
+        if report.mean_efficiency > 0.0 && w.efficiency < 0.5 * report.mean_efficiency {
+            report.anomalies.push(format!(
+                "window {}: overlap collapse (eff {:.3} < 0.5 x mean {:.3})",
+                w.window, w.efficiency, report.mean_efficiency
+            ));
+        }
+        if let Some(c) = w.comp_ratio {
+            if report.mean_comp_ratio > 0.0 && c > 2.0 * report.mean_comp_ratio {
+                report.anomalies.push(format!(
+                    "window {}: compensation spike (comp {:.3} > 2 x mean {:.3})",
+                    w.window, c, report.mean_comp_ratio
+                ));
+            }
+        }
+    }
+    report
+}
+
+/// Human-readable report text (what `trace-report` prints).
+pub fn render(r: &TraceReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace-report: {} events, {} windows\n",
+        r.events,
+        r.windows.len()
+    ));
+    out.push_str(&format!("mean overlap efficiency: {:.3}\n", r.mean_efficiency));
+    if r.mean_comp_ratio > 0.0 {
+        out.push_str(&format!("mean compensation ratio: {:.3}\n", r.mean_comp_ratio));
+    }
+
+    out.push_str("\noverlap-efficiency timeline\n");
+    out.push_str("  window  ranks     eff   t_ar_mean  blocked_mean    comp  gated_by\n");
+    for w in &r.windows {
+        out.push_str(&format!(
+            "  {:>6}  {:>5}  {:>6.3}  {:>10.6}  {:>12.6}  {}  {}\n",
+            w.window,
+            w.ranks,
+            w.efficiency,
+            w.t_ar_mean,
+            w.blocked_mean,
+            w.comp_ratio.map_or("     -".to_string(), |c| format!("{c:>6.3}")),
+            w.gated_by.map_or("-".to_string(), |g| format!("rank {g}")),
+        ));
+    }
+
+    out.push_str("\nstraggler attribution (rank whose post gated each seal)\n");
+    if r.gated.is_empty() {
+        out.push_str("  (no sealed windows)\n");
+    } else {
+        let total: u64 = r.gated.values().sum();
+        out.push_str("  rank  gated  share\n");
+        for (rank, n) in &r.gated {
+            out.push_str(&format!(
+                "  {:>4}  {:>5}  {:.2}\n",
+                rank,
+                n,
+                *n as f64 / total as f64
+            ));
+        }
+    }
+
+    out.push_str("\nanomalies\n");
+    if r.anomalies.is_empty() {
+        out.push_str("  (none)\n");
+    } else {
+        for a in &r.anomalies {
+            out.push_str(&format!("  {a}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: &str, rank: usize, window: u64, t_start: f64, t_end: f64) -> ParsedEvent {
+        ParsedEvent {
+            kind: kind.to_string(),
+            rank,
+            window,
+            t_start,
+            t_end,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn pairs_posts_with_consumes_into_efficiency() {
+        // rank 0 posts at t=1, computes until t=2, round seals at t=2.5:
+        // t_ar = 1.5, blocked = 0.5, eff = 2/3.
+        let events = vec![
+            ev("round_posted", 0, 0, 1.0, 1.0),
+            ev("round_posted", 1, 0, 1.2, 1.2),
+            ev("window_consumed", 0, 0, 2.0, 2.5),
+            ev("window_consumed", 1, 0, 2.5, 2.5),
+        ];
+        let r = analyze(&events);
+        assert_eq!(r.windows.len(), 1);
+        let w = &r.windows[0];
+        assert_eq!(w.ranks, 2);
+        // rank 1 fully overlapped (blocked 0), rank 0 eff = 2/3.
+        assert!((w.efficiency - (2.0 / 3.0 + 1.0) / 2.0).abs() < 1e-12);
+        assert_eq!(w.gated_by, Some(1));
+        assert_eq!(r.gated.get(&1), Some(&1));
+    }
+
+    #[test]
+    fn blocking_trace_reports_zero_efficiency() {
+        // SSGD shape: post and wait at the same instant → fully exposed.
+        let events = vec![
+            ev("round_posted", 0, 0, 1.0, 1.0),
+            ev("window_consumed", 0, 0, 1.0, 1.5),
+        ];
+        let r = analyze(&events);
+        assert_eq!(r.mean_efficiency, 0.0);
+    }
+
+    #[test]
+    fn decision_comp_field_feeds_anomaly_flags() {
+        let mut events = Vec::new();
+        for w in 0..4u64 {
+            events.push(ev("round_posted", 0, w, w as f64, w as f64));
+            events.push(ev("window_consumed", 0, w, w as f64 + 0.9, w as f64 + 1.0));
+            let mut d = ev("decision", 0, w, w as f64 + 1.0, w as f64 + 1.0);
+            d.detail = format!("k=1 comp={}", if w == 3 { 0.9 } else { 0.1 });
+            events.push(d);
+        }
+        let r = analyze(&events);
+        assert!(r.mean_comp_ratio > 0.0);
+        assert!(r.anomalies.iter().any(|a| a.contains("compensation spike")));
+        assert!(r.anomalies.iter().any(|a| a.contains("window 3")));
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_parser() {
+        let line = concat!(
+            r#"{"detail":"k=2","kind":"round_posted","rank":3,"seq":0,"#,
+            r#""t_end":1.5,"t_start":1.5,"wall_s":0.001,"window":7}"#
+        );
+        let events = parse_jsonl(&format!("{line}\n\n")).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].rank, 3);
+        assert_eq!(events[0].window, 7);
+        assert_eq!(events[0].detail, "k=2");
+        assert!(parse_jsonl("{\"rank\":0}").is_err());
+        assert!(parse_jsonl("not json").is_err());
+    }
+
+    #[test]
+    fn render_mentions_the_headline_sections() {
+        let events = vec![
+            ev("round_posted", 0, 0, 0.0, 0.0),
+            ev("window_consumed", 0, 0, 0.5, 1.0),
+        ];
+        let text = render(&analyze(&events));
+        assert!(text.contains("overlap-efficiency timeline"));
+        assert!(text.contains("straggler attribution"));
+        assert!(text.contains("anomalies"));
+    }
+}

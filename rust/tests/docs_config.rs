@@ -72,6 +72,7 @@ fn config_reference_names_every_table() {
         "[hetero]",
         "[perf]",
         "[sim]",
+        "[trace]",
         "Deprecated aliases",
     ] {
         assert!(text.contains(table), "docs/config.md lost the {table} section");
@@ -90,8 +91,27 @@ fn config_reference_names_every_table() {
         "pin_chunk",
         "--sim-backend",
         "fault_duration_s",
+        "--trace-out",
+        "--trace-capacity",
     ] {
         assert!(text.contains(key), "docs/config.md lost the {key} key");
+    }
+    // the observability book page documents the trace subsystem:
+    // event schema, metric registry, analyzer and the determinism
+    // contract
+    let obs = doc("observability.md");
+    for name in [
+        "round_posted",
+        "round_sealed",
+        "window_consumed",
+        "epoch_transition",
+        "overlap efficiency",
+        "trace-report",
+        "trace_to_chrome.py",
+        "deterministic_json",
+        "comp_ratio",
+    ] {
+        assert!(obs.contains(name), "docs/observability.md lost {name:?}");
     }
     // the heterogeneity book page documents both new engines
     let hetero = doc("heterogeneity.md");
@@ -149,7 +169,7 @@ fn run_json_top_level_keys_match_docs() {
         );
     }
     // and the documented composite keys really exist in the export
-    for key in ["control", "comm", "compress", "epochs", "evals", "hetero", "perf"] {
+    for key in ["control", "comm", "compress", "epochs", "evals", "hetero", "perf", "obs"] {
         assert!(map.contains_key(key), "documented key {key:?} missing from the export");
     }
     // the engine-core profile carries its per-phase histograms, and the
@@ -161,6 +181,14 @@ fn run_json_top_level_keys_match_docs() {
     let det = report.deterministic_json();
     assert!(det.get("perf").is_none(), "deterministic JSON must strip \"perf\"");
     assert!(det.get("wall_time_s").is_none(), "deterministic JSON must strip \"wall_time_s\"");
+    assert!(det.get("obs").is_none(), "deterministic JSON must strip \"obs\"");
+    // the obs block itself is always present in the full export and
+    // carries its headline metrics
+    let obs = json.get("obs").expect("obs key");
+    assert_eq!(obs.get("enabled"), Some(&Json::Bool(true)));
+    for key in ["journal", "metrics", "windows", "ranks", "staleness", "overlap_efficiency_mean"] {
+        assert!(obs.get(key).is_some(), "obs JSON lost {key:?}");
+    }
     // the probe summary must be nested under "comm"
     assert!(
         json.get("comm").and_then(|c| c.get("probe")).is_some(),

@@ -363,6 +363,94 @@ fn run_json_carries_the_hetero_block() {
 }
 
 #[test]
+fn run_json_carries_the_obs_block_with_the_per_rank_split() {
+    // The per-rank t_C/t_AR split under `"obs"`, golden-pinned two
+    // ways: relationally against the control trace (the leader's
+    // exposed-wait series must be bit-equal between the two exports),
+    // and by byte-identity across a re-run (the block is virtual-time
+    // only, so it must not move between wall-clock executions).
+    let dir = std::env::temp_dir().join(format!("dcs3gd_obs_{}", std::process::id()));
+    let mk = || {
+        let hetero = HeteroConfig {
+            enabled: true,
+            tiers: vec![1.0, 1.7],
+            link_spread: 0.3,
+            ..HeteroConfig::default()
+        };
+        ExperimentConfig::builder("linear")
+            .name("obs_json")
+            .algo(Algo::DynSsp)
+            .nodes(4)
+            .local_batch(4)
+            .steps(16)
+            .base_batch(16)
+            .data(512, 128, 0.5)
+            .staleness(3)
+            .k_bounds(2, 4)
+            .control_policy(ControlPolicy::DynSsp)
+            .compute(ComputeModel::uniform(1e-3))
+            .hetero(hetero)
+            .out_dir(dir.clone())
+            .build()
+    };
+    let report = run_experiment(&mk()).unwrap();
+    let obs = report.obs.as_ref().expect("run carries the obs hub");
+
+    // Relational pin: the leader's window rows and its consume-site
+    // control records describe the same waits — identical blocked_s
+    // series, bit for bit.
+    let mut row_blocked: Vec<u64> = obs
+        .windows()
+        .iter()
+        .filter(|r| r.worker == 0)
+        .map(|r| r.blocked_s.to_bits())
+        .collect();
+    let mut rec_blocked: Vec<u64> = report
+        .control
+        .records()
+        .iter()
+        .filter(|r| r.worker == 0 && r.schedule.is_some())
+        .map(|r| r.blocked_s.to_bits())
+        .collect();
+    assert!(!row_blocked.is_empty(), "leader consumed no windows");
+    row_blocked.sort_unstable();
+    rec_blocked.sort_unstable();
+    assert_eq!(row_blocked, rec_blocked, "obs rows and control records disagree on waits");
+
+    // Golden-pin one window: the leader's first consumed window must
+    // carry a real split — compute spent, latency observed, the wait
+    // no longer than the latency, efficiency inside [0, 1].
+    let first = obs.windows().into_iter().find(|r| r.worker == 0).unwrap();
+    assert!(first.t_c > 0.0, "t_c {}", first.t_c);
+    assert!(first.t_ar > 0.0, "t_ar {}", first.t_ar);
+    assert!(first.blocked_s <= first.t_ar + 1e-12);
+    assert!((0.0..=1.0).contains(&first.overlap_efficiency()));
+
+    // The exported JSON block carries the headline keys.
+    let parsed =
+        Json::parse(&std::fs::read_to_string(dir.join("obs_json_run.json")).unwrap()).unwrap();
+    let block = parsed.get("obs").expect("obs key");
+    assert_eq!(block.get("enabled"), Some(&Json::Bool(true)));
+    assert_eq!(block.get("ranks").and_then(Json::as_arr).unwrap().len(), 4);
+    assert!(!block.get("windows").and_then(Json::as_arr).unwrap().is_empty());
+    assert!(!block.get("staleness").and_then(Json::as_arr).unwrap().is_empty());
+    assert!(block.get("overlap_efficiency_mean").and_then(Json::as_f64).unwrap() > 0.0);
+    for rank_row in block.get("ranks").and_then(Json::as_arr).unwrap() {
+        assert!(rank_row.get("t_c_mean").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(rank_row.get("t_ar_mean").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    // Byte-identity across a re-run: wall-clock never leaks in.
+    let again = run_experiment(&mk()).unwrap();
+    assert_eq!(
+        obs.to_json().to_string(),
+        again.obs.as_ref().unwrap().to_json().to_string(),
+        "the obs block moved between two identical runs"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn disabled_hetero_exports_a_stub() {
     let dir = std::env::temp_dir().join(format!("dcs3gd_hetero_off_{}", std::process::id()));
     let cfg = ExperimentConfig::builder("linear")

@@ -741,7 +741,7 @@ fn prop_parallel_engine_bitwise_equals_serial() {
         }
         let cfg = b.build();
 
-        let runs: Vec<(String, Vec<u64>)> = [1usize, 2, 8]
+        let runs: Vec<(String, Vec<u64>, String)> = [1usize, 2, 8]
             .iter()
             .map(|&threads| {
                 let mut c = cfg.clone();
@@ -751,10 +751,15 @@ fn prop_parallel_engine_bitwise_equals_serial() {
                 let json = report.deterministic_json().to_string();
                 let crcs: Vec<u64> =
                     report.epochs.records().iter().map(|r| r.w_crc).collect();
-                (json, crcs)
+                (json, crcs, report.obs_journal_canonical())
             })
             .collect();
-        for (i, (json, crcs)) in runs.iter().enumerate().skip(1) {
+        assert!(
+            !runs[0].2.is_empty(),
+            "case {case} ({}): serial run journaled no events",
+            cfg.algo.name()
+        );
+        for (i, (json, crcs, trace)) in runs.iter().enumerate().skip(1) {
             let threads = [1usize, 2, 8][i];
             assert_eq!(
                 json, &runs[0].0,
@@ -764,6 +769,14 @@ fn prop_parallel_engine_bitwise_equals_serial() {
             assert_eq!(
                 crcs, &runs[0].1,
                 "case {case} ({}): epoch param CRCs at threads={threads} diverged",
+                cfg.algo.name()
+            );
+            // The obs journal's virtual-time event sequence (wall-time
+            // stripped) is part of the contract too: same events, same
+            // order, whatever the thread interleaving was.
+            assert_eq!(
+                trace, &runs[0].2,
+                "case {case} ({}): obs journal at threads={threads} diverged from serial",
                 cfg.algo.name()
             );
         }
@@ -854,7 +867,7 @@ fn prop_folded_backend_equals_dense() {
                 cfg.control.probe_interval = 3;
             }
 
-            let runs: Vec<(String, Vec<u64>)> = [SimBackend::Dense, SimBackend::Folded]
+            let runs: Vec<(String, Vec<u64>, String)> = [SimBackend::Dense, SimBackend::Folded]
                 .iter()
                 .map(|&backend| {
                     let mut c = cfg.clone();
@@ -865,7 +878,7 @@ fn prop_folded_backend_equals_dense() {
                     let json = report.deterministic_json().to_string();
                     let crcs: Vec<u64> =
                         report.epochs.records().iter().map(|r| r.w_crc).collect();
-                    (json, crcs)
+                    (json, crcs, report.obs_journal_canonical())
                 })
                 .collect();
             assert_eq!(
@@ -878,6 +891,13 @@ fn prop_folded_backend_equals_dense() {
                 runs[1].1,
                 runs[0].1,
                 "N={nodes} case {case} ({}): folded epoch param CRCs diverged",
+                cfg.algo.name()
+            );
+            assert!(!runs[0].2.is_empty(), "N={nodes} case {case}: empty dense journal");
+            assert_eq!(
+                runs[1].2,
+                runs[0].2,
+                "N={nodes} case {case} ({}): folded obs journal diverged from dense",
                 cfg.algo.name()
             );
         }

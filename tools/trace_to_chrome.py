@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Convert a dcs3gd --trace-out JSONL journal to chrome://tracing JSON.
+
+Each journal line is one event with virtual-time `t_start`/`t_end`
+(seconds), a `rank`, a `window` and a `kind`. Span-shaped kinds
+(`round_sealed`, `window_consumed`, `epoch_transition`) become complete
+("X") events; instant-shaped kinds (`round_posted`, `decision`, `fault`,
+`probe`) become instant ("i") events. Virtual seconds map to trace
+microseconds, ranks map to tids, so the timeline reads directly as the
+per-rank overlap picture of Fig. 2.
+
+Usage:
+  python3 tools/trace_to_chrome.py run.trace.jsonl --out run.chrome.json
+
+Load the output at chrome://tracing or https://ui.perfetto.dev
+(stdlib-only; no network, no third-party deps).
+"""
+
+import argparse
+import json
+import sys
+
+# Kinds whose [t_start, t_end) extent is meaningful.
+SPAN_KINDS = {"round_sealed", "window_consumed", "epoch_transition"}
+
+
+def to_chrome(lines):
+    """Yield chrome trace event dicts from JSONL lines (skips blanks)."""
+    for lineno, raw in enumerate(lines, 1):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            ev = json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"line {lineno}: bad JSON ({e})")
+        kind = ev.get("kind", "?")
+        rank = int(ev.get("rank", 0))
+        t_start_us = float(ev.get("t_start", 0.0)) * 1e6
+        t_end_us = float(ev.get("t_end", ev.get("t_start", 0.0))) * 1e6
+        args = {"window": ev.get("window"), "seq": ev.get("seq")}
+        if ev.get("detail"):
+            args["detail"] = ev["detail"]
+        base = {
+            "name": kind,
+            "cat": "dcs3gd",
+            "pid": 1,
+            "tid": rank,
+            "ts": t_start_us,
+            "args": args,
+        }
+        if kind in SPAN_KINDS and t_end_us > t_start_us:
+            yield {**base, "ph": "X", "dur": t_end_us - t_start_us}
+        else:
+            yield {**base, "ph": "i", "s": "t"}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL journal written by --trace-out")
+    ap.add_argument("--out", default=None, help="output path (default: stdout)")
+    opts = ap.parse_args()
+
+    with open(opts.trace, encoding="utf-8") as f:
+        events = list(to_chrome(f))
+    if not events:
+        raise SystemExit(f"{opts.trace}: no events (run with --trace-capacity > 0?)")
+
+    doc = {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"source": "dcs3gd --trace-out", "ranks_as_tids": True},
+    }
+    if opts.out:
+        with open(opts.out, "w", encoding="utf-8") as f:
+            json.dump(doc, f)
+        print(f"wrote {len(events)} events to {opts.out}", file=sys.stderr)
+    else:
+        json.dump(doc, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()
