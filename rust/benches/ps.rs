@@ -1,0 +1,212 @@
+//! Bench: the parameter-server tier — pull latency under hot-shard
+//! traffic and churn, and the compressed wire-volume cut.
+//!
+//! Three virtual-time legs plus one tabulation, all deterministic (the
+//! latencies are modelled seconds, not wall-clock):
+//!
+//! 1. **Hot-shard burst** — 16 workers pull simultaneously from a
+//!    4-shard tier on a 4×4 dragonfly. The pre-replication single home
+//!    serializes every read at one host; the replicated deployment
+//!    (R = 4, coalescing on) fans them across the groups. Asserts
+//!    replicated mean *and* max pull latency ≤ single-home.
+//! 2. **Churn** — a 2-replica plan loses a rank at the epoch boundary;
+//!    pull latency after the departure must not exceed the pre-churn
+//!    latency (crossing counts are priced from the *live* roster, the
+//!    PR-5 fix).
+//! 3. **Wire cut** — a compressed dcasgd engine run (top-k 0.1)
+//!    through the full tier; asserts the run JSON's `ps.wire_cut_x`
+//!    ≥ 3× (the dense-to-compressed byte ratio at the client legs).
+//! 4. **Registry tabulation** — every engine in `engine_registry()` on
+//!    a common config: simulated time, val err, and the ps block's
+//!    wire accounting where the engine has one.
+//!
+//! `DCS3GD_BENCH_FAST=1` shrinks the engine-run step counts for smoke
+//! runs. The JSON lands in `target/bench_results.json` under `"ps"`;
+//! CI uploads it as `BENCH_ps.json`.
+
+use std::collections::BTreeMap;
+
+use dcs3gd::algo::{engine_registry, run_experiment};
+use dcs3gd::bench_util::write_bench_json;
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::optim::MomentumSgd;
+use dcs3gd::ps::{PsMode, PsTier, PsTierSpec, ReplicaPlan};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+const N_PARAMS: usize = 4096;
+const WORKERS: usize = 16;
+
+fn fabric() -> NetModel {
+    let d = Dragonfly { groups: 4, nodes_per_group: 4, ..Dragonfly::default() };
+    NetModel { alpha_s: 1.5e-6, beta_bytes_per_s: 10e9, algo: AllReduceAlgo::Hierarchical(d) }
+}
+
+fn spawn_tier(plan: ReplicaPlan) -> PsTier {
+    let init = vec![0.1f32; N_PARAMS];
+    let spec = PsTierSpec {
+        n_shards: 4,
+        mode: PsMode::DcAsgd { lam0: 0.2 },
+        net: fabric(),
+        serve_s_per_elem: 2e-7,
+        compress: Default::default(),
+        seed: 17,
+        capacity: WORKERS,
+        plan,
+    };
+    PsTier::spawn(&init, spec, &mut |lo, hi| Box::new(MomentumSgd::new(hi - lo, 0.9)))
+}
+
+/// All 16 workers pull at the same virtual instant; returns
+/// (mean, max) pull latency in modelled seconds.
+fn pull_burst(tier: &PsTier) -> (f64, f64) {
+    let mut clients: Vec<_> = (0..WORKERS).map(|r| tier.client(r)).collect();
+    for (slot, c) in clients.iter_mut().enumerate() {
+        c.rebind(slot, WORKERS);
+    }
+    let mut lat = Vec::with_capacity(WORKERS);
+    for (w, c) in clients.iter_mut().enumerate() {
+        lat.push(c.pull(w, 0.0).done_at);
+    }
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    let max = lat.iter().cloned().fold(0.0f64, f64::max);
+    (mean, max)
+}
+
+fn main() {
+    let fast = std::env::var("DCS3GD_BENCH_FAST").as_deref() == Ok("1");
+    let steps: u64 = if fast { 12 } else { 60 };
+    let mut section: BTreeMap<String, Json> = BTreeMap::new();
+
+    // ---- 1. hot-shard pull burst: replicated vs single home -------
+    let net = fabric();
+    let full: Vec<usize> = (0..WORKERS).collect();
+    let single = spawn_tier(ReplicaPlan::single_home(WORKERS));
+    let (s_mean, s_max) = pull_burst(&single);
+    single.shutdown();
+    let replicated = spawn_tier(ReplicaPlan::place(
+        4,
+        &net,
+        WORKERS,
+        true,
+        Vec::new(),
+        vec![full.clone()],
+    ));
+    let (r_mean, r_max) = pull_burst(&replicated);
+    replicated.shutdown();
+    println!("# ps bench — pull latency, {WORKERS}-worker burst, {N_PARAMS} params, 4 shards\n");
+    println!("{:<14} {:>12} {:>12}", "deployment", "mean", "max");
+    println!("{:<14} {:>9.3} ms {:>9.3} ms", "single-home", s_mean * 1e3, s_max * 1e3);
+    println!("{:<14} {:>9.3} ms {:>9.3} ms", "replicated x4", r_mean * 1e3, r_max * 1e3);
+    assert!(
+        r_mean <= s_mean && r_max <= s_max,
+        "replicated pulls must not be slower than the single home: \
+         mean {r_mean} vs {s_mean}, max {r_max} vs {s_max}"
+    );
+    let mut hot = BTreeMap::new();
+    hot.insert("single_mean_s".into(), Json::Num(s_mean));
+    hot.insert("single_max_s".into(), Json::Num(s_max));
+    hot.insert("replicated_mean_s".into(), Json::Num(r_mean));
+    hot.insert("replicated_max_s".into(), Json::Num(r_max));
+    section.insert("hot_shard".into(), Json::Obj(hot));
+
+    // ---- 2. pull latency across a departure boundary ---------------
+    // Group 2 (ranks 8-11) leaves at t = 0.5 — workers that shared
+    // worker 15's serving replica from a remote group. Its pull must
+    // not get *more* expensive once the roster shrinks (crossings are
+    // priced from live members only, the PR-5 fix).
+    let shrunk: Vec<usize> = full.iter().copied().filter(|&r| r / 4 != 2).collect();
+    let churn = spawn_tier(ReplicaPlan::place(
+        2,
+        &net,
+        WORKERS,
+        true,
+        vec![0.5],
+        vec![full.clone(), shrunk],
+    ));
+    let mut c = churn.client(15);
+    c.rebind(15, WORKERS);
+    let pre = c.pull(15, 0.0).done_at;
+    let post = c.pull(15, 1.0).done_at - 1.0;
+    drop(c);
+    churn.shutdown();
+    println!("\npull after churn: {:.3} ms -> {:.3} ms", pre * 1e3, post * 1e3);
+    assert!(
+        post <= pre,
+        "pull latency grew after the roster shrank: {pre} -> {post}"
+    );
+    let mut ch = BTreeMap::new();
+    ch.insert("pre_depart_s".into(), Json::Num(pre));
+    ch.insert("post_depart_s".into(), Json::Num(post));
+    section.insert("churn".into(), Json::Obj(ch));
+
+    // ---- 3. compressed wire cut through the engine ------------------
+    let cfg = ExperimentConfig::builder("linear")
+        .name("ps_bench_wire")
+        .algo(dcs3gd::algo::Algo::DcAsgd)
+        .nodes(4)
+        .local_batch(16)
+        .steps(steps)
+        .eta_single(0.02)
+        .base_batch(16)
+        .data(1024, 256, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .compress_topk(0.1)
+        .ps_shards(2)
+        .ps_replicas(2)
+        .build();
+    let report = run_experiment(&cfg).expect("compressed ps run");
+    let ps = report.ps.as_ref().expect("ps block");
+    let cut = ps.get("wire_cut_x").and_then(Json::as_f64).unwrap();
+    println!(
+        "\nwire cut at top-k 0.1: {cut:.1}x ({} -> {} bytes)",
+        ps.get("dense_bytes").and_then(Json::as_f64).unwrap(),
+        ps.get("wire_bytes").and_then(Json::as_f64).unwrap(),
+    );
+    assert!(cut >= 3.0, "top-k 0.1 must cut wire bytes >= 3x, got {cut}");
+    section.insert("wire".into(), ps.clone());
+
+    // ---- 4. the registry table --------------------------------------
+    println!("\n{:<10} {:>10} {:>8} {:>10}", "engine", "sim", "val err", "wire cut");
+    let mut rows = Vec::new();
+    for spec in engine_registry() {
+        let cfg = ExperimentConfig::builder("linear")
+            .name(format!("ps_bench_{}", spec.name).leak())
+            .algo(spec.algo)
+            .nodes(4)
+            .local_batch(8)
+            .steps(if fast { 8 } else { 24 })
+            .eta_single(0.02)
+            .base_batch(32)
+            .data(1024, 256, 0.5)
+            .compute(ComputeModel::uniform(1e-3))
+            .compress_topk(0.1)
+            .build();
+        let r = run_experiment(&cfg).expect("registry run");
+        let cut = r
+            .ps
+            .as_ref()
+            .and_then(|p| p.get("wire_cut_x"))
+            .and_then(Json::as_f64);
+        println!(
+            "{:<10} {:>8.4}s {:>8.3} {:>10}",
+            spec.name,
+            r.sim_time_s,
+            r.final_val_err,
+            cut.map(|c| format!("{c:.1}x")).unwrap_or_else(|| "-".into()),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("engine".into(), Json::Str(spec.name.into()));
+        row.insert("sim_time_s".into(), Json::Num(r.sim_time_s));
+        row.insert("final_val_err".into(), Json::Num(r.final_val_err as f64));
+        if let Some(c) = cut {
+            row.insert("wire_cut_x".into(), Json::Num(c));
+        }
+        rows.push(Json::Obj(row));
+    }
+    section.insert("engines".into(), Json::Arr(rows));
+
+    let path = write_bench_json("ps", Json::Obj(section)).expect("bench json");
+    println!("\nwrote {}", path.display());
+}

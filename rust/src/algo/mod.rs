@@ -85,8 +85,10 @@ impl Algo {
     }
 
     /// Engines built on the stale-synchronous window loop in
-    /// [`dcs3gd`] — these support membership epochs, compression and
-    /// the full control-plane stack.
+    /// [`dcs3gd`] — the full control-plane stack (adaptive staleness,
+    /// probes, schedule switching). Membership epochs and compression
+    /// are no longer exclusive to this family: `ssgd` and the PS tier
+    /// (`asgd` | `dcasgd`) run both.
     pub fn is_windowed(&self) -> bool {
         matches!(self, Algo::S3gd | Algo::DcS3gd | Algo::DynSsp | Algo::Sgs)
     }

@@ -1,5 +1,5 @@
 //! Centralized asynchronous baselines: ASGD and DC-ASGD through the
-//! parameter-server substrate ([`crate::ps`]).
+//! parameter-server tier ([`crate::ps`]).
 //!
 //! Each worker loops: compute gradient on its current weights → push to
 //! the PS → receive fresh weights (Eq. 15's t_W2PS round-trip, plus
@@ -7,6 +7,39 @@
 //! the time a worker's gradient arrives, other workers have already
 //! advanced the PS weights. DC-ASGD compensates at the server with the
 //! worker-specific backup weights (§II-A / Zheng et al.); ASGD does not.
+//! `ps.lambda = "adaptive"` swaps Eq. 17's global-norm λ for the
+//! elementwise gradient-MSE variant (shard-invariant — see
+//! [`crate::ps::PsMode::DcAsgdAdaptive`]).
+//!
+//! The engines now talk to the PS through [`crate::ps::PsTier`], which
+//! layers three production behaviors over the shard actors:
+//!
+//! * **Compression** — a `[compress]` table rides each worker's
+//!   [`crate::compress::WindowCodec`] through push *and* pull: the
+//!   transfer is priced at the compressed wire volume, the tier decodes
+//!   at ingress, and the shards apply DC-ASGD's correction over the
+//!   *decompressed* payload — the same stacking order as the
+//!   decentralized engines.
+//! * **Sharding + replication** — `ps.shards` splits the parameter
+//!   vector across independent actors (hosts staggered per shard),
+//!   `ps.replicas` serves pulls from the nearest replica with
+//!   read-coalescing; pushes always route to the epoch's primary, so
+//!   weights stay bitwise equal to the single-home server
+//!   ([`crate::ps::ReplicaPlan`]).
+//! * **Elastic membership** — `[[control.fault]]` departures and
+//!   `[[control.join]]` arrivals advance a membership epoch from the
+//!   scripted roster schedule ([`crate::control::MembershipLog::
+//!   roster_schedule`]). The schedule is a pure function of the config
+//!   (virtual-time boundaries, identical on every rank), so — unlike
+//!   the collective engines — no rendezvous is needed: each worker
+//!   crosses a boundary on its own clock, reshards its data, rebinds
+//!   its codec to the new (slot, world), and bumps its liveness
+//!   incarnation. Joiners spin up at their `at_s`, bootstrap the
+//!   canonical weights with a priced pull, and warm their LR up over
+//!   `control.join_warmup_windows` steps. The epoch trace records one
+//!   leader entry per epoch (PS weights are arrival-order dependent, so
+//!   cross-rank checksum agreement is not part of the centralized
+//!   contract the way it is for the collective engines).
 //!
 //! Chaos faults apply here too: slowdowns/stalls land in
 //! `WorkerCtx::train_step` like everywhere else, and a scripted kill
@@ -16,13 +49,13 @@
 //!
 //! The schedule-aware comm refactor reaches this engine through the PS
 //! transfer cost: when the run's `NetModel` carries the hierarchical
-//! dragonfly schedule, [`crate::ps::PsClient::push_pull`] prices each
-//! worker's round-trip with the topology-aware point-to-point model —
-//! workers sharing rank 0's group (where the PS is hosted) ride the
-//! electrical links, everyone else crosses the optics **contended** by
-//! every other remote worker's crossings into the PS group
-//! ([`crate::comm::NetModel::ptp_time_between_flows`], sharing the
-//! [`crate::comm::GlobalContention`] model with the collective
+//! dragonfly schedule, the tier prices each worker's round-trip with
+//! the topology-aware point-to-point model at the *actual* crossing
+//! count of the epoch's roster — workers sharing the primary's group
+//! ride the electrical links, everyone else crosses the optics
+//! **contended** by every other remote worker's crossings into the PS
+//! group ([`crate::comm::NetModel::ptp_time_between_flows`], sharing
+//! the [`crate::comm::GlobalContention`] model with the collective
 //! schedules). The many-to-few bottleneck the paper attributes to
 //! centralized schemes thus gains both the placement asymmetry and the
 //! tapered-fabric oversubscription a real dragonfly imposes.
@@ -32,55 +65,94 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::algo::{Algo, RoundDriver, RunReport, WorkerHarness};
-use crate::config::ExperimentConfig;
+use crate::compress::CompressorKind;
+use crate::config::{ExperimentConfig, PsLambda};
+use crate::control::{param_crc, ControlRecord, EpochRecord, FaultKind};
 use crate::exec::{Phase, RankClock};
 use crate::obs::{EventKind, WindowRow};
-use crate::optim::build_optimizer;
-use crate::ps::{ParameterServer, PsMode};
+use crate::optim::{build_optimizer, MomentumSgd, Optimizer};
+use crate::ps::{PsMode, PsTier, PsTierSpec, ReplicaPlan};
 
 pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> {
     let n = harness.n_params();
     // Engine pool: worker ranks share `perf.threads` permits; the PS
-    // actor itself stays ungated (it is service infrastructure, not a
-    // rank) and each client hands its permit back across push_pull.
+    // actors themselves stay ungated (they are service infrastructure,
+    // not ranks) and each client hands its permit back across the
+    // blocking round-trips.
     let driver = RoundDriver::centralized(cfg);
     let pool = &driver.pool;
     let profiler = driver.profiler.clone();
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
 
-    let mode = match cfg.algo {
-        Algo::Asgd => PsMode::Asgd,
-        Algo::DcAsgd => PsMode::DcAsgd { lam0: cfg.lam0 },
-        other => unreachable!("psasync engine got {other:?}"),
+    let mode = match (cfg.algo, cfg.ps.lambda) {
+        (Algo::Asgd, _) => PsMode::Asgd,
+        (Algo::DcAsgd, PsLambda::Dynamic) => PsMode::DcAsgd { lam0: cfg.lam0 },
+        (Algo::DcAsgd, PsLambda::Adaptive) => PsMode::DcAsgdAdaptive { lam0: cfg.lam0 },
+        (other, _) => unreachable!("psasync engine got {other:?}"),
     };
 
-    // The PS applies updates with the same local-optimizer rule the
-    // decentralized engines use (momentum SGD by default).
-    let ps_opt = build_optimizer(
-        &cfg.optimizer,
-        n,
-        cfg.momentum,
-        &harness.layer_ranges,
-        harness.decay_mask.clone(),
+    // The scripted membership schedule drives both the replica plan's
+    // epoch routing and the workers' transitions — one source of truth,
+    // identical everywhere with no rendezvous.
+    let membership = harness.membership.clone();
+    let capacity = membership.capacity();
+    let (boundaries, rosters) = membership.roster_schedule();
+    let plan = ReplicaPlan::place(
+        cfg.ps.replicas,
+        &cfg.net,
+        capacity,
+        cfg.ps.coalesce,
+        boundaries.clone(),
+        rosters.clone(),
     );
-    // Service time: weights-update cost at the server; modelled as one
-    // memory pass over the parameters at ~4 GB/s effective.
-    let serve_s = (n as f64 * 4.0) / 4e9;
-    let ps = ParameterServer::spawn(
-        harness.init_w.clone(),
-        ps_opt,
-        cfg.nodes,
-        mode,
-        cfg.net,
-        serve_s,
+
+    // The PS applies updates with the same local-optimizer rule the
+    // decentralized engines use (momentum SGD by default). A sharded
+    // tier gets per-slice momentum (the configured optimizer's layer
+    // map does not split across shard bounds); the single-shard default
+    // keeps the full configured optimizer, bit-for-bit the legacy
+    // behavior.
+    let mut opt_for = |lo: usize, hi: usize| -> Box<dyn Optimizer> {
+        if cfg.ps.shards <= 1 {
+            build_optimizer(
+                &cfg.optimizer,
+                n,
+                cfg.momentum,
+                &harness.layer_ranges,
+                harness.decay_mask.clone(),
+            )
+        } else {
+            Box::new(MomentumSgd::new(hi - lo, cfg.momentum))
+        }
+    };
+    // Service time: weights-update cost at each shard; modelled as one
+    // memory pass over its slice at ~4 GB/s effective.
+    let tier = PsTier::spawn(
+        &harness.init_w,
+        PsTierSpec {
+            n_shards: cfg.ps.shards.max(1),
+            mode,
+            net: cfg.net,
+            serve_s_per_elem: 4.0 / 4e9,
+            compress: cfg.compress,
+            seed: cfg.seed,
+            capacity,
+            plan,
+        },
+        &mut opt_for,
     );
 
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
-        for rank in 0..cfg.nodes {
+        for rank in 0..capacity {
+            // Rank slots above the initial world exist only for
+            // scripted joiners.
+            if rank >= cfg.nodes && !membership.is_join_rank(rank) {
+                continue;
+            }
             let mut ctx = harness.make_worker(cfg, rank);
-            let mut client = ps.client();
+            let mut client = tier.client(rank);
             client.set_gate(pool.gate());
             let init_w = harness.init_w.clone();
             let sched = sched.clone();
@@ -88,14 +160,105 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             let gate = pool.gate();
             let profiler = profiler.clone();
             let hub = driver.obs.clone();
+            let membership = membership.clone();
+            let boundaries = boundaries.clone();
+            let rosters = rosters.clone();
 
             handles.push(scope.spawn(move || -> Result<()> {
                 let _permit = gate.permit();
                 let mut pclock = RankClock::new(profiler);
                 let mut w = init_w.clone();
+                let comp_ratio = match cfg.compress.kind {
+                    CompressorKind::None => 0.0,
+                    _ => cfg.compress.ratio,
+                };
+                let join_at =
+                    membership.joins().iter().find(|j| j.rank == rank).map(|j| j.at_s);
+                let warmup_total =
+                    if join_at.is_some() { cfg.control.join_warmup_windows } else { 0 };
+                let mut steps_since_join = 0u64;
+                let mut epoch_idx = 0usize;
+
+                if let Some(at_s) = join_at {
+                    // Scripted joiner: spin up at its arrival (paying the
+                    // restore/provision cost), adopt the epoch its
+                    // arrival opens, and bootstrap the canonical weights
+                    // with a priced pull — the PS is the system of
+                    // record, so there is no resync collective.
+                    epoch_idx = boundaries.partition_point(|&b| b <= at_s);
+                    let roster = &rosters[epoch_idx];
+                    let Some(slot) = roster.iter().position(|&r| r == rank) else {
+                        return Ok(());
+                    };
+                    ctx.clock.advance_to(at_s + cfg.control.restore_s);
+                    ctx.reshard(slot, roster.len(), epoch_idx as u64);
+                    client.rebind(slot, roster.len());
+                    ctx.new_incarnation(ctx.clock.now());
+                    let now = ctx.clock.now();
+                    let reply = pclock.time(Phase::CommWait, || client.pull(rank, now));
+                    ctx.clock.advance_to(reply.done_at);
+                    w = reply.weights;
+                } else {
+                    client.rebind(rank, cfg.nodes);
+                    if membership.is_elastic() && rank == 0 {
+                        // Epoch 0 anchor so the trace's world trajectory
+                        // starts at the initial roster.
+                        ctx.epochs.record(EpochRecord {
+                            epoch: 0,
+                            rank,
+                            slot: 0,
+                            world: cfg.nodes,
+                            sched_steps: 0,
+                            sim_time: 0.0,
+                            w_crc: param_crc(&w),
+                            joined: Vec::new(),
+                            departed: Vec::new(),
+                        });
+                    }
+                }
+
                 for t in 0..cfg.steps {
                     if !ctx.chaos.is_inert() {
                         if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            if matches!(ev.kind, FaultKind::Kill { respawn: false }) {
+                                // Departure: the rank leaves for good —
+                                // the roster schedule retires it at this
+                                // boundary and the survivors' plan
+                                // routing sheds its crossings.
+                                let now = ctx.clock.now();
+                                ctx.control_log.record(ControlRecord {
+                                    worker: rank,
+                                    window: t,
+                                    iteration: t,
+                                    sim_time: now,
+                                    k: 1,
+                                    lam_scale: 1.0,
+                                    schedule: None,
+                                    t_compute: 0.0,
+                                    t_allreduce: 0.0,
+                                    t_ar_local: 0.0,
+                                    t_ar_global: 0.0,
+                                    blocked_s: 0.0,
+                                    compress: None,
+                                    compress_ratio: 1.0,
+                                    wire_bytes: 0.0,
+                                    probe: false,
+                                    event: Some(format!(
+                                        "depart@{:.3}s epoch={epoch_idx}",
+                                        ev.at_s
+                                    )),
+                                });
+                                hub.record(
+                                    EventKind::Fault,
+                                    rank,
+                                    t,
+                                    now,
+                                    now,
+                                    format!("depart epoch={epoch_idx}"),
+                                );
+                                hub.metrics.inc("control.departs", 1);
+                                return Ok(());
+                            }
                             // No snapshots in PS mode (bound 0 → cold
                             // restart); the next pull re-syncs weights.
                             ctx.recover_from_kill(
@@ -103,14 +266,105 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                             );
                         }
                     }
+                    // Membership boundary on this worker's clock: the
+                    // roster schedule is scripted in virtual time, so
+                    // every rank computes the same transition without a
+                    // rendezvous (each crosses as its own clock passes
+                    // the boundary).
+                    while epoch_idx < boundaries.len()
+                        && ctx.clock.now() >= boundaries[epoch_idx]
+                    {
+                        let at = boundaries[epoch_idx];
+                        epoch_idx += 1;
+                        let roster = &rosters[epoch_idx];
+                        let Some(slot) = roster.iter().position(|&r| r == rank) else {
+                            // Retired at this boundary (safety net — a
+                            // scripted departure returns above).
+                            return Ok(());
+                        };
+                        ctx.reshard(slot, roster.len(), epoch_idx as u64);
+                        client.rebind(slot, roster.len());
+                        ctx.new_incarnation(ctx.clock.now());
+                        if slot == 0 {
+                            // Leader-only record: PS weights are
+                            // arrival-order dependent, so the epoch trace
+                            // carries the leader's view rather than a
+                            // cross-rank checksum contract.
+                            let prev = &rosters[epoch_idx - 1];
+                            let departed: Vec<usize> = prev
+                                .iter()
+                                .copied()
+                                .filter(|r| !roster.contains(r))
+                                .collect();
+                            let joined: Vec<usize> = roster
+                                .iter()
+                                .copied()
+                                .filter(|r| !prev.contains(r))
+                                .collect();
+                            ctx.epochs.record(EpochRecord {
+                                epoch: epoch_idx as u64,
+                                rank,
+                                slot,
+                                world: roster.len(),
+                                sched_steps: t,
+                                sim_time: at,
+                                w_crc: param_crc(&w),
+                                joined: joined.clone(),
+                                departed: departed.clone(),
+                            });
+                            hub.record(
+                                EventKind::EpochTransition,
+                                rank,
+                                epoch_idx as u64,
+                                at,
+                                at,
+                                format!(
+                                    "world={} departed={} joined={}",
+                                    roster.len(),
+                                    departed.len(),
+                                    joined.len()
+                                ),
+                            );
+                            hub.metrics.inc("membership.epochs", 1);
+                            ctx.control_log.record(ControlRecord {
+                                worker: rank,
+                                window: t,
+                                iteration: t,
+                                sim_time: ctx.clock.now(),
+                                k: 1,
+                                lam_scale: 1.0,
+                                schedule: None,
+                                t_compute: 0.0,
+                                t_allreduce: 0.0,
+                                t_ar_local: 0.0,
+                                t_ar_global: 0.0,
+                                blocked_s: 0.0,
+                                compress: None,
+                                compress_ratio: 1.0,
+                                wire_bytes: 0.0,
+                                probe: false,
+                                event: Some(format!(
+                                    "epoch {epoch_idx}: world {} (-{departed:?} +{joined:?})",
+                                    roster.len()
+                                )),
+                            });
+                        }
+                    }
                     let t_before_step = ctx.clock.now();
                     let (loss, err, wall) = pclock.time(Phase::Compute, || ctx.train_step(&w));
                     let t_c = ctx.clock.now() - t_before_step;
-                    let eta = sched.at(t);
+                    // Joiner LR warm-up, same ramp as the collective
+                    // engines.
+                    let warm = if steps_since_join < warmup_total {
+                        (steps_since_join + 1) as f32 / (warmup_total + 1) as f32
+                    } else {
+                        1.0
+                    };
+                    let eta = sched.at(t) * warm;
                     let wd = cfg.wd_at(t, &sched);
                     let push_at = ctx.clock.now();
                     let reply = pclock.time(Phase::CommWait, || {
-                        client.push_pull(rank, ctx.g.clone(), push_at, eta, wd)
+                        client.push_pull(rank, &ctx.g, push_at, eta, wd)
                     });
                     ctx.clock.advance_to(reply.done_at);
                     // Trace span triple: the PS round-trip is fully
@@ -118,7 +372,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // efficiency reads 0, same as SSGD. Staleness is
                     // bucketed by whether the push saw intervening
                     // updates (‖w_ps − w_bak‖ > 0).
-                    let win = t as u64;
+                    let win = t;
                     hub.record(EventKind::RoundPosted, rank, win, push_at, push_at, "k=1 algo=ps");
                     hub.record(EventKind::RoundSealed, rank, win, push_at, reply.done_at, "");
                     hub.record(EventKind::WindowConsumed, rank, win, push_at, reply.done_at, "");
@@ -130,10 +384,11 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         t_c,
                         t_ar: (reply.done_at - push_at).max(0.0),
                         blocked_s: (reply.done_at - push_at).max(0.0),
-                        comp_ratio: 0.0,
+                        comp_ratio,
                     });
                     w = reply.weights;
                     ctx.record(t, loss, err, wall, 0.0, reply.staleness_dist, eta);
+                    steps_since_join += 1;
 
                     if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
                         let (vl, ve) = pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches));
@@ -154,7 +409,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
         Ok(())
     })?;
 
-    ps.shutdown();
+    let (_w_final, _updates, ps_json) = tier.shutdown();
 
     let recorder = harness.recorder.clone();
     let final_val = recorder
@@ -165,6 +420,8 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let mut report =
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
+    report.epochs = harness.epochs.clone();
+    report.ps = Some(ps_json);
     report.perf = Some(profiler.to_json());
     report.obs = Some(driver.obs.clone());
     if let Some(path) = &cfg.trace.out {
@@ -187,6 +444,7 @@ mod tests {
     use super::*;
     use crate::comm::NetModel;
     use crate::simtime::ComputeModel;
+    use crate::util::Json;
 
     fn base_cfg(algo: Algo) -> ExperimentConfig {
         ExperimentConfig::builder("linear")
@@ -299,5 +557,88 @@ mod tests {
             .filter(|s| s.iteration > 5 && s.dist_to_avg > 0.0)
             .count();
         assert!(late_nonzero > steps.len() / 4, "staleness never observed");
+    }
+
+    #[test]
+    fn elastic_membership_runs_epoch_transitions() {
+        // A depart at 0.02s then a join at 0.04s: the roster schedule is
+        // 4 → 3 → 4, every surviving worker crosses both boundaries on
+        // its own clock, and the run JSON's "epochs"/"ps" blocks carry
+        // the realized transitions.
+        let mut cfg = base_cfg(Algo::DcAsgd);
+        cfg.name = "ps_elastic".into();
+        cfg.control.faults = crate::control::FaultPlan::new().depart(1, 0.02);
+        cfg.control.joins = vec![crate::control::JoinEvent { rank: 4, at_s: 0.04 }];
+        cfg.control.join_warmup_windows = 4;
+        cfg.control.restore_s = 0.005;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.epochs.worlds(), vec![4, 3, 4], "roster trajectory");
+        let transitions = report.epochs.transitions();
+        assert_eq!(transitions[1].departed, vec![1]);
+        assert_eq!(transitions[2].joined, vec![4]);
+        // depart record + two leader epoch records
+        let events = report.control.events();
+        assert!(
+            events.iter().any(|e| e.event.as_deref().unwrap_or("").starts_with("depart@")),
+            "departure not logged"
+        );
+        assert_eq!(
+            events.iter().filter(|e| e.event.as_deref().unwrap_or("").starts_with("epoch ")).count(),
+            2,
+            "one leader record per transition"
+        );
+        // The joiner trains: its steps appear in the recorder.
+        assert!(
+            report.recorder.steps().iter().any(|s| s.worker == 4),
+            "joiner never stepped"
+        );
+        let ps = report.ps.as_ref().unwrap();
+        assert_eq!(ps.get("epochs").and_then(Json::as_f64), Some(3.0));
+        assert!(report.final_val_err < 0.85, "elastic run did not converge");
+    }
+
+    #[test]
+    fn adaptive_lambda_ps_trains() {
+        let mut cfg = base_cfg(Algo::DcAsgd);
+        cfg.name = "ps_adaptive".into();
+        cfg.ps.lambda = PsLambda::Adaptive;
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn sharded_replicated_tier_reports_and_trains() {
+        let mut cfg = base_cfg(Algo::DcAsgd);
+        cfg.name = "ps_sharded".into();
+        cfg.ps.shards = 4;
+        cfg.ps.replicas = 2;
+        cfg.ps.lambda = PsLambda::Adaptive;
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        cfg.net = NetModel {
+            alpha_s: 1.5e-6,
+            beta_bytes_per_s: 10e9,
+            algo: crate::comm::AllReduceAlgo::Hierarchical(d),
+        };
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let ps = report.ps.as_ref().unwrap();
+        assert_eq!(ps.get("shards").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(ps.get("replicas").and_then(Json::as_f64), Some(2.0));
+        assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn compressed_ps_cuts_wire_volume() {
+        let mut cfg = base_cfg(Algo::Asgd);
+        cfg.name = "ps_topk".into();
+        cfg.compress = crate::compress::CompressConfig {
+            kind: CompressorKind::TopK,
+            ratio: 0.1,
+            ..Default::default()
+        };
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        let ps = report.ps.as_ref().unwrap();
+        let cut = ps.get("wire_cut_x").and_then(Json::as_f64).unwrap();
+        assert!(cut >= 3.0, "top-k @0.1 wire cut {cut} < 3x");
+        assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
     }
 }

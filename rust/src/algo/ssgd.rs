@@ -28,16 +28,34 @@
 //! rank-local, while the *decoded mean gradient* is identical on every
 //! rank — so the SSGD bit-identical-replicas invariant holds under
 //! compression too.
+//!
+//! **Elastic membership** applies here with the same contract as
+//! DC-S3GD: a non-respawned kill makes the rank leave the group, the
+//! survivors observe the short contributor set (the gradient mean is
+//! re-weighted by the actual contributor count, so it stays unbiased),
+//! and a due `[[control.join]]` arrival fires against the shared round
+//! completion time. The epoch transition runs at the step boundary,
+//! identically on every member: advance the group epoch, all-reduce
+//! the post-update weights over the survivors and adopt the mean
+//! (bit-identical parameters, pinned by the epoch trace checksums),
+//! publish the [`JoinBootstrap`], re-shard, refit the topology, rebind
+//! the codec and rebuild the controller. One deliberate difference:
+//! there is **no joiner LR warm-up** — synchronous replicas share one
+//! global step, so a per-rank learning-rate ramp would fork the
+//! replica state the invariant forbids; a joiner enters at full LR
+//! from the resync mean, which *is* the fleet's exact state.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::algo::dcs3gd::ctrl_slots;
 use crate::algo::{RoundDriver, RunReport, WorkerHarness};
+use crate::comm::JoinBootstrap;
 use crate::compress::{RoundMode, WindowCodec};
 use crate::config::ExperimentConfig;
-use crate::control::{ControlRecord, ScheduleEnv, WindowObs};
+use crate::control::{param_crc, ControlRecord, EpochRecord, FaultKind, ScheduleEnv, WindowObs};
 use crate::exec::{Phase, RankClock};
 use crate::model::Checkpoint;
 use crate::obs::{EventKind, WindowRow};
@@ -48,32 +66,33 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let n = harness.n_params();
     // Engine pool: at most `perf.threads` ranks runnable at once; the
     // gate hands permits back across the blocking all-reduce waits.
-    // SSGD runs with pinned membership, so capacity == nodes.
-    let driver = RoundDriver::collective(cfg, cfg.nodes);
+    // The group is sized to the membership capacity so scripted joiner
+    // slots exist from the start (they park in admission).
+    let membership = harness.membership.clone();
+    let capacity = membership.capacity();
+    let driver = RoundDriver::collective(cfg, capacity);
     let group = driver.group();
     let pool = &driver.pool;
     let profiler = driver.profiler.clone();
     let sched = cfg.lr_schedule();
     let t_start = Instant::now();
-    let env = ScheduleEnv {
-        net: cfg.net,
-        topology: cfg.topology(),
-        n_elems: n + ctrl_slots(cfg.nodes),
-        n_ranks: cfg.nodes,
-        compress: cfg.compress,
-        flat_link_scale: cfg.flat_link_residual(),
-    };
 
     std::thread::scope(|scope| -> Result<()> {
+        let group_ref = &group;
         let mut handles = Vec::new();
-        for rank in 0..cfg.nodes {
+        for rank in 0..capacity {
+            let is_joiner = rank >= cfg.nodes;
+            if is_joiner && !membership.is_join_rank(rank) {
+                continue;
+            }
             let mut ctx = harness.make_worker(cfg, rank);
-            let mut comm = group.comm(rank);
+            let initial_comm = (!is_joiner).then(|| group_ref.comm(rank));
             let init_w = harness.init_w.clone();
             let decay_mask = harness.decay_mask.clone();
             let layer_ranges = harness.layer_ranges.clone();
             let sched = sched.clone();
             let cfg = cfg.clone();
+            let membership = membership.clone();
             let gate = pool.gate();
             let profiler = profiler.clone();
             let hub = driver.obs.clone();
@@ -81,7 +100,6 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
             handles.push(scope.spawn(move || -> Result<()> {
                 let _permit = gate.permit();
                 let mut pclock = RankClock::new(profiler);
-                let mut w = init_w.clone();
                 let mut opt = build_optimizer(
                     &cfg.optimizer,
                     n,
@@ -94,10 +112,78 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 let mut dense_sum = vec![0.0f32; n];
                 let mut own = vec![0.0f32; n];
                 let mut prev_t_ar = 0.0f64;
-                // Compression codec: per-rank residual, fixed world
-                // (SSGD runs with pinned membership).
+
+                // Membership view + resume counter. Initial members
+                // start at epoch 0 and step 0; scripted joiners park in
+                // admission until the survivors publish their epoch's
+                // bootstrap, then resume at the published step so the
+                // blocking round sequence stays matched.
+                let mut epoch: u64 = 0;
+                let mut t: u64 = 0;
+                let mut comm;
+                let mut w;
+                let mut world: Vec<usize>;
+                let mut join_cursor = 0usize;
+                if let Some(c0) = initial_comm {
+                    comm = c0;
+                    w = init_w.clone();
+                    world = (0..cfg.nodes).collect();
+                } else {
+                    let admission =
+                        pclock.time(Phase::CommWait, || group_ref.await_admission(rank));
+                    let Some((c, boot)) = admission else {
+                        return Ok(()); // run ended before our join fired
+                    };
+                    comm = c;
+                    epoch = boot.epoch;
+                    // the epoch's *pinned* member list — the live roster
+                    // may already have lost a racing post-transition
+                    // departer
+                    world = comm.epoch_members();
+                    w = boot.weights.as_ref().clone();
+                    t = boot.sched_steps;
+                    join_cursor = boot.join_cursor;
+                    ctx.clock.advance_to(boot.t_start + cfg.control.restore_s);
+                    let slot =
+                        world.iter().position(|&r| r == rank).expect("admitted member");
+                    ctx.reshard(slot, world.len(), epoch);
+                    ctx.new_incarnation(ctx.clock.now());
+                    ctx.epochs.record(EpochRecord {
+                        epoch,
+                        rank,
+                        slot,
+                        world: world.len(),
+                        sched_steps: t,
+                        sim_time: boot.t_start,
+                        w_crc: param_crc(&w),
+                        joined: Vec::new(),
+                        departed: Vec::new(),
+                    });
+                }
+
+                // Per-epoch derived state. Epoch 0 runs on the
+                // configured topology verbatim; transitions refit the
+                // group shape to the live world size.
+                let mut slot = world.iter().position(|&r| r == rank).expect("member");
+                let mut leader = world[0];
+                let mut topo = if epoch == 0 {
+                    cfg.topology()
+                } else {
+                    cfg.topology().refit(world.len())
+                };
+                let mut env = ScheduleEnv {
+                    net: cfg.net,
+                    topology: topo,
+                    n_elems: n + ctrl_slots(world.len()),
+                    n_ranks: world.len(),
+                    compress: cfg.compress,
+                    flat_link_scale: cfg.flat_link_residual(),
+                };
+
+                // Compression codec: per-rank residual, rebound (and
+                // zeroed) at every membership epoch.
                 let mut codec = WindowCodec::new(&cfg.compress, n, cfg.seed, rank);
-                codec.rebind(rank, cfg.nodes);
+                codec.rebind(slot, world.len());
                 // Control plane: k is pinned at 1, but the schedule and
                 // compression decisions apply to the blocking
                 // all-reduce — fully live, since the piggybacked
@@ -107,9 +193,63 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                 let mut decision = controller.current();
                 let snapshot_every = cfg.control.snapshot_cadence();
 
-                for t in 0..cfg.steps {
+                if membership.is_elastic() && epoch == 0 {
+                    ctx.epochs.record(EpochRecord {
+                        epoch: 0,
+                        rank,
+                        slot,
+                        world: world.len(),
+                        sched_steps: 0,
+                        sim_time: 0.0,
+                        w_crc: param_crc(&w),
+                        joined: Vec::new(),
+                        departed: Vec::new(),
+                    });
+                }
+
+                while t < cfg.steps {
                     if !ctx.chaos.is_inert() {
                         if let Some(ev) = ctx.chaos.take_kill(ctx.clock.now()) {
+                            if matches!(ev.kind, FaultKind::Kill { respawn: false }) {
+                                // Departure: deregister so the survivors'
+                                // next round resolves without us (the
+                                // blocking engine holds nothing in
+                                // flight at the step boundary).
+                                comm.leave();
+                                ctx.control_log.record(ControlRecord {
+                                    worker: rank,
+                                    window: t,
+                                    iteration: t,
+                                    sim_time: ctx.clock.now(),
+                                    k: 1,
+                                    lam_scale: decision.lam_scale,
+                                    schedule: None,
+                                    t_compute: 0.0,
+                                    t_allreduce: 0.0,
+                                    t_ar_local: 0.0,
+                                    t_ar_global: 0.0,
+                                    blocked_s: 0.0,
+                                    compress: None,
+                                    compress_ratio: 1.0,
+                                    wire_bytes: 0.0,
+                                    probe: false,
+                                    event: Some(format!(
+                                        "depart@{:.3}s epoch={epoch}",
+                                        ev.at_s
+                                    )),
+                                });
+                                let now = ctx.clock.now();
+                                hub.record(
+                                    EventKind::Fault,
+                                    rank,
+                                    t,
+                                    now,
+                                    now,
+                                    format!("depart epoch={epoch}"),
+                                );
+                                hub.metrics.inc("control.departs", 1);
+                                return Ok(());
+                            }
                             // Snapshot bound t−1: this worker completed the
                             // round t−1 all-reduce, which happens-after the
                             // leader's snapshot at the end of step t−2.
@@ -162,7 +302,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     // the wait instant — Eq. 13 has no overlap — so
                     // blocked time equals the whole collective and the
                     // overlap efficiency reads 0 by construction.
-                    let win = t as u64;
+                    let win = t;
                     hub.record(
                         EventKind::RoundPosted,
                         rank,
@@ -186,10 +326,14 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                         blocked_s: out.blocked_since(now_before_wait),
                         comp_ratio: 0.0,
                     });
+                    let n_contrib = out.contributors.len();
                     let ctrl = pclock.time(Phase::Decode, || {
-                        codec.decode(&out.data, out.contributors.len(), &mut dense_sum)
+                        codec.decode(&out.data, n_contrib, &mut dense_sum)
                     });
-                    let inv_n = 1.0 / cfg.nodes as f32;
+                    // Re-weight by the actual contributor count: a round
+                    // that resolved over the survivors of a departure
+                    // still averages unbiasedly (== 1/N on full rounds).
+                    let inv_n = 1.0 / n_contrib as f32;
                     let eta = sched.at(t);
                     let wd = cfg.wd_at(t, &sched);
                     pclock.time(Phase::Update, || {
@@ -201,66 +345,201 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
                     });
                     ctx.record(t, loss, err, wall, 0.0, 0.0, eta);
 
-                    // Wait/post boundary: consult with the decoded
-                    // cross-rank means (identical on every rank, so the
-                    // calibrated schedule / ratio switches stay matched
-                    // across the fleet).
-                    decision = controller.on_window(&WindowObs {
-                        window: t,
-                        iteration: t,
-                        t_compute: ctrl.t_compute,
-                        t_allreduce: ctrl.t_allreduce,
-                        per_rank_t_c: ctrl.per_rank_t_c,
-                        t_ar_local: out.phases.local_s,
-                        t_ar_global: out.phases.global_s,
-                        ran: Some(algo),
-                        probe: was_probe,
-                    });
-                    if rank == 0 {
-                        let now = ctx.clock.now();
-                        hub.record(
-                            EventKind::Decision,
-                            rank,
-                            t as u64,
-                            now,
-                            now,
-                            format!("{} comp=0.000000", decision.describe()),
-                        );
-                        ctx.control_log.record(ControlRecord {
-                            worker: rank,
-                            window: t,
-                            iteration: t,
-                            sim_time: ctx.clock.now(),
-                            k: 1,
-                            lam_scale: decision.lam_scale,
-                            schedule: Some(algo.name().to_string()),
-                            t_compute: t_c,
-                            t_allreduce: out.time - now_before_wait,
-                            t_ar_local: out.phases.local_s,
-                            t_ar_global: out.phases.global_s,
-                            blocked_s: out.time - now_before_wait,
-                            compress: Some(codec.name().to_string()),
-                            compress_ratio: codec.ratio() as f64,
-                            wire_bytes: codec.wire_bytes(),
-                            probe: was_probe,
-                            event: was_probe.then(|| format!("probe {}", algo.name())),
+                    // Membership change? Departures show up as a short
+                    // contributor set; arrivals fire when the shared
+                    // completion time reaches their scripted at_s.
+                    // Identical on every rank.
+                    let joins_due = membership.joins_due(join_cursor, out.t_complete);
+                    if n_contrib < world.len() || !joins_due.is_empty() {
+                        // ---- membership epoch transition ----
+                        // Every member of the old epoch reaches this
+                        // point at the same step boundary with the
+                        // identical (departed, joins) view.
+                        let departed: Vec<usize> = world
+                            .iter()
+                            .copied()
+                            .filter(|r| !out.contributors.contains(r))
+                            .collect();
+                        epoch += 1;
+                        world = comm.advance_epoch(epoch, &joins_due);
+                        join_cursor += joins_due.len();
+                        // Resync: survivors all-reduce their post-update
+                        // weights and adopt the mean — the canonical
+                        // epoch state, bit-identical on every member
+                        // (identical payload × identical scale).
+                        let resync_now = ctx.clock.now();
+                        let sync = pclock.time(Phase::CommWait, || {
+                            comm.iallreduce_sched(&w, resync_now, cfg.net.algo)
+                                .wait_outcome(resync_now)
                         });
-                        if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
+                        ctx.clock.advance_to(sync.time);
+                        let inv = 1.0 / sync.contributors.len() as f32;
+                        for (wi, s) in w.iter_mut().zip(sync.data.iter()) {
+                            *wi = s * inv;
+                        }
+                        opt.reset();
+
+                        // Joiners bootstrap from this exact state and
+                        // resume at step t+1 — the same step the
+                        // survivors run next, keeping the blocking round
+                        // sequence matched.
+                        comm.publish_bootstrap(JoinBootstrap {
+                            epoch,
+                            weights: Arc::new(w.clone()),
+                            t_start: sync.t_complete,
+                            sched_steps: t + 1,
+                            window: t + 1,
+                            join_cursor,
+                        });
+
+                        // Re-shard, refit the topology to the new N,
+                        // rebind the codec (residuals measure error
+                        // against weights the resync replaced) and
+                        // rebuild the controller — its t_C/t_AR evidence
+                        // re-baselines against the new fabric.
+                        slot = world
+                            .iter()
+                            .position(|&r| r == rank)
+                            .expect("survivor is a member");
+                        leader = world[0];
+                        ctx.reshard(slot, world.len(), epoch);
+                        topo = cfg.topology().refit(world.len());
+                        env = ScheduleEnv {
+                            net: cfg.net,
+                            topology: topo,
+                            n_elems: n + ctrl_slots(world.len()),
+                            n_ranks: world.len(),
+                            compress: cfg.compress,
+                            flat_link_scale: cfg.flat_link_residual(),
+                        };
+                        codec.rebind(slot, world.len());
+                        controller = cfg.control.build_controller(1, env);
+                        decision = controller.current();
+                        prev_t_ar = 0.0;
+                        ctx.new_incarnation(ctx.clock.now());
+
+                        ctx.epochs.record(EpochRecord {
+                            epoch,
+                            rank,
+                            slot,
+                            world: world.len(),
+                            sched_steps: t + 1,
+                            sim_time: sync.t_complete,
+                            w_crc: param_crc(&w),
+                            joined: if slot == 0 { joins_due.clone() } else { Vec::new() },
+                            departed: if slot == 0 { departed.clone() } else { Vec::new() },
+                        });
+                        if rank == leader {
+                            hub.record(
+                                EventKind::EpochTransition,
+                                rank,
+                                epoch,
+                                resync_now,
+                                sync.t_complete,
+                                format!(
+                                    "world={} departed={} joined={}",
+                                    world.len(),
+                                    departed.len(),
+                                    joins_due.len()
+                                ),
+                            );
+                            hub.metrics.inc("membership.epochs", 1);
                             ctx.snapshots.put(Checkpoint {
                                 iteration: t + 1,
                                 weights: w.clone(),
                                 velocity: vec![0.0; n],
                             });
+                            ctx.control_log.record(ControlRecord {
+                                worker: rank,
+                                window: t,
+                                iteration: t,
+                                sim_time: ctx.clock.now(),
+                                k: 1,
+                                lam_scale: decision.lam_scale,
+                                schedule: None,
+                                t_compute: 0.0,
+                                t_allreduce: 0.0,
+                                t_ar_local: 0.0,
+                                t_ar_global: 0.0,
+                                blocked_s: 0.0,
+                                compress: None,
+                                compress_ratio: 1.0,
+                                wire_bytes: 0.0,
+                                probe: false,
+                                event: Some(format!(
+                                    "epoch {epoch}: world {} (-{departed:?} +{joins_due:?})",
+                                    world.len()
+                                )),
+                            });
+                        }
+                    } else {
+                        // Wait/post boundary: consult with the decoded
+                        // cross-rank means (identical on every rank, so
+                        // the calibrated schedule / ratio switches stay
+                        // matched across the fleet).
+                        decision = controller.on_window(&WindowObs {
+                            window: t,
+                            iteration: t,
+                            t_compute: ctrl.t_compute,
+                            t_allreduce: ctrl.t_allreduce,
+                            per_rank_t_c: ctrl.per_rank_t_c,
+                            t_ar_local: out.phases.local_s,
+                            t_ar_global: out.phases.global_s,
+                            ran: Some(algo),
+                            probe: was_probe,
+                        });
+                        if rank == leader {
+                            let now = ctx.clock.now();
+                            hub.record(
+                                EventKind::Decision,
+                                rank,
+                                t,
+                                now,
+                                now,
+                                format!("{} comp=0.000000", decision.describe()),
+                            );
+                            ctx.control_log.record(ControlRecord {
+                                worker: rank,
+                                window: t,
+                                iteration: t,
+                                sim_time: ctx.clock.now(),
+                                k: 1,
+                                lam_scale: decision.lam_scale,
+                                schedule: Some(algo.name().to_string()),
+                                t_compute: t_c,
+                                t_allreduce: out.time - now_before_wait,
+                                t_ar_local: out.phases.local_s,
+                                t_ar_global: out.phases.global_s,
+                                blocked_s: out.time - now_before_wait,
+                                compress: Some(codec.name().to_string()),
+                                compress_ratio: codec.ratio() as f64,
+                                wire_bytes: codec.wire_bytes(),
+                                probe: was_probe,
+                                event: was_probe.then(|| format!("probe {}", algo.name())),
+                            });
+                            if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
+                                ctx.snapshots.put(Checkpoint {
+                                    iteration: t + 1,
+                                    weights: w.clone(),
+                                    velocity: vec![0.0; n],
+                                });
+                            }
                         }
                     }
 
-                    if rank == 0 && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
+                    if rank == leader && cfg.eval_every > 0 && t % cfg.eval_every == 0 {
                         let (vl, ve) = pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches));
                         ctx.record_eval(t, vl, ve);
                     }
+                    t += 1;
                 }
 
-                if rank == 0 {
+                // Unblock any scripted joiner whose event never fired —
+                // before anything fallible below, so an I/O error can't
+                // leave a parked joiner (and the whole scope) hanging.
+                comm.shutdown();
+
+                if rank == leader {
                     let (vl, ve) =
                         pclock.time(Phase::Eval, || ctx.eval(&w, cfg.eval_batches.max(8)));
                     ctx.record_eval(cfg.steps, vl, ve);
@@ -283,6 +562,7 @@ pub fn run(cfg: &ExperimentConfig, harness: WorkerHarness) -> Result<RunReport> 
     let mut report =
         RunReport::assemble(cfg, recorder, final_val, t_start.elapsed().as_secs_f64());
     report.control = harness.control_log.clone();
+    report.epochs = harness.epochs.clone();
     report.perf = Some(profiler.to_json());
     report.obs = Some(driver.obs.clone());
     if let Some(path) = &cfg.trace.out {
@@ -489,6 +769,61 @@ mod tests {
         cfg.compress.kind = crate::compress::CompressorKind::Qsgd;
         cfg.compress.bits = 8;
         let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
+    }
+
+    #[test]
+    fn membership_shrink_then_grow_stays_bit_identical() {
+        // 4 → 3 (depart at 0.2s) → 4 (join at 0.5s). Every member must
+        // hold bit-identical parameters at each epoch boundary (the
+        // resync mean / published bootstrap), and the whole elastic run
+        // must be deterministic across repeats.
+        let mk = || {
+            let mut cfg = base_cfg();
+            cfg.name = "ssgd_elastic".into();
+            cfg.control.faults = crate::control::FaultPlan::new().depart(1, 0.2);
+            cfg.control.joins = vec![crate::control::JoinEvent { rank: 4, at_s: 0.5 }];
+            cfg.control.restore_s = 0.01;
+            cfg
+        };
+        let a = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        assert_eq!(a.epochs.worlds(), vec![4, 3, 4], "roster trajectory");
+        assert!(
+            a.epochs.crc_mismatches().is_empty(),
+            "members diverged at an epoch boundary: {:?}",
+            a.epochs.crc_mismatches()
+        );
+        let transitions = a.epochs.transitions();
+        assert_eq!(transitions[1].departed, vec![1]);
+        assert_eq!(transitions[2].joined, vec![4]);
+        assert!(
+            a.recorder.steps().iter().any(|s| s.worker == 4),
+            "joiner never stepped"
+        );
+        let b = run(&mk(), WorkerHarness::prepare(&mk()).unwrap()).unwrap();
+        assert_eq!(a.final_val_err, b.final_val_err, "elastic SSGD not deterministic");
+        assert!(a.final_val_err < 0.8, "val err {}", a.final_val_err);
+    }
+
+    #[test]
+    fn departure_reweights_the_gradient_mean() {
+        // Shrink-only run: after the departure the survivors' mean must
+        // divide by 3, not 4 — the run converges and logs exactly one
+        // departure plus one epoch transition.
+        let mut cfg = base_cfg();
+        cfg.name = "ssgd_shrink".into();
+        cfg.control.faults = crate::control::FaultPlan::new().depart(2, 0.2);
+        let report = run(&cfg, WorkerHarness::prepare(&cfg).unwrap()).unwrap();
+        assert_eq!(report.epochs.worlds(), vec![4, 3]);
+        let events = report.control.events();
+        assert_eq!(
+            events.iter().filter(|e| e.event.as_deref().unwrap_or("").starts_with("depart@")).count(),
+            1
+        );
+        assert_eq!(
+            events.iter().filter(|e| e.event.as_deref().unwrap_or("").starts_with("epoch ")).count(),
+            1
+        );
         assert!(report.final_val_err < 0.8, "val err {}", report.final_val_err);
     }
 }

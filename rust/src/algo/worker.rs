@@ -426,6 +426,11 @@ pub struct RunReport {
     /// under `"obs"` and excluded from
     /// [`RunReport::deterministic_json`] exactly like `"perf"`.
     pub obs: Option<crate::obs::ObsHub>,
+    /// Parameter-server tier accounting (see [`crate::ps::PsTier`]):
+    /// shard/replica shape, push/pull/coalesce counts, wire vs dense
+    /// bytes. `None` on decentralized runs — exported as an
+    /// `enabled: false` stub so consumers always find the `"ps"` key.
+    pub ps: Option<Json>,
 }
 
 impl RunReport {
@@ -463,6 +468,7 @@ impl RunReport {
             hetero: cfg.hetero_profile(),
             perf: None,
             obs: None,
+            ps: None,
         }
     }
 
@@ -525,6 +531,19 @@ impl RunReport {
             "obs".into(),
             match &self.obs {
                 Some(o) => o.to_json(),
+                None => {
+                    let mut h = std::collections::BTreeMap::new();
+                    h.insert("enabled".to_string(), Json::Bool(false));
+                    Json::Obj(h)
+                }
+            },
+        );
+        // Parameter-server tier accounting; `enabled: false` stub on
+        // decentralized runs so consumers always find the key.
+        m.insert(
+            "ps".into(),
+            match &self.ps {
+                Some(p) => p.clone(),
                 None => {
                     let mut h = std::collections::BTreeMap::new();
                     h.insert("enabled".to_string(), Json::Bool(false));

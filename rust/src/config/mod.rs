@@ -121,6 +121,14 @@ pub struct ExperimentConfig {
     /// exactly like `"perf"`.
     pub trace: TraceConfig,
 
+    // --- parameter-server tier ---
+    /// Parameter-server tier shape (the `[ps]` TOML table; see
+    /// [`crate::ps`] and `docs/parameter-server.md`): shard count,
+    /// replica sets, pull coalescing and the Eq. 6 λ source. Only the
+    /// centralized engines (`asgd` | `dcasgd`) read it; decentralized
+    /// runs carry the defaults untouched.
+    pub ps: PsConfig,
+
     // --- bookkeeping ---
     /// Validation pass every this many iterations (0 = only at the end).
     pub eval_every: u64,
@@ -158,6 +166,72 @@ pub struct TraceConfig {
 impl Default for TraceConfig {
     fn default() -> Self {
         TraceConfig { capacity: 65_536, out: None }
+    }
+}
+
+/// Which λ the PS tier's Eq. 6 delay compensation uses (`dcasgd` only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PsLambda {
+    /// Eq. 17 dynamic λ from the *global* norms of g and the backup
+    /// distance — the DC-S3GD spelling. Global norms couple every
+    /// coordinate, so a sharded server computes per-shard λ's that
+    /// differ from the unsharded trajectory (documented, not a bug).
+    #[default]
+    Dynamic,
+    /// Per-element EWMA of g² (the SSP-ASGD adaptive-λ shape):
+    /// `λ_i = λ0 / sqrt(E[g_i²] + ε)`. Fully elementwise, hence
+    /// shard-invariant — the mode the sharded differential tests pin.
+    Adaptive,
+}
+
+impl PsLambda {
+    pub fn parse(s: &str) -> Result<PsLambda> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dynamic" => PsLambda::Dynamic,
+            "adaptive" => PsLambda::Adaptive,
+            other => bail!("unknown ps.lambda {other:?} (dynamic | adaptive)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PsLambda::Dynamic => "dynamic",
+            PsLambda::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Parameter-server tier shape (the `[ps]` TOML table; see
+/// [`crate::ps`]). Defaults reproduce the pre-tier server exactly:
+/// one shard, single-home, dynamic λ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PsConfig {
+    /// Contiguous parameter shards, one server actor each (≥ 1).
+    pub shards: usize,
+    /// Replicas per shard (1 = single-home). Replicas are placement +
+    /// timing only; weights stay bitwise identical to single-home.
+    pub replicas: usize,
+    /// Coalesce pulls that land inside an in-flight read window.
+    pub coalesce: bool,
+    /// Eq. 6 λ source for `dcasgd` (`dynamic` | `adaptive`).
+    pub lambda: PsLambda,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig { shards: 1, replicas: 1, coalesce: true, lambda: PsLambda::Dynamic }
+    }
+}
+
+impl PsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("ps.shards must be ≥ 1");
+        }
+        if self.replicas == 0 {
+            bail!("ps.replicas must be ≥ 1");
+        }
+        Ok(())
     }
 }
 
@@ -200,6 +274,7 @@ impl ExperimentConfig {
             perf: PerfConfig::default(),
             sim: SimConfig::default(),
             trace: TraceConfig::default(),
+            ps: PsConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             out_dir: None,
@@ -423,6 +498,12 @@ impl ExperimentConfig {
                     cfg.trace.capacity = val.as_i64().ok_or_else(err)? as usize
                 }
                 "trace.out" => cfg.trace.out = Some(val.as_str().ok_or_else(err)?.into()),
+                "ps.shards" => cfg.ps.shards = val.as_i64().ok_or_else(err)? as usize,
+                "ps.replicas" => cfg.ps.replicas = val.as_i64().ok_or_else(err)? as usize,
+                "ps.coalesce" => cfg.ps.coalesce = val.as_bool().ok_or_else(err)?,
+                "ps.lambda" => {
+                    cfg.ps.lambda = PsLambda::parse(val.as_str().ok_or_else(err)?)?
+                }
                 // deprecated flat single-fault spelling; prefer
                 // `[[control.fault]]` tables.
                 "control.fault_rank" => {
@@ -545,13 +626,7 @@ impl ExperimentConfig {
         self.compress.validate()?;
         self.hetero.validate()?;
         self.perf.validate()?;
-        if self.compress.kind != CompressorKind::None && !self.algo.is_decentralized() {
-            bail!(
-                "gradient compression rides the decentralized all-reduce engines \
-                 (ssgd | s3gd | dcs3gd | dyn_ssp | sgs), got {}",
-                self.algo.name()
-            );
-        }
+        self.ps.validate()?;
         // Spot revocations become membership departures, so they need
         // the windowed (stale-synchronous) engine family.
         if self.hetero.enabled
@@ -581,13 +656,6 @@ impl ExperimentConfig {
             }
         }
         if membership.is_elastic() {
-            if !self.algo.is_windowed() {
-                bail!(
-                    "membership events (join / non-respawned kill) need the \
-                     stale-synchronous engine (s3gd | dcs3gd | dyn_ssp | sgs), got {}",
-                    self.algo.name()
-                );
-            }
             let initial_departures = membership
                 .departs()
                 .iter()
@@ -1038,6 +1106,31 @@ impl RunBuilder {
     /// Write the merged JSONL trace here at the end of the run.
     pub fn trace_out(mut self, v: impl Into<PathBuf>) -> Self {
         self.cfg.trace.out = Some(v.into());
+        self
+    }
+    /// Replace the whole `[ps]` table.
+    pub fn ps(mut self, v: PsConfig) -> Self {
+        self.cfg.ps = v;
+        self
+    }
+    /// Parameter-server shard count (contiguous slices, ≥ 1).
+    pub fn ps_shards(mut self, v: usize) -> Self {
+        self.cfg.ps.shards = v;
+        self
+    }
+    /// Replicas per PS shard (1 = single-home).
+    pub fn ps_replicas(mut self, v: usize) -> Self {
+        self.cfg.ps.replicas = v;
+        self
+    }
+    /// Coalesce PS pulls that land inside an in-flight read window.
+    pub fn ps_coalesce(mut self, v: bool) -> Self {
+        self.cfg.ps.coalesce = v;
+        self
+    }
+    /// Eq. 6 λ source for the `dcasgd` tier (`dynamic` | `adaptive`).
+    pub fn ps_lambda(mut self, name: &str) -> Self {
+        self.cfg.ps.lambda = PsLambda::parse(name).expect("invalid ps.lambda");
         self
     }
 
@@ -1545,11 +1638,17 @@ mod tests {
              [[control.join]]\nrank = 2\nat_s = 2.0"
         )
         .is_err());
-        // membership events need the stale-synchronous engine
+        // every engine family handles membership events now — the old
+        // windowed-only gate is gone (ssgd + the PS tier run epoch
+        // transitions since the parameter-server parity PR)
         assert!(ExperimentConfig::from_toml_str(
             "nodes = 2\nalgo = \"ssgd\"\n[[control.join]]\nrank = 2\nat_s = 1.0"
         )
-        .is_err());
+        .is_ok());
+        assert!(ExperimentConfig::from_toml_str(
+            "nodes = 2\nalgo = \"asgd\"\n[[control.join]]\nrank = 2\nat_s = 1.0"
+        )
+        .is_ok());
         // the whole initial world departing is rejected
         assert!(ExperimentConfig::from_toml_str(
             "nodes = 2\n\
@@ -1573,6 +1672,41 @@ mod tests {
             "nodes = 2\n[[control.join]]\nrank = 2\ncount = 3\nat_s = 1.0"
         )
         .is_err());
+    }
+
+    #[test]
+    fn ps_table_parses_and_validates() {
+        let doc = r#"
+            nodes = 4
+            algo = "dcasgd"
+
+            [ps]
+            shards = 4
+            replicas = 2
+            coalesce = false
+            lambda = "adaptive"
+
+            [compress]
+            kind = "topk"
+            ratio = 0.1
+        "#;
+        let cfg = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(cfg.ps.shards, 4);
+        assert_eq!(cfg.ps.replicas, 2);
+        assert!(!cfg.ps.coalesce);
+        assert_eq!(cfg.ps.lambda, PsLambda::Adaptive);
+        // compression is no longer decentralized-only: it rides the
+        // PS tier's push/pull wire too
+        assert_eq!(cfg.compress.kind, CompressorKind::TopK);
+        // defaults reproduce the pre-tier server
+        let plain = ExperimentConfig::from_toml_str("nodes = 2").unwrap();
+        assert_eq!(plain.ps, PsConfig::default());
+        assert_eq!(plain.ps.shards, 1);
+        assert_eq!(plain.ps.lambda, PsLambda::Dynamic);
+        // bad knobs rejected through the same validate path
+        assert!(ExperimentConfig::from_toml_str("[ps]\nshards = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[ps]\nreplicas = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[ps]\nlambda = \"fixed\"").is_err());
     }
 
     #[test]

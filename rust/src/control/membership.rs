@@ -112,6 +112,38 @@ impl MembershipLog {
             .map(|j| j.rank)
             .collect()
     }
+
+    /// The scripted roster schedule: epoch boundary times (sorted,
+    /// deduplicated — coincident events share one boundary) and the
+    /// active rank roster of each epoch (`boundaries.len() + 1`
+    /// entries, sorted ranks). This is the *virtual-time* view the
+    /// centralized engines and the PS [`crate::ps::ReplicaPlan`] use —
+    /// a pure function of the config, identical everywhere, with no
+    /// collective rendezvous needed to agree on it.
+    pub fn roster_schedule(&self) -> (Vec<f64>, Vec<Vec<usize>>) {
+        let mut times: Vec<f64> = self
+            .joins
+            .iter()
+            .map(|j| j.at_s)
+            .chain(self.departs.iter().map(|&(_, at)| at))
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.dedup();
+        let mut rosters: Vec<Vec<usize>> = vec![(0..self.initial).collect()];
+        for &t in &times {
+            let mut next: Vec<usize> = rosters
+                .last()
+                .unwrap()
+                .iter()
+                .copied()
+                .filter(|&r| !self.departs.iter().any(|&(dr, at)| dr == r && at == t))
+                .collect();
+            next.extend(self.joins.iter().filter(|j| j.at_s == t).map(|j| j.rank));
+            next.sort_unstable();
+            rosters.push(next);
+        }
+        (times, rosters)
+    }
 }
 
 /// FNV-1a over the raw bit patterns — the parameter checksum the epoch
@@ -275,6 +307,23 @@ mod tests {
         assert_eq!(log.joins_due(0, 2.0), vec![4, 5]);
         assert_eq!(log.joins_due(1, 2.0), vec![5], "cursor skips already-fired joins");
         assert_eq!(log.joins_due(2, 99.0), Vec::<usize>::new(), "cursor past the schedule");
+    }
+
+    #[test]
+    fn roster_schedule_folds_events_into_epochs() {
+        let log = log_4_to_3_to_5();
+        let (boundaries, rosters) = log.roster_schedule();
+        assert_eq!(boundaries, vec![1.0, 2.0]);
+        assert_eq!(
+            rosters,
+            vec![vec![0, 1, 2, 3], vec![0, 1, 2], vec![0, 1, 2, 4, 5]],
+            "depart at 1.0 shrinks, the coincident joins at 2.0 share one boundary"
+        );
+        // non-elastic: a single epoch, no boundaries
+        let inert = MembershipLog::new(3, &[], &FaultPlan::new());
+        let (b, r) = inert.roster_schedule();
+        assert!(b.is_empty());
+        assert_eq!(r, vec![vec![0, 1, 2]]);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use dcs3gd::algo::{run_experiment, Algo};
 use dcs3gd::cli::Args;
 use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel, SimBackend};
 use dcs3gd::compress::CompressorKind;
-use dcs3gd::config::{parse_schedule, ExperimentConfig};
+use dcs3gd::config::{parse_schedule, ExperimentConfig, PsLambda};
 use dcs3gd::control::{ControlPolicy, FaultEvent, FaultKind, JoinEvent, ProbeMode};
 use dcs3gd::model::meta::discover_variants;
 use dcs3gd::simtime::ComputeModel;
@@ -40,6 +40,8 @@ USAGE:
                [--join-count N --join-at T [--join-first-rank R]]
                [--join-warmup W]
                [--compress C] [--topk-ratio R] [--qsgd-bits B]
+               [--ps-shards S] [--ps-replicas R] [--ps-coalesce true|false]
+               [--ps-lambda dynamic|adaptive]
                [--hetero] [--hetero-tiers a,b,..] [--hetero-tier-weights w,..]
                [--hetero-spot-fraction F] [--hetero-spot-mtbf S]
                [--hetero-spot-correlation C] [--hetero-diurnal-amplitude A]
@@ -65,6 +67,12 @@ Probing:          --probe interval runs the inactive schedule candidate
 Compressors:      none | topk | qsgd (error-feedback gradient compression;
                   --topk-ratio sets the kept density, --qsgd-bits the
                   quantization width)
+Parameter server: --ps-shards splits the asgd/dcasgd server into S
+                  independent shard actors; --ps-replicas serves pulls
+                  from R placement-aware replicas (--ps-coalesce windows
+                  concurrent reads); --ps-lambda adaptive swaps Eq. 17's
+                  global-norm λ for the elementwise gradient-MSE rule —
+                  see docs/parameter-server.md
 Fault kinds:      kill | slow | delay (virtual-time chaos injection);
                   a kill with --fault-respawn false departs permanently
                   (the membership epoch shrinks); --join-* grows it, and
@@ -256,6 +264,19 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.compress.ratio = args.get_f64("topk-ratio", cfg.compress.ratio as f64)? as f32;
     cfg.compress.bits = args.get_usize("qsgd-bits", cfg.compress.bits as usize)? as u32;
+    // parameter-server tier (asgd / dcasgd engines)
+    cfg.ps.shards = args.get_usize("ps-shards", cfg.ps.shards)?;
+    cfg.ps.replicas = args.get_usize("ps-replicas", cfg.ps.replicas)?;
+    if let Some(c) = args.get("ps-coalesce") {
+        cfg.ps.coalesce = match c {
+            "true" => true,
+            "false" => false,
+            other => bail!("--ps-coalesce expects true|false, got {other:?}"),
+        };
+    }
+    if let Some(l) = args.get("ps-lambda") {
+        cfg.ps.lambda = PsLambda::parse(l)?;
+    }
     // heterogeneous fabric: compute tiers, spot cohorts, diurnal load,
     // per-link bandwidth spread
     if args.flag("hetero") {

@@ -9,6 +9,11 @@
 //!   `w_bak(i)` of the weights it last sent to worker `i` and corrects
 //!   each incoming gradient with
 //!   `g̃ = g + λ g ⊙ g ⊙ (w_ps − w_bak(i))` before applying it.
+//! * **DC-ASGD adaptive-λ** — the SSP-ASGD exemplar variant: the PS
+//!   keeps a per-worker EWMA of `g²` and sets λ elementwise to
+//!   `λ0 / √(mse_hat + ε)`, so compensation self-scales with the
+//!   gradient's recent magnitude instead of riding Eq. 17's global
+//!   norm ratio.
 //!
 //! The PS is an actor on its own thread; workers talk to it over
 //! channels. Timing follows Eq. 15: each request costs the worker
@@ -17,16 +22,34 @@
 //! many-to-few bottleneck the paper attributes to centralized schemes.
 //!
 //! Under a hierarchical (dragonfly) fabric the crossings **contend**:
-//! every worker outside the PS's group funnels through that group's
+//! every worker outside a PS host's group funnels through that group's
 //! tapered global links, so each remote transfer is priced at the
-//! concurrent-crossing count through
+//! *actual* concurrent-crossing count through
 //! [`NetModel::ptp_time_between_flows`] (the same
 //! [`crate::comm::GlobalContention`] model the collective schedules
-//! use) — the many-to-few bottleneck now includes the fabric's share
-//! of it, not just the server's.
+//! use). Crossings are derived per request from the [`ReplicaPlan`]:
+//! the membership-epoch roster says who is alive, the replica
+//! placement says which host each puller routes to — a group-local
+//! pull crosses zero optics and is priced accordingly (the PR 5
+//! worst-case-crossings shortcut is gone).
+//!
+//! **Replication.** A [`ReplicaPlan`] places `R` replicas of each
+//! shard across the fabric. The canonical weight vector lives in the
+//! one shard actor — replicas model *service and placement*, not
+//! divergent state, so replicated and single-home deployments are
+//! bitwise identical on weights by construction (pinned in
+//! `tests/ps_parity.rs`). Each membership epoch deterministically
+//! elects a primary (rotation over the replica set); pushes serialize
+//! at the primary, which then fans the updated weights to the
+//! secondaries through the contended optics (`busy` on a secondary
+//! includes the replication lag). Pulls route to a group-local replica
+//! when one exists, and concurrent pulls hitting the same replica's
+//! in-flight read window **coalesce** into one service slot.
 
 pub mod sharded;
+pub mod tier;
 pub use sharded::ShardedPs;
+pub use tier::{PsTier, PsTierClient, PsTierSpec};
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -45,6 +68,170 @@ pub enum PsMode {
     /// Delay-compensated ASGD with dynamic λ (Eq. 17 applied to
     /// `D = w_ps − w_bak(i)`).
     DcAsgd { lam0: f32 },
+    /// Delay-compensated ASGD with the adaptive elementwise λ of the
+    /// SSP-ASGD exemplar: per-worker EWMA `mse ← 0.95·mse + 0.05·g²`
+    /// with bias correction, `λ = λ0 / √(mse_hat + 1e-7)`.
+    DcAsgdAdaptive { lam0: f32 },
+}
+
+/// EWMA decay of the adaptive-λ second-moment estimate.
+const ADAPTIVE_BETA: f32 = 0.95;
+/// Numerical floor under the adaptive-λ square root.
+const ADAPTIVE_EPS: f32 = 1e-7;
+
+/// Replica placement + membership schedule for one PS shard.
+///
+/// The *canonical* weights live in the shard actor; replicas are
+/// timing/placement state (per-replica service queues, read windows,
+/// replication lag). Everything here is a pure function of the config
+/// and the scripted membership log, so both sides of a client/server
+/// exchange derive identical routing without coordination.
+#[derive(Debug, Clone)]
+pub struct ReplicaPlan {
+    /// Host rank of each replica. `hosts[0]` is the epoch-0 primary;
+    /// the primary rotates deterministically per membership epoch.
+    pub hosts: Vec<usize>,
+    /// Coalesce pulls that land inside a replica's in-flight read
+    /// window into that window's single service slot.
+    pub coalesce: bool,
+    /// Membership-epoch boundary times (virtual seconds, ascending).
+    pub boundaries: Vec<f64>,
+    /// Active worker ranks per epoch (`boundaries.len() + 1` entries).
+    pub rosters: Vec<Vec<usize>>,
+}
+
+impl ReplicaPlan {
+    /// The pre-replication deployment: one home, pinned membership.
+    pub fn single_home(n_workers: usize) -> Self {
+        ReplicaPlan {
+            hosts: vec![0],
+            coalesce: false,
+            boundaries: Vec::new(),
+            rosters: vec![(0..n_workers).collect()],
+        }
+    }
+
+    /// Place `replicas` hosts round-robin across the dragonfly groups
+    /// spanned by `capacity` ranks (all at rank 0 on flat fabrics,
+    /// where placement is symmetric).
+    pub fn place(
+        replicas: usize,
+        net: &NetModel,
+        capacity: usize,
+        coalesce: bool,
+        boundaries: Vec<f64>,
+        rosters: Vec<Vec<usize>>,
+    ) -> Self {
+        let r = replicas.max(1);
+        let hosts = match net.algo {
+            AllReduceAlgo::Hierarchical(d) => {
+                let npg = d.nodes_per_group.max(1);
+                let groups = capacity.div_ceil(npg).max(1);
+                (0..r).map(|j| (j % groups) * npg).collect()
+            }
+            _ => vec![0; r],
+        };
+        assert!(!rosters.is_empty(), "a plan needs at least the epoch-0 roster");
+        assert_eq!(rosters.len(), boundaries.len() + 1);
+        ReplicaPlan { hosts, coalesce, boundaries, rosters }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// Membership epoch in force at virtual time `now` (boundaries are
+    /// inclusive: a request at exactly the boundary sees the new
+    /// epoch).
+    pub fn epoch_at(&self, now: f64) -> usize {
+        self.boundaries.partition_point(|&b| b <= now)
+    }
+
+    /// Active worker ranks in `epoch` (clamped to the last roster).
+    pub fn roster(&self, epoch: usize) -> &[usize] {
+        let i = epoch.min(self.rosters.len() - 1);
+        &self.rosters[i]
+    }
+
+    /// Deterministic primary election: rotate over the replica set per
+    /// membership epoch. Returns a replica *index* into `hosts`.
+    pub fn primary(&self, epoch: usize) -> usize {
+        epoch % self.hosts.len()
+    }
+
+    /// The replica a pull from `worker` routes to in `epoch`: prefer a
+    /// group-local replica (zero optic crossings); spread ties — and
+    /// the no-local-replica fallback — round-robin by worker rank.
+    pub fn serving_replica(&self, net: &NetModel, worker: usize, epoch: usize) -> usize {
+        let wg = host_group(net, worker);
+        let local: Vec<usize> = (0..self.hosts.len())
+            .filter(|&j| host_group(net, self.hosts[j]) == wg)
+            .collect();
+        if local.is_empty() {
+            // no group-local replica: spread remote pulls across the
+            // whole set, anchored at the epoch's primary
+            (self.primary(epoch) + worker) % self.hosts.len()
+        } else {
+            local[worker % local.len()]
+        }
+    }
+
+    /// Concurrent optic crossings a *push* shares the primary host's
+    /// global links with in `epoch`: the active workers outside that
+    /// host's group (everyone pushes to the primary). ≥ 1.
+    pub fn push_flows(&self, net: &NetModel, epoch: usize) -> usize {
+        let host = self.hosts[self.primary(epoch)];
+        let hg = host_group(net, host);
+        self.roster(epoch).iter().filter(|&&r| host_group(net, r) != hg).count().max(1)
+    }
+
+    /// Concurrent optic crossings a *pull* from `worker` shares its
+    /// serving replica's global links with in `epoch`: the active
+    /// workers routed to the same replica from outside its group — the
+    /// actual crossing count, not the all-remote worst case. ≥ 1.
+    pub fn pull_flows(&self, net: &NetModel, worker: usize, epoch: usize) -> usize {
+        let j = self.serving_replica(net, worker, epoch);
+        let hg = host_group(net, self.hosts[j]);
+        self.roster(epoch)
+            .iter()
+            .filter(|&&r| {
+                self.serving_replica(net, r, epoch) == j && host_group(net, r) != hg
+            })
+            .count()
+            .max(1)
+    }
+}
+
+/// Dragonfly group of a rank (0 on flat fabrics, where every pair
+/// rides the same link model).
+fn host_group(net: &NetModel, rank: usize) -> usize {
+    match net.algo {
+        AllReduceAlgo::Hierarchical(d) => d.group_of(rank),
+        _ => 0,
+    }
+}
+
+/// Service counters the actor accumulates; exported via the run JSON's
+/// `"ps"` block.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PsStats {
+    pub pushes: u64,
+    pub pulls: u64,
+    /// Pulls absorbed into an in-flight read window (no extra service
+    /// slot consumed).
+    pub coalesced: u64,
+    /// Primary→secondary weight fan-outs priced through the contention
+    /// model.
+    pub repl_transfers: u64,
+}
+
+impl PsStats {
+    pub fn absorb(&mut self, o: &PsStats) {
+        self.pushes += o.pushes;
+        self.pulls += o.pulls;
+        self.coalesced += o.coalesced;
+        self.repl_transfers += o.repl_transfers;
+    }
 }
 
 /// A gradient push from a worker.
@@ -53,9 +240,21 @@ struct PushMsg {
     grad: Vec<f32>,
     /// Worker's virtual send time.
     sent_at: f64,
+    /// Membership epoch at send time (elects the primary).
+    epoch: usize,
     /// LR for this update (schedule-resolved by the worker).
     eta: f32,
     wd: f32,
+    reply: Sender<PullReply>,
+}
+
+/// A weight read (no gradient) — joiner bootstrap and eval refresh.
+struct PullMsg {
+    worker: usize,
+    /// Arrival time at the replica (send time + transfer).
+    at: f64,
+    /// Serving replica index (client-resolved from the plan).
+    replica: usize,
     reply: Sender<PullReply>,
 }
 
@@ -71,6 +270,7 @@ pub struct PullReply {
 
 enum Msg {
     Push(PushMsg),
+    Pull(PullMsg),
     Stop,
 }
 
@@ -80,9 +280,7 @@ pub struct PsClient {
     tx: Sender<Msg>,
     net: NetModel,
     n_params: usize,
-    /// Concurrent cross-group crossings each remote transfer shares the
-    /// PS group's tapered global links with (1 on flat fabrics).
-    flows: usize,
+    plan: Arc<ReplicaPlan>,
     /// Engine-pool execution gate (see [`crate::exec`]): the blocking
     /// reply wait releases its runnable permit so a worker parked on
     /// the PS never occupies a `--threads` slot. Unlimited by default.
@@ -96,23 +294,51 @@ impl PsClient {
     pub fn set_gate(&mut self, gate: Arc<Gate>) {
         self.gate = gate;
     }
+
     /// Push a gradient and (blocking) pull fresh weights — the ASGD
-    /// round-trip. `now` is the worker's virtual time.
-    ///
-    /// Transfer time is topology-aware: the PS is hosted next to rank 0
-    /// (same dragonfly group), so under a hierarchical schedule a
-    /// worker in group 0 pays local-link latency while everyone else
-    /// crosses the optics — **contended** by every other remote
-    /// worker's crossings into the PS group — the placement asymmetry
-    /// (and oversubscription) the flat model couldn't express.
+    /// round-trip, priced at the dense payload.
     pub fn push_pull(&self, worker: usize, grad: Vec<f32>, now: f64, eta: f32, wd: f32) -> PullReply {
+        let n = self.n_params;
+        self.push_pull_wire(worker, grad, now, eta, wd, n)
+    }
+
+    /// Push a gradient and pull fresh weights with the transfer priced
+    /// at `wire_elems` (the codec's compressed volume). `now` is the
+    /// worker's virtual time.
+    ///
+    /// Transfer time is topology-aware: the epoch's primary hosts the
+    /// canonical weights, so a worker in the primary's dragonfly group
+    /// pays local-link latency while everyone else crosses the optics
+    /// — contended by the *actual* concurrent crossings into that
+    /// group (the epoch roster's remote members), not a static
+    /// worst case.
+    pub fn push_pull_wire(
+        &self,
+        worker: usize,
+        grad: Vec<f32>,
+        now: f64,
+        eta: f32,
+        wd: f32,
+        wire_elems: usize,
+    ) -> PullReply {
         assert_eq!(grad.len(), self.n_params);
-        let (reply_tx, reply_rx) = channel();
-        let ptp = self.net.ptp_time_between_flows(worker, 0, self.n_params, self.flows);
+        let epoch = self.plan.epoch_at(now);
+        let host = self.plan.hosts[self.plan.primary(epoch)];
+        let flows = self.plan.push_flows(&self.net, epoch);
+        let ptp = self.net.ptp_time_between_flows(worker, host, wire_elems, flows);
         // Worker→PS transfer time happens before the server sees it.
         let arrive = now + ptp;
+        let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Msg::Push(PushMsg { worker, grad, sent_at: arrive, eta, wd, reply: reply_tx }))
+            .send(Msg::Push(PushMsg {
+                worker,
+                grad,
+                sent_at: arrive,
+                epoch,
+                eta,
+                wd,
+                reply: reply_tx,
+            }))
             .expect("ps alive");
         // Hand the runnable permit back while blocked on the server.
         self.gate.release();
@@ -123,52 +349,112 @@ impl PsClient {
         reply.done_at += ptp;
         reply
     }
+
+    /// Read fresh weights without pushing — the joiner-bootstrap /
+    /// refresh path, priced at the dense payload.
+    pub fn pull(&self, worker: usize, now: f64) -> PullReply {
+        let n = self.n_params;
+        self.pull_wire(worker, now, n)
+    }
+
+    /// Read fresh weights with the transfer priced at `wire_elems`.
+    /// Routes to the plan's serving replica for `worker` (group-local
+    /// when one exists — zero optic crossings), priced at the actual
+    /// crossings sharing that replica's links.
+    pub fn pull_wire(&self, worker: usize, now: f64, wire_elems: usize) -> PullReply {
+        let epoch = self.plan.epoch_at(now);
+        let replica = self.plan.serving_replica(&self.net, worker, epoch);
+        let host = self.plan.hosts[replica];
+        let flows = self.plan.pull_flows(&self.net, worker, epoch);
+        let ptp = self.net.ptp_time_between_flows(worker, host, wire_elems, flows);
+        let arrive = now + ptp;
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Pull(PullMsg { worker, at: arrive, replica, reply: reply_tx }))
+            .expect("ps alive");
+        self.gate.release();
+        let recv = reply_rx.recv();
+        self.gate.acquire();
+        let mut reply = recv.expect("ps alive");
+        reply.done_at += ptp;
+        reply
+    }
 }
 
 /// The running server; join to collect final weights.
 pub struct ParameterServer {
     tx: Sender<Msg>,
-    handle: JoinHandle<(Vec<f32>, u64)>,
+    handle: JoinHandle<(Vec<f32>, u64, PsStats)>,
     net: NetModel,
     n_params: usize,
-    /// Worst-case concurrent crossings into the PS group (the workers
-    /// outside it); prices every remote transfer's contention.
-    flows: usize,
+    plan: Arc<ReplicaPlan>,
 }
 
 impl ParameterServer {
-    /// Spawn the PS actor with initial weights, an optimizer for the
-    /// update rule `U`, the number of workers, and a per-request service
-    /// time (models the PS's CPU/NIC; Eq. 15's "time spent ... waiting
-    /// for the PS").
+    /// Spawn a single-home PS actor with initial weights, an optimizer
+    /// for the update rule `U`, the number of workers, and a
+    /// per-request service time (models the PS's CPU/NIC; Eq. 15's
+    /// "time spent ... waiting for the PS").
     pub fn spawn(
+        init_w: Vec<f32>,
+        opt: Box<dyn Optimizer>,
+        n_workers: usize,
+        mode: PsMode,
+        net: NetModel,
+        serve_s: f64,
+    ) -> Self {
+        Self::spawn_replicated(init_w, opt, n_workers, mode, net, serve_s, ReplicaPlan::single_home(n_workers))
+    }
+
+    /// Spawn the PS actor under an explicit [`ReplicaPlan`]: per-epoch
+    /// primary election, pull routing to replicas, read coalescing and
+    /// replication lag all follow the plan. `n_workers` is the
+    /// *capacity* — the highest rank (joiners included) plus one.
+    pub fn spawn_replicated(
         init_w: Vec<f32>,
         mut opt: Box<dyn Optimizer>,
         n_workers: usize,
         mode: PsMode,
         net: NetModel,
         serve_s: f64,
+        plan: ReplicaPlan,
     ) -> Self {
         let n_params = init_w.len();
         assert_eq!(opt.n_params(), n_params);
+        let plan = Arc::new(plan);
+        let actor_plan = plan.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let handle = std::thread::spawn(move || {
+            let plan = actor_plan;
+            let n_replicas = plan.n_replicas();
             let mut w = init_w;
             // w_bak(i): weights last sent to worker i (DC-ASGD state).
             let mut bak: Vec<Vec<f32>> = (0..n_workers).map(|_| w.clone()).collect();
+            // Adaptive-λ second-moment state, per worker.
+            let (mut mse, mut pushes_from): (Vec<Vec<f32>>, Vec<u64>) = match mode {
+                PsMode::DcAsgdAdaptive { .. } => {
+                    ((0..n_workers).map(|_| vec![0.0; n_params]).collect(), vec![0; n_workers])
+                }
+                _ => (Vec::new(), Vec::new()),
+            };
             let mut delta = vec![0.0f32; n_params];
             let mut gtilde = vec![0.0f32; n_params];
-            // Server busy-until time (requests serialized — the
-            // many-to-few bottleneck).
-            let mut busy_until = 0.0f64;
+            // Per-replica busy-until time (requests serialized at each
+            // replica — the many-to-few bottleneck, now ÷ R on reads).
+            let mut busy = vec![0.0f64; n_replicas];
+            // Per-replica in-flight read window [start, done): pulls
+            // landing inside it coalesce into the same service slot.
+            let mut read_win = vec![(0.0f64, 0.0f64); n_replicas];
+            let mut stats = PsStats::default();
             let mut updates = 0u64;
             while let Ok(msg) = rx.recv() {
                 match msg {
                     Msg::Stop => break,
                     Msg::Push(p) => {
-                        let start = busy_until.max(p.sent_at);
+                        let pri = plan.primary(p.epoch);
+                        let start = busy[pri].max(p.sent_at);
                         let done = start + serve_s;
-                        busy_until = done;
+                        busy[pri] = done;
                         let staleness_dist = crate::tensor::dist2(&w, &bak[p.worker]);
                         let g = match mode {
                             PsMode::Asgd => &p.grad,
@@ -184,12 +470,79 @@ impl ParameterServer {
                                 dc::dc_correct(&p.grad, &d, lam, &mut gtilde);
                                 &gtilde
                             }
+                            PsMode::DcAsgdAdaptive { lam0 } => {
+                                pushes_from[p.worker] += 1;
+                                let bias =
+                                    1.0 - ADAPTIVE_BETA.powi(pushes_from[p.worker] as i32);
+                                let m = &mut mse[p.worker];
+                                for i in 0..n_params {
+                                    let gi = p.grad[i];
+                                    m[i] = ADAPTIVE_BETA * m[i]
+                                        + (1.0 - ADAPTIVE_BETA) * gi * gi;
+                                    let mse_hat = m[i] / bias;
+                                    let lam = lam0 / (mse_hat + ADAPTIVE_EPS).sqrt();
+                                    gtilde[i] =
+                                        gi + lam * gi * gi * (w[i] - bak[p.worker][i]);
+                                }
+                                &gtilde
+                            }
                         };
                         opt.step(g, &w, p.eta, p.wd, &mut delta);
                         crate::tensor::add_assign(&mut w, &delta);
                         updates += 1;
+                        stats.pushes += 1;
                         bak[p.worker].copy_from_slice(&w);
+                        // Fan the updated weights to the secondaries
+                        // through the contended optics: a secondary
+                        // cannot serve past `done + repl` until the
+                        // copy lands.
+                        if n_replicas > 1 {
+                            let src = plan.hosts[pri];
+                            let fan = plan
+                                .hosts
+                                .iter()
+                                .enumerate()
+                                .filter(|&(j, &h)| {
+                                    j != pri && host_group(&net, h) != host_group(&net, src)
+                                })
+                                .count()
+                                .max(1);
+                            for (j, &h) in plan.hosts.iter().enumerate() {
+                                if j == pri {
+                                    continue;
+                                }
+                                let repl = net.ptp_time_between_flows(src, h, n_params, fan);
+                                busy[j] = busy[j].max(done + repl);
+                                stats.repl_transfers += 1;
+                            }
+                        }
                         let _ = p.reply.send(PullReply {
+                            weights: w.clone(),
+                            done_at: done,
+                            staleness_dist,
+                        });
+                    }
+                    Msg::Pull(q) => {
+                        let j = q.replica.min(n_replicas - 1);
+                        let done = if plan.coalesce
+                            && q.at >= read_win[j].0
+                            && q.at < read_win[j].1
+                        {
+                            stats.coalesced += 1;
+                            read_win[j].1
+                        } else {
+                            let start = busy[j].max(q.at);
+                            let d = start + serve_s;
+                            busy[j] = d;
+                            read_win[j] = (start, d);
+                            d
+                        };
+                        stats.pulls += 1;
+                        let staleness_dist = crate::tensor::dist2(&w, &bak[q.worker]);
+                        // The pull hands the worker fresh weights: its
+                        // backup is current again (DC-ASGD semantics).
+                        bak[q.worker].copy_from_slice(&w);
+                        let _ = q.reply.send(PullReply {
                             weights: w.clone(),
                             done_at: done,
                             staleness_dist,
@@ -197,19 +550,9 @@ impl ParameterServer {
                     }
                 }
             }
-            (w, updates)
+            (w, updates, stats)
         });
-        // Contention: every worker outside the PS's dragonfly group
-        // funnels through that group's tapered global links; price each
-        // remote transfer at the worst-case concurrent crossing count.
-        let flows = match net.algo {
-            AllReduceAlgo::Hierarchical(d) => {
-                let ps_group = d.group_of(0);
-                (0..n_workers).filter(|&r| d.group_of(r) != ps_group).count().max(1)
-            }
-            _ => 1,
-        };
-        ParameterServer { tx, handle, net, n_params, flows }
+        ParameterServer { tx, handle, net, n_params, plan }
     }
 
     pub fn client(&self) -> PsClient {
@@ -217,13 +560,20 @@ impl ParameterServer {
             tx: self.tx.clone(),
             net: self.net,
             n_params: self.n_params,
-            flows: self.flows,
+            plan: self.plan.clone(),
             gate: Gate::unlimited(),
         }
     }
 
     /// Stop the server and return (final weights, update count).
     pub fn shutdown(self) -> (Vec<f32>, u64) {
+        let (w, updates, _) = self.shutdown_full();
+        (w, updates)
+    }
+
+    /// Stop the server and return (final weights, update count,
+    /// service counters).
+    pub fn shutdown_full(self) -> (Vec<f32>, u64, PsStats) {
         let _ = self.tx.send(Msg::Stop);
         self.handle.join().expect("ps thread")
     }
@@ -408,5 +758,242 @@ mod tests {
         let plain = run(PsMode::Asgd);
         let comp = run(PsMode::DcAsgd { lam0: 0.2 });
         assert_ne!(plain, comp);
+        let adaptive = run(PsMode::DcAsgdAdaptive { lam0: 0.2 });
+        assert_ne!(plain, adaptive);
+        assert_ne!(comp, adaptive);
+    }
+
+    #[test]
+    fn adaptive_lambda_matches_hand_rolled_ewma() {
+        // One worker, two pushes with staleness injected by a second
+        // worker's interleaved update: the server's g̃ must equal the
+        // snippet-exact EWMA recurrence computed independently.
+        let lam0 = 0.5f32;
+        let ps = ParameterServer::spawn(
+            vec![0.0; 2],
+            plain_sgd(2),
+            2,
+            PsMode::DcAsgdAdaptive { lam0 },
+            NetModel::instant(),
+            0.0,
+        );
+        let c = ps.client();
+        // push 1 from worker 0: bak == w, correction is a no-op, and
+        // the mirror tracks mse.
+        let g1 = [0.3f32, -0.2];
+        let r1 = c.push_pull(0, g1.to_vec(), 0.0, 1.0, 0.0);
+        // mirror: t=1
+        let mut mse = [0.0f32; 2];
+        let mut w_mirror = [0.0f32; 2];
+        let bak0 = w_mirror;
+        for i in 0..2 {
+            mse[i] = ADAPTIVE_BETA * mse[i] + (1.0 - ADAPTIVE_BETA) * g1[i] * g1[i];
+            let hat = mse[i] / (1.0 - ADAPTIVE_BETA);
+            let lam = lam0 / (hat + ADAPTIVE_EPS).sqrt();
+            let gt = g1[i] + lam * g1[i] * g1[i] * (w_mirror[i] - bak0[i]);
+            w_mirror[i] -= gt;
+        }
+        assert_eq!(r1.weights, w_mirror.to_vec());
+        // worker 1 moves the PS weights: worker 0's backup goes stale.
+        let rx = c.push_pull(1, vec![0.1, 0.1], 0.0, 1.0, 0.0);
+        let w_after: [f32; 2] = [rx.weights[0], rx.weights[1]];
+        let bak_w0: [f32; 2] = w_mirror; // weights last sent to worker 0
+        // push 2 from worker 0: correction active, t=2 bias term.
+        let g2 = [0.5f32, 0.4];
+        let r2 = c.push_pull(0, g2.to_vec(), 0.0, 1.0, 0.0);
+        let mut w2 = w_after;
+        let bias = 1.0 - ADAPTIVE_BETA * ADAPTIVE_BETA;
+        for i in 0..2 {
+            mse[i] = ADAPTIVE_BETA * mse[i] + (1.0 - ADAPTIVE_BETA) * g2[i] * g2[i];
+            let hat = mse[i] / bias;
+            let lam = lam0 / (hat + ADAPTIVE_EPS).sqrt();
+            let gt = g2[i] + lam * g2[i] * g2[i] * (w2[i] - bak_w0[i]);
+            w2[i] -= gt;
+        }
+        assert_eq!(r2.weights, w2.to_vec());
+        ps.shutdown();
+    }
+
+    #[test]
+    fn pull_reads_without_updating() {
+        let ps = ParameterServer::spawn(
+            vec![0.25; 3],
+            plain_sgd(3),
+            2,
+            PsMode::Asgd,
+            NetModel::instant(),
+            0.0,
+        );
+        let c = ps.client();
+        let r = c.pull(1, 0.0);
+        assert_eq!(r.weights, vec![0.25; 3]);
+        let (w, updates) = ps.shutdown();
+        assert_eq!(w, vec![0.25; 3]);
+        assert_eq!(updates, 0, "a pull must not count as an update");
+    }
+
+    #[test]
+    fn local_pull_prices_cheaper_than_remote() {
+        // PR 5 regression: a group-local puller must NOT pay the
+        // worst-case remote crossing count — its round trip rides the
+        // local link and beats the cross-group one.
+        let d = crate::comm::Dragonfly {
+            groups: 2,
+            nodes_per_group: 2,
+            global_taper: 1,
+            ..Default::default()
+        };
+        let net =
+            NetModel { algo: crate::comm::AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let ps = ParameterServer::spawn(
+            vec![0.0; 4096],
+            plain_sgd(4096),
+            4,
+            PsMode::Asgd,
+            net,
+            0.0,
+        );
+        let c = ps.client();
+        let local = c.pull(1, 0.0).done_at;
+        let remote = c.pull(2, 100.0).done_at - 100.0;
+        assert!(
+            local < remote,
+            "group-local pull {local} must beat the cross-group pull {remote}"
+        );
+        ps.shutdown();
+    }
+
+    #[test]
+    fn departures_shrink_the_crossing_count() {
+        // 3 groups of 2; epoch 1 retires the group-2 pair. The
+        // remaining remote worker's crossing shares the taper-1 optic
+        // with fewer concurrent flows, so its round trip speeds up —
+        // the roster-derived "actual crossings" fix in action.
+        let d = crate::comm::Dragonfly {
+            groups: 3,
+            nodes_per_group: 2,
+            global_taper: 1,
+            ..Default::default()
+        };
+        let net =
+            NetModel { algo: crate::comm::AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let plan = ReplicaPlan {
+            hosts: vec![0],
+            coalesce: false,
+            boundaries: vec![50.0],
+            rosters: vec![vec![0, 1, 2, 3, 4, 5], vec![0, 1, 2, 3]],
+        };
+        let ps = ParameterServer::spawn_replicated(
+            vec![0.0; 4096],
+            plain_sgd(4096),
+            6,
+            PsMode::Asgd,
+            net,
+            0.0,
+            plan,
+        );
+        let c = ps.client();
+        let before = c.push_pull(2, vec![0.0; 4096], 0.0, 1.0, 0.0).done_at;
+        let after = c.push_pull(2, vec![0.0; 4096], 100.0, 1.0, 0.0).done_at - 100.0;
+        assert!(
+            after < before,
+            "post-departure crossing {after} not cheaper than pre-departure {before}"
+        );
+        ps.shutdown();
+    }
+
+    #[test]
+    fn replicated_weights_match_single_home() {
+        // The canonical weights live in the shard actor: replication is
+        // timing/placement state only, so the update trajectory is
+        // bitwise identical to the single-home deployment.
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        let net =
+            NetModel { algo: crate::comm::AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let run = |plan: ReplicaPlan| {
+            let ps = ParameterServer::spawn_replicated(
+                vec![0.5; 8],
+                plain_sgd(8),
+                4,
+                PsMode::DcAsgd { lam0: 0.2 },
+                net,
+                1e-3,
+                plan,
+            );
+            let c = ps.client();
+            let mut ws = Vec::new();
+            for it in 0..6 {
+                let g = vec![0.01 * (it + 1) as f32; 8];
+                ws.push(c.push_pull(it % 4, g, it as f64, 0.3, 0.0).weights);
+            }
+            ps.shutdown();
+            ws
+        };
+        let single = run(ReplicaPlan::single_home(4));
+        let replicated = run(ReplicaPlan::place(
+            2,
+            &net,
+            4,
+            true,
+            Vec::new(),
+            vec![vec![0, 1, 2, 3]],
+        ));
+        assert_eq!(single, replicated, "replication must not perturb the weight trajectory");
+    }
+
+    #[test]
+    fn replica_serves_local_pulls_and_coalesces() {
+        // 2 groups of 2, a replica in each group: group-1 pulls route
+        // to the group-1 replica (cheaper than crossing), and two pulls
+        // inside one read window consume a single service slot.
+        let d = crate::comm::Dragonfly {
+            groups: 2,
+            nodes_per_group: 2,
+            global_taper: 1,
+            ..Default::default()
+        };
+        let net =
+            NetModel { algo: crate::comm::AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let serve = 0.5;
+        let mk = |replicas: usize, coalesce: bool| {
+            ParameterServer::spawn_replicated(
+                vec![0.0; 2048],
+                plain_sgd(2048),
+                4,
+                PsMode::Asgd,
+                net,
+                serve,
+                ReplicaPlan::place(replicas, &net, 4, coalesce, Vec::new(), vec![vec![0, 1, 2, 3]]),
+            )
+        };
+        // single home: worker 2 crosses the optics for every pull
+        let ps1 = mk(1, false);
+        let remote = ps1.client().pull(2, 0.0).done_at;
+        ps1.shutdown();
+        // replicated: worker 2's pull is group-local
+        let ps2 = mk(2, true);
+        let c = ps2.client();
+        let local = c.pull(2, 0.0).done_at;
+        assert!(local < remote, "replica-local pull {local} not cheaper than {remote}");
+        // a second pull landing inside the first's read window
+        // coalesces: same completion, one service slot
+        let again = c.pull(3, 0.0).done_at;
+        assert!((again - local).abs() < 1e-12, "coalesced pull must share the window");
+        let (_, _, stats) = ps2.shutdown_full();
+        assert_eq!(stats.pulls, 2);
+        assert_eq!(stats.coalesced, 1, "second pull must coalesce");
+    }
+
+    #[test]
+    fn primary_rotates_with_the_epoch() {
+        let plan = ReplicaPlan {
+            hosts: vec![0, 2, 4],
+            coalesce: false,
+            boundaries: vec![10.0, 20.0],
+            rosters: vec![vec![0, 1], vec![0, 1], vec![0, 1]],
+        };
+        assert_eq!(plan.primary(plan.epoch_at(0.0)), 0);
+        assert_eq!(plan.primary(plan.epoch_at(10.0)), 1);
+        assert_eq!(plan.primary(plan.epoch_at(25.0)), 2);
     }
 }

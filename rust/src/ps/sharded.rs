@@ -6,23 +6,33 @@
 //! slowest shard replies (so the many-to-few bottleneck shrinks ∝ 1/S,
 //! until latency α dominates — the ablation in `benches/allreduce.rs`'s
 //! companion analysis and the §II-A scaling discussion).
+//!
+//! Each shard carries the full [`ReplicaPlan`] with its replica host
+//! list *rotated by the shard index*, so the per-epoch primaries of
+//! different shards land on different physical hosts — a hot shard's
+//! push traffic does not pile onto the same group as its neighbours'.
+//! Transfers are priced at the caller-supplied wire volume (the
+//! codec's compressed element count), split across shards in
+//! proportion to their slice.
 
 use std::sync::mpsc::channel;
 
 use crate::comm::NetModel;
-use crate::optim::MomentumSgd;
-use crate::ps::{ParameterServer, PsMode, PullReply};
+use crate::optim::{MomentumSgd, Optimizer};
+use crate::ps::{ParameterServer, PsMode, PsStats, PullReply, ReplicaPlan};
 
 /// S independent single-shard servers.
 pub struct ShardedPs {
     shards: Vec<ParameterServer>,
     bounds: Vec<(usize, usize)>,
     net: NetModel,
+    n: usize,
 }
 
 impl ShardedPs {
     /// Split `init_w` into `n_shards` near-equal slices, one PS each.
-    /// Each shard runs the same update mode with its own momentum state.
+    /// Each shard runs the same update mode with its own momentum state
+    /// (single home, pinned membership — the pre-replication shape).
     pub fn spawn(
         init_w: &[f32],
         mu: f32,
@@ -31,6 +41,34 @@ impl ShardedPs {
         mode: PsMode,
         net: NetModel,
         serve_s_per_elem: f64,
+    ) -> Self {
+        Self::spawn_replicated(
+            init_w,
+            &mut |lo, hi| Box::new(MomentumSgd::new(hi - lo, mu)) as Box<dyn Optimizer>,
+            n_workers,
+            n_shards,
+            mode,
+            net,
+            serve_s_per_elem,
+            &ReplicaPlan::single_home(n_workers),
+        )
+    }
+
+    /// Spawn the sharded tier under a [`ReplicaPlan`]. `opt_for` builds
+    /// each shard's optimizer from its slice bounds; `capacity` is the
+    /// highest worker rank (joiners included) plus one. Shard `s` sees
+    /// the plan with its replica hosts rotated by `s`, staggering the
+    /// per-epoch primaries across the fabric.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_replicated(
+        init_w: &[f32],
+        opt_for: &mut dyn FnMut(usize, usize) -> Box<dyn Optimizer>,
+        capacity: usize,
+        n_shards: usize,
+        mode: PsMode,
+        net: NetModel,
+        serve_s_per_elem: f64,
+        plan: &ReplicaPlan,
     ) -> Self {
         assert!(n_shards >= 1);
         let n = init_w.len();
@@ -44,26 +82,53 @@ impl ShardedPs {
                 break;
             }
             bounds.push((lo, hi));
-            shards.push(ParameterServer::spawn(
+            let r = plan.hosts.len();
+            let shard_plan = ReplicaPlan {
+                hosts: (0..r).map(|j| plan.hosts[(j + s) % r]).collect(),
+                ..plan.clone()
+            };
+            shards.push(ParameterServer::spawn_replicated(
                 init_w[lo..hi].to_vec(),
-                Box::new(MomentumSgd::new(hi - lo, mu)),
-                n_workers,
+                opt_for(lo, hi),
+                capacity,
                 mode,
                 net,
                 serve_s_per_elem * (hi - lo) as f64,
+                shard_plan,
             ));
         }
-        ShardedPs { shards, bounds, net }
+        ShardedPs { shards, bounds, net, n }
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Total parameter count across the shards.
+    pub fn n_params(&self) -> usize {
+        self.n
+    }
+
     /// Push a full gradient; returns assembled fresh weights and the
     /// completion time = max over shards (shards are contacted in
-    /// parallel, each paying its own transfer + queue).
+    /// parallel, each paying its own transfer + queue). Priced at the
+    /// dense payload.
     pub fn push_pull(&self, worker: usize, grad: &[f32], now: f64, eta: f32, wd: f32) -> PullReply {
+        self.push_pull_wire(worker, grad, now, eta, wd, grad.len())
+    }
+
+    /// Push a full gradient with the transfer priced at `wire_elems`
+    /// total (each shard carries its proportional share of the wire).
+    pub fn push_pull_wire(
+        &self,
+        worker: usize,
+        grad: &[f32],
+        now: f64,
+        eta: f32,
+        wd: f32,
+        wire_elems: usize,
+    ) -> PullReply {
+        assert_eq!(grad.len(), self.n);
         let mut parts: Vec<(usize, PullReply)> = Vec::with_capacity(self.shards.len());
         // Scatter concurrently: each shard client blocks on its own
         // reply, so issue from scoped threads.
@@ -72,9 +137,10 @@ impl ShardedPs {
             for (i, (shard, &(lo, hi))) in self.shards.iter().zip(&self.bounds).enumerate() {
                 let client = shard.client();
                 let g = grad[lo..hi].to_vec();
+                let wire = self.shard_wire(wire_elems, lo, hi);
                 let tx = tx.clone();
                 scope.spawn(move || {
-                    let r = client.push_pull(worker, g, now, eta, wd);
+                    let r = client.push_pull_wire(worker, g, now, eta, wd, wire);
                     let _ = tx.send((i, r));
                 });
             }
@@ -83,8 +149,41 @@ impl ShardedPs {
                 parts.push(p);
             }
         });
+        self.assemble(parts, now)
+    }
+
+    /// Read fresh weights from every shard without pushing (joiner
+    /// bootstrap / refresh), priced at `wire_elems` total.
+    pub fn pull(&self, worker: usize, now: f64, wire_elems: usize) -> PullReply {
+        let mut parts: Vec<(usize, PullReply)> = Vec::with_capacity(self.shards.len());
+        std::thread::scope(|scope| {
+            let (tx, rx) = channel();
+            for (i, (shard, &(lo, hi))) in self.shards.iter().zip(&self.bounds).enumerate() {
+                let client = shard.client();
+                let wire = self.shard_wire(wire_elems, lo, hi);
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let r = client.pull_wire(worker, now, wire);
+                    let _ = tx.send((i, r));
+                });
+            }
+            drop(tx);
+            while let Ok(p) = rx.recv() {
+                parts.push(p);
+            }
+        });
+        self.assemble(parts, now)
+    }
+
+    /// A shard's proportional share of the total wire volume (≥ 1
+    /// element so the α term survives the split).
+    fn shard_wire(&self, wire_elems: usize, lo: usize, hi: usize) -> usize {
+        (wire_elems * (hi - lo)).div_ceil(self.n).max(1)
+    }
+
+    fn assemble(&self, mut parts: Vec<(usize, PullReply)>, now: f64) -> PullReply {
         parts.sort_by_key(|(i, _)| *i);
-        let mut weights = vec![0.0f32; grad.len()];
+        let mut weights = vec![0.0f32; self.n];
         let mut done_at = now;
         let mut staleness = 0.0f64;
         for ((_, r), &(lo, hi)) in parts.iter().zip(&self.bounds) {
@@ -103,13 +202,23 @@ impl ShardedPs {
     }
 
     pub fn shutdown(self) -> Vec<f32> {
+        self.shutdown_full().0
+    }
+
+    /// Stop every shard; returns (assembled weights, total updates,
+    /// aggregated service counters).
+    pub fn shutdown_full(self) -> (Vec<f32>, u64, PsStats) {
         let mut out = Vec::new();
+        let mut updates = 0u64;
+        let mut stats = PsStats::default();
         for (shard, &(lo, hi)) in self.shards.into_iter().zip(&self.bounds) {
-            let (w, _) = shard.shutdown();
+            let (w, u, s) = shard.shutdown_full();
             assert_eq!(w.len(), hi - lo);
             out.extend_from_slice(&w);
+            updates += u;
+            stats.absorb(&s);
         }
-        out
+        (out, updates, stats)
     }
 }
 
@@ -172,5 +281,41 @@ mod tests {
         let r = ps.push_pull(0, &vec![0.0; 13], 0.0, 1.0, 0.0);
         assert_eq!(r.weights, init);
         assert_eq!(ps.shutdown(), init);
+    }
+
+    #[test]
+    fn shard_primaries_stagger_across_hosts() {
+        // 2 shards × 2 replicas: shard 1's host list is rotated, so in
+        // any epoch the two shard primaries sit on different hosts —
+        // the hot-shard traffic does not converge on one group.
+        let d = crate::comm::Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+        let net =
+            NetModel { algo: crate::comm::AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+        let plan = ReplicaPlan::place(2, &net, 4, false, Vec::new(), vec![vec![0, 1, 2, 3]]);
+        assert_eq!(plan.hosts, vec![0, 2]);
+        let rotated: Vec<usize> = (0..2).map(|j| plan.hosts[(j + 1) % 2]).collect();
+        assert_eq!(rotated, vec![2, 0]);
+        assert_ne!(plan.hosts[plan.primary(0)], rotated[plan.primary(0)]);
+    }
+
+    #[test]
+    fn compressed_wire_split_prices_cheaper() {
+        // Pricing a push at 10% wire volume must beat the dense price
+        // on a bandwidth-bound fabric, sharded or not.
+        let net = NetModel {
+            alpha_s: 0.0,
+            beta_bytes_per_s: 1e6,
+            algo: crate::comm::AllReduceAlgo::Ring,
+        };
+        let init = vec![0.0f32; 10_000];
+        let grad = vec![0.1f32; 10_000];
+        let ps = ShardedPs::spawn(&init, 0.0, 1, 4, PsMode::Asgd, net, 0.0);
+        let dense = ps.push_pull_wire(0, &grad, 0.0, 0.1, 0.0, 10_000).done_at;
+        let topk = ps.push_pull_wire(0, &grad, 100.0, 0.1, 0.0, 1_000).done_at - 100.0;
+        ps.shutdown();
+        assert!(
+            topk < dense / 5.0,
+            "compressed wire {topk} not ≥5× cheaper than dense {dense}"
+        );
     }
 }

@@ -1,0 +1,331 @@
+//! Engine-facing facade over the sharded, replicated, compressed PS.
+//!
+//! The run bodies (`algo/psasync.rs`) talk to [`PsTier`]: it owns the
+//! [`ShardedPs`] substrate plus one [`WindowCodec`] per worker, so
+//! compression, replication routing and membership epochs compose in
+//! one place. The codec threading mirrors `algo/dcs3gd.rs` exactly:
+//!
+//! * a push **encodes** the worker's gradient (error-feedback residual
+//!   folds rank-locally), the transfer is priced at
+//!   [`WindowCodec::wire_elems`] — the compressed volume plus control
+//!   tail — and the tier ingress **decodes** with the sender's own
+//!   codec before the shard applies DC-ASGD's Eq. 6 over the
+//!   *decompressed* payload, so compensation and compression stack the
+//!   same way the decentralized engines stack them;
+//! * a pull rides the same operating point: the reply is delta-encoded
+//!   against the puller's last refresh, so its wire volume is the
+//!   codec's — the weights themselves stay exact (the modeled wire
+//!   and the simulated arithmetic are priced separately, as
+//!   everywhere else in the timing model).
+//!
+//! Wire accounting (compressed vs dense bytes, per-leg) accumulates in
+//! the tier and ships in the run JSON's `"ps"` block next to the shard
+//! actors' service counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::comm::NetModel;
+use crate::compress::{CompressConfig, WindowCodec};
+use crate::exec::Gate;
+use crate::optim::Optimizer;
+use crate::ps::{PsMode, PullReply, ReplicaPlan, ShardedPs};
+use crate::util::Json;
+
+/// Construction parameters for the tier (everything the engines derive
+/// from [`crate::config::ExperimentConfig`]).
+pub struct PsTierSpec {
+    pub n_shards: usize,
+    pub mode: PsMode,
+    pub net: NetModel,
+    /// Per-element service time at each shard (CPU/NIC model).
+    pub serve_s_per_elem: f64,
+    pub compress: CompressConfig,
+    /// Seed keying the per-worker codecs (sparsity draws).
+    pub seed: u64,
+    /// Highest worker rank (joiners included) + 1.
+    pub capacity: usize,
+    pub plan: ReplicaPlan,
+}
+
+/// Monotone wire-volume counters, one value per transfer leg.
+#[derive(Default)]
+struct TierCounters {
+    pushes: AtomicU64,
+    pulls: AtomicU64,
+    wire_bytes: AtomicU64,
+    dense_bytes: AtomicU64,
+}
+
+/// The running tier; `client(rank)` hands each worker its codec-backed
+/// handle, `shutdown()` collects final weights + the `"ps"` JSON block.
+pub struct PsTier {
+    ps: ShardedPs,
+    n: usize,
+    compress: CompressConfig,
+    seed: u64,
+    spec_shards: usize,
+    spec_replicas: usize,
+    coalesce: bool,
+    epochs: usize,
+    counters: Arc<TierCounters>,
+}
+
+impl PsTier {
+    /// Spawn the shard actors. `opt_for` builds each shard's optimizer
+    /// from its slice bounds (the engines pass the configured optimizer
+    /// for the single-shard case and per-slice momentum otherwise).
+    pub fn spawn(
+        init_w: &[f32],
+        spec: PsTierSpec,
+        opt_for: &mut dyn FnMut(usize, usize) -> Box<dyn Optimizer>,
+    ) -> Self {
+        let ps = ShardedPs::spawn_replicated(
+            init_w,
+            opt_for,
+            spec.capacity,
+            spec.n_shards,
+            spec.mode,
+            spec.net,
+            spec.serve_s_per_elem,
+            &spec.plan,
+        );
+        PsTier {
+            ps,
+            n: init_w.len(),
+            compress: spec.compress,
+            seed: spec.seed,
+            spec_shards: spec.n_shards,
+            spec_replicas: spec.plan.n_replicas(),
+            coalesce: spec.plan.coalesce,
+            epochs: spec.plan.rosters.len(),
+            counters: Arc::new(TierCounters::default()),
+        }
+    }
+
+    /// A worker's handle: its own codec (rank-keyed residual), shared
+    /// shard substrate. Callers rebind to their (slot, world) before
+    /// the first push — exactly like the decentralized engines.
+    pub fn client(&self, rank: usize) -> PsTierClient<'_> {
+        PsTierClient {
+            tier: self,
+            codec: WindowCodec::new(&self.compress, self.n, self.seed, rank),
+            dense: vec![0.0f32; self.n],
+            own: vec![0.0f32; self.n],
+            gate: Gate::unlimited(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n
+    }
+
+    fn count(&self, pushes: u64, pulls: u64, wire_legs: u64, wire_bytes: f64) {
+        let c = &self.counters;
+        c.pushes.fetch_add(pushes, Ordering::Relaxed);
+        c.pulls.fetch_add(pulls, Ordering::Relaxed);
+        c.wire_bytes.fetch_add((wire_bytes * wire_legs as f64) as u64, Ordering::Relaxed);
+        c.dense_bytes.fetch_add(wire_legs * 4 * self.n as u64, Ordering::Relaxed);
+    }
+
+    /// Stop the shards; returns (final weights, update count, the run
+    /// JSON `"ps"` block).
+    pub fn shutdown(self) -> (Vec<f32>, u64, Json) {
+        let c = self.counters.clone();
+        let compress = self.compress;
+        let (shards, replicas, coalesce, epochs) =
+            (self.spec_shards, self.spec_replicas, self.coalesce, self.epochs);
+        let (w, updates, stats) = self.ps.shutdown_full();
+        let wire = c.wire_bytes.load(Ordering::Relaxed);
+        let dense = c.dense_bytes.load(Ordering::Relaxed);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("enabled".into(), Json::Bool(true));
+        m.insert("shards".into(), Json::Num(shards as f64));
+        m.insert("replicas".into(), Json::Num(replicas as f64));
+        m.insert("coalesce".into(), Json::Bool(coalesce));
+        m.insert("epochs".into(), Json::Num(epochs as f64));
+        m.insert("compress".into(), Json::Str(compress.kind.name().into()));
+        m.insert("pushes".into(), Json::Num(stats.pushes as f64));
+        m.insert("pulls".into(), Json::Num(stats.pulls as f64));
+        m.insert("coalesced".into(), Json::Num(stats.coalesced as f64));
+        m.insert("repl_transfers".into(), Json::Num(stats.repl_transfers as f64));
+        m.insert("updates".into(), Json::Num(updates as f64));
+        m.insert("wire_bytes".into(), Json::Num(wire as f64));
+        m.insert("dense_bytes".into(), Json::Num(dense as f64));
+        m.insert(
+            "wire_cut_x".into(),
+            Json::Num(if wire > 0 { dense as f64 / wire as f64 } else { 1.0 }),
+        );
+        (w, updates, Json::Obj(m))
+    }
+}
+
+/// Per-worker handle: codec + scratch + the pool gate.
+pub struct PsTierClient<'a> {
+    tier: &'a PsTier,
+    codec: WindowCodec,
+    dense: Vec<f32>,
+    own: Vec<f32>,
+    gate: Arc<Gate>,
+}
+
+impl PsTierClient<'_> {
+    /// Plug the engine pool's execution [`Gate`] in: the permit is
+    /// released across the blocking shard round-trips.
+    pub fn set_gate(&mut self, gate: Arc<Gate>) {
+        self.gate = gate;
+    }
+
+    /// Epoch transition: rebind the codec to this worker's new
+    /// (slot, world) — zeroes the error-feedback residual, the same
+    /// contract as the decentralized engines' `codec.rebind`.
+    pub fn rebind(&mut self, slot: usize, world: usize) {
+        self.codec.rebind(slot, world);
+    }
+
+    /// The codec's current compressed wire volume (elements, control
+    /// tail included).
+    pub fn wire_elems(&self) -> usize {
+        self.codec.wire_elems()
+    }
+
+    pub fn codec_name(&self) -> &'static str {
+        self.codec.name()
+    }
+
+    /// Compressed push + pull round trip. The gradient is encoded
+    /// (residual folds), priced at the compressed wire volume, decoded
+    /// at tier ingress with this sender's codec (bitwise-exact
+    /// decompression), and the shards apply Eq. 6 over the
+    /// *decompressed* payload.
+    pub fn push_pull(
+        &mut self,
+        worker: usize,
+        grad: &[f32],
+        now: f64,
+        eta: f32,
+        wd: f32,
+    ) -> PullReply {
+        let payload = self.codec.encode(grad, 0.0, 0.0, &mut self.own);
+        // Tier-ingress decode: one contributor, the sender itself.
+        self.dense.fill(0.0);
+        self.codec.decode(&payload, 1, &mut self.dense);
+        let wire = self.codec.wire_elems();
+        self.tier.count(1, 0, 2, self.codec.wire_bytes());
+        self.gate.release();
+        let r = self.tier.ps.push_pull_wire(worker, &self.dense, now, eta, wd, wire);
+        self.gate.acquire();
+        r
+    }
+
+    /// Compressed-volume weight read (joiner bootstrap / refresh): the
+    /// reply is delta-encoded at the codec's operating point, so the
+    /// wire leg is priced at `wire_elems`; the weights stay exact.
+    pub fn pull(&mut self, worker: usize, now: f64) -> PullReply {
+        let wire = self.codec.wire_elems();
+        self.tier.count(0, 1, 1, self.codec.wire_bytes());
+        self.gate.release();
+        let r = self.tier.ps.pull(worker, now, wire);
+        self.gate.acquire();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressorKind;
+    use crate::optim::MomentumSgd;
+    use crate::ps::ParameterServer;
+
+    fn spec(n_workers: usize, compress: CompressConfig) -> PsTierSpec {
+        PsTierSpec {
+            n_shards: 2,
+            mode: PsMode::DcAsgd { lam0: 0.2 },
+            net: NetModel::instant(),
+            serve_s_per_elem: 0.0,
+            compress,
+            seed: 7,
+            capacity: n_workers,
+            plan: ReplicaPlan::single_home(n_workers),
+        }
+    }
+
+    #[test]
+    fn identity_codec_tier_matches_raw_sharded_ps() {
+        // With the identity codec the tier's decode(encode(g)) is g
+        // itself: the trajectory must equal a raw dense PS bitwise.
+        // Adaptive-λ is fully elementwise, so sharding cannot perturb
+        // the correction (unlike Eq. 17's global-norm λ).
+        let init = vec![0.4f32; 64];
+        let raw = ParameterServer::spawn(
+            init.clone(),
+            Box::new(MomentumSgd::new(64, 0.0)),
+            2,
+            PsMode::DcAsgdAdaptive { lam0: 0.2 },
+            NetModel::instant(),
+            0.0,
+        );
+        let rc = raw.client();
+        let mut tier_spec = spec(2, CompressConfig::default());
+        tier_spec.mode = PsMode::DcAsgdAdaptive { lam0: 0.2 };
+        let tier = PsTier::spawn(&init, tier_spec, &mut |lo, hi| {
+            Box::new(MomentumSgd::new(hi - lo, 0.0))
+        });
+        let mut tc = tier.client(0);
+        for it in 0..5 {
+            let g: Vec<f32> = (0..64).map(|i| 0.01 * ((i + it) as f32)).collect();
+            let a = rc.push_pull(it % 2, g.clone(), it as f64, 0.2, 0.0);
+            let b = tc.push_pull(it % 2, &g, it as f64, 0.2, 0.0);
+            assert_eq!(a.weights, b.weights, "iter {it}");
+        }
+        raw.shutdown();
+        let (_, updates, json) = tier.shutdown();
+        assert_eq!(updates, 2 * 5); // 2 shards × 5 pushes
+        assert_eq!(json.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(json.get("wire_cut_x").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn compressed_push_applies_exactly_the_decoded_payload() {
+        // Mirror-codec differential: a client-side replica of the
+        // worker's codec (same seed, same rank) must predict the tier's
+        // weight trajectory bitwise — i.e. the tier applies *exactly*
+        // the decoded top-k payload and the error-feedback residual
+        // telescopes through the PS path the same as the decentralized
+        // one.
+        let compress =
+            CompressConfig { kind: CompressorKind::TopK, ratio: 0.1, ..Default::default() };
+        let init = vec![0.5f32; 500];
+        let mut tier_spec = spec(1, compress);
+        tier_spec.mode = PsMode::Asgd;
+        let tier = PsTier::spawn(&init, tier_spec, &mut |lo, hi| {
+            Box::new(MomentumSgd::new(hi - lo, 0.0))
+        });
+        let mut c = tier.client(0);
+        c.rebind(0, 1);
+        let mut mirror = WindowCodec::new(&compress, 500, 7, 0);
+        mirror.rebind(0, 1);
+        let mut w = init.clone();
+        let mut w_mirror = init;
+        let mut own = vec![0.0f32; 500];
+        let mut decoded = vec![0.0f32; 500];
+        let eta = 0.1f32;
+        for it in 0..30 {
+            let g: Vec<f32> =
+                (0..500).map(|i| 0.01 * ((i % 7) as f32) + 0.001 * (it + 1) as f32).collect();
+            let r = c.push_pull(0, &g, it as f64, eta, 0.0);
+            w = r.weights;
+            let payload = mirror.encode(&g, 0.0, 0.0, &mut own);
+            mirror.decode(&payload, 1, &mut decoded);
+            for (wm, d) in w_mirror.iter_mut().zip(&decoded) {
+                *wm -= eta * *d;
+            }
+            assert_eq!(w, w_mirror, "tier diverged from the mirror codec at iter {it}");
+        }
+        let (w_final, _, json) = tier.shutdown();
+        assert_eq!(w_final, w);
+        let cut = json.get("wire_cut_x").and_then(Json::as_f64).unwrap();
+        assert!(cut >= 3.0, "top-k @0.1 wire cut {cut} < 3x");
+    }
+}

@@ -69,6 +69,7 @@ fn config_reference_names_every_table() {
         "[[control.fault]]",
         "[[control.join]]",
         "[compress]",
+        "[ps]",
         "[hetero]",
         "[perf]",
         "[sim]",
@@ -93,8 +94,24 @@ fn config_reference_names_every_table() {
         "fault_duration_s",
         "--trace-out",
         "--trace-capacity",
+        "--ps-shards",
+        "--ps-lambda",
     ] {
         assert!(text.contains(key), "docs/config.md lost the {key} key");
+    }
+    // the parameter-server book page documents the tier's contracts:
+    // bitwise replication, coalescing, Eq. 6 over decompressed payloads
+    let ps = doc("parameter-server.md");
+    for name in [
+        "single-home",
+        "coalesce",
+        "repl_transfers",
+        "wire_cut_x",
+        "adaptive",
+        "ps_parity.rs",
+        "decompressed",
+    ] {
+        assert!(ps.contains(name), "docs/parameter-server.md lost {name:?}");
     }
     // the observability book page documents the trace subsystem:
     // event schema, metric registry, analyzer and the determinism
@@ -169,9 +186,16 @@ fn run_json_top_level_keys_match_docs() {
         );
     }
     // and the documented composite keys really exist in the export
-    for key in ["control", "comm", "compress", "epochs", "evals", "hetero", "perf", "obs"] {
+    for key in ["control", "comm", "compress", "epochs", "evals", "hetero", "perf", "obs", "ps"] {
         assert!(map.contains_key(key), "documented key {key:?} missing from the export");
     }
+    // decentralized runs carry the ps stub (consumers always find the
+    // key); only PS-engine runs flip it on
+    assert_eq!(
+        json.get("ps").and_then(|p| p.get("enabled")),
+        Some(&Json::Bool(false)),
+        "a decentralized run must export the disabled ps stub"
+    );
     // the engine-core profile carries its per-phase histograms, and the
     // deterministic view strips it together with wall_time_s
     assert!(

@@ -14,7 +14,8 @@ use dcs3gd::simtime::ComputeModel;
 use dcs3gd::compress::{CompressConfig, CompressorKind, GradCompressor, Qsgd, TopK, WindowCodec};
 use dcs3gd::data::{ShardSampler, Split, SyntheticDataset};
 use dcs3gd::dc;
-use dcs3gd::optim::LrSchedule;
+use dcs3gd::optim::{LrSchedule, MomentumSgd};
+use dcs3gd::ps::{PsMode, PsTier, PsTierSpec, ReplicaPlan};
 use dcs3gd::tensor;
 use dcs3gd::util::Rng;
 
@@ -666,24 +667,32 @@ fn prop_sharding_partition() {
 /// membership-churn draw, the same config run at `threads ∈ {1, 2, 8}`
 /// produces byte-identical deterministic run JSON (the metrics export
 /// minus the wall-clock `"perf"` / `"wall_time_s"` fields) and
-/// identical epoch param CRCs. The PS baselines are excluded by
-/// design: ASGD applies updates in *arrival* order — its
-/// nondeterminism is the phenomenon under study, not a pool artifact.
+/// identical epoch param CRCs. The PS baselines join the property at
+/// `nodes = 1` only (the last two cases), where the request stream is
+/// program-ordered and determinism is contractual; at `nodes ≥ 2` they
+/// stay excluded by design — ASGD applies updates in *arrival* order,
+/// and that nondeterminism is the phenomenon under study, not a pool
+/// artifact.
 #[test]
 fn prop_parallel_engine_bitwise_equals_serial() {
     // Each case is three full runs — fewer, fatter cases than the
     // kernel properties above.
-    const ENGINE_CASES: u64 = 8;
+    const ENGINE_CASES: u64 = 10;
     for case in 0..ENGINE_CASES {
         let mut rng = Rng::keyed(0xE291, 14, case);
-        let algo = match rng.below(5) {
-            0 => Algo::Ssgd,
-            1 => Algo::S3gd,
-            2 => Algo::DcS3gd,
-            3 => Algo::DynSsp,
-            _ => Algo::Sgs,
+        let algo = match case {
+            c if c == ENGINE_CASES - 2 => Algo::Asgd,
+            c if c == ENGINE_CASES - 1 => Algo::DcAsgd,
+            _ => match rng.below(5) {
+                0 => Algo::Ssgd,
+                1 => Algo::S3gd,
+                2 => Algo::DcS3gd,
+                3 => Algo::DynSsp,
+                _ => Algo::Sgs,
+            },
         };
-        let nodes = 2 + rng.below(4) as usize;
+        let drawn_nodes = 2 + rng.below(4) as usize;
+        let nodes = if algo.is_decentralized() { drawn_nodes } else { 1 };
         let steps = 6 + rng.below(7);
         let local_batch = [4usize, 8][rng.below(2) as usize];
         let net_algo = match rng.below(4) {
@@ -728,6 +737,15 @@ fn prop_parallel_engine_bitwise_equals_serial() {
                 link_spread: 0.2,
                 ..HeteroConfig::default()
             });
+        }
+        // The PS cases exercise the tier shape too: sharding,
+        // replication and the λ rule must all be invisible to the
+        // single-worker weight trajectory.
+        if !algo.is_decentralized() {
+            b = b
+                .ps_shards(1 + rng.below(3) as usize)
+                .ps_replicas(1 + rng.below(2) as usize)
+                .ps_lambda(["dynamic", "adaptive"][rng.below(2) as usize]);
         }
         // Membership churn rides the windowed engines: one mid-run
         // departure, sometimes followed by a join of a fresh rank.
@@ -779,6 +797,145 @@ fn prop_parallel_engine_bitwise_equals_serial() {
                 "case {case} ({}): obs journal at threads={threads} diverged from serial",
                 cfg.algo.name()
             );
+        }
+    }
+}
+
+/// Property (PS tier): replication is placement/service state only.
+/// For any shards × replicas × mode × compression × fabric × churn
+/// draw, a fixed sequential request stream produces bit-identical
+/// replies and final weights on a replicated deployment and its
+/// single-home counterpart. Timing (`done_at`) is allowed to differ —
+/// that is precisely what replication changes.
+#[test]
+fn prop_ps_replication_bitwise_equals_single_home() {
+    const PS_CASES: u64 = 12;
+    for case in 0..PS_CASES {
+        let mut rng = Rng::keyed(0x9512, 21, case);
+        let n = 32 + rng.below(300) as usize;
+        let workers = 2 + rng.below(5) as usize;
+        let shards = 1 + rng.below(4) as usize;
+        let replicas = 2 + rng.below(3) as usize;
+        let mode = match rng.below(3) {
+            0 => PsMode::Asgd,
+            1 => PsMode::DcAsgd { lam0: rng.uniform_range(0.1, 0.5) },
+            _ => PsMode::DcAsgdAdaptive { lam0: rng.uniform_range(0.1, 0.5) },
+        };
+        let compress = match rng.below(3) {
+            0 => CompressConfig::default(),
+            1 => CompressConfig {
+                kind: CompressorKind::TopK,
+                ratio: rng.uniform_range(0.05, 0.5),
+                ..CompressConfig::default()
+            },
+            _ => CompressConfig {
+                kind: CompressorKind::Qsgd,
+                bits: [4u32, 8][rng.below(2) as usize],
+                ..CompressConfig::default()
+            },
+        };
+        let net_algo = if rng.below(2) == 0 {
+            AllReduceAlgo::Ring
+        } else {
+            AllReduceAlgo::Hierarchical(Dragonfly {
+                groups: 2,
+                nodes_per_group: 1 + rng.below(3) as usize,
+                ..Dragonfly::default()
+            })
+        };
+        let net = NetModel { alpha_s: 1e-6, beta_bytes_per_s: 1e9, algo: net_algo };
+        // Churn in half the cases: one mid-roster rank leaves at the
+        // t = 0.5 boundary (the primary rotates with the epoch on the
+        // replicated side — the weights must not notice).
+        let full: Vec<usize> = (0..workers).collect();
+        let (boundaries, rosters) = if workers > 2 && rng.below(2) == 1 {
+            let leaver = 1 + rng.below(workers as u64 - 1) as usize;
+            let shrunk: Vec<usize> =
+                full.iter().copied().filter(|&r| r != leaver).collect();
+            (vec![0.5], vec![full.clone(), shrunk])
+        } else {
+            (Vec::new(), vec![full.clone()])
+        };
+        let mu = [0.0f32, 0.9][rng.below(2) as usize];
+        let init = {
+            let mut ir = Rng::keyed(case, 77, 0);
+            randvec(&mut ir, n, 0.5)
+        };
+        let seed = 100 + case;
+
+        let run = |reps: usize| -> Vec<Vec<f32>> {
+            let plan = ReplicaPlan::place(
+                reps,
+                &net,
+                workers,
+                true,
+                boundaries.clone(),
+                rosters.clone(),
+            );
+            let spec = PsTierSpec {
+                n_shards: shards,
+                mode,
+                net,
+                serve_s_per_elem: 1e-8,
+                compress,
+                seed,
+                capacity: workers,
+                plan,
+            };
+            let tier = PsTier::spawn(&init, spec, &mut |lo, hi| {
+                Box::new(MomentumSgd::new(hi - lo, mu))
+            });
+            let mut clients: Vec<_> = (0..workers).map(|r| tier.client(r)).collect();
+            for (slot, c) in clients.iter_mut().enumerate() {
+                c.rebind(slot, workers);
+            }
+            let mut replies = Vec::new();
+            // Epoch 0: three sequential rounds over the full roster.
+            for it in 0..3u64 {
+                for (j, &w) in rosters[0].iter().enumerate() {
+                    let mut gr = Rng::keyed(case ^ 0xA5, it * 16 + j as u64, 2);
+                    let g = randvec(&mut gr, n, 0.1);
+                    let t = 0.03 * (it as f64 * workers as f64 + j as f64);
+                    replies.push(clients[w].push_pull(w, &g, t, 0.05, 1e-4).weights);
+                }
+            }
+            // Past the boundary: survivors rebind to their shrunk
+            // slots and keep pushing.
+            if rosters.len() > 1 {
+                for (slot, &w) in rosters[1].iter().enumerate() {
+                    clients[w].rebind(slot, rosters[1].len());
+                }
+                for it in 0..2u64 {
+                    for (j, &w) in rosters[1].iter().enumerate() {
+                        let mut gr = Rng::keyed(case ^ 0x5A, it * 16 + j as u64, 3);
+                        let g = randvec(&mut gr, n, 0.1);
+                        let t = 1.0 + 0.03 * (it as f64 * workers as f64 + j as f64);
+                        replies.push(clients[w].push_pull(w, &g, t, 0.05, 1e-4).weights);
+                    }
+                }
+            }
+            // A read-only refresh rides the same contract.
+            let reader = rosters[rosters.len() - 1][0];
+            replies.push(clients[reader].pull(reader, 2.0).weights);
+            drop(clients);
+            let (w_final, _, _) = tier.shutdown();
+            replies.push(w_final);
+            replies
+        };
+
+        let single = run(1);
+        let replicated = run(replicas);
+        assert_eq!(single.len(), replicated.len());
+        for (i, (a, b)) in single.iter().zip(&replicated).enumerate() {
+            for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "case {case} ({} shards, {replicas} replicas, {}): reply {i} \
+                     elem {j} diverged: replicated {y} != single-home {x}",
+                    shards,
+                    compress.kind.name()
+                );
+            }
         }
     }
 }

@@ -1,0 +1,318 @@
+//! Differential battery for the parameter-server tier: the golden
+//! compressed-PS-under-churn trajectory, the replicated ≡ single-home
+//! bitwise contract on quiescent traffic, and Eq. 6-over-decompressed
+//! exactness against an independently hand-rolled dense mirror.
+//!
+//! Everything here pins *arithmetic*: replication, sharding and
+//! compression are allowed to move virtual time, never the weight
+//! trajectory (given the same request order). Engine-level runs with
+//! concurrent workers are covered by `src/algo/psasync.rs`'s own tests
+//! — the ASGD family's arrival-order dependence is the phenomenon
+//! under study there, so the bitwise pins below all drive the tier
+//! with a sequential (quiescent) request stream.
+
+use dcs3gd::algo::{run_experiment, Algo, RunReport};
+use dcs3gd::comm::{AllReduceAlgo, Dragonfly, NetModel};
+use dcs3gd::compress::{CompressConfig, CompressorKind, WindowCodec};
+use dcs3gd::config::ExperimentConfig;
+use dcs3gd::control::FaultPlan;
+use dcs3gd::optim::MomentumSgd;
+use dcs3gd::ps::{PsMode, PsTier, PsTierSpec, ReplicaPlan};
+use dcs3gd::simtime::ComputeModel;
+use dcs3gd::util::Json;
+
+/// The golden fixture describing the compressed-PS-under-churn
+/// scenario *and* its expected trajectory — the config is built from
+/// it, the realized run is compared against it.
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/ps_topk_churn.json");
+    Json::parse(&std::fs::read_to_string(&path).expect("golden fixture exists"))
+        .expect("golden fixture parses")
+}
+
+fn ranks_of(j: &Json) -> Vec<usize> {
+    j.as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect()
+}
+
+fn cfg_from_fixture(fix: &Json) -> ExperimentConfig {
+    let get_f = |k: &str| fix.get(k).unwrap().as_f64().unwrap();
+    let get_u = |k: &str| fix.get(k).unwrap().as_usize().unwrap();
+    let initial = get_u("initial_world");
+    let d = Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+    let mut cfg = ExperimentConfig::builder("linear")
+        .name("ps_golden")
+        .algo(Algo::parse(fix.get("algo").unwrap().as_str().unwrap()).unwrap())
+        .nodes(initial)
+        .local_batch(16)
+        .steps(60)
+        .eta_single(0.02)
+        .base_batch(16)
+        .data(1024, 256, 0.5)
+        .compute(ComputeModel::uniform(1e-3))
+        .net(NetModel {
+            alpha_s: 1.5e-6,
+            beta_bytes_per_s: 10e9,
+            algo: AllReduceAlgo::Hierarchical(d),
+        })
+        .compress_topk(get_f("topk_ratio") as f32)
+        .ps_shards(get_u("shards"))
+        .ps_replicas(get_u("replicas"))
+        .ps_lambda(fix.get("lambda").unwrap().as_str().unwrap())
+        .faults(FaultPlan::new().depart(get_u("depart_rank"), get_f("depart_at_s")))
+        .join(get_u("join_rank"), get_f("join_at_s"))
+        .join_warmup(4)
+        .build();
+    cfg.control.restore_s = 0.005;
+    cfg
+}
+
+fn run_golden() -> (Json, RunReport) {
+    let fix = fixture();
+    let cfg = cfg_from_fixture(&fix);
+    let report = run_experiment(&cfg).expect("compressed elastic PS run completes");
+    (fix, report)
+}
+
+#[test]
+fn golden_compressed_ps_churn_trajectory() {
+    let (fix, report) = run_golden();
+
+    // World trajectory matches the fixture: 4 -> 3 -> 4.
+    let want_worlds = ranks_of(fix.get("worlds").unwrap());
+    assert_eq!(report.epochs.worlds(), want_worlds, "epoch world trajectory diverged");
+
+    // Each transition's member movement matches. The PS epoch records
+    // are leader-only (slot 0) — the weights are arrival-order state,
+    // so there is no cross-rank CRC contract to assert here (that pin
+    // belongs to the decentralized engines).
+    let transitions = report.epochs.transitions();
+    let want = fix.get("transitions").unwrap().as_arr().unwrap();
+    assert_eq!(transitions.len(), want.len() + 1, "epoch 0 + one record per transition");
+    for (got, w) in transitions[1..].iter().zip(want) {
+        assert_eq!(got.epoch, w.get("epoch").unwrap().as_f64().unwrap() as u64);
+        assert_eq!(got.world, w.get("world").unwrap().as_usize().unwrap());
+        assert_eq!(got.departed, ranks_of(w.get("departed").unwrap()));
+        assert_eq!(got.joined, ranks_of(w.get("joined").unwrap()));
+    }
+
+    // The leaver logged its own departure; the joiner really stepped.
+    assert!(
+        report
+            .control
+            .events()
+            .iter()
+            .any(|e| e.event.as_deref().is_some_and(|s| s.starts_with("depart@"))),
+        "departure not logged"
+    );
+    let joiner = fix.get("join_rank").unwrap().as_usize().unwrap();
+    assert!(
+        report.recorder.steps().iter().any(|s| s.worker == joiner),
+        "joiner never stepped"
+    );
+
+    // The run JSON's "ps" block carries the tier shape and the
+    // compressed wire accounting promised by the fixture.
+    let want_ps = fix.get("ps").unwrap();
+    let ps = report.ps.as_ref().expect("PS run exports the ps block");
+    assert_eq!(ps.get("enabled"), Some(&Json::Bool(true)));
+    assert_eq!(
+        ps.get("shards").and_then(Json::as_f64),
+        fix.get("shards").unwrap().as_f64()
+    );
+    assert_eq!(
+        ps.get("replicas").and_then(Json::as_f64),
+        fix.get("replicas").unwrap().as_f64()
+    );
+    assert_eq!(ps.get("compress"), want_ps.get("compress"));
+    assert_eq!(ps.get("epochs"), want_ps.get("epochs"));
+    let cut = ps.get("wire_cut_x").and_then(Json::as_f64).unwrap();
+    let min_cut = want_ps.get("min_wire_cut_x").unwrap().as_f64().unwrap();
+    assert!(cut >= min_cut, "wire cut {cut} under the fixture's {min_cut}x floor");
+
+    // And the run still trains through both transitions.
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.final_val_err < 0.85, "val err {}", report.final_val_err);
+}
+
+// ---------------------------------------------------------------------
+// Replicated ≡ single-home on quiescent traffic
+// ---------------------------------------------------------------------
+
+/// Drive one tier deployment with a fixed sequential request stream
+/// spanning a membership boundary (roster 0,1,2,3 → 0,2,3 at t = 0.5)
+/// and return every reply's weights plus the final weights.
+fn quiescent_stream(replicas: usize, compress: CompressConfig) -> Vec<Vec<f32>> {
+    let n = 256;
+    let d = Dragonfly { groups: 2, nodes_per_group: 2, ..Default::default() };
+    let net = NetModel { algo: AllReduceAlgo::Hierarchical(d), ..NetModel::default() };
+    let boundaries = vec![0.5];
+    let rosters = vec![vec![0, 1, 2, 3], vec![0, 2, 3]];
+    let plan = ReplicaPlan::place(replicas, &net, 4, true, boundaries, rosters);
+    let init: Vec<f32> = (0..n).map(|i| 0.01 * (i as f32) - 1.0).collect();
+    let spec = PsTierSpec {
+        n_shards: 2,
+        mode: PsMode::DcAsgdAdaptive { lam0: 0.2 },
+        net,
+        serve_s_per_elem: 1e-8,
+        compress,
+        seed: 11,
+        capacity: 4,
+        plan,
+    };
+    let tier = PsTier::spawn(&init, spec, &mut |lo, hi| {
+        Box::new(MomentumSgd::new(hi - lo, 0.9))
+    });
+    let mut clients: Vec<_> = (0..4).map(|r| tier.client(r)).collect();
+    for (slot, c) in clients.iter_mut().enumerate() {
+        c.rebind(slot, 4);
+    }
+    let mut replies = Vec::new();
+    // Epoch 0: three rounds over the full roster, strictly sequential.
+    for it in 0..3 {
+        for w in 0..4usize {
+            let t = 0.01 * (it * 4 + w) as f64;
+            let g: Vec<f32> =
+                (0..n).map(|i| 0.005 * ((i + w) as f32) + 0.001 * (it + 1) as f32).collect();
+            replies.push(clients[w].push_pull(w, &g, t, 0.05, 0.0).weights);
+        }
+    }
+    // Epoch 1: rank 1 is gone; survivors rebind to their new slots and
+    // keep pushing past the boundary (primary rotates in the
+    // replicated deployment — weights must not notice).
+    for (slot, &w) in [0usize, 2, 3].iter().enumerate() {
+        clients[w].rebind(slot, 3);
+    }
+    for it in 0..3 {
+        for (j, &w) in [0usize, 2, 3].iter().enumerate() {
+            let t = 1.0 + 0.01 * (it * 3 + j) as f64;
+            let g: Vec<f32> =
+                (0..n).map(|i| 0.004 * ((i + w) as f32) + 0.002 * (it + 1) as f32).collect();
+            replies.push(clients[w].push_pull(w, &g, t, 0.05, 0.0).weights);
+        }
+    }
+    // A read-only refresh rides the same contract.
+    replies.push(clients[2].pull(2, 2.0).weights);
+    drop(clients);
+    let (w_final, _, _) = tier.shutdown();
+    replies.push(w_final);
+    replies
+}
+
+#[test]
+fn replicated_tier_bitwise_equals_single_home_on_quiescent_traffic() {
+    // Replication is service/placement state: under an identical
+    // (sequential) request order, every reply and the final weights
+    // are bit-identical whether the shards run 1 replica or 3 —
+    // compressed or dense.
+    for compress in [
+        CompressConfig::default(),
+        CompressConfig { kind: CompressorKind::TopK, ratio: 0.1, ..Default::default() },
+        CompressConfig { kind: CompressorKind::Qsgd, bits: 4, ..Default::default() },
+    ] {
+        let single = quiescent_stream(1, compress);
+        let replicated = quiescent_stream(3, compress);
+        assert_eq!(single.len(), replicated.len());
+        for (i, (a, b)) in single.iter().zip(&replicated).enumerate() {
+            for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{} reply {i} elem {j}: replicated {y} != single-home {x}",
+                    compress.kind.name()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Eq. 6 over decompressed payloads vs an independent dense mirror
+// ---------------------------------------------------------------------
+
+#[test]
+fn adaptive_correction_applies_eq6_over_decompressed_payload_exactly() {
+    // An independent mirror of the whole tier: its own copy of each
+    // worker's codec (same seed/rank ⇒ same sparsity draws and
+    // error-feedback residuals) plus a hand-rolled dense DC-ASGD
+    // adaptive-λ server (EWMA of the *decoded* gradient, Eq. 6
+    // correction, momentum-free SGD). The tier — 2 shards, top-k 0.1 —
+    // must reproduce it bitwise at every step: compression happens on
+    // the wire, compensation on the decompressed payload, and sharding
+    // never perturbs the elementwise rule.
+    const BETA: f32 = 0.95; // the server's EWMA decay (ps/mod.rs)
+    const EPS: f32 = 1e-7; // and its numerical floor
+    let n = 500;
+    let lam0 = 0.3f32;
+    let eta = 0.1f32;
+    let compress = CompressConfig { kind: CompressorKind::TopK, ratio: 0.1, ..Default::default() };
+    let init: Vec<f32> = (0..n).map(|i| 0.5 - 0.001 * i as f32).collect();
+    let spec = PsTierSpec {
+        n_shards: 2,
+        mode: PsMode::DcAsgdAdaptive { lam0 },
+        net: NetModel::instant(),
+        serve_s_per_elem: 0.0,
+        compress,
+        seed: 7,
+        capacity: 2,
+        plan: ReplicaPlan::single_home(2),
+    };
+    let tier = PsTier::spawn(&init, spec, &mut |lo, hi| {
+        Box::new(MomentumSgd::new(hi - lo, 0.0))
+    });
+    let mut clients: Vec<_> = (0..2).map(|r| tier.client(r)).collect();
+    for (slot, c) in clients.iter_mut().enumerate() {
+        c.rebind(slot, 2);
+    }
+
+    // The mirror: codecs keyed exactly like the tier's clients, plus
+    // dense per-worker DC-ASGD state.
+    let mut mirrors: Vec<WindowCodec> = (0..2)
+        .map(|r| {
+            let mut c = WindowCodec::new(&compress, n, 7, r);
+            c.rebind(r, 2);
+            c
+        })
+        .collect();
+    let mut w_mirror = init;
+    let mut bak = vec![w_mirror.clone(), w_mirror.clone()];
+    let mut mse = vec![vec![0.0f32; n]; 2];
+    let mut pushes = [0u64; 2];
+    let mut own = vec![0.0f32; n];
+    let mut decoded = vec![0.0f32; n];
+
+    for it in 0..20 {
+        for u in 0..2usize {
+            let g: Vec<f32> = (0..n)
+                .map(|i| 0.01 * ((i % 11) as f32) + 0.002 * (it + u + 1) as f32)
+                .collect();
+            let r = clients[u].push_pull(u, &g, it as f64, eta, 0.0);
+
+            // Mirror: decode through the worker's codec replica, then
+            // the server's exact elementwise recurrence.
+            let payload = mirrors[u].encode(&g, 0.0, 0.0, &mut own);
+            decoded.fill(0.0);
+            mirrors[u].decode(&payload, 1, &mut decoded);
+            pushes[u] += 1;
+            let bias = 1.0 - BETA.powi(pushes[u] as i32);
+            for i in 0..n {
+                let gi = decoded[i];
+                mse[u][i] = BETA * mse[u][i] + (1.0 - BETA) * gi * gi;
+                let mse_hat = mse[u][i] / bias;
+                let lam = lam0 / (mse_hat + EPS).sqrt();
+                let gt = gi + lam * gi * gi * (w_mirror[i] - bak[u][i]);
+                w_mirror[i] -= eta * gt;
+            }
+            bak[u].copy_from_slice(&w_mirror);
+
+            assert_eq!(
+                r.weights, w_mirror,
+                "tier diverged from the dense mirror at iter {it}, worker {u}"
+            );
+        }
+    }
+    drop(clients);
+    let (w_final, updates, _) = tier.shutdown();
+    assert_eq!(w_final, w_mirror);
+    assert_eq!(updates, 2 * 2 * 20, "2 shards x 2 workers x 20 pushes");
+}
